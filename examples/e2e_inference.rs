@@ -1,0 +1,52 @@
+//! End-to-end driver (the DESIGN.md §5 "end-to-end validation" example):
+//! predicts full LLM-serving latency for Qwen2.5-14B on two GPUs under an
+//! Arxiv-style workload and compares every method against the testbed
+//! ground truth, exercising all layers: kernel decomposition -> scheduling
+//! -> features -> AOT'd Pallas/JAX MLP via PJRT -> trace aggregation + RF
+//! communication model.
+//!
+//!   cargo run --release --example e2e_inference
+//!
+//! Requires `make artifacts`. Models/datasets are cached under runs/.
+
+use synperf::e2e::{llm, predict, trace, workload};
+use synperf::experiments::{Lab, Scale};
+use synperf::hw;
+use synperf::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(Scale::Fast)?;
+    let models = lab.model_set()?;
+    let model = llm::qwen2_5_14b();
+    let mut rng = Rng::new(42);
+
+    for gpu_name in ["A100", "H100"] {
+        let gpu = hw::gpu_by_name(gpu_name).unwrap();
+        let comm = lab.comm(&gpu);
+        let reqs = workload::sample_batch(workload::WorkloadKind::Arxiv, 8, &mut rng);
+        let tr = trace::build_trace(&model, 1, 1, &reqs);
+        println!(
+            "\n{} on {} — arxiv_8 ({} prompt tokens, {} trace items)",
+            model.name,
+            gpu.name,
+            reqs.iter().map(|r| r.input_len).sum::<u32>(),
+            tr.len()
+        );
+        let t = predict::eval_trace(&tr, &gpu, 1, &models, &comm, 99)?;
+        println!("  ground truth {:.1} ms", t.actual * 1e3);
+        for (name, v) in [
+            ("SynPerf", t.synperf),
+            ("Neusight", t.neusight),
+            ("Habitat", t.habitat),
+            ("Linear", t.linear),
+            ("Roofline", t.roofline),
+        ] {
+            println!(
+                "  {name:<9} {:>8.1} ms   err {:+6.1}%",
+                v * 1e3,
+                100.0 * (v - t.actual) / t.actual
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Quickstart: the full SynPerf pipeline on a single kernel.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Decomposes a cuBLAS-style GEMM into tasks (Kernel Decomposer), maps them
+//! onto SMs (Scheduling Simulator), derives the Table-IV pipeline features
+//! (Feature Analyzer), and — if `make artifacts` has produced the AOT MLP —
+//! trains a small Performance Estimator and predicts latency, comparing
+//! against the oracle testbed.
+
+use synperf::dataset;
+use synperf::features::FeatureSet;
+use synperf::hw;
+use synperf::kernels::{DType, KernelConfig, KernelKind};
+use synperf::mlp::{train_model, Predictor, TrainConfig};
+use synperf::runtime::Engine;
+use synperf::sched::schedule;
+use synperf::util::stats::mape;
+
+fn main() -> anyhow::Result<()> {
+    let gpu = hw::gpu_by_name("A100").unwrap();
+    let cfg = KernelConfig::Gemm { m: 4096, n: 11008, k: 4096, dtype: DType::Bf16 };
+
+    // 1. Kernel Decomposer: F(X, S) -> tasks
+    let decomp = cfg.decompose(&gpu);
+    println!("decomposed into {} tasks, tile {:?}", decomp.num_tasks(), decomp.tile);
+
+    // 2. Scheduling Simulator: M(T, S) -> task distribution
+    let dist = schedule(&decomp, &gpu);
+    println!(
+        "scheduled across {} SMs (max {} tasks on one SM)",
+        dist.num_sms(),
+        dist.assignment.iter().map(|v| v.len()).max().unwrap()
+    );
+
+    // 3. Feature Analyzer: pipeline demands + theoretical cycles
+    let f = FeatureSet::analyze(&decomp, &dist, &gpu);
+    println!(
+        "tensor roof {:.0} cycles | DRAM roof {:.0} cycles | theory {:.1} us",
+        f.tensor.total_cycles,
+        f.mio.cycles_dram,
+        f.theory_sec * 1e6
+    );
+
+    // 4. Performance Estimator: train a small MLP via the AOT PJRT artifact
+    let Ok(engine) = Engine::from_env() else {
+        println!("(run `make artifacts` to enable the MLP stage — stopping at features)");
+        return Ok(());
+    };
+    println!("building a small training set (this takes ~10s)...");
+    let ds = dataset::build(KernelKind::Gemm, &hw::seen_gpus(), 150, 1, 8);
+    let xs: Vec<_> = ds.iter().map(|s| s.x).collect();
+    let ys: Vec<f64> = ds.iter().map(|s| s.efficiency()).collect();
+    let model = train_model(
+        &engine,
+        &xs,
+        &ys,
+        &TrainConfig { max_steps: 500, val_every: 100, ..Default::default() },
+    )?;
+    let pred = Predictor::new(&engine, model.weights)?;
+
+    let sample = dataset::make_sample(&cfg, &gpu, 7);
+    let eff = pred.predict_eff(&[sample.x])?[0];
+    println!("predicted efficiency {eff:.3}");
+    println!("predicted latency    {:.1} us", sample.theory_sec / eff * 1e6);
+    println!("testbed ground truth {:.1} us", sample.latency_sec * 1e6);
+
+    // sanity: the trained model should beat the naive roofline on this set
+    let effs = pred.predict_eff(&xs)?;
+    let lat_pred: Vec<f64> = ds.iter().zip(&effs).map(|(s, e)| s.theory_sec / e).collect();
+    let lat_true: Vec<f64> = ds.iter().map(|s| s.latency_sec).collect();
+    let roof: Vec<f64> = ds.iter().map(|s| s.roofline_sec).collect();
+    println!(
+        "train-set MAPE: SynPerf {:.1}% vs roofline {:.1}%",
+        mape(&lat_pred, &lat_true),
+        mape(&roof, &lat_true)
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Serving example: the Layer-3 coordinator as a prediction service with
+//! dynamic batching. Multiple client threads fire mixed kernel prediction
+//! requests; the service batches them (size/deadline), routes per kernel
+//! category to the AOT'd MLP executables, and reports throughput + batch
+//! statistics.
+//!
+//!   cargo run --release --example serve_predictions
+//!
+//! Runs in degraded (roofline-answer) mode if `make artifacts` hasn't run.
+
+use synperf::coordinator::{PredictionService, ServiceConfig};
+use synperf::experiments::{Lab, ModelFlavor, Scale};
+use synperf::hw;
+use synperf::kernels::{DType, KernelConfig, KernelKind};
+use synperf::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let svc = Arc::new(PredictionService::spawn(
+        || {
+            let mut models = std::collections::HashMap::new();
+            if let Ok(lab) = Lab::new(Scale::Fast) {
+                for kind in [KernelKind::Gemm, KernelKind::RmsNorm, KernelKind::SiluMul] {
+                    if let Ok(p) = lab.model(kind, ModelFlavor::SynPerf) {
+                        models.insert(kind, p);
+                    }
+                }
+            } else {
+                eprintln!("(no artifacts — serving degraded roofline answers)");
+            }
+            models
+        },
+        ServiceConfig::default(),
+    ));
+
+    let n_clients = 4;
+    let per_client = 256;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(c as u64);
+                let gpus = hw::all_gpus();
+                let mut sum = 0.0;
+                for i in 0..per_client {
+                    let gpu = gpus[(c + i) % gpus.len()].clone();
+                    let cfg = match i % 3 {
+                        0 => KernelConfig::Gemm {
+                            m: rng.log_range_u32(16, 32768),
+                            n: rng.log_range_u32(384, 65536),
+                            k: rng.log_range_u32(256, 8192),
+                            dtype: DType::Bf16,
+                        },
+                        1 => KernelConfig::RmsNorm {
+                            seq: rng.log_range_u32(2, 65536),
+                            dim: rng.log_range_u32(128, 16384),
+                        },
+                        _ => KernelConfig::SiluMul {
+                            seq: rng.log_range_u32(2, 65536),
+                            dim: rng.log_range_u32(768, 65536),
+                        },
+                    };
+                    sum += svc.submit(cfg, gpu).recv().expect("service alive");
+                }
+                sum
+            })
+        })
+        .collect();
+    let mut total_pred = 0.0;
+    for h in handles {
+        total_pred += h.join().expect("client thread");
+    }
+    let wall = t0.elapsed();
+    let n = n_clients * per_client;
+    let snap = svc.metrics.snapshot();
+    println!("served {n} predictions from {n_clients} clients in {wall:.2?}");
+    println!("throughput: {:.0} predictions/s", n as f64 / wall.as_secs_f64());
+    println!(
+        "batches: {} (mean size {:.1}), batch latency p50 {:.0} us / p99 {:.0} us",
+        snap.batches, snap.mean_batch, snap.p50_us, snap.p99_us
+    );
+    println!("sum of predicted latencies: {total_pred:.3} s");
+    Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! §VII walkthrough: "beyond simulation" — diagnose Fused-MoE
+//! underperformance with a P80 ceiling model and close the gap by
+//! brute-force tuning (BLOCK_SIZE, num_stages, num_warps).
+//!
+//!   cargo run --release --example tune_fused_moe
+//!
+//! Requires `make artifacts` (the P80 model is an AOT pinball-loss MLP).
+
+use synperf::autotune;
+use synperf::dataset;
+use synperf::experiments::{Lab, ModelFlavor, Scale};
+use synperf::hw;
+use synperf::kernels::KernelKind;
+use synperf::util::stats::{geomean, mean};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::new(Scale::Fast)?;
+    println!("training / loading the P80 ceiling model (pinball loss tau=0.8)...");
+    let p80 = lab.model(KernelKind::FusedMoe, ModelFlavor::P80)?;
+    let ds = lab.dataset(KernelKind::FusedMoe);
+    let configs = lab.dataset_configs(KernelKind::FusedMoe);
+
+    let records = autotune::diagnose(&p80, &ds)?;
+    let n_under = records.iter().filter(|r| r.underperforming()).count();
+    println!(
+        "diagnosed {} / {} samples as Underperforming Points (gap > {})",
+        n_under,
+        records.len(),
+        autotune::GAP_THRESHOLD
+    );
+
+    let gpu = hw::gpu_by_name("A40").unwrap();
+    let n_gpus = hw::all_gpus().len();
+    let targets: Vec<usize> = records
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.gpu == gpu.name && r.underperforming())
+        .map(|(i, _)| i)
+        .take(8)
+        .collect();
+    println!("\ntuning {} diagnosed configs on {}:", targets.len(), gpu.name);
+    let mut speedups = Vec::new();
+    let mut gaps_before = Vec::new();
+    for &si in &targets {
+        let cfg = dataset::finalize_for_gpu(&configs[si / n_gpus], &gpu);
+        let r = autotune::tune(&cfg, &gpu, si as u64)?;
+        println!(
+            "  gap {:.3}: {:.1} us -> {:.1} us ({:.2}x) with {:?}",
+            records[si].gap,
+            r.default_sec * 1e6,
+            r.best_sec * 1e6,
+            r.speedup(),
+            r.best_cfg
+        );
+        speedups.push(r.speedup());
+        gaps_before.push(records[si].gap);
+    }
+    println!(
+        "\ngeo-mean speedup {:.2}x on points with mean gap {:.3}",
+        geomean(&speedups),
+        mean(&gaps_before)
+    );
+    Ok(())
+}

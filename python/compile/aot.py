@@ -1,0 +1,123 @@
+"""AOT compile path: lower the Layer-2 MLP (with its Layer-1 Pallas kernels)
+to HLO *text* artifacts consumed by the rust PJRT runtime.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; python never executes on the request path.
+
+Outputs (in artifacts/):
+  mlp_fwd_b{B}.hlo.txt        (theta, bn, x[B,F])                -> (eff[B],)
+  mlp_train_mape_b{B}.hlo.txt (theta,m,v,bn,x,y,step,key) -> (theta',m',v',bn',loss)
+  mlp_train_p80_b{B}.hlo.txt  same with pinball(tau=0.8) loss
+  init_theta.bin / init_bn.bin  initial parameter blobs (f32 LE)
+  manifest.json               packing + arg-order contract for rust
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+FWD_BATCHES = (1, 64, 256, 1024)
+TRAIN_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_fwd(batch: int) -> str:
+    fn = lambda theta, bn, x: (model.predict(theta, bn, x),)
+    lowered = jax.jit(fn).lower(
+        _spec((model.THETA_SIZE,)),
+        _spec((model.BN_SIZE,)),
+        _spec((batch, model.FEATURE_DIM)),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_train(batch: int, tau) -> str:
+    fn = functools.partial(model.train_step, tau=tau)
+    lowered = jax.jit(fn).lower(
+        _spec((model.THETA_SIZE,)),          # theta
+        _spec((model.THETA_SIZE,)),          # m
+        _spec((model.THETA_SIZE,)),          # v
+        _spec((model.BN_SIZE,)),             # bn
+        _spec((batch, model.FEATURE_DIM)),   # x
+        _spec((batch,)),                     # y
+        _spec(()),                           # step (f32, 1-based)
+        _spec((2,), jnp.uint32),             # PRNG key
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    def write(name: str, text: str) -> None:
+        path = os.path.join(out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {name} ({len(text) // 1024} KiB)")
+
+    print("[aot] lowering forward variants")
+    for b in FWD_BATCHES:
+        write(f"mlp_fwd_b{b}.hlo.txt", lower_fwd(b))
+
+    print("[aot] lowering train steps (MAPE + P80 pinball)")
+    write(f"mlp_train_mape_b{TRAIN_BATCH}.hlo.txt", lower_train(TRAIN_BATCH, None))
+    write(f"mlp_train_p80_b{TRAIN_BATCH}.hlo.txt", lower_train(TRAIN_BATCH, 0.8))
+
+    print("[aot] dumping initial parameter blobs")
+    theta = model.init_theta(jax.random.PRNGKey(0))
+    bn = model.init_bn()
+    with open(os.path.join(out, "init_theta.bin"), "wb") as f:
+        f.write(bytes(memoryview(jnp.asarray(theta, jnp.float32)).cast("B")))
+    with open(os.path.join(out, "init_bn.bin"), "wb") as f:
+        f.write(bytes(memoryview(jnp.asarray(bn, jnp.float32)).cast("B")))
+
+    manifest = {
+        "feature_dim": model.FEATURE_DIM,
+        "layers": model.LAYERS,
+        "theta_size": int(model.THETA_SIZE),
+        "bn_size": int(model.BN_SIZE),
+        "fwd_batches": list(FWD_BATCHES),
+        "train_batch": TRAIN_BATCH,
+        "fwd_args": ["theta", "bn", "x"],
+        "fwd_outs": ["eff"],
+        "train_args": ["theta", "m", "v", "bn", "x", "y", "step", "key"],
+        "train_outs": ["theta", "m", "v", "bn", "loss"],
+        "lr": model.LR,
+        "weight_decay": model.WD,
+        "dropout": model.DROPOUT,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

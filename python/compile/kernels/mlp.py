@@ -1,0 +1,116 @@
+"""Layer-1 Pallas kernels for the SynPerf performance-estimator MLP.
+
+The MLP's compute hot-spot is a chain of dense layers.  Each dense layer is
+implemented as a fused Pallas kernel (matmul + bias + optional ReLU) whose
+forward AND backward passes are Pallas matmul kernels, wired together with a
+``jax.custom_vjp`` so the Layer-2 training step can differentiate through it.
+
+TPU-adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * Blocks are row panels over the batch dimension with the full K / N extent
+    resident — for the layer sizes used here (<=256x256 fp32) a panel fits
+    comfortably in VMEM (<= ~0.5 MB including inputs+outputs).
+  * ``interpret=True`` everywhere: real Mosaic lowering emits a TPU
+    custom-call the CPU PJRT plugin cannot execute; interpret mode lowers to
+    portable HLO so the same artifact runs under the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_bm(m: int, cap: int = 128) -> int:
+    """Largest power-of-two row-panel size that divides ``m`` (<= cap)."""
+    bm = 1
+    while bm * 2 <= cap and m % (bm * 2) == 0:
+        bm *= 2
+    return bm
+
+
+# ---------------------------------------------------------------------------
+# Raw Pallas matmul:  (M, K) @ (K, N) -> (M, N), grid over M row panels.
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Pallas row-panel matmul used by the dense backward pass."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_bm(m)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Fused dense:  act(x @ w + b)  with custom VJP.
+# ---------------------------------------------------------------------------
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _dense_forward(x, w, b, relu: bool):
+    m, k = x.shape
+    _, n = w.shape
+    bm = _pick_bm(m)
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, relu=relu),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_dense(x, w, b, relu: bool = False):
+    """act(x @ w + b) as a single fused Pallas kernel (differentiable)."""
+    return _dense_forward(x, w, b, relu)
+
+
+def _fused_dense_fwd(x, w, b, relu):
+    y = _dense_forward(x, w, b, relu)
+    return y, (x, w, y)
+
+
+def _fused_dense_bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0.0).astype(g.dtype)
+    dx = matmul(g, w.T)  # (M, N) @ (N, K)
+    dw = matmul(x.T, g)  # (K, M) @ (M, N)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the Pallas kernels in mlp.py.
+
+Used by pytest/hypothesis at build time to validate kernel numerics before
+the model is AOT-lowered.  Never shipped to the rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def fused_dense_ref(x, w, b, relu: bool = False):
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y

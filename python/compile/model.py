@@ -1,0 +1,201 @@
+"""Layer-2 JAX model: the SynPerf performance-estimator MLP.
+
+Architecture (paper §V-C): 3 hidden layers (256, 128, 64), each
+dense -> ReLU -> BatchNorm -> Dropout(0.1); sigmoid output head predicting
+*execution efficiency* in [0, 1].  Dense layers are the Layer-1 Pallas
+kernels (kernels/mlp.py); everything else is cheap elementwise jnp.
+
+Two training objectives are exported (§V-C and §VII-A):
+  * MAPE loss        — the accuracy model (latency = theory / efficiency)
+  * pinball loss τ=.8 — the P80 "potential performance ceiling" model
+
+All trainable parameters live in one flat ``theta[P]`` vector and all
+BatchNorm running statistics in one flat ``bn[S]`` vector so the rust
+runtime only ever moves opaque blobs; the packing is mirrored into
+``artifacts/manifest.json`` by aot.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mlp import fused_dense
+
+FEATURE_DIM = 32
+HIDDEN = (256, 128, 64)
+LAYERS = [(FEATURE_DIM, HIDDEN[0]), (HIDDEN[0], HIDDEN[1]),
+          (HIDDEN[1], HIDDEN[2]), (HIDDEN[2], 1)]
+DROPOUT = 0.1
+BN_MOMENTUM = 0.1
+BN_EPS = 1e-5
+# AdamW hyper-parameters (paper: AdamW, lr=1e-3, weight decay).
+LR = 1e-3
+WD = 1e-4
+BETA1, BETA2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter packing.
+# ---------------------------------------------------------------------------
+
+def _param_shapes():
+    """(name, shape) list defining the theta layout, in packing order."""
+    shapes = []
+    for li, (fan_in, fan_out) in enumerate(LAYERS):
+        shapes.append((f"w{li}", (fan_in, fan_out)))
+        shapes.append((f"b{li}", (fan_out,)))
+        if li < len(LAYERS) - 1:  # hidden layers carry BatchNorm affine
+            shapes.append((f"gamma{li}", (fan_out,)))
+            shapes.append((f"beta{li}", (fan_out,)))
+    return shapes
+
+
+def _bn_shapes():
+    shapes = []
+    for li in range(len(LAYERS) - 1):
+        n = LAYERS[li][1]
+        shapes.append((f"mu{li}", (n,)))
+        shapes.append((f"var{li}", (n,)))
+    return shapes
+
+
+def _size(shapes):
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in shapes)
+
+
+THETA_SIZE = _size(_param_shapes())
+BN_SIZE = _size(_bn_shapes())
+
+
+def _unpack(flat, shapes):
+    out, off = {}, 0
+    for name, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return out
+
+
+def _pack(tree, shapes):
+    return jnp.concatenate([tree[name].reshape(-1) for name, _ in shapes])
+
+
+def unpack_theta(theta):
+    return _unpack(theta, _param_shapes())
+
+
+def pack_theta(params):
+    return _pack(params, _param_shapes())
+
+
+def unpack_bn(bn):
+    return _unpack(bn, _bn_shapes())
+
+
+def pack_bn(state):
+    return _pack(state, _bn_shapes())
+
+
+def init_theta(key) -> jax.Array:
+    """He-init weights, zero biases, identity BatchNorm affine."""
+    params = {}
+    for li, (fan_in, fan_out) in enumerate(LAYERS):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / fan_in)
+        params[f"w{li}"] = scale * jax.random.normal(
+            sub, (fan_in, fan_out), jnp.float32)
+        params[f"b{li}"] = jnp.zeros((fan_out,), jnp.float32)
+        if li < len(LAYERS) - 1:
+            params[f"gamma{li}"] = jnp.ones((fan_out,), jnp.float32)
+            params[f"beta{li}"] = jnp.zeros((fan_out,), jnp.float32)
+    return pack_theta(params)
+
+
+def init_bn() -> jax.Array:
+    state = {}
+    for li in range(len(LAYERS) - 1):
+        n = LAYERS[li][1]
+        state[f"mu{li}"] = jnp.zeros((n,), jnp.float32)
+        state[f"var{li}"] = jnp.ones((n,), jnp.float32)
+    return pack_bn(state)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+def _forward(theta, bn, x, *, train: bool, key=None):
+    """Returns (efficiency[B], new_bn[S])."""
+    p = unpack_theta(theta)
+    s = unpack_bn(bn)
+    new_s = dict(s)
+    h = x
+    n_hidden = len(LAYERS) - 1
+    for li in range(n_hidden):
+        h = fused_dense(h, p[f"w{li}"], p[f"b{li}"], True)  # dense + ReLU
+        if train:
+            mu = jnp.mean(h, axis=0)
+            var = jnp.var(h, axis=0)
+            new_s[f"mu{li}"] = (1 - BN_MOMENTUM) * s[f"mu{li}"] + BN_MOMENTUM * mu
+            new_s[f"var{li}"] = (1 - BN_MOMENTUM) * s[f"var{li}"] + BN_MOMENTUM * var
+        else:
+            mu, var = s[f"mu{li}"], s[f"var{li}"]
+        h = (h - mu[None, :]) * jax.lax.rsqrt(var[None, :] + BN_EPS)
+        h = h * p[f"gamma{li}"][None, :] + p[f"beta{li}"][None, :]
+        if train and DROPOUT > 0.0:
+            sub = jax.random.fold_in(key, li)
+            keep = jax.random.bernoulli(sub, 1.0 - DROPOUT, h.shape)
+            h = jnp.where(keep, h / (1.0 - DROPOUT), 0.0)
+    li = n_hidden
+    h = fused_dense(h, p[f"w{li}"], p[f"b{li}"], False)
+    eff = jax.nn.sigmoid(h[:, 0])
+    return eff, _pack(new_s, _bn_shapes())
+
+
+def predict(theta, bn, x):
+    """Inference forward: running BN stats, no dropout."""
+    eff, _ = _forward(theta, bn, x, train=False)
+    return eff
+
+
+# ---------------------------------------------------------------------------
+# Losses.
+# ---------------------------------------------------------------------------
+
+def mape_loss(pred, y):
+    return jnp.mean(jnp.abs(pred - y) / jnp.clip(y, 1e-4, None))
+
+
+def pinball_loss(pred, y, tau: float):
+    d = y - pred
+    return jnp.mean(jnp.maximum(tau * d, (tau - 1.0) * d))
+
+
+# ---------------------------------------------------------------------------
+# AdamW training step.
+# ---------------------------------------------------------------------------
+
+def _loss_fn(theta, bn, x, y, key, tau):
+    pred, new_bn = _forward(theta, bn, x, train=True, key=key)
+    if tau is None:
+        loss = mape_loss(pred, y)
+    else:
+        loss = pinball_loss(pred, y, tau)
+    return loss, new_bn
+
+
+def train_step(theta, m, v, bn, x, y, step, key, *, tau=None):
+    """One AdamW step.  ``step`` is the 1-based step counter (f32 scalar),
+    ``key`` a jax.random.PRNGKey (uint32[2]).  Returns
+    (theta', m', v', bn', loss)."""
+    (loss, new_bn), grad = jax.value_and_grad(_loss_fn, has_aux=True)(
+        theta, bn, x, y, key, tau)
+    m = BETA1 * m + (1 - BETA1) * grad
+    v = BETA2 * v + (1 - BETA2) * grad * grad
+    mhat = m / (1 - BETA1 ** step)
+    vhat = v / (1 - BETA2 ** step)
+    theta = theta - LR * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + WD * theta)
+    return theta, m, v, new_bn, loss

@@ -1,0 +1,87 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes; assert_allclose against the reference is the core
+build-time correctness signal before AOT lowering.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 4, 8, 64, 96, 128, 256]),
+    k=st.sampled_from([1, 3, 32, 64, 129, 256]),
+    n=st.sampled_from([1, 5, 64, 128, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    got = mlp.matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 16, 64, 128, 256, 512]),
+    k=st.sampled_from([2, 32, 64, 128]),
+    n=st.sampled_from([1, 64, 128, 256]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_dense_matches_ref(m, k, n, relu, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    got = mlp.fused_dense(x, w, b, relu)
+    want = ref.fused_dense_ref(x, w, b, relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("m,k,n", [(8, 16, 4), (64, 32, 256), (128, 64, 1)])
+def test_fused_dense_gradients_match_ref(relu, m, k, n):
+    """custom_vjp backward (Pallas matmuls) equals autodiff of the oracle."""
+    x = _rand(7, (m, k))
+    w = _rand(8, (k, n))
+    b = _rand(9, (n,))
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(jnp.tanh(mlp.fused_dense(x, w, b, relu)))
+
+    def loss_ref(x, w, b):
+        return jnp.sum(jnp.tanh(ref.fused_dense_ref(x, w, b, relu)))
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gp, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_pick_bm_divides():
+    for m in [1, 2, 3, 6, 64, 96, 100, 128, 256, 1000, 1024]:
+        bm = mlp._pick_bm(m)
+        assert m % bm == 0
+        assert bm <= 128
+
+
+def test_dense_kernel_relu_clamps():
+    x = -jnp.ones((4, 8), jnp.float32)
+    w = jnp.eye(8, dtype=jnp.float32)
+    b = jnp.zeros((8,), jnp.float32)
+    out = mlp.fused_dense(x, w, b, True)
+    assert float(jnp.min(out)) == 0.0

@@ -1,0 +1,116 @@
+"""Layer-2 model tests: packing, forward shapes/semantics, training step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_theta_pack_roundtrip():
+    theta = model.init_theta(jax.random.PRNGKey(3))
+    assert theta.shape == (model.THETA_SIZE,)
+    p = model.unpack_theta(theta)
+    again = model.pack_theta(p)
+    np.testing.assert_array_equal(theta, again)
+
+
+def test_bn_pack_roundtrip():
+    bn = model.init_bn()
+    assert bn.shape == (model.BN_SIZE,)
+    s = model.unpack_bn(bn)
+    np.testing.assert_array_equal(bn, model.pack_bn(s))
+    # initial running stats: mu=0, var=1
+    assert float(jnp.sum(jnp.abs(s["mu0"]))) == 0.0
+    assert float(jnp.min(s["var1"])) == 1.0
+
+
+def test_predict_shape_and_range():
+    theta = model.init_theta(jax.random.PRNGKey(0))
+    bn = model.init_bn()
+    x = jax.random.normal(jax.random.PRNGKey(1), (17, model.FEATURE_DIM))
+    eff = model.predict(theta, bn, x)
+    assert eff.shape == (17,)
+    assert bool(jnp.all(eff > 0.0)) and bool(jnp.all(eff < 1.0))
+
+
+def test_predict_deterministic():
+    theta = model.init_theta(jax.random.PRNGKey(0))
+    bn = model.init_bn()
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, model.FEATURE_DIM))
+    a = model.predict(theta, bn, x)
+    b = model.predict(theta, bn, x)
+    np.testing.assert_array_equal(a, b)
+
+
+def _toy_batch(n=256, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, model.FEATURE_DIM))
+    # learnable synthetic efficiency in (0,1)
+    y = jax.nn.sigmoid(0.7 * x[:, 0] - 0.3 * x[:, 1] + 0.1)
+    return x, y
+
+
+def test_train_step_reduces_loss():
+    theta = model.init_theta(jax.random.PRNGKey(0))
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    bn = model.init_bn()
+    x, y = _toy_batch()
+    step_fn = jax.jit(lambda t, m, v, bn, s, k: model.train_step(
+        t, m, v, bn, x, y, s, k, tau=None))
+    losses = []
+    for i in range(30):
+        key = jax.random.PRNGKey(100 + i)
+        theta, m, v, bn, loss = step_fn(theta, m, v, bn, jnp.float32(i + 1), key)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_train_step_updates_bn_running_stats():
+    theta = model.init_theta(jax.random.PRNGKey(0))
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    bn = model.init_bn()
+    x, y = _toy_batch(seed=5)
+    theta2, m2, v2, bn2, _ = model.train_step(
+        theta, m, v, bn, x, y, jnp.float32(1), jax.random.PRNGKey(0), tau=None)
+    assert float(jnp.sum(jnp.abs(bn2 - bn))) > 0.0
+    assert float(jnp.sum(jnp.abs(theta2 - theta))) > 0.0
+
+
+def test_pinball_loss_asymmetry():
+    y = jnp.array([0.5])
+    lo = model.pinball_loss(jnp.array([0.4]), y, 0.8)   # under-predict
+    hi = model.pinball_loss(jnp.array([0.6]), y, 0.8)   # over-predict
+    # tau=0.8 penalizes under-prediction 4x more than over-prediction
+    assert float(lo) > float(hi)
+    np.testing.assert_allclose(float(lo) / float(hi), 4.0, rtol=1e-5)
+
+
+def test_mape_loss_zero_at_perfect():
+    y = jnp.array([0.2, 0.6, 0.9])
+    assert float(model.mape_loss(y, y)) == 0.0
+
+
+def test_p80_training_biases_high():
+    """Quantile tau=0.8 model should predict above the median of noisy data."""
+    theta = model.init_theta(jax.random.PRNGKey(0))
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    bn = model.init_bn()
+    key = jax.random.PRNGKey(42)
+    x = jax.random.normal(key, (256, model.FEATURE_DIM))
+    base = jax.nn.sigmoid(0.5 * x[:, 0])
+    noise = 0.3 * jax.random.uniform(jax.random.PRNGKey(7), (256,))
+    y = jnp.clip(base - noise, 0.01, 0.99)  # noisy, mostly below ceiling
+    step_fn = jax.jit(lambda t, m, v, bn, s, k: model.train_step(
+        t, m, v, bn, x, y, s, k, tau=0.8))
+    for i in range(150):
+        theta, m, v, bn, loss = step_fn(
+            theta, m, v, bn, jnp.float32(i + 1), jax.random.PRNGKey(i))
+    pred = model.predict(theta, bn, x)
+    frac_above = float(jnp.mean((pred >= y).astype(jnp.float32)))
+    assert frac_above > 0.6, frac_above

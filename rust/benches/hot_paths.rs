@@ -1,0 +1,141 @@
+//! `cargo bench --bench hot_paths` — microbenchmarks of the Layer-3 request
+//! path (hand-rolled harness; criterion is not in the offline vendor set):
+//!
+//!   decompose -> schedule -> features   (the analytical front half)
+//!   oracle measurement                  (dataset generation throughput)
+//!   MLP forward via PJRT (b1 / b256 / b1024)
+//!   end-to-end single prediction       (the Fig. 7 "SynPerf time" path)
+//!   coordinator service throughput
+
+use synperf::coordinator::{PredictionService, ServiceConfig};
+use synperf::dataset;
+use synperf::features::FeatureSet;
+use synperf::hw;
+use synperf::kernels::{DType, KernelConfig};
+use synperf::oracle;
+use synperf::runtime::Engine;
+use synperf::sched::schedule;
+use synperf::util::bench::{bench, black_box};
+
+fn main() {
+    let gpu = hw::gpu_by_name("A100").unwrap();
+    let cfg = KernelConfig::Gemm { m: 4096, n: 11008, k: 4096, dtype: DType::Bf16 };
+    let attn = KernelConfig::Attention {
+        batch: vec![(2048, 2048); 8],
+        nh: 32,
+        nkv: 8,
+        hd: 128,
+        causal: true,
+        fa3: false,
+    };
+
+    println!("== analytical front half ==");
+    let r = bench("decompose/gemm-4096x11008x4096", 200, 20, || {
+        black_box(cfg.decompose(&gpu));
+    });
+    println!("{}", r.report());
+    let d = cfg.decompose(&gpu);
+    let r = bench("schedule/hardware-rr", 200, 20, || {
+        black_box(schedule(&d, &gpu));
+    });
+    println!("{}", r.report());
+    let dist = schedule(&d, &gpu);
+    let r = bench("features/analyze", 200, 20, || {
+        black_box(FeatureSet::analyze(&d, &dist, &gpu));
+    });
+    println!("{}", r.report());
+    let da = attn.decompose(&gpu);
+    let r = bench("decompose+schedule+features/attention", 200, 20, || {
+        let dist = schedule(&da, &gpu);
+        black_box(FeatureSet::analyze(&da, &dist, &gpu));
+    });
+    println!("{}", r.report());
+
+    println!("\n== oracle testbed ==");
+    let mut seed = 0u64;
+    let r = bench("oracle/gemm", 300, 20, || {
+        seed += 1;
+        black_box(oracle::measure(&cfg, &gpu, seed));
+    });
+    println!("{}", r.report());
+    let r = bench("oracle/attention-causal", 300, 20, || {
+        seed += 1;
+        black_box(oracle::measure(&attn, &gpu, seed));
+    });
+    println!("{}", r.report());
+    let r = bench("dataset/make_sample (oracle+habitat+features)", 300, 10, || {
+        seed += 1;
+        black_box(dataset::make_sample(&cfg, &gpu, seed));
+    });
+    println!("{}", r.report());
+
+    let Ok(engine) = Engine::new("artifacts") else {
+        eprintln!("\n(no artifacts: skipping PJRT benches — run `make artifacts`)");
+        return;
+    };
+
+    println!("\n== PJRT MLP inference ==");
+    let weights = synperf::mlp::weights::ModelWeights {
+        theta: engine.read_f32_blob("init_theta.bin").unwrap(),
+        bn: engine.read_f32_blob("init_bn.bin").unwrap(),
+        scaler: synperf::mlp::Scaler::identity(),
+    };
+    let pred = synperf::mlp::Predictor::new(&engine, weights).unwrap();
+    let row = dataset::make_sample(&cfg, &gpu, 1).x;
+    for b in [1usize, 256, 1024] {
+        let xs = vec![row; b];
+        let r = bench(&format!("mlp/predict_eff b{b}"), 400, 10, || {
+            black_box(pred.predict_eff(&xs).unwrap());
+        });
+        println!("{}  ({:.2} us/row)", r.report(), r.median_ns / 1e3 / b as f64);
+    }
+    let xs1 = vec![row; 256];
+    let r = bench("mlp/native_forward b256 (cross-check path)", 200, 10, || {
+        black_box(pred.predict_eff_native(&xs1));
+    });
+    println!("{}", r.report());
+
+    println!("\n== end-to-end single prediction (Fig. 7 path) ==");
+    let r = bench("predict/full-path gemm (features + MLP b1)", 400, 10, || {
+        let d = cfg.decompose(&gpu);
+        let dist = schedule(&d, &gpu);
+        let f = FeatureSet::analyze(&d, &dist, &gpu);
+        let x = f.to_model_input(&gpu);
+        black_box(f.theory_sec / pred.predict_eff(&[x]).unwrap()[0]);
+    });
+    println!("{}", r.report());
+
+    println!("\n== coordinator service ==");
+    let svc = PredictionService::spawn(std::collections::HashMap::new, ServiceConfig::default());
+    let t0 = std::time::Instant::now();
+    let n = 2000;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            svc.submit(
+                KernelConfig::RmsNorm { seq: 128 + (i % 64) as u32, dim: 4096 },
+                gpu.clone(),
+            )
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let wall = t0.elapsed();
+    let snap = svc.metrics.snapshot();
+    println!(
+        "service: {n} reqs in {wall:?} = {:.0} req/s (mean batch {:.1})",
+        n as f64 / wall.as_secs_f64(),
+        snap.mean_batch
+    );
+    svc.shutdown();
+
+    println!("\n== detailed comparator costs (Fig. 7) ==");
+    let r = bench("baseline/amali gemm-4096^3", 300, 5, || {
+        black_box(synperf::baselines::amali::predict_gemm(4096, 4096, 4096, &gpu));
+    });
+    println!("{}", r.report());
+    let r = bench("baseline/llmcompass gemm-4096^3", 300, 3, || {
+        black_box(synperf::baselines::llmcompass::predict_gemm(4096, 4096, 4096, &gpu));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,35 @@
+//! `cargo bench --bench paper_tables` — regenerates every paper table and
+//! figure (DESIGN.md §5) at the fast scale and times each experiment.
+//! This is the deliverable-(d) harness: one bench per table/figure, printing
+//! the same rows/series the paper reports.
+//!
+//! Requires `make artifacts`; experiments cache datasets/models in runs/.
+
+use synperf::experiments::{run, Lab, Scale};
+
+fn main() {
+    let lab = match Lab::new(Scale::Fast) {
+        Ok(lab) => lab,
+        Err(e) => {
+            eprintln!("skipping paper_tables bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let ids = [
+        "table1", "table7", "fig3", "fig4", "fig5", "scaledmm", "fig7", "fig6", "table9",
+        "fig8",
+    ];
+    let mut failures = 0;
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        match run(&lab, id) {
+            Ok(_) => println!("[bench] {id:<8} regenerated in {:?}\n", t0.elapsed()),
+            Err(e) => {
+                failures += 1;
+                eprintln!("[bench] {id:<8} FAILED: {e:#}\n");
+            }
+        }
+    }
+    assert_eq!(failures, 0, "{failures} experiment benches failed");
+    println!("[bench] all paper tables/figures regenerated; see runs/results.txt");
+}

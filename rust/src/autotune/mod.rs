@@ -1,0 +1,136 @@
+//! "Beyond simulation" (paper §VII): model-guided optimization of the
+//! Fused-MoE Triton kernel.
+//!
+//!  1. Train the same MLP with **pinball loss τ=0.8** -> a statistically
+//!     robust *Potential Performance Ceiling* `ŷ_p80` (§VII-A).
+//!  2. Diagnose: perf_gap = ŷ_p80 − y_actual; configurations with gap > 0.1
+//!     are *Underperforming Points* (§VII-B, Fig. 8).
+//!  3. Act: brute-force autotune `(BLOCK_SIZE, num_stages, num_warps)` on
+//!     the diagnosed points and verify the gap closes (§VII-C, Table X /
+//!     Fig. 9).
+
+use crate::dataset::{finalize_for_gpu, Sample};
+use crate::hw::GpuSpec;
+use crate::kernels::{fused_moe, KernelConfig, KernelKind};
+use crate::mlp::Predictor;
+use crate::oracle;
+use anyhow::Result;
+
+/// Gap threshold defining an Underperforming Point (§VII-B).
+pub const GAP_THRESHOLD: f64 = 0.1;
+
+/// Per-sample diagnosis record.
+#[derive(Debug, Clone)]
+pub struct GapRecord {
+    pub gpu: String,
+    pub actual_eff: f64,
+    pub ceiling_eff: f64,
+    pub gap: f64,
+}
+
+impl GapRecord {
+    pub fn underperforming(&self) -> bool {
+        self.gap > GAP_THRESHOLD
+    }
+}
+
+/// Apply the P80 ceiling model to a dataset split (§VII-B).
+pub fn diagnose(p80: &Predictor, samples: &[Sample]) -> Result<Vec<GapRecord>> {
+    let xs: Vec<_> = samples.iter().map(|s| s.x).collect();
+    let ceil = p80.predict_eff(&xs)?;
+    Ok(samples
+        .iter()
+        .zip(ceil)
+        .map(|(s, c)| {
+            let actual = s.efficiency();
+            GapRecord { gpu: s.gpu.clone(), actual_eff: actual, ceiling_eff: c, gap: c - actual }
+        })
+        .collect())
+}
+
+/// Result of brute-force tuning one configuration on one GPU (§VII-C).
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub default_sec: f64,
+    pub best_sec: f64,
+    pub best_cfg: crate::kernels::MoeConfig,
+}
+
+impl TuneResult {
+    pub fn speedup(&self) -> f64 {
+        self.default_sec / self.best_sec
+    }
+}
+
+/// Brute-force sweep over the §VII-C space for one Fused-MoE launch.
+/// `seed` fixes the oracle measurement stream (routing is reused across candidates).
+pub fn tune(cfg: &KernelConfig, gpu: &GpuSpec, seed: u64) -> Result<TuneResult> {
+    let KernelConfig::FusedMoe { h, n, expert_tokens, cfg: default_cfg, .. } =
+        finalize_for_gpu(cfg, gpu)
+    else {
+        anyhow::bail!("tune() expects a FusedMoe config");
+    };
+    let measure = |c: crate::kernels::MoeConfig, s: u64| {
+        let d = fused_moe::decompose(h, n, &expert_tokens, c, gpu);
+        oracle::measure_decomposed(KernelKind::FusedMoe, &d, gpu, s).clean_sec
+    };
+    let default_sec = measure(default_cfg, seed);
+    let mut best_sec = default_sec;
+    let mut best_cfg = default_cfg;
+    for cand in fused_moe::tuning_space() {
+        if !fused_moe::config_valid(&cand, gpu) {
+            continue;
+        }
+        let t = measure(cand, seed);
+        if t < best_sec {
+            best_sec = t;
+            best_cfg = cand;
+        }
+    }
+    Ok(TuneResult { default_sec, best_sec, best_cfg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset;
+    use crate::hw::gpu_by_name;
+
+    #[test]
+    fn tuning_never_hurts() {
+        let configs = dataset::sample_configs(KernelKind::FusedMoe, 5, 31);
+        let gpu = gpu_by_name("A40").unwrap();
+        for (i, cfg) in configs.iter().enumerate() {
+            let r = tune(cfg, &gpu, 100 + i as u64).unwrap();
+            assert!(r.speedup() >= 1.0, "speedup {}", r.speedup());
+        }
+    }
+
+    #[test]
+    fn a40_gains_exceed_h800() {
+        let configs = dataset::sample_configs(KernelKind::FusedMoe, 10, 77);
+        let geo = |gpu_name: &str| {
+            let gpu = gpu_by_name(gpu_name).unwrap();
+            let sp: Vec<f64> = configs
+                .iter()
+                .enumerate()
+                .map(|(i, c)| tune(c, &gpu, 500 + i as u64).unwrap().speedup())
+                .collect();
+            crate::util::stats::geomean(&sp)
+        };
+        let a40 = geo("A40");
+        let h800 = geo("H800");
+        assert!(a40 > h800, "A40 {a40} should out-gain H800 {h800}");
+        // on *random* (not diagnosed) configs the headroom is modest; the
+        // diagnosed-point geomean in Table X is substantially higher
+        assert!(a40 > 1.04, "A40 tuning headroom too small: {a40}");
+    }
+
+    #[test]
+    fn gap_record_threshold() {
+        let g = GapRecord { gpu: "A40".into(), actual_eff: 0.4, ceiling_eff: 0.55, gap: 0.15 };
+        assert!(g.underperforming());
+        let g2 = GapRecord { gpu: "H20".into(), actual_eff: 0.6, ceiling_eff: 0.65, gap: 0.05 };
+        assert!(!g2.underperforming());
+    }
+}

@@ -1,0 +1,71 @@
+//! Habitat-style baseline (paper [76]): wave-scaling a *measured* runtime
+//! from a local reference GPU to the target GPU using compute / bandwidth
+//! ratios. Black-box w.r.t. microarchitecture — which is why it transfers
+//! poorly to unseen architectures (85.96% in Table VIII).
+
+use crate::features::FeatureSet;
+use crate::hw::{gpu_by_name, GpuSpec};
+use crate::kernels::KernelConfig;
+use crate::oracle;
+use crate::sched::schedule;
+
+/// Reference device: the A100 (the most common "local" GPU); falls back to
+/// the A40 when predicting the A100 itself.
+pub fn reference_gpu(target: &GpuSpec) -> GpuSpec {
+    if target.name == "A100" {
+        gpu_by_name("A40").unwrap()
+    } else {
+        gpu_by_name("A100").unwrap()
+    }
+}
+
+/// Wave-scaling prediction: measure on the reference, then scale by the
+/// roof ratio of whichever regime (compute/memory) dominates on each side.
+pub fn predict(cfg: &KernelConfig, target: &GpuSpec, seed: u64) -> f64 {
+    let reference = reference_gpu(target);
+    let ref_cfg = crate::dataset::finalize_for_gpu(cfg, &reference);
+    let t_ref = oracle::measure(&ref_cfg, &reference, seed ^ 0xAB17A7).latency_sec;
+
+    let roofs = |gpu: &GpuSpec| {
+        let c = crate::dataset::finalize_for_gpu(cfg, gpu);
+        let d = c.decompose(gpu);
+        let f = FeatureSet::analyze(&d, &schedule(&d, gpu), gpu);
+        let compute =
+            f.tensor.total_cycles.max(f.fma.total_cycles).max(f.xu.total_cycles)
+                * gpu.cycle_sec();
+        let mem = f.mio.cycles_dram * gpu.cycle_sec();
+        (compute, mem)
+    };
+    let (c_ref, m_ref) = roofs(&reference);
+    let (c_tgt, m_tgt) = roofs(target);
+
+    // wave scaling: blend the per-regime ratios by how memory-bound the
+    // kernel is on the reference device
+    let mem_weight = m_ref / (m_ref + c_ref).max(1e-12);
+    let ratio = mem_weight * (m_tgt / m_ref.max(1e-12))
+        + (1.0 - mem_weight) * (c_tgt / c_ref.max(1e-12));
+    (t_ref * ratio).max(1e-7)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::DType;
+
+    #[test]
+    fn scales_toward_faster_hardware() {
+        let cfg = KernelConfig::Gemm { m: 4096, n: 4096, k: 4096, dtype: DType::Bf16 };
+        let a40 = gpu_by_name("A40").unwrap();
+        let h800 = gpu_by_name("H800").unwrap();
+        let p_a40 = predict(&cfg, &a40, 1);
+        let p_h800 = predict(&cfg, &h800, 1);
+        assert!(p_h800 < p_a40, "H800 {p_h800} should beat A40 {p_a40}");
+    }
+
+    #[test]
+    fn reference_never_self() {
+        for g in crate::hw::all_gpus() {
+            assert_ne!(reference_gpu(&g).name, g.name);
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Linear baseline (paper [29], §VI-A): ordinary least squares from the two
+//! aggregate analytical features — theoretical compute cycles and memory
+//! cycles — to measured latency. Closed-form fit on the seen-GPU split.
+
+use crate::dataset::Sample;
+use crate::util::stats::ols;
+
+#[derive(Debug, Clone)]
+pub struct LinearModel {
+    /// [intercept, w_compute, w_mem]
+    pub beta: Vec<f64>,
+}
+
+impl LinearModel {
+    pub fn fit(train: &[Sample]) -> LinearModel {
+        // weight rows by 1/sqrt(latency): the paper's ranges span five
+        // decades; unweighted OLS fits only the largest kernels, while full
+        // relative weighting would overfit the small-kernel regime — the
+        // original predictor [29] lands in between
+        let x: Vec<Vec<f64>> = train
+            .iter()
+            .map(|s| {
+                let w = 1.0 / s.latency_sec.max(1e-9).sqrt();
+                vec![w, s.compute_sec * w, s.mem_sec * w]
+            })
+            .collect();
+        let y: Vec<f64> = train.iter().map(|s| s.latency_sec.max(1e-9).sqrt().recip() * s.latency_sec).collect();
+        LinearModel { beta: ols(&x, &y) }
+    }
+
+    pub fn predict(&self, s: &Sample) -> f64 {
+        (self.beta[0] + self.beta[1] * s.compute_sec + self.beta[2] * s.mem_sec).max(1e-7)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset;
+    use crate::hw::seen_gpus;
+    use crate::kernels::KernelKind;
+    use crate::util::stats::mape;
+
+    #[test]
+    fn linear_fits_but_poorly() {
+        let ds = dataset::build(KernelKind::Gemm, &seen_gpus(), 60, 17, 4);
+        let m = LinearModel::fit(&ds);
+        let pred: Vec<f64> = ds.iter().map(|s| m.predict(&s)).collect();
+        let actual: Vec<f64> = ds.iter().map(|s| s.latency_sec).collect();
+        let err = mape(&pred, &actual);
+        // sane but far from the hybrid model's accuracy
+        assert!(err < 500.0, "linear degenerate: {err}%");
+        assert!(err > 10.0, "linear unexpectedly perfect: {err}%");
+    }
+}

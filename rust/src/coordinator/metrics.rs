@@ -1,0 +1,75 @@
+//! Service metrics: request counts, latency percentiles, batch-size
+//! distribution — enough to report the coordinator benches.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    requests: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, batch_size: usize, latency: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += batch_size as u64;
+        g.batch_sizes.push(batch_size);
+        g.latencies_us.push(latency.as_secs_f64() * 1e6);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies_us.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            lat[((lat.len() - 1) as f64 * q) as usize]
+        };
+        Snapshot {
+            requests: g.requests,
+            batches: g.batch_sizes.len(),
+            mean_batch: if g.batch_sizes.is_empty() {
+                0.0
+            } else {
+                g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
+            },
+            p50_us: pct(0.5),
+            p99_us: pct(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::default();
+        m.record_batch(4, Duration::from_micros(100));
+        m.record_batch(8, Duration::from_micros(300));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 12);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 6.0).abs() < 1e-9);
+        assert!(s.p99_us >= s.p50_us);
+    }
+}

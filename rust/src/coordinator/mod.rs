@@ -1,0 +1,15 @@
+//! Layer-3 coordinator: prediction-as-a-service.
+//!
+//! SynPerf's real-time use case (§IV: "enabling real-time predictions") is
+//! served by a coordinator that accepts prediction requests, batches them
+//! dynamically (size- or deadline-triggered, vLLM-router style), routes each
+//! batch to the per-kernel-category MLP executable, and streams results
+//! back — all in rust on top of std::thread + mpsc (the offline vendor set
+//! has no tokio; the event loop is a hand-rolled deadline batcher).
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use service::{PredictionService, Request, ServiceConfig};

@@ -1,0 +1,182 @@
+//! The prediction service: a leader thread owns the per-kernel-category
+//! Predictors (PJRT executables are not Sync) and runs the dynamic-batch
+//! loop; clients hold a cheap cloneable handle and block on their own
+//! response channel. Request -> [batcher] -> route by kernel kind ->
+//! batched MLP forward -> respond.
+
+use super::batcher::collect_batch;
+use super::metrics::Metrics;
+use crate::features::{FeatureSet, FEATURE_DIM};
+use crate::hw::GpuSpec;
+use crate::kernels::{KernelConfig, KernelKind};
+use crate::mlp::Predictor;
+use crate::sched::schedule;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A prediction request: a kernel launch on a GPU; the service decomposes,
+/// schedules, featurizes and predicts latency.
+pub struct Request {
+    pub cfg: KernelConfig,
+    pub gpu: GpuSpec,
+    pub resp: Sender<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub max_batch: usize,
+    pub deadline: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { max_batch: 256, deadline: Duration::from_millis(2) }
+    }
+}
+
+pub struct PredictionService {
+    tx: Sender<Request>,
+    pub metrics: Arc<Metrics>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PredictionService {
+    /// Spawn the service thread. PJRT executables are not `Send`, so the
+    /// per-kernel-category Predictors are constructed *on* the service
+    /// thread by `factory` (untrained categories answer with the
+    /// theoretical roof — documented degraded mode).
+    pub fn spawn<F>(factory: F, cfg: ServiceConfig) -> PredictionService
+    where
+        F: FnOnce() -> HashMap<KernelKind, Predictor> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let handle = std::thread::spawn(move || {
+            let models = factory();
+            service_loop(rx, models, cfg, m2)
+        });
+        PredictionService { tx, metrics, handle: Some(handle) }
+    }
+
+    /// Client handle: submit a request, receive the latency via the channel.
+    pub fn submit(&self, cfg: KernelConfig, gpu: GpuSpec) -> Receiver<f64> {
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .send(Request { cfg, gpu, resp: resp_tx })
+            .expect("service thread alive");
+        resp_rx
+    }
+
+    /// Convenience: blocking single prediction.
+    pub fn predict(&self, cfg: KernelConfig, gpu: &GpuSpec) -> Result<f64> {
+        let rx = self.submit(cfg, gpu.clone());
+        Ok(rx.recv()?)
+    }
+
+    /// Graceful shutdown.
+    pub fn shutdown(mut self) {
+        drop(self.tx);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+fn service_loop(
+    rx: Receiver<Request>,
+    models: HashMap<KernelKind, Predictor>,
+    cfg: ServiceConfig,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let (batch, closed) = collect_batch(&rx, cfg.max_batch, cfg.deadline);
+        if !batch.is_empty() {
+            let t0 = Instant::now();
+            let n = batch.len();
+            process_batch(batch, &models);
+            metrics.record_batch(n, t0.elapsed());
+        }
+        if closed {
+            return;
+        }
+    }
+}
+
+fn process_batch(batch: Vec<Request>, models: &HashMap<KernelKind, Predictor>) {
+    // route: group by kernel category, keeping (features, theory, responder)
+    let mut groups: HashMap<KernelKind, Vec<([f32; FEATURE_DIM], f64, Sender<f64>)>> =
+        HashMap::new();
+    for req in batch {
+        let decomp = req.cfg.decompose(&req.gpu);
+        let dist = schedule(&decomp, &req.gpu);
+        let f = FeatureSet::analyze(&decomp, &dist, &req.gpu);
+        groups.entry(req.cfg.kind()).or_default().push((
+            f.to_model_input(&req.gpu),
+            f.theory_sec,
+            req.resp,
+        ));
+    }
+    for (kind, rows) in groups {
+        let xs: Vec<[f32; FEATURE_DIM]> = rows.iter().map(|r| r.0).collect();
+        let effs: Vec<f64> = match models.get(&kind) {
+            Some(p) => p.predict_eff(&xs).unwrap_or_else(|_| vec![1.0; xs.len()]),
+            None => vec![1.0; xs.len()], // degraded mode: roofline answer
+        };
+        for ((_, theory, resp), eff) in rows.into_iter().zip(effs) {
+            // receiver may have gone away; ignore
+            let _ = resp.send(theory / eff);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gpu_by_name;
+    use crate::kernels::DType;
+
+    #[test]
+    fn degraded_mode_answers_roofline() {
+        // no trained models: service still answers with theory roof
+        let svc = PredictionService::spawn(HashMap::new, ServiceConfig::default());
+        let gpu = gpu_by_name("A100").unwrap();
+        let cfg = KernelConfig::Gemm { m: 2048, n: 2048, k: 2048, dtype: DType::Bf16 };
+        let lat = svc.predict(cfg, &gpu).unwrap();
+        assert!(lat > 0.0 && lat.is_finite());
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.requests, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batches_multiple_clients() {
+        let svc = PredictionService::spawn(HashMap::new, ServiceConfig::default());
+        let gpu = gpu_by_name("H800").unwrap();
+        let rxs: Vec<_> = (0..64)
+            .map(|i| {
+                svc.submit(
+                    KernelConfig::RmsNorm { seq: 128 + i, dim: 4096 },
+                    gpu.clone(),
+                )
+            })
+            .collect();
+        for rx in rxs {
+            let v = rx.recv().unwrap();
+            assert!(v > 0.0);
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.requests, 64);
+        assert!(snap.mean_batch > 1.5, "should have batched: {snap:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins() {
+        let svc = PredictionService::spawn(HashMap::new, ServiceConfig::default());
+        svc.shutdown();
+    }
+}

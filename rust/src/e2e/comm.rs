@@ -1,0 +1,124 @@
+//! Communication kernels (paper §V-D): a profiled baseline database of
+//! collective latencies plus a random-forest regressor over it — "we profile
+//! their performance across different network topologies and communication
+//! volumes ... then apply a data-driven regression technique (e.g., Random
+//! Forest)".
+//!
+//! The comm oracle is the ground-truth substitute (ring All-Reduce alpha-beta
+//! model with a small-message floor and noise); the RF is what predictors
+//! use at inference time.
+
+use crate::forest::{ForestConfig, RandomForest};
+use crate::hw::GpuSpec;
+use crate::util::rng::Rng;
+
+/// Ground-truth All-Reduce latency over `n` GPUs (ring algorithm).
+pub fn allreduce_oracle(bytes: f64, n: u32, gpu: &GpuSpec, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed ^ 0xC0111EC7);
+    let n = n.max(2) as f64;
+    let alpha = 14e-6 * (1.0 + 0.35 * (n - 2.0) / 6.0);
+    let eff_bw = gpu.interconnect_gbs * 1e9 * 0.72;
+    let ring = 2.0 * (n - 1.0) / n * bytes / eff_bw;
+    // protocol switch bump for mid-size messages
+    let bump = if (1e6..8e6).contains(&bytes) { 1.12 } else { 1.0 };
+    (alpha + ring * bump) * rng.lognormal_factor(0.03)
+}
+
+/// Ground-truth point-to-point Send/Recv (PP stage boundary).
+pub fn sendrecv_oracle(bytes: f64, gpu: &GpuSpec, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed ^ 0x5E11D);
+    let eff_bw = gpu.interconnect_gbs * 1e9 * 0.80;
+    (7e-6 + bytes / eff_bw) * rng.lognormal_factor(0.03)
+}
+
+/// RF-based comm predictor trained on a profiled grid (the "baseline
+/// performance database" of §V-D).
+pub struct CommModel {
+    allreduce: RandomForest,
+    sendrecv: RandomForest,
+}
+
+fn features(bytes: f64, n: u32, gpu: &GpuSpec) -> Vec<f64> {
+    vec![bytes.max(1.0).ln(), n as f64, (gpu.interconnect_gbs * 1e9).ln()]
+}
+
+impl CommModel {
+    /// Profile `gpu`'s collectives and fit the regressors.
+    pub fn train(gpu: &GpuSpec, seed: u64) -> CommModel {
+        let mut xs_ar = Vec::new();
+        let mut ys_ar = Vec::new();
+        let mut xs_sr = Vec::new();
+        let mut ys_sr = Vec::new();
+        let sizes: Vec<f64> =
+            (0..36).map(|i| 1024.0 * 2f64.powf(i as f64 * 0.5)).collect(); // 1KB..256MB
+        for (i, &b) in sizes.iter().enumerate() {
+            for n in [2u32, 4, 8] {
+                for rep in 0..3u64 {
+                    let s = seed ^ ((i as u64) << 16) ^ ((n as u64) << 8) ^ rep;
+                    xs_ar.push(features(b, n, gpu));
+                    ys_ar.push(allreduce_oracle(b, n, gpu, s).ln());
+                }
+            }
+            for rep in 0..3u64 {
+                let s = seed ^ ((i as u64) << 20) ^ rep;
+                xs_sr.push(features(b, 2, gpu));
+                ys_sr.push(sendrecv_oracle(b, gpu, s).ln());
+            }
+        }
+        let cfg = ForestConfig { n_trees: 30, max_depth: 10, ..Default::default() };
+        CommModel {
+            allreduce: RandomForest::fit(&xs_ar, &ys_ar, &cfg),
+            sendrecv: RandomForest::fit(&xs_sr, &ys_sr, &cfg),
+        }
+    }
+
+    pub fn predict_allreduce(&self, bytes: f64, n: u32, gpu: &GpuSpec) -> f64 {
+        self.allreduce.predict(&features(bytes, n, gpu)).exp()
+    }
+
+    pub fn predict_sendrecv(&self, bytes: f64, gpu: &GpuSpec) -> f64 {
+        self.sendrecv.predict(&features(bytes, 2, gpu)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gpu_by_name;
+    use crate::util::stats::mape;
+
+    #[test]
+    fn ring_scales_with_bytes_and_n() {
+        let a100 = gpu_by_name("A100").unwrap();
+        let small = allreduce_oracle(1e5, 4, &a100, 1);
+        let big = allreduce_oracle(1e8, 4, &a100, 1);
+        assert!(big > 10.0 * small);
+        let n2 = allreduce_oracle(1e8, 2, &a100, 1);
+        let n8 = allreduce_oracle(1e8, 8, &a100, 1);
+        assert!(n8 > n2);
+    }
+
+    #[test]
+    fn nvlink_faster_than_pcie() {
+        let a100 = gpu_by_name("A100").unwrap(); // NVLink 300GB/s
+        let a40 = gpu_by_name("A40").unwrap(); // PCIe 32GB/s
+        assert!(allreduce_oracle(1e8, 4, &a100, 1) < allreduce_oracle(1e8, 4, &a40, 1) / 3.0);
+    }
+
+    #[test]
+    fn rf_fits_the_database() {
+        let gpu = gpu_by_name("H800").unwrap();
+        let m = CommModel::train(&gpu, 7);
+        let mut pred = Vec::new();
+        let mut actual = Vec::new();
+        for i in 0..40 {
+            let bytes = 2048.0 * 2f64.powf(i as f64 * 0.4);
+            for n in [2u32, 4, 8] {
+                pred.push(m.predict_allreduce(bytes, n, &gpu));
+                actual.push(allreduce_oracle(bytes, n, &gpu, 10_000 + i));
+            }
+        }
+        let err = mape(&pred, &actual);
+        assert!(err < 15.0, "comm RF MAPE {err}%");
+    }
+}

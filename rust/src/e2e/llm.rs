@@ -1,0 +1,114 @@
+//! LLM architecture configurations for the end-to-end evaluation (paper
+//! §VI-D): Qwen2.5-14B, Qwen2.5-32B (Table I), Qwen3-32B, Llama3.1-70B.
+//! Values from the public HuggingFace model configs.
+
+#[derive(Debug, Clone)]
+pub struct LlmConfig {
+    pub name: &'static str,
+    pub hidden: u32,
+    pub layers: u32,
+    pub heads: u32,
+    pub kv_heads: u32,
+    pub head_dim: u32,
+    pub intermediate: u32,
+    pub vocab: u32,
+}
+
+impl LlmConfig {
+    pub fn params_approx(&self) -> f64 {
+        let h = self.hidden as f64;
+        let per_layer = h * (self.heads + 2 * self.kv_heads) as f64 * self.head_dim as f64
+            + h * (self.heads * self.head_dim) as f64
+            + 3.0 * h * self.intermediate as f64;
+        per_layer * self.layers as f64 + 2.0 * h * self.vocab as f64
+    }
+}
+
+pub fn qwen2_5_14b() -> LlmConfig {
+    LlmConfig {
+        name: "Qwen2.5-14B",
+        hidden: 5120,
+        layers: 48,
+        heads: 40,
+        kv_heads: 8,
+        head_dim: 128,
+        intermediate: 13824,
+        vocab: 152_064,
+    }
+}
+
+pub fn qwen2_5_32b() -> LlmConfig {
+    LlmConfig {
+        name: "Qwen2.5-32B",
+        hidden: 5120,
+        layers: 64,
+        heads: 40,
+        kv_heads: 8,
+        head_dim: 128,
+        intermediate: 27_648,
+        vocab: 152_064,
+    }
+}
+
+pub fn qwen3_32b() -> LlmConfig {
+    LlmConfig {
+        name: "Qwen3-32B",
+        hidden: 5120,
+        layers: 64,
+        heads: 64,
+        kv_heads: 8,
+        head_dim: 128,
+        intermediate: 25_600,
+        vocab: 151_936,
+    }
+}
+
+pub fn llama3_1_70b() -> LlmConfig {
+    LlmConfig {
+        name: "Llama3.1-70B",
+        hidden: 8192,
+        layers: 80,
+        heads: 64,
+        kv_heads: 8,
+        head_dim: 128,
+        intermediate: 28_672,
+        vocab: 128_256,
+    }
+}
+
+pub fn by_name(name: &str) -> Option<LlmConfig> {
+    let n = name.to_lowercase().replace(['-', '.', '_'], "");
+    for cfg in [qwen2_5_14b(), qwen2_5_32b(), qwen3_32b(), llama3_1_70b()] {
+        if cfg.name.to_lowercase().replace(['-', '.', '_'], "") == n {
+            return Some(cfg);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_counts_roughly_match_names() {
+        assert!((qwen2_5_14b().params_approx() / 1e9 - 14.0).abs() < 3.0);
+        assert!((qwen3_32b().params_approx() / 1e9 - 32.0).abs() < 6.0);
+        assert!((llama3_1_70b().params_approx() / 1e9 - 70.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("qwen2.5-14b").is_some());
+        assert!(by_name("Llama3.1-70B").is_some());
+        assert!(by_name("gpt-x").is_none());
+    }
+
+    #[test]
+    fn gqa_everywhere() {
+        for cfg in [qwen2_5_14b(), qwen2_5_32b(), qwen3_32b(), llama3_1_70b()] {
+            assert!(cfg.heads % cfg.kv_heads == 0);
+            assert!(cfg.heads / cfg.kv_heads >= 5 || cfg.kv_heads == 8);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! End-to-end LLM inference prediction (paper §V-D, §VI-D): model configs,
+//! workload sampling, trace generation, communication modeling, and the
+//! multi-method trace evaluator.
+
+pub mod comm;
+pub mod llm;
+pub mod predict;
+pub mod trace;
+pub mod workload;

@@ -1,0 +1,164 @@
+//! End-to-end evaluation of an inference trace (paper §V-D / §VI-D):
+//! ground truth from the oracle testbed vs. the five predictors (SynPerf,
+//! Roofline, Linear, Habitat, Neusight), all sharing the same RF
+//! communication model so the comparison isolates kernel modeling.
+
+use super::comm::{allreduce_oracle, sendrecv_oracle, CommModel};
+use super::trace::{Op, TraceItem};
+use crate::baselines::linear::LinearModel;
+use crate::dataset;
+use crate::features::FEATURE_DIM;
+use crate::hw::GpuSpec;
+use crate::kernels::KernelKind;
+use crate::mlp::Predictor;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Per-kernel-category trained models (one MLP per category, §IV-D).
+pub struct ModelSet {
+    pub synperf: HashMap<KernelKind, Predictor>,
+    pub neusight: HashMap<KernelKind, Predictor>,
+    pub linear: HashMap<KernelKind, LinearModel>,
+}
+
+/// E2E latency totals per method, seconds.
+#[derive(Debug, Clone, Default)]
+pub struct MethodTotals {
+    pub actual: f64,
+    pub synperf: f64,
+    pub roofline: f64,
+    pub linear: f64,
+    pub habitat: f64,
+    pub neusight: f64,
+}
+
+/// Host-side launch gap per kernel in the measured system (framework
+/// overhead; part of ground truth, not modeled by any predictor — §VI-D's
+/// "assume sequential kernel execution").
+pub const HOST_GAP_SEC: f64 = 0.8e-6;
+
+pub fn eval_trace(
+    trace: &[TraceItem],
+    gpu: &GpuSpec,
+    tp: u32,
+    models: &ModelSet,
+    comm: &CommModel,
+    seed: u64,
+) -> Result<MethodTotals> {
+    let mut t = MethodTotals::default();
+    // batched MLP inputs per kernel category
+    let mut syn_in: HashMap<KernelKind, Vec<([f32; FEATURE_DIM], f64, f64)>> = HashMap::new();
+    let mut alt_in: HashMap<KernelKind, Vec<([f32; FEATURE_DIM], f64, f64)>> = HashMap::new();
+
+    for (i, item) in trace.iter().enumerate() {
+        let op_seed = seed.wrapping_add(i as u64 * 0x9E37);
+        match &item.op {
+            Op::Kernel(cfg) => {
+                let s = dataset::make_sample(cfg, gpu, op_seed);
+                t.actual += item.count * (s.latency_sec + HOST_GAP_SEC);
+                t.roofline += item.count * s.roofline_sec;
+                t.habitat += item.count * s.habitat_sec;
+                if let Some(lm) = models.linear.get(&s.kind) {
+                    t.linear += item.count * lm.predict(&s);
+                } else {
+                    t.linear += item.count * s.roofline_sec; // no model: fall back
+                }
+                syn_in.entry(s.kind).or_default().push((s.x, s.theory_sec, item.count));
+                alt_in.entry(s.kind).or_default().push((s.x_alt, s.alt_theory_sec, item.count));
+            }
+            Op::AllReduce { bytes } => {
+                let actual = allreduce_oracle(*bytes, tp, gpu, op_seed);
+                let pred = comm.predict_allreduce(*bytes, tp, gpu);
+                t.actual += item.count * actual;
+                for p in [
+                    &mut t.synperf,
+                    &mut t.roofline,
+                    &mut t.linear,
+                    &mut t.habitat,
+                    &mut t.neusight,
+                ] {
+                    *p += item.count * pred;
+                }
+            }
+            Op::SendRecv { bytes } => {
+                let actual = sendrecv_oracle(*bytes, gpu, op_seed);
+                let pred = comm.predict_sendrecv(*bytes, gpu);
+                t.actual += item.count * actual;
+                for p in [
+                    &mut t.synperf,
+                    &mut t.roofline,
+                    &mut t.linear,
+                    &mut t.habitat,
+                    &mut t.neusight,
+                ] {
+                    *p += item.count * pred;
+                }
+            }
+        }
+    }
+
+    // batched MLP predictions
+    for (kind, rows) in &syn_in {
+        let xs: Vec<[f32; FEATURE_DIM]> = rows.iter().map(|r| r.0).collect();
+        match models.synperf.get(kind) {
+            Some(pred) => {
+                let eff = pred.predict_eff(&xs)?;
+                for ((_, theory, count), e) in rows.iter().zip(eff) {
+                    t.synperf += count * theory / e;
+                }
+            }
+            None => {
+                for (_, theory, count) in rows {
+                    t.synperf += count * theory; // untrained: roof
+                }
+            }
+        }
+    }
+    for (kind, rows) in &alt_in {
+        let xs: Vec<[f32; FEATURE_DIM]> = rows.iter().map(|r| r.0).collect();
+        match models.neusight.get(kind) {
+            Some(pred) => {
+                let eff = pred.predict_eff(&xs)?;
+                for ((_, theory, count), e) in rows.iter().zip(eff) {
+                    t.neusight += count * theory / e;
+                }
+            }
+            None => {
+                for (_, theory, count) in rows {
+                    t.neusight += count * theory;
+                }
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Runtime breakdown of a trace by kernel category (Table I).
+pub fn breakdown(trace: &[TraceItem], gpu: &GpuSpec, tp: u32, seed: u64) -> Vec<(String, f64)> {
+    let mut buckets: HashMap<&'static str, f64> = HashMap::new();
+    for (i, item) in trace.iter().enumerate() {
+        let op_seed = seed.wrapping_add(i as u64 * 0x9E37);
+        let (name, secs): (&'static str, f64) = match &item.op {
+            Op::Kernel(cfg) => {
+                let s = dataset::make_sample(cfg, gpu, op_seed);
+                let bucket = match cfg.kind() {
+                    KernelKind::Gemm | KernelKind::ScaledMm => "GEMM",
+                    KernelKind::Attention => "Attention",
+                    KernelKind::RmsNorm => "RMSNorm",
+                    KernelKind::SiluMul => "SiLU&Mul",
+                    KernelKind::FusedMoe => "FusedMoE",
+                };
+                *buckets.entry("Other").or_default() += item.count * HOST_GAP_SEC;
+                (bucket, s.latency_sec)
+            }
+            Op::AllReduce { bytes } => ("All-Reduce", allreduce_oracle(*bytes, tp, gpu, op_seed)),
+            Op::SendRecv { bytes } => ("Other", sendrecv_oracle(*bytes, gpu, op_seed)),
+        };
+        *buckets.entry(name).or_default() += item.count * secs;
+    }
+    let total: f64 = buckets.values().sum();
+    let mut rows: Vec<(String, f64)> =
+        buckets.into_iter().map(|(k, v)| (k.to_string(), 100.0 * v / total)).collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rows
+}

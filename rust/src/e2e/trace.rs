@@ -1,0 +1,268 @@
+//! Workload Generator (paper §V-D): turns a model config + request batch +
+//! parallelism into the kernel invocation sequence a serving framework
+//! (SGLang/vLLM) would launch — prefill pass plus autoregressive decode,
+//! with TP All-Reduce and PP Send/Recv communication ops.
+//!
+//! Decode is evaluated at four KV-length checkpoints (quartile midpoints of
+//! the generation) and integrated — both ground truth and every predictor
+//! consume the same trace, so the comparison stays exact while avoiding
+//! thousands of near-identical per-step evaluations.
+
+use super::llm::LlmConfig;
+use super::workload::Request;
+use crate::kernels::{DType, KernelConfig};
+
+#[derive(Debug, Clone)]
+pub enum Op {
+    Kernel(KernelConfig),
+    AllReduce { bytes: f64 },
+    SendRecv { bytes: f64 },
+}
+
+/// One trace entry with a repetition count (layers x integrated steps).
+#[derive(Debug, Clone)]
+pub struct TraceItem {
+    pub op: Op,
+    pub count: f64,
+}
+
+fn layer_ops(
+    llm: &LlmConfig,
+    tp: u32,
+    m_tokens: u32,
+    attn_batch: Vec<(u32, u32)>,
+    count: f64,
+    out: &mut Vec<TraceItem>,
+) {
+    let h = llm.hidden;
+    let nh_t = (llm.heads / tp).max(1);
+    let nkv_t = (llm.kv_heads / tp).max(1);
+    let inter_t = (llm.intermediate / tp).max(1);
+    let hd = llm.head_dim;
+    let push = |out: &mut Vec<TraceItem>, op: Op| out.push(TraceItem { op, count });
+
+    push(out, Op::Kernel(KernelConfig::RmsNorm { seq: m_tokens, dim: h }));
+    push(
+        out,
+        Op::Kernel(KernelConfig::Gemm {
+            m: m_tokens,
+            n: (nh_t + 2 * nkv_t) * hd,
+            k: h,
+            dtype: DType::Bf16,
+        }),
+    );
+    push(
+        out,
+        Op::Kernel(KernelConfig::Attention {
+            batch: attn_batch,
+            nh: nh_t,
+            nkv: nkv_t,
+            hd,
+            causal: true,
+            fa3: false, // resolved per-GPU by dataset::finalize_for_gpu
+        }),
+    );
+    push(
+        out,
+        Op::Kernel(KernelConfig::Gemm { m: m_tokens, n: h, k: nh_t * hd, dtype: DType::Bf16 }),
+    );
+    if tp > 1 {
+        push(out, Op::AllReduce { bytes: m_tokens as f64 * h as f64 * 2.0 });
+    }
+    push(out, Op::Kernel(KernelConfig::RmsNorm { seq: m_tokens, dim: h }));
+    push(
+        out,
+        Op::Kernel(KernelConfig::Gemm { m: m_tokens, n: 2 * inter_t, k: h, dtype: DType::Bf16 }),
+    );
+    push(out, Op::Kernel(KernelConfig::SiluMul { seq: m_tokens, dim: inter_t }));
+    push(
+        out,
+        Op::Kernel(KernelConfig::Gemm { m: m_tokens, n: h, k: inter_t, dtype: DType::Bf16 }),
+    );
+    if tp > 1 {
+        push(out, Op::AllReduce { bytes: m_tokens as f64 * h as f64 * 2.0 });
+    }
+}
+
+/// Build the full inference trace for one batch.
+pub fn build_trace(llm: &LlmConfig, tp: u32, pp: u32, reqs: &[Request]) -> Vec<TraceItem> {
+    let (mut prefill, decode) = build_phase_traces(llm, tp, pp, reqs);
+    prefill.extend(decode);
+    prefill
+}
+
+/// Build the prefill and decode traces separately (Table I reports the
+/// runtime breakdown per phase).
+pub fn build_phase_traces(
+    llm: &LlmConfig,
+    tp: u32,
+    pp: u32,
+    reqs: &[Request],
+) -> (Vec<TraceItem>, Vec<TraceItem>) {
+    assert!(!reqs.is_empty());
+    let mut out = Vec::new();
+    let layers = llm.layers as f64;
+
+    // ---- prefill ---------------------------------------------------------
+    let m_prefill: u32 = reqs.iter().map(|r| r.input_len).sum();
+    let attn_prefill: Vec<(u32, u32)> =
+        reqs.iter().map(|r| (r.input_len, r.input_len)).collect();
+    layer_ops(llm, tp, m_prefill, attn_prefill, layers, &mut out);
+    if pp > 1 {
+        out.push(TraceItem {
+            op: Op::SendRecv { bytes: m_prefill as f64 * llm.hidden as f64 * 2.0 },
+            count: (pp - 1) as f64,
+        });
+    }
+    // LM head on the last token of each request
+    let bs = reqs.len() as u32;
+    out.push(TraceItem {
+        op: Op::Kernel(KernelConfig::Gemm {
+            m: bs,
+            n: (llm.vocab / tp).max(1),
+            k: llm.hidden,
+            dtype: DType::Bf16,
+        }),
+        count: 1.0,
+    });
+    let prefill_trace = std::mem::take(&mut out);
+
+    // ---- decode: four quartile-midpoint checkpoints ----------------------
+    let max_out = reqs.iter().map(|r| r.output_len).max().unwrap_or(1);
+    let seg = (max_out as f64 / 4.0).max(1.0);
+    for q in 0..4 {
+        let step = ((q as f64 + 0.5) * seg) as u32;
+        let active: Vec<&Request> = reqs.iter().filter(|r| r.output_len > step).collect();
+        if active.is_empty() {
+            continue;
+        }
+        // steps represented by this checkpoint = requests still active
+        // integrated over the segment
+        let steps_weight: f64 = reqs
+            .iter()
+            .map(|r| {
+                let lo = (q as f64) * seg;
+                let hi = ((q + 1) as f64) * seg;
+                (r.output_len as f64).min(hi).max(lo) - lo
+            })
+            .sum::<f64>()
+            / reqs.len() as f64
+            * (reqs.len() as f64 / active.len().max(1) as f64).min(4.0);
+        if steps_weight <= 0.0 {
+            continue;
+        }
+        let m_dec = active.len() as u32;
+        let attn_dec: Vec<(u32, u32)> =
+            active.iter().map(|r| (1u32, r.input_len + step.min(r.output_len))).collect();
+        layer_ops(llm, tp, m_dec, attn_dec, layers * steps_weight, &mut out);
+        if pp > 1 {
+            out.push(TraceItem {
+                op: Op::SendRecv { bytes: m_dec as f64 * llm.hidden as f64 * 2.0 },
+                count: (pp - 1) as f64 * steps_weight,
+            });
+        }
+        out.push(TraceItem {
+            op: Op::Kernel(KernelConfig::Gemm {
+                m: m_dec,
+                n: (llm.vocab / tp).max(1),
+                k: llm.hidden,
+                dtype: DType::Bf16,
+            }),
+            count: steps_weight,
+        });
+    }
+    (prefill_trace, out)
+}
+
+/// Total kernel-launch count of a trace (for host-gap accounting).
+pub fn launch_count(trace: &[TraceItem]) -> f64 {
+    trace
+        .iter()
+        .filter(|t| matches!(t.op, Op::Kernel(_)))
+        .map(|t| t.count)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::e2e::llm;
+
+    fn reqs() -> Vec<Request> {
+        vec![
+            Request { input_len: 1000, output_len: 200 },
+            Request { input_len: 2000, output_len: 100 },
+        ]
+    }
+
+    #[test]
+    fn trace_has_all_categories() {
+        let t = build_trace(&llm::qwen2_5_14b(), 4, 1, &reqs());
+        let mut has_gemm = false;
+        let mut has_attn = false;
+        let mut has_norm = false;
+        let mut has_silu = false;
+        let mut has_ar = false;
+        for item in &t {
+            match &item.op {
+                Op::Kernel(KernelConfig::Gemm { .. }) => has_gemm = true,
+                Op::Kernel(KernelConfig::Attention { .. }) => has_attn = true,
+                Op::Kernel(KernelConfig::RmsNorm { .. }) => has_norm = true,
+                Op::Kernel(KernelConfig::SiluMul { .. }) => has_silu = true,
+                Op::AllReduce { .. } => has_ar = true,
+                _ => {}
+            }
+        }
+        assert!(has_gemm && has_attn && has_norm && has_silu && has_ar);
+    }
+
+    #[test]
+    fn tp1_has_no_collectives() {
+        let t = build_trace(&llm::qwen2_5_14b(), 1, 1, &reqs());
+        assert!(!t.iter().any(|i| matches!(i.op, Op::AllReduce { .. } | Op::SendRecv { .. })));
+    }
+
+    #[test]
+    fn pp_adds_sendrecv() {
+        let t = build_trace(&llm::llama3_1_70b(), 4, 2, &reqs());
+        assert!(t.iter().any(|i| matches!(i.op, Op::SendRecv { .. })));
+    }
+
+    #[test]
+    fn tp_shrinks_gemm_width() {
+        let t1 = build_trace(&llm::qwen3_32b(), 1, 1, &reqs());
+        let t4 = build_trace(&llm::qwen3_32b(), 4, 1, &reqs());
+        let max_n = |t: &[TraceItem]| {
+            t.iter()
+                .filter_map(|i| match &i.op {
+                    Op::Kernel(KernelConfig::Gemm { n, .. }) => Some(*n),
+                    _ => None,
+                })
+                .max()
+                .unwrap()
+        };
+        assert!(max_n(&t4) < max_n(&t1));
+    }
+
+    #[test]
+    fn decode_kv_grows_with_checkpoints() {
+        let t = build_trace(&llm::qwen2_5_14b(), 1, 1, &reqs());
+        let kvs: Vec<u32> = t
+            .iter()
+            .filter_map(|i| match &i.op {
+                Op::Kernel(KernelConfig::Attention { batch, .. }) if batch[0].0 == 1 => {
+                    Some(batch[0].1)
+                }
+                _ => None,
+            })
+            .collect();
+        assert!(kvs.len() >= 2);
+        assert!(kvs.windows(2).all(|w| w[0] <= w[1]), "{kvs:?}");
+    }
+
+    #[test]
+    fn launch_count_positive() {
+        let t = build_trace(&llm::qwen2_5_14b(), 2, 1, &reqs());
+        assert!(launch_count(&t) > 100.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Workload generation (paper §VI-D): request batches sampled in the style
+//! of the Arxiv-Summarization and Splitwise datasets — `arxiv_*` averages
+//! 2,630 input tokens, `splitwise_*` averages 982; output lengths range
+//! 5..4056 tokens.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub input_len: u32,
+    pub output_len: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    Arxiv,
+    Splitwise,
+}
+
+impl WorkloadKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Arxiv => "arxiv",
+            WorkloadKind::Splitwise => "splitwise",
+        }
+    }
+
+    pub fn mean_input(&self) -> f64 {
+        match self {
+            WorkloadKind::Arxiv => 2630.0,
+            WorkloadKind::Splitwise => 982.0,
+        }
+    }
+}
+
+/// Sample a batch of `batch_size` requests (e.g. arxiv_8 = Arxiv batch 8).
+pub fn sample_batch(kind: WorkloadKind, batch_size: usize, rng: &mut Rng) -> Vec<Request> {
+    (0..batch_size)
+        .map(|_| {
+            // lognormal-ish input lengths around the dataset mean
+            let f = (rng.normal() * 0.45).exp();
+            let input_len = (kind.mean_input() * f).round().clamp(16.0, 16_384.0) as u32;
+            let output_len = rng.log_range_u32(5, 4_056);
+            Request { input_len, output_len }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn means_match_paper() {
+        let mut rng = Rng::new(1);
+        for (kind, lo, hi) in
+            [(WorkloadKind::Arxiv, 2100.0, 3300.0), (WorkloadKind::Splitwise, 800.0, 1250.0)]
+        {
+            let reqs: Vec<Request> = (0..200)
+                .flat_map(|_| sample_batch(kind, 16, &mut rng))
+                .collect();
+            let mean = reqs.iter().map(|r| r.input_len as f64).sum::<f64>() / reqs.len() as f64;
+            assert!((lo..hi).contains(&mean), "{kind:?} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn outputs_in_paper_range() {
+        let mut rng = Rng::new(2);
+        for r in sample_batch(WorkloadKind::Arxiv, 500, &mut rng) {
+            assert!((5..=4056).contains(&r.output_len));
+        }
+    }
+}

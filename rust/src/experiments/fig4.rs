@@ -1,0 +1,53 @@
+//! Fig. 4: ablation study — full model vs w/o MIO features, w/o Math
+//! features, and w/o MLP (Roofline-style predictor) on the GEMM and
+//! Attention kernels. Reported as MAPE and as the paper's accuracy ratios
+//! (ablated error / full error).
+
+use super::{mask_features, Lab, ModelFlavor};
+use crate::dataset::Sample;
+use crate::kernels::KernelKind;
+use crate::util::stats::mape;
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+fn eval(lab: &Lab, kind: KernelKind, flavor: ModelFlavor, ds: &[Sample]) -> Result<f64> {
+    let pred = lab.model(kind, flavor)?;
+    let xs: Vec<[f32; 32]> = ds.iter().map(|s| mask_features(&s.x, flavor)).collect();
+    let eff = pred.predict_eff(&xs)?;
+    let lat: Vec<f64> = ds.iter().zip(eff).map(|(s, e)| s.theory_sec / e).collect();
+    let actual: Vec<f64> = ds.iter().map(|s| s.latency_sec).collect();
+    Ok(mape(&lat, &actual))
+}
+
+pub fn run(lab: &Lab) -> Result<String> {
+    let mut t = Table::new(
+        "Fig. 4 — ablation (MAPE %, ratio vs full)",
+        &["Kernel", "Full", "w/o MIO", "w/o Math", "w/o MLP (roofline)"],
+    );
+    let mut out_block = String::new();
+    for kind in [KernelKind::Gemm, KernelKind::Attention] {
+        let ds = lab.dataset(kind);
+        let full = eval(lab, kind, ModelFlavor::SynPerf, &ds)?;
+        let no_mio = eval(lab, kind, ModelFlavor::NoMio, &ds)?;
+        let no_math = eval(lab, kind, ModelFlavor::NoMath, &ds)?;
+        let roof: Vec<f64> = ds.iter().map(|s| s.roofline_sec).collect();
+        let actual: Vec<f64> = ds.iter().map(|s| s.latency_sec).collect();
+        let no_mlp = mape(&roof, &actual);
+        t.row(vec![
+            kind.name().into(),
+            format!("{}", f(full, 1)),
+            format!("{} ({}x)", f(no_mio, 1), f(no_mio / full, 1)),
+            format!("{} ({}x)", f(no_math, 1), f(no_math / full, 1)),
+            format!("{} ({}x)", f(no_mlp, 1), f(no_mlp / full, 1)),
+        ]);
+        // every component must contribute (ablations strictly worse)
+        assert!(no_mlp > full, "{kind:?}: removing the MLP should hurt");
+        out_block.push_str(&format!(
+            "# {}: full={full:.1} no_mio={no_mio:.1} no_math={no_math:.1} no_mlp={no_mlp:.1}\n",
+            kind.name()
+        ));
+    }
+    let block = t.render();
+    print!("{block}");
+    Ok(format!("{block}{out_block}"))
+}

@@ -1,0 +1,118 @@
+//! Fig. 5 + Table VIII: kernel-level prediction accuracy (MAPE %) of the
+//! five methods per GPU for the four BF16 LLM-inference kernels, and the
+//! seen/unseen averages.
+
+use super::{Lab, ModelFlavor};
+use crate::dataset::Sample;
+use crate::hw::all_gpus;
+use crate::kernels::KernelKind;
+use crate::util::stats::{mape, mean};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub const KINDS: [KernelKind; 4] =
+    [KernelKind::Gemm, KernelKind::Attention, KernelKind::RmsNorm, KernelKind::SiluMul];
+
+pub const METHODS: [&str; 5] = ["Roofline", "Linear", "Habitat", "Neusight", "SynPerf"];
+
+/// MAPE of all five methods over a sample subset (same kernel category).
+pub fn method_mapes(lab: &Lab, kind: KernelKind, subset: &[&Sample]) -> Result<[f64; 5]> {
+    let actual: Vec<f64> = subset.iter().map(|s| s.latency_sec).collect();
+    let roof: Vec<f64> = subset.iter().map(|s| s.roofline_sec).collect();
+    let lin_model = lab.linear(kind);
+    let lin: Vec<f64> = subset.iter().map(|s| lin_model.predict(s)).collect();
+    let hab: Vec<f64> = subset.iter().map(|s| s.habitat_sec).collect();
+
+    let neu_model = lab.model(kind, ModelFlavor::Neusight)?;
+    let xs_alt: Vec<[f32; 32]> = subset.iter().map(|s| s.x_alt).collect();
+    let neu_eff = neu_model.predict_eff(&xs_alt)?;
+    let neu: Vec<f64> =
+        subset.iter().zip(neu_eff).map(|(s, e)| s.alt_theory_sec / e).collect();
+
+    let syn_model = lab.model(kind, ModelFlavor::SynPerf)?;
+    let xs: Vec<[f32; 32]> = subset.iter().map(|s| s.x).collect();
+    let syn_eff = syn_model.predict_eff(&xs)?;
+    let syn: Vec<f64> = subset.iter().zip(syn_eff).map(|(s, e)| s.theory_sec / e).collect();
+
+    Ok([
+        mape(&roof, &actual),
+        mape(&lin, &actual),
+        mape(&hab, &actual),
+        mape(&neu, &actual),
+        mape(&syn, &actual),
+    ])
+}
+
+pub fn run(lab: &Lab) -> Result<String> {
+    let mut out = String::new();
+    // accumulate per (method, seen?) for Table VIII
+    let mut seen_acc: Vec<Vec<f64>> = vec![Vec::new(); 5];
+    let mut unseen_acc: Vec<Vec<f64>> = vec![Vec::new(); 5];
+
+    for kind in KINDS {
+        let ds = lab.dataset(kind);
+        let mut t = Table::new(
+            &format!("Fig. 5 — kernel-level MAPE (%), {}", kind.name()),
+            &["GPU", "Roofline", "Linear", "Habitat", "Neusight", "SynPerf"],
+        );
+        for gpu in all_gpus() {
+            let subset: Vec<&Sample> = ds.iter().filter(|s| s.gpu == gpu.name).collect();
+            if subset.is_empty() {
+                continue;
+            }
+            let m = method_mapes(lab, kind, &subset)?;
+            for i in 0..5 {
+                if gpu.seen {
+                    seen_acc[i].push(m[i]);
+                } else {
+                    unseen_acc[i].push(m[i]);
+                }
+            }
+            let tag = if gpu.seen { "" } else { " (unseen)" };
+            t.row(vec![
+                format!("{}{}", gpu.name, tag),
+                f(m[0], 1),
+                f(m[1], 1),
+                f(m[2], 1),
+                f(m[3], 1),
+                f(m[4], 1),
+            ]);
+        }
+        let block = t.render();
+        print!("{block}");
+        out.push_str(&block);
+    }
+
+    let mut t8 = Table::new(
+        "Table VIII — average MAPE (%) on seen and unseen GPUs",
+        &["Hardware", "Roofline", "Linear", "Habitat", "Neusight", "SynPerf"],
+    );
+    let seen_avg: Vec<f64> = seen_acc.iter().map(|v| mean(v)).collect();
+    let unseen_avg: Vec<f64> = unseen_acc.iter().map(|v| mean(v)).collect();
+    t8.row(vec![
+        "Seen".into(),
+        f(seen_avg[0], 2),
+        f(seen_avg[1], 2),
+        f(seen_avg[2], 2),
+        f(seen_avg[3], 2),
+        f(seen_avg[4], 2),
+    ]);
+    t8.row(vec![
+        "Unseen".into(),
+        f(unseen_avg[0], 2),
+        f(unseen_avg[1], 2),
+        f(unseen_avg[2], 2),
+        f(unseen_avg[3], 2),
+        f(unseen_avg[4], 2),
+    ]);
+    let block = t8.render();
+    print!("{block}");
+    out.push_str(&block);
+
+    // paper-shape assertions: SynPerf best on both splits
+    for i in 0..4 {
+        assert!(seen_avg[4] < seen_avg[i], "SynPerf must win on seen GPUs");
+        assert!(unseen_avg[4] < unseen_avg[i], "SynPerf must win on unseen GPUs");
+    }
+    Ok(out)
+}

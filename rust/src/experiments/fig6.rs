@@ -1,0 +1,78 @@
+//! Fig. 6: end-to-end single-GPU (TP=1) inference prediction accuracy for
+//! Qwen2.5-14B across all 11 GPUs, five methods.
+
+use super::Lab;
+use crate::e2e::{llm, predict, trace, workload};
+use crate::hw::all_gpus;
+use crate::util::rng::Rng;
+use crate::util::stats::{mape, mean};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub fn run(lab: &Lab) -> Result<String> {
+    let models = lab.model_set()?;
+    let model = llm::qwen2_5_14b();
+    let n_batches = if lab.scale == super::Scale::Fast { 2 } else { 4 };
+
+    let mut t = Table::new(
+        "Fig. 6 — E2E MAPE (%), Qwen2.5-14B single-GPU (TP=1)",
+        &["GPU", "Roofline", "Linear", "Habitat", "Neusight", "SynPerf"],
+    );
+    let mut seen_syn = Vec::new();
+    let mut unseen_syn = Vec::new();
+    let mut seen_neu = Vec::new();
+    let mut unseen_neu = Vec::new();
+    let mut out = String::new();
+
+    for gpu in all_gpus() {
+        let comm = lab.comm(&gpu);
+        let mut acc: [Vec<f64>; 5] = Default::default();
+        let mut actuals = Vec::new();
+        let mut rng = Rng::new(lab.seed ^ gpu.num_sms as u64);
+        for b in 0..n_batches {
+            let kind = if b % 2 == 0 { workload::WorkloadKind::Arxiv } else { workload::WorkloadKind::Splitwise };
+            let bs = [8usize, 16][b % 2];
+            let reqs = workload::sample_batch(kind, bs, &mut rng);
+            let tr = trace::build_trace(&model, 1, 1, &reqs);
+            let totals =
+                predict::eval_trace(&tr, &gpu, 1, &models, &comm, lab.seed + b as u64 * 977)?;
+            actuals.push(totals.actual);
+            acc[0].push(totals.roofline);
+            acc[1].push(totals.linear);
+            acc[2].push(totals.habitat);
+            acc[3].push(totals.neusight);
+            acc[4].push(totals.synperf);
+        }
+        let m: Vec<f64> = acc.iter().map(|p| mape(p, &actuals)).collect();
+        if gpu.seen {
+            seen_syn.push(m[4]);
+            seen_neu.push(m[3]);
+        } else {
+            unseen_syn.push(m[4]);
+            unseen_neu.push(m[3]);
+        }
+        let tag = if gpu.seen { "" } else { " (unseen)" };
+        t.row(vec![
+            format!("{}{}", gpu.name, tag),
+            f(m[0], 1),
+            f(m[1], 1),
+            f(m[2], 1),
+            f(m[3], 1),
+            f(m[4], 1),
+        ]);
+    }
+    let block = t.render();
+    print!("{block}");
+    out.push_str(&block);
+    let summary = format!(
+        "E2E avg: SynPerf seen {:.1}% / unseen {:.1}%; Neusight seen {:.1}% / unseen {:.1}%\n",
+        mean(&seen_syn),
+        mean(&unseen_syn),
+        mean(&seen_neu),
+        mean(&unseen_neu)
+    );
+    print!("{summary}");
+    out.push_str(&summary);
+    assert!(mean(&seen_syn) < mean(&seen_neu), "SynPerf must beat Neusight E2E (seen)");
+    Ok(out)
+}

@@ -1,0 +1,87 @@
+//! Fig. 7: simulation overhead vs prediction error on standalone GEMMs
+//! (A100) — SynPerf vs the detailed comparators (AMALI-style instruction
+//! trace model, LLMCompass-style systolic tile simulator).
+
+use super::{Lab, ModelFlavor};
+use crate::baselines::{amali, llmcompass};
+use crate::dataset::{make_sample, sample_configs};
+use crate::hw::gpu_by_name;
+use crate::kernels::{KernelConfig, KernelKind};
+use crate::util::stats::{mean, signed_rel_err};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+use std::time::Instant;
+
+pub fn run(lab: &Lab) -> Result<String> {
+    let gpu = gpu_by_name("A100").unwrap();
+    let n = match lab.scale {
+        super::Scale::Fast => 60,
+        super::Scale::Normal => 200,
+        super::Scale::Full => 540, // the paper's count
+    };
+    let configs = sample_configs(KernelKind::Gemm, n, lab.seed ^ 0xF16);
+    let model = lab.model(KernelKind::Gemm, ModelFlavor::SynPerf)?;
+
+    let mut syn_err = Vec::new();
+    let mut amali_err = Vec::new();
+    let mut llmc_err = Vec::new();
+    let (mut syn_t, mut amali_t, mut llmc_t) = (0.0f64, 0.0f64, 0.0f64);
+
+    for (i, cfg) in configs.iter().enumerate() {
+        let s = make_sample(cfg, &gpu, lab.seed + 7000 + i as u64);
+        let actual = s.latency_sec;
+        let KernelConfig::Gemm { m, n, k, .. } = *cfg else { unreachable!() };
+
+        // SynPerf: full request path (decompose -> schedule -> features ->
+        // MLP b1 via PJRT)
+        let t0 = Instant::now();
+        let eff = model.predict_eff(&[s.x])?[0];
+        let syn_pred = s.theory_sec / eff;
+        syn_t += t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let (a_pred, _) = amali::predict_gemm(m, n, k, &gpu);
+        amali_t += t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let (l_pred, _) = llmcompass::predict_gemm(m, n, k, &gpu);
+        llmc_t += t0.elapsed().as_secs_f64();
+
+        syn_err.push(signed_rel_err(syn_pred, actual));
+        amali_err.push(signed_rel_err(a_pred, actual));
+        llmc_err.push(signed_rel_err(l_pred, actual));
+    }
+
+    let nf = configs.len() as f64;
+    let mapes = |errs: &[f64]| mean(&errs.iter().map(|e| e.abs()).collect::<Vec<_>>());
+    let mut t = Table::new(
+        &format!("Fig. 7 — overhead vs error, {n} GEMMs on A100"),
+        &["Method", "MAPE (%)", "mean signed err (%)", "per-GEMM time"],
+    );
+    t.row(vec![
+        "SynPerf".into(),
+        f(mapes(&syn_err), 1),
+        f(mean(&syn_err), 1),
+        format!("{:.1} us", syn_t / nf * 1e6),
+    ]);
+    t.row(vec![
+        "AMALI".into(),
+        f(mapes(&amali_err), 1),
+        f(mean(&amali_err), 1),
+        format!("{:.1} us", amali_t / nf * 1e6),
+    ]);
+    t.row(vec![
+        "LLMCompass".into(),
+        f(mapes(&llmc_err), 1),
+        f(mean(&llmc_err), 1),
+        format!("{:.1} us", llmc_t / nf * 1e6),
+    ]);
+    let block = t.render();
+    print!("{block}");
+
+    // paper shape: SynPerf more accurate AND cheaper than both comparators
+    assert!(mapes(&syn_err) < mapes(&amali_err));
+    assert!(mapes(&syn_err) < mapes(&llmc_err));
+    assert!(syn_t < llmc_t, "SynPerf should be cheaper than the tile simulator");
+    Ok(block)
+}

@@ -1,0 +1,144 @@
+//! §VII — Beyond simulation (Fig. 8, Fig. 9, Table X): P80 performance-
+//! ceiling diagnosis of the Fused-MoE kernel, underperforming-point counts
+//! per GPU, brute-force tuning of the diagnosed points, gap closure, and
+//! the speedup-vs-counts correlation.
+
+use super::{Lab, ModelFlavor};
+use crate::autotune::{self, GAP_THRESHOLD};
+use crate::dataset;
+use crate::hw::{gpu_by_name, seen_gpus};
+use crate::kernels::KernelKind;
+use crate::util::stats::{geomean, mean, pearson, percentile};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub fn run(lab: &Lab) -> Result<String> {
+    let mut out = String::new();
+    let ds = lab.dataset(KernelKind::FusedMoe);
+    let configs = lab.dataset_configs(KernelKind::FusedMoe);
+    let p80 = lab.model(KernelKind::FusedMoe, ModelFlavor::P80)?;
+    let records = autotune::diagnose(&p80, &ds)?;
+
+    // ---- Fig. 8: gap CDF + underperforming counts per GPU ---------------
+    let gaps: Vec<f64> = records.iter().map(|r| r.gap).collect();
+    let frac_below_thr =
+        gaps.iter().filter(|g| **g < GAP_THRESHOLD).count() as f64 / gaps.len() as f64;
+    let mut t = Table::new(
+        "Fig. 8 — performance-gap distribution (Fused MoE, P80 ceiling)",
+        &["stat", "value"],
+    );
+    for (q, label) in [(50.0, "P50 gap"), (80.0, "P80 gap"), (95.0, "P95 gap")] {
+        t.row(vec![label.into(), f(percentile(&gaps, q), 3)]);
+    }
+    t.row(vec!["frac(gap < 0.1)".into(), f(frac_below_thr, 3)]);
+    let block = t.render();
+    print!("{block}");
+    out.push_str(&block);
+
+    let mut t = Table::new(
+        "Fig. 8 — Underperforming Points (gap > 0.1) by hardware",
+        &["GPU", "count", "share of GPU samples"],
+    );
+    let mut counts = std::collections::BTreeMap::new();
+    for gpu in seen_gpus() {
+        let total = records.iter().filter(|r| r.gpu == gpu.name).count();
+        let n = records
+            .iter()
+            .filter(|r| r.gpu == gpu.name && r.underperforming())
+            .count();
+        counts.insert(gpu.name.to_string(), n);
+        t.row(vec![
+            gpu.name.to_string(),
+            n.to_string(),
+            f(100.0 * n as f64 / total.max(1) as f64, 1),
+        ]);
+    }
+    let block = t.render();
+    print!("{block}");
+    out.push_str(&block);
+
+    // the long-tail shape + hardware specificity of the paper: the default
+    // config is Hopper-tuned, so pre-Hopper parts carry the bulk of the
+    // underperforming points (the per-GPU ordering within each group is
+    // scale/noise sensitive — see EXPERIMENTS.md)
+    assert!(frac_below_thr > 0.5, "most points should be near their ceiling");
+    let pre_hopper: usize = ["A40", "A100", "RTX 6000 Ada", "L20"]
+        .iter()
+        .filter_map(|g| counts.get(*g))
+        .sum();
+    let hopper: usize =
+        ["H20", "H800"].iter().filter_map(|g| counts.get(*g)).sum();
+    assert!(
+        pre_hopper > hopper,
+        "pre-Hopper parts should dominate underperforming counts: {pre_hopper} vs {hopper}"
+    );
+
+    // ---- Table X + Fig. 9: tune diagnosed points ------------------------
+    let per_gpu = match lab.scale {
+        super::Scale::Fast => 12,
+        super::Scale::Normal => 30,
+        super::Scale::Full => 70, // the paper's ~70 per GPU
+    };
+    let n_gpus = 11usize;
+    let mut t10 = Table::new(
+        "Table X — speedup vs underperforming points",
+        &["GPU", "Underperf. points", "tuned configs", "geo-mean speedup"],
+    );
+    let mut fig9 = Table::new(
+        "Fig. 9 — perf gap before/after model-guided tuning",
+        &["GPU", "avg gap before", "avg gap after"],
+    );
+    let mut xs_counts = Vec::new();
+    let mut ys_speedups = Vec::new();
+    for gpu_name in ["A40", "L20", "A100", "H800"] {
+        let gpu = gpu_by_name(gpu_name).unwrap();
+        // indices of this GPU's underperforming samples (dataset layout is
+        // config-major x GPUs)
+        let under: Vec<usize> = records
+            .iter()
+            .enumerate()
+            .filter(|(i, r)| r.gpu == gpu.name && r.underperforming() && *i / n_gpus < configs.len())
+            .map(|(i, _)| i)
+            .take(per_gpu)
+            .collect();
+        let mut speedups = Vec::new();
+        let mut gap_before = Vec::new();
+        let mut gap_after = Vec::new();
+        for &si in &under {
+            let cfg_idx = si / n_gpus;
+            let cfg = dataset::finalize_for_gpu(&configs[cfg_idx], &gpu);
+            let res = autotune::tune(&cfg, &gpu, lab.seed + si as u64)?;
+            speedups.push(res.speedup());
+            let s = &ds[si];
+            let rec = &records[si];
+            gap_before.push(rec.gap);
+            let eff_after = (s.theory_sec / (s.latency_sec / res.speedup())).clamp(0.002, 0.995);
+            gap_after.push((rec.ceiling_eff - eff_after).max(0.0));
+        }
+        let count = counts.get(gpu_name).copied().unwrap_or(0);
+        let gm = if speedups.is_empty() { 1.0 } else { geomean(&speedups) };
+        xs_counts.push(count as f64);
+        ys_speedups.push(gm);
+        t10.row(vec![
+            gpu_name.into(),
+            count.to_string(),
+            speedups.len().to_string(),
+            format!("{}x", f(gm, 2)),
+        ]);
+        fig9.row(vec![gpu_name.into(), f(mean(&gap_before), 3), f(mean(&gap_after), 3)]);
+        if !gap_before.is_empty() {
+            assert!(
+                mean(&gap_after) < mean(&gap_before),
+                "{gpu_name}: tuning must close the gap"
+            );
+        }
+    }
+    let corr = pearson(&xs_counts, &ys_speedups);
+    let mut block = t10.render();
+    block.push_str(&format!("Pearson(counts, speedups) = {corr:.2}\n"));
+    block.push_str(&fig9.render());
+    print!("{block}");
+    out.push_str(&block);
+    assert!(corr > 0.0, "speedups should correlate with diagnosed counts: {corr}");
+    Ok(out)
+}

@@ -1,0 +1,290 @@
+//! Experiment harness: one module per paper table / figure (DESIGN.md §5).
+//! Each experiment prints the paper-style rows and returns a rendered block
+//! that the CLI appends to runs/results.txt.
+//!
+//! [`Lab`] provides shared, disk-cached infrastructure: per-kernel datasets
+//! (runs/data/*.csv) and trained models (runs/models/*.bin) at a chosen
+//! scale, so individual experiments stay fast and reproducible.
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5_table8;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8_table10;
+pub mod scaledmm;
+pub mod table1;
+pub mod table7;
+pub mod table9;
+
+use crate::baselines::linear::LinearModel;
+use crate::dataset::{self, Sample};
+use crate::e2e::comm::CommModel;
+use crate::e2e::predict::ModelSet;
+use crate::hw::{all_gpus, GpuSpec};
+use crate::kernels::KernelKind;
+use crate::mlp::{train_model, Predictor, TrainConfig};
+use crate::runtime::Engine;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Dataset / training scale knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// quick shake-out (CI-sized)
+    Fast,
+    /// default: minutes for the full suite
+    Normal,
+    /// closer to the paper's sample counts
+    Full,
+}
+
+impl Scale {
+    pub fn n_configs(&self) -> usize {
+        match self {
+            Scale::Fast => 120,
+            Scale::Normal => 420,
+            Scale::Full => 1200,
+        }
+    }
+
+    pub fn train_steps(&self) -> usize {
+        match self {
+            Scale::Fast => 600,
+            Scale::Normal => 2200,
+            Scale::Full => 6000,
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Scale::Fast => "fast",
+            Scale::Normal => "normal",
+            Scale::Full => "full",
+        }
+    }
+}
+
+/// Shared experiment state with disk caches.
+pub struct Lab {
+    pub engine: Engine,
+    pub scale: Scale,
+    pub root: PathBuf,
+    pub seed: u64,
+    datasets: std::cell::RefCell<HashMap<KernelKind, std::rc::Rc<Vec<Sample>>>>,
+    comm_models: std::cell::RefCell<HashMap<String, std::rc::Rc<CommModel>>>,
+}
+
+/// Which feature view / loss a cached model was trained with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelFlavor {
+    SynPerf,
+    /// pinball tau=0.8 ceiling model (§VII)
+    P80,
+    /// Neusight tile-level features
+    Neusight,
+    /// SynPerf features with the MIO block zeroed (Fig. 4 ablation)
+    NoMio,
+    /// SynPerf features with the Math block zeroed (Fig. 4 ablation)
+    NoMath,
+}
+
+impl ModelFlavor {
+    fn tag(&self) -> &'static str {
+        match self {
+            ModelFlavor::SynPerf => "syn",
+            ModelFlavor::P80 => "p80",
+            ModelFlavor::Neusight => "neu",
+            ModelFlavor::NoMio => "nomio",
+            ModelFlavor::NoMath => "nomath",
+        }
+    }
+}
+
+/// Feature masking for the ablations: zero a block of the SynPerf vector.
+pub fn mask_features(x: &[f32; 32], flavor: ModelFlavor) -> [f32; 32] {
+    let mut out = *x;
+    match flavor {
+        ModelFlavor::NoMio => {
+            for v in &mut out[12..19] {
+                *v = 0.0;
+            }
+        }
+        ModelFlavor::NoMath => {
+            for v in &mut out[0..12] {
+                *v = 0.0;
+            }
+        }
+        _ => {}
+    }
+    out
+}
+
+impl Lab {
+    pub fn new(scale: Scale) -> Result<Lab> {
+        let engine = Engine::from_env().context(
+            "PJRT engine unavailable — run `make artifacts` before experiments",
+        )?;
+        let root = PathBuf::from(
+            std::env::var("SYNPERF_RUNS").unwrap_or_else(|_| "runs".into()),
+        );
+        std::fs::create_dir_all(root.join("data"))?;
+        std::fs::create_dir_all(root.join("models"))?;
+        Ok(Lab {
+            engine,
+            scale,
+            root,
+            seed: 0x5EED_CAFE,
+            datasets: Default::default(),
+            comm_models: Default::default(),
+        })
+    }
+
+    /// Per-kernel dataset, cached in memory and on disk.
+    pub fn dataset(&self, kind: KernelKind) -> std::rc::Rc<Vec<Sample>> {
+        if let Some(ds) = self.datasets.borrow().get(&kind) {
+            return ds.clone();
+        }
+        let path = self
+            .root
+            .join("data")
+            .join(format!("{}_{}.csv", kind.name(), self.scale.tag()));
+        let ds = if path.exists() {
+            dataset::load(&path).expect("cached dataset readable")
+        } else {
+            eprintln!("[lab] building {} dataset ({} configs x 11 GPUs)...", kind.name(), self.scale.n_configs());
+            let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            let ds = dataset::build(kind, &all_gpus(), self.scale.n_configs(), self.seed, threads);
+            dataset::save(&ds, &path).expect("cache dataset");
+            ds
+        };
+        let rc = std::rc::Rc::new(ds);
+        self.datasets.borrow_mut().insert(kind, rc.clone());
+        rc
+    }
+
+    /// The deterministic config list matching `dataset(kind)` row-major
+    /// order (configs x GPUs).
+    pub fn dataset_configs(&self, kind: KernelKind) -> Vec<crate::kernels::KernelConfig> {
+        dataset::sample_configs(kind, self.scale.n_configs(), self.seed)
+    }
+
+    /// Train (or load cached) one per-kernel model of the given flavor;
+    /// trained on the *seen*-GPU split only.
+    pub fn model(&self, kind: KernelKind, flavor: ModelFlavor) -> Result<Predictor> {
+        let path = self.root.join("models").join(format!(
+            "{}_{}_{}.bin",
+            kind.name(),
+            flavor.tag(),
+            self.scale.tag()
+        ));
+        if path.exists() {
+            return Predictor::from_file(&self.engine, path.to_str().unwrap());
+        }
+        let ds = self.dataset(kind);
+        let (seen, _) = dataset::split_seen(&ds);
+        let (xs, ys): (Vec<[f32; 32]>, Vec<f64>) = match flavor {
+            ModelFlavor::Neusight => (
+                seen.iter().map(|s| s.x_alt).collect(),
+                seen.iter()
+                    .map(|s| (s.alt_theory_sec / s.latency_sec).clamp(0.002, 0.995))
+                    .collect(),
+            ),
+            _ => (
+                seen.iter().map(|s| mask_features(&s.x, flavor)).collect(),
+                seen.iter().map(|s| s.efficiency()).collect(),
+            ),
+        };
+        let cfg = TrainConfig {
+            max_steps: self.scale.train_steps(),
+            val_every: (self.scale.train_steps() / 12).max(50),
+            patience: 4,
+            tau: if flavor == ModelFlavor::P80 { Some(0.8) } else { None },
+            seed: self.seed ^ kind.name().len() as u64,
+            verbose: false,
+        };
+        eprintln!("[lab] training {} ({})...", kind.name(), flavor.tag());
+        let model = train_model(&self.engine, &xs, &ys, &cfg)?;
+        crate::mlp::weights::save(&model.weights, &path)?;
+        Predictor::new(&self.engine, model.weights)
+    }
+
+    /// Linear baseline fitted on the seen split (closed form, not cached).
+    pub fn linear(&self, kind: KernelKind) -> LinearModel {
+        let ds = self.dataset(kind);
+        let (seen, _) = dataset::split_seen(&ds);
+        LinearModel::fit(&seen)
+    }
+
+    /// Full model set for E2E evaluation over the trace kernel categories.
+    pub fn model_set(&self) -> Result<ModelSet> {
+        let kinds = [
+            KernelKind::Gemm,
+            KernelKind::Attention,
+            KernelKind::RmsNorm,
+            KernelKind::SiluMul,
+        ];
+        let mut synperf = HashMap::new();
+        let mut neusight = HashMap::new();
+        let mut linear = HashMap::new();
+        for kind in kinds {
+            synperf.insert(kind, self.model(kind, ModelFlavor::SynPerf)?);
+            neusight.insert(kind, self.model(kind, ModelFlavor::Neusight)?);
+            linear.insert(kind, self.linear(kind));
+        }
+        Ok(ModelSet { synperf, neusight, linear })
+    }
+
+    /// Per-GPU communication model (RF over the profiled database), cached.
+    pub fn comm(&self, gpu: &GpuSpec) -> std::rc::Rc<CommModel> {
+        if let Some(m) = self.comm_models.borrow().get(gpu.name) {
+            return m.clone();
+        }
+        let m = std::rc::Rc::new(CommModel::train(gpu, self.seed));
+        self.comm_models.borrow_mut().insert(gpu.name.to_string(), m.clone());
+        m
+    }
+
+    /// Append a rendered experiment block to runs/results.txt.
+    pub fn record(&self, block: &str) {
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.root.join("results.txt"))
+        {
+            let _ = writeln!(f, "{block}");
+        }
+    }
+}
+
+/// Run one experiment by id; returns the rendered output.
+pub fn run(lab: &Lab, id: &str) -> Result<String> {
+    let out = match id {
+        "table1" => table1::run(lab)?,
+        "table7" => table7::run(lab)?,
+        "fig3" => fig3::run(lab)?,
+        "fig4" => fig4::run(lab)?,
+        "fig5" | "table8" => fig5_table8::run(lab)?,
+        "scaledmm" => scaledmm::run(lab)?,
+        "fig6" => fig6::run(lab)?,
+        "fig7" => fig7::run(lab)?,
+        "table9" => table9::run(lab)?,
+        "fig8" | "fig9" | "table10" => fig8_table10::run(lab)?,
+        "all" => {
+            let mut all = String::new();
+            for id in [
+                "table1", "table7", "fig3", "fig4", "fig5", "scaledmm", "fig7", "fig6",
+                "table9", "fig8",
+            ] {
+                all.push_str(&run(lab, id)?);
+                all.push('\n');
+            }
+            all
+        }
+        other => anyhow::bail!("unknown experiment {other:?} (see DESIGN.md §5)"),
+    };
+    lab.record(&out);
+    Ok(out)
+}

@@ -1,0 +1,49 @@
+//! FP8 Scaled-MM results (§VI-C text): per-GPU MAPE on the Hopper-class
+//! devices — seen (H20, H800) and unseen (H100, H200) — plus accuracy gains
+//! over the four baselines.
+
+use super::{fig5_table8::method_mapes, Lab};
+use crate::dataset::Sample;
+use crate::kernels::KernelKind;
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub fn run(lab: &Lab) -> Result<String> {
+    let ds = lab.dataset(KernelKind::ScaledMm);
+    let mut t = Table::new(
+        "FP8 Scaled-MM — MAPE (%) per Hopper GPU (§VI-C)",
+        &["GPU", "Roofline", "Linear", "Habitat", "Neusight", "SynPerf"],
+    );
+    let mut gains = [0.0f64; 4];
+    let mut rows = 0usize;
+    for (gpu, seen) in [("H20", true), ("H800", true), ("H100", false), ("H200", false)] {
+        let subset: Vec<&Sample> = ds.iter().filter(|s| s.gpu == gpu).collect();
+        if subset.is_empty() {
+            continue;
+        }
+        let m = method_mapes(lab, KernelKind::ScaledMm, &subset)?;
+        for i in 0..4 {
+            gains[i] += m[i] / m[4];
+        }
+        rows += 1;
+        let tag = if seen { "" } else { " (unseen)" };
+        t.row(vec![
+            format!("{gpu}{tag}"),
+            f(m[0], 1),
+            f(m[1], 1),
+            f(m[2], 1),
+            f(m[3], 1),
+            f(m[4], 1),
+        ]);
+    }
+    let mut block = t.render();
+    block.push_str(&format!(
+        "avg accuracy gains vs Roofline {:.1}x, Linear {:.1}x, Habitat {:.1}x, Neusight {:.1}x\n",
+        gains[0] / rows as f64,
+        gains[1] / rows as f64,
+        gains[2] / rows as f64,
+        gains[3] / rows as f64
+    ));
+    print!("{block}");
+    Ok(block)
+}

@@ -1,0 +1,37 @@
+//! Table I: runtime breakdown of Qwen2.5-32B inference on a 4xA100 cluster
+//! with TP=4 (batch 8, sequence length 8192), per phase.
+
+use super::Lab;
+use crate::e2e::{llm, predict, trace, workload::Request};
+use crate::hw::gpu_by_name;
+use crate::util::table::{pct, Table};
+use anyhow::Result;
+
+pub fn run(lab: &Lab) -> Result<String> {
+    let gpu = gpu_by_name("A100").unwrap();
+    let model = llm::qwen2_5_32b();
+    // batch 8, sequence 8192: 7k prompt + 1k generated
+    let reqs: Vec<Request> =
+        (0..8).map(|_| Request { input_len: 7168, output_len: 1024 }).collect();
+    let (prefill, decode) = trace::build_phase_traces(&model, 4, 1, &reqs);
+
+    let categories = ["GEMM", "Attention", "RMSNorm", "SiLU&Mul", "All-Reduce", "Other"];
+    let mut t = Table::new(
+        "Table I — Qwen2.5-32B on 4xA100 (TP=4): runtime breakdown",
+        &["Phase", "GEMM", "Attention", "RMSNorm", "SiLU&Mul", "All-Reduce", "Other"],
+    );
+    for (phase, tr) in [("Prefill", &prefill), ("Decode", &decode)] {
+        let rows = predict::breakdown(tr, &gpu, 4, lab.seed);
+        let get = |name: &str| {
+            rows.iter().find(|(k, _)| k == name).map(|(_, v)| *v).unwrap_or(0.0)
+        };
+        let mut cells = vec![phase.to_string()];
+        for c in categories {
+            cells.push(pct(get(c)));
+        }
+        t.row(cells);
+    }
+    let out = t.render();
+    print!("{out}");
+    Ok(out)
+}

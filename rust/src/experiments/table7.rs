@@ -1,0 +1,80 @@
+//! Table VII: MAPE of the analytical operation counts (total and per-SM
+//! maximum) against the oracle's NCU-style counters, for the four validated
+//! kernel implementations: gemm8 (A100, HW-scheduled), gemm9 (H100,
+//! persistent), FA2 (A100), FA3 (H100).
+
+use super::Lab;
+use crate::dataset::{finalize_for_gpu, sample_configs};
+use crate::features::FeatureSet;
+use crate::hw::gpu_by_name;
+use crate::kernels::KernelKind;
+use crate::oracle;
+use crate::sched::schedule;
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+fn validate(kind: KernelKind, gpu_name: &str, n: usize, seed: u64) -> (f64, f64) {
+    let gpu = gpu_by_name(gpu_name).unwrap();
+    let configs = sample_configs(kind, n, seed);
+    let (mut max_err, mut tot_err) = (0.0, 0.0);
+    let mut count = 0usize;
+    for (i, cfg) in configs.iter().enumerate() {
+        let cfg = finalize_for_gpu(cfg, &gpu);
+        let d = cfg.decompose(&gpu);
+        let dist = schedule(&d, &gpu);
+        let fset = FeatureSet::analyze(&d, &dist, &gpu);
+        let o = oracle::measure(&cfg, &gpu, seed + i as u64);
+        // attention also exercises non-tensor pipes, but Table VII compares
+        // the dominant math pipe counters
+        let (model_max, model_tot, oracle_max, oracle_tot) = if o.total_tensor_ops > 0.0 {
+            (fset.tensor.max_sm_ops, fset.tensor.total_ops, o.max_sm_tensor_ops, o.total_tensor_ops)
+        } else {
+            (fset.fma.max_sm_ops, fset.fma.total_ops, o.max_sm_fma_ops, o.total_fma_ops)
+        };
+        if oracle_tot <= 0.0 {
+            continue;
+        }
+        max_err += ((model_max - oracle_max) / oracle_max).abs();
+        tot_err += ((model_tot - oracle_tot) / oracle_tot).abs();
+        count += 1;
+    }
+    (100.0 * max_err / count as f64, 100.0 * tot_err / count as f64)
+}
+
+pub fn run(lab: &Lab) -> Result<String> {
+    let n = match lab.scale {
+        super::Scale::Fast => 60,
+        super::Scale::Normal => 200,
+        super::Scale::Full => 500,
+    };
+    let (g8_max, g8_tot) = validate(KernelKind::Gemm, "A100", n, lab.seed);
+    let (g9_max, g9_tot) = validate(KernelKind::Gemm, "H100", n, lab.seed ^ 1);
+    let (fa2_max, fa2_tot) = validate(KernelKind::Attention, "A100", n, lab.seed ^ 2);
+    let (fa3_max, fa3_tot) = validate(KernelKind::Attention, "H100", n, lab.seed ^ 3);
+
+    let mut t = Table::new(
+        "Table VII — MAPE (%) of analytical operation counts",
+        &["Metric", "gemm8", "gemm9", "FA2", "FA3"],
+    );
+    t.row(vec![
+        "Max SM Ops (%)".into(),
+        f(g8_max, 2),
+        f(g9_max, 2),
+        f(fa2_max, 2),
+        f(fa3_max, 2),
+    ]);
+    t.row(vec![
+        "Total Ops (%)".into(),
+        f(g8_tot, 2),
+        f(g9_tot, 2),
+        f(fa2_tot, 2),
+        f(fa3_tot, 2),
+    ]);
+    let out = t.render();
+    print!("{out}");
+
+    // paper-shape sanity: FA2's dynamic HW scheduling makes its max-SM error
+    // the largest; persistent/deterministic kernels stay near zero
+    assert!(fa2_max > fa3_max, "FA2 max-SM error should exceed FA3");
+    Ok(out)
+}

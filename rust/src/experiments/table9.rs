@@ -1,0 +1,101 @@
+//! Table IX: E2E prediction MAPE (%) for multi-GPU inference — two serving
+//! frameworks, three models, TP=2/4/8 and TP=4&PP=2, arxiv and splitwise
+//! workloads, across the paper's 20 configurations.
+
+use super::Lab;
+use crate::e2e::{llm, predict, trace, workload};
+use crate::hw::gpu_by_name;
+use crate::util::rng::Rng;
+use crate::util::stats::{mape, mean};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+struct Config {
+    framework: &'static str,
+    model: &'static str,
+    tp: u32,
+    pp: u32,
+    dataset: workload::WorkloadKind,
+    batch: usize,
+    hardware: &'static [&'static str],
+}
+
+pub fn run(lab: &Lab) -> Result<String> {
+    use workload::WorkloadKind::{Arxiv, Splitwise};
+    let configs = [
+        Config { framework: "SGLang", model: "Qwen3-32B", tp: 2, pp: 1, dataset: Arxiv, batch: 12, hardware: &["A100", "RTX 6000 Ada", "H100", "RTX PRO 6000 S"] },
+        Config { framework: "SGLang", model: "Qwen3-32B", tp: 2, pp: 1, dataset: Splitwise, batch: 48, hardware: &["A100", "RTX 6000 Ada", "H100", "RTX PRO 6000 S"] },
+        Config { framework: "SGLang", model: "Llama3.1-70B", tp: 4, pp: 1, dataset: Arxiv, batch: 16, hardware: &["A100", "H100"] },
+        Config { framework: "SGLang", model: "Llama3.1-70B", tp: 4, pp: 1, dataset: Splitwise, batch: 64, hardware: &["A100", "H100"] },
+        Config { framework: "SGLang", model: "Llama3.1-70B", tp: 8, pp: 1, dataset: Arxiv, batch: 16, hardware: &["H20", "H800"] },
+        Config { framework: "SGLang", model: "Llama3.1-70B", tp: 8, pp: 1, dataset: Splitwise, batch: 64, hardware: &["H20", "H800"] },
+        Config { framework: "vLLM", model: "Llama3.1-70B", tp: 4, pp: 2, dataset: Arxiv, batch: 16, hardware: &["H20", "H800"] },
+        Config { framework: "vLLM", model: "Llama3.1-70B", tp: 4, pp: 2, dataset: Splitwise, batch: 64, hardware: &["H20", "H800"] },
+    ];
+
+    let models = lab.model_set()?;
+    let n_batches = if lab.scale == super::Scale::Fast { 2 } else { 3 };
+    let mut t = Table::new(
+        "Table IX — E2E MAPE (%), multi-GPU inference",
+        &["Framework", "Model", "Dataset", "HW", "Roofline", "Linear", "Habitat", "Neusight", "SynPerf"],
+    );
+    let mut syn_all = Vec::new();
+    let mut neu_all = Vec::new();
+    let mut tested = 0usize;
+
+    for c in &configs {
+        let llm_cfg = llm::by_name(c.model).unwrap();
+        for hw in c.hardware {
+            let gpu = gpu_by_name(hw).unwrap();
+            let comm = lab.comm(&gpu);
+            let mut rng = Rng::new(lab.seed ^ (c.tp as u64) << 4 ^ gpu.num_sms as u64);
+            let mut actuals = Vec::new();
+            let mut acc: [Vec<f64>; 5] = Default::default();
+            for b in 0..n_batches {
+                let reqs = workload::sample_batch(c.dataset, c.batch, &mut rng);
+                let tr = trace::build_trace(&llm_cfg, c.tp, c.pp, &reqs);
+                let totals = predict::eval_trace(
+                    &tr,
+                    &gpu,
+                    c.tp,
+                    &models,
+                    &comm,
+                    lab.seed + (tested * 100 + b) as u64,
+                )?;
+                actuals.push(totals.actual);
+                acc[0].push(totals.roofline);
+                acc[1].push(totals.linear);
+                acc[2].push(totals.habitat);
+                acc[3].push(totals.neusight);
+                acc[4].push(totals.synperf);
+            }
+            let m: Vec<f64> = acc.iter().map(|p| mape(p, &actuals)).collect();
+            syn_all.push(m[4]);
+            neu_all.push(m[3]);
+            tested += 1;
+            t.row(vec![
+                c.framework.into(),
+                format!("{} (TP={}{})", c.model, c.tp, if c.pp > 1 { format!(",PP={}", c.pp) } else { String::new() }),
+                format!("{}_{}", c.dataset.name(), c.batch),
+                hw.to_string(),
+                f(m[0], 1),
+                f(m[1], 1),
+                f(m[2], 1),
+                f(m[3], 1),
+                f(m[4], 1),
+            ]);
+        }
+    }
+    let mut block = t.render();
+    let summary = format!(
+        "{} configs: SynPerf overall avg {:.1}% vs Neusight {:.1}%\n",
+        tested,
+        mean(&syn_all),
+        mean(&neu_all)
+    );
+    block.push_str(&summary);
+    print!("{block}");
+    assert_eq!(tested, 20, "the paper evaluates 20 configurations");
+    assert!(mean(&syn_all) < mean(&neu_all));
+    Ok(block)
+}

@@ -1,0 +1,230 @@
+//! Hand-rolled random-forest regressor — the data-driven estimator the paper
+//! uses for communication kernels (§V-D: "we apply a data-driven regression
+//! technique (e.g., Random Forest) to estimate communication kernel
+//! latency"). Bootstrap-sampled CART trees with feature subsampling and a
+//! depth/size cap; mean aggregation.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf(f64),
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf(v) => return *v,
+                Node::Split { feature, threshold, left, right } => {
+                    i = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ForestConfig {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    /// features tried per split (0 = all)
+    pub max_features: usize,
+    pub seed: u64,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        ForestConfig { n_trees: 40, max_depth: 12, min_leaf: 3, max_features: 0, seed: 99 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    trees: Vec<Tree>,
+    pub dim: usize,
+}
+
+impl RandomForest {
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], cfg: &ForestConfig) -> RandomForest {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let dim = xs[0].len();
+        let mut rng = Rng::new(cfg.seed);
+        let trees = (0..cfg.n_trees)
+            .map(|_| {
+                // bootstrap sample
+                let idx: Vec<usize> =
+                    (0..xs.len()).map(|_| rng.range_usize(0, xs.len() - 1)).collect();
+                let mut t = Tree { nodes: Vec::new() };
+                grow(&mut t, xs, ys, idx, 0, cfg, dim, &mut rng);
+                t
+            })
+            .collect();
+        RandomForest { trees, dim }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.dim);
+        self.trees.iter().map(|t| t.predict(x)).sum::<f64>() / self.trees.len() as f64
+    }
+}
+
+fn mean_of(ys: &[f64], idx: &[usize]) -> f64 {
+    idx.iter().map(|&i| ys[i]).sum::<f64>() / idx.len().max(1) as f64
+}
+
+fn sse_of(ys: &[f64], idx: &[usize], mean: f64) -> f64 {
+    idx.iter().map(|&i| (ys[i] - mean).powi(2)).sum()
+}
+
+/// Recursively grow a tree; returns node index.
+#[allow(clippy::too_many_arguments)]
+fn grow(
+    tree: &mut Tree,
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    idx: Vec<usize>,
+    depth: usize,
+    cfg: &ForestConfig,
+    dim: usize,
+    rng: &mut Rng,
+) -> usize {
+    let mean = mean_of(ys, &idx);
+    if depth >= cfg.max_depth || idx.len() < 2 * cfg.min_leaf {
+        tree.nodes.push(Node::Leaf(mean));
+        return tree.nodes.len() - 1;
+    }
+    let parent_sse = sse_of(ys, &idx, mean);
+    if parent_sse < 1e-18 {
+        tree.nodes.push(Node::Leaf(mean));
+        return tree.nodes.len() - 1;
+    }
+
+    // candidate features
+    let k = if cfg.max_features == 0 { (dim as f64).sqrt().ceil() as usize } else { cfg.max_features };
+    let mut feats: Vec<usize> = (0..dim).collect();
+    rng.shuffle(&mut feats);
+    feats.truncate(k.max(1));
+
+    let mut best: Option<(f64, usize, f64)> = None; // (gain, feature, threshold)
+    for &f in &feats {
+        // candidate thresholds from value quantiles
+        let mut vals: Vec<f64> = idx.iter().map(|&i| xs[i][f]).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        if vals.len() < 2 {
+            continue;
+        }
+        for q in 1..8 {
+            let thr = vals[(vals.len() * q / 8).min(vals.len() - 1)];
+            let (mut ls, mut ln, mut rs, mut rn) = (0.0, 0usize, 0.0, 0usize);
+            for &i in &idx {
+                if xs[i][f] <= thr {
+                    ls += ys[i];
+                    ln += 1;
+                } else {
+                    rs += ys[i];
+                    rn += 1;
+                }
+            }
+            if ln < cfg.min_leaf || rn < cfg.min_leaf {
+                continue;
+            }
+            let (lm, rm) = (ls / ln as f64, rs / rn as f64);
+            let child_sse: f64 = idx
+                .iter()
+                .map(|&i| {
+                    let m = if xs[i][f] <= thr { lm } else { rm };
+                    (ys[i] - m).powi(2)
+                })
+                .sum();
+            let gain = parent_sse - child_sse;
+            if best.map(|(g, _, _)| gain > g).unwrap_or(gain > 1e-15) {
+                best = Some((gain, f, thr));
+            }
+        }
+    }
+
+    match best {
+        None => {
+            tree.nodes.push(Node::Leaf(mean));
+            tree.nodes.len() - 1
+        }
+        Some((_, f, thr)) => {
+            let (l_idx, r_idx): (Vec<usize>, Vec<usize>) =
+                idx.into_iter().partition(|&i| xs[i][f] <= thr);
+            let me = tree.nodes.len();
+            tree.nodes.push(Node::Leaf(0.0)); // placeholder
+            let left = grow(tree, xs, ys, l_idx, depth + 1, cfg, dim, rng);
+            let right = grow(tree, xs, ys, r_idx, depth + 1, cfg, dim, rng);
+            tree.nodes[me] = Node::Split { feature: f, threshold: thr, left, right };
+            me
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.range_f64(0.0, 10.0), rng.range_f64(0.0, 5.0)]).collect();
+        // nonlinear target with interaction
+        let ys: Vec<f64> =
+            xs.iter().map(|x| (x[0] * x[1]).sqrt() + if x[0] > 5.0 { 3.0 } else { 0.0 }).collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn learns_nonlinear_function() {
+        let (xs, ys) = toy(800, 1);
+        let f = RandomForest::fit(&xs, &ys, &ForestConfig::default());
+        let (txs, tys) = toy(200, 2);
+        let mae: f64 = txs
+            .iter()
+            .zip(&tys)
+            .map(|(x, y)| (f.predict(x) - y).abs())
+            .sum::<f64>()
+            / tys.len() as f64;
+        let spread = tys.iter().cloned().fold(0.0, f64::max);
+        assert!(mae < spread * 0.12, "mae {mae} vs spread {spread}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (xs, ys) = toy(100, 3);
+        let a = RandomForest::fit(&xs, &ys, &ForestConfig::default());
+        let b = RandomForest::fit(&xs, &ys, &ForestConfig::default());
+        assert_eq!(a.predict(&xs[0]), b.predict(&xs[0]));
+    }
+
+    #[test]
+    fn handles_constant_target() {
+        let xs: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64]).collect();
+        let ys = vec![2.5; 50];
+        let f = RandomForest::fit(&xs, &ys, &ForestConfig::default());
+        assert!((f.predict(&[25.0]) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_min_leaf() {
+        let (xs, ys) = toy(30, 4);
+        let cfg = ForestConfig { min_leaf: 15, ..Default::default() };
+        let f = RandomForest::fit(&xs, &ys, &cfg);
+        // with min_leaf = n/2 trees are single leaves -> constant predictor
+        let p1 = f.predict(&xs[0]);
+        let p2 = f.predict(&xs[1]);
+        assert!((p1 - p2).abs() < 1.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! GPU hardware model: the architectural specification vector `S` of
+//! Table II, instantiated for the 11 GPUs of Table VI, plus the
+//! seen/unseen split used throughout the evaluation.
+
+mod spec;
+
+pub use spec::*;

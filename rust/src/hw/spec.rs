@@ -1,0 +1,268 @@
+//! `GpuSpec` — the compact architectural parameter vector **S** (paper
+//! Table II) for every evaluated GPU (paper Table VI). Headline numbers
+//! (SMs, memory bandwidth, BF16 tensor throughput, clock) are taken directly
+//! from Table VI; the remaining Table II parameters (L2 bandwidth, shared
+//! memory size, occupancy limits, interconnect) are filled from the public
+//! architecture whitepapers the paper cites [36]-[38],[44].
+
+/// GPU micro-architecture generation (Ampere and later share the SM
+/// organization SynPerf relies on — §II-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Ampere,
+    Ada,
+    Hopper,
+    Blackwell,
+}
+
+impl Arch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Ampere => "Ampere",
+            Arch::Ada => "Ada",
+            Arch::Hopper => "Hopper",
+            Arch::Blackwell => "Blackwell",
+        }
+    }
+
+    /// Ordinal used when looking for the "most architecturally similar"
+    /// sibling (closed-source decomposition fallback, §V-A).
+    pub fn generation(&self) -> u32 {
+        match self {
+            Arch::Ampere => 0,
+            Arch::Ada => 1,
+            Arch::Hopper => 2,
+            Arch::Blackwell => 3,
+        }
+    }
+}
+
+/// Architectural specification vector (Table II) + interconnect info used by
+/// the communication model.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub arch: Arch,
+    /// CUDA compute capability (8.0 – 12.0).
+    pub compute_capability: f64,
+    pub num_sms: u32,
+    pub sm_clock_mhz: f64,
+    /// Dense BF16 MMA throughput, ops/cycle/SM (Table VI column).
+    pub tensor_ops_clk_sm: f64,
+    /// FP32 FMA pipe throughput, ops/cycle/SM.
+    pub fma_ops_clk_sm: f64,
+    /// XU (special function) pipe throughput, ops/cycle/SM.
+    pub xu_ops_clk_sm: f64,
+    /// Off-chip (HBM/GDDR) bandwidth, GB/s.
+    pub dram_bw_gbs: f64,
+    /// Aggregate L2 bandwidth, GB/s.
+    pub l2_bw_gbs: f64,
+    /// Shared-memory bandwidth per SM, bytes/cycle (128 across the board).
+    pub smem_bw_byte_clk_sm: f64,
+    /// Usable shared memory per SM, KiB.
+    pub smem_kb_sm: u32,
+    /// Register file per SM, KiB (256 across the board).
+    pub regfile_kb_sm: u32,
+    /// L2 cache size, MiB.
+    pub l2_mb: f64,
+    /// Occupancy ceilings.
+    pub max_warps_per_sm: u32,
+    pub max_ctas_per_sm: u32,
+    /// FP8 MMA throughput multiplier over BF16 (2.0 on Hopper+, 1.0 before).
+    pub fp8_tensor_mult: f64,
+    /// Per-direction interconnect bandwidth for collectives, GB/s
+    /// (NVLink where present, PCIe otherwise).
+    pub interconnect_gbs: f64,
+    /// Whether the GPU is in the training ("seen") split of Table VI.
+    pub seen: bool,
+}
+
+impl GpuSpec {
+    /// Peak tensor-pipe throughput in ops/s.
+    pub fn tensor_ops_per_sec(&self) -> f64 {
+        self.num_sms as f64 * self.tensor_ops_clk_sm * self.sm_clock_mhz * 1e6
+    }
+
+    pub fn fma_ops_per_sec(&self) -> f64 {
+        self.num_sms as f64 * self.fma_ops_clk_sm * self.sm_clock_mhz * 1e6
+    }
+
+    pub fn xu_ops_per_sec(&self) -> f64 {
+        self.num_sms as f64 * self.xu_ops_clk_sm * self.sm_clock_mhz * 1e6
+    }
+
+    /// Clock period in seconds.
+    pub fn cycle_sec(&self) -> f64 {
+        1.0 / (self.sm_clock_mhz * 1e6)
+    }
+
+    /// DRAM bytes per GPU-cycle (whole chip).
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_bw_gbs * 1e9 / (self.sm_clock_mhz * 1e6)
+    }
+
+    pub fn l2_bytes_per_cycle(&self) -> f64 {
+        self.l2_bw_gbs * 1e9 / (self.sm_clock_mhz * 1e6)
+    }
+
+    /// Compute-to-memory balance (BF16 ops per DRAM byte at peak) — the
+    /// quantity behind the H20-vs-H800 roofline discussion in §VI-C.
+    pub fn compute_mem_ratio(&self) -> f64 {
+        self.tensor_ops_per_sec() / (self.dram_bw_gbs * 1e9)
+    }
+}
+
+macro_rules! gpu {
+    ($name:literal, $arch:expr, $cc:expr, $sms:expr, $clk:expr, $tensor:expr,
+     $dram:expr, $l2bw:expr, $smem:expr, $l2mb:expr, $fp8:expr, $ic:expr, $seen:expr) => {
+        GpuSpec {
+            name: $name,
+            arch: $arch,
+            compute_capability: $cc,
+            num_sms: $sms,
+            sm_clock_mhz: $clk,
+            tensor_ops_clk_sm: $tensor,
+            fma_ops_clk_sm: 128.0,
+            xu_ops_clk_sm: 16.0,
+            dram_bw_gbs: $dram,
+            l2_bw_gbs: $l2bw,
+            smem_bw_byte_clk_sm: 128.0,
+            smem_kb_sm: $smem,
+            regfile_kb_sm: 256,
+            l2_mb: $l2mb,
+            max_warps_per_sm: if matches!($arch, Arch::Ampere) && $cc > 8.05 { 48 } else { 64 },
+            max_ctas_per_sm: if matches!($arch, Arch::Hopper) { 32 } else { 24 },
+            fp8_tensor_mult: $fp8,
+            interconnect_gbs: $ic,
+            seen: $seen,
+        }
+    };
+}
+
+/// The 11 GPUs of Table VI. First six are the training ("seen") group.
+pub fn all_gpus() -> Vec<GpuSpec> {
+    vec![
+        //    name             arch            cc    SMs  clk    tensor dram   l2bw   smem l2mb fp8  ic    seen
+        gpu!("A40",            Arch::Ampere,   8.6,  84,  1740.0, 1024.0, 696.0, 2430.0, 100, 6.0, 1.0, 32.0, true),
+        gpu!("A100",           Arch::Ampere,   8.0,  108, 1410.0, 2048.0, 2039.0, 4500.0, 164, 40.0, 1.0, 300.0, true),
+        gpu!("RTX 6000 Ada",   Arch::Ada,      8.9,  142, 2505.0, 1024.0, 960.0, 4800.0, 100, 96.0, 1.0, 32.0, true),
+        gpu!("L20",            Arch::Ada,      8.9,  92,  2520.0, 516.0,  864.0, 3100.0, 100, 96.0, 1.0, 32.0, true),
+        gpu!("H20",            Arch::Hopper,   9.0,  78,  1830.0, 1024.0, 4023.0, 5200.0, 228, 60.0, 2.0, 450.0, true),
+        gpu!("H800",           Arch::Hopper,   9.0,  132, 1830.0, 4096.0, 3352.0, 8000.0, 228, 50.0, 2.0, 200.0, true),
+        gpu!("RTX A6000",      Arch::Ampere,   8.6,  84,  1800.0, 1024.0, 768.0, 2500.0, 100, 6.0, 1.0, 32.0, false),
+        gpu!("L40",            Arch::Ada,      8.9,  142, 2490.0, 512.0,  864.0, 4700.0, 100, 96.0, 1.0, 32.0, false),
+        gpu!("H100",           Arch::Hopper,   9.0,  132, 1830.0, 4096.0, 3352.0, 8000.0, 228, 50.0, 2.0, 450.0, false),
+        gpu!("H200",           Arch::Hopper,   9.0,  132, 1830.0, 4096.0, 4917.0, 9500.0, 228, 50.0, 2.0, 450.0, false),
+        gpu!("RTX PRO 6000 S", Arch::Blackwell, 12.0, 188, 2340.0, 1024.0, 1792.0, 10400.0, 128, 128.0, 2.0, 64.0, false),
+    ]
+}
+
+pub fn seen_gpus() -> Vec<GpuSpec> {
+    all_gpus().into_iter().filter(|g| g.seen).collect()
+}
+
+pub fn unseen_gpus() -> Vec<GpuSpec> {
+    all_gpus().into_iter().filter(|g| !g.seen).collect()
+}
+
+pub fn gpu_by_name(name: &str) -> Option<GpuSpec> {
+    let want = name.to_lowercase().replace([' ', '_', '-'], "");
+    all_gpus()
+        .into_iter()
+        .find(|g| g.name.to_lowercase().replace([' ', '_', '-'], "") == want)
+}
+
+/// The most architecturally similar *seen* GPU — used for closed-source
+/// kernel decomposition on unseen hardware (§V-A) and by the Habitat
+/// baseline as its local reference device.
+pub fn nearest_seen(gpu: &GpuSpec) -> GpuSpec {
+    let seen = seen_gpus();
+    seen.iter()
+        .min_by_key(|s| {
+            let gen_gap = (s.arch.generation() as i64 - gpu.arch.generation() as i64).abs();
+            let sm_gap = (s.num_sms as i64 - gpu.num_sms as i64).abs();
+            gen_gap * 1_000 + sm_gap
+        })
+        .cloned()
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eleven_gpus_six_seen() {
+        let all = all_gpus();
+        assert_eq!(all.len(), 11);
+        assert_eq!(seen_gpus().len(), 6);
+        assert_eq!(unseen_gpus().len(), 5);
+    }
+
+    #[test]
+    fn table_vi_headline_numbers() {
+        let a100 = gpu_by_name("A100").unwrap();
+        assert_eq!(a100.num_sms, 108);
+        assert_eq!(a100.dram_bw_gbs, 2039.0);
+        assert_eq!(a100.tensor_ops_clk_sm, 2048.0);
+        assert_eq!(a100.sm_clock_mhz, 1410.0);
+        let h20 = gpu_by_name("H20").unwrap();
+        assert_eq!(h20.num_sms, 78);
+        assert_eq!(h20.dram_bw_gbs, 4023.0);
+        let pro = gpu_by_name("RTX PRO 6000 S").unwrap();
+        assert_eq!(pro.arch, Arch::Blackwell);
+        assert_eq!(pro.num_sms, 188);
+    }
+
+    #[test]
+    fn table_ii_ranges_hold() {
+        for g in all_gpus() {
+            assert!((8.0..=12.0).contains(&g.compute_capability), "{}", g.name);
+            assert!((78..=188).contains(&g.num_sms), "{}", g.name);
+            assert!((1410.0..=2520.0).contains(&g.sm_clock_mhz), "{}", g.name);
+            assert!((512.0..=4096.0).contains(&g.tensor_ops_clk_sm), "{}", g.name);
+            assert!((696.0..=4917.0).contains(&g.dram_bw_gbs), "{}", g.name);
+            assert!((2430.0..=10400.0).contains(&g.l2_bw_gbs), "{}", g.name);
+            assert_eq!(g.smem_bw_byte_clk_sm, 128.0, "{}", g.name);
+            assert!((100..=228).contains(&g.smem_kb_sm), "{}", g.name);
+            assert_eq!(g.regfile_kb_sm, 256, "{}", g.name);
+            assert_eq!(g.xu_ops_clk_sm, 16.0, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn h20_vs_h800_balance() {
+        // The §VI-C discussion: H20 keeps ~120% of H800's bandwidth but only
+        // ~15-25% of its compute -> much lower compute-to-memory ratio.
+        let h20 = gpu_by_name("H20").unwrap();
+        let h800 = gpu_by_name("H800").unwrap();
+        assert!(h20.dram_bw_gbs > h800.dram_bw_gbs);
+        assert!(h20.compute_mem_ratio() < 0.3 * h800.compute_mem_ratio());
+    }
+
+    #[test]
+    fn name_lookup_is_fuzzy() {
+        assert!(gpu_by_name("rtx_6000_ada").is_some());
+        assert!(gpu_by_name("h100").is_some());
+        assert!(gpu_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn nearest_seen_prefers_same_generation() {
+        let h100 = gpu_by_name("H100").unwrap();
+        let near = nearest_seen(&h100);
+        assert_eq!(near.arch, Arch::Hopper);
+        assert_eq!(near.name, "H800"); // same SM count
+        let a6000 = gpu_by_name("RTX A6000").unwrap();
+        assert_eq!(nearest_seen(&a6000).arch, Arch::Ampere);
+    }
+
+    #[test]
+    fn derived_quantities_positive() {
+        for g in all_gpus() {
+            assert!(g.tensor_ops_per_sec() > 0.0);
+            assert!(g.dram_bytes_per_cycle() > 0.0);
+            assert!(g.cycle_sec() > 0.0 && g.cycle_sec() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! FlashInfer attention decomposition (FA2 / FA3 variants, §IV-A).
+//!
+//! Open-source kernels: F is extracted from the parallelization strategy in
+//! the source — one task per (request, query-head, query-tile). With causal
+//! masking the effective KV extent differs per query tile, so tasks are NOT
+//! uniform: this is the paper's key example of workload variance (Fig. 3 /
+//! §VI-B discussion of FA2's higher max-SM error).
+//!
+//! FA2 launches a CTA per task (hardware scheduler); FA3 is a persistent
+//! kernel whose MinHeap software scheduler balances tasks by estimated cost
+//! (§V-A: "we accurately replicated its MinHeap-based scheduler logic").
+
+use super::{CtaResources, Decomposition, Paradigm, Pipe, Task};
+use crate::hw::GpuSpec;
+
+/// Query-tile rows (Br) for prefill. FlashInfer uses 128-row tiles for
+/// hd<=128 prefill; decode (single-query) kernels use 16-row MMA fragments.
+pub const BR: u32 = 128;
+pub const BR_DECODE: u32 = 16;
+
+/// Tile rows for a request: decode-length queries take the decode kernel.
+pub fn br_for(qlen: u32) -> u32 {
+    if qlen < 64 {
+        BR_DECODE
+    } else {
+        BR
+    }
+}
+
+/// Coefficient alpha = 4 for FlashAttention (two chained matmuls, Eq. 3).
+pub const ALPHA: f64 = 4.0;
+
+/// Build the per-tile task for `rows` query rows attending to `kv_eff` keys.
+fn attn_task(rows: u32, kv_eff: u32, hd: u32, br: u32) -> Task {
+    let (rows, kv, hd) = (rows as f64, kv_eff as f64, hd as f64);
+    // Q@K^T (2*rows*kv*hd) + P@V (2*rows*kv*hd) — MMA executes full Br tiles,
+    // matching hardware counters; we count the nominal tile rows.
+    let tensor_ops = ALPHA * br as f64 * kv * hd;
+    // Online-softmax elementwise chain: scale, running-max update, rescale,
+    // accumulate — ~5 FP32 ops per score + final O normalization.
+    let fma_ops = 5.0 * rows * kv + rows * hd;
+    // exp2 per score on the XU pipe.
+    let xu_ops = rows * kv;
+    // Loads: Q tile + K,V panels (bf16); stores: O tile (+ lse).
+    let bytes_load = rows * hd * 2.0 + 2.0 * kv * hd * 2.0;
+    let bytes_store = rows * hd * 2.0 + rows * 4.0;
+    let bytes_smem = 2.0 * (2.0 * kv * hd * 2.0) + rows * hd * 2.0;
+    Task {
+        tensor_ops,
+        fma_ops,
+        xu_ops,
+        bytes_load,
+        bytes_store,
+        bytes_smem,
+        cost_hint: tensor_ops + 8.0 * bytes_load,
+    }
+}
+
+/// Decompose a (possibly ragged) attention batch.
+///
+/// `batch` holds per-request (qlen, kvlen) with kvlen >= qlen (the KV cache
+/// holds `kvlen - qlen` history tokens plus the current chunk).
+pub fn decompose(
+    batch: &[(u32, u32)],
+    nh: u32,
+    _nkv: u32,
+    hd: u32,
+    causal: bool,
+    fa3: bool,
+    _gpu: &GpuSpec,
+) -> Decomposition {
+    let mut tasks = Vec::new();
+    for &(qlen, kvlen) in batch {
+        debug_assert!(kvlen >= qlen, "kv cache must cover the query chunk");
+        let hist = kvlen - qlen;
+        let br = br_for(qlen);
+        let q_tiles = qlen.div_ceil(br).max(1);
+        for qt in 0..q_tiles {
+            let q_start = qt * br;
+            let q_end = (q_start + br).min(qlen);
+            let rows = q_end - q_start;
+            // Causal: rows in this tile see history plus everything up to the
+            // last query row of the tile.
+            let kv_eff = if causal { (hist + q_end).min(kvlen) } else { kvlen };
+            for _h in 0..nh {
+                tasks.push(attn_task(rows, kv_eff.max(1), hd, br));
+            }
+        }
+    }
+
+    // FA2: 4 warps, double-buffered K/V tiles in smem. FA3: warp-specialized
+    // producer/consumer (8 warps), bigger smem footprint.
+    let bc = 64u32; // KV tile columns staged in smem
+    let smem = if fa3 {
+        (BR * hd + 2 * 2 * bc * hd) * 2
+    } else {
+        (BR * hd + 2 * bc * hd) * 2
+    };
+    let cta = CtaResources {
+        warps: if fa3 { 8 } else { 4 },
+        smem_bytes: smem,
+        regs_per_thread: 192,
+    };
+
+    // Compulsory traffic: Q and O once per head, K/V once per KV head.
+    let min_dram_bytes: f64 = batch
+        .iter()
+        .map(|&(qlen, kvlen)| {
+            2.0 * qlen as f64 * hd as f64 * nh as f64 * 2.0
+                + 2.0 * kvlen as f64 * hd as f64 * _nkv as f64 * 2.0
+        })
+        .sum();
+
+    Decomposition {
+        tasks,
+        paradigm: if fa3 { Paradigm::MinHeap } else { Paradigm::HardwareRR },
+        cta,
+        tile: (BR, bc, hd),
+        pipes: vec![Pipe::Tensor, Pipe::Xu],
+        min_dram_bytes,
+        pipeline_stages: 2, // double-buffered K/V tiles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gpu_by_name;
+
+    fn gpu() -> crate::hw::GpuSpec {
+        gpu_by_name("A100").unwrap()
+    }
+
+    #[test]
+    fn task_count_is_batch_heads_qtiles() {
+        let d = decompose(&[(512, 512), (300, 1000)], 8, 2, 128, true, false, &gpu());
+        let tiles_r1 = 512u32.div_ceil(BR); // 4
+        let tiles_r2 = 300u32.div_ceil(BR); // 3
+        assert_eq!(d.num_tasks() as u32, (tiles_r1 + tiles_r2) * 8);
+    }
+
+    #[test]
+    fn causal_tasks_grow_along_query() {
+        let d = decompose(&[(512, 512)], 1, 1, 128, true, false, &gpu());
+        let ops: Vec<f64> = d.tasks.iter().map(|t| t.tensor_ops).collect();
+        // later query tiles attend to more KV -> strictly increasing work
+        assert!(ops.windows(2).all(|w| w[0] < w[1]), "{ops:?}");
+    }
+
+    #[test]
+    fn non_causal_tasks_uniform() {
+        let d = decompose(&[(512, 2048)], 2, 2, 128, false, false, &gpu());
+        let first = d.tasks[0].tensor_ops;
+        assert!(d.tasks.iter().all(|t| (t.tensor_ops - first).abs() < 1e-9));
+    }
+
+    #[test]
+    fn decode_single_token_attends_full_cache() {
+        let d = decompose(&[(1, 4096)], 4, 1, 128, true, false, &gpu());
+        assert_eq!(d.num_tasks(), 4);
+        // kv_eff = kvlen for the last (only) token; decode uses 16-row tiles
+        let expect = ALPHA * BR_DECODE as f64 * 4096.0 * 128.0;
+        assert!((d.tasks[0].tensor_ops - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fa3_uses_minheap_and_more_warps() {
+        let d2 = decompose(&[(1024, 1024)], 2, 2, 128, true, false, &gpu());
+        let d3 = decompose(&[(1024, 1024)], 2, 2, 128, true, true, &gpu());
+        assert_eq!(d2.paradigm, Paradigm::HardwareRR);
+        assert_eq!(d3.paradigm, Paradigm::MinHeap);
+        assert!(d3.cta.warps > d2.cta.warps);
+        // same total math either way
+        assert!((d2.total_tensor_ops() - d3.total_tensor_ops()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alpha_is_four() {
+        // one full-tile non-causal task: ops = 4 * Br * kv * hd
+        let d = decompose(&[(128, 777)], 1, 1, 64, false, false, &gpu());
+        let expect = 4.0 * 128.0 * 777.0 * 64.0;
+        assert!((d.tasks[0].tensor_ops - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn xu_demand_tracks_scores() {
+        let d = decompose(&[(128, 1000)], 1, 1, 128, false, false, &gpu());
+        assert!((d.tasks[0].xu_ops - 128.0 * 1000.0).abs() < 1e-6);
+    }
+}

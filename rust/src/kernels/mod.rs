@@ -1,0 +1,289 @@
+//! Kernel Decomposer (paper §IV-A): maps a kernel launch — input parameters
+//! **X** plus hardware spec **S** — to the set of fundamental *tasks*
+//! `{τ_i} = F(X, S)` (Eq. 1), the schedulable units of work for an SM.
+//!
+//! For conventional kernels a task is a CTA; for persistent kernels (cuBLAS
+//! ping-pong GEMM on Hopper, FlashAttention-3) a task is the work-queue
+//! packet a resident CTA fetches. Each kernel category implements its own
+//! decomposition, mirroring the source-derived (or, for cuBLAS,
+//! profile-inferred) mapping logic the paper describes; the per-task pipeline
+//! demand formulas of §IV-C1/2 live alongside the decomposition because they
+//! are kernel-specific (Eq. 3 coefficients, loop spaces, byte counts).
+
+pub mod attention;
+pub mod fused_moe;
+pub mod gemm;
+pub mod rmsnorm;
+pub mod scaled_mm;
+pub mod silu_mul;
+
+use crate::hw::GpuSpec;
+
+/// SM instruction pipelines modeled by the Feature Analyzer (Table III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pipe {
+    Tensor,
+    Fma,
+    Xu,
+}
+
+/// Element precision of the kernel's operands (Table V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    Fp32,
+    Bf16,
+    Fp8,
+}
+
+impl DType {
+    pub fn bytes(&self) -> f64 {
+        match self {
+            DType::Fp32 => 4.0,
+            DType::Bf16 => 2.0,
+            DType::Fp8 => 1.0,
+        }
+    }
+}
+
+/// A fundamental task τ_i with its analytically derived pipeline demands.
+///
+/// `*_ops` are executed operations per math pipe (§IV-C1); byte counts are
+/// the MIO demands (§IV-C2): `bytes_load` is data loaded from the memory
+/// hierarchy (the critical path — loads feed the math pipes), `bytes_store`
+/// the writeback, `bytes_smem` shared-memory traffic (staging both ways).
+#[derive(Debug, Clone, Default)]
+pub struct Task {
+    pub tensor_ops: f64,
+    pub fma_ops: f64,
+    pub xu_ops: f64,
+    pub bytes_load: f64,
+    pub bytes_store: f64,
+    pub bytes_smem: f64,
+    /// Scheduler cost estimate (work-proportional), used by the MinHeap
+    /// software scheduler and by the oracle as the base duration scale.
+    pub cost_hint: f64,
+}
+
+impl Task {
+    pub fn total_bytes(&self) -> f64 {
+        self.bytes_load + self.bytes_store
+    }
+}
+
+/// How tasks reach SMs (paper §IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Paradigm {
+    /// GigaThread engine: round-robin, retire-driven (conventional kernels).
+    HardwareRR,
+    /// Persistent kernel with a software tile scheduler (cuBLAS ping-pong).
+    PersistentTile,
+    /// Persistent kernel with FlashInfer FA3's MinHeap load balancer.
+    MinHeap,
+}
+
+/// Per-CTA resource footprint — the occupancy inputs of the hardware
+/// scheduler (registers, shared memory, warp slots).
+#[derive(Debug, Clone, Copy)]
+pub struct CtaResources {
+    pub warps: u32,
+    pub smem_bytes: u32,
+    pub regs_per_thread: u32,
+}
+
+impl CtaResources {
+    /// Max concurrent CTAs per SM under the resource limits of `gpu`.
+    pub fn occupancy(&self, gpu: &GpuSpec) -> u32 {
+        let by_warps = gpu.max_warps_per_sm / self.warps.max(1);
+        let by_smem = if self.smem_bytes == 0 {
+            gpu.max_ctas_per_sm
+        } else {
+            (gpu.smem_kb_sm * 1024) / self.smem_bytes
+        };
+        let regs_per_cta = self.regs_per_thread * self.warps * 32;
+        let by_regs = if regs_per_cta == 0 {
+            gpu.max_ctas_per_sm
+        } else {
+            (gpu.regfile_kb_sm * 1024 / 4) / regs_per_cta
+        };
+        by_warps
+            .min(by_smem)
+            .min(by_regs)
+            .min(gpu.max_ctas_per_sm)
+            .max(1)
+    }
+}
+
+/// Output of the Kernel Decomposer: the task set plus execution metadata the
+/// Scheduling Simulator and the oracle need.
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    pub tasks: Vec<Task>,
+    pub paradigm: Paradigm,
+    pub cta: CtaResources,
+    /// Uniform tile geometry (tile_M, tile_N, tile_K) where applicable —
+    /// drives MXU-utilization curves in the oracle.
+    pub tile: (u32, u32, u32),
+    /// Which math pipes this kernel exercises (Table V "Math Pipe" column).
+    pub pipes: Vec<Pipe>,
+    /// Compulsory off-chip traffic: each distinct operand/result byte moved
+    /// once. This is the *valid* DRAM lower bound for the theoretical roof
+    /// (summed per-task loads overcount reuse that L2 absorbs — exactly the
+    /// overestimate that sinks the naive Roofline baseline on H800, §VI-C).
+    pub min_dram_bytes: f64,
+    /// Software pipelining depth (smem staging buffers / async-copy stages).
+    pub pipeline_stages: u32,
+}
+
+impl Decomposition {
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn total_tensor_ops(&self) -> f64 {
+        self.tasks.iter().map(|t| t.tensor_ops).sum()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.tasks.iter().map(|t| t.total_bytes()).sum()
+    }
+}
+
+/// Fused-MoE Triton launch configuration (§VII tuning space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoeConfig {
+    pub block_m: u32,
+    pub block_n: u32,
+    pub block_k: u32,
+    pub num_stages: u32,
+    pub num_warps: u32,
+}
+
+/// Kernel launch description — the model input parameters **X** (§IV-A).
+#[derive(Debug, Clone)]
+pub enum KernelConfig {
+    /// cuBLAS GEMM: C[M,N] = A[M,K] @ B[K,N].
+    Gemm { m: u32, n: u32, k: u32, dtype: DType },
+    /// vLLM CUTLASS FP8 blockwise-quantized scaled matmul.
+    ScaledMm { m: u32, n: u32, k: u32 },
+    /// FlashInfer attention (prefill or decode), FA2 or FA3 variant.
+    Attention {
+        batch: Vec<(u32, u32)>, // per-request (qlen, kvlen), kvlen >= qlen
+        nh: u32,
+        nkv: u32,
+        hd: u32,
+        causal: bool,
+        fa3: bool,
+    },
+    /// FlashInfer fused RMSNorm over [seq, dim].
+    RmsNorm { seq: u32, dim: u32 },
+    /// FlashInfer SiLU-and-multiply over [seq, 2*dim] -> [seq, dim].
+    SiluMul { seq: u32, dim: u32 },
+    /// SGLang Triton fused-MoE grouped GEMM (w13 projection shape):
+    /// `m` tokens routed to `e` experts with `topk`, hidden `h`, out `n`.
+    FusedMoe {
+        m: u32,
+        e: u32,
+        topk: u32,
+        h: u32,
+        n: u32,
+        /// per-expert token counts (routing result), len == e
+        expert_tokens: Vec<u32>,
+        cfg: MoeConfig,
+    },
+}
+
+/// Kernel category identifiers — one Performance-Estimator MLP is trained
+/// per category (§IV-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    Gemm,
+    ScaledMm,
+    Attention,
+    RmsNorm,
+    SiluMul,
+    FusedMoe,
+}
+
+impl KernelKind {
+    pub const ALL: [KernelKind; 6] = [
+        KernelKind::Gemm,
+        KernelKind::ScaledMm,
+        KernelKind::Attention,
+        KernelKind::RmsNorm,
+        KernelKind::SiluMul,
+        KernelKind::FusedMoe,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Gemm => "gemm",
+            KernelKind::ScaledMm => "scaled_mm",
+            KernelKind::Attention => "attention",
+            KernelKind::RmsNorm => "rmsnorm",
+            KernelKind::SiluMul => "silu_mul",
+            KernelKind::FusedMoe => "fused_moe",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<KernelKind> {
+        Self::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+impl KernelConfig {
+    pub fn kind(&self) -> KernelKind {
+        match self {
+            KernelConfig::Gemm { .. } => KernelKind::Gemm,
+            KernelConfig::ScaledMm { .. } => KernelKind::ScaledMm,
+            KernelConfig::Attention { .. } => KernelKind::Attention,
+            KernelConfig::RmsNorm { .. } => KernelKind::RmsNorm,
+            KernelConfig::SiluMul { .. } => KernelKind::SiluMul,
+            KernelConfig::FusedMoe { .. } => KernelKind::FusedMoe,
+        }
+    }
+
+    /// The mapping function F(X, S) — dispatch to the per-category
+    /// decomposer (Eq. 1).
+    pub fn decompose(&self, gpu: &GpuSpec) -> Decomposition {
+        match self {
+            KernelConfig::Gemm { m, n, k, dtype } => gemm::decompose(*m, *n, *k, *dtype, gpu),
+            KernelConfig::ScaledMm { m, n, k } => scaled_mm::decompose(*m, *n, *k, gpu),
+            KernelConfig::Attention { batch, nh, nkv, hd, causal, fa3 } => {
+                attention::decompose(batch, *nh, *nkv, *hd, *causal, *fa3, gpu)
+            }
+            KernelConfig::RmsNorm { seq, dim } => rmsnorm::decompose(*seq, *dim, gpu),
+            KernelConfig::SiluMul { seq, dim } => silu_mul::decompose(*seq, *dim, gpu),
+            KernelConfig::FusedMoe { h, n, expert_tokens, cfg, .. } => {
+                fused_moe::decompose(*h, *n, expert_tokens, *cfg, gpu)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gpu_by_name;
+
+    #[test]
+    fn occupancy_respects_all_limits() {
+        let a100 = gpu_by_name("A100").unwrap();
+        // warp-limited: 16 warps per CTA, 64 slots -> 4
+        let cta = CtaResources { warps: 16, smem_bytes: 0, regs_per_thread: 32 };
+        assert_eq!(cta.occupancy(&a100), 4);
+        // smem-limited: 82KB per CTA on 164KB SM -> 2
+        let cta = CtaResources { warps: 4, smem_bytes: 82 * 1024, regs_per_thread: 32 };
+        assert_eq!(cta.occupancy(&a100), 2);
+        // never zero
+        let cta = CtaResources { warps: 64, smem_bytes: 300 * 1024, regs_per_thread: 255 };
+        assert_eq!(cta.occupancy(&a100), 1);
+    }
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::from_name("bogus"), None);
+    }
+}

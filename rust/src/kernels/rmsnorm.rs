@@ -1,0 +1,81 @@
+//! FlashInfer fused RMSNorm decomposition: one CTA per token row (source-
+//! derived F). FP32 math on the FMA pipe plus one rsqrt on the XU pipe per
+//! row (Table V: Math Pipe = FMA, XU).
+
+use super::{CtaResources, Decomposition, Paradigm, Pipe, Task};
+use crate::hw::GpuSpec;
+
+pub fn decompose(seq: u32, dim: u32, _gpu: &GpuSpec) -> Decomposition {
+    let d = dim as f64;
+    // x*x accumulate (1 FMA/elem), normalize multiply, weight multiply.
+    let fma_ops = 3.0 * d;
+    // rsqrt of the row mean (one MUFU per warp reduction lane).
+    let xu_ops = 32.0;
+    // loads: activation row (bf16) + weight row (bf16, highly L2-resident);
+    // stores: normalized row.
+    let bytes_load = 2.0 * d + 2.0 * d;
+    let bytes_store = 2.0 * d;
+    let task = Task {
+        tensor_ops: 0.0,
+        fma_ops,
+        xu_ops,
+        bytes_load,
+        bytes_store,
+        bytes_smem: 4.0 * 32.0, // warp-reduction scratch
+        cost_hint: fma_ops + 4.0 * bytes_load,
+    };
+    Decomposition {
+        tasks: vec![task; seq as usize],
+        paradigm: Paradigm::HardwareRR,
+        cta: CtaResources {
+            warps: (dim.div_ceil(1024)).clamp(1, 8),
+            smem_bytes: 1024,
+            regs_per_thread: 40,
+        },
+        tile: (1, dim, 1),
+        pipes: vec![Pipe::Fma, Pipe::Xu],
+        // rows in and out once + the (tiny, cached) weight vector
+        min_dram_bytes: 2.0 * 2.0 * seq as f64 * d + 2.0 * d,
+        pipeline_stages: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gpu_by_name;
+
+    #[test]
+    fn one_task_per_row() {
+        let gpu = gpu_by_name("A100").unwrap();
+        let d = decompose(4096, 8192, &gpu);
+        assert_eq!(d.num_tasks(), 4096);
+        assert_eq!(d.paradigm, Paradigm::HardwareRR);
+    }
+
+    #[test]
+    fn no_tensor_demand() {
+        let gpu = gpu_by_name("H100").unwrap();
+        let d = decompose(16, 1024, &gpu);
+        assert_eq!(d.total_tensor_ops(), 0.0);
+        assert!(d.tasks[0].fma_ops > 0.0);
+        assert!(d.tasks[0].xu_ops > 0.0);
+    }
+
+    #[test]
+    fn memory_dominated_profile() {
+        // RMSNorm is bandwidth-bound: bytes ~ 3*dim*2, flops ~ 3*dim
+        let gpu = gpu_by_name("A100").unwrap();
+        let d = decompose(1, 16384, &gpu);
+        let t = &d.tasks[0];
+        let ai = t.fma_ops / t.total_bytes();
+        assert!(ai < 1.0, "arithmetic intensity should be low: {ai}");
+    }
+
+    #[test]
+    fn high_occupancy_small_ctas() {
+        let gpu = gpu_by_name("A100").unwrap();
+        let d = decompose(64, 4096, &gpu);
+        assert!(d.cta.occupancy(&gpu) >= 8);
+    }
+}

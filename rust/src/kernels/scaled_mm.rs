@@ -1,0 +1,103 @@
+//! vLLM CUTLASS FP8 blockwise-quantized Scaled-MM decomposition (W8A8,
+//! §II-A). Tile structure mirrors the CUTLASS scaled-MM kernels [40]: FP8
+//! operands with per-128-block scales applied in an FP32 epilogue.
+//! Persistent (SW-scheduled) on Hopper+, hardware-scheduled before.
+
+use super::{CtaResources, Decomposition, DType, Paradigm, Pipe, Task};
+use crate::hw::{Arch, GpuSpec};
+
+const SCALE_BLOCK: u32 = 128;
+
+pub fn decompose(m: u32, n: u32, k: u32, gpu: &GpuSpec) -> Decomposition {
+    // FP8 kernels use the same macro-tile family as BF16 GEMM but with a
+    // deeper K stage (FP8 bytes are half as wide).
+    let (tm, tn) = super::gemm::select_tile(m, n, gpu);
+    let tk = if matches!(gpu.arch, Arch::Hopper | Arch::Blackwell) { 128 } else { 64 };
+    let grid_m = m.div_ceil(tm);
+    let grid_n = n.div_ceil(tn);
+    let eb = DType::Fp8.bytes();
+
+    let tensor_ops = 2.0 * tm as f64 * tn as f64 * k as f64;
+    // Epilogue: two scale multiplies + accumulate-convert per output element,
+    // plus per-k-block rescale of the accumulator tile.
+    let k_blocks = (k.div_ceil(SCALE_BLOCK)) as f64;
+    let fma_ops = 3.0 * tm as f64 * tn as f64 + k_blocks * tm as f64 * tn as f64 / 16.0;
+    let scale_bytes =
+        k_blocks * (tm as f64 / SCALE_BLOCK as f64 + tn as f64 / SCALE_BLOCK as f64).max(2.0) * 4.0;
+    let bytes_load = (tm as f64 + tn as f64) * k as f64 * eb + scale_bytes;
+    let bytes_store = tm as f64 * tn as f64 * 2.0;
+    let task = Task {
+        tensor_ops,
+        fma_ops,
+        xu_ops: 0.0,
+        bytes_load,
+        bytes_store,
+        bytes_smem: 2.0 * bytes_load,
+        cost_hint: tensor_ops,
+    };
+    let tasks = vec![task; (grid_m as usize) * (grid_n as usize)];
+
+    let persistent = matches!(gpu.arch, Arch::Hopper | Arch::Blackwell);
+    let max_stages: u32 = if persistent { 4 } else { 3 };
+    let stage_bytes = (tm + tn) * tk * eb as u32;
+    let stages = (gpu.smem_kb_sm * 1024 / stage_bytes).clamp(2, max_stages);
+    let cta = CtaResources {
+        warps: 8,
+        smem_bytes: stages * stage_bytes,
+        regs_per_thread: 224,
+    };
+
+    let min_dram_bytes = (m as f64 * k as f64 + n as f64 * k as f64) * eb
+        + m as f64 * n as f64 * 2.0
+        + (m as f64 + n as f64) * (k as f64 / SCALE_BLOCK as f64) * 4.0;
+
+    Decomposition {
+        tasks,
+        paradigm: if persistent { Paradigm::PersistentTile } else { Paradigm::HardwareRR },
+        cta,
+        tile: (tm, tn, tk),
+        pipes: vec![Pipe::Tensor],
+        min_dram_bytes,
+        pipeline_stages: stages,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gpu_by_name;
+
+    #[test]
+    fn fp8_loads_half_of_bf16() {
+        let gpu = gpu_by_name("H800").unwrap();
+        let f8 = decompose(4096, 4096, 4096, &gpu);
+        let bf = super::super::gemm::decompose(4096, 4096, 4096, DType::Bf16, &gpu);
+        // same tile family -> FP8 A/B panels are ~half the bytes
+        let ratio = f8.tasks[0].bytes_load / bf.tasks[0].bytes_load;
+        assert!(ratio < 0.6, "ratio {ratio}");
+    }
+
+    #[test]
+    fn persistent_on_hopper() {
+        let h = gpu_by_name("H20").unwrap();
+        assert_eq!(decompose(2048, 2048, 2048, &h).paradigm, Paradigm::PersistentTile);
+        let a = gpu_by_name("A100").unwrap();
+        assert_eq!(decompose(2048, 2048, 2048, &a).paradigm, Paradigm::HardwareRR);
+    }
+
+    #[test]
+    fn epilogue_fma_present() {
+        let gpu = gpu_by_name("H100").unwrap();
+        let d = decompose(1024, 1024, 2048, &gpu);
+        assert!(d.tasks[0].fma_ops > 0.0);
+        assert!(d.tasks[0].tensor_ops > 100.0 * d.tasks[0].fma_ops);
+    }
+
+    #[test]
+    fn smem_fits_all_gpus() {
+        for gpu in crate::hw::all_gpus() {
+            let d = decompose(8192, 8192, 8192, &gpu);
+            assert!(d.cta.smem_bytes <= gpu.smem_kb_sm * 1024, "{}", gpu.name);
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! FlashInfer SiLU-and-multiply decomposition (SwiGLU FFN activation):
+//! out[s, d] = silu(x[s, d]) * x[s, d + dim]. One CTA per token row,
+//! FP32 elementwise math (FMA pipe) + one exp per element (XU pipe).
+
+use super::{CtaResources, Decomposition, Paradigm, Pipe, Task};
+use crate::hw::GpuSpec;
+
+pub fn decompose(seq: u32, dim: u32, _gpu: &GpuSpec) -> Decomposition {
+    let d = dim as f64;
+    // silu(x) = x * sigmoid(x): negate+exp handled by XU, add/div/mul on FMA,
+    // plus the gating multiply — ~4 FP32 ops per output element.
+    let fma_ops = 4.0 * d;
+    let xu_ops = d; // one EX2 per element
+    let bytes_load = 2.0 * d * 2.0; // gate + up halves, bf16
+    let bytes_store = d * 2.0;
+    let task = Task {
+        tensor_ops: 0.0,
+        fma_ops,
+        xu_ops,
+        bytes_load,
+        bytes_store,
+        bytes_smem: 0.0,
+        cost_hint: fma_ops + 4.0 * bytes_load,
+    };
+    Decomposition {
+        tasks: vec![task; seq as usize],
+        paradigm: Paradigm::HardwareRR,
+        cta: CtaResources { warps: (dim.div_ceil(2048)).clamp(1, 8), smem_bytes: 0, regs_per_thread: 32 },
+        tile: (1, dim, 1),
+        pipes: vec![Pipe::Fma, Pipe::Xu],
+        // purely streaming: 2*dim read + dim written per row
+        min_dram_bytes: 3.0 * seq as f64 * d * 2.0,
+        pipeline_stages: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gpu_by_name;
+
+    #[test]
+    fn grid_and_demands() {
+        let gpu = gpu_by_name("L20").unwrap();
+        let d = decompose(1000, 13824, &gpu);
+        assert_eq!(d.num_tasks(), 1000);
+        let t = &d.tasks[0];
+        assert_eq!(t.tensor_ops, 0.0);
+        assert!((t.xu_ops - 13824.0).abs() < 1e-9);
+        // reads two halves, writes one
+        assert!((t.bytes_load / t.bytes_store - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn xu_heavier_than_rmsnorm() {
+        // SiLU&Mul exercises XU per element; RMSNorm only per row.
+        let gpu = gpu_by_name("A100").unwrap();
+        let s = decompose(64, 4096, &gpu);
+        let r = super::super::rmsnorm::decompose(64, 4096, &gpu);
+        assert!(s.tasks[0].xu_ops > 50.0 * r.tasks[0].xu_ops);
+    }
+}

@@ -1,0 +1,28 @@
+//! # SynPerf (PipeWeave)
+//!
+//! A hybrid analytical-ML framework for GPU performance prediction,
+//! reproducing "PIPEWEAVE: Synergizing Analytical and Learning Models for
+//! Unified GPU Performance Prediction" (ISCA 2026) as a three-layer
+//! rust + JAX + Pallas system (AOT via PJRT).
+//!
+//! Pipeline: [`kernels`] (Kernel Decomposer) -> [`sched`] (Scheduling
+//! Simulator) -> [`features`] (Feature Analyzer) -> the Performance
+//! Estimator MLP executed through [`runtime`] (PJRT) / [`mlp`].
+//! Ground truth comes from the [`oracle`] testbed (the hardware
+//! substitution documented in DESIGN.md §2).
+
+pub mod coordinator;
+pub mod dataset;
+pub mod autotune;
+pub mod baselines;
+pub mod e2e;
+pub mod experiments;
+pub mod features;
+pub mod forest;
+pub mod hw;
+pub mod kernels;
+pub mod mlp;
+pub mod oracle;
+pub mod runtime;
+pub mod sched;
+pub mod util;

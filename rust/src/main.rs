@@ -1,0 +1,256 @@
+//! SynPerf CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   dataset     build + cache a per-kernel profiling dataset
+//!   train       train a per-kernel MLP (MAPE or P80 pinball loss)
+//!   predict     one-shot kernel latency prediction
+//!   e2e         end-to-end LLM inference prediction vs ground truth
+//!   serve       run the batching prediction service on a request stream
+//!   tune        model-guided Fused-MoE autotuning (§VII)
+//!   experiment  regenerate a paper table/figure (see DESIGN.md §5)
+
+use anyhow::{bail, Context, Result};
+use synperf::dataset;
+use synperf::e2e::{llm, predict as e2e_predict, trace, workload};
+use synperf::experiments::{self, Lab, ModelFlavor, Scale};
+use synperf::hw;
+use synperf::kernels::{DType, KernelConfig, KernelKind};
+use synperf::util::argp::Args;
+
+fn usage() -> &'static str {
+    "synperf <subcommand> [flags]\n\
+     \n\
+     subcommands:\n\
+       dataset    --kernel <k> [--n 420] [--out runs/data/<k>.csv] [--scale fast|normal|full]\n\
+       train      --kernel <k> [--p80] [--scale ...]\n\
+       predict    --kernel gemm --gpu A100 --m 4096 --n 4096 --k 4096\n\
+       e2e        --model qwen2.5-14b --gpu H100 [--tp 1] [--pp 1] [--workload arxiv] [--batch 8]\n\
+       serve      [--requests 512] [--gpu A100]\n\
+       tune       --gpu A40 [--n 20]\n\
+       experiment <table1|table7|fig3|fig4|fig5|table8|scaledmm|fig6|fig7|table9|fig8|table10|all>\n\
+     \n\
+     kernels: gemm scaled_mm attention rmsnorm silu_mul fused_moe"
+}
+
+fn scale_of(args: &Args) -> Scale {
+    match args.str_or("scale", "normal").as_str() {
+        "fast" => Scale::Fast,
+        "full" => Scale::Full,
+        _ => Scale::Normal,
+    }
+}
+
+fn kernel_of(args: &Args) -> Result<KernelKind> {
+    let name = args.req("kernel")?;
+    KernelKind::from_name(name).with_context(|| format!("unknown kernel {name:?}"))
+}
+
+fn gpu_of(args: &Args, default: &str) -> Result<hw::GpuSpec> {
+    let name = args.str_or("gpu", default);
+    hw::gpu_by_name(&name).with_context(|| format!("unknown GPU {name:?} (see Table VI)"))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let Ok((sub, rest)) = args.subcommand() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    match sub {
+        "dataset" => cmd_dataset(&rest),
+        "train" => cmd_train(&rest),
+        "predict" => cmd_predict(&rest),
+        "e2e" => cmd_e2e(&rest),
+        "serve" => cmd_serve(&rest),
+        "tune" => cmd_tune(&rest),
+        "experiment" => cmd_experiment(&rest),
+        "help" | "--help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{}", usage()),
+    }
+}
+
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let kind = kernel_of(args)?;
+    let scale = scale_of(args);
+    let n = args.usize_or("n", scale.n_configs())?;
+    let out = args.str_or("out", &format!("runs/data/{}_{}.csv", kind.name(), scale.tag()));
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    eprintln!("building {} dataset: {} configs x 11 GPUs...", kind.name(), n);
+    let t0 = std::time::Instant::now();
+    let ds = dataset::build(kind, &hw::all_gpus(), n, 0x5EED_CAFE, threads);
+    dataset::save(&ds, &out)?;
+    println!("wrote {} samples to {} in {:?}", ds.len(), out, t0.elapsed());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let kind = kernel_of(args)?;
+    let lab = Lab::new(scale_of(args))?;
+    let flavor = if args.has("p80") { ModelFlavor::P80 } else { ModelFlavor::SynPerf };
+    let t0 = std::time::Instant::now();
+    let _pred = lab.model(kind, flavor)?;
+    println!(
+        "model {} ({:?}) ready in {:?} (cached under runs/models)",
+        kind.name(),
+        flavor,
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let kind = kernel_of(args)?;
+    let gpu = gpu_of(args, "A100")?;
+    let cfg = match kind {
+        KernelKind::Gemm => KernelConfig::Gemm {
+            m: args.usize_or("m", 4096)? as u32,
+            n: args.usize_or("n", 4096)? as u32,
+            k: args.usize_or("k", 4096)? as u32,
+            dtype: DType::Bf16,
+        },
+        KernelKind::RmsNorm => KernelConfig::RmsNorm {
+            seq: args.usize_or("seq", 4096)? as u32,
+            dim: args.usize_or("dim", 8192)? as u32,
+        },
+        KernelKind::SiluMul => KernelConfig::SiluMul {
+            seq: args.usize_or("seq", 4096)? as u32,
+            dim: args.usize_or("dim", 13824)? as u32,
+        },
+        other => bail!("predict CLI supports gemm/rmsnorm/silu_mul (got {})", other.name()),
+    };
+    let lab = Lab::new(scale_of(args))?;
+    let pred = lab.model(kind, ModelFlavor::SynPerf)?;
+    let s = dataset::make_sample(&cfg, &gpu, 0);
+    let eff = pred.predict_eff(&[s.x])?[0];
+    println!("kernel:        {} on {}", kind.name(), gpu.name);
+    println!("theory roof:   {:.3} us", s.theory_sec * 1e6);
+    println!("pred eff:      {:.3}", eff);
+    println!("pred latency:  {:.3} us", s.theory_sec / eff * 1e6);
+    println!("oracle actual: {:.3} us (testbed ground truth)", s.latency_sec * 1e6);
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let lab = Lab::new(scale_of(args))?;
+    let model_name = args.str_or("model", "qwen2.5-14b");
+    let llm_cfg =
+        llm::by_name(&model_name).with_context(|| format!("unknown model {model_name:?}"))?;
+    let gpu = gpu_of(args, "A100")?;
+    let tp = args.usize_or("tp", 1)? as u32;
+    let pp = args.usize_or("pp", 1)? as u32;
+    let batch = args.usize_or("batch", 8)?;
+    let wk = match args.str_or("workload", "arxiv").as_str() {
+        "splitwise" => workload::WorkloadKind::Splitwise,
+        _ => workload::WorkloadKind::Arxiv,
+    };
+    let mut rng = synperf::util::rng::Rng::new(args.u64_or("seed", 7)?);
+    let reqs = workload::sample_batch(wk, batch, &mut rng);
+    let tr = trace::build_trace(&llm_cfg, tp, pp, &reqs);
+    let models = lab.model_set()?;
+    let comm = lab.comm(&gpu);
+    let t = e2e_predict::eval_trace(&tr, &gpu, tp, &models, &comm, 11)?;
+    println!("{} on {} (TP={tp}, PP={pp}), {}_{batch}:", llm_cfg.name, gpu.name, wk.name());
+    println!("  ground truth: {:.1} ms", t.actual * 1e3);
+    for (name, v) in [
+        ("SynPerf", t.synperf),
+        ("Roofline", t.roofline),
+        ("Linear", t.linear),
+        ("Habitat", t.habitat),
+        ("Neusight", t.neusight),
+    ] {
+        println!(
+            "  {name:<9} {:.1} ms  (err {:+.1}%)",
+            v * 1e3,
+            100.0 * (v - t.actual) / t.actual
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use synperf::coordinator::{PredictionService, ServiceConfig};
+    let n = args.usize_or("requests", 512)?;
+    let gpu = gpu_of(args, "A100")?;
+    let scale = scale_of(args);
+    let svc = PredictionService::spawn(
+        move || {
+            let lab = Lab::new(scale).expect("artifacts present");
+            let mut m = std::collections::HashMap::new();
+            for kind in [KernelKind::Gemm, KernelKind::RmsNorm, KernelKind::SiluMul] {
+                if let Ok(p) = lab.model(kind, ModelFlavor::SynPerf) {
+                    m.insert(kind, p);
+                }
+            }
+            m
+        },
+        ServiceConfig::default(),
+    );
+    let mut rng = synperf::util::rng::Rng::new(3);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let cfg = KernelConfig::Gemm {
+                m: rng.log_range_u32(16, 32768),
+                n: rng.log_range_u32(384, 32768),
+                k: rng.log_range_u32(256, 8192),
+                dtype: DType::Bf16,
+            };
+            svc.submit(cfg, gpu.clone())
+        })
+        .collect();
+    let mut total = 0.0;
+    for rx in rxs {
+        total += rx.recv()?;
+    }
+    let wall = t0.elapsed();
+    let snap = svc.metrics.snapshot();
+    println!(
+        "served {n} predictions in {wall:?} ({:.0} req/s)",
+        n as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "mean batch {:.1}, batch p50 {:.0} us, p99 {:.0} us",
+        snap.mean_batch, snap.p50_us, snap.p99_us
+    );
+    println!("sum of predicted latencies: {:.3} s", total);
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let gpu = gpu_of(args, "A40")?;
+    let n = args.usize_or("n", 20)?;
+    let configs = dataset::sample_configs(KernelKind::FusedMoe, n, 0x7A7E);
+    let mut speedups = Vec::new();
+    for (i, cfg) in configs.iter().enumerate() {
+        let r = synperf::autotune::tune(cfg, &gpu, 42 + i as u64)?;
+        println!(
+            "cfg {i:>3}: default {:.1} us -> best {:.1} us  ({:.2}x)  best = {:?}",
+            r.default_sec * 1e6,
+            r.best_sec * 1e6,
+            r.speedup(),
+            r.best_cfg
+        );
+        speedups.push(r.speedup());
+    }
+    println!(
+        "geo-mean speedup on {}: {:.2}x",
+        gpu.name,
+        synperf::util::stats::geomean(&speedups)
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let Some(id) = args.positional.first() else {
+        bail!("experiment id required (see DESIGN.md §5)");
+    };
+    let lab = Lab::new(scale_of(args))?;
+    let t0 = std::time::Instant::now();
+    experiments::run(&lab, id)?;
+    eprintln!("[{} done in {:?}]", id, t0.elapsed());
+    Ok(())
+}

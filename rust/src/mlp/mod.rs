@@ -1,0 +1,20 @@
+//! Performance Estimator (paper §IV-D / §V-C): the per-kernel-category MLP
+//! that maps the Table-IV analytical feature vector to predicted *execution
+//! efficiency*, trained with MAPE loss (accuracy model) or pinball loss
+//! τ=0.8 (the §VII "potential performance ceiling" model).
+//!
+//! The MLP itself is the AOT-compiled JAX/Pallas artifact executed through
+//! [`crate::runtime`]; this module owns standardization, the rust-side
+//! training loop (minibatching, shuffling, early stopping), weight
+//! persistence, and a pure-rust mirror of the forward pass used to
+//! cross-check PJRT numerics.
+
+pub mod native;
+pub mod predictor;
+pub mod scaler;
+pub mod train;
+pub mod weights;
+
+pub use predictor::Predictor;
+pub use scaler::Scaler;
+pub use train::{train_model, TrainConfig, TrainedModel};

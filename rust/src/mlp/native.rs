@@ -1,0 +1,120 @@
+//! Pure-rust mirror of the Layer-2 inference forward pass (dense -> ReLU ->
+//! BatchNorm(running stats) x3 -> dense -> sigmoid), operating on the same
+//! flat theta/bn blobs the artifacts use.
+//!
+//! Purpose: (1) cross-check PJRT numerics in integration tests, (2) a
+//! documented fallback when artifacts are unavailable. The PJRT path stays
+//! the production route (the AOT'd Pallas kernels are the deliverable).
+
+use crate::features::FEATURE_DIM;
+
+/// Layer shapes — must mirror python/compile/model.py::LAYERS.
+pub const LAYERS: [(usize, usize); 4] =
+    [(FEATURE_DIM, 256), (256, 128), (128, 64), (64, 1)];
+const BN_EPS: f32 = 1e-5;
+
+/// theta length implied by LAYERS (w + b per layer, gamma/beta on hidden).
+pub fn theta_size() -> usize {
+    let mut n = 0;
+    for (i, (fi, fo)) in LAYERS.iter().enumerate() {
+        n += fi * fo + fo;
+        if i < LAYERS.len() - 1 {
+            n += 2 * fo;
+        }
+    }
+    n
+}
+
+/// bn state length (mu + var per hidden layer).
+pub fn bn_size() -> usize {
+    LAYERS[..LAYERS.len() - 1].iter().map(|(_, fo)| 2 * fo).sum()
+}
+
+/// Inference forward for a batch of standardized feature rows.
+pub fn forward(theta: &[f32], bn: &[f32], xs: &[[f32; FEATURE_DIM]]) -> Vec<f32> {
+    assert_eq!(theta.len(), theta_size(), "theta blob size mismatch");
+    assert_eq!(bn.len(), bn_size(), "bn blob size mismatch");
+    let mut out = Vec::with_capacity(xs.len());
+    let mut h = vec![0f32; 256];
+    let mut h2 = vec![0f32; 256];
+    for x in xs {
+        let mut cur: Vec<f32> = x.to_vec();
+        let mut toff = 0usize;
+        let mut boff = 0usize;
+        for (li, &(fi, fo)) in LAYERS.iter().enumerate() {
+            let w = &theta[toff..toff + fi * fo];
+            toff += fi * fo;
+            let b = &theta[toff..toff + fo];
+            toff += fo;
+            h.clear();
+            h.resize(fo, 0.0);
+            // dense: cur[fi] @ w[fi,fo] + b
+            for (i, &xi) in cur.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &w[i * fo..(i + 1) * fo];
+                for (hj, wj) in h.iter_mut().zip(row) {
+                    *hj += xi * wj;
+                }
+            }
+            for (hj, bj) in h.iter_mut().zip(b) {
+                *hj += bj;
+            }
+            if li < LAYERS.len() - 1 {
+                let gamma = &theta[toff..toff + fo];
+                toff += fo;
+                let beta = &theta[toff..toff + fo];
+                toff += fo;
+                let mu = &bn[boff..boff + fo];
+                let var = &bn[boff + fo..boff + 2 * fo];
+                boff += 2 * fo;
+                h2.clear();
+                h2.resize(fo, 0.0);
+                for j in 0..fo {
+                    let r = h[j].max(0.0); // ReLU
+                    let z = (r - mu[j]) / (var[j] + BN_EPS).sqrt();
+                    h2[j] = z * gamma[j] + beta[j];
+                }
+                std::mem::swap(&mut cur, &mut h2);
+                cur.truncate(fo);
+            } else {
+                out.push(1.0 / (1.0 + (-h[0]).exp())); // sigmoid head
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_manifest_convention() {
+        // 32*256+256 + 2*256 | 256*128+128 + 2*128 | 128*64+64 + 2*64 | 64+1
+        assert_eq!(theta_size(), 8192 + 256 + 512 + 32768 + 128 + 256 + 8192 + 64 + 128 + 64 + 1);
+        assert_eq!(bn_size(), 2 * (256 + 128 + 64));
+    }
+
+    #[test]
+    fn forward_outputs_in_unit_interval() {
+        let theta: Vec<f32> = (0..theta_size())
+            .map(|i| ((i * 31 % 97) as f32 / 97.0 - 0.5) * 0.1)
+            .collect();
+        let mut bn = vec![0f32; bn_size()];
+        // var slots must be positive: layout is mu,var per layer
+        let mut off = 0;
+        for (_, fo) in &LAYERS[..3] {
+            for v in &mut bn[off + fo..off + 2 * fo] {
+                *v = 1.0;
+            }
+            off += 2 * fo;
+        }
+        let xs = vec![[0.3f32; FEATURE_DIM], [-1.0; FEATURE_DIM]];
+        let ys = forward(&theta, &bn, &xs);
+        assert_eq!(ys.len(), 2);
+        assert!(ys.iter().all(|y| *y > 0.0 && *y < 1.0));
+        assert_ne!(ys[0], ys[1]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Inference-side wrapper: standardize features, run the AOT'd forward
+//! artifact (largest batch variant that fits, wrap-padded), convert
+//! efficiency back to latency via the theoretical roof.
+
+use crate::features::{FeatureSet, FEATURE_DIM};
+use crate::mlp::weights::ModelWeights;
+use crate::runtime::{lit_f32, to_f32, Engine, Executable};
+use anyhow::Result;
+
+pub struct Predictor {
+    weights: ModelWeights,
+    /// (batch, executable), descending batch size.
+    fwds: Vec<(usize, Executable)>,
+    /// theta/bn encoded once (§Perf: saves ~200KB of literal re-encoding
+    /// per forward call — dominant on the batch-1 path).
+    theta_lit: xla::Literal,
+    bn_lit: xla::Literal,
+}
+
+impl Predictor {
+    pub fn new(engine: &Engine, weights: ModelWeights) -> Result<Predictor> {
+        let mut batches = engine.manifest.fwd_batches.clone();
+        batches.sort_unstable_by(|a, b| b.cmp(a));
+        let mut fwds = Vec::new();
+        for b in batches {
+            fwds.push((b, engine.load(&format!("mlp_fwd_b{b}.hlo.txt"))?));
+        }
+        let theta_lit = lit_f32(&weights.theta, &[weights.theta.len() as i64])?;
+        let bn_lit = lit_f32(&weights.bn, &[weights.bn.len() as i64])?;
+        Ok(Predictor { weights, fwds, theta_lit, bn_lit })
+    }
+
+    pub fn from_file(engine: &Engine, path: &str) -> Result<Predictor> {
+        Predictor::new(engine, crate::mlp::weights::load(path)?)
+    }
+
+    /// Predict execution efficiency for a batch of raw feature rows.
+    pub fn predict_eff(&self, xs: &[[f32; FEATURE_DIM]]) -> Result<Vec<f64>> {
+        let zs = self.weights.scaler.transform_all(xs);
+        let mut out = Vec::with_capacity(xs.len());
+        let mut i = 0usize;
+        while i < zs.len() {
+            let remaining = zs.len() - i;
+            // smallest variant that covers the remainder, else the largest
+            let (b, exe) = self
+                .fwds
+                .iter()
+                .rev()
+                .find(|(b, _)| *b >= remaining)
+                .unwrap_or(&self.fwds[0]);
+            let take = remaining.min(*b);
+            let mut flat = Vec::with_capacity(b * FEATURE_DIM);
+            for r in 0..*b {
+                flat.extend_from_slice(&zs[i + r.min(take - 1)]);
+            }
+            let x_lit = lit_f32(&flat, &[*b as i64, FEATURE_DIM as i64])?;
+            let res = exe.run_ref(&[&self.theta_lit, &self.bn_lit, &x_lit])?;
+            let eff = to_f32(&res[0])?;
+            for r in 0..take {
+                // floor at 0.5%: efficiencies below that are launch-overhead
+                // regime noise; prevents saturated-sigmoid blowups on
+                // out-of-distribution inputs
+                out.push((eff[r] as f64).clamp(5e-3, 0.9999));
+            }
+            i += take;
+        }
+        Ok(out)
+    }
+
+    /// Latency prediction: theoretical roof divided by predicted efficiency
+    /// (§V-C "final latency prediction").
+    pub fn predict_latency(&self, feats: &[FeatureSet], gpu: &crate::hw::GpuSpec) -> Result<Vec<f64>> {
+        let xs: Vec<[f32; FEATURE_DIM]> = feats.iter().map(|f| f.to_model_input(gpu)).collect();
+        let effs = self.predict_eff(&xs)?;
+        Ok(feats.iter().zip(effs).map(|(f, e)| f.theory_sec / e).collect())
+    }
+
+    /// Native (pure-rust) forward for cross-checking the PJRT path.
+    pub fn predict_eff_native(&self, xs: &[[f32; FEATURE_DIM]]) -> Vec<f64> {
+        let zs = self.weights.scaler.transform_all(xs);
+        crate::mlp::native::forward(&self.weights.theta, &self.weights.bn, &zs)
+            .into_iter()
+            .map(|v| (v as f64).clamp(1e-3, 0.9999))
+            .collect()
+    }
+
+    pub fn weights(&self) -> &ModelWeights {
+        &self.weights
+    }
+}

@@ -1,0 +1,93 @@
+//! Feature standardization fitted on the training split. The MLP sees
+//! z-scored features; the scaler rides along with the weights so unseen-GPU
+//! evaluation uses the training-set statistics.
+
+use crate::features::FEATURE_DIM;
+
+#[derive(Debug, Clone)]
+pub struct Scaler {
+    pub mean: [f32; FEATURE_DIM],
+    pub std: [f32; FEATURE_DIM],
+}
+
+impl Scaler {
+    pub fn identity() -> Scaler {
+        Scaler { mean: [0.0; FEATURE_DIM], std: [1.0; FEATURE_DIM] }
+    }
+
+    pub fn fit(xs: &[[f32; FEATURE_DIM]]) -> Scaler {
+        assert!(!xs.is_empty());
+        let n = xs.len() as f64;
+        let mut mean = [0f64; FEATURE_DIM];
+        for x in xs {
+            for (m, v) in mean.iter_mut().zip(x) {
+                *m += *v as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = [0f64; FEATURE_DIM];
+        for x in xs {
+            for i in 0..FEATURE_DIM {
+                let d = x[i] as f64 - mean[i];
+                var[i] += d * d;
+            }
+        }
+        let mut out = Scaler::identity();
+        for i in 0..FEATURE_DIM {
+            out.mean[i] = mean[i] as f32;
+            out.std[i] = (var[i] / n).sqrt().max(1e-6) as f32;
+        }
+        out
+    }
+
+    pub fn transform(&self, x: &[f32; FEATURE_DIM]) -> [f32; FEATURE_DIM] {
+        let mut out = [0f32; FEATURE_DIM];
+        for i in 0..FEATURE_DIM {
+            // clamp to +-4 sigma: unseen architectures land outside the
+            // training range on some descriptors; saturating instead of
+            // extrapolating keeps the MLP on its learned manifold
+            out[i] = ((x[i] - self.mean[i]) / self.std[i]).clamp(-4.0, 4.0);
+        }
+        out
+    }
+
+    pub fn transform_all(&self, xs: &[[f32; FEATURE_DIM]]) -> Vec<[f32; FEATURE_DIM]> {
+        xs.iter().map(|x| self.transform(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_mean_unit_std_after_transform() {
+        let xs: Vec<[f32; FEATURE_DIM]> = (0..100)
+            .map(|i| {
+                let mut x = [0f32; FEATURE_DIM];
+                for (j, v) in x.iter_mut().enumerate() {
+                    *v = ((i * (j + 1)) % 97) as f32 + j as f32;
+                }
+                x
+            })
+            .collect();
+        let s = Scaler::fit(&xs);
+        let t = s.transform_all(&xs);
+        for j in 0..FEATURE_DIM {
+            let mean: f32 = t.iter().map(|x| x[j]).sum::<f32>() / t.len() as f32;
+            let var: f32 = t.iter().map(|x| (x[j] - mean).powi(2)).sum::<f32>() / t.len() as f32;
+            assert!(mean.abs() < 1e-4, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn constant_column_safe() {
+        let xs = vec![[1.0f32; FEATURE_DIM]; 10];
+        let s = Scaler::fit(&xs);
+        let t = s.transform(&xs[0]);
+        assert!(t.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,202 @@
+//! Rust-side training loop driving the AOT-compiled train-step executable
+//! (Layer-2 JAX + Layer-1 Pallas, via PJRT). Implements the paper's §V-C
+//! recipe: AdamW (inside the artifact), MAPE (or pinball τ=0.8) loss,
+//! shuffled minibatches, early stopping on validation loss.
+
+use crate::features::FEATURE_DIM;
+use crate::mlp::scaler::Scaler;
+use crate::mlp::weights::ModelWeights;
+use crate::runtime::{lit_f32, lit_key, lit_scalar, to_f32, Engine};
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Max optimizer steps.
+    pub max_steps: usize,
+    /// Validate every N steps.
+    pub val_every: usize,
+    /// Early-stop after this many validations without improvement.
+    pub patience: usize,
+    /// None = MAPE loss; Some(tau) = pinball quantile loss (P80 ceiling).
+    pub tau: Option<f64>,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            max_steps: 1500,
+            val_every: 100,
+            patience: 4,
+            tau: None,
+            seed: 0xBEEF,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainedModel {
+    pub weights: ModelWeights,
+    pub final_val_loss: f64,
+    pub steps_run: usize,
+}
+
+/// Train one per-kernel-category MLP on (features, efficiency) pairs.
+pub fn train_model(
+    engine: &Engine,
+    xs: &[[f32; FEATURE_DIM]],
+    ys: &[f64],
+    cfg: &TrainConfig,
+) -> Result<TrainedModel> {
+    anyhow::ensure!(xs.len() == ys.len() && !xs.is_empty(), "bad training set");
+    let m = &engine.manifest;
+    let b = m.train_batch;
+    let loss_name = if cfg.tau.is_some() { "p80" } else { "mape" };
+    let train_exe = engine
+        .load(&format!("mlp_train_{loss_name}_b{b}.hlo.txt"))
+        .context("load train artifact")?;
+    let fwd_exe = engine.load(&format!("mlp_fwd_b{b}.hlo.txt"))?;
+
+    // standardize on the full provided training set
+    let scaler = Scaler::fit(xs);
+    let zs = scaler.transform_all(xs);
+
+    // 90/10 train/val split (deterministic shuffle)
+    let mut rng = Rng::new(cfg.seed);
+    let mut idx: Vec<usize> = (0..zs.len()).collect();
+    rng.shuffle(&mut idx);
+    let n_val = (zs.len() / 10).clamp(1, 4096);
+    let (val_idx, train_idx) = idx.split_at(n_val);
+
+    let mut theta = engine.read_f32_blob("init_theta.bin")?;
+    let mut bn = engine.read_f32_blob("init_bn.bin")?;
+    let mut mom = vec![0f32; m.theta_size];
+    let mut vel = vec![0f32; m.theta_size];
+
+    // pre-pack validation batches (wrap-padded)
+    let val_batches = pack_batches(&zs, ys, val_idx, b);
+
+    let mut best_val = f64::MAX;
+    let mut best = (theta.clone(), bn.clone());
+    let mut bad_rounds = 0usize;
+    let mut cursor = 0usize;
+    let mut order: Vec<usize> = train_idx.to_vec();
+    rng.shuffle(&mut order);
+    let mut steps_run = 0usize;
+
+    for step in 1..=cfg.max_steps {
+        // next minibatch (reshuffle at epoch boundary)
+        let mut bx = Vec::with_capacity(b * FEATURE_DIM);
+        let mut by = Vec::with_capacity(b);
+        for _ in 0..b {
+            if cursor >= order.len() {
+                cursor = 0;
+                rng.shuffle(&mut order);
+            }
+            let i = order[cursor];
+            cursor += 1;
+            bx.extend_from_slice(&zs[i]);
+            by.push(ys[i] as f32);
+        }
+        let out = train_exe.run(&[
+            lit_f32(&theta, &[theta.len() as i64])?,
+            lit_f32(&mom, &[mom.len() as i64])?,
+            lit_f32(&vel, &[vel.len() as i64])?,
+            lit_f32(&bn, &[bn.len() as i64])?,
+            lit_f32(&bx, &[b as i64, FEATURE_DIM as i64])?,
+            lit_f32(&by, &[b as i64])?,
+            lit_scalar(step as f32),
+            lit_key(cfg.seed ^ (step as u64).wrapping_mul(0x9E3779B9))?,
+        ])?;
+        theta = to_f32(&out[0])?;
+        mom = to_f32(&out[1])?;
+        vel = to_f32(&out[2])?;
+        bn = to_f32(&out[3])?;
+        steps_run = step;
+
+        if step % cfg.val_every == 0 || step == cfg.max_steps {
+            let val = eval_loss(&fwd_exe, &theta, &bn, &val_batches, b, cfg.tau)?;
+            if cfg.verbose {
+                let train_loss = to_f32(&out[4])?[0];
+                eprintln!("  step {step:>5}  train {train_loss:.4}  val {val:.4}");
+            }
+            if val < best_val - 1e-5 {
+                best_val = val;
+                best = (theta.clone(), bn.clone());
+                bad_rounds = 0;
+            } else {
+                bad_rounds += 1;
+                if bad_rounds >= cfg.patience {
+                    break;
+                }
+            }
+        }
+    }
+
+    Ok(TrainedModel {
+        weights: ModelWeights { theta: best.0, bn: best.1, scaler },
+        final_val_loss: best_val,
+        steps_run,
+    })
+}
+
+type Batch = (Vec<f32>, Vec<f32>, usize); // x, y, valid_rows
+
+fn pack_batches(
+    zs: &[[f32; FEATURE_DIM]],
+    ys: &[f64],
+    idx: &[usize],
+    b: usize,
+) -> Vec<Batch> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < idx.len() {
+        let mut bx = Vec::with_capacity(b * FEATURE_DIM);
+        let mut by = Vec::with_capacity(b);
+        let valid = (idx.len() - i).min(b);
+        for r in 0..b {
+            let j = idx[(i + r) % idx.len().max(1)].min(zs.len() - 1);
+            let j = if r < valid { idx[i + r] } else { j };
+            bx.extend_from_slice(&zs[j]);
+            by.push(ys[j] as f32);
+        }
+        out.push((bx, by, valid));
+        i += b;
+    }
+    out
+}
+
+fn eval_loss(
+    fwd: &crate::runtime::Executable,
+    theta: &[f32],
+    bn: &[f32],
+    batches: &[Batch],
+    b: usize,
+    tau: Option<f64>,
+) -> Result<f64> {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for (bx, by, valid) in batches {
+        let out = fwd.run(&[
+            lit_f32(theta, &[theta.len() as i64])?,
+            lit_f32(bn, &[bn.len() as i64])?,
+            lit_f32(bx, &[b as i64, FEATURE_DIM as i64])?,
+        ])?;
+        let pred = to_f32(&out[0])?;
+        for r in 0..*valid {
+            let (p, y) = (pred[r] as f64, by[r] as f64);
+            total += match tau {
+                None => (p - y).abs() / y.max(1e-4),
+                Some(t) => {
+                    let d = y - p;
+                    (t * d).max((t - 1.0) * d)
+                }
+            };
+            count += 1;
+        }
+    }
+    Ok(total / count.max(1) as f64)
+}

@@ -1,0 +1,102 @@
+//! Trained-model persistence: a tiny self-describing binary format holding
+//! the flat theta/bn blobs plus the feature scaler (no serde available in
+//! the offline vendor set).
+
+use crate::features::FEATURE_DIM;
+use crate::mlp::scaler::Scaler;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SYNPERF1";
+
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub theta: Vec<f32>,
+    pub bn: Vec<f32>,
+    pub scaler: Scaler,
+}
+
+fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    w.write_all(&(data.len() as u32).to_le_bytes())?;
+    for v in data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > 100_000_000 {
+        bail!("implausible blob length {n}");
+    }
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+pub fn save<P: AsRef<Path>>(w: &ModelWeights, path: P) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("create {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    write_f32s(&mut f, &w.theta)?;
+    write_f32s(&mut f, &w.bn)?;
+    write_f32s(&mut f, &w.scaler.mean)?;
+    write_f32s(&mut f, &w.scaler.std)?;
+    Ok(())
+}
+
+pub fn load<P: AsRef<Path>>(path: P) -> Result<ModelWeights> {
+    let mut f = std::fs::File::open(&path)
+        .with_context(|| format!("open model weights {:?}", path.as_ref()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic in {:?}", path.as_ref());
+    }
+    let theta = read_f32s(&mut f)?;
+    let bn = read_f32s(&mut f)?;
+    let mean = read_f32s(&mut f)?;
+    let std = read_f32s(&mut f)?;
+    if mean.len() != FEATURE_DIM || std.len() != FEATURE_DIM {
+        bail!("scaler width mismatch");
+    }
+    let mut scaler = Scaler::identity();
+    scaler.mean.copy_from_slice(&mean);
+    scaler.std.copy_from_slice(&std);
+    Ok(ModelWeights { theta, bn, scaler })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let w = ModelWeights {
+            theta: (0..100).map(|i| i as f32 * 0.5).collect(),
+            bn: vec![1.0; 8],
+            scaler: Scaler::identity(),
+        };
+        let path = std::env::temp_dir().join("synperf_w_test.bin");
+        save(&w, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(w.theta, back.theta);
+        assert_eq!(w.bn, back.bn);
+        assert_eq!(w.scaler.mean, back.scaler.mean);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("synperf_w_bad.bin");
+        std::fs::write(&path, b"NOTMAGIC123").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,192 @@
+//! Architecture-specific efficiency ("friction") curves for the oracle —
+//! the micro-architectural realities the analytical model deliberately does
+//! NOT encode (§IV-C "we do not construct rigid analytical models for …
+//! instruction-level concurrency or architecture-specific mechanisms"), and
+//! which the Performance Estimator MLP therefore has to learn.
+//!
+//! Calibration rationale (not fitted to any profile — chosen to reproduce
+//! the qualitative behaviours the paper reports):
+//!  * wider MXUs are harder to saturate -> achievable fraction falls with
+//!    per-SM tensor throughput (H800's 4096 ops/clk is "exceedingly
+//!    difficult to saturate", §VI-C, while the H20 runs near its roof);
+//!  * small tiles waste MXU issue slots (wave quantization inside the SM);
+//!  * deeper software pipelines overlap better, but pre-Hopper parts pay
+//!    register pressure beyond 3 stages (Triton/A40 behaviour in §VII);
+//!  * Hopper prefers 8-warp cooperative groups, older parts 4.
+
+use crate::hw::{Arch, GpuSpec};
+use crate::kernels::KernelKind;
+
+/// Fraction of residual (non-dominant) pipe time that leaks into the
+/// critical path — imperfect dual-issue across heterogeneous pipes.
+pub const PIPE_RESIDUE: f64 = 0.20;
+
+/// Achievable fraction of FMA / XU pipe peak.
+pub const FMA_FRICTION: f64 = 0.82;
+pub const XU_FRICTION: f64 = 0.78;
+
+/// Per-task fixed cost: CTA launch/drain, prologue, epilogue barriers.
+pub const TASK_PROLOGUE_CYCLES: f64 = 900.0;
+
+/// Per-task execution-time jitter (uniform ±).
+pub const TASK_JITTER: f64 = 0.03;
+
+/// Lognormal sigma of the run-to-run measurement noise.
+pub const MEASUREMENT_NOISE_SIGMA: f64 = 0.02;
+
+/// Achievable fraction of tensor-pipe peak for a tiled MMA kernel.
+pub fn tensor_friction(
+    gpu: &GpuSpec,
+    kind: KernelKind,
+    tile: (u32, u32, u32),
+    stages: u32,
+    warps: u32,
+) -> f64 {
+    // base: wider MXUs are harder to feed/saturate
+    let width_penalty = (gpu.tensor_ops_clk_sm / 512.0).log2().max(0.0);
+    let mut f = 0.97 - 0.055 * width_penalty;
+
+    // tile (MXU) utilization: edge/issue losses for small tiles
+    let (tm, tn, tk) = tile;
+    let grain = match gpu.arch {
+        Arch::Hopper => 8.0,
+        Arch::Blackwell => 10.0,
+        Arch::Ampere => 12.0,
+        Arch::Ada => 14.0,
+    };
+    f *= tm as f64 / (tm as f64 + grain);
+    f *= tn as f64 / (tn as f64 + grain);
+    f *= tk as f64 / (tk as f64 + 4.0);
+
+    // software pipelining depth
+    let stage_gain = 1.0 - 0.45 / (stages.max(1) as f64 + 0.5);
+    f *= stage_gain / (1.0 - 0.45 / 4.5); // normalized so 4 stages = 1.0
+    // register pressure beyond 3 stages on pre-Hopper parts (spills);
+    // Ampere's older async-copy path suffers more than Ada's
+    match gpu.arch {
+        Arch::Ampere if stages > 3 => f *= 0.84_f64.powi((stages - 3) as i32),
+        Arch::Ada if stages > 3 => f *= 0.92_f64.powi((stages - 3) as i32),
+        _ => {}
+    }
+
+    // warp-mix preference (8-warp cooperative groups need Hopper's wider
+    // scheduler; on older parts they serialize at the MMA issue stage)
+    let (ideal_warps, warp_tax): (f64, f64) = match gpu.arch {
+        Arch::Hopper | Arch::Blackwell => (8.0, 0.05),
+        Arch::Ampere => (4.0, 0.12),
+        Arch::Ada => (4.0, 0.06),
+    };
+    f *= 1.0 - warp_tax * ((warps as f64 - ideal_warps).abs() / 4.0);
+
+    // FP8 on Hopper+: double-rate MMA with a small conversion tax is applied
+    // at the throughput site; here only the residual scheduling tax.
+    if kind == KernelKind::ScaledMm && gpu.fp8_tensor_mult > 1.0 {
+        f *= 0.93;
+    }
+
+    f.clamp(0.05, 0.98)
+}
+
+/// Compute/memory overlap quality per kernel family (async-copy pipelining
+/// for tile kernels; softmax dependency chains limit attention).
+pub fn overlap_quality(kind: KernelKind, stages: u32, gpu: &GpuSpec) -> f64 {
+    let base = match kind {
+        KernelKind::Gemm | KernelKind::ScaledMm | KernelKind::FusedMoe => 0.90,
+        KernelKind::Attention => 0.80,
+        KernelKind::RmsNorm | KernelKind::SiluMul => 0.85,
+    };
+    let stage_bonus = 0.03 * (stages.min(4).saturating_sub(1)) as f64;
+    let arch_bonus = match gpu.arch {
+        Arch::Hopper => 0.03, // TMA: hardware async copies
+        Arch::Blackwell => 0.02,
+        _ => 0.0,
+    };
+    (base + stage_bonus + arch_bonus).min(0.97)
+}
+
+/// Effective L2 pull per loaded byte: TMA multicast + thread-block clusters
+/// let Hopper/Blackwell tensor kernels share operand fetches.
+pub fn l2_multicast_discount(gpu: &GpuSpec, kind: KernelKind) -> f64 {
+    match (gpu.arch, kind) {
+        (Arch::Hopper | Arch::Blackwell,
+         KernelKind::Gemm | KernelKind::ScaledMm | KernelKind::FusedMoe) => 0.55,
+        _ => 1.0,
+    }
+}
+
+/// Kernel launch overhead (driver + GigaThread ramp), seconds.
+pub fn launch_overhead_sec(gpu: &GpuSpec) -> f64 {
+    match gpu.arch {
+        Arch::Ampere => 2.6e-6,
+        Arch::Ada => 2.3e-6,
+        Arch::Hopper => 2.0e-6,
+        Arch::Blackwell => 2.1e-6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gpu_by_name;
+
+    #[test]
+    fn wider_mxu_lower_fraction() {
+        let h800 = gpu_by_name("H800").unwrap();
+        let h20 = gpu_by_name("H20").unwrap();
+        let f800 = tensor_friction(&h800, KernelKind::Gemm, (256, 128, 64), 4, 8);
+        let f20 = tensor_friction(&h20, KernelKind::Gemm, (256, 128, 64), 4, 8);
+        assert!(f20 > f800 + 0.05, "H20 {f20} vs H800 {f800}");
+    }
+
+    #[test]
+    fn small_tiles_hurt() {
+        let a100 = gpu_by_name("A100").unwrap();
+        let big = tensor_friction(&a100, KernelKind::Gemm, (128, 256, 32), 3, 8);
+        let small = tensor_friction(&a100, KernelKind::Gemm, (16, 64, 32), 3, 8);
+        assert!(big > small * 1.2);
+    }
+
+    #[test]
+    fn deep_stages_hurt_ampere_help_hopper() {
+        let a40 = gpu_by_name("A40").unwrap();
+        let h800 = gpu_by_name("H800").unwrap();
+        let t = (64, 128, 64);
+        let a3 = tensor_friction(&a40, KernelKind::FusedMoe, t, 3, 4);
+        let a5 = tensor_friction(&a40, KernelKind::FusedMoe, t, 5, 4);
+        assert!(a3 > a5, "A40 should prefer 3 stages: {a3} vs {a5}");
+        let h4 = tensor_friction(&h800, KernelKind::FusedMoe, t, 4, 8);
+        let h2 = tensor_friction(&h800, KernelKind::FusedMoe, t, 2, 8);
+        assert!(h4 > h2, "Hopper should prefer deep stages: {h4} vs {h2}");
+    }
+
+    #[test]
+    fn warp_preference_differs_by_arch() {
+        let a40 = gpu_by_name("A40").unwrap();
+        let h100 = gpu_by_name("H100").unwrap();
+        let t = (64, 64, 32);
+        assert!(
+            tensor_friction(&a40, KernelKind::FusedMoe, t, 3, 4)
+                > tensor_friction(&a40, KernelKind::FusedMoe, t, 3, 8)
+        );
+        assert!(
+            tensor_friction(&h100, KernelKind::FusedMoe, t, 4, 8)
+                > tensor_friction(&h100, KernelKind::FusedMoe, t, 4, 4)
+        );
+    }
+
+    #[test]
+    fn frictions_in_unit_range() {
+        for gpu in crate::hw::all_gpus() {
+            for tile in [(16, 64, 32), (128, 128, 32), (256, 128, 64)] {
+                for stages in [2, 3, 4, 5] {
+                    for warps in [4, 8] {
+                        let f = tensor_friction(&gpu, KernelKind::Gemm, tile, stages, warps);
+                        assert!((0.05..=0.98).contains(&f), "{} {f}", gpu.name);
+                        let ov = overlap_quality(KernelKind::Gemm, stages, &gpu);
+                        assert!((0.5..=0.97).contains(&ov));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via the
+//! `xla` crate. This is the ONLY bridge between the rust request path and
+//! the AOT-compiled JAX/Pallas model — python never runs at prediction time.
+//!
+//! Interchange is HLO *text*: the image's xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Parsed `artifacts/manifest.json` — the packing/arg-order contract between
+/// aot.py and this runtime.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub feature_dim: usize,
+    pub theta_size: usize,
+    pub bn_size: usize,
+    pub fwd_batches: Vec<usize>,
+    pub train_batch: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {:?}/manifest.json — run `make artifacts`", dir))?;
+        let j = json::parse(&text)?;
+        let usize_field = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest missing {k}"))
+        };
+        Ok(Manifest {
+            feature_dim: usize_field("feature_dim")?,
+            theta_size: usize_field("theta_size")?,
+            bn_size: usize_field("bn_size")?,
+            fwd_batches: j
+                .get("fwd_batches")
+                .and_then(Json::as_arr)
+                .context("manifest missing fwd_batches")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            train_batch: usize_field("train_batch")?,
+        })
+    }
+}
+
+/// A compiled HLO executable plus convenience I/O.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with the given literals; unwraps the jax `return_tuple=True`
+    /// output tuple into its elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Borrowed-argument variant: lets callers cache large constant inputs
+    /// (e.g. the 200KB theta blob) across calls instead of re-encoding them
+    /// — the main lever on the single-prediction hot path (§Perf).
+    pub fn run_ref(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// PJRT CPU engine owning the client and the artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client over `artifacts_dir`.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine { client, dir, manifest })
+    }
+
+    /// Default artifacts location: $SYNPERF_ARTIFACTS or ./artifacts.
+    pub fn from_env() -> Result<Engine> {
+        let dir = std::env::var("SYNPERF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Engine::new(dir)
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, file: &str) -> Result<Executable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path:?} — run `make artifacts`"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {file}"))?;
+        Ok(Executable { exe, name: file.to_string() })
+    }
+
+    /// Read a raw little-endian f32 blob (init_theta.bin / init_bn.bin).
+    pub fn read_f32_blob(&self, file: &str) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(file))
+            .with_context(|| format!("read blob {file}"))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "blob {file} not f32-aligned");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// PRNG key literal (uint32[2]) for the dropout stream.
+pub fn lit_key(seed: u64) -> Result<xla::Literal> {
+    let k = [(seed >> 32) as u32, seed as u32];
+    Ok(xla::Literal::vec1(&k).reshape(&[2])?)
+}
+
+/// Extract a literal back into f32s.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,73 @@
+//! Scheduling Simulator (paper §IV-B): converts the task set T into a task
+//! distribution `{T_1 .. T_NSM} = M(T, S)` (Eq. 2) — a partition of task
+//! indices across SMs.
+//!
+//! Three policies, matching the paper's taxonomy:
+//!  * [`hardware_rr`] — the GigaThread engine's inferred round-robin for
+//!    conventional kernels;
+//!  * [`persistent`] — the static software tile scheduler of persistent
+//!    (ping-pong / Stream-K style) kernels;
+//!  * [`minheap`] — FlashInfer FA3's cost-balancing MinHeap scheduler.
+
+pub mod hardware_rr;
+pub mod minheap;
+pub mod persistent;
+
+use crate::hw::GpuSpec;
+use crate::kernels::{Decomposition, Paradigm};
+
+/// A partition of task indices across SMs: `assignment[j]` holds the indices
+/// of the tasks executed by SM j. The sets are disjoint and their union is
+/// the full task set (checked by the property tests).
+#[derive(Debug, Clone)]
+pub struct TaskDistribution {
+    pub assignment: Vec<Vec<usize>>,
+}
+
+impl TaskDistribution {
+    pub fn num_sms(&self) -> usize {
+        self.assignment.len()
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.assignment.iter().map(|v| v.len()).sum()
+    }
+
+    /// Max over SMs of an additive per-task metric.
+    pub fn max_sm_sum<F: Fn(usize) -> f64>(&self, metric: F) -> f64 {
+        self.assignment
+            .iter()
+            .map(|tasks| tasks.iter().map(|&i| metric(i)).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// Per-SM sums of an additive metric.
+    pub fn sm_sums<F: Fn(usize) -> f64>(&self, metric: F) -> Vec<f64> {
+        self.assignment
+            .iter()
+            .map(|tasks| tasks.iter().map(|&i| metric(i)).sum::<f64>())
+            .collect()
+    }
+}
+
+/// Dispatch on the kernel's execution paradigm.
+pub fn schedule(decomp: &Decomposition, gpu: &GpuSpec) -> TaskDistribution {
+    match decomp.paradigm {
+        Paradigm::HardwareRR => hardware_rr::schedule(decomp, gpu),
+        Paradigm::PersistentTile => persistent::schedule(decomp, gpu),
+        Paradigm::MinHeap => minheap::schedule(decomp, gpu),
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn assert_is_partition(dist: &TaskDistribution, n_tasks: usize) {
+    let mut seen = vec![false; n_tasks];
+    for sm in &dist.assignment {
+        for &t in sm {
+            assert!(t < n_tasks, "task index out of range");
+            assert!(!seen[t], "task {t} assigned twice");
+            seen[t] = true;
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "some tasks unassigned");
+}

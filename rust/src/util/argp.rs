@@ -1,0 +1,133 @@
+//! Tiny argument parser for the CLI (no `clap` in the offline vendor set).
+//! Supports `subcommand --flag value --switch positional` layouts.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.str_opt(name)
+            .with_context(|| format!("missing required flag --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn subcommand(&self) -> Result<(&str, Args)> {
+        if self.positional.is_empty() {
+            bail!("expected a subcommand");
+        }
+        let mut rest = self.clone();
+        let sub = rest.positional.remove(0);
+        // leak is fine: one subcommand string per process invocation
+        Ok((Box::leak(sub.into_boxed_str()), rest))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn flags_values_switches() {
+        // note: bare switches bind a following bare token as their value, so
+        // positionals go before switches (documented CLI convention)
+        let a = parse("train pos1 --kernel gemm --steps 100 --quiet");
+        assert_eq!(a.positional, vec!["train", "pos1"]);
+        assert_eq!(a.str_opt("kernel"), Some("gemm"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.has("quiet"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--lr=0.01 --name=x");
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.01);
+        assert_eq!(a.str_opt("name"), Some("x"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert!(a.req("missing").is_err());
+        let bad = parse("--n abc");
+        assert!(bad.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn subcommand_split() {
+        let a = parse("experiment table8 --fast");
+        let (sub, rest) = a.subcommand().unwrap();
+        assert_eq!(sub, "experiment");
+        assert_eq!(rest.positional, vec!["table8"]);
+        assert!(rest.has("fast"));
+    }
+}

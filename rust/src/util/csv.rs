@@ -1,0 +1,110 @@
+//! Minimal CSV I/O (no quoting — all our fields are numeric or simple
+//! identifiers). Used for dataset persistence and experiment outputs.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    out: BufWriter<std::fs::File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = std::fs::File::create(&path)
+            .with_context(|| format!("create {:?}", path.as_ref()))?;
+        let mut out = BufWriter::new(f);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        if fields.len() != self.cols {
+            bail!("csv row arity {} != header {}", fields.len(), self.cols);
+        }
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+pub struct CsvData {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvData {
+    pub fn col_idx(&self, name: &str) -> Result<usize> {
+        self.header
+            .iter()
+            .position(|h| h == name)
+            .with_context(|| format!("csv column {name:?} missing from {:?}", self.header))
+    }
+
+    pub fn f64_col(&self, name: &str) -> Result<Vec<f64>> {
+        let i = self.col_idx(name)?;
+        self.rows
+            .iter()
+            .map(|r| r[i].parse::<f64>().with_context(|| format!("parse {:?}", r[i])))
+            .collect()
+    }
+}
+
+pub fn read_csv<P: AsRef<Path>>(path: P) -> Result<CsvData> {
+    let f = std::fs::File::open(&path).with_context(|| format!("open {:?}", path.as_ref()))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = match lines.next() {
+        Some(h) => h?.split(',').map(|s| s.to_string()).collect::<Vec<_>>(),
+        None => bail!("empty csv"),
+    };
+    let mut rows = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let row: Vec<String> = line.split(',').map(|s| s.to_string()).collect();
+        if row.len() != header.len() {
+            bail!("row arity {} != header {}", row.len(), header.len());
+        }
+        rows.push(row);
+    }
+    Ok(CsvData { header, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("synperf_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2.5".into()]).unwrap();
+        w.row(&["3".into(), "4.5".into()]).unwrap();
+        w.finish().unwrap();
+        let d = read_csv(&path).unwrap();
+        assert_eq!(d.header, vec!["a", "b"]);
+        assert_eq!(d.rows.len(), 2);
+        assert_eq!(d.f64_col("b").unwrap(), vec![2.5, 4.5]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn arity_errors() {
+        let dir = std::env::temp_dir().join("synperf_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

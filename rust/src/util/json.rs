@@ -1,0 +1,228 @@
+//! Minimal JSON parser — just enough to read `artifacts/manifest.json`
+//! (objects, arrays, numbers, strings, booleans, null). No external serde
+//! facade is available in the offline vendor set.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+pub fn parse(input: &str) -> Result<Json> {
+    let bytes: Vec<char> = input.chars().collect();
+    let mut pos = 0usize;
+    let v = parse_value(&bytes, &mut pos)?;
+    skip_ws(&bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing characters at {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[char], pos: &mut usize) {
+    while *pos < b.len() && b[*pos].is_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[char], pos: &mut usize, c: char) -> Result<()> {
+    skip_ws(b, pos);
+    if *pos >= b.len() || b[*pos] != c {
+        bail!("expected {c:?} at {pos:?}");
+    }
+    *pos += 1;
+    Ok(())
+}
+
+fn parse_value(b: &[char], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        '{' => parse_obj(b, pos),
+        '[' => parse_arr(b, pos),
+        '"' => Ok(Json::Str(parse_string(b, pos)?)),
+        't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        'n' => parse_lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(b: &[char], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    for c in lit.chars() {
+        if *pos >= b.len() || b[*pos] != c {
+            bail!("bad literal at {pos}");
+        }
+        *pos += 1;
+    }
+    Ok(v)
+}
+
+fn parse_num(b: &[char], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && (b[*pos].is_ascii_digit() || "+-.eE".contains(b[*pos]))
+    {
+        *pos += 1;
+    }
+    let s: String = b[start..*pos].iter().collect();
+    Ok(Json::Num(s.parse::<f64>().map_err(|e| anyhow::anyhow!("bad number {s:?}: {e}"))?))
+}
+
+fn parse_string(b: &[char], pos: &mut usize) -> Result<String> {
+    expect(b, pos, '"')?;
+    let mut s = String::new();
+    while *pos < b.len() {
+        let c = b[*pos];
+        *pos += 1;
+        match c {
+            '"' => return Ok(s),
+            '\\' => {
+                if *pos >= b.len() {
+                    bail!("bad escape");
+                }
+                let e = b[*pos];
+                *pos += 1;
+                s.push(match e {
+                    'n' => '\n',
+                    't' => '\t',
+                    'r' => '\r',
+                    '/' => '/',
+                    '"' => '"',
+                    '\\' => '\\',
+                    'u' => {
+                        let hex: String = b[*pos..*pos + 4].iter().collect();
+                        *pos += 4;
+                        char::from_u32(u32::from_str_radix(&hex, 16)?).unwrap_or('?')
+                    }
+                    other => bail!("unsupported escape \\{other}"),
+                });
+            }
+            _ => s.push(c),
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn parse_arr(b: &[char], pos: &mut usize) -> Result<Json> {
+    expect(b, pos, '[')?;
+    let mut v = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == ']' {
+        *pos += 1;
+        return Ok(Json::Arr(v));
+    }
+    loop {
+        v.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        if *pos < b.len() && b[*pos] == ',' {
+            *pos += 1;
+            continue;
+        }
+        expect(b, pos, ']')?;
+        return Ok(Json::Arr(v));
+    }
+}
+
+fn parse_obj(b: &[char], pos: &mut usize) -> Result<Json> {
+    expect(b, pos, '{')?;
+    let mut m = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == '}' {
+        *pos += 1;
+        return Ok(Json::Obj(m));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        expect(b, pos, ':')?;
+        let val = parse_value(b, pos)?;
+        m.insert(key, val);
+        skip_ws(b, pos);
+        if *pos < b.len() && b[*pos] == ',' {
+            *pos += 1;
+            continue;
+        }
+        expect(b, pos, '}')?;
+        return Ok(Json::Obj(m));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like() {
+        let j = parse(
+            r#"{"feature_dim": 32, "layers": [[32, 256], [256, 1]],
+                "fwd_args": ["theta", "bn", "x"], "lr": 0.001, "ok": true}"#,
+        )
+        .unwrap();
+        assert_eq!(j.get("feature_dim").unwrap().as_usize(), Some(32));
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers[0].as_arr().unwrap()[1].as_usize(), Some(256));
+        assert_eq!(
+            j.get("fwd_args").unwrap().as_arr().unwrap()[2].as_str(),
+            Some("x")
+        );
+        assert_eq!(j.get("lr").unwrap().as_f64(), Some(0.001));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{key: 1}").is_err());
+        assert!(parse("[1, 2").is_err());
+        assert!(parse("{} extra").is_err());
+    }
+
+    #[test]
+    fn string_escapes() {
+        let j = parse(r#""a\nbA""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\nbA"));
+    }
+}

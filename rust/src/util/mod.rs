@@ -1,0 +1,26 @@
+//! Shared utilities: deterministic RNG, statistics, CSV/JSON I/O, ASCII
+//! tables, argument parsing, and the micro-benchmark harness. Everything
+//! here is dependency-free (the offline vendor set only carries the `xla`
+//! crate's closure), which keeps the runtime path self-contained.
+
+pub mod argp;
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Property-based test driver: runs `cases` random trials, reporting the
+/// failing seed on panic so failures reproduce (`proptest` substitute).
+pub fn prop_check<F: Fn(&mut rng::Rng)>(name: &str, cases: usize, f: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let mut r = rng::Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut r)));
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

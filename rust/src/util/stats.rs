@@ -1,0 +1,197 @@
+//! Statistics helpers: the error metrics reported by the paper (MAPE, signed
+//! relative error, geometric-mean speedup, percentiles, Pearson correlation)
+//! plus small fitting utilities.
+
+/// Mean Absolute Percentage Error (%), the paper's headline metric.
+pub fn mape(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    assert!(!pred.is_empty());
+    let s: f64 = pred
+        .iter()
+        .zip(actual)
+        .map(|(p, a)| ((p - a) / a.max(1e-12)).abs())
+        .sum();
+    100.0 * s / pred.len() as f64
+}
+
+/// Signed relative error (%) — used by Fig. 7 to show over/under-estimation.
+pub fn signed_rel_err(pred: f64, actual: f64) -> f64 {
+    100.0 * (pred - actual) / actual.max(1e-12)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Linear-interpolated percentile, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    cov / (vx.sqrt() * vy.sqrt()).max(1e-300) * (n / n)
+}
+
+/// CDF sample points (sorted values with cumulative fraction) for Fig. 8.
+pub fn cdf(xs: &[f64]) -> Vec<(f64, f64)> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    v.into_iter()
+        .enumerate()
+        .map(|(i, x)| (x, (i + 1) as f64 / n))
+        .collect()
+}
+
+/// Ordinary least squares for small systems: solves X^T X beta = X^T y via
+/// Gaussian elimination. Rows of `x` are samples (with any intercept column
+/// already included). Used by the Linear baseline (paper [29]).
+pub fn ols(x: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    assert!(!x.is_empty());
+    let d = x[0].len();
+    let mut xtx = vec![vec![0.0; d]; d];
+    let mut xty = vec![0.0; d];
+    for (row, &t) in x.iter().zip(y) {
+        for i in 0..d {
+            xty[i] += row[i] * t;
+            for j in 0..d {
+                xtx[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    // ridge epsilon for numerical safety
+    for i in 0..d {
+        xtx[i][i] += 1e-9;
+    }
+    solve(&mut xtx, &mut xty);
+    xty
+}
+
+/// In-place Gaussian elimination with partial pivoting; solution left in `b`.
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let div = a[col][col];
+        if div.abs() < 1e-300 {
+            continue;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = a[r][col] / div;
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    for i in 0..n {
+        if a[i][i].abs() > 1e-300 {
+            b[i] /= a[i][i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mape_basics() {
+        assert!((mape(&[1.1, 0.9], &[1.0, 1.0]) - 10.0).abs() < 1e-9);
+        assert_eq!(mape(&[2.0], &[2.0]), 0.0);
+    }
+
+    #[test]
+    fn signed_err_sign() {
+        assert!(signed_rel_err(1.2, 1.0) > 0.0);
+        assert!(signed_rel_err(0.8, 1.0) < 0.0);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-9);
+        let neg = [3.0, 2.0, 1.0];
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ols_recovers_plane() {
+        // y = 3 + 2a - b
+        let x: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![1.0, i as f64, (i * i % 7) as f64])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| 3.0 + 2.0 * r[1] - r[2]).collect();
+        let beta = ols(&x, &y);
+        assert!((beta[0] - 3.0).abs() < 1e-6);
+        assert!((beta[1] - 2.0).abs() < 1e-6);
+        assert!((beta[2] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let c = cdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(c[0].0, 1.0);
+        assert!((c[2].1 - 1.0).abs() < 1e-12);
+        assert!(c.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 <= w[1].1));
+    }
+}

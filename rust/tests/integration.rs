@@ -1,0 +1,83 @@
+//! End-to-end integration: dataset -> PJRT training -> prediction accuracy.
+//! Requires artifacts; skips gracefully if absent.
+
+use synperf::dataset;
+use synperf::hw;
+use synperf::kernels::KernelKind;
+use synperf::mlp::{train_model, Predictor, TrainConfig};
+use synperf::runtime::Engine;
+use synperf::util::stats;
+
+fn engine() -> Option<Engine> {
+    Engine::new("artifacts").ok()
+}
+
+#[test]
+fn trained_gemm_model_beats_roofline() {
+    let Some(e) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let t0 = std::time::Instant::now();
+    let ds = dataset::build(KernelKind::Gemm, &hw::all_gpus(), 260, 42, 8);
+    eprintln!("dataset: {} samples in {:?}", ds.len(), t0.elapsed());
+    let (seen, unseen) = dataset::split_seen(&ds);
+    // train on seen GPUs
+    let xs: Vec<_> = seen.iter().map(|s| s.x).collect();
+    let ys: Vec<f64> = seen.iter().map(|s| s.efficiency()).collect();
+    let cfg = TrainConfig { max_steps: 700, val_every: 70, patience: 4, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let model = train_model(&e, &xs, &ys, &cfg).unwrap();
+    eprintln!(
+        "trained {} steps in {:?}, val loss {:.4}",
+        model.steps_run,
+        t0.elapsed(),
+        model.final_val_loss
+    );
+    let pred = Predictor::new(&e, model.weights).unwrap();
+
+    for (name, split) in [("seen", &seen), ("unseen", &unseen)] {
+        let xs: Vec<_> = split.iter().map(|s| s.x).collect();
+        let eff = pred.predict_eff(&xs).unwrap();
+        let lat_pred: Vec<f64> =
+            split.iter().zip(&eff).map(|(s, e)| s.theory_sec / e).collect();
+        let lat_true: Vec<f64> = split.iter().map(|s| s.latency_sec).collect();
+        let mape = stats::mape(&lat_pred, &lat_true);
+        let roof: Vec<f64> = split.iter().map(|s| s.roofline_sec).collect();
+        let roof_mape = stats::mape(&roof, &lat_true);
+        eprintln!("{name}: synperf {mape:.1}% vs roofline {roof_mape:.1}%");
+        assert!(mape < roof_mape * 0.6, "{name}: MLP {mape}% should beat roofline {roof_mape}%");
+        if name == "seen" {
+            assert!(mape < 15.0, "seen MAPE too high: {mape}%");
+        } else {
+            assert!(mape < 30.0, "unseen MAPE too high: {mape}%");
+        }
+    }
+}
+
+#[test]
+fn native_forward_matches_pjrt() {
+    let Some(e) = engine() else { return };
+    let theta = e.read_f32_blob("init_theta.bin").unwrap();
+    let bn = e.read_f32_blob("init_bn.bin").unwrap();
+    let w = synperf::mlp::weights::ModelWeights {
+        theta,
+        bn,
+        scaler: synperf::mlp::Scaler::identity(),
+    };
+    let pred = Predictor::new(&e, w).unwrap();
+    let xs: Vec<[f32; 32]> = (0..7)
+        .map(|i| {
+            let mut x = [0f32; 32];
+            for (j, v) in x.iter_mut().enumerate() {
+                *v = ((i * 37 + j * 13) % 29) as f32 / 29.0 - 0.5;
+            }
+            x
+        })
+        .collect();
+    let a = pred.predict_eff(&xs).unwrap();
+    let b = pred.predict_eff_native(&xs);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-4, "PJRT {x} vs native {y}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Integration tests for the PJRT runtime against the real AOT artifacts.
+//! Requires `make artifacts` to have run (skipped gracefully otherwise).
+
+use synperf::runtime::{lit_f32, lit_key, lit_scalar, to_f32, Engine};
+
+fn engine() -> Option<Engine> {
+    match Engine::new("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping PJRT tests (no artifacts): {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_matches_feature_dim() {
+    let Some(e) = engine() else { return };
+    assert_eq!(e.manifest.feature_dim, synperf::features::FEATURE_DIM);
+    assert!(e.manifest.fwd_batches.contains(&1));
+    assert!(e.manifest.fwd_batches.contains(&256));
+}
+
+#[test]
+fn forward_runs_and_outputs_sigmoid_range() {
+    let Some(e) = engine() else { return };
+    let theta = e.read_f32_blob("init_theta.bin").unwrap();
+    let bn = e.read_f32_blob("init_bn.bin").unwrap();
+    assert_eq!(theta.len(), e.manifest.theta_size);
+    assert_eq!(bn.len(), e.manifest.bn_size);
+    let fwd = e.load("mlp_fwd_b64.hlo.txt").unwrap();
+    let f = e.manifest.feature_dim;
+    let x: Vec<f32> = (0..64 * f).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
+    let out = fwd
+        .run(&[
+            lit_f32(&theta, &[theta.len() as i64]).unwrap(),
+            lit_f32(&bn, &[bn.len() as i64]).unwrap(),
+            lit_f32(&x, &[64, f as i64]).unwrap(),
+        ])
+        .unwrap();
+    let eff = to_f32(&out[0]).unwrap();
+    assert_eq!(eff.len(), 64);
+    assert!(eff.iter().all(|v| *v > 0.0 && *v < 1.0), "{eff:?}");
+}
+
+#[test]
+fn forward_batches_agree() {
+    // b1 and b256 variants must produce identical outputs for the same row
+    let Some(e) = engine() else { return };
+    let theta = e.read_f32_blob("init_theta.bin").unwrap();
+    let bn = e.read_f32_blob("init_bn.bin").unwrap();
+    let f = e.manifest.feature_dim;
+    let row: Vec<f32> = (0..f).map(|i| (i as f32) / 31.0 - 0.5).collect();
+    let fwd1 = e.load("mlp_fwd_b1.hlo.txt").unwrap();
+    let fwd256 = e.load("mlp_fwd_b256.hlo.txt").unwrap();
+    let t = lit_f32(&theta, &[theta.len() as i64]).unwrap();
+    let b = lit_f32(&bn, &[bn.len() as i64]).unwrap();
+    let o1 = fwd1.run(&[t, b, lit_f32(&row, &[1, f as i64]).unwrap()]).unwrap();
+    let mut big = Vec::new();
+    for _ in 0..256 {
+        big.extend_from_slice(&row);
+    }
+    let t = lit_f32(&theta, &[theta.len() as i64]).unwrap();
+    let b = lit_f32(&bn, &[bn.len() as i64]).unwrap();
+    let o256 = fwd256.run(&[t, b, lit_f32(&big, &[256, f as i64]).unwrap()]).unwrap();
+    let v1 = to_f32(&o1[0]).unwrap()[0];
+    let v256 = to_f32(&o256[0]).unwrap();
+    assert!((v1 - v256[0]).abs() < 1e-5);
+    assert!((v1 - v256[255]).abs() < 1e-5);
+}
+
+#[test]
+fn train_step_decreases_loss_and_times_ok() {
+    let Some(e) = engine() else { return };
+    let m = &e.manifest;
+    let train = e.load(&format!("mlp_train_mape_b{}.hlo.txt", m.train_batch)).unwrap();
+    let mut theta = e.read_f32_blob("init_theta.bin").unwrap();
+    let mut bn = e.read_f32_blob("init_bn.bin").unwrap();
+    let mut mom = vec![0f32; m.theta_size];
+    let mut vel = vec![0f32; m.theta_size];
+    let b = m.train_batch;
+    let f = m.feature_dim;
+    // toy target: efficiency = sigmoid(x0)
+    let x: Vec<f32> = (0..b * f)
+        .map(|i| (((i * 2654435761usize) % 1000) as f32 / 500.0) - 1.0)
+        .collect();
+    let y: Vec<f32> = (0..b).map(|r| 1.0 / (1.0 + (-x[r * f]).exp())).collect();
+
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    let t0 = std::time::Instant::now();
+    let steps = 30;
+    for step in 1..=steps {
+        let out = train
+            .run(&[
+                lit_f32(&theta, &[theta.len() as i64]).unwrap(),
+                lit_f32(&mom, &[mom.len() as i64]).unwrap(),
+                lit_f32(&vel, &[vel.len() as i64]).unwrap(),
+                lit_f32(&bn, &[bn.len() as i64]).unwrap(),
+                lit_f32(&x, &[b as i64, f as i64]).unwrap(),
+                lit_f32(&y, &[b as i64]).unwrap(),
+                lit_scalar(step as f32),
+                lit_key(step as u64 * 7919).unwrap(),
+            ])
+            .unwrap();
+        theta = to_f32(&out[0]).unwrap();
+        mom = to_f32(&out[1]).unwrap();
+        vel = to_f32(&out[2]).unwrap();
+        bn = to_f32(&out[3]).unwrap();
+        let loss = to_f32(&out[4]).unwrap()[0];
+        if step == 1 {
+            first = loss;
+        }
+        last = loss;
+    }
+    let per_step = t0.elapsed().as_secs_f64() / steps as f64;
+    eprintln!("train step: {:.2} ms, loss {first:.4} -> {last:.4}", per_step * 1e3);
+    assert!(last < first, "loss should decrease: {first} -> {last}");
+    assert!(per_step < 0.25, "train step too slow: {per_step}s");
+}
