@@ -9,9 +9,10 @@
 
 use synperf::coordinator::{PredictionService, ServiceConfig};
 use synperf::dataset;
+use synperf::engine::PredictionEngine;
 use synperf::features::FeatureSet;
 use synperf::hw;
-use synperf::kernels::{DType, KernelConfig};
+use synperf::kernels::{DType, KernelConfig, KernelKind};
 use synperf::oracle;
 use synperf::runtime::Engine;
 use synperf::sched::schedule;
@@ -50,6 +51,38 @@ fn main() {
         black_box(FeatureSet::analyze(&da, &dist, &gpu));
     });
     println!("{}", r.report());
+
+    println!("\n== prediction engine (cache + parallel fan-out) ==");
+    let r = bench("engine/analyze gemm (uncached)", 200, 10, || {
+        // fresh engine per call: every analyze is a miss
+        let e = PredictionEngine::new(16);
+        black_box(e.analyze(&cfg, &gpu));
+    });
+    println!("{}", r.report());
+    let warm = PredictionEngine::new(64);
+    warm.analyze(&cfg, &gpu);
+    warm.analyze(&attn, &gpu);
+    let r = bench("engine/analyze gemm (cached)", 200, 50, || {
+        black_box(warm.analyze(&cfg, &gpu));
+    });
+    println!("{}", r.report());
+    let r = bench("engine/analyze attention (cached)", 200, 50, || {
+        black_box(warm.analyze(&attn, &gpu));
+    });
+    println!("{}", r.report());
+    let gpus = hw::seen_gpus();
+    for threads in [1usize, 4, synperf::engine::par::default_threads()] {
+        let e = PredictionEngine::new(4096);
+        let t0 = std::time::Instant::now();
+        let ds = e.build_dataset(KernelKind::RmsNorm, &gpus, 64, 11, threads);
+        println!(
+            "engine/build_dataset rmsnorm 64x{} gpus, {threads:>2} threads: {:?} ({} rows)",
+            gpus.len(),
+            t0.elapsed(),
+            ds.len()
+        );
+        black_box(ds);
+    }
 
     println!("\n== oracle testbed ==");
     let mut seed = 0u64;

@@ -19,25 +19,38 @@ pub fn reference_gpu(target: &GpuSpec) -> GpuSpec {
     }
 }
 
+/// Aggregate compute / (naive) memory roofs of `cfg` on `gpu`, in seconds.
+fn roofs(cfg: &KernelConfig, gpu: &GpuSpec) -> (f64, f64) {
+    let c = crate::dataset::finalize_for_gpu(cfg, gpu);
+    let d = c.decompose(gpu);
+    let f = FeatureSet::analyze(&d, &schedule(&d, gpu), gpu);
+    let compute = f.tensor.total_cycles.max(f.fma.total_cycles).max(f.xu.total_cycles)
+        * gpu.cycle_sec();
+    let mem = f.mio.cycles_dram * gpu.cycle_sec();
+    (compute, mem)
+}
+
 /// Wave-scaling prediction: measure on the reference, then scale by the
 /// roof ratio of whichever regime (compute/memory) dominates on each side.
 pub fn predict(cfg: &KernelConfig, target: &GpuSpec, seed: u64) -> f64 {
     let reference = reference_gpu(target);
-    let ref_cfg = crate::dataset::finalize_for_gpu(cfg, &reference);
-    let t_ref = oracle::measure(&ref_cfg, &reference, seed ^ 0xAB17A7).latency_sec;
+    predict_with_roofs(cfg, &reference, seed, roofs(cfg, target), roofs(cfg, &reference))
+}
 
-    let roofs = |gpu: &GpuSpec| {
-        let c = crate::dataset::finalize_for_gpu(cfg, gpu);
-        let d = c.decompose(gpu);
-        let f = FeatureSet::analyze(&d, &schedule(&d, gpu), gpu);
-        let compute =
-            f.tensor.total_cycles.max(f.fma.total_cycles).max(f.xu.total_cycles)
-                * gpu.cycle_sec();
-        let mem = f.mio.cycles_dram * gpu.cycle_sec();
-        (compute, mem)
-    };
-    let (c_ref, m_ref) = roofs(&reference);
-    let (c_tgt, m_tgt) = roofs(target);
+/// Same prediction with the reference device plus the target and reference
+/// roofs supplied by the caller — the [`crate::engine::PredictionEngine`]
+/// holds both roof pairs in its analysis cache, which spares two full
+/// decompose+schedule+featurize passes per sample; only the seeded
+/// reference measurement remains.
+pub fn predict_with_roofs(
+    cfg: &KernelConfig,
+    reference: &GpuSpec,
+    seed: u64,
+    (c_tgt, m_tgt): (f64, f64),
+    (c_ref, m_ref): (f64, f64),
+) -> f64 {
+    let ref_cfg = crate::dataset::finalize_for_gpu(cfg, reference);
+    let t_ref = oracle::measure(&ref_cfg, reference, seed ^ 0xAB17A7).latency_sec;
 
     // wave scaling: blend the per-regime ratios by how memory-bound the
     // kernel is on the reference device

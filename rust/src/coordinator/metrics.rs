@@ -1,5 +1,7 @@
 //! Service metrics: request counts, latency percentiles, batch-size
-//! distribution — enough to report the coordinator benches.
+//! distribution, plus the engine-level observability counters (analysis
+//! cache hits/misses and per-kind routing occupancy) — enough to report the
+//! coordinator benches and to assert cache behavior in tests.
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -9,6 +11,10 @@ struct Inner {
     latencies_us: Vec<f64>,
     batch_sizes: Vec<usize>,
     requests: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    /// One entry per processed batch: number of per-kind MLP sub-batches.
+    kind_groups: Vec<usize>,
 }
 
 #[derive(Debug, Default)]
@@ -23,6 +29,23 @@ pub struct Snapshot {
     pub mean_batch: f64,
     pub p50_us: f64,
     pub p99_us: f64,
+    /// Decomposition/feature cache hits and misses across all requests.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Mean rows per per-kind MLP sub-batch (batch occupancy): how well the
+    /// dynamic batcher fills the per-category forward passes.
+    pub mean_kind_batch: f64,
+}
+
+impl Snapshot {
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
 }
 
 impl Metrics {
@@ -31,6 +54,15 @@ impl Metrics {
         g.requests += batch_size as u64;
         g.batch_sizes.push(batch_size);
         g.latencies_us.push(latency.as_secs_f64() * 1e6);
+    }
+
+    /// Record one batched prediction round: cache outcome per request and
+    /// how many per-kind sub-batches the round was routed into.
+    pub fn record_route(&self, cache_hits: usize, cache_misses: usize, kind_groups: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.cache_hits += cache_hits as u64;
+        g.cache_misses += cache_misses as u64;
+        g.kind_groups.push(kind_groups);
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -43,6 +75,7 @@ impl Metrics {
             }
             lat[((lat.len() - 1) as f64 * q) as usize]
         };
+        let total_groups: usize = g.kind_groups.iter().sum();
         Snapshot {
             requests: g.requests,
             batches: g.batch_sizes.len(),
@@ -53,6 +86,13 @@ impl Metrics {
             },
             p50_us: pct(0.5),
             p99_us: pct(0.99),
+            cache_hits: g.cache_hits,
+            cache_misses: g.cache_misses,
+            mean_kind_batch: if total_groups == 0 {
+                0.0
+            } else {
+                (g.cache_hits + g.cache_misses) as f64 / total_groups as f64
+            },
         }
     }
 }
@@ -71,5 +111,27 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch - 6.0).abs() < 1e-9);
         assert!(s.p99_us >= s.p50_us);
+    }
+
+    #[test]
+    fn route_counters_aggregate() {
+        let m = Metrics::default();
+        m.record_route(3, 1, 2);
+        m.record_route(5, 3, 2);
+        let s = m.snapshot();
+        assert_eq!(s.cache_hits, 8);
+        assert_eq!(s.cache_misses, 4);
+        assert!((s.cache_hit_rate() - 8.0 / 12.0).abs() < 1e-12);
+        // 12 routed rows over 4 per-kind sub-batches
+        assert!((s.mean_kind_batch - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.cache_hits + s.cache_misses, 0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        assert_eq!(s.mean_kind_batch, 0.0);
     }
 }

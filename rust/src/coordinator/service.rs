@@ -1,16 +1,16 @@
 //! The prediction service: a leader thread owns the per-kernel-category
 //! Predictors (PJRT executables are not Sync) and runs the dynamic-batch
 //! loop; clients hold a cheap cloneable handle and block on their own
-//! response channel. Request -> [batcher] -> route by kernel kind ->
-//! batched MLP forward -> respond.
+//! response channel. Request -> [batcher] -> shared [`PredictionEngine`]
+//! (cached decompose/schedule/featurize + per-kind batched MLP routing) ->
+//! respond.
 
 use super::batcher::collect_batch;
 use super::metrics::Metrics;
-use crate::features::{FeatureSet, FEATURE_DIM};
+use crate::engine::PredictionEngine;
 use crate::hw::GpuSpec;
 use crate::kernels::{KernelConfig, KernelKind};
 use crate::mlp::Predictor;
-use crate::sched::schedule;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -47,7 +47,9 @@ impl PredictionService {
     /// Spawn the service thread. PJRT executables are not `Send`, so the
     /// per-kernel-category Predictors are constructed *on* the service
     /// thread by `factory` (untrained categories answer with the
-    /// theoretical roof — documented degraded mode).
+    /// theoretical roof — documented degraded mode). The analytical front
+    /// half runs on the process-wide [`PredictionEngine`], so repeated
+    /// launches across batches (and across services) hit its cache.
     pub fn spawn<F>(factory: F, cfg: ServiceConfig) -> PredictionService
     where
         F: FnOnce() -> HashMap<KernelKind, Predictor> + Send + 'static,
@@ -92,12 +94,13 @@ fn service_loop(
     cfg: ServiceConfig,
     metrics: Arc<Metrics>,
 ) {
+    let engine = PredictionEngine::global();
     loop {
         let (batch, closed) = collect_batch(&rx, cfg.max_batch, cfg.deadline);
         if !batch.is_empty() {
             let t0 = Instant::now();
             let n = batch.len();
-            process_batch(batch, &models);
+            process_batch(engine, batch, &models, &metrics);
             metrics.record_batch(n, t0.elapsed());
         }
         if closed {
@@ -106,30 +109,25 @@ fn service_loop(
     }
 }
 
-fn process_batch(batch: Vec<Request>, models: &HashMap<KernelKind, Predictor>) {
-    // route: group by kernel category, keeping (features, theory, responder)
-    let mut groups: HashMap<KernelKind, Vec<([f32; FEATURE_DIM], f64, Sender<f64>)>> =
-        HashMap::new();
-    for req in batch {
-        let decomp = req.cfg.decompose(&req.gpu);
-        let dist = schedule(&decomp, &req.gpu);
-        let f = FeatureSet::analyze(&decomp, &dist, &req.gpu);
-        groups.entry(req.cfg.kind()).or_default().push((
-            f.to_model_input(&req.gpu),
-            f.theory_sec,
-            req.resp,
-        ));
+fn process_batch(
+    engine: &PredictionEngine,
+    batch: Vec<Request>,
+    models: &HashMap<KernelKind, Predictor>,
+    metrics: &Metrics,
+) {
+    let mut reqs = Vec::with_capacity(batch.len());
+    let mut responders = Vec::with_capacity(batch.len());
+    for r in batch {
+        reqs.push((r.cfg, r.gpu));
+        responders.push(r.resp);
     }
-    for (kind, rows) in groups {
-        let xs: Vec<[f32; FEATURE_DIM]> = rows.iter().map(|r| r.0).collect();
-        let effs: Vec<f64> = match models.get(&kind) {
-            Some(p) => p.predict_eff(&xs).unwrap_or_else(|_| vec![1.0; xs.len()]),
-            None => vec![1.0; xs.len()], // degraded mode: roofline answer
-        };
-        for ((_, theory, resp), eff) in rows.into_iter().zip(effs) {
-            // receiver may have gone away; ignore
-            let _ = resp.send(theory / eff);
-        }
+    // infallible: a category whose model is missing or whose forward fails
+    // answers with the theoretical roof, without degrading other categories
+    let out = engine.predict_batch(models, &reqs);
+    metrics.record_route(out.cache_hits, out.cache_misses, out.kind_groups);
+    for (resp, lat) in responders.into_iter().zip(out.latencies) {
+        // receiver may have gone away; ignore
+        let _ = resp.send(lat);
     }
 }
 
@@ -171,6 +169,29 @@ mod tests {
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.requests, 64);
         assert!(snap.mean_batch > 1.5, "should have batched: {snap:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn repeated_launches_hit_the_analysis_cache() {
+        let svc = PredictionService::spawn(HashMap::new, ServiceConfig::default());
+        let gpu = gpu_by_name("L40").unwrap();
+        // deliberately odd shape: unique to this test, so the first submit
+        // misses and every repeat must hit the decomposition cache
+        let cfg = KernelConfig::Gemm { m: 1237, n: 4211, k: 773, dtype: DType::Bf16 };
+        for _ in 0..5 {
+            let v = svc.predict(cfg.clone(), &gpu).unwrap();
+            assert!(v > 0.0);
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.cache_hits + snap.cache_misses, 5);
+        assert!(
+            snap.cache_hits >= 4,
+            "repeats must hit the cache: {} hits / {} misses",
+            snap.cache_hits,
+            snap.cache_misses
+        );
+        assert!(snap.mean_kind_batch >= 1.0);
         svc.shutdown();
     }
 

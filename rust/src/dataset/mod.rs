@@ -4,15 +4,15 @@
 //! (feature-vector, theoretical-time, measured-latency) training rows.
 //!
 //! The per-kernel parameter ranges match §V-B verbatim; magnitudes are
-//! log-uniformly sampled (the paper's ranges span 4-5 decades). Building is
-//! parallelized across worker threads (std::thread — the whole crate is
-//! dependency-free beyond `xla`).
+//! log-uniformly sampled (the paper's ranges span 4-5 decades). The
+//! analyze/measure pipeline itself lives in [`crate::engine`]: building is
+//! fanned out over the engine's scoped-thread workers and the analytical
+//! half of every sample goes through its memoizing cache.
 
-use crate::features::{FeatureSet, FEATURE_DIM};
+use crate::engine::PredictionEngine;
+use crate::features::FEATURE_DIM;
 use crate::hw::GpuSpec;
 use crate::kernels::{fused_moe, DType, KernelConfig, KernelKind};
-use crate::oracle;
-use crate::sched::schedule;
 use crate::util::csv::{read_csv, CsvWriter};
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -151,30 +151,12 @@ pub fn finalize_for_gpu(cfg: &KernelConfig, gpu: &GpuSpec) -> KernelConfig {
 }
 
 /// Analyze + measure one (config, gpu) pair into a Sample.
+///
+/// Routed through the shared [`PredictionEngine`]: the analytical half
+/// (decompose → schedule → featurize, plus the baseline feature views) is
+/// memoized across calls; only the seeded oracle measurement always runs.
 pub fn make_sample(cfg: &KernelConfig, gpu: &GpuSpec, seed: u64) -> Sample {
-    let cfg = finalize_for_gpu(cfg, gpu);
-    let decomp = cfg.decompose(gpu);
-    let dist = schedule(&decomp, gpu);
-    let f = FeatureSet::analyze(&decomp, &dist, gpu);
-    let o = oracle::measure(&cfg, gpu, seed);
-    let (x_alt, alt_theory_sec) = crate::baselines::neusight::features(&decomp, gpu);
-    let habitat_sec = crate::baselines::habitat::predict(&cfg, gpu, seed);
-    let compute_roof =
-        f.tensor.total_cycles.max(f.fma.total_cycles).max(f.xu.total_cycles);
-    Sample {
-        kind: cfg.kind(),
-        gpu: gpu.name.to_string(),
-        seen: gpu.seen,
-        x: f.to_model_input(gpu),
-        theory_sec: f.theory_sec,
-        latency_sec: o.latency_sec,
-        roofline_sec: f.naive_roofline_sec,
-        compute_sec: compute_roof * gpu.cycle_sec(),
-        mem_sec: f.mio.cycles_dram * gpu.cycle_sec(),
-        habitat_sec,
-        x_alt,
-        alt_theory_sec,
-    }
+    PredictionEngine::global().make_sample(cfg, gpu, seed)
 }
 
 /// Build `n_configs` sampled configs profiled on every GPU in `gpus`,
@@ -194,40 +176,7 @@ pub fn build(
     seed: u64,
     threads: usize,
 ) -> Vec<Sample> {
-    let configs = sample_configs(kind, n_configs, seed);
-
-    let threads = threads.max(1);
-    let chunk = configs.len().div_ceil(threads);
-    let mut out: Vec<Sample> = Vec::with_capacity(n_configs * gpus.len());
-    std::thread::scope(|s| {
-        let handles: Vec<_> = configs
-            .chunks(chunk)
-            .enumerate()
-            .map(|(ci, chunk_cfgs)| {
-                s.spawn(move || {
-                    let mut local = Vec::with_capacity(chunk_cfgs.len() * gpus.len());
-                    for (i, cfg) in chunk_cfgs.iter().enumerate() {
-                        for gpu in gpus {
-                            // name hash: identically-specced GPUs
-                            // (H100/H800) get independent noise streams
-                            let h = gpu.name.bytes().fold(0u64, |a, b| {
-                                a.wrapping_mul(131).wrapping_add(b as u64)
-                            });
-                            let s = seed
-                                .wrapping_add(((ci * chunk + i) as u64) << 8)
-                                .wrapping_add(h);
-                            local.push(make_sample(cfg, gpu, s));
-                        }
-                    }
-                    local
-                })
-            })
-            .collect();
-        for h in handles {
-            out.extend(h.join().expect("dataset worker panicked"));
-        }
-    });
-    out
+    PredictionEngine::global().build_dataset(kind, gpus, n_configs, seed, threads)
 }
 
 /// Split by hardware: (seen-GPU rows, unseen-GPU rows) — Table VI split.

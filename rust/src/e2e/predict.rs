@@ -2,11 +2,17 @@
 //! ground truth from the oracle testbed vs. the five predictors (SynPerf,
 //! Roofline, Linear, Habitat, Neusight), all sharing the same RF
 //! communication model so the comparison isolates kernel modeling.
+//!
+//! Kernel items route through the shared [`PredictionEngine`]: a trace
+//! launches the same kernel shapes layer after layer (and decode step after
+//! decode step), so the analytical half of `make_sample` hits the engine's
+//! decomposition cache for every repeat; the per-category MLP forwards are
+//! batched across the whole trace.
 
 use super::comm::{allreduce_oracle, sendrecv_oracle, CommModel};
 use super::trace::{Op, TraceItem};
 use crate::baselines::linear::LinearModel;
-use crate::dataset;
+use crate::engine::PredictionEngine;
 use crate::features::FEATURE_DIM;
 use crate::hw::GpuSpec;
 use crate::kernels::KernelKind;
@@ -45,6 +51,7 @@ pub fn eval_trace(
     comm: &CommModel,
     seed: u64,
 ) -> Result<MethodTotals> {
+    let engine = PredictionEngine::global();
     let mut t = MethodTotals::default();
     // batched MLP inputs per kernel category
     let mut syn_in: HashMap<KernelKind, Vec<([f32; FEATURE_DIM], f64, f64)>> = HashMap::new();
@@ -54,7 +61,7 @@ pub fn eval_trace(
         let op_seed = seed.wrapping_add(i as u64 * 0x9E37);
         match &item.op {
             Op::Kernel(cfg) => {
-                let s = dataset::make_sample(cfg, gpu, op_seed);
+                let s = engine.make_sample(cfg, gpu, op_seed);
                 t.actual += item.count * (s.latency_sec + HOST_GAP_SEC);
                 t.roofline += item.count * s.roofline_sec;
                 t.habitat += item.count * s.habitat_sec;
@@ -97,37 +104,19 @@ pub fn eval_trace(
         }
     }
 
-    // batched MLP predictions
+    // batched MLP predictions, one forward per (method, kernel category)
     for (kind, rows) in &syn_in {
         let xs: Vec<[f32; FEATURE_DIM]> = rows.iter().map(|r| r.0).collect();
-        match models.synperf.get(kind) {
-            Some(pred) => {
-                let eff = pred.predict_eff(&xs)?;
-                for ((_, theory, count), e) in rows.iter().zip(eff) {
-                    t.synperf += count * theory / e;
-                }
-            }
-            None => {
-                for (_, theory, count) in rows {
-                    t.synperf += count * theory; // untrained: roof
-                }
-            }
+        let eff = PredictionEngine::predict_eff_grouped(&models.synperf, *kind, &xs)?;
+        for ((_, theory, count), e) in rows.iter().zip(eff) {
+            t.synperf += count * theory / e;
         }
     }
     for (kind, rows) in &alt_in {
         let xs: Vec<[f32; FEATURE_DIM]> = rows.iter().map(|r| r.0).collect();
-        match models.neusight.get(kind) {
-            Some(pred) => {
-                let eff = pred.predict_eff(&xs)?;
-                for ((_, theory, count), e) in rows.iter().zip(eff) {
-                    t.neusight += count * theory / e;
-                }
-            }
-            None => {
-                for (_, theory, count) in rows {
-                    t.neusight += count * theory;
-                }
-            }
+        let eff = PredictionEngine::predict_eff_grouped(&models.neusight, *kind, &xs)?;
+        for ((_, theory, count), e) in rows.iter().zip(eff) {
+            t.neusight += count * theory / e;
         }
     }
     Ok(t)
@@ -135,12 +124,13 @@ pub fn eval_trace(
 
 /// Runtime breakdown of a trace by kernel category (Table I).
 pub fn breakdown(trace: &[TraceItem], gpu: &GpuSpec, tp: u32, seed: u64) -> Vec<(String, f64)> {
+    let engine = PredictionEngine::global();
     let mut buckets: HashMap<&'static str, f64> = HashMap::new();
     for (i, item) in trace.iter().enumerate() {
         let op_seed = seed.wrapping_add(i as u64 * 0x9E37);
         let (name, secs): (&'static str, f64) = match &item.op {
             Op::Kernel(cfg) => {
-                let s = dataset::make_sample(cfg, gpu, op_seed);
+                let s = engine.make_sample(cfg, gpu, op_seed);
                 let bucket = match cfg.kind() {
                     KernelKind::Gemm | KernelKind::ScaledMm => "GEMM",
                     KernelKind::Attention => "Attention",

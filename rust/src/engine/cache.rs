@@ -1,0 +1,122 @@
+//! Bounded LRU for analysis results.
+//!
+//! A `HashMap` with per-entry recency stamps: `get`/`insert` are O(1); when
+//! the map is full, eviction drops the least-recently-used eighth of the
+//! entries in one O(n log n) sweep, amortizing to O(log n) per insert. Values
+//! are handed out as `Arc` clones so hits never copy the (large) analysis.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Arc;
+
+struct Entry<V> {
+    value: Arc<V>,
+    last_used: u64,
+}
+
+pub struct LruCache<K, V> {
+    map: HashMap<K, Entry<V>>,
+    capacity: usize,
+    tick: u64,
+}
+
+impl<K: Eq + Hash, V> LruCache<K, V> {
+    pub fn new(capacity: usize) -> LruCache<K, V> {
+        LruCache { map: HashMap::new(), capacity: capacity.max(1), tick: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn get(&mut self, key: &K) -> Option<Arc<V>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|e| {
+            e.last_used = tick;
+            e.value.clone()
+        })
+    }
+
+    pub fn insert(&mut self, key: K, value: Arc<V>) {
+        self.tick += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            self.evict_lru_batch();
+        }
+        let tick = self.tick;
+        self.map.insert(key, Entry { value, last_used: tick });
+    }
+
+    /// Drop the stalest ~1/8 of entries (at least one). Recency stamps are
+    /// unique, so selecting the drop_n-th smallest stamp and retaining
+    /// everything newer evicts exactly drop_n entries — O(n), no key clones,
+    /// no full sort (this runs under the engine's shared cache lock).
+    fn evict_lru_batch(&mut self) {
+        let drop_n = (self.capacity / 8).max(1).min(self.map.len());
+        if drop_n == 0 {
+            return;
+        }
+        let mut stamps: Vec<u64> = self.map.values().map(|e| e.last_used).collect();
+        let (_, &mut threshold, _) = stamps.select_nth_unstable(drop_n - 1);
+        self.map.retain(|_, e| e.last_used > threshold);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_and_miss() {
+        let mut c: LruCache<u32, u32> = LruCache::new(8);
+        assert!(c.get(&1).is_none());
+        c.insert(1, Arc::new(10));
+        assert_eq!(*c.get(&1).unwrap(), 10);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn eviction_prefers_stale_entries() {
+        let mut c: LruCache<u32, u32> = LruCache::new(16);
+        for i in 0..16 {
+            c.insert(i, Arc::new(i));
+        }
+        // refresh 0..8, then overflow: the stale half should be the victims
+        for i in 0..8 {
+            assert!(c.get(&i).is_some());
+        }
+        for i in 16..20 {
+            c.insert(i, Arc::new(i));
+        }
+        assert!(c.len() <= 18);
+        for i in 0..8 {
+            assert!(c.get(&i).is_some(), "recently-used entry {i} evicted");
+        }
+    }
+
+    #[test]
+    fn capacity_is_bounded() {
+        let mut c: LruCache<u32, u32> = LruCache::new(32);
+        for i in 0..10_000 {
+            c.insert(i, Arc::new(i));
+        }
+        assert!(c.len() <= 32, "len {} exceeds capacity", c.len());
+    }
+
+    #[test]
+    fn reinsert_updates_value() {
+        let mut c: LruCache<u32, u32> = LruCache::new(4);
+        c.insert(1, Arc::new(10));
+        c.insert(1, Arc::new(11));
+        assert_eq!(*c.get(&1).unwrap(), 11);
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,99 @@
+//! Canonical cache key for the analysis cache: the (finalized) kernel
+//! launch parameters **X** plus a fingerprint of the hardware vector **S**.
+//!
+//! `KernelConfig` is hashable directly (it is plain launch geometry — no
+//! floats), so the key is exact: two launches collide only if they decompose
+//! identically. `GpuSpec` carries `f64` throughput numbers, so it is folded
+//! into a 64-bit fingerprint over the bit patterns of every field that the
+//! decompose → schedule → featurize pipeline reads; two specs with any
+//! differing parameter hash apart.
+
+use crate::hw::GpuSpec;
+use crate::kernels::KernelConfig;
+use std::hash::{Hash, Hasher};
+
+/// Key of one `(KernelConfig, GpuSpec)` analysis.
+///
+/// The config stored here must already be resolved by
+/// `dataset::finalize_for_gpu` (FA2-vs-FA3 selection), which the engine
+/// guarantees before lookup — otherwise the same logical launch would key
+/// differently on Hopper and pre-Hopper parts.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    cfg: KernelConfig,
+    gpu_fp: u64,
+}
+
+impl CacheKey {
+    pub fn new(finalized_cfg: &KernelConfig, gpu: &GpuSpec) -> CacheKey {
+        CacheKey { cfg: finalized_cfg.clone(), gpu_fp: gpu_fingerprint(gpu) }
+    }
+}
+
+/// Deterministic 64-bit digest of the architectural parameter vector.
+pub fn gpu_fingerprint(gpu: &GpuSpec) -> u64 {
+    // SipHash with the default (zeroed) keys — stable within and across
+    // processes, which keeps cache behavior reproducible.
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    gpu.name.hash(&mut h);
+    gpu.arch.hash(&mut h);
+    gpu.compute_capability.to_bits().hash(&mut h);
+    gpu.num_sms.hash(&mut h);
+    gpu.sm_clock_mhz.to_bits().hash(&mut h);
+    gpu.tensor_ops_clk_sm.to_bits().hash(&mut h);
+    gpu.fma_ops_clk_sm.to_bits().hash(&mut h);
+    gpu.xu_ops_clk_sm.to_bits().hash(&mut h);
+    gpu.dram_bw_gbs.to_bits().hash(&mut h);
+    gpu.l2_bw_gbs.to_bits().hash(&mut h);
+    gpu.smem_bw_byte_clk_sm.to_bits().hash(&mut h);
+    gpu.smem_kb_sm.hash(&mut h);
+    gpu.regfile_kb_sm.hash(&mut h);
+    gpu.l2_mb.to_bits().hash(&mut h);
+    gpu.max_warps_per_sm.hash(&mut h);
+    gpu.max_ctas_per_sm.hash(&mut h);
+    gpu.fp8_tensor_mult.to_bits().hash(&mut h);
+    gpu.interconnect_gbs.to_bits().hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{all_gpus, gpu_by_name};
+    use crate::kernels::DType;
+
+    #[test]
+    fn fingerprints_distinguish_all_gpus() {
+        let fps: Vec<u64> = all_gpus().iter().map(gpu_fingerprint).collect();
+        for i in 0..fps.len() {
+            for j in (i + 1)..fps.len() {
+                assert_ne!(fps[i], fps[j], "GPU fingerprints must be unique");
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable() {
+        let a100 = gpu_by_name("A100").unwrap();
+        assert_eq!(gpu_fingerprint(&a100), gpu_fingerprint(&a100.clone()));
+    }
+
+    #[test]
+    fn fingerprint_tracks_parameter_changes() {
+        let mut h20 = gpu_by_name("H20").unwrap();
+        let base = gpu_fingerprint(&h20);
+        h20.dram_bw_gbs += 1.0;
+        assert_ne!(gpu_fingerprint(&h20), base);
+    }
+
+    #[test]
+    fn keys_separate_configs_and_gpus() {
+        let a100 = gpu_by_name("A100").unwrap();
+        let h800 = gpu_by_name("H800").unwrap();
+        let c1 = KernelConfig::Gemm { m: 128, n: 128, k: 128, dtype: DType::Bf16 };
+        let c2 = KernelConfig::Gemm { m: 128, n: 128, k: 256, dtype: DType::Bf16 };
+        assert_eq!(CacheKey::new(&c1, &a100), CacheKey::new(&c1, &a100));
+        assert_ne!(CacheKey::new(&c1, &a100), CacheKey::new(&c2, &a100));
+        assert_ne!(CacheKey::new(&c1, &a100), CacheKey::new(&c1, &h800));
+    }
+}

@@ -1,0 +1,95 @@
+//! Scoped-thread parallel map — the engine's fan-out primitive for dataset
+//! generation and batch featurization.
+//!
+//! Hand-rolled on `std::thread::scope` because the offline vendor set
+//! carries no `rayon`: workers pull indices from a shared atomic counter
+//! (fine-grained work stealing, so skewed per-item cost — e.g. huge GEMM
+//! grids next to tiny RMSNorms — cannot strand a thread), and results are
+//! reassembled in input order, keeping callers deterministic regardless of
+//! thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every item (with its index) across `threads` workers and
+/// return the results in input order. Falls back to a serial loop for
+/// degenerate sizes. Panics in `f` propagate to the caller.
+pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let next_ref = &next;
+    let f_ref = &f;
+    let mut parts: Vec<Vec<(usize, U)>> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f_ref(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("par_map worker panicked"));
+        }
+    });
+
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    for part in parts {
+        for (i, v) in part {
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter().map(|v| v.expect("par_map: every index computed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_covers_all() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, 8, |i, v| {
+            assert_eq!(i as u64, *v);
+            v * 2
+        });
+        assert_eq!(out, items.iter().map(|v| v * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let items: Vec<u64> = (0..257).collect();
+        let a = par_map(&items, 1, |i, v| v.wrapping_mul(i as u64 + 3));
+        let b = par_map(&items, 7, |i, v| v.wrapping_mul(i as u64 + 3));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(&none, 4, |_, v| *v).is_empty());
+        assert_eq!(par_map(&[9u32], 4, |_, v| *v + 1), vec![10]);
+    }
+}

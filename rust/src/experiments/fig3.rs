@@ -5,15 +5,14 @@
 //! plateaus.
 
 use super::Lab;
-use crate::dataset::make_sample;
-use crate::features::FeatureSet;
+use crate::engine::PredictionEngine;
 use crate::hw::gpu_by_name;
 use crate::kernels::KernelConfig;
-use crate::sched::schedule;
 use crate::util::table::{f, Table};
 use anyhow::Result;
 
 pub fn run(lab: &Lab) -> Result<String> {
+    let engine = PredictionEngine::global();
     let gpu = gpu_by_name("A100").unwrap();
     let mut out = String::new();
     for (label, nh, hd) in [("cfg-A nh=8 hd=128", 8u32, 128u32), ("cfg-B nh=32 hd=64", 32, 64)] {
@@ -32,9 +31,9 @@ pub fn run(lab: &Lab) -> Result<String> {
                 causal: false,
                 fa3: false,
             };
-            let d = cfg.decompose(&gpu);
-            let fset = FeatureSet::analyze(&d, &schedule(&d, &gpu), &gpu);
-            let s = make_sample(&cfg, &gpu, lab.seed + kv as u64);
+            let a = engine.analyze(&cfg, &gpu);
+            let fset = &a.features;
+            let s = engine.make_sample(&cfg, &gpu, lab.seed + kv as u64);
             let eff = s.theory_sec / s.latency_sec;
             effs.push(eff);
             t.row(vec![

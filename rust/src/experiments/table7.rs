@@ -5,24 +5,23 @@
 
 use super::Lab;
 use crate::dataset::{finalize_for_gpu, sample_configs};
-use crate::features::FeatureSet;
+use crate::engine::PredictionEngine;
 use crate::hw::gpu_by_name;
 use crate::kernels::KernelKind;
 use crate::oracle;
-use crate::sched::schedule;
 use crate::util::table::{f, Table};
 use anyhow::Result;
 
 fn validate(kind: KernelKind, gpu_name: &str, n: usize, seed: u64) -> (f64, f64) {
+    let engine = PredictionEngine::global();
     let gpu = gpu_by_name(gpu_name).unwrap();
     let configs = sample_configs(kind, n, seed);
     let (mut max_err, mut tot_err) = (0.0, 0.0);
     let mut count = 0usize;
     for (i, cfg) in configs.iter().enumerate() {
         let cfg = finalize_for_gpu(cfg, &gpu);
-        let d = cfg.decompose(&gpu);
-        let dist = schedule(&d, &gpu);
-        let fset = FeatureSet::analyze(&d, &dist, &gpu);
+        let a = engine.analyze(&cfg, &gpu);
+        let fset = &a.features;
         let o = oracle::measure(&cfg, &gpu, seed + i as u64);
         // attention also exercises non-tensor pipes, but Table VII compares
         // the dominant math pipe counters

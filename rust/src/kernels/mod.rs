@@ -28,7 +28,7 @@ pub enum Pipe {
 }
 
 /// Element precision of the kernel's operands (Table V).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
     Fp32,
     Bf16,
@@ -149,7 +149,7 @@ impl Decomposition {
 }
 
 /// Fused-MoE Triton launch configuration (§VII tuning space).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MoeConfig {
     pub block_m: u32,
     pub block_n: u32,
@@ -159,7 +159,9 @@ pub struct MoeConfig {
 }
 
 /// Kernel launch description — the model input parameters **X** (§IV-A).
-#[derive(Debug, Clone)]
+/// Hashable/comparable: it is pure launch geometry (no floats), which makes
+/// it usable directly in the engine's analysis-cache key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum KernelConfig {
     /// cuBLAS GEMM: C[M,N] = A[M,K] @ B[K,N].
     Gemm { m: u32, n: u32, k: u32, dtype: DType },

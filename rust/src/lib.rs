@@ -8,6 +8,10 @@
 //! Pipeline: [`kernels`] (Kernel Decomposer) -> [`sched`] (Scheduling
 //! Simulator) -> [`features`] (Feature Analyzer) -> the Performance
 //! Estimator MLP executed through [`runtime`] (PJRT) / [`mlp`].
+//! The whole request path is owned by the shared [`engine`] subsystem
+//! (memoizing analysis cache + parallel fan-out + per-category batched
+//! routing); the [`coordinator`], [`e2e`] evaluator, [`dataset`] builder
+//! and [`experiments`] all route through it.
 //! Ground truth comes from the [`oracle`] testbed (the hardware
 //! substitution documented in DESIGN.md §2).
 
@@ -16,6 +20,7 @@ pub mod dataset;
 pub mod autotune;
 pub mod baselines;
 pub mod e2e;
+pub mod engine;
 pub mod experiments;
 pub mod features;
 pub mod forest;

@@ -215,6 +215,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "mean batch {:.1}, batch p50 {:.0} us, p99 {:.0} us",
         snap.mean_batch, snap.p50_us, snap.p99_us
     );
+    println!(
+        "analysis cache: {} hits / {} misses ({:.0}% hit rate), mean kind-batch {:.1}",
+        snap.cache_hits,
+        snap.cache_misses,
+        100.0 * snap.cache_hit_rate(),
+        snap.mean_kind_batch
+    );
+    let es = synperf::engine::PredictionEngine::global().stats();
+    println!("engine cache: {} entries / {} capacity", es.entries, es.capacity);
     println!("sum of predicted latencies: {:.3} s", total);
     svc.shutdown();
     Ok(())

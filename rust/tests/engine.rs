@@ -1,0 +1,212 @@
+//! Engine-equivalence tests: the shared `PredictionEngine`'s cached and
+//! parallel paths must be *bit-identical* to the direct
+//! decompose → schedule → featurize pipeline, for a mixed batch covering
+//! all six kernel categories — and its cache behavior must be observable
+//! through the coordinator metrics and engine stats (the acceptance
+//! criterion for repeated launches in traces).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use synperf::dataset::finalize_for_gpu;
+use synperf::e2e::comm::CommModel;
+use synperf::e2e::predict::{eval_trace, ModelSet};
+use synperf::e2e::trace::{Op, TraceItem};
+use synperf::engine::{par, PredictionEngine};
+use synperf::features::FeatureSet;
+use synperf::hw::{all_gpus, gpu_by_name, GpuSpec};
+use synperf::kernels::{DType, KernelConfig, MoeConfig};
+use synperf::sched::schedule;
+
+/// One fixed config per kernel category (all six), GPU-independent.
+fn mixed_configs() -> Vec<KernelConfig> {
+    vec![
+        KernelConfig::Gemm { m: 4096, n: 11008, k: 4096, dtype: DType::Bf16 },
+        KernelConfig::ScaledMm { m: 1024, n: 4096, k: 2048 },
+        KernelConfig::Attention {
+            batch: vec![(1024, 1024), (64, 2048)],
+            nh: 16,
+            nkv: 4,
+            hd: 128,
+            causal: true,
+            fa3: false,
+        },
+        KernelConfig::RmsNorm { seq: 2048, dim: 8192 },
+        KernelConfig::SiluMul { seq: 1024, dim: 13824 },
+        KernelConfig::FusedMoe {
+            m: 512,
+            e: 8,
+            topk: 2,
+            h: 2048,
+            n: 1024,
+            expert_tokens: vec![128, 0, 64, 257, 300, 1, 100, 174],
+            cfg: MoeConfig { block_m: 64, block_n: 64, block_k: 64, num_stages: 3, num_warps: 4 },
+        },
+    ]
+}
+
+fn direct_input(cfg: &KernelConfig, gpu: &GpuSpec) -> ([f32; 32], f64) {
+    let cfg = finalize_for_gpu(cfg, gpu);
+    let d = cfg.decompose(gpu);
+    let dist = schedule(&d, gpu);
+    let f = FeatureSet::analyze(&d, &dist, gpu);
+    (f.to_model_input(gpu), f.theory_sec)
+}
+
+#[test]
+fn cached_path_bit_identical_to_direct_path_all_kinds() {
+    let engine = PredictionEngine::new(256);
+    for gpu_name in ["A100", "H800"] {
+        let gpu = gpu_by_name(gpu_name).unwrap();
+        for cfg in mixed_configs() {
+            let (x_direct, theory_direct) = direct_input(&cfg, &gpu);
+            let cold = engine.analyze(&cfg, &gpu);
+            let warm = engine.analyze(&cfg, &gpu);
+            for a in [&cold, &warm] {
+                assert_eq!(a.x, x_direct, "{gpu_name} {:?}: feature vector drifted", cfg.kind());
+                assert_eq!(
+                    a.theory_sec().to_bits(),
+                    theory_direct.to_bits(),
+                    "{gpu_name} {:?}: theory_sec drifted",
+                    cfg.kind()
+                );
+            }
+            assert!(Arc::ptr_eq(&cold, &warm), "second lookup must be the cached Arc");
+        }
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.misses, 12, "6 kinds x 2 GPUs should each miss once");
+    assert_eq!(stats.hits, 12, "every repeat must hit");
+}
+
+#[test]
+fn parallel_batch_matches_serial_batch() {
+    let engine = PredictionEngine::new(256);
+    let mut reqs: Vec<(KernelConfig, GpuSpec)> = Vec::new();
+    for gpu_name in ["A100", "H20", "L20"] {
+        let gpu = gpu_by_name(gpu_name).unwrap();
+        for cfg in mixed_configs() {
+            reqs.push((cfg, gpu.clone()));
+        }
+    }
+    // duplicate the whole batch: half the parallel lookups must hit
+    let doubled: Vec<_> = reqs.iter().chain(reqs.iter()).cloned().collect();
+    let parallel = engine.analyze_batch(&doubled, 8);
+    let serial_engine = PredictionEngine::new(256);
+    for (i, (cfg, gpu)) in doubled.iter().enumerate() {
+        let s = serial_engine.analyze(cfg, gpu);
+        assert_eq!(parallel[i].x, s.x, "row {i}: parallel != serial");
+        assert_eq!(parallel[i].x_alt, s.x_alt, "row {i}: alt features diverged");
+        assert_eq!(parallel[i].theory_sec().to_bits(), s.theory_sec().to_bits());
+    }
+    // Concurrent workers may race on a duplicated key (both miss, both
+    // compute — correctness is unaffected since the value is pure), so only
+    // the totals are exact: every unique key misses at least once and no
+    // lookup is lost.
+    let stats = engine.stats();
+    assert_eq!(stats.hits + stats.misses, doubled.len() as u64);
+    assert!(stats.misses >= reqs.len() as u64);
+}
+
+#[test]
+fn predict_batch_matches_direct_roofline_in_degraded_mode() {
+    // with no trained models, batched predictions are exactly the
+    // theoretical roofs computed by the direct path
+    let engine = PredictionEngine::new(256);
+    let gpu = gpu_by_name("H800").unwrap();
+    let reqs: Vec<(KernelConfig, GpuSpec)> =
+        mixed_configs().into_iter().map(|c| (c, gpu.clone())).collect();
+    let out = engine.predict_batch(&HashMap::new(), &reqs);
+    assert_eq!(out.kind_groups, 6);
+    for (i, (cfg, gpu)) in reqs.iter().enumerate() {
+        let (_, theory) = direct_input(cfg, gpu);
+        assert_eq!(
+            out.latencies[i].to_bits(),
+            theory.to_bits(),
+            "req {i}: degraded prediction must equal the direct roof"
+        );
+    }
+}
+
+#[test]
+fn occupancy_never_zero_for_any_kind_on_any_gpu() {
+    for gpu in all_gpus() {
+        for cfg in mixed_configs() {
+            let cfg = finalize_for_gpu(&cfg, &gpu);
+            let d = cfg.decompose(&gpu);
+            assert!(
+                d.cta.occupancy(&gpu) >= 1,
+                "{} {:?}: occupancy returned 0",
+                gpu.name,
+                cfg.kind()
+            );
+        }
+    }
+}
+
+#[test]
+fn par_map_is_deterministic_across_thread_counts() {
+    let items: Vec<u32> = (0..500).collect();
+    let gpu = gpu_by_name("A40").unwrap();
+    let engine = PredictionEngine::new(1024);
+    let f = |_: usize, seq: &u32| {
+        engine.analyze(&KernelConfig::RmsNorm { seq: seq + 1, dim: 1024 }, &gpu).theory_sec()
+    };
+    let one = par::par_map(&items, 1, f);
+    let many = par::par_map(&items, 8, f);
+    assert_eq!(one.len(), many.len());
+    for (a, b) in one.iter().zip(&many) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn repeated_trace_launches_hit_the_decomposition_cache() {
+    // The acceptance check: an inference trace repeats identical kernel
+    // launches (layers x steps); eval_trace routes through the shared
+    // engine, so the repeats must show up as cache hits in the engine
+    // stats. Unique shapes keep this test independent of other tests
+    // sharing the global engine.
+    let gpu = gpu_by_name("L20").unwrap();
+    let kernel = KernelConfig::RmsNorm { seq: 3511, dim: 5279 };
+    let trace: Vec<TraceItem> = (0..12)
+        .map(|_| TraceItem { op: Op::Kernel(kernel.clone()), count: 2.0 })
+        .collect();
+    let models = ModelSet {
+        synperf: HashMap::new(),
+        neusight: HashMap::new(),
+        linear: HashMap::new(),
+    };
+    let comm = CommModel::train(&gpu, 3);
+
+    let engine = PredictionEngine::global();
+    let before = engine.stats();
+    let totals = eval_trace(&trace, &gpu, 1, &models, &comm, 99).unwrap();
+    let after = engine.stats();
+
+    assert!(totals.actual > 0.0 && totals.synperf > 0.0);
+    // 12 identical launches: at most one miss belongs to this config, so at
+    // least 11 of the lookups must have hit the cache
+    assert!(
+        after.hits - before.hits >= 11,
+        "repeated launches must hit: {} -> {} hits",
+        before.hits,
+        after.hits
+    );
+}
+
+#[test]
+fn service_and_dataset_share_the_global_engine() {
+    use synperf::coordinator::{PredictionService, ServiceConfig};
+    // a unique shape first analyzed via dataset::make_sample must already
+    // be cached when the service sees it
+    let gpu = gpu_by_name("RTX A6000").unwrap();
+    let cfg = KernelConfig::SiluMul { seq: 2731, dim: 6007 };
+    let _ = synperf::dataset::make_sample(&cfg, &gpu, 5);
+
+    let svc = PredictionService::spawn(HashMap::new, ServiceConfig::default());
+    let v = svc.predict(cfg, &gpu).unwrap();
+    assert!(v > 0.0);
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.cache_hits, 1, "service must reuse the dataset-built analysis");
+    svc.shutdown();
+}

@@ -1,0 +1,264 @@
+//! Offline stub of the `xla` (xla-rs) PJRT surface that SynPerf's runtime
+//! layer compiles against.
+//!
+//! The container image that runs tier-1 verification has no
+//! `xla_extension` shared library and no crates.io registry, so this path
+//! crate provides the exact API shape the runtime uses with one behavioral
+//! difference: [`PjRtClient::cpu`] always returns an "unavailable" error.
+//! `runtime::Engine::new` therefore fails cleanly and every PJRT-dependent
+//! code path (training, Predictor construction, the runtime integration
+//! tests) skips gracefully — the same degraded mode as a machine where
+//! `make artifacts` has not been run.
+//!
+//! [`Literal`] construction and conversion are implemented for real (they
+//! are cheap host-side containers), so literal-building helpers keep
+//! working and unit-testable without a PJRT backend.
+//!
+//! To enable the real PJRT runtime, point the `xla` path dependency in
+//! `rust/Cargo.toml` at an xla-rs checkout with `xla_extension` installed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries the failing operation name.
+#[derive(Debug, Clone)]
+pub struct Error {
+    op: &'static str,
+}
+
+impl Error {
+    fn unavailable(op: &'static str) -> Error {
+        Error { op }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "PJRT unavailable ({}): synperf was built against the offline xla stub",
+            self.op
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Typed element storage for [`Literal`].
+#[derive(Debug, Clone)]
+enum LitData {
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+}
+
+/// Host-side literal: element buffer + dimensions. Fully functional.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LitData,
+    dims: Vec<i64>,
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for u32 {}
+}
+
+/// Element types a [`Literal`] can hold or yield.
+pub trait NativeType: sealed::Sealed + Copy {
+    fn wrap(data: Vec<Self>) -> LitDataWrapper;
+    fn unwrap_slice(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+/// Opaque constructor payload (keeps `LitData` private).
+pub struct LitDataWrapper(LitData);
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LitDataWrapper {
+        LitDataWrapper(LitData::F32(data))
+    }
+    fn unwrap_slice(lit: &Literal) -> Option<Vec<f32>> {
+        match &lit.data {
+            LitData::F32(v) => Some(v.clone()),
+            LitData::U32(_) => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn wrap(data: Vec<u32>) -> LitDataWrapper {
+        LitDataWrapper(LitData::U32(data))
+    }
+    fn unwrap_slice(lit: &Literal) -> Option<Vec<u32>> {
+        match &lit.data {
+            LitData::U32(v) => Some(v.clone()),
+            LitData::F32(_) => None,
+        }
+    }
+}
+
+/// Anything accepted by [`Literal::vec1`]: slices and fixed-size arrays of a
+/// native element type (matches the call shapes used by the runtime).
+pub trait AsNativeSlice {
+    type Elem: NativeType;
+    fn as_native_slice(&self) -> &[Self::Elem];
+}
+
+impl AsNativeSlice for &[f32] {
+    type Elem = f32;
+    fn as_native_slice(&self) -> &[f32] {
+        self
+    }
+}
+
+impl AsNativeSlice for &[u32] {
+    type Elem = u32;
+    fn as_native_slice(&self) -> &[u32] {
+        self
+    }
+}
+
+impl<const N: usize> AsNativeSlice for &[f32; N] {
+    type Elem = f32;
+    fn as_native_slice(&self) -> &[f32] {
+        &self[..]
+    }
+}
+
+impl<const N: usize> AsNativeSlice for &[u32; N] {
+    type Elem = u32;
+    fn as_native_slice(&self) -> &[u32] {
+        &self[..]
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice (or fixed-size array reference).
+    pub fn vec1<D: AsNativeSlice>(data: D) -> Literal {
+        let slice = data.as_native_slice();
+        let LitDataWrapper(data) = D::Elem::wrap(slice.to_vec());
+        Literal { data, dims: vec![slice.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let len = match &self.data {
+            LitData::F32(v) => v.len(),
+            LitData::U32(v) => v.len(),
+        };
+        if n as usize != len {
+            return Err(Error::unavailable("reshape: element count mismatch"));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Extract the elements as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap_slice(self).ok_or(Error::unavailable("to_vec: element type mismatch"))
+    }
+
+    /// Flatten a tuple literal into its elements. The stub has no tuple
+    /// layout, so a literal is treated as the single-element tuple.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Ok(vec![self])
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(v: f32) -> Literal {
+        Literal { data: LitData::F32(vec![v]), dims: vec![] }
+    }
+}
+
+/// Parsed HLO module (never constructible through the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT device buffer handle (unreachable through the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Loaded executable (unreachable through the stub: compilation fails first).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client. [`PjRtClient::cpu`] is the single entry point and always
+/// fails in the stub, which makes every downstream consumer skip cleanly.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn literals_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0][..]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert!(l.to_vec::<u32>().is_err());
+        let k = [7u32, 9u32];
+        let lk = Literal::vec1(&k).reshape(&[2]).unwrap();
+        assert_eq!(lk.to_vec::<u32>().unwrap(), vec![7, 9]);
+        let s = Literal::from(1.5f32);
+        assert_eq!(s.dims().len(), 0);
+    }
+}
