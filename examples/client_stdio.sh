@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Drive the protocol-v1 JSONL wire surface (`synperf serve --stdio`) from a
+# clean checkout: pipe a handful of requests across kernels and GPUs into
+# the service and assert well-formed, correlated responses come back.
+# Without trained artifacts the service answers in degraded roofline mode,
+# which the responses make explicit ("source":"roofline").
+#
+#   ./examples/client_stdio.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+REQUESTS='{"v":1,"id":"g1","gpu":"A100","kernel":{"type":"gemm","m":4096,"n":4096,"k":4096,"dtype":"bf16"},"tag":"demo"}
+{"v":1,"id":"g2","gpu":"H800","kernel":{"type":"gemm","m":4096,"n":4096,"k":4096}}
+{"v":1,"id":"a1","gpu":"H100","kernel":{"type":"attention","batch":[[1024,1024],[64,2048]],"nh":16,"nkv":4,"hd":128}}
+{"v":1,"id":"r1","gpu":"L40","kernel":{"type":"rmsnorm","seq":2048,"dim":8192},"breakdown":true}
+{"v":1,"id":"s1","gpu":"A40","kernel":{"type":"silu_mul","seq":1024,"dim":13824},"flavor":"p80"}
+{"v":1,"id":"m1","gpu":"H20","kernel":{"type":"fused_moe","m":512,"e":8,"topk":2,"h":2048,"n":1024}}
+{"v":1,"id":"bad-gpu","gpu":"B300","kernel":{"type":"gemm","m":1,"n":1,"k":1}}
+{"v":1,"id":"bad-kernel","gpu":"A100","kernel":{"type":"conv2d"}}'
+
+OUT=$(printf '%s\n' "$REQUESTS" | cargo run --release --quiet --bin synperf -- serve --stdio --queue-cap 64)
+printf '%s\n' "$OUT"
+
+lines=$(printf '%s\n' "$OUT" | wc -l | tr -d ' ')
+[ "$lines" -eq 8 ] || { echo "FAIL: expected 8 response lines, got $lines"; exit 1; }
+
+ok=$(printf '%s\n' "$OUT" | grep -c '"ok":true')
+[ "$ok" -eq 6 ] || { echo "FAIL: expected 6 ok responses, got $ok"; exit 1; }
+
+# every successful answer carries provenance and a positive latency
+[ "$(printf '%s\n' "$OUT" | grep '"ok":true' | grep -c '"source":')" -eq 6 ] \
+  || { echo "FAIL: responses missing provenance"; exit 1; }
+if printf '%s\n' "$OUT" | grep '"ok":true' | grep -q '"latency_sec":0e0'; then
+  echo "FAIL: zero latency answer"; exit 1
+fi
+
+# request ids are echoed back for correlation
+for id in g1 g2 a1 r1 s1 m1; do
+  printf '%s\n' "$OUT" | grep -q "\"id\":\"$id\",\"ok\":true" \
+    || { echo "FAIL: no ok response for id $id"; exit 1; }
+done
+
+# the closed error taxonomy travels the wire
+printf '%s\n' "$OUT" | grep -q '"id":"bad-gpu","ok":false,"error":{"code":"unknown_gpu"' \
+  || { echo "FAIL: unknown_gpu error missing"; exit 1; }
+printf '%s\n' "$OUT" | grep -q '"id":"bad-kernel","ok":false,"error":{"code":"unsupported_kernel"' \
+  || { echo "FAIL: unsupported_kernel error missing"; exit 1; }
+
+# the breakdown request got its per-pipeline feature block
+printf '%s\n' "$OUT" | grep '"id":"r1"' | grep -q '"breakdown":{"tensor"' \
+  || { echo "FAIL: breakdown missing"; exit 1; }
+
+# a p80 request is answered with its flavor echoed
+printf '%s\n' "$OUT" | grep '"id":"s1"' | grep -q '"flavor":"p80"' \
+  || { echo "FAIL: p80 flavor not echoed"; exit 1; }
+
+echo "client_stdio: all assertions passed"

@@ -1,49 +1,48 @@
-//! Serving example: the Layer-3 coordinator as a prediction service with
-//! dynamic batching. Multiple client threads fire mixed kernel prediction
-//! requests; the service batches them (size/deadline), routes per kernel
-//! category to the AOT'd MLP executables, and reports throughput + batch
-//! statistics.
+//! Serving example: the Layer-3 coordinator as a protocol-v1 prediction
+//! service with dynamic batching and a bounded request queue. Multiple
+//! client threads fire mixed kernel prediction requests through cloned
+//! [`Client`] handles; the service batches them (size/deadline), routes per
+//! kernel category to the AOT'd MLP executables, and answers with
+//! provenance-carrying `PredictResponse`s.
 //!
 //!   cargo run --release --example serve_predictions
 //!
-//! Runs in degraded (roofline-answer) mode if `make artifacts` hasn't run.
+//! Runs in degraded (roofline-answer) mode if `make artifacts` hasn't run —
+//! visible per answer as `provenance.source == Source::Roofline`.
 
+use synperf::api::{ModelBundle, PredictRequest, Source};
 use synperf::coordinator::{PredictionService, ServiceConfig};
-use synperf::experiments::{Lab, ModelFlavor, Scale};
+use synperf::experiments::{Lab, Scale};
 use synperf::hw;
 use synperf::kernels::{DType, KernelConfig, KernelKind};
 use synperf::util::rng::Rng;
-use std::sync::Arc;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    let svc = Arc::new(PredictionService::spawn(
-        || {
-            let mut models = std::collections::HashMap::new();
-            if let Ok(lab) = Lab::new(Scale::Fast) {
-                for kind in [KernelKind::Gemm, KernelKind::RmsNorm, KernelKind::SiluMul] {
-                    if let Ok(p) = lab.model(kind, ModelFlavor::SynPerf) {
-                        models.insert(kind, p);
-                    }
-                }
-            } else {
-                eprintln!("(no artifacts — serving degraded roofline answers)");
+    let svc = PredictionService::spawn(
+        || match Lab::new(Scale::Fast) {
+            Ok(lab) => {
+                lab.bundle(&[KernelKind::Gemm, KernelKind::RmsNorm, KernelKind::SiluMul])
             }
-            models
+            Err(_) => {
+                eprintln!("(no artifacts — serving degraded roofline answers)");
+                ModelBundle::default()
+            }
         },
         ServiceConfig::default(),
-    ));
+    );
 
     let n_clients = 4;
     let per_client = 256;
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n_clients)
         .map(|c| {
-            let svc = svc.clone();
+            let client = svc.client();
             std::thread::spawn(move || {
                 let mut rng = Rng::new(c as u64);
                 let gpus = hw::all_gpus();
                 let mut sum = 0.0;
+                let mut mlp_answers = 0usize;
                 for i in 0..per_client {
                     let gpu = gpus[(c + i) % gpus.len()].clone();
                     let cfg = match i % 3 {
@@ -62,15 +61,24 @@ fn main() -> anyhow::Result<()> {
                             dim: rng.log_range_u32(768, 65536),
                         },
                     };
-                    sum += svc.submit(cfg, gpu).recv().expect("service alive");
+                    let resp = client
+                        .predict(PredictRequest::new(cfg, gpu).tagged(format!("c{c}")))
+                        .expect("service alive");
+                    sum += resp.latency_sec;
+                    if resp.provenance.source == Source::Mlp {
+                        mlp_answers += 1;
+                    }
                 }
-                sum
+                (sum, mlp_answers)
             })
         })
         .collect();
     let mut total_pred = 0.0;
+    let mut total_mlp = 0usize;
     for h in handles {
-        total_pred += h.join().expect("client thread");
+        let (sum, mlp) = h.join().expect("client thread");
+        total_pred += sum;
+        total_mlp += mlp;
     }
     let wall = t0.elapsed();
     let n = n_clients * per_client;
@@ -78,10 +86,18 @@ fn main() -> anyhow::Result<()> {
     println!("served {n} predictions from {n_clients} clients in {wall:.2?}");
     println!("throughput: {:.0} predictions/s", n as f64 / wall.as_secs_f64());
     println!(
+        "provenance: {total_mlp} mlp answers / {} roofline answers",
+        n - total_mlp
+    );
+    println!(
         "batches: {} (mean size {:.1}), batch latency p50 {:.0} us / p99 {:.0} us",
         snap.batches, snap.mean_batch, snap.p50_us, snap.p99_us
     );
+    println!(
+        "backpressure: rejected {}, max queue depth {}",
+        snap.rejected_requests, snap.max_queue_depth
+    );
     println!("sum of predicted latencies: {total_pred:.3} s");
-    Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    svc.shutdown();
     Ok(())
 }

@@ -139,19 +139,27 @@ fn main() {
     println!("{}", r.report());
 
     println!("\n== coordinator service ==");
-    let svc = PredictionService::spawn(std::collections::HashMap::new, ServiceConfig::default());
+    let svc = PredictionService::spawn(
+        synperf::api::ModelBundle::default,
+        ServiceConfig::default(),
+    );
+    let client = svc.client();
     let t0 = std::time::Instant::now();
     let n = 2000;
-    let rxs: Vec<_> = (0..n)
+    // blocking submits: the bounded queue applies backpressure while the
+    // service drains, instead of accumulating an unbounded backlog
+    let pendings: Vec<_> = (0..n)
         .map(|i| {
-            svc.submit(
-                KernelConfig::RmsNorm { seq: 128 + (i % 64) as u32, dim: 4096 },
-                gpu.clone(),
-            )
+            client
+                .submit(synperf::api::PredictRequest::new(
+                    KernelConfig::RmsNorm { seq: 128 + (i % 64) as u32, dim: 4096 },
+                    gpu.clone(),
+                ))
+                .unwrap()
         })
         .collect();
-    for rx in rxs {
-        rx.recv().unwrap();
+    for p in pendings {
+        p.wait().unwrap();
     }
     let wall = t0.elapsed();
     let snap = svc.metrics.snapshot();

@@ -1,0 +1,666 @@
+//! **Prediction protocol v1** — the typed request/response surface every
+//! prediction consumer in the tree speaks (paper §VI: the coordinator
+//! answers kernel-latency queries for system-level exploration).
+//!
+//! Before this subsystem, every layer answered with a bare `f64` over an
+//! unbounded channel: a caller could not tell a trained-MLP prediction from
+//! a degraded roofline fallback, a cache hit from a miss, or a real failure
+//! from a silent default. The protocol fixes that:
+//!
+//!  * [`PredictRequest`] — kernel config + GPU + a builder for the options
+//!    (mean vs p80 ceiling flavor, strict vs allow-degraded, per-pipeline
+//!    feature breakdown, trace tags);
+//!  * [`PredictResponse`] — latency plus [`Provenance`] (`Mlp` vs
+//!    `Roofline`, analysis-cache hit), the answering model [`Flavor`], and
+//!    an optional [`Breakdown`];
+//!  * [`PredictError`] — the **closed** error taxonomy (unknown GPU,
+//!    unsupported kernel, predictor unavailable, queue full, shutdown)
+//!    replacing stringly `anyhow` at every public edge.
+//!
+//! [`predict_batch`] / [`predict_one`] are the *only* code that routes
+//! feature vectors into the per-category MLPs; the coordinator service, the
+//! E2E evaluator, the experiments and the CLI all call through here, so
+//! there is exactly one request path. The same protocol is exposed
+//! externally as a JSONL wire surface ([`wire`], `synperf serve --stdio`;
+//! line-delimited requests in, line-delimited responses out — [`stdio`]).
+
+pub mod stdio;
+pub mod wire;
+
+use crate::dataset::Sample;
+use crate::engine::{Analysis, PredictionEngine};
+use crate::features::FEATURE_DIM;
+use crate::hw::{gpu_by_name, GpuSpec};
+use crate::kernels::{KernelConfig, KernelKind};
+use crate::mlp::Predictor;
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::sync::Arc;
+
+/// Wire/API protocol version; bumped on incompatible schema changes.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Which trained model answers: the mean-accuracy SynPerf MLP or the
+/// pinball-τ=0.8 "performance ceiling" model (§VII).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Flavor {
+    Mean,
+    P80,
+}
+
+impl Flavor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Flavor::Mean => "mean",
+            Flavor::P80 => "p80",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Flavor> {
+        match s {
+            "mean" => Some(Flavor::Mean),
+            "p80" => Some(Flavor::P80),
+            _ => None,
+        }
+    }
+}
+
+/// Where a prediction came from — the provenance half every caller used to
+/// be blind to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    /// The trained per-category MLP answered.
+    Mlp,
+    /// Degraded mode: no trained model for the category (or its forward
+    /// failed), so the answer is the analytical theory roof.
+    Roofline,
+}
+
+impl Source {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Source::Mlp => "mlp",
+            Source::Roofline => "roofline",
+        }
+    }
+}
+
+/// Provenance of one answer: prediction source + whether the analytical
+/// half came from the engine's memoizing cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Provenance {
+    pub source: Source,
+    pub cache_hit: bool,
+}
+
+/// Request options (see the [`PredictRequest`] builder methods).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictOptions {
+    pub flavor: Flavor,
+    /// When `false`, a category without a usable MLP answers
+    /// [`PredictError::PredictorUnavailable`] instead of the roofline.
+    pub allow_degraded: bool,
+    /// Attach the per-pipeline [`Breakdown`] to the response.
+    pub with_breakdown: bool,
+    /// Opaque trace tag echoed back in the response (request correlation
+    /// for trace-level callers and the JSONL surface).
+    pub tag: Option<String>,
+}
+
+impl Default for PredictOptions {
+    fn default() -> Self {
+        PredictOptions {
+            flavor: Flavor::Mean,
+            allow_degraded: true,
+            with_breakdown: false,
+            tag: None,
+        }
+    }
+}
+
+/// A typed prediction request: one kernel launch on one GPU.
+#[derive(Debug, Clone)]
+pub struct PredictRequest {
+    pub cfg: KernelConfig,
+    pub gpu: GpuSpec,
+    pub opts: PredictOptions,
+}
+
+impl PredictRequest {
+    pub fn new(cfg: KernelConfig, gpu: GpuSpec) -> PredictRequest {
+        PredictRequest { cfg, gpu, opts: PredictOptions::default() }
+    }
+
+    /// Ask the pinball-τ=0.8 ceiling model instead of the mean model.
+    pub fn p80(mut self) -> Self {
+        self.opts.flavor = Flavor::P80;
+        self
+    }
+
+    /// Refuse degraded roofline answers: an untrained category errors with
+    /// [`PredictError::PredictorUnavailable`].
+    pub fn strict(mut self) -> Self {
+        self.opts.allow_degraded = false;
+        self
+    }
+
+    /// Attach the per-pipeline feature breakdown to the response.
+    pub fn with_breakdown(mut self) -> Self {
+        self.opts.with_breakdown = true;
+        self
+    }
+
+    /// Attach an opaque correlation tag, echoed back in the response.
+    pub fn tagged(mut self, tag: impl Into<String>) -> Self {
+        self.opts.tag = Some(tag.into());
+        self
+    }
+
+    /// Validate the launch geometry against the closed error taxonomy.
+    pub fn validate(&self) -> Result<(), PredictError> {
+        validate_config(&self.cfg)
+    }
+}
+
+/// Per-pipe demand statistics (Table III pipes), attached on request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipeStat {
+    pub total_ops: f64,
+    pub max_sm_ops: f64,
+    pub total_cycles: f64,
+}
+
+/// Per-pipeline feature breakdown of the analyzed launch (Table IV view) —
+/// what `opts.with_breakdown` attaches to the response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Breakdown {
+    pub tensor: PipeStat,
+    pub fma: PipeStat,
+    pub xu: PipeStat,
+    /// Total MIO bytes moved (loads + stores).
+    pub mio_bytes: f64,
+    /// DRAM cycles of the memory subsystem model.
+    pub dram_cycles: f64,
+    /// The §IV synthesis roof the efficiency prediction scales.
+    pub theory_sec: f64,
+    /// The naive-roofline baseline answer for the same launch.
+    pub naive_roofline_sec: f64,
+}
+
+impl Breakdown {
+    fn from_analysis(a: &Analysis) -> Breakdown {
+        let pipe = |p: &crate::features::PipeAgg| PipeStat {
+            total_ops: p.total_ops,
+            max_sm_ops: p.max_sm_ops,
+            total_cycles: p.total_cycles,
+        };
+        Breakdown {
+            tensor: pipe(&a.features.tensor),
+            fma: pipe(&a.features.fma),
+            xu: pipe(&a.features.xu),
+            mio_bytes: a.features.mio.total_bytes,
+            dram_cycles: a.features.mio.cycles_dram,
+            theory_sec: a.features.theory_sec,
+            naive_roofline_sec: a.features.naive_roofline_sec,
+        }
+    }
+}
+
+/// A typed prediction answer. Never a bare number: latency always travels
+/// with its provenance and the flavor that produced it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictResponse {
+    pub latency_sec: f64,
+    pub provenance: Provenance,
+    pub flavor: Flavor,
+    pub kind: KernelKind,
+    /// Echoed GPU name.
+    pub gpu: String,
+    pub breakdown: Option<Breakdown>,
+    /// Echoed request tag.
+    pub tag: Option<String>,
+}
+
+/// The closed error taxonomy of protocol v1. Every public prediction edge
+/// answers with one of these — no stringly `anyhow` leaks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PredictError {
+    /// The named GPU is not in the Table-VI spec database.
+    UnknownGpu(String),
+    /// The kernel description is malformed or outside the modeled space.
+    UnsupportedKernel(String),
+    /// `allow_degraded` was off and the category has no usable MLP.
+    PredictorUnavailable(KernelKind),
+    /// The bounded request queue is at capacity (backpressure signal).
+    QueueFull,
+    /// The service is shutting down (or already gone).
+    Shutdown,
+}
+
+impl PredictError {
+    /// Stable machine-readable code (the `error.code` of the wire surface).
+    pub fn code(&self) -> &'static str {
+        match self {
+            PredictError::UnknownGpu(_) => "unknown_gpu",
+            PredictError::UnsupportedKernel(_) => "unsupported_kernel",
+            PredictError::PredictorUnavailable(_) => "predictor_unavailable",
+            PredictError::QueueFull => "queue_full",
+            PredictError::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl fmt::Display for PredictError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PredictError::UnknownGpu(name) => {
+                write!(f, "unknown GPU {name:?} (see Table VI)")
+            }
+            PredictError::UnsupportedKernel(why) => {
+                write!(f, "unsupported kernel: {why}")
+            }
+            PredictError::PredictorUnavailable(kind) => {
+                write!(f, "no trained predictor for category {:?} (degraded answers disabled)", kind)
+            }
+            PredictError::QueueFull => write!(f, "prediction queue at capacity"),
+            PredictError::Shutdown => write!(f, "prediction service is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for PredictError {}
+
+/// Resolve a GPU by Table-VI name, with the typed error.
+pub fn resolve_gpu(name: &str) -> Result<GpuSpec, PredictError> {
+    gpu_by_name(name).ok_or_else(|| PredictError::UnknownGpu(name.to_string()))
+}
+
+/// Validate launch geometry: the request-path guard behind
+/// [`PredictError::UnsupportedKernel`].
+pub fn validate_config(cfg: &KernelConfig) -> Result<(), PredictError> {
+    let bad = |why: String| Err(PredictError::UnsupportedKernel(why));
+    match cfg {
+        KernelConfig::Gemm { m, n, k, .. } | KernelConfig::ScaledMm { m, n, k } => {
+            if *m == 0 || *n == 0 || *k == 0 {
+                return bad(format!("gemm dims must be positive, got {m}x{n}x{k}"));
+            }
+        }
+        KernelConfig::Attention { batch, nh, nkv, hd, .. } => {
+            if batch.is_empty() {
+                return bad("attention batch must be non-empty".into());
+            }
+            if *nkv == 0 || *nh < *nkv || *hd == 0 {
+                return bad(format!("attention heads invalid: nh={nh} nkv={nkv} hd={hd}"));
+            }
+            for (q, kv) in batch {
+                if *q == 0 || kv < q {
+                    return bad(format!("attention request (q={q}, kv={kv}) needs kv >= q >= 1"));
+                }
+            }
+        }
+        KernelConfig::RmsNorm { seq, dim } | KernelConfig::SiluMul { seq, dim } => {
+            if *seq == 0 || *dim == 0 {
+                return bad(format!("shape must be positive, got {seq}x{dim}"));
+            }
+        }
+        KernelConfig::FusedMoe { m, e, topk, h, n, expert_tokens, .. } => {
+            if *m == 0 || *e == 0 || *topk == 0 || *h == 0 || *n == 0 {
+                return bad(format!(
+                    "fused_moe dims must be positive (m={m} e={e} topk={topk} h={h} n={n})"
+                ));
+            }
+            if expert_tokens.len() != *e as usize {
+                return bad(format!(
+                    "fused_moe expert_tokens has {} entries for e={e} experts",
+                    expert_tokens.len()
+                ));
+            }
+            let routed: u64 = expert_tokens.iter().map(|&t| t as u64).sum();
+            if routed != *m as u64 * *topk as u64 {
+                return bad(format!(
+                    "fused_moe routing is inconsistent: expert_tokens sums to {routed}, expected m*topk = {}",
+                    *m as u64 * *topk as u64
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The per-flavor trained model maps a service (or a local caller) owns.
+/// Missing categories answer in degraded roofline mode (when allowed).
+#[derive(Default)]
+pub struct ModelBundle {
+    pub mean: HashMap<KernelKind, Predictor>,
+    pub p80: HashMap<KernelKind, Predictor>,
+}
+
+impl ModelBundle {
+    /// Bundle with only mean-flavor models (the common case).
+    pub fn with_mean(mean: HashMap<KernelKind, Predictor>) -> ModelBundle {
+        ModelBundle { mean, p80: HashMap::new() }
+    }
+
+    fn map(&self, flavor: Flavor) -> &HashMap<KernelKind, Predictor> {
+        match flavor {
+            Flavor::Mean => &self.mean,
+            Flavor::P80 => &self.p80,
+        }
+    }
+}
+
+/// Which feature view feeds the MLP: the SynPerf Table-IV vector or the
+/// Neusight-baseline tile-level vector (used by the E2E comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureView {
+    SynPerf,
+    Neusight,
+}
+
+/// An untyped-options routed prediction: latency + provenance. The internal
+/// currency of [`predict_batch_view`]; typed callers get [`PredictResponse`].
+#[derive(Debug, Clone, Copy)]
+pub struct RawPrediction {
+    pub latency_sec: f64,
+    pub kind: KernelKind,
+    pub provenance: Provenance,
+}
+
+/// Aggregate outcome of one typed batch round (the coordinator metrics
+/// consume the counters).
+#[derive(Debug)]
+pub struct BatchReport {
+    /// Per-request results, in input order.
+    pub results: Vec<Result<PredictResponse, PredictError>>,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// Distinct (flavor, category) MLP sub-batches this round routed into.
+    pub kind_groups: usize,
+}
+
+/// The one batched routing path: featurize every launch through the shared
+/// engine cache, group by kernel category, run one MLP forward per
+/// category, return latencies with provenance in input order. Categories
+/// without a usable model answer the theory roof with
+/// [`Source::Roofline`] — per category, so one failing model never
+/// degrades the whole batch. Infallible by construction.
+pub fn predict_batch_view(
+    models: &HashMap<KernelKind, Predictor>,
+    view: FeatureView,
+    reqs: &[(KernelConfig, GpuSpec)],
+) -> Vec<RawPrediction> {
+    let engine = PredictionEngine::global();
+    let analyses: Vec<(Arc<Analysis>, bool)> =
+        reqs.iter().map(|(cfg, gpu)| engine.analyze_hit(cfg, gpu)).collect();
+
+    let mut groups: HashMap<KernelKind, Vec<usize>> = HashMap::new();
+    for (i, (a, _)) in analyses.iter().enumerate() {
+        groups.entry(a.kind).or_default().push(i);
+    }
+
+    let mut out: Vec<Option<RawPrediction>> = vec![None; reqs.len()];
+    for (kind, idxs) in groups {
+        let xs: Vec<[f32; FEATURE_DIM]> = idxs
+            .iter()
+            .map(|&i| match view {
+                FeatureView::SynPerf => analyses[i].0.x,
+                FeatureView::Neusight => analyses[i].0.x_alt,
+            })
+            .collect();
+        let (effs, source) = match models.get(&kind).map(|p| p.predict_eff(&xs)) {
+            Some(Ok(effs)) => (effs, Source::Mlp),
+            // untrained category, or a failing forward: the documented
+            // degraded mode — efficiency 1.0 is exactly the theory roof
+            Some(Err(_)) | None => (vec![1.0; xs.len()], Source::Roofline),
+        };
+        for (&i, eff) in idxs.iter().zip(effs) {
+            let a = &analyses[i].0;
+            let theory = match view {
+                FeatureView::SynPerf => a.features.theory_sec,
+                FeatureView::Neusight => a.alt_theory_sec,
+            };
+            out[i] = Some(RawPrediction {
+                latency_sec: theory / eff,
+                kind,
+                provenance: Provenance { source, cache_hit: analyses[i].1 },
+            });
+        }
+    }
+    out.into_iter().map(|p| p.expect("every request routed")).collect()
+}
+
+/// Typed batch prediction: validate, route per flavor through
+/// [`predict_batch_view`], and assemble provenance-carrying responses.
+/// Results are in input order; a bad request yields its typed error without
+/// affecting the rest of the batch.
+pub fn predict_batch(bundle: &ModelBundle, reqs: &[PredictRequest]) -> BatchReport {
+    let engine = PredictionEngine::global();
+    let mut results: Vec<Option<Result<PredictResponse, PredictError>>> =
+        (0..reqs.len()).map(|_| None).collect();
+    let mut cache_hits = 0usize;
+    let mut cache_misses = 0usize;
+    let mut groups: HashSet<(Flavor, KernelKind)> = HashSet::new();
+
+    for flavor in [Flavor::Mean, Flavor::P80] {
+        let mut idxs = Vec::new();
+        let mut pairs = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            if r.opts.flavor != flavor {
+                continue;
+            }
+            match r.validate() {
+                Ok(()) => {
+                    idxs.push(i);
+                    pairs.push((r.cfg.clone(), r.gpu.clone()));
+                }
+                Err(e) => results[i] = Some(Err(e)),
+            }
+        }
+        if idxs.is_empty() {
+            continue;
+        }
+        let raw = predict_batch_view(bundle.map(flavor), FeatureView::SynPerf, &pairs);
+        for (&i, p) in idxs.iter().zip(&raw) {
+            let req = &reqs[i];
+            if p.provenance.cache_hit {
+                cache_hits += 1;
+            } else {
+                cache_misses += 1;
+            }
+            groups.insert((flavor, p.kind));
+            if p.provenance.source == Source::Roofline && !req.opts.allow_degraded {
+                results[i] = Some(Err(PredictError::PredictorUnavailable(p.kind)));
+                continue;
+            }
+            // the analysis is cached by the routing pass above, so the
+            // breakdown attachment is a cheap cache hit
+            let breakdown = if req.opts.with_breakdown {
+                Some(Breakdown::from_analysis(&engine.analyze(&req.cfg, &req.gpu)))
+            } else {
+                None
+            };
+            results[i] = Some(Ok(PredictResponse {
+                latency_sec: p.latency_sec,
+                provenance: p.provenance,
+                flavor,
+                kind: p.kind,
+                gpu: req.gpu.name.to_string(),
+                breakdown,
+                tag: req.opts.tag.clone(),
+            }));
+        }
+    }
+    BatchReport {
+        results: results.into_iter().map(|r| r.expect("every request answered")).collect(),
+        cache_hits,
+        cache_misses,
+        kind_groups: groups.len(),
+    }
+}
+
+/// Single typed prediction (see [`predict_batch`]).
+pub fn predict_one(
+    bundle: &ModelBundle,
+    req: &PredictRequest,
+) -> Result<PredictResponse, PredictError> {
+    predict_batch(bundle, std::slice::from_ref(req))
+        .results
+        .pop()
+        .expect("one request, one result")
+}
+
+/// Validated analyze + oracle-profile into a training [`Sample`] — the
+/// dataset builder's entry into the shared request path.
+pub fn profile_sample(cfg: &KernelConfig, gpu: &GpuSpec, seed: u64) -> Result<Sample, PredictError> {
+    validate_config(cfg)?;
+    Ok(PredictionEngine::global().make_sample(cfg, gpu, seed))
+}
+
+/// Validated dataset build over the engine's parallel fan-out (the sampled
+/// configs are valid by construction; validation guards foreign callers).
+pub fn build_dataset(
+    kind: KernelKind,
+    gpus: &[GpuSpec],
+    n_configs: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<Sample> {
+    PredictionEngine::global().build_dataset(kind, gpus, n_configs, seed, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::DType;
+
+    fn gemm(m: u32, n: u32, k: u32) -> KernelConfig {
+        KernelConfig::Gemm { m, n, k, dtype: DType::Bf16 }
+    }
+
+    #[test]
+    fn builder_sets_options() {
+        let gpu = resolve_gpu("A100").unwrap();
+        let r = PredictRequest::new(gemm(64, 64, 64), gpu).p80().strict().with_breakdown().tagged("t");
+        assert_eq!(r.opts.flavor, Flavor::P80);
+        assert!(!r.opts.allow_degraded);
+        assert!(r.opts.with_breakdown);
+        assert_eq!(r.opts.tag.as_deref(), Some("t"));
+    }
+
+    #[test]
+    fn unknown_gpu_is_typed() {
+        let e = resolve_gpu("TPUv5").unwrap_err();
+        assert_eq!(e, PredictError::UnknownGpu("TPUv5".into()));
+        assert_eq!(e.code(), "unknown_gpu");
+    }
+
+    #[test]
+    fn validation_catches_bad_geometry() {
+        assert!(validate_config(&gemm(0, 64, 64)).is_err());
+        assert!(validate_config(&KernelConfig::Attention {
+            batch: vec![],
+            nh: 8,
+            nkv: 2,
+            hd: 128,
+            causal: true,
+            fa3: false,
+        })
+        .is_err());
+        assert!(validate_config(&KernelConfig::Attention {
+            batch: vec![(128, 64)], // kv < q
+            nh: 8,
+            nkv: 2,
+            hd: 128,
+            causal: true,
+            fa3: false,
+        })
+        .is_err());
+        assert!(validate_config(&KernelConfig::RmsNorm { seq: 4, dim: 0 }).is_err());
+        assert!(validate_config(&gemm(64, 64, 64)).is_ok());
+        // fused_moe: zero tokens and inconsistent routing are both refused
+        let moe = |m: u32, expert_tokens: Vec<u32>| KernelConfig::FusedMoe {
+            m,
+            e: 2,
+            topk: 2,
+            h: 64,
+            n: 32,
+            expert_tokens,
+            cfg: crate::kernels::MoeConfig {
+                block_m: 16,
+                block_n: 64,
+                block_k: 64,
+                num_stages: 4,
+                num_warps: 8,
+            },
+        };
+        assert!(validate_config(&moe(0, vec![0, 0])).is_err());
+        assert!(validate_config(&moe(8, vec![4, 4])).is_err(), "sums to 8, expected 16");
+        assert!(validate_config(&moe(8, vec![10, 6])).is_ok());
+    }
+
+    #[test]
+    fn degraded_batch_is_roofline_with_provenance() {
+        let gpu = resolve_gpu("A100").unwrap();
+        // unique shape: independent of other tests sharing the global engine
+        let reqs = vec![
+            PredictRequest::new(gemm(1733, 911, 641), gpu.clone()),
+            PredictRequest::new(KernelConfig::RmsNorm { seq: 1733, dim: 911 }, gpu.clone()),
+            PredictRequest::new(gemm(1733, 911, 641), gpu.clone()),
+        ];
+        let report = predict_batch(&ModelBundle::default(), &reqs);
+        assert_eq!(report.results.len(), 3);
+        assert_eq!(report.kind_groups, 2);
+        assert_eq!(report.cache_hits + report.cache_misses, 3);
+        let first = report.results[0].as_ref().unwrap();
+        let third = report.results[2].as_ref().unwrap();
+        assert_eq!(first.provenance.source, Source::Roofline);
+        assert_eq!(first.latency_sec.to_bits(), third.latency_sec.to_bits());
+        let direct = PredictionEngine::global().analyze(&reqs[0].cfg, &gpu);
+        assert_eq!(first.latency_sec.to_bits(), direct.theory_sec().to_bits());
+    }
+
+    #[test]
+    fn strict_mode_refuses_degraded_answers() {
+        let gpu = resolve_gpu("H800").unwrap();
+        let req = PredictRequest::new(gemm(257, 769, 513), gpu).strict();
+        let err = predict_one(&ModelBundle::default(), &req).unwrap_err();
+        assert_eq!(err, PredictError::PredictorUnavailable(KernelKind::Gemm));
+        assert_eq!(err.code(), "predictor_unavailable");
+    }
+
+    #[test]
+    fn breakdown_attaches_pipeline_features() {
+        let gpu = resolve_gpu("A100").unwrap();
+        let req = PredictRequest::new(gemm(2048, 2048, 1024), gpu.clone()).with_breakdown();
+        let resp = predict_one(&ModelBundle::default(), &req).unwrap();
+        let b = resp.breakdown.expect("breakdown requested");
+        assert!(b.tensor.total_ops > 0.0);
+        assert!(b.mio_bytes > 0.0);
+        assert!(b.theory_sec > 0.0 && b.naive_roofline_sec > 0.0);
+        assert_eq!(resp.latency_sec.to_bits(), b.theory_sec.to_bits(), "degraded answer is the roof");
+        // a mixed-validity batch answers element-wise
+        let bad = PredictRequest::new(gemm(0, 1, 1), gpu);
+        let report = predict_batch(&ModelBundle::default(), &[req, bad]);
+        assert!(report.results[0].is_ok());
+        assert!(matches!(report.results[1], Err(PredictError::UnsupportedKernel(_))));
+    }
+
+    #[test]
+    fn neusight_view_uses_alt_theory() {
+        let gpu = resolve_gpu("L40").unwrap();
+        let pairs = vec![(gemm(1021, 517, 389), gpu.clone())];
+        let syn = predict_batch_view(&HashMap::new(), FeatureView::SynPerf, &pairs);
+        let neu = predict_batch_view(&HashMap::new(), FeatureView::Neusight, &pairs);
+        let a = PredictionEngine::global().analyze(&pairs[0].0, &gpu);
+        assert_eq!(syn[0].latency_sec.to_bits(), a.features.theory_sec.to_bits());
+        assert_eq!(neu[0].latency_sec.to_bits(), a.alt_theory_sec.to_bits());
+    }
+
+    #[test]
+    fn profile_sample_validates_first() {
+        let gpu = resolve_gpu("A40").unwrap();
+        assert!(profile_sample(&gemm(0, 1, 1), &gpu, 1).is_err());
+        let s = profile_sample(&gemm(512, 512, 256), &gpu, 1).unwrap();
+        assert!(s.latency_sec > 0.0);
+    }
+}

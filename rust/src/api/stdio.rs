@@ -1,0 +1,229 @@
+//! The JSONL stdio surface of `synperf serve --stdio`: one request per line
+//! in, one response per line out, **in input order**. A reader thread
+//! parses and submits lines into the coordinator ([`Client::submit`] blocks
+//! when the bounded queue is full, so backpressure propagates to the peer)
+//! while the caller's thread writes responses as they resolve — an
+//! interactive request/await peer gets each answer promptly, and a
+//! pipelining peer fills real batches. The in-flight window is bounded by
+//! `max_inflight` (a `sync_channel`), bounding memory.
+
+use super::wire;
+use super::{PredictError, PredictResponse};
+use crate::coordinator::{Client, Pending};
+use std::io::{BufRead, Write};
+use std::sync::mpsc::{sync_channel, TryRecvError};
+
+/// Counters the CLI prints on exit (to stderr — stdout carries responses).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StdioStats {
+    pub served: u64,
+    pub errors: u64,
+}
+
+/// One in-flight line: either a queued prediction or an already-decided
+/// (parse/submit) error — delivered in arrival order so output order
+/// matches input order exactly.
+enum Slot {
+    Queued(Option<String>, Pending),
+    Ready(Option<String>, Result<PredictResponse, PredictError>),
+}
+
+/// Run the serve loop until the reader is exhausted. Every input line
+/// produces exactly one output line (blank lines are skipped). The output
+/// is flushed whenever no further response is immediately ready, so an
+/// interactive peer never waits on a stuck buffer or a half-full window.
+pub fn serve_lines<R, W>(
+    client: &Client,
+    reader: R,
+    writer: &mut W,
+    max_inflight: usize,
+) -> std::io::Result<StdioStats>
+where
+    R: BufRead + Send,
+    W: Write,
+{
+    let mut stats = StdioStats::default();
+    let (slot_tx, slot_rx) = sync_channel::<Slot>(max_inflight.max(1));
+    std::thread::scope(|scope| -> std::io::Result<()> {
+        let reader_thread = scope.spawn(move || -> std::io::Result<()> {
+            for line in reader.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let (id, parsed) = wire::parse_request(&line);
+                let slot = match parsed {
+                    Ok(req) => match client.submit(req) {
+                        Ok(pending) => Slot::Queued(id, pending),
+                        Err(e) => Slot::Ready(id, Err(e)),
+                    },
+                    Err(e) => Slot::Ready(id, Err(e)),
+                };
+                // the writer side hung up (output error): stop reading
+                if slot_tx.send(slot).is_err() {
+                    break;
+                }
+            }
+            Ok(())
+        });
+
+        // drain_slots takes the receiver by value: on a writer I/O error
+        // the receiver is dropped before we join, which unblocks the
+        // reader thread's send — the scope join cannot deadlock
+        let drain_res = drain_slots(slot_rx, writer, &mut stats);
+        let read_res = reader_thread.join().expect("stdio reader thread");
+        drain_res?;
+        read_res
+    })?;
+    Ok(stats)
+}
+
+/// Writer side, on the caller's thread: answer slots in order; flush
+/// before blocking so a waiting peer sees everything answered so far.
+fn drain_slots<W: Write>(
+    slot_rx: std::sync::mpsc::Receiver<Slot>,
+    writer: &mut W,
+    stats: &mut StdioStats,
+) -> std::io::Result<()> {
+    loop {
+        let slot = match slot_rx.try_recv() {
+            Ok(slot) => slot,
+            Err(TryRecvError::Empty) => {
+                writer.flush()?;
+                match slot_rx.recv() {
+                    Ok(slot) => slot,
+                    Err(_) => break, // reader done, everything drained
+                }
+            }
+            Err(TryRecvError::Disconnected) => break,
+        };
+        let (id, res) = match slot {
+            Slot::Queued(id, pending) => (id, pending.wait()),
+            Slot::Ready(id, res) => (id, res),
+        };
+        stats.served += 1;
+        if res.is_err() {
+            stats.errors += 1;
+        }
+        writeln!(writer, "{}", wire::encode_response(id.as_deref(), &res))?;
+    }
+    writer.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::ModelBundle;
+    use crate::coordinator::{PredictionService, ServiceConfig};
+    use std::io::Read;
+    use std::sync::mpsc::{channel, Receiver};
+    use std::sync::{Arc, Mutex};
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn one_line_in_one_line_out_in_order() {
+        let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+        let input = concat!(
+            r#"{"id":"a","gpu":"A100","kernel":{"type":"gemm","m":512,"n":512,"k":512}}"#,
+            "\n",
+            "\n", // blank lines are skipped
+            r#"{"id":"b","gpu":"B300","kernel":{"type":"gemm","m":1,"n":1,"k":1}}"#,
+            "\n",
+            "this is not json\n",
+            r#"{"id":"d","gpu":"H800","kernel":{"type":"rmsnorm","seq":256,"dim":4096},"tag":"z"}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        let stats = serve_lines(&svc.client(), input.as_bytes(), &mut out, 8).unwrap();
+        assert_eq!(stats.served, 4);
+        assert_eq!(stats.errors, 2);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains(r#""id":"a""#) && lines[0].contains(r#""ok":true"#));
+        // degraded service: provenance distinguishes the roofline fallback
+        assert!(lines[0].contains(r#""source":"roofline""#));
+        assert!(lines[1].contains(r#""id":"b""#) && lines[1].contains(r#""code":"unknown_gpu""#));
+        assert!(lines[2].contains(r#""ok":false"#));
+        assert!(lines[3].contains(r#""id":"d""#) && lines[3].contains(r#""tag":"z""#));
+        svc.shutdown();
+    }
+
+    /// Blocking reader fed line-by-line over a channel — emulates an
+    /// interactive peer that keeps its stdin open between requests.
+    struct ChanReader {
+        rx: Receiver<String>,
+        buf: Vec<u8>,
+        pos: usize,
+    }
+
+    impl Read for ChanReader {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.buf.len() {
+                match self.rx.recv() {
+                    Ok(s) => {
+                        self.buf = s.into_bytes();
+                        self.pos = 0;
+                    }
+                    Err(_) => return Ok(0), // sender dropped: EOF
+                }
+            }
+            let n = (self.buf.len() - self.pos).min(out.len());
+            out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[derive(Clone)]
+    struct SharedWriter(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn interactive_peer_gets_each_answer_without_eof() {
+        // a request/await peer: the response for line N must arrive while
+        // stdin stays open, with no further input and a far-from-full window
+        let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+        let client = svc.client();
+        let (line_tx, line_rx) = channel::<String>();
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let mut writer = SharedWriter(out.clone());
+        let server = std::thread::spawn(move || {
+            let reader =
+                std::io::BufReader::new(ChanReader { rx: line_rx, buf: Vec::new(), pos: 0 });
+            serve_lines(&client, reader, &mut writer, 256)
+        });
+        for i in 0..3usize {
+            line_tx
+                .send(format!(
+                    "{{\"id\":\"i{i}\",\"gpu\":\"A100\",\"kernel\":{{\"type\":\"rmsnorm\",\"seq\":{},\"dim\":1024}}}}\n",
+                    64 + i
+                ))
+                .unwrap();
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                let answered =
+                    String::from_utf8(out.lock().unwrap().clone()).unwrap().lines().count();
+                if answered > i {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "response {i} withheld until EOF");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        drop(line_tx); // EOF
+        let stats = server.join().unwrap().unwrap();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.errors, 0);
+        svc.shutdown();
+    }
+}

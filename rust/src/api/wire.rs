@@ -1,0 +1,573 @@
+//! JSONL wire codec for protocol v1 (`synperf serve --stdio`): one request
+//! object per line in, one response object per line out, over the in-tree
+//! [`crate::util::json`] parser (the offline vendor set has no serde).
+//!
+//! Request line:
+//!
+//! ```json
+//! {"v":1,"id":"r1","gpu":"A100",
+//!  "kernel":{"type":"gemm","m":4096,"n":4096,"k":4096,"dtype":"bf16"},
+//!  "flavor":"mean","allow_degraded":true,"breakdown":false,"tag":"warmup"}
+//! ```
+//!
+//! `gpu` and `kernel` are required; everything else is optional with the
+//! defaults shown. Success and error response lines:
+//!
+//! ```json
+//! {"v":1,"id":"r1","ok":true,"latency_sec":1.234e-4,"latency_us":123.400,
+//!  "source":"mlp","cache_hit":false,"flavor":"mean","kernel":"gemm","gpu":"A100"}
+//! {"v":1,"id":"r2","ok":false,"error":{"code":"unknown_gpu",
+//!  "message":"unknown GPU \"B300\" (see Table VI)","gpu":"B300"}}
+//! ```
+//!
+//! Malformed lines map into the closed taxonomy as
+//! [`PredictError::UnsupportedKernel`] (the malformed-request bucket); GPU
+//! name lookups that fail map to [`PredictError::UnknownGpu`].
+
+use super::{
+    Breakdown, Flavor, PipeStat, PredictError, PredictRequest, PredictResponse, Provenance,
+    Source,
+};
+use crate::kernels::{DType, KernelConfig, KernelKind, MoeConfig};
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Result};
+
+fn unsupported(why: impl Into<String>) -> PredictError {
+    PredictError::UnsupportedKernel(why.into())
+}
+
+/// JSON string escape (the inverse of the parser's unescape).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn dtype_name(d: DType) -> &'static str {
+    match d {
+        DType::Fp32 => "fp32",
+        DType::Bf16 => "bf16",
+        DType::Fp8 => "fp8",
+    }
+}
+
+fn dtype_from(s: &str) -> Result<DType, PredictError> {
+    match s {
+        "fp32" => Ok(DType::Fp32),
+        "bf16" => Ok(DType::Bf16),
+        "fp8" => Ok(DType::Fp8),
+        other => Err(unsupported(format!("unknown dtype {other:?}"))),
+    }
+}
+
+fn u32_field(obj: &Json, key: &str) -> Result<u32, PredictError> {
+    num_u32(
+        obj.get(key)
+            .ok_or_else(|| unsupported(format!("kernel field {key:?} missing")))?,
+        key,
+    )
+}
+
+fn num_u32(v: &Json, what: &str) -> Result<u32, PredictError> {
+    v.as_f64()
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= u32::MAX as f64)
+        .map(|n| n as u32)
+        .ok_or_else(|| unsupported(format!("{what:?} must be an unsigned integer")))
+}
+
+/// Serialize a kernel config into its canonical wire object.
+pub fn kernel_to_json(cfg: &KernelConfig) -> String {
+    match cfg {
+        KernelConfig::Gemm { m, n, k, dtype } => format!(
+            r#"{{"type":"gemm","m":{m},"n":{n},"k":{k},"dtype":"{}"}}"#,
+            dtype_name(*dtype)
+        ),
+        KernelConfig::ScaledMm { m, n, k } => {
+            format!(r#"{{"type":"scaled_mm","m":{m},"n":{n},"k":{k}}}"#)
+        }
+        KernelConfig::Attention { batch, nh, nkv, hd, causal, fa3 } => {
+            let pairs: Vec<String> =
+                batch.iter().map(|(q, kv)| format!("[{q},{kv}]")).collect();
+            format!(
+                r#"{{"type":"attention","batch":[{}],"nh":{nh},"nkv":{nkv},"hd":{hd},"causal":{causal},"fa3":{fa3}}}"#,
+                pairs.join(",")
+            )
+        }
+        KernelConfig::RmsNorm { seq, dim } => {
+            format!(r#"{{"type":"rmsnorm","seq":{seq},"dim":{dim}}}"#)
+        }
+        KernelConfig::SiluMul { seq, dim } => {
+            format!(r#"{{"type":"silu_mul","seq":{seq},"dim":{dim}}}"#)
+        }
+        KernelConfig::FusedMoe { m, e, topk, h, n, expert_tokens, cfg } => {
+            let toks: Vec<String> = expert_tokens.iter().map(|t| t.to_string()).collect();
+            format!(
+                r#"{{"type":"fused_moe","m":{m},"e":{e},"topk":{topk},"h":{h},"n":{n},"expert_tokens":[{}],"cfg":{{"block_m":{},"block_n":{},"block_k":{},"num_stages":{},"num_warps":{}}}}}"#,
+                toks.join(","),
+                cfg.block_m,
+                cfg.block_n,
+                cfg.block_k,
+                cfg.num_stages,
+                cfg.num_warps
+            )
+        }
+    }
+}
+
+fn kernel_from_json(j: &Json, gpu: &crate::hw::GpuSpec) -> Result<KernelConfig, PredictError> {
+    let ty = j
+        .get("type")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| unsupported("kernel object needs a \"type\""))?;
+    match ty {
+        "gemm" => Ok(KernelConfig::Gemm {
+            m: u32_field(j, "m")?,
+            n: u32_field(j, "n")?,
+            k: u32_field(j, "k")?,
+            dtype: match j.get("dtype") {
+                None => DType::Bf16,
+                Some(v) => dtype_from(
+                    v.as_str().ok_or_else(|| unsupported("\"dtype\" must be a string"))?,
+                )?,
+            },
+        }),
+        "scaled_mm" => Ok(KernelConfig::ScaledMm {
+            m: u32_field(j, "m")?,
+            n: u32_field(j, "n")?,
+            k: u32_field(j, "k")?,
+        }),
+        "attention" => {
+            let arr = j
+                .get("batch")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| unsupported("attention needs \"batch\": [[q,kv],...]"))?;
+            let mut batch = Vec::with_capacity(arr.len());
+            for pair in arr {
+                let p = pair
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| unsupported("attention batch entries are [q,kv] pairs"))?;
+                batch.push((num_u32(&p[0], "q")?, num_u32(&p[1], "kv")?));
+            }
+            let nh = u32_field(j, "nh")?;
+            Ok(KernelConfig::Attention {
+                batch,
+                nh,
+                nkv: match j.get("nkv") {
+                    None => nh,
+                    Some(v) => num_u32(v, "nkv")?,
+                },
+                hd: u32_field(j, "hd")?,
+                causal: j.get("causal").and_then(|v| v.as_bool()).unwrap_or(true),
+                // FA2-vs-FA3 selection is resolved per GPU by the engine
+                // (finalize_for_gpu); the wire value is only a hint
+                fa3: j.get("fa3").and_then(|v| v.as_bool()).unwrap_or(false),
+            })
+        }
+        "rmsnorm" => Ok(KernelConfig::RmsNorm {
+            seq: u32_field(j, "seq")?,
+            dim: u32_field(j, "dim")?,
+        }),
+        "silu_mul" => Ok(KernelConfig::SiluMul {
+            seq: u32_field(j, "seq")?,
+            dim: u32_field(j, "dim")?,
+        }),
+        "fused_moe" => {
+            let m = u32_field(j, "m")?;
+            let e = u32_field(j, "e")?;
+            let topk = u32_field(j, "topk")?;
+            if e == 0 {
+                return Err(unsupported("fused_moe needs e >= 1"));
+            }
+            let expert_tokens = match j.get("expert_tokens") {
+                Some(v) => {
+                    let arr = v
+                        .as_arr()
+                        .ok_or_else(|| unsupported("\"expert_tokens\" must be an array"))?;
+                    arr.iter()
+                        .map(|t| num_u32(t, "expert_tokens[i]"))
+                        .collect::<Result<Vec<u32>, PredictError>>()?
+                }
+                // deterministic uniform routing when the caller doesn't
+                // supply the routing result
+                None => {
+                    let total = m.saturating_mul(topk);
+                    let (base, rem) = (total / e, total % e);
+                    (0..e).map(|i| base + u32::from(i < rem)).collect()
+                }
+            };
+            let cfg = match j.get("cfg") {
+                Some(c) => MoeConfig {
+                    block_m: u32_field(c, "block_m")?,
+                    block_n: u32_field(c, "block_n")?,
+                    block_k: u32_field(c, "block_k")?,
+                    num_stages: u32_field(c, "num_stages")?,
+                    num_warps: u32_field(c, "num_warps")?,
+                },
+                None => crate::kernels::fused_moe::default_config(
+                    (m.saturating_mul(topk) / e).max(1),
+                    gpu,
+                ),
+            };
+            Ok(KernelConfig::FusedMoe {
+                m,
+                e,
+                topk,
+                h: u32_field(j, "h")?,
+                n: u32_field(j, "n")?,
+                expert_tokens,
+                cfg,
+            })
+        }
+        other => Err(unsupported(format!("unknown kernel type {other:?}"))),
+    }
+}
+
+/// Serialize a typed request into its canonical wire line (no trailing
+/// newline). The inverse of [`parse_request`].
+pub fn encode_request(id: Option<&str>, req: &PredictRequest) -> String {
+    let mut out = format!("{{\"v\":{}", super::PROTOCOL_VERSION);
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    out.push_str(&format!(
+        ",\"gpu\":\"{}\",\"kernel\":{},\"flavor\":\"{}\",\"allow_degraded\":{},\"breakdown\":{}",
+        esc(req.gpu.name),
+        kernel_to_json(&req.cfg),
+        req.opts.flavor.name(),
+        req.opts.allow_degraded,
+        req.opts.with_breakdown
+    ));
+    if let Some(tag) = &req.opts.tag {
+        out.push_str(&format!(",\"tag\":\"{}\"", esc(tag)));
+    }
+    out.push('}');
+    out
+}
+
+/// Parse one request line. The extracted `id` (if any) is returned even
+/// when parsing fails, so the error response can still be correlated.
+pub fn parse_request(line: &str) -> (Option<String>, Result<PredictRequest, PredictError>) {
+    let j = match parse(line) {
+        Ok(j) => j,
+        Err(e) => return (None, Err(unsupported(format!("malformed JSON: {e}")))),
+    };
+    let id = match j.get("id") {
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(Json::Num(n)) => Some(format!("{n}")),
+        _ => None,
+    };
+    (id, parse_request_fields(&j))
+}
+
+fn parse_request_fields(j: &Json) -> Result<PredictRequest, PredictError> {
+    if let Some(v) = j.get("v").and_then(|v| v.as_f64()) {
+        if v as u32 != super::PROTOCOL_VERSION {
+            return Err(unsupported(format!(
+                "protocol version {v} (this build speaks v{})",
+                super::PROTOCOL_VERSION
+            )));
+        }
+    }
+    let gpu_name = j
+        .get("gpu")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| unsupported("request needs \"gpu\": \"<name>\""))?;
+    let gpu = super::resolve_gpu(gpu_name)?;
+    let kernel = j
+        .get("kernel")
+        .ok_or_else(|| unsupported("request needs a \"kernel\" object"))?;
+    let cfg = kernel_from_json(kernel, &gpu)?;
+    let mut req = PredictRequest::new(cfg, gpu);
+    if let Some(v) = j.get("flavor") {
+        let name = v.as_str().ok_or_else(|| unsupported("\"flavor\" must be a string"))?;
+        req.opts.flavor = Flavor::from_name(name)
+            .ok_or_else(|| unsupported(format!("unknown flavor {name:?} (mean|p80)")))?;
+    }
+    if let Some(v) = j.get("allow_degraded") {
+        req.opts.allow_degraded =
+            v.as_bool().ok_or_else(|| unsupported("\"allow_degraded\" must be a bool"))?;
+    }
+    if let Some(v) = j.get("breakdown") {
+        req.opts.with_breakdown =
+            v.as_bool().ok_or_else(|| unsupported("\"breakdown\" must be a bool"))?;
+    }
+    if let Some(v) = j.get("tag") {
+        req.opts.tag =
+            Some(v.as_str().ok_or_else(|| unsupported("\"tag\" must be a string"))?.to_string());
+    }
+    Ok(req)
+}
+
+fn pipe_to_json(p: &PipeStat) -> String {
+    format!(
+        r#"{{"total_ops":{:e},"max_sm_ops":{:e},"total_cycles":{:e}}}"#,
+        p.total_ops, p.max_sm_ops, p.total_cycles
+    )
+}
+
+fn breakdown_to_json(b: &Breakdown) -> String {
+    format!(
+        r#"{{"tensor":{},"fma":{},"xu":{},"mio_bytes":{:e},"dram_cycles":{:e},"theory_sec":{:e},"naive_roofline_sec":{:e}}}"#,
+        pipe_to_json(&b.tensor),
+        pipe_to_json(&b.fma),
+        pipe_to_json(&b.xu),
+        b.mio_bytes,
+        b.dram_cycles,
+        b.theory_sec,
+        b.naive_roofline_sec
+    )
+}
+
+/// Serialize one typed result into its wire line (no trailing newline).
+pub fn encode_response(id: Option<&str>, res: &Result<PredictResponse, PredictError>) -> String {
+    let mut out = format!("{{\"v\":{}", super::PROTOCOL_VERSION);
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    match res {
+        Ok(r) => {
+            out.push_str(&format!(
+                ",\"ok\":true,\"latency_sec\":{:e},\"latency_us\":{:.3},\"source\":\"{}\",\"cache_hit\":{},\"flavor\":\"{}\",\"kernel\":\"{}\",\"gpu\":\"{}\"",
+                r.latency_sec,
+                r.latency_sec * 1e6,
+                r.provenance.source.name(),
+                r.provenance.cache_hit,
+                r.flavor.name(),
+                r.kind.name(),
+                esc(&r.gpu)
+            ));
+            if let Some(tag) = &r.tag {
+                out.push_str(&format!(",\"tag\":\"{}\"", esc(tag)));
+            }
+            if let Some(b) = &r.breakdown {
+                out.push_str(&format!(",\"breakdown\":{}", breakdown_to_json(b)));
+            }
+        }
+        Err(e) => {
+            out.push_str(&format!(
+                ",\"ok\":false,\"error\":{{\"code\":\"{}\",\"message\":\"{}\"",
+                e.code(),
+                esc(&e.to_string())
+            ));
+            match e {
+                PredictError::UnknownGpu(name) => {
+                    out.push_str(&format!(",\"gpu\":\"{}\"", esc(name)));
+                }
+                PredictError::UnsupportedKernel(why) => {
+                    out.push_str(&format!(",\"reason\":\"{}\"", esc(why)));
+                }
+                PredictError::PredictorUnavailable(kind) => {
+                    out.push_str(&format!(",\"kind\":\"{}\"", kind.name()));
+                }
+                _ => {}
+            }
+            out.push('}');
+        }
+    }
+    out.push('}');
+    out
+}
+
+fn pipe_from_json(j: &Json) -> Result<PipeStat> {
+    let f = |key: &str| {
+        j.get(key).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("pipe stat {key:?} missing"))
+    };
+    Ok(PipeStat { total_ops: f("total_ops")?, max_sm_ops: f("max_sm_ops")?, total_cycles: f("total_cycles")? })
+}
+
+/// Parse one response line back into the typed result — the client half of
+/// the wire, used by round-trip tests and remote tooling.
+pub fn parse_response(
+    line: &str,
+) -> Result<(Option<String>, Result<PredictResponse, PredictError>)> {
+    let j = parse(line)?;
+    let id = match j.get("id") {
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(Json::Num(n)) => Some(format!("{n}")),
+        _ => None,
+    };
+    let ok = j.get("ok").and_then(|v| v.as_bool()).ok_or_else(|| anyhow!("response needs \"ok\""))?;
+    if !ok {
+        let err = j.get("error").ok_or_else(|| anyhow!("error response needs \"error\""))?;
+        let code = err
+            .get("code")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("error needs \"code\""))?;
+        let message =
+            err.get("message").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        let e = match code {
+            "unknown_gpu" => PredictError::UnknownGpu(
+                err.get("gpu").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+            ),
+            "unsupported_kernel" => PredictError::UnsupportedKernel(
+                err.get("reason").and_then(|v| v.as_str()).map(str::to_string).unwrap_or(message),
+            ),
+            "predictor_unavailable" => PredictError::PredictorUnavailable(
+                err.get("kind")
+                    .and_then(|v| v.as_str())
+                    .and_then(KernelKind::from_name)
+                    .ok_or_else(|| anyhow!("predictor_unavailable needs a \"kind\""))?,
+            ),
+            "queue_full" => PredictError::QueueFull,
+            "shutdown" => PredictError::Shutdown,
+            other => anyhow::bail!("unknown error code {other:?}"),
+        };
+        return Ok((id, Err(e)));
+    }
+    let f64_field = |key: &str| {
+        j.get(key).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("response field {key:?} missing"))
+    };
+    let str_field = |key: &str| {
+        j.get(key)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("response field {key:?} missing"))
+    };
+    let breakdown = match j.get("breakdown") {
+        None => None,
+        Some(b) => {
+            let f = |key: &str| {
+                b.get(key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow!("breakdown field {key:?} missing"))
+            };
+            Some(Breakdown {
+                tensor: pipe_from_json(b.get("tensor").ok_or_else(|| anyhow!("no tensor"))?)?,
+                fma: pipe_from_json(b.get("fma").ok_or_else(|| anyhow!("no fma"))?)?,
+                xu: pipe_from_json(b.get("xu").ok_or_else(|| anyhow!("no xu"))?)?,
+                mio_bytes: f("mio_bytes")?,
+                dram_cycles: f("dram_cycles")?,
+                theory_sec: f("theory_sec")?,
+                naive_roofline_sec: f("naive_roofline_sec")?,
+            })
+        }
+    };
+    let source = match j.get("source").and_then(|v| v.as_str()) {
+        Some("mlp") => Source::Mlp,
+        Some("roofline") => Source::Roofline,
+        other => anyhow::bail!("bad source {other:?}"),
+    };
+    let flavor = j
+        .get("flavor")
+        .and_then(|v| v.as_str())
+        .and_then(Flavor::from_name)
+        .ok_or_else(|| anyhow!("bad flavor"))?;
+    let kind = j
+        .get("kernel")
+        .and_then(|v| v.as_str())
+        .and_then(KernelKind::from_name)
+        .ok_or_else(|| anyhow!("bad kernel kind"))?;
+    Ok((
+        id,
+        Ok(PredictResponse {
+            latency_sec: f64_field("latency_sec")?,
+            provenance: Provenance {
+                source,
+                cache_hit: j
+                    .get("cache_hit")
+                    .and_then(|v| v.as_bool())
+                    .ok_or_else(|| anyhow!("response needs \"cache_hit\""))?,
+            },
+            flavor,
+            kind,
+            gpu: str_field("gpu")?,
+            breakdown,
+            tag: j.get("tag").and_then(|v| v.as_str()).map(str::to_string),
+        }),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::resolve_gpu;
+
+    #[test]
+    fn request_lines_round_trip_every_kind() {
+        let gpu = resolve_gpu("A100").unwrap();
+        let cfgs = vec![
+            KernelConfig::Gemm { m: 7, n: 9, k: 11, dtype: DType::Fp8 },
+            KernelConfig::ScaledMm { m: 4, n: 8, k: 16 },
+            KernelConfig::Attention {
+                batch: vec![(3, 5), (1, 9)],
+                nh: 8,
+                nkv: 2,
+                hd: 64,
+                causal: false,
+                fa3: false,
+            },
+            KernelConfig::RmsNorm { seq: 13, dim: 17 },
+            KernelConfig::SiluMul { seq: 19, dim: 23 },
+            KernelConfig::FusedMoe {
+                m: 6,
+                e: 3,
+                topk: 2,
+                h: 32,
+                n: 16,
+                expert_tokens: vec![4, 4, 4],
+                cfg: MoeConfig { block_m: 16, block_n: 32, block_k: 64, num_stages: 3, num_warps: 4 },
+            },
+        ];
+        for cfg in cfgs {
+            let req = PredictRequest::new(cfg.clone(), gpu.clone()).tagged("rt");
+            let line = encode_request(Some("x1"), &req);
+            let (id, parsed) = parse_request(&line);
+            assert_eq!(id.as_deref(), Some("x1"));
+            let back = parsed.unwrap();
+            assert_eq!(back.cfg, cfg, "round trip of {line}");
+            assert_eq!(back.gpu.name, "A100");
+            assert_eq!(back.opts, req.opts);
+        }
+    }
+
+    #[test]
+    fn fused_moe_defaults_derive_routing_and_cfg() {
+        let line = r#"{"gpu":"H100","kernel":{"type":"fused_moe","m":10,"e":4,"topk":2,"h":64,"n":32}}"#;
+        let (_, req) = parse_request(line);
+        match req.unwrap().cfg {
+            KernelConfig::FusedMoe { expert_tokens, .. } => {
+                assert_eq!(expert_tokens, vec![5, 5, 5, 5]);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_map_into_the_closed_taxonomy() {
+        let cases = [
+            ("not json at all", "unsupported_kernel"),
+            (r#"{"kernel":{"type":"gemm","m":1,"n":1,"k":1}}"#, "unsupported_kernel"),
+            (r#"{"gpu":"B300","kernel":{"type":"gemm","m":1,"n":1,"k":1}}"#, "unknown_gpu"),
+            (r#"{"gpu":"A100","kernel":{"type":"conv2d"}}"#, "unsupported_kernel"),
+            (r#"{"v":9,"gpu":"A100","kernel":{"type":"rmsnorm","seq":1,"dim":1}}"#, "unsupported_kernel"),
+        ];
+        for (line, code) in cases {
+            let (_, res) = parse_request(line);
+            assert_eq!(res.unwrap_err().code(), code, "for line {line}");
+        }
+    }
+
+    #[test]
+    fn string_escaping_survives_the_wire() {
+        let gpu = resolve_gpu("L20").unwrap();
+        let req = PredictRequest::new(
+            KernelConfig::RmsNorm { seq: 2, dim: 2 },
+            gpu,
+        )
+        .tagged("a\"b\\c\nd");
+        let line = encode_request(None, &req);
+        let (_, back) = parse_request(&line);
+        assert_eq!(back.unwrap().opts.tag.as_deref(), Some("a\"b\\c\nd"));
+    }
+}

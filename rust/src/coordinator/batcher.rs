@@ -1,33 +1,29 @@
 //! Dynamic batcher: collects requests until either the batch-size target or
 //! the deadline is hit — the standard latency/throughput knob of serving
 //! systems (vLLM/SGLang routers), applied here to MLP inference batches.
+//! Draws from the coordinator's bounded [`Bounded`] queue, so collecting a
+//! batch is also what frees space for blocked producers.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use super::queue::{Bounded, Pop};
 use std::time::{Duration, Instant};
 
-/// Drain up to `max_batch` items from `rx`, waiting at most `deadline` from
-/// the arrival of the first item. Returns an empty vec on disconnect.
-pub fn collect_batch<T>(
-    rx: &Receiver<T>,
-    max_batch: usize,
-    deadline: Duration,
-) -> (Vec<T>, bool) {
+/// Drain up to `max_batch` items from `q`, waiting at most `deadline` from
+/// the arrival of the first item. The `bool` is the terminal signal: the
+/// queue is closed *and* fully drained (graceful shutdown finishes the
+/// returned batch first).
+pub fn collect_batch<T>(q: &Bounded<T>, max_batch: usize, deadline: Duration) -> (Vec<T>, bool) {
     let mut batch = Vec::new();
     // block for the first item
-    match rx.recv() {
-        Ok(item) => batch.push(item),
-        Err(_) => return (batch, true),
+    match q.pop() {
+        Some(item) => batch.push(item),
+        None => return (batch, true),
     }
-    let t0 = Instant::now();
+    let until = Instant::now() + deadline;
     while batch.len() < max_batch {
-        let left = deadline.saturating_sub(t0.elapsed());
-        if left.is_zero() {
-            break;
-        }
-        match rx.recv_timeout(left) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => return (batch, true),
+        match q.pop_until(until) {
+            Pop::Item(item) => batch.push(item),
+            Pop::Timeout => break,
+            Pop::Closed => return (batch, true),
         }
     }
     (batch, false)
@@ -36,36 +32,44 @@ pub fn collect_batch<T>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
 
     #[test]
     fn size_trigger() {
-        let (tx, rx) = channel();
+        let q = Bounded::new(16);
         for i in 0..10 {
-            tx.send(i).unwrap();
+            q.try_push(i).unwrap();
         }
-        let (batch, closed) = collect_batch(&rx, 4, Duration::from_millis(50));
+        let (batch, closed) = collect_batch(&q, 4, Duration::from_millis(50));
         assert_eq!(batch, vec![0, 1, 2, 3]);
         assert!(!closed);
     }
 
     #[test]
     fn deadline_trigger() {
-        let (tx, rx) = channel();
-        tx.send(1).unwrap();
+        let q = Bounded::new(16);
+        q.try_push(1).unwrap();
         let t0 = Instant::now();
-        let (batch, closed) = collect_batch(&rx, 100, Duration::from_millis(20));
+        let (batch, closed) = collect_batch(&q, 100, Duration::from_millis(20));
         assert_eq!(batch, vec![1]);
         assert!(!closed);
         assert!(t0.elapsed() >= Duration::from_millis(18));
     }
 
     #[test]
-    fn disconnect_reported() {
-        let (tx, rx) = channel::<u32>();
-        drop(tx);
-        let (batch, closed) = collect_batch(&rx, 4, Duration::from_millis(5));
+    fn close_reported_after_drain() {
+        let q: Bounded<u32> = Bounded::new(4);
+        q.close();
+        let (batch, closed) = collect_batch(&q, 4, Duration::from_millis(5));
         assert!(batch.is_empty());
+        assert!(closed);
+
+        // a closed queue still hands out what it accepted first
+        let q = Bounded::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        let (batch, closed) = collect_batch(&q, 4, Duration::from_millis(5));
+        assert_eq!(batch, vec![1, 2]);
         assert!(closed);
     }
 }

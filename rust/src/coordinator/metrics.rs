@@ -1,7 +1,8 @@
 //! Service metrics: request counts, latency percentiles, batch-size
-//! distribution, plus the engine-level observability counters (analysis
-//! cache hits/misses and per-kind routing occupancy) — enough to report the
-//! coordinator benches and to assert cache behavior in tests.
+//! distribution, the engine-level observability counters (analysis cache
+//! hits/misses, per-kind routing occupancy), and the backpressure gauges of
+//! the bounded queue (`queue_depth`, `rejected_requests`) — enough to
+//! report the coordinator benches and to assert queue behavior in tests.
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -15,6 +16,11 @@ struct Inner {
     cache_misses: u64,
     /// One entry per processed batch: number of per-kind MLP sub-batches.
     kind_groups: Vec<usize>,
+    /// Requests refused with `QueueFull` (backpressure made visible).
+    rejected: u64,
+    /// Backlog sampled after each batch collection.
+    queue_depth_last: usize,
+    queue_depth_max: usize,
 }
 
 #[derive(Debug, Default)]
@@ -35,6 +41,11 @@ pub struct Snapshot {
     /// Mean rows per per-kind MLP sub-batch (batch occupancy): how well the
     /// dynamic batcher fills the per-category forward passes.
     pub mean_kind_batch: f64,
+    /// Requests refused with `PredictError::QueueFull`.
+    pub rejected_requests: u64,
+    /// Bounded-queue backlog: last sample and high-water mark.
+    pub queue_depth: usize,
+    pub max_queue_depth: usize,
 }
 
 impl Snapshot {
@@ -65,6 +76,19 @@ impl Metrics {
         g.kind_groups.push(kind_groups);
     }
 
+    /// One request bounced off the full queue.
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Sample the bounded-queue backlog (called by the service loop after
+    /// each batch collection).
+    pub fn record_queue_depth(&self, depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue_depth_last = depth;
+        g.queue_depth_max = g.queue_depth_max.max(depth);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let mut lat = g.latencies_us.clone();
@@ -93,6 +117,9 @@ impl Metrics {
             } else {
                 (g.cache_hits + g.cache_misses) as f64 / total_groups as f64
             },
+            rejected_requests: g.rejected,
+            queue_depth: g.queue_depth_last,
+            max_queue_depth: g.queue_depth_max,
         }
     }
 }
@@ -127,11 +154,26 @@ mod tests {
     }
 
     #[test]
+    fn backpressure_gauges() {
+        let m = Metrics::default();
+        m.record_rejected();
+        m.record_rejected();
+        m.record_queue_depth(7);
+        m.record_queue_depth(3);
+        let s = m.snapshot();
+        assert_eq!(s.rejected_requests, 2);
+        assert_eq!(s.queue_depth, 3);
+        assert_eq!(s.max_queue_depth, 7);
+    }
+
+    #[test]
     fn empty_snapshot_is_zeroed() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.cache_hits + s.cache_misses, 0);
         assert_eq!(s.cache_hit_rate(), 0.0);
         assert_eq!(s.mean_kind_batch, 0.0);
+        assert_eq!(s.rejected_requests, 0);
+        assert_eq!((s.queue_depth, s.max_queue_depth), (0, 0));
     }
 }

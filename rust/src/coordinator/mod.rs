@@ -1,15 +1,21 @@
-//! Layer-3 coordinator: prediction-as-a-service.
+//! Layer-3 coordinator: prediction-as-a-service speaking protocol v1
+//! ([`crate::api`]).
 //!
 //! SynPerf's real-time use case (§IV: "enabling real-time predictions") is
-//! served by a coordinator that accepts prediction requests, batches them
-//! dynamically (size- or deadline-triggered, vLLM-router style), routes each
-//! batch to the per-kernel-category MLP executable, and streams results
-//! back — all in rust on top of std::thread + mpsc (the offline vendor set
-//! has no tokio; the event loop is a hand-rolled deadline batcher).
+//! served by a coordinator that accepts typed prediction requests over a
+//! **bounded** queue (explicit backpressure: `try_predict` →
+//! `PredictError::QueueFull`, blocking submits wait for space), batches
+//! them dynamically (size- or deadline-triggered, vLLM-router style),
+//! routes each batch through the one shared request path
+//! ([`crate::api::predict_batch`]), and answers with provenance-carrying
+//! [`crate::api::PredictResponse`]s — all on std::thread + condvars (the
+//! offline vendor set has no tokio; the event loop is a hand-rolled
+//! deadline batcher).
 
 pub mod batcher;
 pub mod metrics;
+pub mod queue;
 pub mod service;
 
 pub use metrics::Metrics;
-pub use service::{PredictionService, Request, ServiceConfig};
+pub use service::{Client, Pending, PredictionService, Request, ServiceConfig};

@@ -1,0 +1,231 @@
+//! Bounded MPMC request queue (Mutex + Condvar; the offline vendor set has
+//! no crossbeam). This replaces the unbounded `std::sync::mpsc` channel the
+//! service used to accept requests on: under sustained overload the old
+//! queue grew without limit, while this one makes saturation an explicit,
+//! observable outcome ([`PushError::Full`] → `PredictError::QueueFull`).
+//!
+//! Close semantics support graceful drain: after [`Bounded::close`] no new
+//! item can enter, but poppers keep receiving queued items until the buffer
+//! is empty — the service loop answers everything already accepted before
+//! exiting.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push was refused; the item is handed back to the caller.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at capacity (and stayed there for the whole timeout,
+    /// for the waiting push variants).
+    Full(T),
+    /// The queue was closed; no further items are accepted.
+    Closed(T),
+}
+
+/// Outcome of a deadline-bounded pop.
+#[derive(Debug)]
+pub enum Pop<T> {
+    Item(T),
+    Timeout,
+    /// Closed *and* drained — the terminal state.
+    Closed,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+pub struct Bounded<T> {
+    state: Mutex<State<T>>,
+    cap: usize,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> Bounded<T> {
+    pub fn new(cap: usize) -> Bounded<T> {
+        let cap = cap.max(1);
+        Bounded {
+            state: Mutex::new(State { buf: VecDeque::with_capacity(cap.min(4096)), closed: false }),
+            cap,
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Current depth — the live `queue_depth` gauge.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.lock().unwrap().buf.is_empty()
+    }
+
+    /// Non-blocking push: [`PushError::Full`] the instant the queue is at
+    /// capacity — the backpressure edge of `try_predict`.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.state.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.buf.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.buf.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: wait for space up to `timeout` (`None` = as long as
+    /// it takes). Returns [`PushError::Full`] only when the timeout expires
+    /// with the queue still at capacity.
+    pub fn push_wait(&self, item: T, timeout: Option<Duration>) -> Result<(), PushError<T>> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed(item));
+            }
+            if g.buf.len() < self.cap {
+                g.buf.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            match deadline {
+                None => g = self.not_full.wait(g).unwrap(),
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Err(PushError::Full(item));
+                    }
+                    g = self.not_full.wait_timeout(g, left).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// Blocking pop; `None` means closed and fully drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a deadline (the batcher's intra-batch wait).
+    pub fn pop_until(&self, deadline: Instant) -> Pop<T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Pop::Item(item);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Pop::Timeout;
+            }
+            g = self.not_empty.wait_timeout(g, left).unwrap().0;
+        }
+    }
+
+    /// Close the queue: pending and future pushes fail, pops drain what was
+    /// already accepted and then report [`Pop::Closed`].
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn try_push_reports_full_not_blocks() {
+        let q = Bounded::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert!(matches!(q.try_push(3), Err(PushError::Full(3))));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn push_wait_times_out_when_saturated() {
+        let q = Bounded::new(1);
+        q.try_push(7).unwrap();
+        let t0 = Instant::now();
+        let res = q.push_wait(8, Some(Duration::from_millis(30)));
+        assert!(matches!(res, Err(PushError::Full(8))));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn push_wait_unblocks_on_pop() {
+        let q = Arc::new(Bounded::new(1));
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push_wait(2, Some(Duration::from_secs(5))));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1));
+        assert!(h.join().unwrap().is_ok());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = Bounded::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(3), Err(PushError::Closed(3))));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert!(matches!(q.pop_until(Instant::now()), Pop::Closed));
+    }
+
+    #[test]
+    fn pop_until_times_out_on_empty() {
+        let q: Bounded<u32> = Bounded::new(4);
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_until(t0 + Duration::from_millis(20)), Pop::Timeout));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn close_wakes_blocked_pusher() {
+        let q = Arc::new(Bounded::new(1));
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push_wait(2, None));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(matches!(h.join().unwrap(), Err(PushError::Closed(2))));
+    }
+}

@@ -1,107 +1,248 @@
 //! The prediction service: a leader thread owns the per-kernel-category
 //! Predictors (PJRT executables are not Sync) and runs the dynamic-batch
-//! loop; clients hold a cheap cloneable handle and block on their own
-//! response channel. Request -> [batcher] -> shared [`PredictionEngine`]
-//! (cached decompose/schedule/featurize + per-kind batched MLP routing) ->
-//! respond.
+//! loop; clients hold a cheap cloneable [`Client`] handle speaking protocol
+//! v1. Typed [`PredictRequest`] -> bounded queue -> [batcher] ->
+//! [`crate::api::predict_batch`] (cached analyze + per-kind batched MLP
+//! routing) -> typed [`PredictResponse`] with provenance.
+//!
+//! Backpressure is explicit: the request queue is bounded
+//! (`ServiceConfig::queue_cap`); [`Client::try_predict`] answers
+//! [`PredictError::QueueFull`] immediately, the blocking calls wait for
+//! space (optionally up to a deadline) instead of growing an unbounded
+//! backlog. Shutdown is graceful: the queue closes, everything already
+//! accepted is answered, then the thread exits.
 
 use super::batcher::collect_batch;
 use super::metrics::Metrics;
-use crate::engine::PredictionEngine;
-use crate::hw::GpuSpec;
-use crate::kernels::{KernelConfig, KernelKind};
-use crate::mlp::Predictor;
-use anyhow::Result;
-use std::collections::HashMap;
+use super::queue::{Bounded, PushError};
+use crate::api::{self, ModelBundle, PredictError, PredictRequest, PredictResponse};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// A prediction request: a kernel launch on a GPU; the service decomposes,
-/// schedules, featurizes and predicts latency.
+/// One queued request: the typed protocol request plus the responder the
+/// service answers on.
 pub struct Request {
-    pub cfg: KernelConfig,
-    pub gpu: GpuSpec,
-    pub resp: Sender<f64>,
+    pub req: PredictRequest,
+    pub(crate) resp: Sender<Result<PredictResponse, PredictError>>,
 }
 
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
+    /// Dynamic batch size target.
     pub max_batch: usize,
+    /// Dynamic batch deadline: max wait from the first queued request.
     pub deadline: Duration,
+    /// Bounded request-queue capacity (the backpressure knob).
+    pub queue_cap: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { max_batch: 256, deadline: Duration::from_millis(2) }
+        ServiceConfig {
+            max_batch: 256,
+            deadline: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// A future-style handle to one in-flight prediction: obtain from the
+/// submit calls, redeem with [`Pending::wait`].
+pub struct Pending {
+    rx: Receiver<Result<PredictResponse, PredictError>>,
+}
+
+impl Pending {
+    /// Block until the service answers. A service that died before
+    /// answering reports [`PredictError::Shutdown`].
+    pub fn wait(self) -> Result<PredictResponse, PredictError> {
+        match self.rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(PredictError::Shutdown),
+        }
+    }
+}
+
+/// Cheap cloneable client handle onto a running [`PredictionService`].
+#[derive(Clone)]
+pub struct Client {
+    queue: Arc<Bounded<Request>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Client {
+    /// Non-blocking submit: [`PredictError::QueueFull`] the instant the
+    /// bounded queue is at capacity.
+    pub fn try_predict(&self, req: PredictRequest) -> Result<Pending, PredictError> {
+        req.validate()?;
+        let (tx, rx) = channel();
+        match self.queue.try_push(Request { req, resp: tx }) {
+            Ok(()) => Ok(Pending { rx }),
+            Err(PushError::Full(_)) => {
+                self.metrics.record_rejected();
+                Err(PredictError::QueueFull)
+            }
+            Err(PushError::Closed(_)) => Err(PredictError::Shutdown),
+        }
+    }
+
+    /// Blocking submit: wait for queue space as long as it takes
+    /// (backpressure propagates to the producer).
+    pub fn submit(&self, req: PredictRequest) -> Result<Pending, PredictError> {
+        self.submit_wait(req, None)
+    }
+
+    /// Blocking submit with a deadline: [`PredictError::QueueFull`] if the
+    /// queue stays saturated for the whole `deadline`.
+    pub fn submit_deadline(
+        &self,
+        req: PredictRequest,
+        deadline: Duration,
+    ) -> Result<Pending, PredictError> {
+        self.submit_wait(req, Some(deadline))
+    }
+
+    fn submit_wait(
+        &self,
+        req: PredictRequest,
+        deadline: Option<Duration>,
+    ) -> Result<Pending, PredictError> {
+        req.validate()?;
+        let (tx, rx) = channel();
+        match self.queue.push_wait(Request { req, resp: tx }, deadline) {
+            Ok(()) => Ok(Pending { rx }),
+            Err(PushError::Full(_)) => {
+                self.metrics.record_rejected();
+                Err(PredictError::QueueFull)
+            }
+            Err(PushError::Closed(_)) => Err(PredictError::Shutdown),
+        }
+    }
+
+    /// Blocking single prediction (submit + wait).
+    pub fn predict(&self, req: PredictRequest) -> Result<PredictResponse, PredictError> {
+        self.submit(req)?.wait()
+    }
+
+    /// Blocking single prediction with an enqueue deadline.
+    pub fn predict_deadline(
+        &self,
+        req: PredictRequest,
+        deadline: Duration,
+    ) -> Result<PredictResponse, PredictError> {
+        self.submit_deadline(req, deadline)?.wait()
+    }
+
+    /// Submit a whole batch (blocking on space per request), then wait for
+    /// every answer. Results are in input order.
+    pub fn predict_batch(
+        &self,
+        reqs: Vec<PredictRequest>,
+    ) -> Vec<Result<PredictResponse, PredictError>> {
+        let pendings: Vec<Result<Pending, PredictError>> =
+            reqs.into_iter().map(|r| self.submit(r)).collect();
+        pendings
+            .into_iter()
+            .map(|p| match p {
+                Ok(pending) => pending.wait(),
+                Err(e) => Err(e),
+            })
+            .collect()
+    }
+
+    /// Live bounded-queue backlog.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
     }
 }
 
 pub struct PredictionService {
-    tx: Sender<Request>,
+    queue: Arc<Bounded<Request>>,
     pub metrics: Arc<Metrics>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl PredictionService {
     /// Spawn the service thread. PJRT executables are not `Send`, so the
-    /// per-kernel-category Predictors are constructed *on* the service
+    /// per-kernel-category model bundle is constructed *on* the service
     /// thread by `factory` (untrained categories answer with the
-    /// theoretical roof — documented degraded mode). The analytical front
-    /// half runs on the process-wide [`PredictionEngine`], so repeated
-    /// launches across batches (and across services) hit its cache.
+    /// theoretical roof — the protocol's documented degraded mode, visible
+    /// in `PredictResponse::provenance`).
     pub fn spawn<F>(factory: F, cfg: ServiceConfig) -> PredictionService
     where
-        F: FnOnce() -> HashMap<KernelKind, Predictor> + Send + 'static,
+        F: FnOnce() -> ModelBundle + Send + 'static,
     {
-        let (tx, rx) = channel::<Request>();
+        let queue = Arc::new(Bounded::new(cfg.queue_cap));
         let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
+        let (q2, m2) = (queue.clone(), metrics.clone());
         let handle = std::thread::spawn(move || {
-            let models = factory();
-            service_loop(rx, models, cfg, m2)
+            // close the queue even if the factory (or the loop) panics:
+            // otherwise blocked submitters would wait forever on a dead
+            // service instead of seeing PredictError::Shutdown
+            struct CloseOnExit(Arc<Bounded<Request>>);
+            impl Drop for CloseOnExit {
+                fn drop(&mut self) {
+                    self.0.close();
+                }
+            }
+            let _close_guard = CloseOnExit(q2.clone());
+            let bundle = factory();
+            service_loop(&q2, &bundle, &cfg, &m2)
         });
-        PredictionService { tx, metrics, handle: Some(handle) }
+        PredictionService { queue, metrics, handle: Some(handle) }
     }
 
-    /// Client handle: submit a request, receive the latency via the channel.
-    pub fn submit(&self, cfg: KernelConfig, gpu: GpuSpec) -> Receiver<f64> {
-        let (resp_tx, resp_rx) = channel();
-        self.tx
-            .send(Request { cfg, gpu, resp: resp_tx })
-            .expect("service thread alive");
-        resp_rx
+    /// A cloneable protocol-v1 client onto this service.
+    pub fn client(&self) -> Client {
+        Client { queue: self.queue.clone(), metrics: self.metrics.clone() }
     }
 
-    /// Convenience: blocking single prediction.
-    pub fn predict(&self, cfg: KernelConfig, gpu: &GpuSpec) -> Result<f64> {
-        let rx = self.submit(cfg, gpu.clone());
-        Ok(rx.recv()?)
+    /// Convenience: blocking single prediction through a throwaway client.
+    pub fn predict(&self, req: PredictRequest) -> Result<PredictResponse, PredictError> {
+        self.client().predict(req)
     }
 
-    /// Graceful shutdown.
+    /// Live bounded-queue backlog.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Graceful shutdown: refuse new requests, answer everything already
+    /// accepted, join the service thread.
     pub fn shutdown(mut self) {
-        drop(self.tx);
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.queue.close();
         if let Some(h) = self.handle.take() {
             h.join().ok();
         }
     }
 }
 
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
 fn service_loop(
-    rx: Receiver<Request>,
-    models: HashMap<KernelKind, Predictor>,
-    cfg: ServiceConfig,
-    metrics: Arc<Metrics>,
+    queue: &Bounded<Request>,
+    bundle: &ModelBundle,
+    cfg: &ServiceConfig,
+    metrics: &Metrics,
 ) {
-    let engine = PredictionEngine::global();
     loop {
-        let (batch, closed) = collect_batch(&rx, cfg.max_batch, cfg.deadline);
+        let (batch, closed) = collect_batch(queue, cfg.max_batch, cfg.deadline);
         if !batch.is_empty() {
-            let t0 = Instant::now();
-            let n = batch.len();
-            process_batch(engine, batch, &models, &metrics);
-            metrics.record_batch(n, t0.elapsed());
+            metrics.record_queue_depth(queue.len());
+            process_batch(bundle, batch, metrics);
         }
         if closed {
             return;
@@ -109,42 +250,45 @@ fn service_loop(
     }
 }
 
-fn process_batch(
-    engine: &PredictionEngine,
-    batch: Vec<Request>,
-    models: &HashMap<KernelKind, Predictor>,
-    metrics: &Metrics,
-) {
+fn process_batch(bundle: &ModelBundle, batch: Vec<Request>, metrics: &Metrics) {
+    let t0 = Instant::now();
     let mut reqs = Vec::with_capacity(batch.len());
     let mut responders = Vec::with_capacity(batch.len());
     for r in batch {
-        reqs.push((r.cfg, r.gpu));
+        reqs.push(r.req);
         responders.push(r.resp);
     }
-    // infallible: a category whose model is missing or whose forward fails
-    // answers with the theoretical roof, without degrading other categories
-    let out = engine.predict_batch(models, &reqs);
-    metrics.record_route(out.cache_hits, out.cache_misses, out.kind_groups);
-    for (resp, lat) in responders.into_iter().zip(out.latencies) {
+    let report = api::predict_batch(bundle, &reqs);
+    // record before answering: a client that sees its response also sees
+    // the metrics that accounted for it
+    metrics.record_route(report.cache_hits, report.cache_misses, report.kind_groups);
+    metrics.record_batch(reqs.len(), t0.elapsed());
+    for (resp, result) in responders.into_iter().zip(report.results) {
         // receiver may have gone away; ignore
-        let _ = resp.send(lat);
+        let _ = resp.send(result);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::Source;
     use crate::hw::gpu_by_name;
-    use crate::kernels::DType;
+    use crate::kernels::{DType, KernelConfig};
+
+    fn svc() -> PredictionService {
+        PredictionService::spawn(ModelBundle::default, ServiceConfig::default())
+    }
 
     #[test]
-    fn degraded_mode_answers_roofline() {
-        // no trained models: service still answers with theory roof
-        let svc = PredictionService::spawn(HashMap::new, ServiceConfig::default());
+    fn degraded_mode_answers_roofline_with_provenance() {
+        // no trained models: service still answers, and says so
+        let svc = svc();
         let gpu = gpu_by_name("A100").unwrap();
         let cfg = KernelConfig::Gemm { m: 2048, n: 2048, k: 2048, dtype: DType::Bf16 };
-        let lat = svc.predict(cfg, &gpu).unwrap();
-        assert!(lat > 0.0 && lat.is_finite());
+        let resp = svc.predict(PredictRequest::new(cfg, gpu)).unwrap();
+        assert!(resp.latency_sec > 0.0 && resp.latency_sec.is_finite());
+        assert_eq!(resp.provenance.source, Source::Roofline);
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.requests, 1);
         svc.shutdown();
@@ -152,19 +296,22 @@ mod tests {
 
     #[test]
     fn batches_multiple_clients() {
-        let svc = PredictionService::spawn(HashMap::new, ServiceConfig::default());
+        let svc = svc();
+        let client = svc.client();
         let gpu = gpu_by_name("H800").unwrap();
-        let rxs: Vec<_> = (0..64)
+        let pendings: Vec<Pending> = (0..64)
             .map(|i| {
-                svc.submit(
-                    KernelConfig::RmsNorm { seq: 128 + i, dim: 4096 },
-                    gpu.clone(),
-                )
+                client
+                    .submit(PredictRequest::new(
+                        KernelConfig::RmsNorm { seq: 128 + i, dim: 4096 },
+                        gpu.clone(),
+                    ))
+                    .unwrap()
             })
             .collect();
-        for rx in rxs {
-            let v = rx.recv().unwrap();
-            assert!(v > 0.0);
+        for p in pendings {
+            let resp = p.wait().unwrap();
+            assert!(resp.latency_sec > 0.0);
         }
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.requests, 64);
@@ -174,14 +321,15 @@ mod tests {
 
     #[test]
     fn repeated_launches_hit_the_analysis_cache() {
-        let svc = PredictionService::spawn(HashMap::new, ServiceConfig::default());
+        let svc = svc();
         let gpu = gpu_by_name("L40").unwrap();
         // deliberately odd shape: unique to this test, so the first submit
         // misses and every repeat must hit the decomposition cache
         let cfg = KernelConfig::Gemm { m: 1237, n: 4211, k: 773, dtype: DType::Bf16 };
-        for _ in 0..5 {
-            let v = svc.predict(cfg.clone(), &gpu).unwrap();
-            assert!(v > 0.0);
+        for i in 0..5 {
+            let resp = svc.predict(PredictRequest::new(cfg.clone(), gpu.clone())).unwrap();
+            assert!(resp.latency_sec > 0.0);
+            assert_eq!(resp.provenance.cache_hit, i > 0, "repeat {i}");
         }
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.cache_hits + snap.cache_misses, 5);
@@ -196,8 +344,53 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_joins() {
-        let svc = PredictionService::spawn(HashMap::new, ServiceConfig::default());
+    fn invalid_request_fails_fast_without_queueing() {
+        let svc = svc();
+        let gpu = gpu_by_name("A40").unwrap();
+        let bad = PredictRequest::new(
+            KernelConfig::Gemm { m: 0, n: 16, k: 16, dtype: DType::Bf16 },
+            gpu,
+        );
+        let err = svc.client().try_predict(bad).unwrap_err();
+        assert_eq!(err.code(), "unsupported_kernel");
+        assert_eq!(svc.queue_depth(), 0);
         svc.shutdown();
+    }
+
+    #[test]
+    fn client_after_shutdown_gets_shutdown_error() {
+        let svc = svc();
+        let client = svc.client();
+        let gpu = gpu_by_name("A100").unwrap();
+        svc.shutdown();
+        let err = client
+            .predict(PredictRequest::new(
+                KernelConfig::RmsNorm { seq: 64, dim: 512 },
+                gpu,
+            ))
+            .unwrap_err();
+        assert_eq!(err, PredictError::Shutdown);
+    }
+
+    #[test]
+    fn panicking_factory_closes_the_queue() {
+        // a factory that dies (e.g. missing artifacts) must surface as the
+        // typed Shutdown error, not leave blocking submitters hanging
+        let svc = PredictionService::spawn(|| panic!("factory died"), ServiceConfig::default());
+        let client = svc.client();
+        let gpu = gpu_by_name("H20").unwrap();
+        let err = client
+            .predict(PredictRequest::new(
+                KernelConfig::RmsNorm { seq: 8, dim: 64 },
+                gpu,
+            ))
+            .unwrap_err();
+        assert_eq!(err, PredictError::Shutdown);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins() {
+        svc().shutdown();
     }
 }

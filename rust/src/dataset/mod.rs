@@ -5,11 +5,12 @@
 //!
 //! The per-kernel parameter ranges match §V-B verbatim; magnitudes are
 //! log-uniformly sampled (the paper's ranges span 4-5 decades). The
-//! analyze/measure pipeline itself lives in [`crate::engine`]: building is
-//! fanned out over the engine's scoped-thread workers and the analytical
-//! half of every sample goes through its memoizing cache.
+//! analyze/measure pipeline is entered through the protocol-v1 surface
+//! ([`crate::api::profile_sample`], which validates launch geometry) and
+//! executes on [`crate::engine`]: building is fanned out over the engine's
+//! scoped-thread workers and the analytical half of every sample goes
+//! through its memoizing cache.
 
-use crate::engine::PredictionEngine;
 use crate::features::FEATURE_DIM;
 use crate::hw::GpuSpec;
 use crate::kernels::{fused_moe, DType, KernelConfig, KernelKind};
@@ -152,11 +153,13 @@ pub fn finalize_for_gpu(cfg: &KernelConfig, gpu: &GpuSpec) -> KernelConfig {
 
 /// Analyze + measure one (config, gpu) pair into a Sample.
 ///
-/// Routed through the shared [`PredictionEngine`]: the analytical half
-/// (decompose → schedule → featurize, plus the baseline feature views) is
-/// memoized across calls; only the seeded oracle measurement always runs.
+/// Routed through the protocol-v1 request path ([`crate::api`], which owns
+/// validation and the shared engine): the analytical half (decompose →
+/// schedule → featurize, plus the baseline feature views) is memoized
+/// across calls; only the seeded oracle measurement always runs. The
+/// sampler only produces valid launches, so validation failure is a bug.
 pub fn make_sample(cfg: &KernelConfig, gpu: &GpuSpec, seed: u64) -> Sample {
-    PredictionEngine::global().make_sample(cfg, gpu, seed)
+    crate::api::profile_sample(cfg, gpu, seed).expect("sampled launch geometry is valid")
 }
 
 /// Build `n_configs` sampled configs profiled on every GPU in `gpus`,
@@ -176,7 +179,7 @@ pub fn build(
     seed: u64,
     threads: usize,
 ) -> Vec<Sample> {
-    PredictionEngine::global().build_dataset(kind, gpus, n_configs, seed, threads)
+    crate::api::build_dataset(kind, gpus, n_configs, seed, threads)
 }
 
 /// Split by hardware: (seen-GPU rows, unseen-GPU rows) — Table VI split.

@@ -3,19 +3,22 @@
 //! Roofline, Linear, Habitat, Neusight), all sharing the same RF
 //! communication model so the comparison isolates kernel modeling.
 //!
-//! Kernel items route through the shared [`PredictionEngine`]: a trace
-//! launches the same kernel shapes layer after layer (and decode step after
-//! decode step), so the analytical half of `make_sample` hits the engine's
-//! decomposition cache for every repeat; the per-category MLP forwards are
-//! batched across the whole trace.
+//! Kernel items route through the protocol-v1 request path
+//! ([`crate::api::predict_batch_view`]): a trace launches the same kernel
+//! shapes layer after layer (and decode step after decode step), so the
+//! analytical half hits the engine's decomposition cache for every repeat;
+//! the per-category MLP forwards are batched across the whole trace. The
+//! answers carry provenance — [`MethodTotals::degraded_kernels`] counts
+//! SynPerf kernel items that fell back to the roofline (untrained
+//! category), so a degraded E2E number is distinguishable from a real one.
 
 use super::comm::{allreduce_oracle, sendrecv_oracle, CommModel};
 use super::trace::{Op, TraceItem};
+use crate::api::{self, FeatureView, Source};
 use crate::baselines::linear::LinearModel;
 use crate::engine::PredictionEngine;
-use crate::features::FEATURE_DIM;
 use crate::hw::GpuSpec;
-use crate::kernels::KernelKind;
+use crate::kernels::{KernelConfig, KernelKind};
 use crate::mlp::Predictor;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -36,6 +39,10 @@ pub struct MethodTotals {
     pub linear: f64,
     pub habitat: f64,
     pub neusight: f64,
+    /// Kernel items whose SynPerf answer was the degraded roofline
+    /// fallback (provenance `Source::Roofline`); 0 means every kernel item
+    /// was answered by a trained MLP.
+    pub degraded_kernels: usize,
 }
 
 /// Host-side launch gap per kernel in the measured system (framework
@@ -53,9 +60,9 @@ pub fn eval_trace(
 ) -> Result<MethodTotals> {
     let engine = PredictionEngine::global();
     let mut t = MethodTotals::default();
-    // batched MLP inputs per kernel category
-    let mut syn_in: HashMap<KernelKind, Vec<([f32; FEATURE_DIM], f64, f64)>> = HashMap::new();
-    let mut alt_in: HashMap<KernelKind, Vec<([f32; FEATURE_DIM], f64, f64)>> = HashMap::new();
+    // kernel launches accumulated for one batched routing pass per method
+    let mut kernel_reqs: Vec<(KernelConfig, GpuSpec)> = Vec::new();
+    let mut kernel_counts: Vec<f64> = Vec::new();
 
     for (i, item) in trace.iter().enumerate() {
         let op_seed = seed.wrapping_add(i as u64 * 0x9E37);
@@ -70,8 +77,8 @@ pub fn eval_trace(
                 } else {
                     t.linear += item.count * s.roofline_sec; // no model: fall back
                 }
-                syn_in.entry(s.kind).or_default().push((s.x, s.theory_sec, item.count));
-                alt_in.entry(s.kind).or_default().push((s.x_alt, s.alt_theory_sec, item.count));
+                kernel_reqs.push((cfg.clone(), gpu.clone()));
+                kernel_counts.push(item.count);
             }
             Op::AllReduce { bytes } => {
                 let actual = allreduce_oracle(*bytes, tp, gpu, op_seed);
@@ -104,19 +111,15 @@ pub fn eval_trace(
         }
     }
 
-    // batched MLP predictions, one forward per (method, kernel category)
-    for (kind, rows) in &syn_in {
-        let xs: Vec<[f32; FEATURE_DIM]> = rows.iter().map(|r| r.0).collect();
-        let eff = PredictionEngine::predict_eff_grouped(&models.synperf, *kind, &xs)?;
-        for ((_, theory, count), e) in rows.iter().zip(eff) {
-            t.synperf += count * theory / e;
-        }
-    }
-    for (kind, rows) in &alt_in {
-        let xs: Vec<[f32; FEATURE_DIM]> = rows.iter().map(|r| r.0).collect();
-        let eff = PredictionEngine::predict_eff_grouped(&models.neusight, *kind, &xs)?;
-        for ((_, theory, count), e) in rows.iter().zip(eff) {
-            t.neusight += count * theory / e;
+    // the one request path: per-category batched MLP routing with
+    // provenance, once per feature view (SynPerf, Neusight baseline)
+    let syn = api::predict_batch_view(&models.synperf, FeatureView::SynPerf, &kernel_reqs);
+    let neu = api::predict_batch_view(&models.neusight, FeatureView::Neusight, &kernel_reqs);
+    for ((sp, np), count) in syn.iter().zip(&neu).zip(&kernel_counts) {
+        t.synperf += count * sp.latency_sec;
+        t.neusight += count * np.latency_sec;
+        if sp.provenance.source == Source::Roofline {
+            t.degraded_kernels += 1;
         }
     }
     Ok(t)

@@ -12,10 +12,12 @@
 //!    service loop skip re-decomposition entirely;
 //!  * **parallel fan-out** ([`par::par_map`], scoped threads, order
 //!    preserving and thread-count deterministic) for dataset generation and
-//!    batch featurization;
-//!  * **per-`KernelKind` batched routing** into the per-category MLP
-//!    forward ([`PredictionEngine::predict_batch`]), including the degraded
-//!    roofline answer for untrained categories.
+//!    batch featurization.
+//!
+//! The engine is the *analysis* half of the stack. Request routing — the
+//! per-`KernelKind` batched MLP forwards, provenance, degraded-mode rules —
+//! lives one layer up in [`crate::api`] (protocol v1), which every
+//! prediction consumer calls through.
 //!
 //! The cached [`Analysis`] holds everything seed-independent about a launch
 //! (feature set, MLP input vectors for SynPerf and the Neusight baseline,
@@ -32,13 +34,10 @@ use crate::dataset::{self, finalize_for_gpu, Sample};
 use crate::features::{FeatureSet, FEATURE_DIM};
 use crate::hw::GpuSpec;
 use crate::kernels::{Decomposition, KernelConfig, KernelKind};
-use crate::mlp::Predictor;
 use crate::oracle;
 use crate::sched::schedule;
-use anyhow::Result;
 use self::cache::LruCache;
 use self::key::CacheKey;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -89,18 +88,6 @@ impl EngineStats {
             self.hits as f64 / total as f64
         }
     }
-}
-
-/// Result of a batched prediction round (see
-/// [`PredictionEngine::predict_batch`]).
-#[derive(Debug, Clone)]
-pub struct BatchOutcome {
-    /// Predicted latency (seconds) per request, in input order.
-    pub latencies: Vec<f64>,
-    pub cache_hits: usize,
-    pub cache_misses: usize,
-    /// Number of per-`KernelKind` MLP sub-batches the round was routed into.
-    pub kind_groups: usize,
 }
 
 pub struct PredictionEngine {
@@ -267,63 +254,6 @@ impl PredictionEngine {
         });
         per_cfg.into_iter().flatten().collect()
     }
-
-    /// The batched prediction round: featurize every request (cached), group
-    /// by kernel category, run one MLP forward per category, and return
-    /// latencies in input order. Categories without a trained model — or
-    /// whose forward pass fails — answer with the theoretical roof
-    /// (documented degraded mode, applied per category so one failing model
-    /// never degrades the whole batch). Infallible by construction.
-    pub fn predict_batch(
-        &self,
-        models: &HashMap<KernelKind, Predictor>,
-        reqs: &[(KernelConfig, GpuSpec)],
-    ) -> BatchOutcome {
-        let mut cache_hits = 0usize;
-        let mut cache_misses = 0usize;
-        let analyses: Vec<Arc<Analysis>> = reqs
-            .iter()
-            .map(|(cfg, gpu)| {
-                let (a, hit) = self.analyze_hit(cfg, gpu);
-                if hit {
-                    cache_hits += 1;
-                } else {
-                    cache_misses += 1;
-                }
-                a
-            })
-            .collect();
-
-        let mut groups: HashMap<KernelKind, Vec<usize>> = HashMap::new();
-        for (i, a) in analyses.iter().enumerate() {
-            groups.entry(a.kind).or_default().push(i);
-        }
-        let kind_groups = groups.len();
-
-        let mut latencies = vec![0.0; reqs.len()];
-        for (kind, idxs) in groups {
-            let xs: Vec<[f32; FEATURE_DIM]> = idxs.iter().map(|&i| analyses[i].x).collect();
-            let effs = Self::predict_eff_grouped(models, kind, &xs)
-                .unwrap_or_else(|_| vec![1.0; xs.len()]);
-            for (&i, eff) in idxs.iter().zip(effs) {
-                latencies[i] = analyses[i].features.theory_sec / eff;
-            }
-        }
-        BatchOutcome { latencies, cache_hits, cache_misses, kind_groups }
-    }
-
-    /// One per-category MLP forward, with the shared degraded-mode rule:
-    /// an untrained category predicts efficiency 1.0 (the roofline answer).
-    pub fn predict_eff_grouped(
-        models: &HashMap<KernelKind, Predictor>,
-        kind: KernelKind,
-        xs: &[[f32; FEATURE_DIM]],
-    ) -> Result<Vec<f64>> {
-        match models.get(&kind) {
-            Some(p) => p.predict_eff(xs),
-            None => Ok(vec![1.0; xs.len()]),
-        }
-    }
 }
 
 #[cfg(test)]
@@ -384,25 +314,6 @@ mod tests {
         // looking the pre-finalized config up again still hits
         engine.analyze(&cfg, &h800);
         assert_eq!(engine.stats().hits, 1);
-    }
-
-    #[test]
-    fn degraded_predict_batch_answers_roofline() {
-        let engine = PredictionEngine::new(64);
-        let gpu = gpu_by_name("L20").unwrap();
-        let reqs: Vec<(KernelConfig, GpuSpec)> = vec![
-            (gemm(512, 512, 512), gpu.clone()),
-            (KernelConfig::RmsNorm { seq: 64, dim: 4096 }, gpu.clone()),
-            (gemm(512, 512, 512), gpu.clone()),
-        ];
-        let out = engine.predict_batch(&HashMap::new(), &reqs);
-        assert_eq!(out.latencies.len(), 3);
-        assert_eq!(out.kind_groups, 2);
-        assert_eq!(out.cache_hits, 1, "the repeated GEMM must hit");
-        assert_eq!(out.cache_misses, 2);
-        let direct = engine.analyze(&reqs[0].0, &gpu);
-        assert_eq!(out.latencies[0].to_bits(), direct.theory_sec().to_bits());
-        assert_eq!(out.latencies[0].to_bits(), out.latencies[2].to_bits());
     }
 
     #[test]

@@ -3,8 +3,13 @@
 //! vs absolute pipeline demand, per pipeline, for two configurations. As
 //! demand grows, measured performance approaches each pipeline's "roof" and
 //! plateaus.
+//!
+//! Pipeline demands come from the protocol-v1 request path: a breakdown-
+//! carrying [`crate::api::PredictResponse`] (`with_breakdown`), not a raw
+//! engine peek. Ground-truth efficiency still comes from the oracle.
 
 use super::Lab;
+use crate::api::{self, ModelBundle, PredictRequest};
 use crate::engine::PredictionEngine;
 use crate::hw::gpu_by_name;
 use crate::kernels::KernelConfig;
@@ -31,15 +36,18 @@ pub fn run(lab: &Lab) -> Result<String> {
                 causal: false,
                 fa3: false,
             };
-            let a = engine.analyze(&cfg, &gpu);
-            let fset = &a.features;
+            let resp = api::predict_one(
+                &ModelBundle::default(),
+                &PredictRequest::new(cfg.clone(), gpu.clone()).with_breakdown(),
+            )?;
+            let b = resp.breakdown.expect("breakdown requested");
             let s = engine.make_sample(&cfg, &gpu, lab.seed + kv as u64);
             let eff = s.theory_sec / s.latency_sec;
             effs.push(eff);
             t.row(vec![
                 kv.to_string(),
-                f(fset.tensor.total_ops / 1e9, 2),
-                f(fset.mio.total_bytes / 1e6, 1),
+                f(b.tensor.total_ops / 1e9, 2),
+                f(b.mio_bytes / 1e6, 1),
                 f(eff, 3),
             ]);
         }

@@ -170,15 +170,19 @@ impl Lab {
         dataset::sample_configs(kind, self.scale.n_configs(), self.seed)
     }
 
-    /// Train (or load cached) one per-kernel model of the given flavor;
-    /// trained on the *seen*-GPU split only.
-    pub fn model(&self, kind: KernelKind, flavor: ModelFlavor) -> Result<Predictor> {
-        let path = self.root.join("models").join(format!(
+    fn model_path(&self, kind: KernelKind, flavor: ModelFlavor) -> PathBuf {
+        self.root.join("models").join(format!(
             "{}_{}_{}.bin",
             kind.name(),
             flavor.tag(),
             self.scale.tag()
-        ));
+        ))
+    }
+
+    /// Train (or load cached) one per-kernel model of the given flavor;
+    /// trained on the *seen*-GPU split only.
+    pub fn model(&self, kind: KernelKind, flavor: ModelFlavor) -> Result<Predictor> {
+        let path = self.model_path(kind, flavor);
         if path.exists() {
             return Predictor::from_file(&self.engine, path.to_str().unwrap());
         }
@@ -234,6 +238,26 @@ impl Lab {
             linear.insert(kind, self.linear(kind));
         }
         Ok(ModelSet { synperf, neusight, linear })
+    }
+
+    /// Best-effort protocol-v1 model bundle for serving: mean models are
+    /// loaded or trained per category; p80 ceiling models are only picked
+    /// up when already cached on disk (serve startup never blocks on extra
+    /// trainings for a flavor nobody may request). Missing categories
+    /// answer in degraded roofline mode, visible in response provenance.
+    pub fn bundle(&self, kinds: &[KernelKind]) -> crate::api::ModelBundle {
+        let mut b = crate::api::ModelBundle::default();
+        for &kind in kinds {
+            if let Ok(p) = self.model(kind, ModelFlavor::SynPerf) {
+                b.mean.insert(kind, p);
+            }
+            if self.model_path(kind, ModelFlavor::P80).exists() {
+                if let Ok(p) = self.model(kind, ModelFlavor::P80) {
+                    b.p80.insert(kind, p);
+                }
+            }
+        }
+        b
     }
 
     /// Per-GPU communication model (RF over the profiled database), cached.

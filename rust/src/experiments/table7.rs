@@ -2,33 +2,40 @@
 //! maximum) against the oracle's NCU-style counters, for the four validated
 //! kernel implementations: gemm8 (A100, HW-scheduled), gemm9 (H100,
 //! persistent), FA2 (A100), FA3 (H100).
+//!
+//! The model-side counters come from the protocol-v1 breakdown
+//! ([`crate::api::Breakdown`] per-pipe `total_ops` / `max_sm_ops`), so this
+//! experiment validates exactly what the serving surface reports.
 
 use super::Lab;
+use crate::api::{self, ModelBundle, PredictRequest};
 use crate::dataset::{finalize_for_gpu, sample_configs};
-use crate::engine::PredictionEngine;
 use crate::hw::gpu_by_name;
 use crate::kernels::KernelKind;
 use crate::oracle;
 use crate::util::table::{f, Table};
 use anyhow::Result;
 
-fn validate(kind: KernelKind, gpu_name: &str, n: usize, seed: u64) -> (f64, f64) {
-    let engine = PredictionEngine::global();
+fn validate(kind: KernelKind, gpu_name: &str, n: usize, seed: u64) -> Result<(f64, f64)> {
+    let bundle = ModelBundle::default();
     let gpu = gpu_by_name(gpu_name).unwrap();
     let configs = sample_configs(kind, n, seed);
     let (mut max_err, mut tot_err) = (0.0, 0.0);
     let mut count = 0usize;
     for (i, cfg) in configs.iter().enumerate() {
         let cfg = finalize_for_gpu(cfg, &gpu);
-        let a = engine.analyze(&cfg, &gpu);
-        let fset = &a.features;
+        let resp = api::predict_one(
+            &bundle,
+            &PredictRequest::new(cfg.clone(), gpu.clone()).with_breakdown(),
+        )?;
+        let b = resp.breakdown.expect("breakdown requested");
         let o = oracle::measure(&cfg, &gpu, seed + i as u64);
         // attention also exercises non-tensor pipes, but Table VII compares
         // the dominant math pipe counters
         let (model_max, model_tot, oracle_max, oracle_tot) = if o.total_tensor_ops > 0.0 {
-            (fset.tensor.max_sm_ops, fset.tensor.total_ops, o.max_sm_tensor_ops, o.total_tensor_ops)
+            (b.tensor.max_sm_ops, b.tensor.total_ops, o.max_sm_tensor_ops, o.total_tensor_ops)
         } else {
-            (fset.fma.max_sm_ops, fset.fma.total_ops, o.max_sm_fma_ops, o.total_fma_ops)
+            (b.fma.max_sm_ops, b.fma.total_ops, o.max_sm_fma_ops, o.total_fma_ops)
         };
         if oracle_tot <= 0.0 {
             continue;
@@ -37,7 +44,7 @@ fn validate(kind: KernelKind, gpu_name: &str, n: usize, seed: u64) -> (f64, f64)
         tot_err += ((model_tot - oracle_tot) / oracle_tot).abs();
         count += 1;
     }
-    (100.0 * max_err / count as f64, 100.0 * tot_err / count as f64)
+    Ok((100.0 * max_err / count as f64, 100.0 * tot_err / count as f64))
 }
 
 pub fn run(lab: &Lab) -> Result<String> {
@@ -46,10 +53,10 @@ pub fn run(lab: &Lab) -> Result<String> {
         super::Scale::Normal => 200,
         super::Scale::Full => 500,
     };
-    let (g8_max, g8_tot) = validate(KernelKind::Gemm, "A100", n, lab.seed);
-    let (g9_max, g9_tot) = validate(KernelKind::Gemm, "H100", n, lab.seed ^ 1);
-    let (fa2_max, fa2_tot) = validate(KernelKind::Attention, "A100", n, lab.seed ^ 2);
-    let (fa3_max, fa3_tot) = validate(KernelKind::Attention, "H100", n, lab.seed ^ 3);
+    let (g8_max, g8_tot) = validate(KernelKind::Gemm, "A100", n, lab.seed)?;
+    let (g9_max, g9_tot) = validate(KernelKind::Gemm, "H100", n, lab.seed ^ 1)?;
+    let (fa2_max, fa2_tot) = validate(KernelKind::Attention, "A100", n, lab.seed ^ 2)?;
+    let (fa3_max, fa3_tot) = validate(KernelKind::Attention, "H100", n, lab.seed ^ 3)?;
 
     let mut t = Table::new(
         "Table VII — MAPE (%) of analytical operation counts",

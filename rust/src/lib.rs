@@ -14,7 +14,13 @@
 //! and [`experiments`] all route through it.
 //! Ground truth comes from the [`oracle`] testbed (the hardware
 //! substitution documented in DESIGN.md §2).
+//!
+//! Every prediction consumer speaks **protocol v1** ([`api`]): typed
+//! `PredictRequest`/`PredictResponse` with provenance (MLP vs degraded
+//! roofline, cache hit), a closed `PredictError` taxonomy, and the same
+//! schema as a JSONL wire surface (`synperf serve --stdio`).
 
+pub mod api;
 pub mod coordinator;
 pub mod dataset;
 pub mod autotune;

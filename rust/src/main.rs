@@ -3,13 +3,15 @@
 //! Subcommands:
 //!   dataset     build + cache a per-kernel profiling dataset
 //!   train       train a per-kernel MLP (MAPE or P80 pinball loss)
-//!   predict     one-shot kernel latency prediction
+//!   predict     one-shot kernel latency prediction (protocol v1)
 //!   e2e         end-to-end LLM inference prediction vs ground truth
-//!   serve       run the batching prediction service on a request stream
+//!   serve       run the batching prediction service (synthetic load or
+//!               the JSONL stdio wire surface: `serve --stdio`)
 //!   tune        model-guided Fused-MoE autotuning (§VII)
 //!   experiment  regenerate a paper table/figure (see DESIGN.md §5)
 
 use anyhow::{bail, Context, Result};
+use synperf::api::{self, ModelBundle, PredictRequest, Source};
 use synperf::dataset;
 use synperf::e2e::{llm, predict as e2e_predict, trace, workload};
 use synperf::experiments::{self, Lab, ModelFlavor, Scale};
@@ -23,9 +25,10 @@ fn usage() -> &'static str {
      subcommands:\n\
        dataset    --kernel <k> [--n 420] [--out runs/data/<k>.csv] [--scale fast|normal|full]\n\
        train      --kernel <k> [--p80] [--scale ...]\n\
-       predict    --kernel gemm --gpu A100 --m 4096 --n 4096 --k 4096\n\
+       predict    --kernel gemm --gpu A100 --m 4096 --n 4096 --k 4096 [--p80] [--strict]\n\
        e2e        --model qwen2.5-14b --gpu H100 [--tp 1] [--pp 1] [--workload arxiv] [--batch 8]\n\
-       serve      [--requests 512] [--gpu A100]\n\
+       serve      [--stdio] [--requests 512] [--gpu A100]\n\
+                  [--max-batch 256] [--deadline-us 2000] [--queue-cap 1024]\n\
        tune       --gpu A40 [--n 20]\n\
        experiment <table1|table7|fig3|fig4|fig5|table8|scaledmm|fig6|fig7|table9|fig8|table10|all>\n\
      \n\
@@ -42,12 +45,14 @@ fn scale_of(args: &Args) -> Scale {
 
 fn kernel_of(args: &Args) -> Result<KernelKind> {
     let name = args.req("kernel")?;
-    KernelKind::from_name(name).with_context(|| format!("unknown kernel {name:?}"))
+    Ok(KernelKind::from_name(name).ok_or_else(|| {
+        api::PredictError::UnsupportedKernel(format!("unknown kernel {name:?}"))
+    })?)
 }
 
 fn gpu_of(args: &Args, default: &str) -> Result<hw::GpuSpec> {
     let name = args.str_or("gpu", default);
-    hw::gpu_by_name(&name).with_context(|| format!("unknown GPU {name:?} (see Table VI)"))
+    Ok(api::resolve_gpu(&name)?)
 }
 
 fn main() -> Result<()> {
@@ -119,16 +124,43 @@ fn cmd_predict(args: &Args) -> Result<()> {
             seq: args.usize_or("seq", 4096)? as u32,
             dim: args.usize_or("dim", 13824)? as u32,
         },
-        other => bail!("predict CLI supports gemm/rmsnorm/silu_mul (got {})", other.name()),
+        other => {
+            return Err(api::PredictError::UnsupportedKernel(format!(
+                "predict CLI supports gemm/rmsnorm/silu_mul (got {})",
+                other.name()
+            ))
+            .into())
+        }
     };
-    let lab = Lab::new(scale_of(args))?;
-    let pred = lab.model(kind, ModelFlavor::SynPerf)?;
-    let s = dataset::make_sample(&cfg, &gpu, 0);
-    let eff = pred.predict_eff(&[s.x])?[0];
+    // best-effort models: without artifacts the answer is the documented
+    // degraded roofline mode, visible in the provenance line below
+    let bundle = match Lab::new(scale_of(args)) {
+        Ok(lab) => lab.bundle(&[kind]),
+        Err(_) => {
+            eprintln!("(no artifacts — answering in degraded roofline mode)");
+            ModelBundle::default()
+        }
+    };
+    let mut req = PredictRequest::new(cfg.clone(), gpu.clone()).with_breakdown();
+    if args.has("p80") {
+        req = req.p80();
+    }
+    if args.has("strict") {
+        req = req.strict();
+    }
+    let resp = api::predict_one(&bundle, &req)?;
+    let b = resp.breakdown.as_ref().expect("breakdown requested");
     println!("kernel:        {} on {}", kind.name(), gpu.name);
-    println!("theory roof:   {:.3} us", s.theory_sec * 1e6);
-    println!("pred eff:      {:.3}", eff);
-    println!("pred latency:  {:.3} us", s.theory_sec / eff * 1e6);
+    println!("theory roof:   {:.3} us", b.theory_sec * 1e6);
+    println!("pred eff:      {:.3}", b.theory_sec / resp.latency_sec);
+    println!("pred latency:  {:.3} us", resp.latency_sec * 1e6);
+    println!(
+        "provenance:    {} ({} flavor, cache {})",
+        resp.provenance.source.name(),
+        resp.flavor.name(),
+        if resp.provenance.cache_hit { "hit" } else { "miss" }
+    );
+    let s = dataset::make_sample(&cfg, &gpu, 0);
     println!("oracle actual: {:.3} us (testbed ground truth)", s.latency_sec * 1e6);
     Ok(())
 }
@@ -167,30 +199,75 @@ fn cmd_e2e(args: &Args) -> Result<()> {
             100.0 * (v - t.actual) / t.actual
         );
     }
+    if t.degraded_kernels > 0 {
+        println!(
+            "  note: {} kernel items fell back to the roofline (untrained category)",
+            t.degraded_kernels
+        );
+    }
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use synperf::coordinator::{PredictionService, ServiceConfig};
+    let defaults = ServiceConfig::default();
+    let cfg = ServiceConfig {
+        max_batch: args.usize_or("max-batch", defaults.max_batch)?,
+        deadline: std::time::Duration::from_micros(
+            args.u64_or("deadline-us", defaults.deadline.as_micros() as u64)?,
+        ),
+        queue_cap: args.usize_or("queue-cap", defaults.queue_cap)?,
+    };
+    let scale = scale_of(args);
+    // effective config at startup (stderr: stdout carries JSONL in --stdio)
+    eprintln!(
+        "serve: protocol v{}, max_batch={}, deadline={}us, queue_cap={}",
+        api::PROTOCOL_VERSION,
+        cfg.max_batch,
+        cfg.deadline.as_micros(),
+        cfg.queue_cap
+    );
+    let svc = PredictionService::spawn(
+        move || match Lab::new(scale) {
+            Ok(lab) => {
+                lab.bundle(&[KernelKind::Gemm, KernelKind::RmsNorm, KernelKind::SiluMul])
+            }
+            Err(_) => {
+                eprintln!("(no artifacts — serving degraded roofline answers)");
+                ModelBundle::default()
+            }
+        },
+        cfg.clone(),
+    );
+
+    if args.has("stdio") {
+        // JSONL wire surface: one request per line on stdin, one response
+        // per line on stdout (see rust/README.md for the schema). Stdin is
+        // wrapped (not locked): the reader moves into serve_lines' reader
+        // thread, and StdinLock is not Send.
+        let stdout = std::io::stdout();
+        let stats = synperf::api::stdio::serve_lines(
+            &svc.client(),
+            std::io::BufReader::new(std::io::stdin()),
+            &mut stdout.lock(),
+            cfg.max_batch,
+        )?;
+        let snap = svc.metrics.snapshot();
+        eprintln!(
+            "stdio: {} responses ({} errors), mean batch {:.1}, rejected {}, max depth {}",
+            stats.served, stats.errors, snap.mean_batch, snap.rejected_requests, snap.max_queue_depth
+        );
+        svc.shutdown();
+        return Ok(());
+    }
+
+    // synthetic-load mode: fire n GEMM predictions through the client
     let n = args.usize_or("requests", 512)?;
     let gpu = gpu_of(args, "A100")?;
-    let scale = scale_of(args);
-    let svc = PredictionService::spawn(
-        move || {
-            let lab = Lab::new(scale).expect("artifacts present");
-            let mut m = std::collections::HashMap::new();
-            for kind in [KernelKind::Gemm, KernelKind::RmsNorm, KernelKind::SiluMul] {
-                if let Ok(p) = lab.model(kind, ModelFlavor::SynPerf) {
-                    m.insert(kind, p);
-                }
-            }
-            m
-        },
-        ServiceConfig::default(),
-    );
+    let client = svc.client();
     let mut rng = synperf::util::rng::Rng::new(3);
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n)
+    let pendings: Vec<_> = (0..n)
         .map(|_| {
             let cfg = KernelConfig::Gemm {
                 m: rng.log_range_u32(16, 32768),
@@ -198,22 +275,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 k: rng.log_range_u32(256, 8192),
                 dtype: DType::Bf16,
             };
-            svc.submit(cfg, gpu.clone())
+            client.submit(PredictRequest::new(cfg, gpu.clone()))
         })
-        .collect();
+        .collect::<std::result::Result<_, _>>()?;
     let mut total = 0.0;
-    for rx in rxs {
-        total += rx.recv()?;
+    let mut mlp = 0usize;
+    for p in pendings {
+        let resp = p.wait()?;
+        total += resp.latency_sec;
+        if resp.provenance.source == Source::Mlp {
+            mlp += 1;
+        }
     }
     let wall = t0.elapsed();
     let snap = svc.metrics.snapshot();
     println!(
-        "served {n} predictions in {wall:?} ({:.0} req/s)",
-        n as f64 / wall.as_secs_f64()
+        "served {n} predictions in {wall:?} ({:.0} req/s; {mlp} mlp / {} roofline)",
+        n as f64 / wall.as_secs_f64(),
+        n - mlp
     );
     println!(
-        "mean batch {:.1}, batch p50 {:.0} us, p99 {:.0} us",
-        snap.mean_batch, snap.p50_us, snap.p99_us
+        "mean batch {:.1}, batch p50 {:.0} us, p99 {:.0} us, rejected {}, max queue depth {}",
+        snap.mean_batch, snap.p50_us, snap.p99_us, snap.rejected_requests, snap.max_queue_depth
     );
     println!(
         "analysis cache: {} hits / {} misses ({:.0}% hit rate), mean kind-batch {:.1}",

@@ -109,21 +109,37 @@ fn parallel_batch_matches_serial_batch() {
 
 #[test]
 fn predict_batch_matches_direct_roofline_in_degraded_mode() {
-    // with no trained models, batched predictions are exactly the
-    // theoretical roofs computed by the direct path
-    let engine = PredictionEngine::new(256);
+    // with no trained models, batched protocol-v1 predictions are exactly
+    // the theoretical roofs computed by the direct path — and say so in
+    // their provenance
     let gpu = gpu_by_name("H800").unwrap();
-    let reqs: Vec<(KernelConfig, GpuSpec)> =
-        mixed_configs().into_iter().map(|c| (c, gpu.clone())).collect();
-    let out = engine.predict_batch(&HashMap::new(), &reqs);
-    assert_eq!(out.kind_groups, 6);
-    for (i, (cfg, gpu)) in reqs.iter().enumerate() {
-        let (_, theory) = direct_input(cfg, gpu);
+    let raw = synperf::api::predict_batch_view(
+        &HashMap::new(),
+        synperf::api::FeatureView::SynPerf,
+        &mixed_configs().into_iter().map(|c| (c, gpu.clone())).collect::<Vec<_>>(),
+    );
+    assert_eq!(raw.len(), 6);
+    for (p, cfg) in raw.iter().zip(mixed_configs()) {
+        let (_, theory) = direct_input(&cfg, &gpu);
         assert_eq!(
-            out.latencies[i].to_bits(),
+            p.latency_sec.to_bits(),
             theory.to_bits(),
-            "req {i}: degraded prediction must equal the direct roof"
+            "{:?}: degraded prediction must equal the direct roof",
+            cfg.kind()
         );
+        assert_eq!(p.provenance.source, synperf::api::Source::Roofline);
+    }
+
+    // the typed batch front door agrees with the raw routing path
+    let reqs: Vec<synperf::api::PredictRequest> = mixed_configs()
+        .into_iter()
+        .map(|c| synperf::api::PredictRequest::new(c, gpu.clone()))
+        .collect();
+    let report = synperf::api::predict_batch(&synperf::api::ModelBundle::default(), &reqs);
+    assert_eq!(report.kind_groups, 6);
+    for (res, p) in report.results.iter().zip(&raw) {
+        let resp = res.as_ref().expect("valid requests succeed");
+        assert_eq!(resp.latency_sec.to_bits(), p.latency_sec.to_bits());
     }
 }
 
@@ -196,6 +212,7 @@ fn repeated_trace_launches_hit_the_decomposition_cache() {
 
 #[test]
 fn service_and_dataset_share_the_global_engine() {
+    use synperf::api::{ModelBundle, PredictRequest};
     use synperf::coordinator::{PredictionService, ServiceConfig};
     // a unique shape first analyzed via dataset::make_sample must already
     // be cached when the service sees it
@@ -203,9 +220,10 @@ fn service_and_dataset_share_the_global_engine() {
     let cfg = KernelConfig::SiluMul { seq: 2731, dim: 6007 };
     let _ = synperf::dataset::make_sample(&cfg, &gpu, 5);
 
-    let svc = PredictionService::spawn(HashMap::new, ServiceConfig::default());
-    let v = svc.predict(cfg, &gpu).unwrap();
-    assert!(v > 0.0);
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let resp = svc.predict(PredictRequest::new(cfg, gpu)).unwrap();
+    assert!(resp.latency_sec > 0.0);
+    assert!(resp.provenance.cache_hit, "service must reuse the dataset-built analysis");
     let snap = svc.metrics.snapshot();
     assert_eq!(snap.cache_hits, 1, "service must reuse the dataset-built analysis");
     svc.shutdown();

@@ -129,26 +129,30 @@ fn model_inputs_always_finite() {
 
 #[test]
 fn service_loses_no_requests_under_load() {
+    use synperf::api::{ModelBundle, PredictRequest};
     use synperf::coordinator::{PredictionService, ServiceConfig};
     prop_check("service_conservation", 5, |r| {
         let svc = PredictionService::spawn(
-            std::collections::HashMap::new,
+            ModelBundle::default,
             ServiceConfig { max_batch: r.range_usize(1, 64), ..Default::default() },
         );
+        let client = svc.client();
         let n = r.range_usize(10, 120);
         let gpu = random_gpu(r);
-        let rxs: Vec<_> = (0..n)
+        let pendings: Vec<_> = (0..n)
             .map(|i| {
-                svc.submit(
-                    KernelConfig::RmsNorm { seq: 16 + i as u32, dim: 1024 },
-                    gpu.clone(),
-                )
+                client
+                    .submit(PredictRequest::new(
+                        KernelConfig::RmsNorm { seq: 16 + i as u32, dim: 1024 },
+                        gpu.clone(),
+                    ))
+                    .expect("queue accepts under its capacity")
             })
             .collect();
         let mut got = 0;
-        for rx in rxs {
-            let v = rx.recv().expect("every request answered");
-            assert!(v > 0.0 && v.is_finite());
+        for p in pendings {
+            let resp = p.wait().expect("every request answered");
+            assert!(resp.latency_sec > 0.0 && resp.latency_sec.is_finite());
             got += 1;
         }
         assert_eq!(got, n);

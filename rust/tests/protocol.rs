@@ -1,0 +1,194 @@
+//! Protocol-v1 acceptance tests: exact JSONL golden lines for
+//! `PredictRequest` / `PredictResponse` / every `PredictError` variant
+//! (wire-format drift fails loudly), plus the backpressure contract of the
+//! bounded service queue — saturation yields `QueueFull`, never unbounded
+//! growth or a hang — and graceful drain on shutdown.
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+use synperf::api::{
+    wire, Flavor, ModelBundle, PredictError, PredictRequest, PredictResponse, Provenance, Source,
+};
+use synperf::coordinator::{PredictionService, ServiceConfig};
+use synperf::hw::gpu_by_name;
+use synperf::kernels::{DType, KernelConfig, KernelKind};
+
+fn gemm(m: u32, n: u32, k: u32) -> KernelConfig {
+    KernelConfig::Gemm { m, n, k, dtype: DType::Bf16 }
+}
+
+#[test]
+fn request_golden_line() {
+    let gpu = gpu_by_name("A100").unwrap();
+    let req = PredictRequest::new(gemm(4096, 4096, 4096), gpu).p80().strict().tagged("warmup");
+    let line = wire::encode_request(Some("r1"), &req);
+    assert_eq!(
+        line,
+        r#"{"v":1,"id":"r1","gpu":"A100","kernel":{"type":"gemm","m":4096,"n":4096,"k":4096,"dtype":"bf16"},"flavor":"p80","allow_degraded":false,"breakdown":false,"tag":"warmup"}"#
+    );
+    // and the golden line parses back to the same typed request
+    let (id, parsed) = wire::parse_request(&line);
+    assert_eq!(id.as_deref(), Some("r1"));
+    let back = parsed.unwrap();
+    assert_eq!(back.cfg, req.cfg);
+    assert_eq!(back.opts, req.opts);
+}
+
+#[test]
+fn response_golden_line_roundtrips() {
+    let resp = PredictResponse {
+        latency_sec: 1.5e-4,
+        provenance: Provenance { source: Source::Roofline, cache_hit: true },
+        flavor: Flavor::Mean,
+        kind: KernelKind::Gemm,
+        gpu: "A100".to_string(),
+        breakdown: None,
+        tag: Some("warmup".to_string()),
+    };
+    let line = wire::encode_response(Some("r1"), &Ok(resp.clone()));
+    assert_eq!(
+        line,
+        r#"{"v":1,"id":"r1","ok":true,"latency_sec":1.5e-4,"latency_us":150.000,"source":"roofline","cache_hit":true,"flavor":"mean","kernel":"gemm","gpu":"A100","tag":"warmup"}"#
+    );
+    let (id, back) = wire::parse_response(&line).unwrap();
+    assert_eq!(id.as_deref(), Some("r1"));
+    assert_eq!(back.unwrap(), resp);
+}
+
+#[test]
+fn error_golden_lines_cover_the_whole_taxonomy() {
+    let cases: Vec<(PredictError, &str)> = vec![
+        (
+            PredictError::UnknownGpu("B300".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"unknown_gpu","message":"unknown GPU \"B300\" (see Table VI)","gpu":"B300"}}"#,
+        ),
+        (
+            PredictError::UnsupportedKernel("attention batch must be non-empty".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"unsupported_kernel","message":"unsupported kernel: attention batch must be non-empty","reason":"attention batch must be non-empty"}}"#,
+        ),
+        (
+            PredictError::PredictorUnavailable(KernelKind::Gemm),
+            r#"{"v":1,"ok":false,"error":{"code":"predictor_unavailable","message":"no trained predictor for category Gemm (degraded answers disabled)","kind":"gemm"}}"#,
+        ),
+        (
+            PredictError::QueueFull,
+            r#"{"v":1,"ok":false,"error":{"code":"queue_full","message":"prediction queue at capacity"}}"#,
+        ),
+        (
+            PredictError::Shutdown,
+            r#"{"v":1,"ok":false,"error":{"code":"shutdown","message":"prediction service is shut down"}}"#,
+        ),
+    ];
+    for (err, golden) in cases {
+        let line = wire::encode_response(None, &Err(err.clone()));
+        assert_eq!(line, golden, "wire drift for {:?}", err.code());
+        let (_, back) = wire::parse_response(&line).unwrap();
+        assert_eq!(back.unwrap_err(), err, "round trip for {:?}", err.code());
+    }
+}
+
+#[test]
+fn breakdown_and_degraded_responses_roundtrip() {
+    // a real degraded (roofline-provenance) response with a breakdown
+    // survives the wire bit-exactly
+    let gpu = gpu_by_name("H800").unwrap();
+    let req = PredictRequest::new(gemm(1789, 923, 411), gpu).with_breakdown().tagged("bd");
+    let resp = synperf::api::predict_one(&ModelBundle::default(), &req).unwrap();
+    assert_eq!(resp.provenance.source, Source::Roofline, "no artifacts in tests");
+    assert!(resp.breakdown.is_some());
+    let line = wire::encode_response(Some("77"), &Ok(resp.clone()));
+    assert!(line.contains(r#""source":"roofline""#), "degraded mode must be visible: {line}");
+    assert!(line.contains(r#""breakdown":{"tensor""#));
+    let (id, back) = wire::parse_response(&line).unwrap();
+    assert_eq!(id.as_deref(), Some("77"));
+    let back = back.unwrap();
+    assert_eq!(back, resp);
+    assert_eq!(
+        back.breakdown.unwrap().theory_sec.to_bits(),
+        resp.breakdown.unwrap().theory_sec.to_bits()
+    );
+}
+
+#[test]
+fn saturated_queue_returns_queue_full_not_a_hang() {
+    // gate the factory so the service loop cannot start draining: the
+    // bounded queue saturates deterministically
+    let (gate_tx, gate_rx) = channel::<()>();
+    let svc = PredictionService::spawn(
+        move || {
+            gate_rx.recv().ok();
+            ModelBundle::default()
+        },
+        ServiceConfig { max_batch: 8, deadline: Duration::from_millis(1), queue_cap: 2 },
+    );
+    let client = svc.client();
+    let gpu = gpu_by_name("A100").unwrap();
+    let req = |i: u32| PredictRequest::new(KernelConfig::RmsNorm { seq: 64 + i, dim: 2048 }, gpu.clone());
+
+    let p1 = client.try_predict(req(1)).unwrap();
+    let p2 = client.try_predict(req(2)).unwrap();
+    // queue_cap = 2: the third request must bounce immediately
+    let err = client.try_predict(req(3)).unwrap_err();
+    assert_eq!(err, PredictError::QueueFull);
+    // the blocking path with a deadline also reports QueueFull, not a hang
+    let t0 = Instant::now();
+    let err = client.predict_deadline(req(4), Duration::from_millis(40)).unwrap_err();
+    assert_eq!(err, PredictError::QueueFull);
+    assert!(t0.elapsed() < Duration::from_secs(5), "deadline must bound the wait");
+    assert_eq!(client.queue_depth(), 2, "backlog never exceeds queue_cap");
+
+    // open the gate: everything accepted is answered
+    gate_tx.send(()).unwrap();
+    assert!(p1.wait().unwrap().latency_sec > 0.0);
+    assert!(p2.wait().unwrap().latency_sec > 0.0);
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.rejected_requests, 2);
+    assert_eq!(snap.requests, 2);
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_drains_accepted_requests() {
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let client = svc.client();
+    let gpu = gpu_by_name("L20").unwrap();
+    let pendings: Vec<_> = (0..16)
+        .map(|i| {
+            client
+                .try_predict(PredictRequest::new(
+                    KernelConfig::SiluMul { seq: 32 + i, dim: 1024 },
+                    gpu.clone(),
+                ))
+                .unwrap()
+        })
+        .collect();
+    // graceful: close the queue, answer everything already accepted
+    svc.shutdown();
+    for p in pendings {
+        assert!(p.wait().unwrap().latency_sec > 0.0, "accepted requests are drained");
+    }
+    // the surviving client sees the typed terminal state
+    let err = client.predict(PredictRequest::new(gemm(64, 64, 64), gpu)).unwrap_err();
+    assert_eq!(err, PredictError::Shutdown);
+}
+
+#[test]
+fn service_answers_are_typed_end_to_end() {
+    // the service client consumes PredictResponse — degraded provenance,
+    // flavor and tag all travel with the latency
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let gpu = gpu_by_name("A40").unwrap();
+    let resp = svc
+        .predict(PredictRequest::new(gemm(911, 433, 277), gpu.clone()).tagged("e2e"))
+        .unwrap();
+    assert_eq!(resp.provenance.source, Source::Roofline);
+    assert_eq!(resp.flavor, Flavor::Mean);
+    assert_eq!(resp.gpu, "A40");
+    assert_eq!(resp.tag.as_deref(), Some("e2e"));
+    // strict mode propagates the typed predictor-unavailable error
+    let err = svc
+        .predict(PredictRequest::new(gemm(911, 433, 277), gpu).strict())
+        .unwrap_err();
+    assert_eq!(err, PredictError::PredictorUnavailable(KernelKind::Gemm));
+    svc.shutdown();
+}
