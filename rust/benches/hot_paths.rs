@@ -3,9 +3,16 @@
 //!
 //!   decompose -> schedule -> features   (the analytical front half)
 //!   oracle measurement                  (dataset generation throughput)
+//!   native MLP forward                  (artifact-free fallback path)
 //!   MLP forward via PJRT (b1 / b256 / b1024)
 //!   end-to-end single prediction       (the Fig. 7 "SynPerf time" path)
 //!   coordinator service throughput
+//!
+//! Flags (after `--`):
+//!   --json <path>   also write results as JSON (BENCH_PR*.json schema)
+//!   --smoke         minimal iteration counts — CI smoke so the binary
+//!                   can't rot; timings are NOT meaningful in this mode
+//!                   (also enabled by SYNPERF_BENCH_SMOKE=1)
 
 use synperf::coordinator::{PredictionService, ServiceConfig};
 use synperf::dataset;
@@ -16,9 +23,40 @@ use synperf::kernels::{DType, KernelConfig, KernelKind};
 use synperf::oracle;
 use synperf::runtime::Engine;
 use synperf::sched::schedule;
-use synperf::util::bench::{bench, black_box};
+use synperf::util::argp::Args;
+use synperf::util::bench::{bench, black_box, write_json, BenchResult};
+
+struct Harness {
+    smoke: bool,
+    results: Vec<BenchResult>,
+}
+
+impl Harness {
+    fn run(&mut self, name: &str, budget_ms: u64, min_iters: usize, f: impl FnMut()) {
+        let (budget_ms, min_iters) = if self.smoke { (1, 2) } else { (budget_ms, min_iters) };
+        let r = bench(name, budget_ms, min_iters, f);
+        println!("{}", r.report());
+        self.results.push(r);
+    }
+}
 
 fn main() {
+    // cargo passes a bare `--bench` to bench binaries; Args absorbs it as a
+    // switch, so only our own flags matter here
+    let args = Args::parse(std::env::args().skip(1));
+    let smoke = args.has("smoke")
+        || std::env::var("SYNPERF_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let mut h = Harness { smoke, results: Vec::new() };
+
+    run_benches(&mut h, smoke);
+
+    if let Some(path) = args.str_opt("json") {
+        write_json(path, &h.results).expect("write bench json");
+        println!("\nwrote {} bench results to {path}", h.results.len());
+    }
+}
+
+fn run_benches(h: &mut Harness, smoke: bool) {
     let gpu = hw::gpu_by_name("A100").unwrap();
     let cfg = KernelConfig::Gemm { m: 4096, n: 11008, k: 4096, dtype: DType::Bf16 };
     let attn = KernelConfig::Attention {
@@ -31,52 +69,58 @@ fn main() {
     };
 
     println!("== analytical front half ==");
-    let r = bench("decompose/gemm-4096x11008x4096", 200, 20, || {
-        black_box(cfg.decompose(&gpu));
-    });
-    println!("{}", r.report());
-    let d = cfg.decompose(&gpu);
-    let r = bench("schedule/hardware-rr", 200, 20, || {
-        black_box(schedule(&d, &gpu));
-    });
-    println!("{}", r.report());
-    let dist = schedule(&d, &gpu);
-    let r = bench("features/analyze", 200, 20, || {
+    // the two perf-acceptance configs: full decompose -> schedule ->
+    // features chain (grouped closed form: O(groups + num_sms))
+    h.run("dsf/gemm-4096x11008x4096", 300, 20, || {
+        let d = cfg.decompose(&gpu);
+        let dist = schedule(&d, &gpu);
         black_box(FeatureSet::analyze(&d, &dist, &gpu));
     });
-    println!("{}", r.report());
+    h.run("dsf/attention-8x2048-causal", 300, 20, || {
+        let d = attn.decompose(&gpu);
+        let dist = schedule(&d, &gpu);
+        black_box(FeatureSet::analyze(&d, &dist, &gpu));
+    });
+    h.run("decompose/gemm-4096x11008x4096", 200, 20, || {
+        black_box(cfg.decompose(&gpu));
+    });
+    let d = cfg.decompose(&gpu);
+    h.run("schedule/hardware-rr", 200, 20, || {
+        black_box(schedule(&d, &gpu));
+    });
+    let dist = schedule(&d, &gpu);
+    h.run("features/analyze", 200, 20, || {
+        black_box(FeatureSet::analyze(&d, &dist, &gpu));
+    });
     let da = attn.decompose(&gpu);
-    let r = bench("decompose+schedule+features/attention", 200, 20, || {
+    h.run("decompose+schedule+features/attention", 200, 20, || {
         let dist = schedule(&da, &gpu);
         black_box(FeatureSet::analyze(&da, &dist, &gpu));
     });
-    println!("{}", r.report());
 
     println!("\n== prediction engine (cache + parallel fan-out) ==");
-    let r = bench("engine/analyze gemm (uncached)", 200, 10, || {
+    h.run("engine/analyze gemm (uncached)", 200, 10, || {
         // fresh engine per call: every analyze is a miss
         let e = PredictionEngine::new(16);
         black_box(e.analyze(&cfg, &gpu));
     });
-    println!("{}", r.report());
     let warm = PredictionEngine::new(64);
     warm.analyze(&cfg, &gpu);
     warm.analyze(&attn, &gpu);
-    let r = bench("engine/analyze gemm (cached)", 200, 50, || {
+    h.run("engine/analyze gemm (cached)", 200, 50, || {
         black_box(warm.analyze(&cfg, &gpu));
     });
-    println!("{}", r.report());
-    let r = bench("engine/analyze attention (cached)", 200, 50, || {
+    h.run("engine/analyze attention (cached)", 200, 50, || {
         black_box(warm.analyze(&attn, &gpu));
     });
-    println!("{}", r.report());
     let gpus = hw::seen_gpus();
+    let ds_configs = if smoke { 4 } else { 64 };
     for threads in [1usize, 4, synperf::engine::par::default_threads()] {
         let e = PredictionEngine::new(4096);
         let t0 = std::time::Instant::now();
-        let ds = e.build_dataset(KernelKind::RmsNorm, &gpus, 64, 11, threads);
+        let ds = e.build_dataset(KernelKind::RmsNorm, &gpus, ds_configs, 11, threads);
         println!(
-            "engine/build_dataset rmsnorm 64x{} gpus, {threads:>2} threads: {:?} ({} rows)",
+            "engine/build_dataset rmsnorm {ds_configs}x{} gpus, {threads:>2} threads: {:?} ({} rows)",
             gpus.len(),
             t0.elapsed(),
             ds.len()
@@ -86,21 +130,52 @@ fn main() {
 
     println!("\n== oracle testbed ==");
     let mut seed = 0u64;
-    let r = bench("oracle/gemm", 300, 20, || {
+    h.run("oracle/gemm", 300, 20, || {
         seed += 1;
         black_box(oracle::measure(&cfg, &gpu, seed));
     });
-    println!("{}", r.report());
-    let r = bench("oracle/attention-causal", 300, 20, || {
+    h.run("oracle/attention-causal", 300, 20, || {
         seed += 1;
         black_box(oracle::measure(&attn, &gpu, seed));
     });
-    println!("{}", r.report());
-    let r = bench("dataset/make_sample (oracle+habitat+features)", 300, 10, || {
+    h.run("dataset/make_sample (oracle+habitat+features)", 300, 10, || {
         seed += 1;
         black_box(dataset::make_sample(&cfg, &gpu, seed));
     });
-    println!("{}", r.report());
+
+    println!("\n== native MLP forward (artifact-free fallback) ==");
+    let theta: Vec<f32> = (0..synperf::mlp::native::theta_size())
+        .map(|i| ((i * 31 % 97) as f32 / 97.0 - 0.5) * 0.1)
+        .collect();
+    let mut bn = vec![0f32; synperf::mlp::native::bn_size()];
+    let mut off = 0;
+    for (_, fo) in &synperf::mlp::native::LAYERS[..3] {
+        for v in &mut bn[off + fo..off + 2 * fo] {
+            *v = 1.0;
+        }
+        off += 2 * fo;
+    }
+    let row = dataset::make_sample(&cfg, &gpu, 1).x;
+    let mut scratch = synperf::mlp::native::Scratch::new();
+    for b in [1usize, 256] {
+        let xs = vec![row; b];
+        let mut out = Vec::with_capacity(b);
+        h.run(&format!("mlp/native_forward b{b}"), 200, 10, || {
+            out.clear();
+            synperf::mlp::native::forward_into(&theta, &bn, &xs, &mut scratch, &mut out);
+            black_box(out.last().copied());
+        });
+    }
+
+    service_bench(&gpu, if smoke { 64 } else { 2000 });
+
+    println!("\n== detailed comparator costs (Fig. 7) ==");
+    h.run("baseline/amali gemm-4096^3", 300, 5, || {
+        black_box(synperf::baselines::amali::predict_gemm(4096, 4096, 4096, &gpu));
+    });
+    h.run("baseline/llmcompass gemm-4096^3", 300, 3, || {
+        black_box(synperf::baselines::llmcompass::predict_gemm(4096, 4096, 4096, &gpu));
+    });
 
     let Ok(engine) = Engine::new("artifacts") else {
         eprintln!("\n(no artifacts: skipping PJRT benches — run `make artifacts`)");
@@ -114,30 +189,28 @@ fn main() {
         scaler: synperf::mlp::Scaler::identity(),
     };
     let pred = synperf::mlp::Predictor::new(&engine, weights).unwrap();
-    let row = dataset::make_sample(&cfg, &gpu, 1).x;
     for b in [1usize, 256, 1024] {
         let xs = vec![row; b];
-        let r = bench(&format!("mlp/predict_eff b{b}"), 400, 10, || {
+        h.run(&format!("mlp/predict_eff b{b}"), 400, 10, || {
             black_box(pred.predict_eff(&xs).unwrap());
         });
-        println!("{}  ({:.2} us/row)", r.report(), r.median_ns / 1e3 / b as f64);
     }
     let xs1 = vec![row; 256];
-    let r = bench("mlp/native_forward b256 (cross-check path)", 200, 10, || {
+    h.run("mlp/native_forward b256 (cross-check path)", 200, 10, || {
         black_box(pred.predict_eff_native(&xs1));
     });
-    println!("{}", r.report());
 
     println!("\n== end-to-end single prediction (Fig. 7 path) ==");
-    let r = bench("predict/full-path gemm (features + MLP b1)", 400, 10, || {
+    h.run("predict/full-path gemm (features + MLP b1)", 400, 10, || {
         let d = cfg.decompose(&gpu);
         let dist = schedule(&d, &gpu);
         let f = FeatureSet::analyze(&d, &dist, &gpu);
         let x = f.to_model_input(&gpu);
         black_box(f.theory_sec / pred.predict_eff(&[x]).unwrap()[0]);
     });
-    println!("{}", r.report());
+}
 
+fn service_bench(gpu: &synperf::hw::GpuSpec, n: usize) {
     println!("\n== coordinator service ==");
     let svc = PredictionService::spawn(
         synperf::api::ModelBundle::default,
@@ -145,7 +218,6 @@ fn main() {
     );
     let client = svc.client();
     let t0 = std::time::Instant::now();
-    let n = 2000;
     // blocking submits: the bounded queue applies backpressure while the
     // service drains, instead of accumulating an unbounded backlog
     let pendings: Vec<_> = (0..n)
@@ -169,14 +241,4 @@ fn main() {
         snap.mean_batch
     );
     svc.shutdown();
-
-    println!("\n== detailed comparator costs (Fig. 7) ==");
-    let r = bench("baseline/amali gemm-4096^3", 300, 5, || {
-        black_box(synperf::baselines::amali::predict_gemm(4096, 4096, 4096, &gpu));
-    });
-    println!("{}", r.report());
-    let r = bench("baseline/llmcompass gemm-4096^3", 300, 3, || {
-        black_box(synperf::baselines::llmcompass::predict_gemm(4096, 4096, 4096, &gpu));
-    });
-    println!("{}", r.report());
 }

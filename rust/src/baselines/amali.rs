@@ -102,11 +102,11 @@ pub fn predict_gemm(m: u32, n: u32, k: u32, gpu: &GpuSpec) -> (f64, usize) {
 
     let per_task_cycles = walk(&insts, gpu);
     let occ = d.cta.occupancy(gpu) as f64;
-    let waves = (d.tasks.len() as f64 / (gpu.num_sms as f64 * occ)).ceil();
+    let waves = (d.num_tasks() as f64 / (gpu.num_sms as f64 * occ)).ceil();
     let cycles = per_task_cycles * waves;
     (
         cycles * gpu.cycle_sec() + 2.0e-6,
-        insts.len() * d.tasks.len().min(1) + insts.len(), // walked once/task-shape
+        insts.len() * d.num_tasks().min(1) + insts.len(), // walked once/task-shape
     )
 }
 

@@ -54,7 +54,7 @@ pub fn predict_gemm(m: u32, n: u32, k: u32, gpu: &GpuSpec) -> (f64, usize) {
     // ops/cycle = 2 * W^2  =>  W = sqrt(th / 2)
     let array_dim = ((gpu.tensor_ops_clk_sm / 2.0).sqrt() as u32).max(8);
     let occ = d.cta.occupancy(gpu) as f64;
-    let waves = (d.tasks.len() as f64 / (gpu.num_sms as f64 * occ)).ceil() as usize;
+    let waves = (d.num_tasks() as f64 / (gpu.num_sms as f64 * occ)).ceil() as usize;
     // simulate every wave tile-by-tile (cycle-granular — the cost the
     // Fig. 7 comparison charges this modeling paradigm with)
     let mut cycles = 0.0;

@@ -17,10 +17,9 @@ use crate::kernels::Decomposition;
 
 /// Tile-level feature vector + static-wave theoretical time.
 pub fn features(decomp: &Decomposition, gpu: &GpuSpec) -> ([f32; FEATURE_DIM], f64) {
-    let n = decomp.tasks.len().max(1) as f64;
-    let flops: f64 =
-        decomp.tasks.iter().map(|t| t.tensor_ops + t.fma_ops + t.xu_ops).sum::<f64>();
-    let bytes: f64 = decomp.tasks.iter().map(|t| t.total_bytes()).sum::<f64>();
+    let n = decomp.num_tasks().max(1) as f64;
+    let flops: f64 = decomp.group_sum(|t| t.tensor_ops + t.fma_ops + t.xu_ops);
+    let bytes: f64 = decomp.total_bytes();
     let tile_flops = flops / n;
     let tile_bytes = bytes / n;
     let occ = decomp.cta.occupancy(gpu) as f64;

@@ -141,12 +141,18 @@ pub fn sample_config(kind: KernelKind, rng: &mut Rng) -> KernelConfig {
     }
 }
 
-/// Resolve GPU-specific kernel selection: FlashInfer dispatches FA3 on
-/// Hopper-class parts, FA2 elsewhere (§V-A).
+/// The GPU-resolved half of [`finalize_for_gpu`]: FlashInfer dispatches FA3
+/// on Hopper-class parts, FA2 elsewhere (§V-A). The engine's borrowed-key
+/// cache probe consumes this directly so cache hits never clone the config.
+pub fn fa3_for(gpu: &GpuSpec) -> bool {
+    matches!(gpu.arch, crate::hw::Arch::Hopper | crate::hw::Arch::Blackwell)
+}
+
+/// Resolve GPU-specific kernel selection (FA2 vs FA3) into an owned config.
 pub fn finalize_for_gpu(cfg: &KernelConfig, gpu: &GpuSpec) -> KernelConfig {
     let mut out = cfg.clone();
     if let KernelConfig::Attention { fa3, .. } = &mut out {
-        *fa3 = matches!(gpu.arch, crate::hw::Arch::Hopper | crate::hw::Arch::Blackwell);
+        *fa3 = fa3_for(gpu);
     }
     out
 }

@@ -1,12 +1,16 @@
-//! Bounded LRU for analysis results.
+//! Bounded LRU for analysis results, probeable by precomputed hash.
 //!
-//! A `HashMap` with per-entry recency stamps: `get`/`insert` are O(1); when
-//! the map is full, eviction drops the least-recently-used eighth of the
-//! entries in one O(n log n) sweep, amortizing to O(log n) per insert. Values
-//! are handed out as `Arc` clones so hits never copy the (large) analysis.
+//! The map is bucketed by a caller-supplied 64-bit hash with full-key
+//! equality inside the bucket, so lookups can probe with a *borrowed* key
+//! representation (`get_matching(hash, |k| …)`) — the hit path builds no
+//! owned key and allocates nothing. `get`/`insert` are O(1); when the map
+//! is full, eviction drops the least-recently-used eighth of the entries in
+//! one O(n) sweep, amortizing to O(1) amortized-ish per insert. Values are
+//! handed out as `Arc` clones so hits never copy the (large) analysis.
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::hash::Hash;
+use std::hash::{Hash, Hasher};
 use std::sync::Arc;
 
 struct Entry<V> {
@@ -15,44 +19,61 @@ struct Entry<V> {
 }
 
 pub struct LruCache<K, V> {
-    map: HashMap<K, Entry<V>>,
+    /// hash → entries whose key digests to it (collision list; almost
+    /// always length 1).
+    buckets: HashMap<u64, Vec<(K, Entry<V>)>>,
+    len: usize,
     capacity: usize,
     tick: u64,
 }
 
-impl<K: Eq + Hash, V> LruCache<K, V> {
+impl<K: Eq, V> LruCache<K, V> {
     pub fn new(capacity: usize) -> LruCache<K, V> {
-        LruCache { map: HashMap::new(), capacity: capacity.max(1), tick: 0 }
+        LruCache { buckets: HashMap::new(), len: 0, capacity: capacity.max(1), tick: 0 }
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len == 0
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
-    pub fn get(&mut self, key: &K) -> Option<Arc<V>> {
+    /// Probe with a precomputed hash and an equality closure over the
+    /// stored key — the allocation-free lookup path.
+    pub fn get_matching(&mut self, hash: u64, matches: impl Fn(&K) -> bool) -> Option<Arc<V>> {
         self.tick += 1;
         let tick = self.tick;
-        self.map.get_mut(key).map(|e| {
+        let bucket = self.buckets.get_mut(&hash)?;
+        bucket.iter_mut().find(|(k, _)| matches(k)).map(|(_, e)| {
             e.last_used = tick;
             e.value.clone()
         })
     }
 
-    pub fn insert(&mut self, key: K, value: Arc<V>) {
+    /// Insert under a precomputed hash (which must equal the hash future
+    /// probes use for this key). Replaces the value if the key exists.
+    pub fn insert_hashed(&mut self, hash: u64, key: K, value: Arc<V>) {
         self.tick += 1;
-        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+        let replacing =
+            self.buckets.get(&hash).is_some_and(|b| b.iter().any(|(k, _)| *k == key));
+        if self.len >= self.capacity && !replacing {
             self.evict_lru_batch();
         }
         let tick = self.tick;
-        self.map.insert(key, Entry { value, last_used: tick });
+        let bucket = self.buckets.entry(hash).or_default();
+        if let Some((_, e)) = bucket.iter_mut().find(|(k, _)| *k == key) {
+            e.value = value;
+            e.last_used = tick;
+        } else {
+            bucket.push((key, Entry { value, last_used: tick }));
+            self.len += 1;
+        }
     }
 
     /// Drop the stalest ~1/8 of entries (at least one). Recency stamps are
@@ -60,13 +81,44 @@ impl<K: Eq + Hash, V> LruCache<K, V> {
     /// everything newer evicts exactly drop_n entries — O(n), no key clones,
     /// no full sort (this runs under the engine's shared cache lock).
     fn evict_lru_batch(&mut self) {
-        let drop_n = (self.capacity / 8).max(1).min(self.map.len());
+        let drop_n = (self.capacity / 8).max(1).min(self.len);
         if drop_n == 0 {
             return;
         }
-        let mut stamps: Vec<u64> = self.map.values().map(|e| e.last_used).collect();
+        let mut stamps: Vec<u64> = self
+            .buckets
+            .values()
+            .flat_map(|b| b.iter().map(|(_, e)| e.last_used))
+            .collect();
         let (_, &mut threshold, _) = stamps.select_nth_unstable(drop_n - 1);
-        self.map.retain(|_, e| e.last_used > threshold);
+        let mut removed = 0usize;
+        self.buckets.retain(|_, bucket| {
+            bucket.retain(|(_, e)| {
+                let keep = e.last_used > threshold;
+                if !keep {
+                    removed += 1;
+                }
+                keep
+            });
+            !bucket.is_empty()
+        });
+        self.len -= removed;
+    }
+}
+
+impl<K: Eq + Hash, V> LruCache<K, V> {
+    fn hash_of(key: &K) -> u64 {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        h.finish()
+    }
+
+    pub fn get(&mut self, key: &K) -> Option<Arc<V>> {
+        self.get_matching(Self::hash_of(key), |k| k == key)
+    }
+
+    pub fn insert(&mut self, key: K, value: Arc<V>) {
+        self.insert_hashed(Self::hash_of(&key), key, value)
     }
 }
 
@@ -118,5 +170,23 @@ mod tests {
         c.insert(1, Arc::new(11));
         assert_eq!(*c.get(&1).unwrap(), 11);
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn hashed_probe_matches_and_collisions_separate() {
+        // two distinct keys forced into the same bucket: equality must
+        // disambiguate, and len must count both
+        let mut c: LruCache<u32, u32> = LruCache::new(8);
+        c.insert_hashed(42, 1, Arc::new(10));
+        c.insert_hashed(42, 2, Arc::new(20));
+        assert_eq!(c.len(), 2);
+        assert_eq!(*c.get_matching(42, |k| *k == 1).unwrap(), 10);
+        assert_eq!(*c.get_matching(42, |k| *k == 2).unwrap(), 20);
+        assert!(c.get_matching(42, |k| *k == 3).is_none());
+        assert!(c.get_matching(7, |_| true).is_none());
+        // replace within the collision bucket
+        c.insert_hashed(42, 2, Arc::new(21));
+        assert_eq!(c.len(), 2);
+        assert_eq!(*c.get_matching(42, |k| *k == 2).unwrap(), 21);
     }
 }

@@ -7,17 +7,23 @@
 //! into a 64-bit fingerprint over the bit patterns of every field that the
 //! decompose → schedule → featurize pipeline reads; two specs with any
 //! differing parameter hash apart.
+//!
+//! Lookups are allocation-free: [`probe_hash`] digests a *borrowed* config
+//! together with the GPU-resolved FA variant, so the hot path neither
+//! clones the config (attention's `batch` vec heap-allocates) nor runs
+//! `finalize_for_gpu`; the owned [`CacheKey`] is only built on a miss.
 
 use crate::hw::GpuSpec;
 use crate::kernels::KernelConfig;
+use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
 
 /// Key of one `(KernelConfig, GpuSpec)` analysis.
 ///
 /// The config stored here must already be resolved by
 /// `dataset::finalize_for_gpu` (FA2-vs-FA3 selection), which the engine
-/// guarantees before lookup — otherwise the same logical launch would key
-/// differently on Hopper and pre-Hopper parts.
+/// guarantees before insertion — otherwise the same logical launch would
+/// key differently on Hopper and pre-Hopper parts.
 #[derive(Clone, PartialEq, Eq, Hash)]
 pub struct CacheKey {
     cfg: KernelConfig,
@@ -28,13 +34,100 @@ impl CacheKey {
     pub fn new(finalized_cfg: &KernelConfig, gpu: &GpuSpec) -> CacheKey {
         CacheKey { cfg: finalized_cfg.clone(), gpu_fp: gpu_fingerprint(gpu) }
     }
+
+    /// Build a key from an already-owned finalized config (the engine's
+    /// miss path — the config is moved, not cloned again).
+    pub fn from_finalized(cfg: KernelConfig, gpu_fp: u64) -> CacheKey {
+        CacheKey { cfg, gpu_fp }
+    }
+
+    /// The hash this key is stored under — [`probe_hash`] over its own
+    /// (finalized) parameters, so borrowed probes and stored keys agree.
+    pub fn stored_hash(&self) -> u64 {
+        let fa3 = matches!(self.cfg, KernelConfig::Attention { fa3: true, .. });
+        probe_hash(&self.cfg, fa3, self.gpu_fp)
+    }
+
+    /// Does this stored (finalized) key describe the borrowed launch
+    /// `probe` on the GPU with fingerprint `gpu_fp`? `fa3` is the
+    /// GPU-resolved FA variant; the probe's own `fa3` field is ignored,
+    /// mirroring what `finalize_for_gpu` would overwrite.
+    pub fn matches(&self, probe: &KernelConfig, fa3: bool, gpu_fp: u64) -> bool {
+        if self.gpu_fp != gpu_fp {
+            return false;
+        }
+        match (&self.cfg, probe) {
+            (
+                KernelConfig::Attention {
+                    batch: b1,
+                    nh: nh1,
+                    nkv: nkv1,
+                    hd: hd1,
+                    causal: c1,
+                    fa3: f1,
+                },
+                KernelConfig::Attention {
+                    batch: b2,
+                    nh: nh2,
+                    nkv: nkv2,
+                    hd: hd2,
+                    causal: c2,
+                    fa3: _,
+                },
+            ) => {
+                *f1 == fa3
+                    && nh1 == nh2
+                    && nkv1 == nkv2
+                    && hd1 == hd2
+                    && c1 == c2
+                    && b1 == b2
+            }
+            (stored, probe) => stored == probe,
+        }
+    }
+}
+
+/// Stable 64-bit digest of a borrowed `(config, gpu fingerprint)` probe.
+/// For Attention configs the GPU-resolved `fa3` replaces the config's own
+/// flag (unfinalized and finalized forms of the same launch hash alike);
+/// other kinds ignore `fa3`. No allocation, no clone.
+pub fn probe_hash(cfg: &KernelConfig, fa3: bool, gpu_fp: u64) -> u64 {
+    let mut h = DefaultHasher::new();
+    gpu_fp.hash(&mut h);
+    match cfg {
+        KernelConfig::Gemm { m, n, k, dtype } => {
+            0u8.hash(&mut h);
+            (m, n, k, dtype).hash(&mut h);
+        }
+        KernelConfig::ScaledMm { m, n, k } => {
+            1u8.hash(&mut h);
+            (m, n, k).hash(&mut h);
+        }
+        KernelConfig::Attention { batch, nh, nkv, hd, causal, fa3: _ } => {
+            2u8.hash(&mut h);
+            (batch, nh, nkv, hd, causal, fa3).hash(&mut h);
+        }
+        KernelConfig::RmsNorm { seq, dim } => {
+            3u8.hash(&mut h);
+            (seq, dim).hash(&mut h);
+        }
+        KernelConfig::SiluMul { seq, dim } => {
+            4u8.hash(&mut h);
+            (seq, dim).hash(&mut h);
+        }
+        KernelConfig::FusedMoe { m, e, topk, h: hid, n, expert_tokens, cfg: moe } => {
+            5u8.hash(&mut h);
+            (m, e, topk, hid, n, expert_tokens, moe).hash(&mut h);
+        }
+    }
+    h.finish()
 }
 
 /// Deterministic 64-bit digest of the architectural parameter vector.
 pub fn gpu_fingerprint(gpu: &GpuSpec) -> u64 {
     // SipHash with the default (zeroed) keys — stable within and across
     // processes, which keeps cache behavior reproducible.
-    let mut h = std::collections::hash_map::DefaultHasher::new();
+    let mut h = DefaultHasher::new();
     gpu.name.hash(&mut h);
     gpu.arch.hash(&mut h);
     gpu.compute_capability.to_bits().hash(&mut h);
@@ -59,6 +152,7 @@ pub fn gpu_fingerprint(gpu: &GpuSpec) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dataset::{fa3_for, finalize_for_gpu};
     use crate::hw::{all_gpus, gpu_by_name};
     use crate::kernels::DType;
 
@@ -95,5 +189,50 @@ mod tests {
         assert_eq!(CacheKey::new(&c1, &a100), CacheKey::new(&c1, &a100));
         assert_ne!(CacheKey::new(&c1, &a100), CacheKey::new(&c2, &a100));
         assert_ne!(CacheKey::new(&c1, &a100), CacheKey::new(&c1, &h800));
+    }
+
+    #[test]
+    fn borrowed_probe_agrees_with_stored_key() {
+        // an unfinalized attention probe must hash and match exactly like
+        // the finalized stored key, on both FA2 and FA3 hardware
+        let probe = KernelConfig::Attention {
+            batch: vec![(256, 512), (64, 64)],
+            nh: 8,
+            nkv: 2,
+            hd: 128,
+            causal: true,
+            fa3: false, // pre-finalization value; must be irrelevant
+        };
+        for gpu_name in ["A100", "H800"] {
+            let gpu = gpu_by_name(gpu_name).unwrap();
+            let fp = gpu_fingerprint(&gpu);
+            let fa3 = fa3_for(&gpu);
+            let stored = CacheKey::new(&finalize_for_gpu(&probe, &gpu), &gpu);
+            assert_eq!(stored.stored_hash(), probe_hash(&probe, fa3, fp), "{gpu_name}");
+            assert!(stored.matches(&probe, fa3, fp), "{gpu_name}");
+            // flipping the resolved variant must miss
+            assert!(!stored.matches(&probe, !fa3, fp), "{gpu_name}");
+        }
+    }
+
+    #[test]
+    fn probe_hash_separates_kinds_and_params() {
+        let gpu = gpu_by_name("A100").unwrap();
+        let fp = gpu_fingerprint(&gpu);
+        let gemm = KernelConfig::Gemm { m: 64, n: 64, k: 64, dtype: DType::Bf16 };
+        let mm = KernelConfig::ScaledMm { m: 64, n: 64, k: 64 };
+        let rms = KernelConfig::RmsNorm { seq: 64, dim: 64 };
+        let silu = KernelConfig::SiluMul { seq: 64, dim: 64 };
+        let hashes: Vec<u64> =
+            [&gemm, &mm, &rms, &silu].iter().map(|&c| probe_hash(c, false, fp)).collect();
+        for i in 0..hashes.len() {
+            for j in (i + 1)..hashes.len() {
+                assert_ne!(hashes[i], hashes[j]);
+            }
+        }
+        // and a non-attention kind never matches an attention key
+        let stored = CacheKey::new(&gemm, &gpu);
+        assert!(stored.matches(&gemm, true, fp), "fa3 is ignored for non-attention");
+        assert!(!stored.matches(&mm, false, fp));
     }
 }

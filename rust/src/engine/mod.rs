@@ -126,35 +126,54 @@ impl PredictionEngine {
 
     /// Cached decompose → schedule → featurize. Returns the shared analysis.
     pub fn analyze(&self, cfg: &KernelConfig, gpu: &GpuSpec) -> Arc<Analysis> {
-        let cfg = finalize_for_gpu(cfg, gpu);
-        self.lookup_finalized(&cfg, gpu).0
+        self.lookup(cfg, gpu).0
     }
 
     /// Like [`analyze`](Self::analyze) but also reports whether the result
     /// came from the cache (the coordinator metrics consume this).
     pub fn analyze_hit(&self, cfg: &KernelConfig, gpu: &GpuSpec) -> (Arc<Analysis>, bool) {
-        let cfg = finalize_for_gpu(cfg, gpu);
-        let (a, _, hit) = self.lookup_finalized(&cfg, gpu);
+        let (a, _, hit) = self.lookup(cfg, gpu);
         (a, hit)
     }
 
-    /// Core lookup over an **already finalized** config (the public entry
-    /// points finalize exactly once). On a miss the freshly computed
-    /// [`Decomposition`] is returned alongside the analysis so callers that
-    /// also need the task set (the oracle) avoid decomposing twice.
-    fn lookup_finalized(
+    /// Core lookup. The config may be unfinalized: the cache is probed with
+    /// a borrowed-key hash ([`key::probe_hash`]) over the raw config plus
+    /// the GPU-resolved FA variant, so the **hit path performs no
+    /// `KernelConfig` clone and no allocation** (attention's `batch` vec
+    /// would heap-allocate on every request otherwise). Finalization — the
+    /// one clone — happens only on a miss, where the fresh
+    /// [`Decomposition`] is also returned so callers that need the task set
+    /// (the oracle) avoid decomposing twice.
+    fn lookup(
         &self,
         cfg: &KernelConfig,
         gpu: &GpuSpec,
     ) -> (Arc<Analysis>, Option<Decomposition>, bool) {
-        let key = CacheKey::new(cfg, gpu);
-        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+        self.lookup_with(cfg, gpu, false)
+    }
+
+    /// `already_finalized` skips the miss path's re-finalization when the
+    /// caller holds a finalized config (make_sample) — the key is cloned
+    /// directly instead of run through `finalize_for_gpu` a second time.
+    fn lookup_with(
+        &self,
+        cfg: &KernelConfig,
+        gpu: &GpuSpec,
+        already_finalized: bool,
+    ) -> (Arc<Analysis>, Option<Decomposition>, bool) {
+        let gpu_fp = key::gpu_fingerprint(gpu);
+        let fa3 = dataset::fa3_for(gpu);
+        let hash = key::probe_hash(cfg, fa3, gpu_fp);
+        if let Some(hit) =
+            self.cache.lock().unwrap().get_matching(hash, |k| k.matches(cfg, fa3, gpu_fp))
+        {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return (hit, None, true);
         }
 
         // Compute outside the lock: parallel builders must not serialize on
         // the (cheap) map while doing the (expensive) analysis.
+        let cfg = if already_finalized { cfg.clone() } else { finalize_for_gpu(cfg, gpu) };
         let decomp = cfg.decompose(gpu);
         let dist = schedule(&decomp, gpu);
         let features = FeatureSet::analyze(&decomp, &dist, gpu);
@@ -172,7 +191,10 @@ impl PredictionEngine {
             features,
         });
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.cache.lock().unwrap().insert(key, analysis.clone());
+        self.cache
+            .lock()
+            .unwrap()
+            .insert_hashed(hash, CacheKey::from_finalized(cfg, gpu_fp), analysis.clone());
         (analysis, Some(decomp), false)
     }
 
@@ -192,7 +214,7 @@ impl PredictionEngine {
     /// seeded and always runs.
     pub fn make_sample(&self, cfg: &KernelConfig, gpu: &GpuSpec, seed: u64) -> Sample {
         let cfg = finalize_for_gpu(cfg, gpu);
-        let (a, decomp, _) = self.lookup_finalized(&cfg, gpu);
+        let (a, decomp, _) = self.lookup_with(&cfg, gpu, true);
         // Reuse the miss-path decomposition; on a hit only the oracle needs
         // the task set, so decompose for it alone.
         let decomp = decomp.unwrap_or_else(|| cfg.decompose(gpu));

@@ -61,79 +61,110 @@ pub struct FeatureSet {
     pub naive_roofline_sec: f64,
 }
 
-fn pipe_agg(
-    dist: &TaskDistribution,
-    ops_of: impl Fn(usize) -> f64,
-    throughput_per_sm: f64,
-    nsm: f64,
-) -> PipeAgg {
-    let sums = dist.sm_sums(&ops_of);
-    let total_ops: f64 = sums.iter().sum();
-    let max_sm_ops = sums.iter().cloned().fold(0.0, f64::max);
-    PipeAgg {
-        total_ops,
-        total_cycles: total_ops / (nsm * throughput_per_sm),
-        max_sm_ops,
-        max_sm_cycles: max_sm_ops / throughput_per_sm,
-    }
-}
-
 impl FeatureSet {
     /// Analyze a scheduled kernel on `gpu` — the bottom-up task -> SM -> GPU
-    /// aggregation of §IV-C.
+    /// aggregation of §IV-C, computed in closed form over run-length task
+    /// groups: one pass over SM × group counts (O(num_sms · num_groups)),
+    /// no per-task walk and no scratch vectors. Per-SM sums replace
+    /// repeated addition of a group's identical per-task demands with
+    /// count · demand; every demand is an exactly-representable
+    /// integer-valued f64, so the results are bit-identical to the
+    /// element-wise reference (pinned by the equivalence property tests).
     pub fn analyze(decomp: &Decomposition, dist: &TaskDistribution, gpu: &GpuSpec) -> FeatureSet {
         let nsm = gpu.num_sms as f64;
-        let t = &decomp.tasks;
-
-        let tensor = pipe_agg(dist, |i| t[i].tensor_ops, gpu.tensor_ops_clk_sm, nsm);
-        let fma = pipe_agg(dist, |i| t[i].fma_ops, gpu.fma_ops_clk_sm, nsm);
-        let xu = pipe_agg(dist, |i| t[i].xu_ops, gpu.xu_ops_clk_sm, nsm);
-
-        let byte_sums = dist.sm_sums(|i| t[i].bytes_load);
-        let total_bytes: f64 = byte_sums.iter().sum();
-        let max_sm_bytes = byte_sums.iter().cloned().fold(0.0, f64::max);
-        let smem_sums = dist.sm_sums(|i| t[i].bytes_smem);
-        let max_sm_smem = smem_sums.iter().cloned().fold(0.0, f64::max);
-
+        let groups = &decomp.task_groups;
         let dram_bpc = gpu.dram_bytes_per_cycle();
         let l2_bpc = gpu.l2_bytes_per_cycle();
+
+        let mut total_tensor = 0.0f64;
+        let mut total_fma = 0.0f64;
+        let mut total_xu = 0.0f64;
+        let mut total_bytes = 0.0f64;
+        let mut max_tensor = 0.0f64;
+        let mut max_fma = 0.0f64;
+        let mut max_xu = 0.0f64;
+        let mut max_bytes = 0.0f64;
+        let mut max_smem = 0.0f64;
+        let mut max_crit = 0.0f64;
+        let mut crit_sum = 0.0f64;
+        let mut busy_sms = 0usize;
+        let mut max_tasks = 0u64;
+
+        for j in 0..dist.num_sms() {
+            let mut s_tensor = 0.0f64;
+            let mut s_fma = 0.0f64;
+            let mut s_xu = 0.0f64;
+            let mut s_bytes = 0.0f64;
+            let mut s_smem = 0.0f64;
+            let mut n_tasks = 0u64;
+            dist.visit_sm(j, |g, count| {
+                let t = &groups[g].template;
+                let c = count as f64;
+                s_tensor += c * t.tensor_ops;
+                s_fma += c * t.fma_ops;
+                s_xu += c * t.xu_ops;
+                s_bytes += c * t.bytes_load;
+                s_smem += c * t.bytes_smem;
+                n_tasks += count;
+            });
+            total_tensor += s_tensor;
+            total_fma += s_fma;
+            total_xu += s_xu;
+            total_bytes += s_bytes;
+            max_tensor = max_tensor.max(s_tensor);
+            max_fma = max_fma.max(s_fma);
+            max_xu = max_xu.max(s_xu);
+            max_bytes = max_bytes.max(s_bytes);
+            max_smem = max_smem.max(s_smem);
+            max_tasks = max_tasks.max(n_tasks);
+            // per-SM critical cycles: the max over pipeline roofs on this SM
+            let crit = (s_tensor / gpu.tensor_ops_clk_sm)
+                .max(s_fma / gpu.fma_ops_clk_sm)
+                .max(s_xu / gpu.xu_ops_clk_sm)
+                .max(s_bytes / (dram_bpc / nsm));
+            max_crit = max_crit.max(crit);
+            if crit > 0.0 {
+                crit_sum += crit;
+                busy_sms += 1;
+            }
+        }
+
+        let tensor = PipeAgg {
+            total_ops: total_tensor,
+            total_cycles: total_tensor / (nsm * gpu.tensor_ops_clk_sm),
+            max_sm_ops: max_tensor,
+            max_sm_cycles: max_tensor / gpu.tensor_ops_clk_sm,
+        };
+        let fma = PipeAgg {
+            total_ops: total_fma,
+            total_cycles: total_fma / (nsm * gpu.fma_ops_clk_sm),
+            max_sm_ops: max_fma,
+            max_sm_cycles: max_fma / gpu.fma_ops_clk_sm,
+        };
+        let xu = PipeAgg {
+            total_ops: total_xu,
+            total_cycles: total_xu / (nsm * gpu.xu_ops_clk_sm),
+            max_sm_ops: max_xu,
+            max_sm_cycles: max_xu / gpu.xu_ops_clk_sm,
+        };
         let mio = MioAgg {
             total_bytes,
             cycles_dram: total_bytes / dram_bpc,
             cycles_l2: total_bytes / l2_bpc,
-            max_sm_bytes,
+            max_sm_bytes: max_bytes,
             // per-SM view uses fair-share slices of the chip-level paths
-            max_sm_cycles_dram: max_sm_bytes / (dram_bpc / nsm),
-            max_sm_cycles_l2: max_sm_bytes / (l2_bpc / nsm),
-            max_sm_cycles_smem: max_sm_smem / gpu.smem_bw_byte_clk_sm,
+            max_sm_cycles_dram: max_bytes / (dram_bpc / nsm),
+            max_sm_cycles_l2: max_bytes / (l2_bpc / nsm),
+            max_sm_cycles_smem: max_smem / gpu.smem_bw_byte_clk_sm,
         };
-
-        // Per-SM critical cycles: the max over pipeline roofs on each SM.
-        let crit: Vec<f64> = (0..dist.num_sms())
-            .map(|j| {
-                let ops_t: f64 = dist.assignment[j].iter().map(|&i| t[i].tensor_ops).sum();
-                let ops_f: f64 = dist.assignment[j].iter().map(|&i| t[i].fma_ops).sum();
-                let ops_x: f64 = dist.assignment[j].iter().map(|&i| t[i].xu_ops).sum();
-                let by: f64 = dist.assignment[j].iter().map(|&i| t[i].bytes_load).sum();
-                (ops_t / gpu.tensor_ops_clk_sm)
-                    .max(ops_f / gpu.fma_ops_clk_sm)
-                    .max(ops_x / gpu.xu_ops_clk_sm)
-                    .max(by / (dram_bpc / nsm))
-            })
-            .collect();
-        let max_crit = crit.iter().cloned().fold(0.0, f64::max);
-        let busy: Vec<&f64> = crit.iter().filter(|c| **c > 0.0).collect();
-        let mean_crit = if busy.is_empty() {
-            0.0
-        } else {
-            busy.iter().cloned().sum::<f64>() / busy.len() as f64
-        };
+        let mean_crit =
+            if busy_sms == 0 { 0.0 } else { crit_sum / busy_sms as f64 };
 
         let occupancy = decomp.cta.occupancy(gpu) as f64;
-        let num_tasks = decomp.tasks.len() as f64;
-        let max_tasks = dist.assignment.iter().map(|v| v.len()).max().unwrap_or(0) as f64;
+        let num_tasks = decomp.num_tasks() as f64;
+        let max_tasks = max_tasks as f64;
 
-        let total_stores: f64 = decomp.tasks.iter().map(|t| t.bytes_store).sum();
+        let total_stores: f64 = decomp.group_sum(|t| t.bytes_store);
         let compute_roof = tensor.total_cycles.max(fma.total_cycles).max(xu.total_cycles);
         let theory_cycles = compute_roof.max(decomp.min_dram_bytes / dram_bpc);
         // classic roofline counts all traffic (loads + stores), unfiltered
@@ -256,7 +287,7 @@ mod tests {
         let dist = schedule(&d, &gpu);
         let f = FeatureSet::analyze(&d, &dist, &gpu);
         assert!((f.tensor.total_ops - d.total_tensor_ops()).abs() < 1.0);
-        let loads: f64 = d.tasks.iter().map(|t| t.bytes_load).sum();
+        let loads: f64 = d.iter_tasks().map(|t| t.bytes_load).sum();
         assert!((f.mio.total_bytes - loads).abs() < 1.0);
     }
 

@@ -10,7 +10,7 @@
 //! kernel whose MinHeap software scheduler balances tasks by estimated cost
 //! (§V-A: "we accurately replicated its MinHeap-based scheduler logic").
 
-use super::{CtaResources, Decomposition, Paradigm, Pipe, Task};
+use super::{CtaResources, Decomposition, Paradigm, Pipe, Task, TaskGroup};
 use crate::hw::GpuSpec;
 
 /// Query-tile rows (Br) for prefill. FlashInfer uses 128-row tiles for
@@ -69,7 +69,12 @@ pub fn decompose(
     fa3: bool,
     _gpu: &GpuSpec,
 ) -> Decomposition {
-    let mut tasks = Vec::new();
+    // All `nh` heads of one query tile share a task shape, so each tile is
+    // one run of `nh` tasks; with causal masking the effective KV extent
+    // differs per tile, so runs stay distinct along the query axis (the
+    // paper's workload-variance example), while non-causal batches collapse
+    // to one run per distinct (rows, kvlen).
+    let mut task_groups = Vec::new();
     for &(qlen, kvlen) in batch {
         debug_assert!(kvlen >= qlen, "kv cache must cover the query chunk");
         let hist = kvlen - qlen;
@@ -82,9 +87,11 @@ pub fn decompose(
             // Causal: rows in this tile see history plus everything up to the
             // last query row of the tile.
             let kv_eff = if causal { (hist + q_end).min(kvlen) } else { kvlen };
-            for _h in 0..nh {
-                tasks.push(attn_task(rows, kv_eff.max(1), hd, br));
-            }
+            TaskGroup::push_run(
+                &mut task_groups,
+                attn_task(rows, kv_eff.max(1), hd, br),
+                nh as u64,
+            );
         }
     }
 
@@ -112,7 +119,7 @@ pub fn decompose(
         .sum();
 
     Decomposition {
-        tasks,
+        task_groups,
         paradigm: if fa3 { Paradigm::MinHeap } else { Paradigm::HardwareRR },
         cta,
         tile: (BR, bc, hd),
@@ -142,16 +149,20 @@ mod tests {
     #[test]
     fn causal_tasks_grow_along_query() {
         let d = decompose(&[(512, 512)], 1, 1, 128, true, false, &gpu());
-        let ops: Vec<f64> = d.tasks.iter().map(|t| t.tensor_ops).collect();
-        // later query tiles attend to more KV -> strictly increasing work
+        let ops: Vec<f64> = d.iter_tasks().map(|t| t.tensor_ops).collect();
+        // later query tiles attend to more KV -> strictly increasing work,
+        // and hence one group per query tile
         assert!(ops.windows(2).all(|w| w[0] < w[1]), "{ops:?}");
+        assert_eq!(d.num_groups(), 4);
     }
 
     #[test]
     fn non_causal_tasks_uniform() {
         let d = decompose(&[(512, 2048)], 2, 2, 128, false, false, &gpu());
-        let first = d.tasks[0].tensor_ops;
-        assert!(d.tasks.iter().all(|t| (t.tensor_ops - first).abs() < 1e-9));
+        let first = d.task_groups[0].template.tensor_ops;
+        assert!(d.iter_tasks().all(|t| (t.tensor_ops - first).abs() < 1e-9));
+        // uniform tiles collapse into a single run
+        assert_eq!(d.num_groups(), 1);
     }
 
     #[test]
@@ -160,7 +171,7 @@ mod tests {
         assert_eq!(d.num_tasks(), 4);
         // kv_eff = kvlen for the last (only) token; decode uses 16-row tiles
         let expect = ALPHA * BR_DECODE as f64 * 4096.0 * 128.0;
-        assert!((d.tasks[0].tensor_ops - expect).abs() < 1e-6);
+        assert!((d.task_groups[0].template.tensor_ops - expect).abs() < 1e-6);
     }
 
     #[test]
@@ -179,12 +190,12 @@ mod tests {
         // one full-tile non-causal task: ops = 4 * Br * kv * hd
         let d = decompose(&[(128, 777)], 1, 1, 64, false, false, &gpu());
         let expect = 4.0 * 128.0 * 777.0 * 64.0;
-        assert!((d.tasks[0].tensor_ops - expect).abs() < 1e-6);
+        assert!((d.task_groups[0].template.tensor_ops - expect).abs() < 1e-6);
     }
 
     #[test]
     fn xu_demand_tracks_scores() {
         let d = decompose(&[(128, 1000)], 1, 1, 128, false, false, &gpu());
-        assert!((d.tasks[0].xu_ops - 128.0 * 1000.0).abs() < 1e-6);
+        assert!((d.task_groups[0].template.xu_ops - 128.0 * 1000.0).abs() < 1e-6);
     }
 }

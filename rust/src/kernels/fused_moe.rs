@@ -8,7 +8,7 @@
 //! depth, and MXU utilization, which is exactly where the paper finds
 //! hardware-specific inefficiency on A40/L20.
 
-use super::{CtaResources, Decomposition, MoeConfig, Paradigm, Pipe, Task};
+use super::{CtaResources, Decomposition, MoeConfig, Paradigm, Pipe, Task, TaskGroup};
 use crate::hw::GpuSpec;
 
 /// SGLang-style default launch config. The heuristic keys on the expected
@@ -61,7 +61,10 @@ pub fn decompose(
     cfg: MoeConfig,
     _gpu: &GpuSpec,
 ) -> Decomposition {
-    let mut tasks = Vec::new();
+    // Per-expert sub-grids share one tile shape (demands depend only on the
+    // launch config and hidden size), so adjacent expert runs merge into a
+    // single group covering the whole grouped-GEMM grid.
+    let mut task_groups = Vec::new();
     let grid_n = n.div_ceil(cfg.block_n);
     for &m_e in expert_tokens {
         if m_e == 0 {
@@ -83,9 +86,7 @@ pub fn decompose(
             bytes_smem: 2.0 * bytes_load,
             cost_hint: tensor_ops,
         };
-        for _ in 0..(grid_m as usize) * (grid_n as usize) {
-            tasks.push(task.clone());
-        }
+        TaskGroup::push_run(&mut task_groups, task, grid_m as u64 * grid_n as u64);
     }
 
     let cta = CtaResources {
@@ -101,7 +102,7 @@ pub fn decompose(
         routed * h as f64 * 2.0 + active * n as f64 * h as f64 * 2.0 + routed * n as f64 * 2.0;
 
     Decomposition {
-        tasks,
+        task_groups,
         paradigm: Paradigm::HardwareRR,
         cta,
         tile: (cfg.block_m, cfg.block_n, cfg.block_k),

@@ -8,7 +8,7 @@
 //! Ampere/Ada, persistent "gemm9" on Hopper/Blackwell — the two kernel
 //! implementations validated in Table VII).
 
-use super::{CtaResources, Decomposition, DType, Paradigm, Pipe, Task};
+use super::{CtaResources, Decomposition, DType, Paradigm, Pipe, Task, TaskGroup};
 use crate::hw::{Arch, GpuSpec};
 
 /// Candidate output tiles (tile_M, tile_N), largest first. The inferred
@@ -78,7 +78,9 @@ pub fn decompose(m: u32, n: u32, k: u32, dtype: DType, gpu: &GpuSpec) -> Decompo
         bytes_smem,
         cost_hint: tensor_ops,
     };
-    let tasks = vec![task; (grid_m as usize) * (grid_n as usize)];
+    // uniform tile grid: the whole CTA set is one run
+    let task_groups =
+        vec![TaskGroup { template: task, count: grid_m as u64 * grid_n as u64 }];
 
     let persistent = matches!(gpu.arch, Arch::Hopper | Arch::Blackwell);
     // Deepest pipeline (up to 4 stages) that still fits shared memory.
@@ -96,7 +98,7 @@ pub fn decompose(m: u32, n: u32, k: u32, dtype: DType, gpu: &GpuSpec) -> Decompo
         (m as f64 * k as f64 + n as f64 * k as f64) * eb + m as f64 * n as f64 * out_b;
 
     Decomposition {
-        tasks,
+        task_groups,
         paradigm: if persistent { Paradigm::PersistentTile } else { Paradigm::HardwareRR },
         cta,
         tile: (tm, tn, tk),
@@ -155,8 +157,9 @@ mod tests {
         let gpu = gpu_by_name("A100").unwrap();
         let d1 = decompose(4096, 4096, 1024, DType::Bf16, &gpu);
         let d2 = decompose(4096, 4096, 2048, DType::Bf16, &gpu);
-        assert!(d2.tasks[0].tensor_ops > 1.9 * d1.tasks[0].tensor_ops);
-        assert!(d2.tasks[0].bytes_load > 1.9 * d1.tasks[0].bytes_load);
+        let (t1, t2) = (&d1.task_groups[0].template, &d2.task_groups[0].template);
+        assert!(t2.tensor_ops > 1.9 * t1.tensor_ops);
+        assert!(t2.bytes_load > 1.9 * t1.bytes_load);
     }
 
     #[test]

@@ -51,7 +51,7 @@ impl DType {
 /// the MIO demands (§IV-C2): `bytes_load` is data loaded from the memory
 /// hierarchy (the critical path — loads feed the math pipes), `bytes_store`
 /// the writeback, `bytes_smem` shared-memory traffic (staging both ways).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Task {
     pub tensor_ops: f64,
     pub fma_ops: f64,
@@ -67,6 +67,39 @@ pub struct Task {
 impl Task {
     pub fn total_bytes(&self) -> f64 {
         self.bytes_load + self.bytes_store
+    }
+}
+
+/// A run of `count` identical tasks in launch order — the run-length
+/// encoding of the task set. Per-CTA work is overwhelmingly uniform (tile
+/// kernels repeat one tile shape; elementwise kernels repeat one row task),
+/// so most kernels decompose into 1–3 groups and the analytical pipeline
+/// can aggregate in closed form over groups instead of walking tasks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskGroup {
+    pub template: Task,
+    /// u64: grid dimensions are u32, so a 2-D grid's CTA count can exceed
+    /// u32 — the closed-form pipeline handles such grids without ever
+    /// materializing them.
+    pub count: u64,
+}
+
+impl TaskGroup {
+    /// Append a run of `count` copies of `template`, merging into the last
+    /// group when the template is identical. Merging only adjacent runs
+    /// preserves launch order, so [`Decomposition::iter_tasks`] reproduces
+    /// the exact pre-grouping task sequence.
+    pub fn push_run(groups: &mut Vec<TaskGroup>, template: Task, count: u64) {
+        if count == 0 {
+            return;
+        }
+        if let Some(last) = groups.last_mut() {
+            if last.template == template {
+                last.count += count;
+                return;
+            }
+        }
+        groups.push(TaskGroup { template, count });
     }
 }
 
@@ -117,7 +150,11 @@ impl CtaResources {
 /// Scheduling Simulator and the oracle need.
 #[derive(Debug, Clone)]
 pub struct Decomposition {
-    pub tasks: Vec<Task>,
+    /// Run-length-encoded task set {τ_i}, in launch order. The analytical
+    /// pipeline (schedule → features) aggregates over these groups in
+    /// closed form; the oracle's dynamic simulation expands them on demand
+    /// via [`iter_tasks`](Self::iter_tasks).
+    pub task_groups: Vec<TaskGroup>,
     pub paradigm: Paradigm,
     pub cta: CtaResources,
     /// Uniform tile geometry (tile_M, tile_N, tile_K) where applicable —
@@ -136,15 +173,36 @@ pub struct Decomposition {
 
 impl Decomposition {
     pub fn num_tasks(&self) -> usize {
-        self.tasks.len()
+        self.task_groups.iter().map(|g| g.count as usize).sum()
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.task_groups.len()
+    }
+
+    /// Expand the run-length groups back to the per-task view, in launch
+    /// order. The oracle's per-task simulation and the grouped↔materialized
+    /// equivalence tests consume this; the analytical hot path never does.
+    pub fn iter_tasks(&self) -> impl Iterator<Item = &Task> + '_ {
+        self.task_groups
+            .iter()
+            .flat_map(|g| std::iter::repeat_n(&g.template, g.count as usize))
+    }
+
+    /// Closed-form sum of an additive per-task metric over the whole task
+    /// set: Σ_g count_g · metric(template_g). All per-task demands are
+    /// exactly representable integer-valued f64s (products of launch
+    /// geometry), so this is bit-identical to element-wise summation.
+    pub fn group_sum(&self, metric: impl Fn(&Task) -> f64) -> f64 {
+        self.task_groups.iter().map(|g| g.count as f64 * metric(&g.template)).sum()
     }
 
     pub fn total_tensor_ops(&self) -> f64 {
-        self.tasks.iter().map(|t| t.tensor_ops).sum()
+        self.group_sum(|t| t.tensor_ops)
     }
 
     pub fn total_bytes(&self) -> f64 {
-        self.tasks.iter().map(|t| t.total_bytes()).sum()
+        self.group_sum(|t| t.total_bytes())
     }
 }
 

@@ -2,7 +2,7 @@
 //! derived F). FP32 math on the FMA pipe plus one rsqrt on the XU pipe per
 //! row (Table V: Math Pipe = FMA, XU).
 
-use super::{CtaResources, Decomposition, Paradigm, Pipe, Task};
+use super::{CtaResources, Decomposition, Paradigm, Pipe, Task, TaskGroup};
 use crate::hw::GpuSpec;
 
 pub fn decompose(seq: u32, dim: u32, _gpu: &GpuSpec) -> Decomposition {
@@ -25,7 +25,8 @@ pub fn decompose(seq: u32, dim: u32, _gpu: &GpuSpec) -> Decomposition {
         cost_hint: fma_ops + 4.0 * bytes_load,
     };
     Decomposition {
-        tasks: vec![task; seq as usize],
+        // one task per token row, all identical: a single run
+        task_groups: vec![TaskGroup { template: task, count: seq as u64 }],
         paradigm: Paradigm::HardwareRR,
         cta: CtaResources {
             warps: (dim.div_ceil(1024)).clamp(1, 8),
@@ -58,8 +59,8 @@ mod tests {
         let gpu = gpu_by_name("H100").unwrap();
         let d = decompose(16, 1024, &gpu);
         assert_eq!(d.total_tensor_ops(), 0.0);
-        assert!(d.tasks[0].fma_ops > 0.0);
-        assert!(d.tasks[0].xu_ops > 0.0);
+        assert!(d.task_groups[0].template.fma_ops > 0.0);
+        assert!(d.task_groups[0].template.xu_ops > 0.0);
     }
 
     #[test]
@@ -67,7 +68,7 @@ mod tests {
         // RMSNorm is bandwidth-bound: bytes ~ 3*dim*2, flops ~ 3*dim
         let gpu = gpu_by_name("A100").unwrap();
         let d = decompose(1, 16384, &gpu);
-        let t = &d.tasks[0];
+        let t = &d.task_groups[0].template;
         let ai = t.fma_ops / t.total_bytes();
         assert!(ai < 1.0, "arithmetic intensity should be low: {ai}");
     }

@@ -3,7 +3,7 @@
 //! operands with per-128-block scales applied in an FP32 epilogue.
 //! Persistent (SW-scheduled) on Hopper+, hardware-scheduled before.
 
-use super::{CtaResources, Decomposition, DType, Paradigm, Pipe, Task};
+use super::{CtaResources, Decomposition, DType, Paradigm, Pipe, Task, TaskGroup};
 use crate::hw::{Arch, GpuSpec};
 
 const SCALE_BLOCK: u32 = 128;
@@ -35,7 +35,9 @@ pub fn decompose(m: u32, n: u32, k: u32, gpu: &GpuSpec) -> Decomposition {
         bytes_smem: 2.0 * bytes_load,
         cost_hint: tensor_ops,
     };
-    let tasks = vec![task; (grid_m as usize) * (grid_n as usize)];
+    // uniform tile grid: the whole CTA set is one run
+    let task_groups =
+        vec![TaskGroup { template: task, count: grid_m as u64 * grid_n as u64 }];
 
     let persistent = matches!(gpu.arch, Arch::Hopper | Arch::Blackwell);
     let max_stages: u32 = if persistent { 4 } else { 3 };
@@ -52,7 +54,7 @@ pub fn decompose(m: u32, n: u32, k: u32, gpu: &GpuSpec) -> Decomposition {
         + (m as f64 + n as f64) * (k as f64 / SCALE_BLOCK as f64) * 4.0;
 
     Decomposition {
-        tasks,
+        task_groups,
         paradigm: if persistent { Paradigm::PersistentTile } else { Paradigm::HardwareRR },
         cta,
         tile: (tm, tn, tk),
@@ -73,7 +75,8 @@ mod tests {
         let f8 = decompose(4096, 4096, 4096, &gpu);
         let bf = super::super::gemm::decompose(4096, 4096, 4096, DType::Bf16, &gpu);
         // same tile family -> FP8 A/B panels are ~half the bytes
-        let ratio = f8.tasks[0].bytes_load / bf.tasks[0].bytes_load;
+        let ratio =
+            f8.task_groups[0].template.bytes_load / bf.task_groups[0].template.bytes_load;
         assert!(ratio < 0.6, "ratio {ratio}");
     }
 
@@ -89,8 +92,9 @@ mod tests {
     fn epilogue_fma_present() {
         let gpu = gpu_by_name("H100").unwrap();
         let d = decompose(1024, 1024, 2048, &gpu);
-        assert!(d.tasks[0].fma_ops > 0.0);
-        assert!(d.tasks[0].tensor_ops > 100.0 * d.tasks[0].fma_ops);
+        let t = &d.task_groups[0].template;
+        assert!(t.fma_ops > 0.0);
+        assert!(t.tensor_ops > 100.0 * t.fma_ops);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! out[s, d] = silu(x[s, d]) * x[s, d + dim]. One CTA per token row,
 //! FP32 elementwise math (FMA pipe) + one exp per element (XU pipe).
 
-use super::{CtaResources, Decomposition, Paradigm, Pipe, Task};
+use super::{CtaResources, Decomposition, Paradigm, Pipe, Task, TaskGroup};
 use crate::hw::GpuSpec;
 
 pub fn decompose(seq: u32, dim: u32, _gpu: &GpuSpec) -> Decomposition {
@@ -23,7 +23,8 @@ pub fn decompose(seq: u32, dim: u32, _gpu: &GpuSpec) -> Decomposition {
         cost_hint: fma_ops + 4.0 * bytes_load,
     };
     Decomposition {
-        tasks: vec![task; seq as usize],
+        // one task per token row, all identical: a single run
+        task_groups: vec![TaskGroup { template: task, count: seq as u64 }],
         paradigm: Paradigm::HardwareRR,
         cta: CtaResources { warps: (dim.div_ceil(2048)).clamp(1, 8), smem_bytes: 0, regs_per_thread: 32 },
         tile: (1, dim, 1),
@@ -44,7 +45,7 @@ mod tests {
         let gpu = gpu_by_name("L20").unwrap();
         let d = decompose(1000, 13824, &gpu);
         assert_eq!(d.num_tasks(), 1000);
-        let t = &d.tasks[0];
+        let t = &d.task_groups[0].template;
         assert_eq!(t.tensor_ops, 0.0);
         assert!((t.xu_ops - 13824.0).abs() < 1e-9);
         // reads two halves, writes one
@@ -57,6 +58,7 @@ mod tests {
         let gpu = gpu_by_name("A100").unwrap();
         let s = decompose(64, 4096, &gpu);
         let r = super::super::rmsnorm::decompose(64, 4096, &gpu);
-        assert!(s.tasks[0].xu_ops > 50.0 * r.tasks[0].xu_ops);
+        let (st, rt) = (&s.task_groups[0].template, &r.task_groups[0].template);
+        assert!(st.xu_ops > 50.0 * rt.xu_ops);
     }
 }

@@ -2,9 +2,19 @@
 //! BatchNorm(running stats) x3 -> dense -> sigmoid), operating on the same
 //! flat theta/bn blobs the artifacts use.
 //!
-//! Purpose: (1) cross-check PJRT numerics in integration tests, (2) a
+//! Purpose: (1) cross-check PJRT numerics in integration tests, (2) the
 //! documented fallback when artifacts are unavailable. The PJRT path stays
 //! the production route (the AOT'd Pallas kernels are the deliverable).
+//!
+//! The forward is a blocked batch-GEMM: rows are processed [`ROW_BLOCK`] at
+//! a time so each weight row is streamed through once per block instead of
+//! once per input row, with the ReLU + BatchNorm epilogue fused into a
+//! single pass over the activation panel (the per-feature `sqrt(var + eps)`
+//! is hoisted out of the row loop). All buffers live in a caller-reusable
+//! [`Scratch`], so repeated calls — the artifact-free serving fallback and
+//! dataset-scale cross-checks — allocate nothing but the output. Per output
+//! element the `fi`-ascending accumulation order of the original per-row
+//! loop is preserved, so results are bit-identical to it.
 
 use crate::features::FEATURE_DIM;
 
@@ -12,6 +22,9 @@ use crate::features::FEATURE_DIM;
 pub const LAYERS: [(usize, usize); 4] =
     [(FEATURE_DIM, 256), (256, 128), (128, 64), (64, 1)];
 const BN_EPS: f32 = 1e-5;
+
+/// Input rows processed per weight-matrix sweep.
+const ROW_BLOCK: usize = 8;
 
 /// theta length implied by LAYERS (w + b per layer, gamma/beta on hidden).
 pub fn theta_size() -> usize {
@@ -30,36 +43,105 @@ pub fn bn_size() -> usize {
     LAYERS[..LAYERS.len() - 1].iter().map(|(_, fo)| 2 * fo).sum()
 }
 
+/// Reusable workspace for [`forward_into`]: two activation panels
+/// (`ROW_BLOCK` × widest layer) plus the hoisted per-feature BatchNorm
+/// standard deviations.
+pub struct Scratch {
+    /// Current activation panel, row-major `rb × fi`.
+    act: Vec<f32>,
+    /// Next-layer accumulator panel, row-major `rb × fo`.
+    acc: Vec<f32>,
+    /// Per-hidden-layer `sqrt(var + eps)`, laid out like the bn mu halves.
+    std: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        let widest = LAYERS.iter().map(|&(fi, fo)| fi.max(fo)).max().unwrap_or(1);
+        Scratch {
+            act: vec![0.0; ROW_BLOCK * widest],
+            acc: vec![0.0; ROW_BLOCK * widest],
+            std: vec![0.0; bn_size() / 2],
+        }
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch::new()
+    }
+}
+
 /// Inference forward for a batch of standardized feature rows.
 pub fn forward(theta: &[f32], bn: &[f32], xs: &[[f32; FEATURE_DIM]]) -> Vec<f32> {
+    let mut scratch = Scratch::new();
+    let mut out = Vec::with_capacity(xs.len());
+    forward_into(theta, bn, xs, &mut scratch, &mut out);
+    out
+}
+
+/// Batched inference forward appending one efficiency per row to `out`,
+/// reusing `scratch` across calls.
+pub fn forward_into(
+    theta: &[f32],
+    bn: &[f32],
+    xs: &[[f32; FEATURE_DIM]],
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) {
     assert_eq!(theta.len(), theta_size(), "theta blob size mismatch");
     assert_eq!(bn.len(), bn_size(), "bn blob size mismatch");
-    let mut out = Vec::with_capacity(xs.len());
-    let mut h = vec![0f32; 256];
-    let mut h2 = vec![0f32; 256];
-    for x in xs {
-        let mut cur: Vec<f32> = x.to_vec();
+    out.reserve(xs.len());
+
+    // hoist the BatchNorm denominators: same sqrt per feature as the
+    // unfused epilogue, computed once per call instead of once per row
+    {
+        let mut boff = 0usize;
+        let mut soff = 0usize;
+        for &(_, fo) in &LAYERS[..LAYERS.len() - 1] {
+            let var = &bn[boff + fo..boff + 2 * fo];
+            for (s, v) in scratch.std[soff..soff + fo].iter_mut().zip(var) {
+                *s = (v + BN_EPS).sqrt();
+            }
+            boff += 2 * fo;
+            soff += fo;
+        }
+    }
+
+    for block in xs.chunks(ROW_BLOCK) {
+        let rb = block.len();
+        for (r, x) in block.iter().enumerate() {
+            scratch.act[r * FEATURE_DIM..(r + 1) * FEATURE_DIM].copy_from_slice(x);
+        }
         let mut toff = 0usize;
         let mut boff = 0usize;
+        let mut soff = 0usize;
         for (li, &(fi, fo)) in LAYERS.iter().enumerate() {
             let w = &theta[toff..toff + fi * fo];
             toff += fi * fo;
             let b = &theta[toff..toff + fo];
             toff += fo;
-            h.clear();
-            h.resize(fo, 0.0);
-            // dense: cur[fi] @ w[fi,fo] + b
-            for (i, &xi) in cur.iter().enumerate() {
-                if xi == 0.0 {
-                    continue;
-                }
-                let row = &w[i * fo..(i + 1) * fo];
-                for (hj, wj) in h.iter_mut().zip(row) {
-                    *hj += xi * wj;
+            let acc = &mut scratch.acc[..rb * fo];
+            acc.fill(0.0);
+            // blocked dense: acc[rb, fo] += act[rb, fi] @ w[fi, fo], one
+            // sweep over W per row block; the zero-input skip mirrors the
+            // sparse log1p feature vectors
+            for i in 0..fi {
+                let wrow = &w[i * fo..(i + 1) * fo];
+                for r in 0..rb {
+                    let xi = scratch.act[r * fi + i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    for (aj, wj) in acc[r * fo..(r + 1) * fo].iter_mut().zip(wrow) {
+                        *aj += xi * wj;
+                    }
                 }
             }
-            for (hj, bj) in h.iter_mut().zip(b) {
-                *hj += bj;
+            for r in 0..rb {
+                for (aj, bj) in acc[r * fo..(r + 1) * fo].iter_mut().zip(b) {
+                    *aj += bj;
+                }
             }
             if li < LAYERS.len() - 1 {
                 let gamma = &theta[toff..toff + fo];
@@ -67,38 +149,31 @@ pub fn forward(theta: &[f32], bn: &[f32], xs: &[[f32; FEATURE_DIM]]) -> Vec<f32>
                 let beta = &theta[toff..toff + fo];
                 toff += fo;
                 let mu = &bn[boff..boff + fo];
-                let var = &bn[boff + fo..boff + 2 * fo];
+                let std = &scratch.std[soff..soff + fo];
                 boff += 2 * fo;
-                h2.clear();
-                h2.resize(fo, 0.0);
-                for j in 0..fo {
-                    let r = h[j].max(0.0); // ReLU
-                    let z = (r - mu[j]) / (var[j] + BN_EPS).sqrt();
-                    h2[j] = z * gamma[j] + beta[j];
+                soff += fo;
+                // fused ReLU + BatchNorm epilogue, written back into the
+                // activation panel for the next layer
+                for r in 0..rb {
+                    for j in 0..fo {
+                        let v = acc[r * fo + j].max(0.0);
+                        scratch.act[r * fo + j] = ((v - mu[j]) / std[j]) * gamma[j] + beta[j];
+                    }
                 }
-                std::mem::swap(&mut cur, &mut h2);
-                cur.truncate(fo);
             } else {
-                out.push(1.0 / (1.0 + (-h[0]).exp())); // sigmoid head
+                for r in 0..rb {
+                    out.push(1.0 / (1.0 + (-acc[r * fo]).exp())); // sigmoid head
+                }
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn sizes_match_manifest_convention() {
-        // 32*256+256 + 2*256 | 256*128+128 + 2*128 | 128*64+64 + 2*64 | 64+1
-        assert_eq!(theta_size(), 8192 + 256 + 512 + 32768 + 128 + 256 + 8192 + 64 + 128 + 64 + 1);
-        assert_eq!(bn_size(), 2 * (256 + 128 + 64));
-    }
-
-    #[test]
-    fn forward_outputs_in_unit_interval() {
+    fn synthetic_weights() -> (Vec<f32>, Vec<f32>) {
         let theta: Vec<f32> = (0..theta_size())
             .map(|i| ((i * 31 % 97) as f32 / 97.0 - 0.5) * 0.1)
             .collect();
@@ -111,10 +186,121 @@ mod tests {
             }
             off += 2 * fo;
         }
+        (theta, bn)
+    }
+
+    /// The pre-blocking per-row forward, kept as the bit-identity oracle.
+    fn reference_forward(theta: &[f32], bn: &[f32], xs: &[[f32; FEATURE_DIM]]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(xs.len());
+        let mut h = vec![0f32; 256];
+        let mut h2 = vec![0f32; 256];
+        for x in xs {
+            let mut cur: Vec<f32> = x.to_vec();
+            let mut toff = 0usize;
+            let mut boff = 0usize;
+            for (li, &(fi, fo)) in LAYERS.iter().enumerate() {
+                let w = &theta[toff..toff + fi * fo];
+                toff += fi * fo;
+                let b = &theta[toff..toff + fo];
+                toff += fo;
+                h.clear();
+                h.resize(fo, 0.0);
+                for (i, &xi) in cur.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let row = &w[i * fo..(i + 1) * fo];
+                    for (hj, wj) in h.iter_mut().zip(row) {
+                        *hj += xi * wj;
+                    }
+                }
+                for (hj, bj) in h.iter_mut().zip(b) {
+                    *hj += bj;
+                }
+                if li < LAYERS.len() - 1 {
+                    let gamma = &theta[toff..toff + fo];
+                    toff += fo;
+                    let beta = &theta[toff..toff + fo];
+                    toff += fo;
+                    let mu = &bn[boff..boff + fo];
+                    let var = &bn[boff + fo..boff + 2 * fo];
+                    boff += 2 * fo;
+                    h2.clear();
+                    h2.resize(fo, 0.0);
+                    for j in 0..fo {
+                        let r = h[j].max(0.0);
+                        let z = (r - mu[j]) / (var[j] + BN_EPS).sqrt();
+                        h2[j] = z * gamma[j] + beta[j];
+                    }
+                    std::mem::swap(&mut cur, &mut h2);
+                    cur.truncate(fo);
+                } else {
+                    out.push(1.0 / (1.0 + (-h[0]).exp()));
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn sizes_match_manifest_convention() {
+        // 32*256+256 + 2*256 | 256*128+128 + 2*128 | 128*64+64 + 2*64 | 64+1
+        assert_eq!(theta_size(), 8192 + 256 + 512 + 32768 + 128 + 256 + 8192 + 64 + 128 + 64 + 1);
+        assert_eq!(bn_size(), 2 * (256 + 128 + 64));
+    }
+
+    #[test]
+    fn forward_outputs_in_unit_interval() {
+        let (theta, bn) = synthetic_weights();
         let xs = vec![[0.3f32; FEATURE_DIM], [-1.0; FEATURE_DIM]];
         let ys = forward(&theta, &bn, &xs);
         assert_eq!(ys.len(), 2);
         assert!(ys.iter().all(|y| *y > 0.0 && *y < 1.0));
         assert_ne!(ys[0], ys[1]);
+    }
+
+    #[test]
+    fn blocked_forward_bit_identical_to_reference() {
+        let (theta, bn) = synthetic_weights();
+        // ragged batch (not a multiple of ROW_BLOCK), with zeros to hit the
+        // sparse skip and negatives to hit the ReLU clamp
+        let xs: Vec<[f32; FEATURE_DIM]> = (0..11)
+            .map(|r| {
+                let mut x = [0f32; FEATURE_DIM];
+                for (i, v) in x.iter_mut().enumerate() {
+                    *v = match (r + i) % 4 {
+                        0 => 0.0,
+                        1 => 0.7 * (i as f32 + 1.0).ln(),
+                        2 => -0.9,
+                        _ => (r as f32) - 4.0,
+                    };
+                }
+                x
+            })
+            .collect();
+        let want = reference_forward(&theta, &bn, &xs);
+        let got = forward(&theta, &bn, &xs);
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), g.to_bits(), "blocked forward drifted");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        let (theta, bn) = synthetic_weights();
+        let xs1 = vec![[0.5f32; FEATURE_DIM]; 3];
+        let xs2 = vec![[-0.25f32; FEATURE_DIM]; 9];
+        let mut scratch = Scratch::new();
+        let mut out = Vec::new();
+        forward_into(&theta, &bn, &xs1, &mut scratch, &mut out);
+        forward_into(&theta, &bn, &xs2, &mut scratch, &mut out);
+        assert_eq!(out.len(), 12);
+        let fresh1 = forward(&theta, &bn, &xs1);
+        let fresh2 = forward(&theta, &bn, &xs2);
+        let want: Vec<f32> = fresh1.into_iter().chain(fresh2).collect();
+        for (w, g) in want.iter().zip(&out) {
+            assert_eq!(w.to_bits(), g.to_bits(), "scratch reuse leaked state");
+        }
     }
 }

@@ -3,9 +3,11 @@
 //! efficiency back to latency via the theoretical roof.
 
 use crate::features::{FeatureSet, FEATURE_DIM};
+use crate::mlp::native;
 use crate::mlp::weights::ModelWeights;
 use crate::runtime::{lit_f32, to_f32, Engine, Executable};
 use anyhow::Result;
+use std::sync::Mutex;
 
 pub struct Predictor {
     weights: ModelWeights,
@@ -15,6 +17,9 @@ pub struct Predictor {
     /// per forward call — dominant on the batch-1 path).
     theta_lit: xla::Literal,
     bn_lit: xla::Literal,
+    /// Reused workspace for the native forward (allocated once, not per
+    /// call; Mutex because prediction entry points take `&self`).
+    native_scratch: Mutex<native::Scratch>,
 }
 
 impl Predictor {
@@ -27,7 +32,13 @@ impl Predictor {
         }
         let theta_lit = lit_f32(&weights.theta, &[weights.theta.len() as i64])?;
         let bn_lit = lit_f32(&weights.bn, &[weights.bn.len() as i64])?;
-        Ok(Predictor { weights, fwds, theta_lit, bn_lit })
+        Ok(Predictor {
+            weights,
+            fwds,
+            theta_lit,
+            bn_lit,
+            native_scratch: Mutex::new(native::Scratch::new()),
+        })
     }
 
     pub fn from_file(engine: &Engine, path: &str) -> Result<Predictor> {
@@ -75,13 +86,24 @@ impl Predictor {
         Ok(feats.iter().zip(effs).map(|(f, e)| f.theory_sec / e).collect())
     }
 
-    /// Native (pure-rust) forward for cross-checking the PJRT path.
+    /// Native (pure-rust) forward for cross-checking the PJRT path and as
+    /// the artifact-free fallback; reuses the predictor's scratch panels
+    /// when they are free, falling back to a fresh local workspace rather
+    /// than serializing concurrent callers on the lock.
     pub fn predict_eff_native(&self, xs: &[[f32; FEATURE_DIM]]) -> Vec<f64> {
         let zs = self.weights.scaler.transform_all(xs);
-        crate::mlp::native::forward(&self.weights.theta, &self.weights.bn, &zs)
-            .into_iter()
-            .map(|v| (v as f64).clamp(1e-3, 0.9999))
-            .collect()
+        let mut effs = Vec::with_capacity(zs.len());
+        let mut guard;
+        let mut local;
+        let scratch: &mut native::Scratch = if let Ok(g) = self.native_scratch.try_lock() {
+            guard = g;
+            &mut guard
+        } else {
+            local = native::Scratch::new();
+            &mut local
+        };
+        native::forward_into(&self.weights.theta, &self.weights.bn, &zs, scratch, &mut effs);
+        effs.into_iter().map(|v| (v as f64).clamp(1e-3, 0.9999)).collect()
     }
 
     pub fn weights(&self) -> &ModelWeights {

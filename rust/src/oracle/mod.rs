@@ -96,12 +96,14 @@ fn task_cycles(t: &Task, cx: &ExecCtx) -> f64 {
 
 /// L2 reuse capture (§6 step 4): how much of the excess (reuse) traffic the
 /// L2 absorbs, as a function of the concurrent working set vs capacity.
-fn l2_capture(decomp: &Decomposition, kind: KernelKind, gpu: &GpuSpec, occ: u32) -> f64 {
-    let loads: f64 = decomp.tasks.iter().map(|t| t.bytes_load).sum();
+/// `loads` is the kernel-wide sum of per-task `bytes_load` (the caller has
+/// it already — avoids re-walking the task set).
+fn l2_capture(decomp: &Decomposition, loads: f64, kind: KernelKind, gpu: &GpuSpec, occ: u32) -> f64 {
     if loads <= 0.0 {
         return 0.0;
     }
-    let active = (decomp.tasks.len() as f64).min(gpu.num_sms as f64 * occ as f64);
+    let n_tasks = decomp.num_tasks();
+    let active = (n_tasks as f64).min(gpu.num_sms as f64 * occ as f64);
     let (tm, tn, tk) = decomp.tile;
     let ws = match kind {
         // tile kernels: concurrently resident operand slabs, shared along
@@ -112,8 +114,7 @@ fn l2_capture(decomp: &Decomposition, kind: KernelKind, gpu: &GpuSpec, occ: u32)
         }
         // attention: resident K/V panels (shared across grouped query heads)
         KernelKind::Attention => {
-            let per_task = decomp.tasks.iter().map(|t| t.bytes_load).sum::<f64>()
-                / decomp.tasks.len() as f64;
+            let per_task = loads / n_tasks as f64;
             active * per_task * 0.5
         }
         // streaming elementwise: no reuse to capture
@@ -141,12 +142,17 @@ pub fn measure_decomposed(
     let mut rng = Rng::new(seed ^ 0x07AC1E5EED);
     let occ = decomp.cta.occupancy(gpu);
     let nsm = gpu.num_sms as usize;
-    let n_tasks = decomp.tasks.len();
+    // The dynamic simulation is inherently per-task (jitter streams,
+    // finish-time dispatch), so expand the run-length groups once here —
+    // the launch-order expansion keeps every seeded stream bit-identical
+    // to the pre-grouping task list.
+    let tasks: Vec<&Task> = decomp.iter_tasks().collect();
+    let n_tasks = tasks.len();
 
     // memory model ingredients
-    let loads: f64 = decomp.tasks.iter().map(|t| t.bytes_load).sum();
-    let stores: f64 = decomp.tasks.iter().map(|t| t.bytes_store).sum();
-    let rho = l2_capture(decomp, kind, gpu, occ);
+    let loads: f64 = tasks.iter().map(|t| t.bytes_load).sum();
+    let stores: f64 = tasks.iter().map(|t| t.bytes_store).sum();
+    let rho = l2_capture(decomp, loads, kind, gpu, occ);
     let excess = (loads - decomp.min_dram_bytes).max(0.0);
     let dram_total = (decomp.min_dram_bytes + (1.0 - rho) * excess).min(loads.max(decomp.min_dram_bytes));
     let dram_frac = if loads > 0.0 { dram_total / loads } else { 0.0 };
@@ -163,7 +169,7 @@ pub fn measure_decomposed(
     };
 
     // deterministic per-task durations + jitter
-    let base: Vec<f64> = decomp.tasks.iter().map(|t| task_cycles(t, &cx)).collect();
+    let base: Vec<f64> = tasks.iter().map(|t| task_cycles(t, &cx)).collect();
     let jittered: Vec<f64> =
         base.iter().map(|c| c * rng.range_f64(1.0 - TASK_JITTER, 1.0 + TASK_JITTER)).collect();
 
@@ -181,8 +187,8 @@ pub fn measure_decomposed(
                 let std::cmp::Reverse((t_bits, j)) = heap.pop().unwrap();
                 let t = f64::from_bits(t_bits) + dur;
                 sm_finish[j] = t;
-                sm_tensor[j] += decomp.tasks[i].tensor_ops;
-                sm_fma[j] += decomp.tasks[i].fma_ops;
+                sm_tensor[j] += tasks[i].tensor_ops;
+                sm_fma[j] += tasks[i].fma_ops;
                 heap.push(std::cmp::Reverse((t.to_bits(), j)));
             }
         }
@@ -194,8 +200,8 @@ pub fn measure_decomposed(
                 let w = i % workers;
                 worker_time[w] += dur;
                 let j = w % nsm;
-                sm_tensor[j] += decomp.tasks[i].tensor_ops;
-                sm_fma[j] += decomp.tasks[i].fma_ops;
+                sm_tensor[j] += tasks[i].tensor_ops;
+                sm_fma[j] += tasks[i].fma_ops;
             }
             for (w, &t) in worker_time.iter().enumerate() {
                 let j = w % nsm;
@@ -207,8 +213,7 @@ pub fn measure_decomposed(
             // estimate, which differs slightly from the simulator's analytic
             // replica (page-granular KV lengths, integer cost quantization)
             // — the source of Table VII's small-but-nonzero FA3 error.
-            let costs: Vec<f64> = decomp
-                .tasks
+            let costs: Vec<f64> = tasks
                 .iter()
                 .enumerate()
                 .map(|(i, t)| {
@@ -219,13 +224,13 @@ pub fn measure_decomposed(
                 .collect();
             let workers = nsm * occ.max(1) as usize;
             let bins = minheap::balance(&costs, workers);
-            for (w, tasks) in bins.iter().enumerate() {
+            for (w, bin) in bins.iter().enumerate() {
                 let j = w % nsm;
-                let t: f64 = tasks.iter().map(|&i| jittered[i]).sum();
+                let t: f64 = bin.iter().map(|&i| jittered[i]).sum();
                 sm_finish[j] = sm_finish[j].max(t);
-                for &i in tasks {
-                    sm_tensor[j] += decomp.tasks[i].tensor_ops;
-                    sm_fma[j] += decomp.tasks[i].fma_ops;
+                for &i in bin {
+                    sm_tensor[j] += tasks[i].tensor_ops;
+                    sm_fma[j] += tasks[i].fma_ops;
                 }
             }
         }
@@ -336,7 +341,7 @@ mod tests {
         let cfg = gemm(4096, 8192, 1024);
         let d = cfg.decompose(&gpu);
         let dist = schedule(&d, &gpu);
-        let model_max = dist.max_sm_sum(|i| d.tasks[i].tensor_ops);
+        let model_max = dist.max_sm_sum(|g| d.task_groups[g].template.tensor_ops);
         let o = measure(&cfg, &gpu, 11);
         let rel = (model_max - o.max_sm_tensor_ops).abs() / o.max_sm_tensor_ops;
         assert!(rel < 0.02, "uniform-task max-SM gap should be tiny: {rel}");
@@ -360,7 +365,7 @@ mod tests {
             };
             let d = cfg.decompose(&gpu);
             let dist = schedule(&d, &gpu);
-            let model_max = dist.max_sm_sum(|i| d.tasks[i].tensor_ops);
+            let model_max = dist.max_sm_sum(|g| d.task_groups[g].template.tensor_ops);
             let o = measure(&cfg, &gpu, seed);
             (model_max - o.max_sm_tensor_ops).abs() / o.max_sm_tensor_ops
         };

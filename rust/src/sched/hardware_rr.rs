@@ -4,7 +4,9 @@
 //! each SM receives one CTA per round until resource limits are reached,
 //! and thereafter CTAs backfill as predecessors retire. With the analytical
 //! (count-based) view — no execution times available at this stage — the
-//! retire-driven steady state reduces to cyclic assignment.
+//! retire-driven steady state reduces to cyclic assignment, which the
+//! distribution expresses in closed form (no index vectors: task i → SM
+//! i % num_sms is pure arithmetic over the group spans).
 //!
 //! This *static* approximation is exactly what the paper contrasts with the
 //! dynamic reality for variable-latency workloads (causal attention): the
@@ -16,12 +18,7 @@ use crate::hw::GpuSpec;
 use crate::kernels::Decomposition;
 
 pub fn schedule(decomp: &Decomposition, gpu: &GpuSpec) -> TaskDistribution {
-    let nsm = gpu.num_sms as usize;
-    let mut assignment = vec![Vec::new(); nsm];
-    for (i, _) in decomp.tasks.iter().enumerate() {
-        assignment[i % nsm].push(i);
-    }
-    TaskDistribution { assignment }
+    TaskDistribution::cyclic(decomp, gpu.num_sms as usize)
 }
 
 #[cfg(test)]
@@ -36,12 +33,10 @@ mod tests {
         let d = KernelConfig::Gemm { m: 4096, n: 4096, k: 512, dtype: DType::Bf16 }
             .decompose(&gpu);
         let dist = schedule(&d, &gpu);
-        super::super::assert_is_partition(&dist, d.num_tasks());
-        let (min, max) = dist
-            .assignment
-            .iter()
-            .map(|v| v.len())
-            .fold((usize::MAX, 0), |(lo, hi), l| (lo.min(l), hi.max(l)));
+        super::super::assert_is_partition(&dist, &d);
+        let (min, max) = (0..dist.num_sms())
+            .map(|j| dist.tasks_on_sm(j))
+            .fold((u64::MAX, 0), |(lo, hi), l| (lo.min(l), hi.max(l)));
         assert!(max - min <= 1, "RR must balance counts: {min}..{max}");
     }
 
@@ -50,7 +45,38 @@ mod tests {
         let gpu = gpu_by_name("H800").unwrap();
         let d = KernelConfig::RmsNorm { seq: 7, dim: 1024 }.decompose(&gpu);
         let dist = schedule(&d, &gpu);
-        super::super::assert_is_partition(&dist, 7);
-        assert_eq!(dist.assignment.iter().filter(|v| !v.is_empty()).count(), 7);
+        super::super::assert_is_partition(&dist, &d);
+        assert_eq!((0..dist.num_sms()).filter(|&j| dist.tasks_on_sm(j) > 0).count(), 7);
+    }
+
+    #[test]
+    fn cyclic_counts_match_reference_modulo_walk() {
+        // multi-group case: the closed-form per-(SM, group) counts must
+        // agree with an explicit i % nsm walk over the expanded task list
+        let gpu = gpu_by_name("A100").unwrap();
+        let d = KernelConfig::Attention {
+            batch: vec![(700, 900), (300, 3000)],
+            nh: 3,
+            nkv: 1,
+            hd: 128,
+            causal: true,
+            fa3: false,
+        }
+        .decompose(&gpu);
+        let dist = schedule(&d, &gpu);
+        let nsm = gpu.num_sms as usize;
+        let mut expect = vec![vec![0u64; d.num_groups()]; nsm];
+        let mut i = 0usize;
+        for (g, grp) in d.task_groups.iter().enumerate() {
+            for _ in 0..grp.count {
+                expect[i % nsm][g] += 1;
+                i += 1;
+            }
+        }
+        for (j, row) in expect.iter().enumerate() {
+            for (g, &want) in row.iter().enumerate() {
+                assert_eq!(dist.group_count_on_sm(g, j), want, "sm {j} group {g}");
+            }
+        }
     }
 }

@@ -4,6 +4,11 @@
 //! least-loaded worker. Deterministic (ties broken by worker id), so the
 //! simulator reproduces the real kernel's assignment given the same cost
 //! estimates.
+//!
+//! Two grouped fast paths keep the analytical pipeline off the per-task
+//! allocation: a uniform-cost task set reduces to cyclic assignment
+//! (proved below), and the general data-dependent walk records only
+//! per-worker `(group, count)` runs instead of index vectors.
 
 use super::TaskDistribution;
 use crate::hw::GpuSpec;
@@ -41,13 +46,52 @@ pub fn schedule(decomp: &Decomposition, gpu: &GpuSpec) -> TaskDistribution {
     let nsm = gpu.num_sms as usize;
     let occ = decomp.cta.occupancy(gpu) as usize;
     let workers = nsm * occ.max(1);
-    let costs: Vec<f64> = decomp.tasks.iter().map(|t| t.cost_hint).collect();
-    let bins = balance(&costs, workers);
-    let mut assignment = vec![Vec::new(); nsm];
-    for (w, tasks) in bins.into_iter().enumerate() {
-        assignment[w % nsm].extend(tasks);
+    let groups = &decomp.task_groups;
+
+    // Uniform positive costs reduce to cyclic assignment: by induction,
+    // when task i arrives the workers with the fewest tasks are exactly
+    // {i % W .. W-1}, all at equal load, so the id tie-break pops worker
+    // i % W — and SM = worker % nsm = i % nsm since nsm divides W. This is
+    // bit-identical to running [`balance`] over the expanded cost vector.
+    let first_cost = groups.first().map_or(0.0, |g| g.template.cost_hint);
+    let uniform = first_cost > 0.0
+        && groups.iter().all(|g| g.template.cost_hint == first_cost);
+    if uniform {
+        return TaskDistribution::cyclic(decomp, nsm);
     }
-    TaskDistribution { assignment }
+
+    // Data-dependent case: replicate the reference per-task heap walk
+    // exactly (same pop order, same repeated-addition load updates), but
+    // record per-worker (group, count) runs instead of task indices.
+    let mut heap: BinaryHeap<Reverse<(F, usize)>> =
+        (0..workers).map(|w| Reverse((F(0.0), w))).collect();
+    let mut bins: Vec<Vec<(u32, u64)>> = vec![Vec::new(); workers];
+    for (g, grp) in groups.iter().enumerate() {
+        let cost = grp.template.cost_hint;
+        for _ in 0..grp.count {
+            let Reverse((F(load), w)) = heap.pop().expect("non-empty heap");
+            match bins[w].last_mut() {
+                Some((lg, c)) if *lg as usize == g => *c += 1,
+                _ => bins[w].push((g as u32, 1)),
+            }
+            heap.push(Reverse((F(load + cost), w)));
+        }
+    }
+
+    // Fold workers onto SMs in worker order (w → SM w % nsm), merging
+    // adjacent same-group runs; per-SM run order matches the reference
+    // concatenation bin(j) ++ bin(j + nsm) ++ …
+    let mut sm_groups: Vec<Vec<(u32, u64)>> = vec![Vec::new(); nsm];
+    for (w, runs) in bins.into_iter().enumerate() {
+        let sm = &mut sm_groups[w % nsm];
+        for (g, c) in runs {
+            match sm.last_mut() {
+                Some((lg, lc)) if *lg == g => *lc += c,
+                _ => sm.push((g, c)),
+            }
+        }
+    }
+    TaskDistribution::per_sm(decomp, nsm, sm_groups)
 }
 
 #[cfg(test)]
@@ -97,6 +141,67 @@ mod tests {
         }
         .decompose(&gpu);
         let dist = schedule(&d, &gpu);
-        super::super::assert_is_partition(&dist, d.num_tasks());
+        super::super::assert_is_partition(&dist, &d);
+    }
+
+    #[test]
+    fn grouped_walk_matches_expanded_balance() {
+        // per-(SM, group) counts from the grouped heap walk must equal the
+        // reference: balance() over the expanded cost vector, workers
+        // folded onto SMs in worker order
+        let gpu = gpu_by_name("H20").unwrap();
+        let d = KernelConfig::Attention {
+            batch: vec![(2048, 2048), (511, 700), (64, 4096)],
+            nh: 4,
+            nkv: 2,
+            hd: 128,
+            causal: true,
+            fa3: true,
+        }
+        .decompose(&gpu);
+        let dist = schedule(&d, &gpu);
+
+        let nsm = gpu.num_sms as usize;
+        let workers = nsm * d.cta.occupancy(&gpu).max(1) as usize;
+        let costs: Vec<f64> = d.iter_tasks().map(|t| t.cost_hint).collect();
+        // task index -> group index map
+        let mut task_group = Vec::with_capacity(costs.len());
+        for (g, grp) in d.task_groups.iter().enumerate() {
+            task_group.extend(std::iter::repeat_n(g, grp.count as usize));
+        }
+        let mut expect = vec![vec![0u64; d.num_groups()]; nsm];
+        for (w, bin) in balance(&costs, workers).into_iter().enumerate() {
+            for i in bin {
+                expect[w % nsm][task_group[i]] += 1;
+            }
+        }
+        for (j, row) in expect.iter().enumerate() {
+            for (g, &want) in row.iter().enumerate() {
+                assert_eq!(dist.group_count_on_sm(g, j), want, "sm {j} group {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_costs_reduce_to_cyclic() {
+        // non-causal equal-length batch: every task has the same cost, so
+        // the heap walk must match plain round-robin over workers
+        let gpu = gpu_by_name("H800").unwrap();
+        let d = KernelConfig::Attention {
+            batch: vec![(1024, 1024); 3],
+            nh: 8,
+            nkv: 8,
+            hd: 128,
+            causal: false,
+            fa3: true,
+        }
+        .decompose(&gpu);
+        let dist = schedule(&d, &gpu);
+        super::super::assert_is_partition(&dist, &d);
+        let nsm = gpu.num_sms as usize;
+        for j in 0..nsm {
+            let expect = (d.num_tasks() + nsm - 1 - j) / nsm; // ceil((n - j) / nsm)
+            assert_eq!(dist.tasks_on_sm(j), expect as u64, "sm {j}");
+        }
     }
 }

@@ -1,6 +1,6 @@
 //! Scheduling Simulator (paper §IV-B): converts the task set T into a task
-//! distribution `{T_1 .. T_NSM} = M(T, S)` (Eq. 2) — a partition of task
-//! indices across SMs.
+//! distribution `{T_1 .. T_NSM} = M(T, S)` (Eq. 2) — a partition of tasks
+//! across SMs.
 //!
 //! Three policies, matching the paper's taxonomy:
 //!  * [`hardware_rr`] — the GigaThread engine's inferred round-robin for
@@ -8,6 +8,13 @@
 //!  * [`persistent`] — the static software tile scheduler of persistent
 //!    (ping-pong / Stream-K style) kernels;
 //!  * [`minheap`] — FlashInfer FA3's cost-balancing MinHeap scheduler.
+//!
+//! The distribution is *closed-form over run-length task groups*: instead
+//! of materializing one index vector per SM (O(num_tasks) allocation per
+//! request), it records per-group spans and derives per-(SM, group) task
+//! counts arithmetically. The cyclic policies (round-robin, persistent
+//! strided) need no storage beyond the group prefix table; only the
+//! data-dependent MinHeap result stores explicit per-SM runs.
 
 pub mod hardware_rr;
 pub mod minheap;
@@ -16,37 +23,148 @@ pub mod persistent;
 use crate::hw::GpuSpec;
 use crate::kernels::{Decomposition, Paradigm};
 
-/// A partition of task indices across SMs: `assignment[j]` holds the indices
-/// of the tasks executed by SM j. The sets are disjoint and their union is
-/// the full task set (checked by the property tests).
+/// How task groups map onto SMs.
+#[derive(Debug, Clone)]
+enum Plan {
+    /// Task with global launch index `i` runs on SM `i % num_sms` — the
+    /// closed form shared by hardware round-robin and the strided
+    /// persistent scheduler (worker = i % (nsm·occ) and SM = worker % nsm
+    /// compose to i % nsm because nsm divides the worker count).
+    Cyclic,
+    /// Explicit per-SM `(group index, task count)` runs for data-dependent
+    /// schedules (MinHeap over non-uniform costs), listed in the order the
+    /// reference per-task schedule would enumerate each SM's tasks.
+    PerSm(Vec<Vec<(u32, u64)>>),
+}
+
+/// A partition of the task set across SMs in grouped, closed form. Per-SM
+/// aggregates are derived as Σ_g count(g, j) · metric(g) — O(num_groups)
+/// per SM rather than O(tasks per SM).
 #[derive(Debug, Clone)]
 pub struct TaskDistribution {
-    pub assignment: Vec<Vec<usize>>,
+    num_sms: usize,
+    /// Global start offset of each group in launch order (prefix sums).
+    starts: Vec<u64>,
+    /// Task count of each group (mirrors the decomposition).
+    counts: Vec<u64>,
+    plan: Plan,
 }
 
 impl TaskDistribution {
+    fn spans(decomp: &Decomposition) -> (Vec<u64>, Vec<u64>) {
+        let mut starts = Vec::with_capacity(decomp.num_groups());
+        let mut counts = Vec::with_capacity(decomp.num_groups());
+        let mut off = 0u64;
+        for g in &decomp.task_groups {
+            starts.push(off);
+            counts.push(g.count);
+            off += g.count;
+        }
+        (starts, counts)
+    }
+
+    /// Closed-form cyclic distribution (task i → SM i % num_sms).
+    pub(crate) fn cyclic(decomp: &Decomposition, num_sms: usize) -> TaskDistribution {
+        let (starts, counts) = Self::spans(decomp);
+        TaskDistribution { num_sms, starts, counts, plan: Plan::Cyclic }
+    }
+
+    /// Distribution with explicit per-SM `(group, count)` runs.
+    pub(crate) fn per_sm(
+        decomp: &Decomposition,
+        num_sms: usize,
+        sm_groups: Vec<Vec<(u32, u64)>>,
+    ) -> TaskDistribution {
+        debug_assert_eq!(sm_groups.len(), num_sms);
+        let (starts, counts) = Self::spans(decomp);
+        TaskDistribution { num_sms, starts, counts, plan: Plan::PerSm(sm_groups) }
+    }
+
     pub fn num_sms(&self) -> usize {
-        self.assignment.len()
+        self.num_sms
     }
 
     pub fn num_tasks(&self) -> usize {
-        self.assignment.iter().map(|v| v.len()).sum()
+        self.counts.iter().map(|&c| c as usize).sum()
     }
 
-    /// Max over SMs of an additive per-task metric.
-    pub fn max_sm_sum<F: Fn(usize) -> f64>(&self, metric: F) -> f64 {
-        self.assignment
-            .iter()
-            .map(|tasks| tasks.iter().map(|&i| metric(i)).sum::<f64>())
-            .fold(0.0, f64::max)
+    pub fn num_groups(&self) -> usize {
+        self.counts.len()
     }
 
-    /// Per-SM sums of an additive metric.
-    pub fn sm_sums<F: Fn(usize) -> f64>(&self, metric: F) -> Vec<f64> {
-        self.assignment
-            .iter()
-            .map(|tasks| tasks.iter().map(|&i| metric(i)).sum::<f64>())
+    /// How many tasks of group `g` land on SM `j`.
+    pub fn group_count_on_sm(&self, g: usize, j: usize) -> u64 {
+        match &self.plan {
+            Plan::Cyclic => {
+                let c = self.counts[g];
+                let nsm = self.num_sms as u64;
+                // first index of the run with residue j, relative to start
+                let off = (j as u64 + nsm - self.starts[g] % nsm) % nsm;
+                if off >= c {
+                    0
+                } else {
+                    1 + (c - 1 - off) / nsm
+                }
+            }
+            Plan::PerSm(sms) => sms[j]
+                .iter()
+                .filter(|&&(gi, _)| gi as usize == g)
+                .map(|&(_, c)| c)
+                .sum(),
+        }
+    }
+
+    /// Visit SM `j`'s `(group index, task count)` runs in schedule order.
+    pub fn visit_sm(&self, j: usize, mut f: impl FnMut(usize, u64)) {
+        match &self.plan {
+            Plan::Cyclic => {
+                let nsm = self.num_sms as u64;
+                for (g, (&start, &c)) in self.starts.iter().zip(&self.counts).enumerate() {
+                    if c == 0 {
+                        continue;
+                    }
+                    let off = (j as u64 + nsm - start % nsm) % nsm;
+                    if off < c {
+                        f(g, 1 + (c - 1 - off) / nsm);
+                    }
+                }
+            }
+            Plan::PerSm(sms) => {
+                for &(g, c) in &sms[j] {
+                    f(g as usize, c);
+                }
+            }
+        }
+    }
+
+    /// Number of tasks assigned to SM `j`.
+    pub fn tasks_on_sm(&self, j: usize) -> u64 {
+        let mut n = 0u64;
+        self.visit_sm(j, |_, c| n += c);
+        n
+    }
+
+    /// Per-SM sums of an additive per-task metric; `per_task` is keyed by
+    /// *group* index (all tasks of a group share the metric value).
+    pub fn sm_sums<F: Fn(usize) -> f64>(&self, per_task: F) -> Vec<f64> {
+        (0..self.num_sms)
+            .map(|j| {
+                let mut s = 0.0;
+                self.visit_sm(j, |g, c| s += c as f64 * per_task(g));
+                s
+            })
             .collect()
+    }
+
+    /// Max over SMs of an additive per-task metric (keyed by group index).
+    pub fn max_sm_sum<F: Fn(usize) -> f64>(&self, per_task: F) -> f64 {
+        (0..self.num_sms)
+            .map(|j| {
+                let mut s = 0.0;
+                self.visit_sm(j, |g, c| s += c as f64 * per_task(g));
+                s
+            })
+            .fold(0.0, f64::max)
     }
 }
 
@@ -60,14 +178,11 @@ pub fn schedule(decomp: &Decomposition, gpu: &GpuSpec) -> TaskDistribution {
 }
 
 #[cfg(test)]
-pub(crate) fn assert_is_partition(dist: &TaskDistribution, n_tasks: usize) {
-    let mut seen = vec![false; n_tasks];
-    for sm in &dist.assignment {
-        for &t in sm {
-            assert!(t < n_tasks, "task index out of range");
-            assert!(!seen[t], "task {t} assigned twice");
-            seen[t] = true;
-        }
+pub(crate) fn assert_is_partition(dist: &TaskDistribution, decomp: &Decomposition) {
+    assert_eq!(dist.num_tasks(), decomp.num_tasks(), "distribution lost tasks");
+    assert_eq!(dist.num_groups(), decomp.num_groups());
+    for (g, grp) in decomp.task_groups.iter().enumerate() {
+        let spread: u64 = (0..dist.num_sms()).map(|j| dist.group_count_on_sm(g, j)).sum();
+        assert_eq!(spread, grp.count, "group {g} tasks lost or duplicated");
     }
-    assert!(seen.iter().all(|&s| s), "some tasks unassigned");
 }

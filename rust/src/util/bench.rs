@@ -1,9 +1,12 @@
 //! Hand-rolled micro-benchmark harness (criterion is not in the offline
 //! vendor set). Reports min/median/mean over timed iterations with warmup,
-//! matching what the `cargo bench` targets print.
+//! matching what the `cargo bench` targets print; results can also be
+//! serialized as JSON ([`write_json`]) so runs are diffable across PRs
+//! (`BENCH_PR*.json` perf-trajectory files).
 
 use std::time::Instant;
 
+#[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
@@ -23,6 +26,33 @@ impl BenchResult {
             fmt_ns(self.mean_ns)
         )
     }
+
+    /// One JSON object per bench — stable field names for the perf
+    /// trajectory files.
+    pub fn json(&self) -> String {
+        let esc: String = self
+            .name
+            .chars()
+            .flat_map(|c| match c {
+                '"' | '\\' => vec!['\\', c],
+                _ => vec![c],
+            })
+            .collect();
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"min_ns\":{:.1},\"median_ns\":{:.1},\"mean_ns\":{:.1}}}",
+            esc, self.iters, self.min_ns, self.median_ns, self.mean_ns
+        )
+    }
+}
+
+/// Write results as a JSON object with a `results` array — the bench
+/// binaries' `--json <path>` output, consumed by CI artifacts and the
+/// committed BENCH_PR*.json files (an object, not a bare array, so those
+/// files can carry metadata fields alongside `results` and regeneration
+/// keeps the same shape).
+pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let body: Vec<String> = results.iter().map(|r| format!("    {}", r.json())).collect();
+    std::fs::write(path, format!("{{\n  \"results\": [\n{}\n  ]\n}}\n", body.join(",\n")))
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -85,5 +115,22 @@ mod tests {
         assert!(fmt_ns(5_000.0).ends_with("us"));
         assert!(fmt_ns(5_000_000.0).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let r = BenchResult {
+            name: "dsf/\"quoted\"".to_string(),
+            iters: 42,
+            min_ns: 100.0,
+            median_ns: 150.5,
+            mean_ns: 160.25,
+        };
+        let parsed =
+            crate::util::json::parse(&format!("{{\"results\":[{}]}}", r.json())).unwrap();
+        let obj = &parsed.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(obj.get("name").unwrap().as_str().unwrap(), "dsf/\"quoted\"");
+        assert_eq!(obj.get("iters").unwrap().as_usize().unwrap(), 42);
+        assert!((obj.get("median_ns").unwrap().as_f64().unwrap() - 150.5).abs() < 1e-9);
     }
 }

@@ -34,21 +34,23 @@ fn schedule_is_exact_partition() {
         let (cfg, gpu) = random_case(r);
         let d = cfg.decompose(&gpu);
         let dist = schedule(&d, &gpu);
-        assert_partition(&dist, d.num_tasks(), gpu.num_sms as usize);
+        assert_partition(&dist, &d, gpu.num_sms as usize);
     });
 }
 
-fn assert_partition(dist: &TaskDistribution, n_tasks: usize, n_sms: usize) {
+/// Every group's tasks are fully distributed (no loss, no duplication) and
+/// per-SM totals reconstruct the task count — the grouped equivalent of the
+/// old index-vector partition check.
+fn assert_partition(dist: &TaskDistribution, d: &synperf::kernels::Decomposition, n_sms: usize) {
     assert_eq!(dist.num_sms(), n_sms);
-    let mut seen = vec![false; n_tasks];
-    for sm in &dist.assignment {
-        for &t in sm {
-            assert!(t < n_tasks);
-            assert!(!seen[t], "task {t} double-assigned");
-            seen[t] = true;
-        }
+    assert_eq!(dist.num_tasks(), d.num_tasks());
+    assert_eq!(dist.num_groups(), d.num_groups());
+    for (g, grp) in d.task_groups.iter().enumerate() {
+        let spread: u64 = (0..n_sms).map(|j| dist.group_count_on_sm(g, j)).sum();
+        assert_eq!(spread, grp.count, "group {g} tasks lost or duplicated");
     }
-    assert!(seen.iter().all(|&b| b), "unassigned tasks");
+    let per_sm: u64 = (0..n_sms).map(|j| dist.tasks_on_sm(j)).sum();
+    assert_eq!(per_sm, d.num_tasks() as u64);
 }
 
 #[test]
@@ -58,9 +60,9 @@ fn feature_totals_conserve_task_demands() {
         let d = cfg.decompose(&gpu);
         let dist = schedule(&d, &gpu);
         let f = FeatureSet::analyze(&d, &dist, &gpu);
-        let tensor: f64 = d.tasks.iter().map(|t| t.tensor_ops).sum();
-        let fma: f64 = d.tasks.iter().map(|t| t.fma_ops).sum();
-        let loads: f64 = d.tasks.iter().map(|t| t.bytes_load).sum();
+        let tensor: f64 = d.iter_tasks().map(|t| t.tensor_ops).sum();
+        let fma: f64 = d.iter_tasks().map(|t| t.fma_ops).sum();
+        let loads: f64 = d.iter_tasks().map(|t| t.bytes_load).sum();
         let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0);
         assert!(close(f.tensor.total_ops, tensor));
         assert!(close(f.fma.total_ops, fma));
@@ -107,7 +109,7 @@ fn oracle_deterministic_and_noise_bounded() {
         assert!((0.88..1.12).contains(&ratio), "noise ratio {ratio}");
         // counters conserve totals
         let d = cfg.decompose(&gpu);
-        let tensor: f64 = d.tasks.iter().map(|t| t.tensor_ops).sum();
+        let tensor: f64 = d.iter_tasks().map(|t| t.tensor_ops).sum();
         assert!((a.total_tensor_ops - tensor).abs() <= 1e-6 * tensor.max(1.0));
     });
 }
@@ -219,16 +221,16 @@ fn minheap_sm_cost_bounded_by_round_robin() {
         let d = cfg.decompose(&gpu);
         let mh = minheap::schedule(&d, &gpu);
         let rr = hardware_rr::schedule(&d, &gpu);
-        assert_partition(&mh, d.num_tasks(), gpu.num_sms as usize);
-        assert_partition(&rr, d.num_tasks(), gpu.num_sms as usize);
-        let mh_max = mh.max_sm_sum(|i| d.tasks[i].cost_hint);
-        let rr_max = rr.max_sm_sum(|i| d.tasks[i].cost_hint);
+        assert_partition(&mh, &d, gpu.num_sms as usize);
+        assert_partition(&rr, &d, gpu.num_sms as usize);
+        let mh_max = mh.max_sm_sum(|g| d.task_groups[g].template.cost_hint);
+        let rr_max = rr.max_sm_sum(|g| d.task_groups[g].template.cost_hint);
         assert!(
             mh_max <= rr_max * 1.05 + 1e-9,
             "minheap max-SM cost {mh_max} far above RR {rr_max}"
         );
-        let total: f64 = d.tasks.iter().map(|t| t.cost_hint).sum();
-        let max_cost = d.tasks.iter().map(|t| t.cost_hint).fold(0.0, f64::max);
+        let total: f64 = d.iter_tasks().map(|t| t.cost_hint).sum();
+        let max_cost = d.iter_tasks().map(|t| t.cost_hint).fold(0.0, f64::max);
         let workers = (gpu.num_sms * d.cta.occupancy(&gpu)) as f64;
         assert!(
             mh_max <= total / workers + max_cost + 1e-6,
@@ -255,8 +257,9 @@ fn minheap_strictly_beats_round_robin_on_skewed_causal_batch() {
         fa3: true,
     };
     let d = cfg.decompose(&gpu);
-    let mh_max = minheap::schedule(&d, &gpu).max_sm_sum(|i| d.tasks[i].cost_hint);
-    let rr_max = hardware_rr::schedule(&d, &gpu).max_sm_sum(|i| d.tasks[i].cost_hint);
+    let mh_max = minheap::schedule(&d, &gpu).max_sm_sum(|g| d.task_groups[g].template.cost_hint);
+    let rr_max =
+        hardware_rr::schedule(&d, &gpu).max_sm_sum(|g| d.task_groups[g].template.cost_hint);
     assert!(
         mh_max < rr_max,
         "minheap {mh_max} should strictly beat RR {rr_max} on skewed causal work"
@@ -288,6 +291,234 @@ fn minheap_never_worse_than_round_robin() {
         assert!(mh_max <= rr_max * 1.5 + max_cost, "minheap {mh_max} vs RR {rr_max}");
         // and never below the theoretical optimum (mean load)
         assert!(mh_max * workers as f64 >= total * 0.999);
+    });
+}
+
+/// Reference implementation of the pre-grouping pipeline: expanded task
+/// vectors, per-SM index lists, element-wise feature aggregation. The
+/// grouped closed forms must reproduce it bit-for-bit (every per-task
+/// demand is an exactly representable integer-valued f64, so replacing
+/// repeated addition with count·value is exact).
+mod reference {
+    use synperf::features::{FeatureSet, MioAgg, PipeAgg};
+    use synperf::hw::GpuSpec;
+    use synperf::kernels::{Decomposition, Paradigm, Task};
+    use synperf::sched::minheap;
+
+    pub struct IndexDist {
+        pub assignment: Vec<Vec<usize>>,
+    }
+
+    pub fn schedule(d: &Decomposition, tasks: &[Task], gpu: &GpuSpec) -> IndexDist {
+        let nsm = gpu.num_sms as usize;
+        let mut assignment = vec![Vec::new(); nsm];
+        match d.paradigm {
+            Paradigm::HardwareRR => {
+                for i in 0..tasks.len() {
+                    assignment[i % nsm].push(i);
+                }
+            }
+            Paradigm::PersistentTile => {
+                let workers = nsm * d.cta.occupancy(gpu) as usize;
+                for i in 0..tasks.len() {
+                    assignment[(i % workers) % nsm].push(i);
+                }
+            }
+            Paradigm::MinHeap => {
+                let workers = nsm * d.cta.occupancy(gpu).max(1) as usize;
+                let costs: Vec<f64> = tasks.iter().map(|t| t.cost_hint).collect();
+                for (w, bin) in minheap::balance(&costs, workers).into_iter().enumerate() {
+                    assignment[w % nsm].extend(bin);
+                }
+            }
+        }
+        IndexDist { assignment }
+    }
+
+    pub fn analyze(
+        decomp: &Decomposition,
+        t: &[Task],
+        dist: &IndexDist,
+        gpu: &GpuSpec,
+    ) -> FeatureSet {
+        let nsm = gpu.num_sms as f64;
+        let sm_sums = |metric: &dyn Fn(&Task) -> f64| -> Vec<f64> {
+            dist.assignment
+                .iter()
+                .map(|tasks| tasks.iter().map(|&i| metric(&t[i])).sum::<f64>())
+                .collect()
+        };
+        let pipe_agg = |metric: &dyn Fn(&Task) -> f64, throughput_per_sm: f64| -> PipeAgg {
+            let sums = sm_sums(metric);
+            let total_ops: f64 = sums.iter().sum();
+            let max_sm_ops = sums.iter().cloned().fold(0.0, f64::max);
+            PipeAgg {
+                total_ops,
+                total_cycles: total_ops / (nsm * throughput_per_sm),
+                max_sm_ops,
+                max_sm_cycles: max_sm_ops / throughput_per_sm,
+            }
+        };
+        let tensor = pipe_agg(&|t| t.tensor_ops, gpu.tensor_ops_clk_sm);
+        let fma = pipe_agg(&|t| t.fma_ops, gpu.fma_ops_clk_sm);
+        let xu = pipe_agg(&|t| t.xu_ops, gpu.xu_ops_clk_sm);
+
+        let byte_sums = sm_sums(&|t| t.bytes_load);
+        let total_bytes: f64 = byte_sums.iter().sum();
+        let max_sm_bytes = byte_sums.iter().cloned().fold(0.0, f64::max);
+        let smem_sums = sm_sums(&|t| t.bytes_smem);
+        let max_sm_smem = smem_sums.iter().cloned().fold(0.0, f64::max);
+
+        let dram_bpc = gpu.dram_bytes_per_cycle();
+        let l2_bpc = gpu.l2_bytes_per_cycle();
+        let mio = MioAgg {
+            total_bytes,
+            cycles_dram: total_bytes / dram_bpc,
+            cycles_l2: total_bytes / l2_bpc,
+            max_sm_bytes,
+            max_sm_cycles_dram: max_sm_bytes / (dram_bpc / nsm),
+            max_sm_cycles_l2: max_sm_bytes / (l2_bpc / nsm),
+            max_sm_cycles_smem: max_sm_smem / gpu.smem_bw_byte_clk_sm,
+        };
+
+        let crit: Vec<f64> = dist
+            .assignment
+            .iter()
+            .map(|tasks| {
+                let ops_t: f64 = tasks.iter().map(|&i| t[i].tensor_ops).sum();
+                let ops_f: f64 = tasks.iter().map(|&i| t[i].fma_ops).sum();
+                let ops_x: f64 = tasks.iter().map(|&i| t[i].xu_ops).sum();
+                let by: f64 = tasks.iter().map(|&i| t[i].bytes_load).sum();
+                (ops_t / gpu.tensor_ops_clk_sm)
+                    .max(ops_f / gpu.fma_ops_clk_sm)
+                    .max(ops_x / gpu.xu_ops_clk_sm)
+                    .max(by / (dram_bpc / nsm))
+            })
+            .collect();
+        let max_crit = crit.iter().cloned().fold(0.0, f64::max);
+        let busy: Vec<&f64> = crit.iter().filter(|c| **c > 0.0).collect();
+        let mean_crit = if busy.is_empty() {
+            0.0
+        } else {
+            busy.iter().cloned().sum::<f64>() / busy.len() as f64
+        };
+
+        let occupancy = decomp.cta.occupancy(gpu) as f64;
+        let num_tasks = t.len() as f64;
+        let max_tasks = dist.assignment.iter().map(|v| v.len()).max().unwrap_or(0) as f64;
+
+        let total_stores: f64 = t.iter().map(|t| t.bytes_store).sum();
+        let compute_roof = tensor.total_cycles.max(fma.total_cycles).max(xu.total_cycles);
+        let theory_cycles = compute_roof.max(decomp.min_dram_bytes / dram_bpc);
+        let naive_cycles = compute_roof.max((total_bytes + total_stores) / dram_bpc);
+
+        FeatureSet {
+            tensor,
+            fma,
+            xu,
+            mio,
+            num_tasks,
+            max_tasks_per_sm: max_tasks,
+            imbalance: if mean_crit > 0.0 { max_crit / mean_crit } else { 1.0 },
+            occupancy,
+            waves: num_tasks / (nsm * occupancy),
+            theory_sec: theory_cycles * gpu.cycle_sec(),
+            naive_roofline_sec: naive_cycles * gpu.cycle_sec(),
+        }
+    }
+}
+
+fn assert_pipe_bits(a: &synperf::features::PipeAgg, b: &synperf::features::PipeAgg, what: &str) {
+    for (x, y, f) in [
+        (a.total_ops, b.total_ops, "total_ops"),
+        (a.total_cycles, b.total_cycles, "total_cycles"),
+        (a.max_sm_ops, b.max_sm_ops, "max_sm_ops"),
+        (a.max_sm_cycles, b.max_sm_cycles, "max_sm_cycles"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}.{f}: grouped {x:?} vs reference {y:?}");
+    }
+}
+
+#[test]
+fn grouped_expansion_matches_group_sums() {
+    // iter_tasks() expansion must reconstruct the closed-form group
+    // aggregates exactly, for every kernel kind on every GPU
+    prop_check("grouped_expansion_matches_group_sums", 60, |r| {
+        let (cfg, gpu) = random_case(r);
+        let d = cfg.decompose(&gpu);
+        assert_eq!(d.iter_tasks().count(), d.num_tasks());
+        let total: usize = d.task_groups.iter().map(|g| g.count as usize).sum();
+        assert_eq!(total, d.num_tasks());
+        let tensor: f64 = d.iter_tasks().map(|t| t.tensor_ops).sum();
+        let bytes: f64 = d.iter_tasks().map(|t| t.total_bytes()).sum();
+        assert_eq!(tensor.to_bits(), d.total_tensor_ops().to_bits());
+        assert_eq!(bytes.to_bits(), d.total_bytes().to_bits());
+        // runs are maximal: adjacent groups always differ
+        for w in d.task_groups.windows(2) {
+            assert_ne!(w[0].template, w[1].template, "adjacent equal runs not merged");
+        }
+    });
+}
+
+#[test]
+fn grouped_pipeline_bit_identical_to_expanded_reference() {
+    // the tentpole invariant: grouped schedule + analyze == the pre-grouping
+    // index-vector pipeline over materialized tasks, bit for bit, for all
+    // six kernel kinds across A100 (FA2/HardwareRR) and H800 (FA3/minheap +
+    // persistent tile paths)
+    prop_check("grouped_pipeline_bit_identical", 48, |r| {
+        let gpu = synperf::hw::gpu_by_name(*r.choose(&["A100", "H800"])).unwrap();
+        let kind = *r.choose(&KernelKind::ALL);
+        let cfg = finalize_for_gpu(&sample_config(kind, r), &gpu);
+        let d = cfg.decompose(&gpu);
+        let tasks: Vec<synperf::kernels::Task> = d.iter_tasks().cloned().collect();
+
+        let ref_dist = reference::schedule(&d, &tasks, &gpu);
+        let dist = schedule(&d, &gpu);
+        // per-(SM, group) counts agree with the index walk
+        let mut task_group = Vec::with_capacity(tasks.len());
+        for (g, grp) in d.task_groups.iter().enumerate() {
+            task_group.extend(std::iter::repeat_n(g, grp.count as usize));
+        }
+        for (j, sm) in ref_dist.assignment.iter().enumerate() {
+            let mut want = vec![0u64; d.num_groups()];
+            for &i in sm {
+                want[task_group[i]] += 1;
+            }
+            assert_eq!(dist.tasks_on_sm(j), sm.len() as u64, "{kind:?} sm {j} count");
+            for (g, &w) in want.iter().enumerate() {
+                assert_eq!(dist.group_count_on_sm(g, j), w, "{kind:?} sm {j} group {g}");
+            }
+        }
+
+        let f = FeatureSet::analyze(&d, &dist, &gpu);
+        let fr = reference::analyze(&d, &tasks, &ref_dist, &gpu);
+        assert_pipe_bits(&f.tensor, &fr.tensor, "tensor");
+        assert_pipe_bits(&f.fma, &fr.fma, "fma");
+        assert_pipe_bits(&f.xu, &fr.xu, "xu");
+        for (x, y, what) in [
+            (f.mio.total_bytes, fr.mio.total_bytes, "mio.total_bytes"),
+            (f.mio.cycles_dram, fr.mio.cycles_dram, "mio.cycles_dram"),
+            (f.mio.cycles_l2, fr.mio.cycles_l2, "mio.cycles_l2"),
+            (f.mio.max_sm_bytes, fr.mio.max_sm_bytes, "mio.max_sm_bytes"),
+            (f.mio.max_sm_cycles_dram, fr.mio.max_sm_cycles_dram, "mio.max_sm_cycles_dram"),
+            (f.mio.max_sm_cycles_l2, fr.mio.max_sm_cycles_l2, "mio.max_sm_cycles_l2"),
+            (f.mio.max_sm_cycles_smem, fr.mio.max_sm_cycles_smem, "mio.max_sm_cycles_smem"),
+            (f.num_tasks, fr.num_tasks, "num_tasks"),
+            (f.max_tasks_per_sm, fr.max_tasks_per_sm, "max_tasks_per_sm"),
+            (f.imbalance, fr.imbalance, "imbalance"),
+            (f.occupancy, fr.occupancy, "occupancy"),
+            (f.waves, fr.waves, "waves"),
+            (f.theory_sec, fr.theory_sec, "theory_sec"),
+            (f.naive_roofline_sec, fr.naive_roofline_sec, "naive_roofline_sec"),
+        ] {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{kind:?} on {}: {what}: grouped {x:?} vs reference {y:?}",
+                gpu.name
+            );
+        }
     });
 }
 
