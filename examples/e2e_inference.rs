@@ -1,50 +1,59 @@
 //! End-to-end driver (the DESIGN.md §5 "end-to-end validation" example):
 //! predicts full LLM-serving latency for Qwen2.5-14B on two GPUs under an
-//! Arxiv-style workload and compares every method against the testbed
-//! ground truth, exercising all layers: kernel decomposition -> scheduling
-//! -> features -> AOT'd Pallas/JAX MLP via PJRT -> trace aggregation + RF
+//! Arxiv-style workload through the declarative **Scenario API v1** —
+//! a `ScenarioSpec` per (GPU, workload) point, a typed `ScenarioReport`
+//! back: per-phase TTFT/TPOT, per-method totals vs testbed ground truth,
+//! the typed op-class breakdown, and degraded-kernel provenance. Exercises
+//! all layers: scenario compiler -> kernel decomposition -> scheduling ->
+//! features -> AOT'd Pallas/JAX MLP via PJRT -> trace aggregation + RF
 //! communication model.
 //!
 //!   cargo run --release --example e2e_inference
 //!
 //! Requires `make artifacts`. Models/datasets are cached under runs/.
 
-use synperf::e2e::{llm, predict, trace, workload};
 use synperf::experiments::{Lab, Scale};
-use synperf::hw;
-use synperf::util::rng::Rng;
+use synperf::scenario::{Method, Phase, ScenarioSpec, WorkloadSpec};
+use synperf::e2e::workload::WorkloadKind;
 
 fn main() -> anyhow::Result<()> {
     let lab = Lab::new(Scale::Fast)?;
-    let models = lab.model_set()?;
-    let model = llm::qwen2_5_14b();
-    let mut rng = Rng::new(42);
+    let sim = lab.simulator()?;
 
-    for gpu_name in ["A100", "H100"] {
-        let gpu = hw::gpu_by_name(gpu_name).unwrap();
-        let comm = lab.comm(&gpu);
-        let reqs = workload::sample_batch(workload::WorkloadKind::Arxiv, 8, &mut rng);
-        let tr = trace::build_trace(&model, 1, 1, &reqs);
+    for (i, gpu_name) in ["A100", "H100"].iter().enumerate() {
+        let spec = ScenarioSpec::new("Qwen2.5-14B", *gpu_name)
+            .workload(WorkloadSpec::Sampled { kind: WorkloadKind::Arxiv, batch: 8 })
+            .seed(42 + i as u64);
+        let r = sim.simulate(&spec)?;
+        let prefill = r.phase(Phase::Prefill).expect("both phases scheduled");
+        let decode = r.phase(Phase::Decode).expect("both phases scheduled");
         println!(
-            "\n{} on {} — arxiv_8 ({} prompt tokens, {} trace items)",
-            model.name,
-            gpu.name,
-            reqs.iter().map(|r| r.input_len).sum::<u32>(),
-            tr.len()
+            "\n{} on {} — arxiv_8 ({:.0} prompt tokens, {:.0} kernel launches)",
+            r.model, r.gpu, prefill.tokens, r.launches
         );
-        let t = predict::eval_trace(&tr, &gpu, 1, &models, &comm, 99)?;
-        println!("  ground truth {:.1} ms", t.actual * 1e3);
-        for (name, v) in [
-            ("SynPerf", t.synperf),
-            ("Neusight", t.neusight),
-            ("Habitat", t.habitat),
-            ("Linear", t.linear),
-            ("Roofline", t.roofline),
-        ] {
+        println!(
+            "  TTFT {:.1} ms (predicted {:.1}), TPOT {:.2} ms/tok, decode {:.0} tok/s",
+            prefill.ttft_sec(Method::Actual).unwrap_or(0.0) * 1e3,
+            prefill.ttft_sec(Method::SynPerf).unwrap_or(0.0) * 1e3,
+            decode.tpot_sec(Method::Actual).unwrap_or(0.0) * 1e3,
+            decode.tokens_per_sec(Method::Actual)
+        );
+        println!("  ground truth {:.1} ms", r.totals.actual * 1e3);
+        for m in
+            [Method::SynPerf, Method::Neusight, Method::Habitat, Method::Linear, Method::Roofline]
+        {
+            let v = r.totals.get(m);
             println!(
-                "  {name:<9} {:>8.1} ms   err {:+6.1}%",
+                "  {:<9} {:>8.1} ms   err {:+6.1}%",
+                m.name(),
                 v * 1e3,
-                100.0 * (v - t.actual) / t.actual
+                100.0 * (v - r.totals.actual) / r.totals.actual
+            );
+        }
+        if r.totals.degraded_kernels > 0 {
+            println!(
+                "  note: {} kernel items fell back to the roofline (untrained category)",
+                r.totals.degraded_kernels
             );
         }
     }

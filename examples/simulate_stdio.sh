@@ -1,0 +1,79 @@
+#!/usr/bin/env bash
+# Drive the Scenario-API `simulate` verb from a clean checkout, two ways:
+#  1. over the stdio wire (`synperf serve --stdio` speaks both the predict
+#     and simulate verbs, dispatched per line);
+#  2. through the dedicated `synperf simulate` subcommand (flags -> human
+#     summary, --json -> one report line, --spec - -> JSONL in/out).
+# Without trained artifacts everything answers in degraded roofline mode,
+# which the reports make explicit (totals.degraded_kernels > 0).
+#
+#   ./examples/simulate_stdio.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+REQUESTS='{"v":1,"id":"sim1","op":"simulate","scenario":{"model":"qwen2.5-14b","gpu":"A100","tp":2,"workload":{"requests":[[256,16],[128,8]]},"seed":7}}
+{"v":1,"id":"p1","gpu":"A100","kernel":{"type":"gemm","m":512,"n":512,"k":512}}
+{"v":1,"id":"sim2","op":"simulate","scenario":{"model":"llama3.1-8b","gpu":"H800","workload":{"kind":"splitwise","batch":4},"phases":"decode","seed":3}}
+{"v":1,"id":"bad-model","op":"simulate","scenario":{"model":"GPT-5","gpu":"A100"}}
+{"v":1,"id":"bad-par","op":"simulate","scenario":{"model":"qwen2.5-14b","gpu":"A100","tp":3}}'
+
+OUT=$(printf '%s\n' "$REQUESTS" | cargo run --release --quiet --bin synperf -- serve --stdio --queue-cap 64)
+printf '%s\n' "$OUT"
+
+lines=$(printf '%s\n' "$OUT" | wc -l | tr -d ' ')
+[ "$lines" -eq 5 ] || { echo "FAIL: expected 5 response lines, got $lines"; exit 1; }
+
+# sim1: a full report with both phases, TTFT/TPOT, typed breakdown and
+# degraded provenance counts
+printf '%s\n' "$OUT" | grep '"id":"sim1"' | grep -q '"ok":true,"report":{' \
+  || { echo "FAIL: sim1 report missing"; exit 1; }
+printf '%s\n' "$OUT" | grep '"id":"sim1"' | grep -q '"ttft_sec":{' \
+  || { echo "FAIL: sim1 TTFT missing"; exit 1; }
+printf '%s\n' "$OUT" | grep '"id":"sim1"' | grep -q '"tpot_sec":{' \
+  || { echo "FAIL: sim1 TPOT missing"; exit 1; }
+printf '%s\n' "$OUT" | grep '"id":"sim1"' | grep -q '"gemm_sec":' \
+  || { echo "FAIL: sim1 typed breakdown missing"; exit 1; }
+printf '%s\n' "$OUT" | grep '"id":"sim1"' | grep -q '"all_reduce_sec":' \
+  || { echo "FAIL: sim1 comm breakdown missing"; exit 1; }
+if printf '%s\n' "$OUT" | grep '"id":"sim1"' | grep -q '"degraded_kernels":0,'; then
+  echo "FAIL: degraded provenance should be counted without artifacts"; exit 1
+fi
+
+# the predict verb still answers between simulations
+printf '%s\n' "$OUT" | grep -q '"id":"p1","ok":true' \
+  || { echo "FAIL: predict verb broken"; exit 1; }
+
+# a decode-only (disaggregated) scenario has exactly one phase
+printf '%s\n' "$OUT" | grep '"id":"sim2"' | grep -q '"phases":\[{"phase":"decode"' \
+  || { echo "FAIL: sim2 decode-only phase schedule missing"; exit 1; }
+if printf '%s\n' "$OUT" | grep '"id":"sim2"' | grep -q '"phase":"prefill"'; then
+  echo "FAIL: sim2 must not schedule prefill"; exit 1
+fi
+
+# the closed ScenarioError taxonomy travels the wire
+printf '%s\n' "$OUT" | grep -q '"id":"bad-model","ok":false,"error":{"code":"unknown_model"' \
+  || { echo "FAIL: unknown_model error missing"; exit 1; }
+printf '%s\n' "$OUT" | grep -q '"id":"bad-par","ok":false,"error":{"code":"invalid_parallelism"' \
+  || { echo "FAIL: invalid_parallelism error missing"; exit 1; }
+
+# 2a. the dedicated subcommand, JSON mode: exactly one report line
+JSON_OUT=$(cargo run --release --quiet --bin synperf -- simulate \
+  --model qwen2.5-14b --gpu A100 --tp 2 --batch 4 --seed 7 --json)
+printf '%s\n' "$JSON_OUT" | grep -q '"ok":true,"report":{' \
+  || { echo "FAIL: simulate --json report missing"; exit 1; }
+[ "$(printf '%s\n' "$JSON_OUT" | wc -l | tr -d ' ')" -eq 1 ] \
+  || { echo "FAIL: --json must emit exactly one line"; exit 1; }
+
+# 2b. JSONL specs over stdin (bare scenario objects work too)
+SPEC_OUT=$(printf '%s\n' \
+  '{"model":"llama3.1-8b","gpu":"A100","workload":{"requests":[[64,8]]}}' \
+  '{"id":"x","op":"simulate","scenario":{"model":"nope","gpu":"A100"}}' \
+  | cargo run --release --quiet --bin synperf -- simulate --spec -)
+[ "$(printf '%s\n' "$SPEC_OUT" | wc -l | tr -d ' ')" -eq 2 ] \
+  || { echo "FAIL: --spec - must answer every line"; exit 1; }
+printf '%s\n' "$SPEC_OUT" | head -1 | grep -q '"ok":true,"report":{' \
+  || { echo "FAIL: bare spec object not answered"; exit 1; }
+printf '%s\n' "$SPEC_OUT" | grep -q '"id":"x","ok":false,"error":{"code":"unknown_model"' \
+  || { echo "FAIL: spec-mode error correlation missing"; exit 1; }
+
+echo "simulate_stdio: all assertions passed"

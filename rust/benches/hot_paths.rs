@@ -3,6 +3,7 @@
 //!
 //!   decompose -> schedule -> features   (the analytical front half)
 //!   oracle measurement                  (dataset generation throughput)
+//!   scenario compile                    (ScenarioSpec -> phase-tagged op streams)
 //!   native MLP forward                  (artifact-free fallback path)
 //!   MLP forward via PJRT (b1 / b256 / b1024)
 //!   end-to-end single prediction       (the Fig. 7 "SynPerf time" path)
@@ -166,6 +167,25 @@ fn run_benches(h: &mut Harness, smoke: bool) {
             black_box(out.last().copied());
         });
     }
+
+    println!("\n== scenario compiler (Scenario API v1) ==");
+    // spec -> validated, phase-tagged op streams; no prediction work, so
+    // the compiler must stay cheap enough to sweep
+    let arxiv_spec = synperf::scenario::ScenarioSpec::new("Qwen2.5-14B", "A100").tp(2).seed(7);
+    h.run("scenario/compile qwen2.5-14b arxiv_8 tp2", 200, 20, || {
+        black_box(synperf::scenario::compile(&arxiv_spec).unwrap());
+    });
+    let big_spec = synperf::scenario::ScenarioSpec::new("Llama3.1-70B", "H800")
+        .tp(4)
+        .pp(2)
+        .workload(synperf::scenario::WorkloadSpec::Sampled {
+            kind: synperf::e2e::workload::WorkloadKind::Splitwise,
+            batch: 32,
+        })
+        .seed(7);
+    h.run("scenario/compile llama3.1-70b splitwise_32 tp4pp2", 200, 10, || {
+        black_box(synperf::scenario::compile(&big_spec).unwrap());
+    });
 
     service_bench(&gpu, if smoke { 64 } else { 2000 });
 

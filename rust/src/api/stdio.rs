@@ -6,10 +6,25 @@
 //! interactive request/await peer gets each answer promptly, and a
 //! pipelining peer fills real batches. The in-flight window is bounded by
 //! `max_inflight` (a `sync_channel`), bounding memory.
+//!
+//! The surface speaks two verbs, dispatched per line: **predict** (the
+//! default — a kernel-latency request into the coordinator queue) and
+//! **simulate** (`"op":"simulate"` with a `"scenario"` object — a whole
+//! serving scenario through the [`Simulator`]). Each line is JSON-decoded
+//! exactly once; the decoded object picks the verb and feeds the winning
+//! codec. Simulate lines are evaluated on the writer thread when their
+//! turn comes, so output order still matches input order exactly — the
+//! in-order contract means later predict answers intentionally wait
+//! behind an earlier simulate line (head-of-line), exactly as they wait
+//! behind any earlier slow response. The `Simulator` is built lazily by
+//! the supplied factory on the first simulate line, so predict-only peers
+//! never pay its model-set startup cost.
 
 use super::wire;
 use super::{PredictError, PredictResponse};
 use crate::coordinator::{Client, Pending};
+use crate::scenario::{self, ScenarioError, ScenarioSpec, Simulator};
+use crate::util::json::parse as parse_json;
 use std::io::{BufRead, Write};
 use std::sync::mpsc::{sync_channel, TryRecvError};
 
@@ -18,22 +33,26 @@ use std::sync::mpsc::{sync_channel, TryRecvError};
 pub struct StdioStats {
     pub served: u64,
     pub errors: u64,
+    /// How many of `served` were simulate-verb lines.
+    pub simulated: u64,
 }
 
-/// One in-flight line: either a queued prediction or an already-decided
-/// (parse/submit) error — delivered in arrival order so output order
-/// matches input order exactly.
+/// One in-flight line: a queued prediction, an already-decided
+/// (parse/submit) error, or a simulate verb awaiting its in-order turn —
+/// delivered in arrival order so output order matches input order exactly.
 enum Slot {
     Queued(Option<String>, Pending),
     Ready(Option<String>, Result<PredictResponse, PredictError>),
+    Simulate(Option<String>, Result<ScenarioSpec, ScenarioError>),
 }
 
 /// Run the serve loop until the reader is exhausted. Every input line
 /// produces exactly one output line (blank lines are skipped). The output
 /// is flushed whenever no further response is immediately ready, so an
 /// interactive peer never waits on a stuck buffer or a half-full window.
-pub fn serve_lines<R, W>(
+pub fn serve_lines<R, W, F>(
     client: &Client,
+    simulator: F,
     reader: R,
     writer: &mut W,
     max_inflight: usize,
@@ -41,6 +60,7 @@ pub fn serve_lines<R, W>(
 where
     R: BufRead + Send,
     W: Write,
+    F: FnOnce() -> Simulator,
 {
     let mut stats = StdioStats::default();
     let (slot_tx, slot_rx) = sync_channel::<Slot>(max_inflight.max(1));
@@ -51,13 +71,26 @@ where
                 if line.trim().is_empty() {
                     continue;
                 }
-                let (id, parsed) = wire::parse_request(&line);
-                let slot = match parsed {
-                    Ok(req) => match client.submit(req) {
-                        Ok(pending) => Slot::Queued(id, pending),
-                        Err(e) => Slot::Ready(id, Err(e)),
-                    },
-                    Err(e) => Slot::Ready(id, Err(e)),
+                // one JSON decode per line; the object picks the verb
+                let slot = match parse_json(&line) {
+                    Err(e) => Slot::Ready(
+                        None,
+                        Err(PredictError::UnsupportedKernel(format!("malformed JSON: {e}"))),
+                    ),
+                    Ok(j) if scenario::wire::is_simulate_json(&j) => {
+                        let (id, spec) = scenario::wire::parse_simulate_json(&j);
+                        Slot::Simulate(id, spec)
+                    }
+                    Ok(j) => {
+                        let (id, parsed) = wire::parse_request_json(&j);
+                        match parsed {
+                            Ok(req) => match client.submit(req) {
+                                Ok(pending) => Slot::Queued(id, pending),
+                                Err(e) => Slot::Ready(id, Err(e)),
+                            },
+                            Err(e) => Slot::Ready(id, Err(e)),
+                        }
+                    }
                 };
                 // the writer side hung up (output error): stop reading
                 if slot_tx.send(slot).is_err() {
@@ -70,7 +103,7 @@ where
         // drain_slots takes the receiver by value: on a writer I/O error
         // the receiver is dropped before we join, which unblocks the
         // reader thread's send — the scope join cannot deadlock
-        let drain_res = drain_slots(slot_rx, writer, &mut stats);
+        let drain_res = drain_slots(slot_rx, simulator, writer, &mut stats);
         let read_res = reader_thread.join().expect("stdio reader thread");
         drain_res?;
         read_res
@@ -80,11 +113,16 @@ where
 
 /// Writer side, on the caller's thread: answer slots in order; flush
 /// before blocking so a waiting peer sees everything answered so far.
-fn drain_slots<W: Write>(
+/// Simulate slots run here — the `Simulator` never crosses a thread, and
+/// is only built (once) when the first simulate line arrives.
+fn drain_slots<W: Write, F: FnOnce() -> Simulator>(
     slot_rx: std::sync::mpsc::Receiver<Slot>,
+    simulator: F,
     writer: &mut W,
     stats: &mut StdioStats,
 ) -> std::io::Result<()> {
+    let mut factory = Some(simulator);
+    let mut sim: Option<Simulator> = None;
     loop {
         let slot = match slot_rx.try_recv() {
             Ok(slot) => slot,
@@ -100,6 +138,18 @@ fn drain_slots<W: Write>(
         let (id, res) = match slot {
             Slot::Queued(id, pending) => (id, pending.wait()),
             Slot::Ready(id, res) => (id, res),
+            Slot::Simulate(id, spec) => {
+                let sim = sim
+                    .get_or_insert_with(|| (factory.take().expect("simulator built once"))());
+                let res = spec.and_then(|s| sim.simulate(&s));
+                stats.served += 1;
+                stats.simulated += 1;
+                if res.is_err() {
+                    stats.errors += 1;
+                }
+                writeln!(writer, "{}", scenario::wire::encode_report(id.as_deref(), &res))?;
+                continue;
+            }
         };
         stats.served += 1;
         if res.is_err() {
@@ -134,9 +184,12 @@ mod tests {
             "\n",
         );
         let mut out = Vec::new();
-        let stats = serve_lines(&svc.client(), input.as_bytes(), &mut out, 8).unwrap();
+        let stats =
+            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8)
+                .unwrap();
         assert_eq!(stats.served, 4);
         assert_eq!(stats.errors, 2);
+        assert_eq!(stats.simulated, 0);
         let text = String::from_utf8(out).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 4);
@@ -146,6 +199,40 @@ mod tests {
         assert!(lines[1].contains(r#""id":"b""#) && lines[1].contains(r#""code":"unknown_gpu""#));
         assert!(lines[2].contains(r#""ok":false"#));
         assert!(lines[3].contains(r#""id":"d""#) && lines[3].contains(r#""tag":"z""#));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn simulate_and_predict_verbs_interleave_in_order() {
+        let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+        let input = concat!(
+            r#"{"id":"s1","op":"simulate","scenario":{"model":"llama3.1-8b","gpu":"A100","workload":{"requests":[[64,8],[96,4]]},"seed":3}}"#,
+            "\n",
+            r#"{"id":"p1","gpu":"A100","kernel":{"type":"rmsnorm","seq":128,"dim":2048}}"#,
+            "\n",
+            r#"{"id":"s2","op":"simulate","scenario":{"model":"GPT-5","gpu":"A100"}}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        let stats =
+            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8)
+                .unwrap();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.simulated, 2);
+        assert_eq!(stats.errors, 1);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains(r#""id":"s1""#) && lines[0].contains(r#""report":{"#));
+        assert!(lines[0].contains(r#""ttft_sec""#) && lines[0].contains(r#""tpot_sec""#));
+        assert!(lines[1].contains(r#""id":"p1""#) && lines[1].contains(r#""ok":true"#));
+        assert!(lines[2].contains(r#""code":"unknown_model""#));
+        // the report line parses back typed
+        let (id, rep) = scenario::wire::parse_report(lines[0]).unwrap();
+        assert_eq!(id.as_deref(), Some("s1"));
+        let rep = rep.unwrap();
+        assert_eq!(rep.phases.len(), 2);
+        assert!(rep.totals.degraded_kernels > 0, "degraded provenance travels the wire");
         svc.shutdown();
     }
 
@@ -200,7 +287,7 @@ mod tests {
         let server = std::thread::spawn(move || {
             let reader =
                 std::io::BufReader::new(ChanReader { rx: line_rx, buf: Vec::new(), pos: 0 });
-            serve_lines(&client, reader, &mut writer, 256)
+            serve_lines(&client, Simulator::degraded, reader, &mut writer, 256)
         });
         for i in 0..3usize {
             line_tx

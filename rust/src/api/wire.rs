@@ -23,6 +23,13 @@
 //! Malformed lines map into the closed taxonomy as
 //! [`PredictError::UnsupportedKernel`] (the malformed-request bucket); GPU
 //! name lookups that fail map to [`PredictError::UnknownGpu`].
+//!
+//! The same JSONL surface also speaks the **`simulate` verb**: a line with
+//! `"op":"simulate"` (or a `"scenario"` object) carries a
+//! [`crate::scenario::ScenarioSpec`] and answers with a
+//! [`crate::scenario::ScenarioReport`] line — the codec lives in
+//! [`crate::scenario::wire`], and [`super::stdio`] dispatches between the
+//! two verbs per line.
 
 use super::{
     Breakdown, Flavor, PipeStat, PredictError, PredictRequest, PredictResponse, Provenance,
@@ -36,8 +43,9 @@ fn unsupported(why: impl Into<String>) -> PredictError {
     PredictError::UnsupportedKernel(why.into())
 }
 
-/// JSON string escape (the inverse of the parser's unescape).
-fn esc(s: &str) -> String {
+/// JSON string escape (the inverse of the parser's unescape). Shared with
+/// the scenario wire codec ([`crate::scenario::wire`]).
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -262,12 +270,24 @@ pub fn parse_request(line: &str) -> (Option<String>, Result<PredictRequest, Pred
         Ok(j) => j,
         Err(e) => return (None, Err(unsupported(format!("malformed JSON: {e}")))),
     };
-    let id = match j.get("id") {
+    parse_request_json(&j)
+}
+
+/// Extract the correlation id (string or number) from a decoded line —
+/// shared by both wire verbs so id handling cannot diverge.
+pub(crate) fn id_of(j: &Json) -> Option<String> {
+    match j.get("id") {
         Some(Json::Str(s)) => Some(s.clone()),
         Some(Json::Num(n)) => Some(format!("{n}")),
         _ => None,
-    };
-    (id, parse_request_fields(&j))
+    }
+}
+
+/// Parse an already-decoded request object — the single-parse dispatch
+/// path of the stdio serve loop (which decodes each line once to pick a
+/// verb, then hands the `Json` to the winning codec).
+pub(crate) fn parse_request_json(j: &Json) -> (Option<String>, Result<PredictRequest, PredictError>) {
+    (id_of(j), parse_request_fields(j))
 }
 
 fn parse_request_fields(j: &Json) -> Result<PredictRequest, PredictError> {
@@ -392,11 +412,7 @@ pub fn parse_response(
     line: &str,
 ) -> Result<(Option<String>, Result<PredictResponse, PredictError>)> {
     let j = parse(line)?;
-    let id = match j.get("id") {
-        Some(Json::Str(s)) => Some(s.clone()),
-        Some(Json::Num(n)) => Some(format!("{n}")),
-        _ => None,
-    };
+    let id = id_of(&j);
     let ok = j.get("ok").and_then(|v| v.as_bool()).ok_or_else(|| anyhow!("response needs \"ok\""))?;
     if !ok {
         let err = j.get("error").ok_or_else(|| anyhow!("error response needs \"error\""))?;

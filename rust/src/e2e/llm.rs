@@ -1,8 +1,13 @@
-//! LLM architecture configurations for the end-to-end evaluation (paper
-//! §VI-D): Qwen2.5-14B, Qwen2.5-32B (Table I), Qwen3-32B, Llama3.1-70B.
+//! LLM architecture registry for the end-to-end evaluation (paper §VI-D).
 //! Values from the public HuggingFace model configs.
+//!
+//! Models are looked up **by name** through [`llm_by_name`] (mirroring
+//! [`crate::hw::gpu_by_name`]); [`registry`] enumerates every known config.
+//! There are no per-model constructors — adding a model is one new
+//! [`LlmConfig`] row, immediately visible to the Scenario API, the CLI and
+//! the experiments.
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LlmConfig {
     pub name: &'static str,
     pub hidden: u32,
@@ -24,7 +29,9 @@ impl LlmConfig {
     }
 }
 
-pub fn qwen2_5_14b() -> LlmConfig {
+/// The model database: the paper's four evaluation models (Qwen2.5-14B,
+/// Qwen2.5-32B of Table I, Qwen3-32B, Llama3.1-70B) plus Llama3.1-8B.
+const REGISTRY: [LlmConfig; 5] = [
     LlmConfig {
         name: "Qwen2.5-14B",
         hidden: 5120,
@@ -32,12 +39,9 @@ pub fn qwen2_5_14b() -> LlmConfig {
         heads: 40,
         kv_heads: 8,
         head_dim: 128,
-        intermediate: 13824,
+        intermediate: 13_824,
         vocab: 152_064,
-    }
-}
-
-pub fn qwen2_5_32b() -> LlmConfig {
+    },
     LlmConfig {
         name: "Qwen2.5-32B",
         hidden: 5120,
@@ -47,10 +51,7 @@ pub fn qwen2_5_32b() -> LlmConfig {
         head_dim: 128,
         intermediate: 27_648,
         vocab: 152_064,
-    }
-}
-
-pub fn qwen3_32b() -> LlmConfig {
+    },
     LlmConfig {
         name: "Qwen3-32B",
         hidden: 5120,
@@ -60,10 +61,7 @@ pub fn qwen3_32b() -> LlmConfig {
         head_dim: 128,
         intermediate: 25_600,
         vocab: 151_936,
-    }
-}
-
-pub fn llama3_1_70b() -> LlmConfig {
+    },
     LlmConfig {
         name: "Llama3.1-70B",
         hidden: 8192,
@@ -73,17 +71,30 @@ pub fn llama3_1_70b() -> LlmConfig {
         head_dim: 128,
         intermediate: 28_672,
         vocab: 128_256,
-    }
+    },
+    LlmConfig {
+        name: "Llama3.1-8B",
+        hidden: 4096,
+        layers: 32,
+        heads: 32,
+        kv_heads: 8,
+        head_dim: 128,
+        intermediate: 14_336,
+        vocab: 128_256,
+    },
+];
+
+/// Every registered model config, in registry order.
+pub fn registry() -> &'static [LlmConfig] {
+    &REGISTRY
 }
 
-pub fn by_name(name: &str) -> Option<LlmConfig> {
-    let n = name.to_lowercase().replace(['-', '.', '_'], "");
-    for cfg in [qwen2_5_14b(), qwen2_5_32b(), qwen3_32b(), llama3_1_70b()] {
-        if cfg.name.to_lowercase().replace(['-', '.', '_'], "") == n {
-            return Some(cfg);
-        }
-    }
-    None
+/// Case/punctuation-insensitive model lookup ("qwen2.5-14b" ==
+/// "Qwen2.5-14B" == "qwen2_5_14b").
+pub fn llm_by_name(name: &str) -> Option<LlmConfig> {
+    let norm = |s: &str| s.to_lowercase().replace(['-', '.', '_'], "");
+    let n = norm(name);
+    REGISTRY.iter().find(|cfg| norm(cfg.name) == n).cloned()
 }
 
 #[cfg(test)]
@@ -92,23 +103,28 @@ mod tests {
 
     #[test]
     fn parameter_counts_roughly_match_names() {
-        assert!((qwen2_5_14b().params_approx() / 1e9 - 14.0).abs() < 3.0);
-        assert!((qwen3_32b().params_approx() / 1e9 - 32.0).abs() < 6.0);
-        assert!((llama3_1_70b().params_approx() / 1e9 - 70.0).abs() < 10.0);
+        let billions = |name: &str| llm_by_name(name).unwrap().params_approx() / 1e9;
+        assert!((billions("Qwen2.5-14B") - 14.0).abs() < 3.0);
+        assert!((billions("Qwen3-32B") - 32.0).abs() < 6.0);
+        assert!((billions("Llama3.1-70B") - 70.0).abs() < 10.0);
+        assert!((billions("Llama3.1-8B") - 8.0).abs() < 2.0);
     }
 
     #[test]
     fn lookup_by_name() {
-        assert!(by_name("qwen2.5-14b").is_some());
-        assert!(by_name("Llama3.1-70B").is_some());
-        assert!(by_name("gpt-x").is_none());
+        assert!(llm_by_name("qwen2.5-14b").is_some());
+        assert!(llm_by_name("Llama3.1-70B").is_some());
+        assert!(llm_by_name("llama3_1_8b").is_some());
+        assert!(llm_by_name("gpt-x").is_none());
     }
 
     #[test]
-    fn gqa_everywhere() {
-        for cfg in [qwen2_5_14b(), qwen2_5_32b(), qwen3_32b(), llama3_1_70b()] {
-            assert!(cfg.heads % cfg.kv_heads == 0);
-            assert!(cfg.heads / cfg.kv_heads >= 5 || cfg.kv_heads == 8);
+    fn registry_is_open_and_consistent() {
+        assert!(registry().len() >= 5, "the registry must stay open to new configs");
+        for cfg in registry() {
+            assert_eq!(llm_by_name(cfg.name).as_ref(), Some(cfg), "{}", cfg.name);
+            assert!(cfg.heads % cfg.kv_heads == 0, "{}: GQA group must divide", cfg.name);
+            assert!(cfg.layers >= 2 && cfg.hidden >= 1024, "{}", cfg.name);
         }
     }
 }

@@ -1,6 +1,11 @@
-//! End-to-end LLM inference prediction (paper §V-D, §VI-D): model configs,
-//! workload sampling, trace generation, communication modeling, and the
-//! multi-method trace evaluator.
+//! End-to-end LLM inference primitives (paper §V-D, §VI-D): the model
+//! registry, workload sampling, trace generation, communication modeling,
+//! and the multi-method trace evaluator.
+//!
+//! These are the building blocks the declarative **Scenario API**
+//! ([`crate::scenario`]) compiles down to; callers describe a serving
+//! scenario as a [`crate::scenario::ScenarioSpec`] instead of hand-building
+//! traces from these modules.
 
 pub mod comm;
 pub mod llm;

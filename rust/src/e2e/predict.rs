@@ -11,6 +11,11 @@
 //! answers carry provenance — [`MethodTotals::degraded_kernels`] counts
 //! SynPerf kernel items that fell back to the roofline (untrained
 //! category), so a degraded E2E number is distinguishable from a real one.
+//!
+//! This is the reference evaluator the declarative Scenario API
+//! ([`crate::scenario`]) is pinned against: `scenario::evaluate` walks the
+//! same op stream with the same per-item seeds and must produce
+//! bit-identical [`MethodTotals`] (see `tests/proptests.rs`).
 
 use super::comm::{allreduce_oracle, sendrecv_oracle, CommModel};
 use super::trace::{Op, TraceItem};
@@ -23,15 +28,56 @@ use crate::mlp::Predictor;
 use anyhow::Result;
 use std::collections::HashMap;
 
-/// Per-kernel-category trained models (one MLP per category, §IV-D).
+/// Per-kernel-category trained models (one MLP per category, §IV-D). The
+/// default (empty maps) is the documented degraded mode: SynPerf/Neusight
+/// answer the theory roof, Linear falls back to the naive roofline.
+#[derive(Default)]
 pub struct ModelSet {
     pub synperf: HashMap<KernelKind, Predictor>,
     pub neusight: HashMap<KernelKind, Predictor>,
     pub linear: HashMap<KernelKind, LinearModel>,
 }
 
+/// The closed set of evaluated methods: ground truth plus the five
+/// predictors every E2E table compares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Actual,
+    SynPerf,
+    Roofline,
+    Linear,
+    Habitat,
+    Neusight,
+}
+
+impl Method {
+    pub const ALL: [Method; 6] = [
+        Method::Actual,
+        Method::SynPerf,
+        Method::Roofline,
+        Method::Linear,
+        Method::Habitat,
+        Method::Neusight,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Actual => "actual",
+            Method::SynPerf => "synperf",
+            Method::Roofline => "roofline",
+            Method::Linear => "linear",
+            Method::Habitat => "habitat",
+            Method::Neusight => "neusight",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        Self::ALL.into_iter().find(|m| m.name() == s)
+    }
+}
+
 /// E2E latency totals per method, seconds.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct MethodTotals {
     pub actual: f64,
     pub synperf: f64,
@@ -45,9 +91,35 @@ pub struct MethodTotals {
     pub degraded_kernels: usize,
 }
 
-/// Host-side launch gap per kernel in the measured system (framework
-/// overhead; part of ground truth, not modeled by any predictor — §VI-D's
-/// "assume sequential kernel execution").
+impl MethodTotals {
+    pub fn get(&self, m: Method) -> f64 {
+        match m {
+            Method::Actual => self.actual,
+            Method::SynPerf => self.synperf,
+            Method::Roofline => self.roofline,
+            Method::Linear => self.linear,
+            Method::Habitat => self.habitat,
+            Method::Neusight => self.neusight,
+        }
+    }
+
+    pub fn set(&mut self, m: Method, v: f64) {
+        match m {
+            Method::Actual => self.actual = v,
+            Method::SynPerf => self.synperf = v,
+            Method::Roofline => self.roofline = v,
+            Method::Linear => self.linear = v,
+            Method::Habitat => self.habitat = v,
+            Method::Neusight => self.neusight = v,
+        }
+    }
+}
+
+/// Default host-side launch gap per kernel in the measured system
+/// (framework overhead; part of ground truth, not modeled by any predictor
+/// — §VI-D's "assume sequential kernel execution"). Scenario callers
+/// override it per spec ([`crate::scenario::ScenarioSpec::host_gap_sec`]);
+/// `eval_trace` takes it as a parameter so ground truth and report agree.
 pub const HOST_GAP_SEC: f64 = 0.8e-6;
 
 pub fn eval_trace(
@@ -57,6 +129,7 @@ pub fn eval_trace(
     models: &ModelSet,
     comm: &CommModel,
     seed: u64,
+    host_gap_sec: f64,
 ) -> Result<MethodTotals> {
     let engine = PredictionEngine::global();
     let mut t = MethodTotals::default();
@@ -69,7 +142,7 @@ pub fn eval_trace(
         match &item.op {
             Op::Kernel(cfg) => {
                 let s = engine.make_sample(cfg, gpu, op_seed);
-                t.actual += item.count * (s.latency_sec + HOST_GAP_SEC);
+                t.actual += item.count * (s.latency_sec + host_gap_sec);
                 t.roofline += item.count * s.roofline_sec;
                 t.habitat += item.count * s.habitat_sec;
                 if let Some(lm) = models.linear.get(&s.kind) {
@@ -123,35 +196,4 @@ pub fn eval_trace(
         }
     }
     Ok(t)
-}
-
-/// Runtime breakdown of a trace by kernel category (Table I).
-pub fn breakdown(trace: &[TraceItem], gpu: &GpuSpec, tp: u32, seed: u64) -> Vec<(String, f64)> {
-    let engine = PredictionEngine::global();
-    let mut buckets: HashMap<&'static str, f64> = HashMap::new();
-    for (i, item) in trace.iter().enumerate() {
-        let op_seed = seed.wrapping_add(i as u64 * 0x9E37);
-        let (name, secs): (&'static str, f64) = match &item.op {
-            Op::Kernel(cfg) => {
-                let s = engine.make_sample(cfg, gpu, op_seed);
-                let bucket = match cfg.kind() {
-                    KernelKind::Gemm | KernelKind::ScaledMm => "GEMM",
-                    KernelKind::Attention => "Attention",
-                    KernelKind::RmsNorm => "RMSNorm",
-                    KernelKind::SiluMul => "SiLU&Mul",
-                    KernelKind::FusedMoe => "FusedMoE",
-                };
-                *buckets.entry("Other").or_default() += item.count * HOST_GAP_SEC;
-                (bucket, s.latency_sec)
-            }
-            Op::AllReduce { bytes } => ("All-Reduce", allreduce_oracle(*bytes, tp, gpu, op_seed)),
-            Op::SendRecv { bytes } => ("Other", sendrecv_oracle(*bytes, gpu, op_seed)),
-        };
-        *buckets.entry(name).or_default() += item.count * secs;
-    }
-    let total: f64 = buckets.values().sum();
-    let mut rows: Vec<(String, f64)> =
-        buckets.into_iter().map(|(k, v)| (k.to_string(), 100.0 * v / total)).collect();
-    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-    rows
 }

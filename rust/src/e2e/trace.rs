@@ -195,9 +195,13 @@ mod tests {
         ]
     }
 
+    fn model(name: &str) -> crate::e2e::llm::LlmConfig {
+        llm::llm_by_name(name).unwrap()
+    }
+
     #[test]
     fn trace_has_all_categories() {
-        let t = build_trace(&llm::qwen2_5_14b(), 4, 1, &reqs());
+        let t = build_trace(&model("Qwen2.5-14B"), 4, 1, &reqs());
         let mut has_gemm = false;
         let mut has_attn = false;
         let mut has_norm = false;
@@ -218,20 +222,20 @@ mod tests {
 
     #[test]
     fn tp1_has_no_collectives() {
-        let t = build_trace(&llm::qwen2_5_14b(), 1, 1, &reqs());
+        let t = build_trace(&model("Qwen2.5-14B"), 1, 1, &reqs());
         assert!(!t.iter().any(|i| matches!(i.op, Op::AllReduce { .. } | Op::SendRecv { .. })));
     }
 
     #[test]
     fn pp_adds_sendrecv() {
-        let t = build_trace(&llm::llama3_1_70b(), 4, 2, &reqs());
+        let t = build_trace(&model("Llama3.1-70B"), 4, 2, &reqs());
         assert!(t.iter().any(|i| matches!(i.op, Op::SendRecv { .. })));
     }
 
     #[test]
     fn tp_shrinks_gemm_width() {
-        let t1 = build_trace(&llm::qwen3_32b(), 1, 1, &reqs());
-        let t4 = build_trace(&llm::qwen3_32b(), 4, 1, &reqs());
+        let t1 = build_trace(&model("Qwen3-32B"), 1, 1, &reqs());
+        let t4 = build_trace(&model("Qwen3-32B"), 4, 1, &reqs());
         let max_n = |t: &[TraceItem]| {
             t.iter()
                 .filter_map(|i| match &i.op {
@@ -246,7 +250,7 @@ mod tests {
 
     #[test]
     fn decode_kv_grows_with_checkpoints() {
-        let t = build_trace(&llm::qwen2_5_14b(), 1, 1, &reqs());
+        let t = build_trace(&model("Qwen2.5-14B"), 1, 1, &reqs());
         let kvs: Vec<u32> = t
             .iter()
             .filter_map(|i| match &i.op {
@@ -262,7 +266,7 @@ mod tests {
 
     #[test]
     fn launch_count_positive() {
-        let t = build_trace(&llm::qwen2_5_14b(), 2, 1, &reqs());
+        let t = build_trace(&model("Qwen2.5-14B"), 2, 1, &reqs());
         assert!(launch_count(&t) > 100.0);
     }
 }

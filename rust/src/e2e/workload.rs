@@ -5,7 +5,7 @@
 
 use crate::util::rng::Rng;
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Request {
     pub input_len: u32,
     pub output_len: u32,
@@ -22,6 +22,14 @@ impl WorkloadKind {
         match self {
             WorkloadKind::Arxiv => "arxiv",
             WorkloadKind::Splitwise => "splitwise",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<WorkloadKind> {
+        match s {
+            "arxiv" => Some(WorkloadKind::Arxiv),
+            "splitwise" => Some(WorkloadKind::Splitwise),
+            _ => None,
         }
     }
 

@@ -1,17 +1,17 @@
 //! Fig. 6: end-to-end single-GPU (TP=1) inference prediction accuracy for
-//! Qwen2.5-14B across all 11 GPUs, five methods.
+//! Qwen2.5-14B across all 11 GPUs, five methods — one Scenario-API
+//! simulation per (GPU, batch) point.
 
 use super::Lab;
-use crate::e2e::{llm, predict, trace, workload};
+use crate::e2e::workload::WorkloadKind;
 use crate::hw::all_gpus;
-use crate::util::rng::Rng;
+use crate::scenario::{ScenarioSpec, WorkloadSpec};
 use crate::util::stats::{mape, mean};
 use crate::util::table::{f, Table};
 use anyhow::Result;
 
 pub fn run(lab: &Lab) -> Result<String> {
-    let models = lab.model_set()?;
-    let model = llm::qwen2_5_14b();
+    let sim = lab.simulator()?;
     let n_batches = if lab.scale == super::Scale::Fast { 2 } else { 4 };
 
     let mut t = Table::new(
@@ -25,17 +25,15 @@ pub fn run(lab: &Lab) -> Result<String> {
     let mut out = String::new();
 
     for gpu in all_gpus() {
-        let comm = lab.comm(&gpu);
         let mut acc: [Vec<f64>; 5] = Default::default();
         let mut actuals = Vec::new();
-        let mut rng = Rng::new(lab.seed ^ gpu.num_sms as u64);
         for b in 0..n_batches {
-            let kind = if b % 2 == 0 { workload::WorkloadKind::Arxiv } else { workload::WorkloadKind::Splitwise };
+            let kind = if b % 2 == 0 { WorkloadKind::Arxiv } else { WorkloadKind::Splitwise };
             let bs = [8usize, 16][b % 2];
-            let reqs = workload::sample_batch(kind, bs, &mut rng);
-            let tr = trace::build_trace(&model, 1, 1, &reqs);
-            let totals =
-                predict::eval_trace(&tr, &gpu, 1, &models, &comm, lab.seed + b as u64 * 977)?;
+            let spec = ScenarioSpec::new("Qwen2.5-14B", gpu.name)
+                .workload(WorkloadSpec::Sampled { kind, batch: bs })
+                .seed(lab.seed ^ (gpu.num_sms as u64) ^ (b as u64 * 977));
+            let totals = sim.simulate(&spec)?.totals;
             actuals.push(totals.actual);
             acc[0].push(totals.roofline);
             acc[1].push(totals.linear);

@@ -19,9 +19,8 @@ pub mod table9;
 
 use crate::baselines::linear::LinearModel;
 use crate::dataset::{self, Sample};
-use crate::e2e::comm::CommModel;
 use crate::e2e::predict::ModelSet;
-use crate::hw::{all_gpus, GpuSpec};
+use crate::hw::all_gpus;
 use crate::kernels::KernelKind;
 use crate::mlp::{train_model, Predictor, TrainConfig};
 use crate::runtime::Engine;
@@ -73,7 +72,10 @@ pub struct Lab {
     pub root: PathBuf,
     pub seed: u64,
     datasets: std::cell::RefCell<HashMap<KernelKind, std::rc::Rc<Vec<Sample>>>>,
-    comm_models: std::cell::RefCell<HashMap<String, std::rc::Rc<CommModel>>>,
+    /// Built once, shared across experiments — the Simulator carries the
+    /// per-GPU RF comm-model cache, so repeated `simulator()` callers must
+    /// not each retrain it.
+    simulator: std::cell::RefCell<Option<std::rc::Rc<crate::scenario::Simulator>>>,
 }
 
 /// Which feature view / loss a cached model was trained with.
@@ -137,7 +139,7 @@ impl Lab {
             root,
             seed: 0x5EED_CAFE,
             datasets: Default::default(),
-            comm_models: Default::default(),
+            simulator: Default::default(),
         })
     }
 
@@ -221,6 +223,22 @@ impl Lab {
         LinearModel::fit(&seen)
     }
 
+    /// Scenario-API simulator backed by this lab's trained model set and
+    /// comm seed — the entry point E2E experiments and the CLI use.
+    /// Cached: every caller shares one instance (and its per-GPU comm
+    /// models).
+    pub fn simulator(&self) -> Result<std::rc::Rc<crate::scenario::Simulator>> {
+        if let Some(sim) = self.simulator.borrow().as_ref() {
+            return Ok(sim.clone());
+        }
+        let sim = std::rc::Rc::new(crate::scenario::Simulator::with_comm_seed(
+            self.model_set()?,
+            self.seed,
+        ));
+        *self.simulator.borrow_mut() = Some(sim.clone());
+        Ok(sim)
+    }
+
     /// Full model set for E2E evaluation over the trace kernel categories.
     pub fn model_set(&self) -> Result<ModelSet> {
         let kinds = [
@@ -258,16 +276,6 @@ impl Lab {
             }
         }
         b
-    }
-
-    /// Per-GPU communication model (RF over the profiled database), cached.
-    pub fn comm(&self, gpu: &GpuSpec) -> std::rc::Rc<CommModel> {
-        if let Some(m) = self.comm_models.borrow().get(gpu.name) {
-            return m.clone();
-        }
-        let m = std::rc::Rc::new(CommModel::train(gpu, self.seed));
-        self.comm_models.borrow_mut().insert(gpu.name.to_string(), m.clone());
-        m
     }
 
     /// Append a rendered experiment block to runs/results.txt.

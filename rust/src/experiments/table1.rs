@@ -1,34 +1,47 @@
 //! Table I: runtime breakdown of Qwen2.5-32B inference on a 4xA100 cluster
-//! with TP=4 (batch 8, sequence length 8192), per phase.
+//! with TP=4 (batch 8, sequence length 8192), per phase — a Scenario-API
+//! simulation read through the typed per-phase [`OpClass`] breakdown.
 
 use super::Lab;
-use crate::e2e::{llm, predict, trace, workload::Request};
-use crate::hw::gpu_by_name;
+use crate::e2e::predict::ModelSet;
+use crate::e2e::workload::Request;
+use crate::scenario::{OpClass, Phase, ScenarioSpec, Simulator, WorkloadSpec};
 use crate::util::table::{pct, Table};
 use anyhow::Result;
 
 pub fn run(lab: &Lab) -> Result<String> {
-    let gpu = gpu_by_name("A100").unwrap();
-    let model = llm::qwen2_5_32b();
     // batch 8, sequence 8192: 7k prompt + 1k generated
     let reqs: Vec<Request> =
         (0..8).map(|_| Request { input_len: 7168, output_len: 1024 }).collect();
-    let (prefill, decode) = trace::build_phase_traces(&model, 4, 1, &reqs);
+    let spec = ScenarioSpec::new("Qwen2.5-32B", "A100")
+        .tp(4)
+        .workload(WorkloadSpec::Explicit(reqs))
+        .seed(lab.seed);
+    // the breakdown is computed purely from oracle ground truth, so no
+    // trained model set is needed — a degraded simulator is bit-identical
+    // here and avoids lab.simulator()'s dataset/MLP-training work. The
+    // throwaway comm-RF fit this pays is sub-second; reusing the lab
+    // simulator to save it would cost the full model set.
+    let report = Simulator::with_comm_seed(ModelSet::default(), lab.seed).simulate(&spec)?;
 
-    let categories = ["GEMM", "Attention", "RMSNorm", "SiLU&Mul", "All-Reduce", "Other"];
     let mut t = Table::new(
         "Table I — Qwen2.5-32B on 4xA100 (TP=4): runtime breakdown",
         &["Phase", "GEMM", "Attention", "RMSNorm", "SiLU&Mul", "All-Reduce", "Other"],
     );
-    for (phase, tr) in [("Prefill", &prefill), ("Decode", &decode)] {
-        let rows = predict::breakdown(tr, &gpu, 4, lab.seed);
-        let get = |name: &str| {
-            rows.iter().find(|(k, _)| k == name).map(|(_, v)| *v).unwrap_or(0.0)
+    for ph in &report.phases {
+        let label = match ph.phase {
+            Phase::Prefill => "Prefill",
+            Phase::Decode => "Decode",
         };
-        let mut cells = vec![phase.to_string()];
-        for c in categories {
-            cells.push(pct(get(c)));
+        let mut cells = vec![label.to_string()];
+        for class in [OpClass::Gemm, OpClass::Attention, OpClass::RmsNorm, OpClass::SiluMul, OpClass::AllReduce]
+        {
+            cells.push(pct(ph.breakdown.share_pct(class)));
         }
+        // "Other" = host launch gaps + PP send/recv (+ any MoE share)
+        cells.push(pct(ph.breakdown.share_pct(OpClass::HostGap)
+            + ph.breakdown.share_pct(OpClass::SendRecv)
+            + ph.breakdown.share_pct(OpClass::FusedMoe)));
         t.row(cells);
     }
     let out = t.render();

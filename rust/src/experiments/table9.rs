@@ -1,11 +1,11 @@
 //! Table IX: E2E prediction MAPE (%) for multi-GPU inference — two serving
 //! frameworks, three models, TP=2/4/8 and TP=4&PP=2, arxiv and splitwise
-//! workloads, across the paper's 20 configurations.
+//! workloads, across the paper's 20 configurations — each point one
+//! declarative Scenario-API simulation.
 
 use super::Lab;
-use crate::e2e::{llm, predict, trace, workload};
-use crate::hw::gpu_by_name;
-use crate::util::rng::Rng;
+use crate::e2e::workload::WorkloadKind;
+use crate::scenario::{ScenarioSpec, WorkloadSpec};
 use crate::util::stats::{mape, mean};
 use crate::util::table::{f, Table};
 use anyhow::Result;
@@ -15,13 +15,13 @@ struct Config {
     model: &'static str,
     tp: u32,
     pp: u32,
-    dataset: workload::WorkloadKind,
+    dataset: WorkloadKind,
     batch: usize,
     hardware: &'static [&'static str],
 }
 
 pub fn run(lab: &Lab) -> Result<String> {
-    use workload::WorkloadKind::{Arxiv, Splitwise};
+    use WorkloadKind::{Arxiv, Splitwise};
     let configs = [
         Config { framework: "SGLang", model: "Qwen3-32B", tp: 2, pp: 1, dataset: Arxiv, batch: 12, hardware: &["A100", "RTX 6000 Ada", "H100", "RTX PRO 6000 S"] },
         Config { framework: "SGLang", model: "Qwen3-32B", tp: 2, pp: 1, dataset: Splitwise, batch: 48, hardware: &["A100", "RTX 6000 Ada", "H100", "RTX PRO 6000 S"] },
@@ -33,7 +33,7 @@ pub fn run(lab: &Lab) -> Result<String> {
         Config { framework: "vLLM", model: "Llama3.1-70B", tp: 4, pp: 2, dataset: Splitwise, batch: 64, hardware: &["H20", "H800"] },
     ];
 
-    let models = lab.model_set()?;
+    let sim = lab.simulator()?;
     let n_batches = if lab.scale == super::Scale::Fast { 2 } else { 3 };
     let mut t = Table::new(
         "Table IX — E2E MAPE (%), multi-GPU inference",
@@ -44,24 +44,16 @@ pub fn run(lab: &Lab) -> Result<String> {
     let mut tested = 0usize;
 
     for c in &configs {
-        let llm_cfg = llm::by_name(c.model).unwrap();
         for hw in c.hardware {
-            let gpu = gpu_by_name(hw).unwrap();
-            let comm = lab.comm(&gpu);
-            let mut rng = Rng::new(lab.seed ^ (c.tp as u64) << 4 ^ gpu.num_sms as u64);
             let mut actuals = Vec::new();
             let mut acc: [Vec<f64>; 5] = Default::default();
             for b in 0..n_batches {
-                let reqs = workload::sample_batch(c.dataset, c.batch, &mut rng);
-                let tr = trace::build_trace(&llm_cfg, c.tp, c.pp, &reqs);
-                let totals = predict::eval_trace(
-                    &tr,
-                    &gpu,
-                    c.tp,
-                    &models,
-                    &comm,
-                    lab.seed + (tested * 100 + b) as u64,
-                )?;
+                let spec = ScenarioSpec::new(c.model, *hw)
+                    .tp(c.tp)
+                    .pp(c.pp)
+                    .workload(WorkloadSpec::Sampled { kind: c.dataset, batch: c.batch })
+                    .seed(lab.seed + (tested * 100 + b) as u64);
+                let totals = sim.simulate(&spec)?.totals;
                 actuals.push(totals.actual);
                 acc[0].push(totals.roofline);
                 acc[1].push(totals.linear);

@@ -19,6 +19,14 @@
 //! `PredictRequest`/`PredictResponse` with provenance (MLP vs degraded
 //! roofline, cache hit), a closed `PredictError` taxonomy, and the same
 //! schema as a JSONL wire surface (`synperf serve --stdio`).
+//!
+//! End-to-end serving prediction is declarative (**Scenario API v1**,
+//! [`scenario`]): a `ScenarioSpec` (model by registry name, `{tp, pp}`
+//! parallelism, workload, phase schedule, GPU, seed, host gap) compiles to
+//! phase-tagged op streams and evaluates into a typed `ScenarioReport` —
+//! per-phase TTFT/TPOT/tokens-per-second, per-method totals, a typed
+//! `OpClass` breakdown, and degraded-kernel provenance — also exposed as
+//! the `synperf simulate` JSONL wire verb.
 
 pub mod api;
 pub mod coordinator;
@@ -36,4 +44,5 @@ pub mod mlp;
 pub mod oracle;
 pub mod runtime;
 pub mod sched;
+pub mod scenario;
 pub mod util;

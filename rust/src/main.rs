@@ -4,19 +4,27 @@
 //!   dataset     build + cache a per-kernel profiling dataset
 //!   train       train a per-kernel MLP (MAPE or P80 pinball loss)
 //!   predict     one-shot kernel latency prediction (protocol v1)
-//!   e2e         end-to-end LLM inference prediction vs ground truth
+//!   simulate    declarative end-to-end serving simulation (Scenario API
+//!               v1): a ScenarioSpec in, a typed ScenarioReport out —
+//!               flags, a JSONL spec file, or stdin (`--spec -`)
+//!   e2e         end-to-end prediction vs ground truth (a scenario
+//!               simulation printed as the paper's method comparison)
 //!   serve       run the batching prediction service (synthetic load or
-//!               the JSONL stdio wire surface: `serve --stdio`)
+//!               the JSONL stdio wire surface: `serve --stdio`; speaks
+//!               both the predict and simulate verbs)
 //!   tune        model-guided Fused-MoE autotuning (§VII)
 //!   experiment  regenerate a paper table/figure (see DESIGN.md §5)
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use synperf::api::{self, ModelBundle, PredictRequest, Source};
 use synperf::dataset;
-use synperf::e2e::{llm, predict as e2e_predict, trace, workload};
 use synperf::experiments::{self, Lab, ModelFlavor, Scale};
 use synperf::hw;
 use synperf::kernels::{DType, KernelConfig, KernelKind};
+use synperf::scenario::{
+    self, Method, OpClass, Phase, PhaseSelection, ScenarioReport, ScenarioSpec, Simulator,
+    WorkloadSpec,
+};
 use synperf::util::argp::Args;
 
 fn usage() -> &'static str {
@@ -26,13 +34,18 @@ fn usage() -> &'static str {
        dataset    --kernel <k> [--n 420] [--out runs/data/<k>.csv] [--scale fast|normal|full]\n\
        train      --kernel <k> [--p80] [--scale ...]\n\
        predict    --kernel gemm --gpu A100 --m 4096 --n 4096 --k 4096 [--p80] [--strict]\n\
+       simulate   --model qwen2.5-14b --gpu A100 [--tp 1] [--pp 1]\n\
+                  [--workload arxiv|splitwise] [--batch 8] [--requests 1000:200,...]\n\
+                  [--phases both|prefill|decode] [--seed 7] [--host-gap-us 0.8]\n\
+                  [--json] | [--spec <file|->]\n\
        e2e        --model qwen2.5-14b --gpu H100 [--tp 1] [--pp 1] [--workload arxiv] [--batch 8]\n\
        serve      [--stdio] [--requests 512] [--gpu A100]\n\
                   [--max-batch 256] [--deadline-us 2000] [--queue-cap 1024]\n\
        tune       --gpu A40 [--n 20]\n\
        experiment <table1|table7|fig3|fig4|fig5|table8|scaledmm|fig6|fig7|table9|fig8|table10|all>\n\
      \n\
-     kernels: gemm scaled_mm attention rmsnorm silu_mul fused_moe"
+     kernels: gemm scaled_mm attention rmsnorm silu_mul fused_moe\n\
+     models:  see llm::registry() — qwen2.5-14b qwen2.5-32b qwen3-32b llama3.1-70b llama3.1-8b"
 }
 
 fn scale_of(args: &Args) -> Scale {
@@ -65,6 +78,7 @@ fn main() -> Result<()> {
         "dataset" => cmd_dataset(&rest),
         "train" => cmd_train(&rest),
         "predict" => cmd_predict(&rest),
+        "simulate" => cmd_simulate(&rest),
         "e2e" => cmd_e2e(&rest),
         "serve" => cmd_serve(&rest),
         "tune" => cmd_tune(&rest),
@@ -165,46 +179,175 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_e2e(args: &Args) -> Result<()> {
-    let lab = Lab::new(scale_of(args))?;
-    let model_name = args.str_or("model", "qwen2.5-14b");
-    let llm_cfg =
-        llm::by_name(&model_name).with_context(|| format!("unknown model {model_name:?}"))?;
-    let gpu = gpu_of(args, "A100")?;
-    let tp = args.usize_or("tp", 1)? as u32;
-    let pp = args.usize_or("pp", 1)? as u32;
-    let batch = args.usize_or("batch", 8)?;
-    let wk = match args.str_or("workload", "arxiv").as_str() {
-        "splitwise" => workload::WorkloadKind::Splitwise,
-        _ => workload::WorkloadKind::Arxiv,
+/// Parse `--requests 1000:200,2000:100` into an explicit request mix.
+fn requests_of(raw: &str) -> Result<Vec<synperf::e2e::workload::Request>> {
+    let mut reqs = Vec::new();
+    for part in raw.split(',') {
+        let Some((i, o)) = part.split_once(':') else {
+            bail!("--requests entries are input:output pairs (got {part:?})");
+        };
+        reqs.push(synperf::e2e::workload::Request {
+            input_len: i.trim().parse()?,
+            output_len: o.trim().parse()?,
+        });
+    }
+    Ok(reqs)
+}
+
+/// Build a [`ScenarioSpec`] from CLI flags (shared by `simulate` and `e2e`).
+fn spec_of(args: &Args) -> Result<ScenarioSpec> {
+    // only convert when the flag is given, so the default stays the exact
+    // HOST_GAP_SEC constant (no us -> sec float round trip)
+    let host_gap_sec = match args.str_opt("host-gap-us") {
+        Some(_) => args.f64_or("host-gap-us", 0.0)? * 1e-6,
+        None => scenario::HOST_GAP_SEC,
     };
-    let mut rng = synperf::util::rng::Rng::new(args.u64_or("seed", 7)?);
-    let reqs = workload::sample_batch(wk, batch, &mut rng);
-    let tr = trace::build_trace(&llm_cfg, tp, pp, &reqs);
-    let models = lab.model_set()?;
-    let comm = lab.comm(&gpu);
-    let t = e2e_predict::eval_trace(&tr, &gpu, tp, &models, &comm, 11)?;
-    println!("{} on {} (TP={tp}, PP={pp}), {}_{batch}:", llm_cfg.name, gpu.name, wk.name());
-    println!("  ground truth: {:.1} ms", t.actual * 1e3);
-    for (name, v) in [
-        ("SynPerf", t.synperf),
-        ("Roofline", t.roofline),
-        ("Linear", t.linear),
-        ("Habitat", t.habitat),
-        ("Neusight", t.neusight),
-    ] {
+    let mut spec = ScenarioSpec::new(
+        args.str_or("model", "qwen2.5-14b"),
+        args.str_or("gpu", "A100"),
+    )
+    .tp(args.usize_or("tp", 1)? as u32)
+    .pp(args.usize_or("pp", 1)? as u32)
+    .seed(args.u64_or("seed", 7)?)
+    .host_gap_sec(host_gap_sec);
+    spec = match args.str_opt("requests") {
+        Some(raw) => spec.workload(WorkloadSpec::Explicit(requests_of(raw)?)),
+        None => {
+            let kind = scenario::workload_kind(&args.str_or("workload", "arxiv"))?;
+            spec.workload(WorkloadSpec::Sampled { kind, batch: args.usize_or("batch", 8)? })
+        }
+    };
+    spec = spec.phases(PhaseSelection::parse(&args.str_or("phases", "both"))?);
+    Ok(spec)
+}
+
+/// Best-effort simulator: trained models when artifacts exist, otherwise
+/// the documented degraded roofline mode (visible in the report counts).
+/// Both fallback paths say so on stderr — degraded numbers are never
+/// silent.
+fn simulator_of(scale: Scale) -> Simulator {
+    match Lab::new(scale) {
+        Ok(lab) => match lab.model_set() {
+            Ok(models) => Simulator::with_comm_seed(models, lab.seed),
+            Err(e) => {
+                eprintln!("(simulator init failed: {e} — simulating in degraded roofline mode)");
+                Simulator::degraded()
+            }
+        },
+        Err(_) => {
+            eprintln!("(no artifacts — simulating in degraded roofline mode)");
+            Simulator::degraded()
+        }
+    }
+}
+
+fn print_report(report: &ScenarioReport) {
+    println!(
+        "scenario: {} on {} (TP={}, PP={}), seed {}, host gap {:.2} us",
+        report.model,
+        report.gpu,
+        report.tp,
+        report.pp,
+        report.seed,
+        report.host_gap_sec * 1e6
+    );
+    for ph in &report.phases {
+        let actual = ph.time_sec(Method::Actual);
+        let syn = ph.time_sec(Method::SynPerf);
+        print!(
+            "  {:<7} actual {:>9.2} ms, synperf {:>9.2} ms, {:>7.0} tok/s",
+            ph.phase.name(),
+            actual * 1e3,
+            syn * 1e3,
+            ph.tokens_per_sec(Method::Actual)
+        );
+        match ph.phase {
+            Phase::Prefill => println!(
+                "  (TTFT {:.2} ms)",
+                ph.ttft_sec(Method::SynPerf).unwrap_or(0.0) * 1e3
+            ),
+            Phase::Decode => println!(
+                "  (TPOT {:.3} ms/tok)",
+                ph.tpot_sec(Method::SynPerf).unwrap_or(0.0) * 1e3
+            ),
+        }
+    }
+    println!("  totals: ground truth {:.2} ms", report.totals.actual * 1e3);
+    for m in [Method::SynPerf, Method::Roofline, Method::Linear, Method::Habitat, Method::Neusight]
+    {
+        let v = report.totals.get(m);
         println!(
-            "  {name:<9} {:.1} ms  (err {:+.1}%)",
+            "    {:<9} {:>9.2} ms  (err {:+.1}%)",
+            m.name(),
             v * 1e3,
-            100.0 * (v - t.actual) / t.actual
+            100.0 * (v - report.totals.actual) / report.totals.actual
         );
     }
-    if t.degraded_kernels > 0 {
-        println!(
-            "  note: {} kernel items fell back to the roofline (untrained category)",
-            t.degraded_kernels
-        );
+    let shares: Vec<String> = OpClass::ALL
+        .iter()
+        .filter(|c| report.breakdown.get(**c) > 0.0)
+        .map(|c| format!("{} {:.1}%", c.name(), report.breakdown.share_pct(*c)))
+        .collect();
+    println!("  breakdown (ground truth): {}", shares.join(", "));
+    println!(
+        "  provenance: {:.0} launches, {} degraded kernel items, {} analysis-cache hits",
+        report.launches, report.totals.degraded_kernels, report.cache_hits
+    );
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    // --spec <file|->: JSONL in (wire envelopes or bare scenario objects),
+    // one report line out per input line — the offline twin of the
+    // `serve --stdio` simulate verb.
+    if let Some(path) = args.str_opt("spec") {
+        // spec lines carry their own scenario fields; flag-built fields
+        // would be contradictory, so say so instead of silently dropping
+        for flag in
+            ["model", "gpu", "tp", "pp", "workload", "batch", "requests", "phases", "seed", "host-gap-us"]
+        {
+            if args.str_opt(flag).is_some() {
+                eprintln!("(--{flag} ignored: --spec lines carry their own scenario fields)");
+            }
+        }
+        let text = if path == "-" {
+            use std::io::Read;
+            let mut buf = String::new();
+            std::io::stdin().read_to_string(&mut buf)?;
+            buf
+        } else {
+            std::fs::read_to_string(path)?
+        };
+        let sim = simulator_of(scale_of(args));
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (id, spec) = scenario::wire::parse_spec_line(line);
+            let res = spec.and_then(|s| sim.simulate(&s));
+            println!("{}", scenario::wire::encode_report(id.as_deref(), &res));
+        }
+        return Ok(());
     }
+
+    let spec = spec_of(args)?;
+    let sim = simulator_of(scale_of(args));
+    let report = sim.simulate(&spec)?;
+    if args.has("json") {
+        // machine consumers get exactly one report line on stdout
+        println!("{}", scenario::wire::encode_report(None, &Ok(report)));
+    } else {
+        print_report(&report);
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    // the paper's method comparison, now a scenario simulation: requires
+    // trained artifacts (use `simulate` for the degraded-friendly verb)
+    let lab = Lab::new(scale_of(args))?;
+    let spec = spec_of(args)?;
+    let report = lab.simulator()?.simulate(&spec)?;
+    print_report(&report);
     Ok(())
 }
 
@@ -242,20 +385,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     if args.has("stdio") {
         // JSONL wire surface: one request per line on stdin, one response
-        // per line on stdout (see rust/README.md for the schema). Stdin is
-        // wrapped (not locked): the reader moves into serve_lines' reader
-        // thread, and StdinLock is not Send.
+        // per line on stdout (see rust/README.md for the schema); predict
+        // lines route through the coordinator, simulate lines through the
+        // Simulator (built lazily on the first simulate line, so
+        // predict-only peers never pay its model-set startup cost). Stdin
+        // is wrapped (not locked): the reader moves into serve_lines'
+        // reader thread, and StdinLock is not Send.
         let stdout = std::io::stdout();
         let stats = synperf::api::stdio::serve_lines(
             &svc.client(),
+            || simulator_of(scale),
             std::io::BufReader::new(std::io::stdin()),
             &mut stdout.lock(),
             cfg.max_batch,
         )?;
         let snap = svc.metrics.snapshot();
         eprintln!(
-            "stdio: {} responses ({} errors), mean batch {:.1}, rejected {}, max depth {}",
-            stats.served, stats.errors, snap.mean_batch, snap.rejected_requests, snap.max_queue_depth
+            "stdio: {} responses ({} errors, {} simulations), mean batch {:.1}, rejected {}, max depth {}",
+            stats.served, stats.errors, stats.simulated, snap.mean_batch, snap.rejected_requests, snap.max_queue_depth
         );
         svc.shutdown();
         return Ok(());

@@ -1,0 +1,291 @@
+//! The scenario compiler: validates a [`ScenarioSpec`] against the closed
+//! [`ScenarioError`] taxonomy and lowers it to phase-tagged kernel/comm op
+//! streams. Compilation is deterministic in the spec (workload sampling is
+//! seeded by `spec.seed`) and pure — no prediction or oracle work happens
+//! here, so compiling is cheap enough to sweep (see `benches/hot_paths.rs`,
+//! `scenario/compile`).
+
+use super::{Phase, PhaseSelection, ScenarioError, ScenarioSpec, WorkloadSpec};
+use crate::e2e::llm::{self, LlmConfig};
+use crate::e2e::trace::{self, Op, TraceItem};
+use crate::e2e::workload::{sample_batch, Request};
+use crate::hw::{gpu_by_name, GpuSpec};
+use crate::util::rng::Rng;
+
+/// One phase-tagged op stream.
+#[derive(Debug, Clone)]
+pub struct PhaseStream {
+    pub phase: Phase,
+    /// Index of this stream's first op within the full two-phase op-seed
+    /// stream. Phase-stable: a decode-only (disaggregated) run draws the
+    /// same per-op oracle seeds as the decode phase of a colocated run of
+    /// the same spec, so the two are directly comparable.
+    pub seed_base: usize,
+    pub items: Vec<TraceItem>,
+}
+
+/// A lowered scenario: resolved model + GPU, the materialized request mix,
+/// and the op streams in execution order. Everything the evaluator needs.
+#[derive(Debug, Clone)]
+pub struct CompiledScenario {
+    pub llm: LlmConfig,
+    pub gpu: GpuSpec,
+    pub tp: u32,
+    pub pp: u32,
+    pub requests: Vec<Request>,
+    pub phases: Vec<PhaseStream>,
+    pub host_gap_sec: f64,
+    pub seed: u64,
+}
+
+impl CompiledScenario {
+    /// Total kernel-launch count, accumulated in stream order (matches
+    /// [`trace::launch_count`] over the concatenated trace bit for bit).
+    pub fn launch_count(&self) -> f64 {
+        let mut total = 0.0;
+        for stream in &self.phases {
+            for item in &stream.items {
+                if matches!(item.op, Op::Kernel(_)) {
+                    total += item.count;
+                }
+            }
+        }
+        total
+    }
+
+    /// Total op items across phases.
+    pub fn num_items(&self) -> usize {
+        self.phases.iter().map(|p| p.items.len()).sum()
+    }
+}
+
+fn validate_parallelism(llm: &LlmConfig, tp: u32, pp: u32) -> Result<(), ScenarioError> {
+    let bad = |why: String| Err(ScenarioError::InvalidParallelism(why));
+    if tp == 0 || pp == 0 {
+        return bad(format!("tp and pp must be >= 1, got tp={tp} pp={pp}"));
+    }
+    if llm.heads % tp != 0 {
+        return bad(format!(
+            "tp={tp} does not divide {} attention heads of {}",
+            llm.heads, llm.name
+        ));
+    }
+    if pp > llm.layers {
+        return bad(format!("pp={pp} exceeds the {} layers of {}", llm.layers, llm.name));
+    }
+    Ok(())
+}
+
+/// Largest accepted request batch. The simulate verb is a wire surface:
+/// without a cap, one line could ask for a 2^53-request batch and take the
+/// process down allocating it (the predict verb's inputs are implicitly
+/// bounded by its u32 kernel dims).
+pub const MAX_BATCH: usize = 4096;
+/// Largest accepted prompt length per request (tokens).
+pub const MAX_INPUT_LEN: u32 = 262_144;
+/// Largest accepted generation length per request (tokens).
+pub const MAX_OUTPUT_LEN: u32 = 65_536;
+
+fn materialize_requests(spec: &ScenarioSpec) -> Result<Vec<Request>, ScenarioError> {
+    let bad = |why: String| Err(ScenarioError::InvalidWorkload(why));
+    let reqs = match &spec.workload {
+        WorkloadSpec::Sampled { kind, batch } => {
+            if *batch == 0 {
+                return bad("batch must be >= 1".to_string());
+            }
+            if *batch > MAX_BATCH {
+                return bad(format!("batch {batch} exceeds the cap of {MAX_BATCH}"));
+            }
+            let mut rng = Rng::new(spec.seed);
+            sample_batch(*kind, *batch, &mut rng)
+        }
+        WorkloadSpec::Explicit(reqs) => {
+            if reqs.len() > MAX_BATCH {
+                return bad(format!(
+                    "request mix of {} exceeds the cap of {MAX_BATCH}",
+                    reqs.len()
+                ));
+            }
+            reqs.clone()
+        }
+    };
+    if reqs.is_empty() {
+        return bad("request mix must be non-empty".to_string());
+    }
+    for (i, r) in reqs.iter().enumerate() {
+        if r.input_len == 0 || r.output_len == 0 {
+            return bad(format!(
+                "request {i} needs input_len >= 1 and output_len >= 1 (got {}x{})",
+                r.input_len, r.output_len
+            ));
+        }
+        if r.input_len > MAX_INPUT_LEN || r.output_len > MAX_OUTPUT_LEN {
+            return bad(format!(
+                "request {i} exceeds the length caps ({}x{} vs {MAX_INPUT_LEN}x{MAX_OUTPUT_LEN})",
+                r.input_len, r.output_len
+            ));
+        }
+    }
+    Ok(reqs)
+}
+
+/// Lower a spec to its phase-tagged op streams. Validation order is part
+/// of the contract: model, GPU, parallelism, host gap, workload.
+pub fn compile(spec: &ScenarioSpec) -> Result<CompiledScenario, ScenarioError> {
+    let llm = llm::llm_by_name(&spec.model)
+        .ok_or_else(|| ScenarioError::UnknownModel(spec.model.clone()))?;
+    let gpu =
+        gpu_by_name(&spec.gpu).ok_or_else(|| ScenarioError::UnknownGpu(spec.gpu.clone()))?;
+    validate_parallelism(&llm, spec.tp, spec.pp)?;
+    if !spec.host_gap_sec.is_finite() || spec.host_gap_sec < 0.0 {
+        return Err(ScenarioError::MalformedSpec(format!(
+            "host_gap_sec must be finite and >= 0, got {}",
+            spec.host_gap_sec
+        )));
+    }
+    let requests = materialize_requests(spec)?;
+
+    // both streams are always built: items are run-length encoded (a
+    // handful per phase, not per layer), so a decode-only spec paying for
+    // the prefill stream it drops costs a few dozen structs — and buys the
+    // phase-stable seed base below
+    let (prefill, decode) = trace::build_phase_traces(&llm, spec.tp, spec.pp, &requests);
+    let decode_base = prefill.len();
+    let mut phases = Vec::new();
+    if spec.phases != PhaseSelection::DecodeOnly {
+        phases.push(PhaseStream { phase: Phase::Prefill, seed_base: 0, items: prefill });
+    }
+    if spec.phases != PhaseSelection::PrefillOnly {
+        phases.push(PhaseStream { phase: Phase::Decode, seed_base: decode_base, items: decode });
+    }
+
+    Ok(CompiledScenario {
+        llm,
+        gpu,
+        tp: spec.tp,
+        pp: spec.pp,
+        requests,
+        phases,
+        host_gap_sec: spec.host_gap_sec,
+        seed: spec.seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::e2e::workload::WorkloadKind;
+
+    fn spec() -> ScenarioSpec {
+        ScenarioSpec::new("Qwen2.5-14B", "A100").workload(WorkloadSpec::Explicit(vec![
+            Request { input_len: 128, output_len: 16 },
+            Request { input_len: 64, output_len: 8 },
+        ]))
+    }
+
+    #[test]
+    fn compiles_to_phase_tagged_streams() {
+        let c = compile(&spec()).unwrap();
+        assert_eq!(c.phases.len(), 2);
+        assert_eq!(c.phases[0].phase, Phase::Prefill);
+        assert_eq!(c.phases[1].phase, Phase::Decode);
+        assert!(!c.phases[0].items.is_empty() && !c.phases[1].items.is_empty());
+        assert!(c.launch_count() > 0.0);
+        assert_eq!(c.requests.len(), 2);
+    }
+
+    #[test]
+    fn phase_selection_drops_the_other_phase() {
+        let p = compile(&spec().phases(PhaseSelection::PrefillOnly)).unwrap();
+        assert_eq!(p.phases.len(), 1);
+        assert_eq!(p.phases[0].phase, Phase::Prefill);
+        assert_eq!(p.phases[0].seed_base, 0);
+        let d = compile(&spec().phases(PhaseSelection::DecodeOnly)).unwrap();
+        assert_eq!(d.phases.len(), 1);
+        assert_eq!(d.phases[0].phase, Phase::Decode);
+        let both = compile(&spec()).unwrap();
+        assert_eq!(
+            (p.launch_count() + d.launch_count()).to_bits(),
+            both.launch_count().to_bits(),
+            "phases partition the launches"
+        );
+        // the op-seed stream is phase-stable: the decode-only stream keeps
+        // the seed base it would have had in the colocated run
+        assert_eq!(d.phases[0].seed_base, p.phases[0].items.len());
+        assert_eq!(both.phases[1].seed_base, both.phases[0].items.len());
+    }
+
+    #[test]
+    fn concatenated_streams_match_build_trace() {
+        let c = compile(&spec()).unwrap();
+        let reference = trace::build_trace(&c.llm, c.tp, c.pp, &c.requests);
+        let flat: Vec<&TraceItem> =
+            c.phases.iter().flat_map(|p| p.items.iter()).collect();
+        assert_eq!(flat.len(), reference.len());
+        for (a, b) in flat.iter().zip(&reference) {
+            assert_eq!(a.count.to_bits(), b.count.to_bits());
+        }
+        assert_eq!(c.launch_count().to_bits(), trace::launch_count(&reference).to_bits());
+    }
+
+    #[test]
+    fn sampled_workloads_are_seed_deterministic() {
+        let s = ScenarioSpec::new("Llama3.1-8B", "H800")
+            .workload(WorkloadSpec::Sampled { kind: WorkloadKind::Splitwise, batch: 4 })
+            .seed(42);
+        let a = compile(&s).unwrap();
+        let b = compile(&s).unwrap();
+        assert_eq!(a.requests, b.requests);
+        let c = compile(&s.clone().seed(43)).unwrap();
+        assert_ne!(a.requests, c.requests, "different seed, different mix");
+    }
+
+    #[test]
+    fn validation_order_and_taxonomy() {
+        // model first, even when the GPU is also unknown
+        let e = compile(&ScenarioSpec::new("GPT-5", "B300")).unwrap_err();
+        assert!(matches!(e, ScenarioError::UnknownModel(_)));
+        let e = compile(&ScenarioSpec::new("Qwen3-32B", "B300")).unwrap_err();
+        assert!(matches!(e, ScenarioError::UnknownGpu(_)));
+        let e = compile(&spec().tp(0)).unwrap_err();
+        assert!(matches!(e, ScenarioError::InvalidParallelism(_)));
+        let e = compile(&spec().pp(10_000)).unwrap_err();
+        assert!(matches!(e, ScenarioError::InvalidParallelism(_)));
+        let e = compile(&spec().host_gap_sec(f64::NAN)).unwrap_err();
+        assert!(matches!(e, ScenarioError::MalformedSpec(_)));
+        let e = compile(
+            &spec().workload(WorkloadSpec::Explicit(vec![Request { input_len: 0, output_len: 1 }])),
+        )
+        .unwrap_err();
+        assert!(matches!(e, ScenarioError::InvalidWorkload(_)));
+        let e = compile(&spec().workload(WorkloadSpec::Explicit(vec![]))).unwrap_err();
+        assert!(matches!(e, ScenarioError::InvalidWorkload(_)));
+    }
+
+    #[test]
+    fn wire_scale_inputs_are_capped_not_allocated() {
+        // a hostile simulate line must be refused before any allocation
+        let huge_batch = spec().workload(WorkloadSpec::Sampled {
+            kind: WorkloadKind::Arxiv,
+            batch: MAX_BATCH + 1,
+        });
+        assert!(matches!(
+            compile(&huge_batch).unwrap_err(),
+            ScenarioError::InvalidWorkload(_)
+        ));
+        let huge_prompt = spec().workload(WorkloadSpec::Explicit(vec![Request {
+            input_len: u32::MAX,
+            output_len: 1,
+        }]));
+        assert!(matches!(
+            compile(&huge_prompt).unwrap_err(),
+            ScenarioError::InvalidWorkload(_)
+        ));
+        // the caps themselves are accepted
+        let at_cap = spec().workload(WorkloadSpec::Explicit(vec![Request {
+            input_len: MAX_INPUT_LEN,
+            output_len: 1,
+        }]));
+        assert!(compile(&at_cap).is_ok());
+    }
+}

@@ -1,0 +1,270 @@
+//! The scenario evaluator: walks the compiled phase streams once, in
+//! execution order, and produces the typed [`ScenarioReport`].
+//!
+//! The walk mirrors [`crate::e2e::predict::eval_trace`] **exactly** — the
+//! same per-item op seeds (each stream's `seed_base` + offset, which for a
+//! both-phase run is precisely the global trace index), the same oracle
+//! calls, the same single batched MLP routing pass over all kernel items
+//! via [`crate::api::predict_batch_view`] — while additionally tagging
+//! every contribution with its phase and [`OpClass`]. The whole-scenario
+//! totals are accumulated item by item in stream order (not by summing the
+//! per-phase subtotals), so they are bit-identical to the hand-built
+//! `build_trace` + `eval_trace` reference (pinned in `tests/proptests.rs`).
+//! Because seed bases are phase-stable, a decode-only (disaggregated) run
+//! reproduces the decode phase of the colocated run bit for bit.
+
+use super::{ClassBreakdown, CompiledScenario, OpClass, Phase, PhaseReport, ScenarioReport};
+use crate::api::{self, FeatureView, Source};
+use crate::e2e::comm::{allreduce_oracle, sendrecv_oracle, CommModel};
+use crate::e2e::predict::{MethodTotals, ModelSet};
+use crate::e2e::trace::Op;
+use crate::engine::PredictionEngine;
+use crate::hw::GpuSpec;
+use crate::kernels::KernelConfig;
+
+fn phase_tokens(c: &CompiledScenario, phase: Phase) -> f64 {
+    match phase {
+        Phase::Prefill => c.requests.iter().map(|r| r.input_len as f64).sum(),
+        Phase::Decode => c.requests.iter().map(|r| r.output_len as f64).sum(),
+    }
+}
+
+/// Sequential steps a phase spans: prefill is one forward pass; decode
+/// runs until the longest request finishes (one token per step).
+fn phase_steps(c: &CompiledScenario, phase: Phase) -> f64 {
+    match phase {
+        Phase::Prefill => 1.0,
+        Phase::Decode => {
+            c.requests.iter().map(|r| r.output_len).max().unwrap_or(1).max(1) as f64
+        }
+    }
+}
+
+/// Shared accumulation for a comm op (All-Reduce / Send-Recv): ground
+/// truth into `actual`, the RF prediction into every predictor, the class
+/// seconds into both breakdowns. One body so the two arms cannot drift —
+/// the accumulation order here is part of the `eval_trace` bit-identity
+/// pin (grand fields first, then the phase's).
+fn add_comm_op(
+    grand: &mut MethodTotals,
+    grand_breakdown: &mut ClassBreakdown,
+    ph: &mut PhaseReport,
+    class: OpClass,
+    count: f64,
+    actual: f64,
+    pred: f64,
+) {
+    grand.actual += count * actual;
+    ph.totals.actual += count * actual;
+    for t in [&mut *grand, &mut ph.totals] {
+        for p in [
+            &mut t.synperf,
+            &mut t.roofline,
+            &mut t.linear,
+            &mut t.habitat,
+            &mut t.neusight,
+        ] {
+            *p += count * pred;
+        }
+    }
+    ph.breakdown.add(class, count * actual);
+    grand_breakdown.add(class, count * actual);
+}
+
+/// Evaluate a compiled scenario against ground truth and every predictor.
+/// Infallible by construction: compilation already validated the spec, and
+/// missing models answer in the documented degraded roofline mode (counted
+/// in `totals.degraded_kernels`).
+pub fn evaluate(c: &CompiledScenario, models: &ModelSet, comm: &CommModel) -> ScenarioReport {
+    let engine = PredictionEngine::global();
+    let gpu = &c.gpu;
+    let host_gap = c.host_gap_sec;
+
+    let mut grand = MethodTotals::default();
+    let mut grand_breakdown = ClassBreakdown::default();
+    let mut launches = 0.0f64;
+    let mut reports: Vec<PhaseReport> = c
+        .phases
+        .iter()
+        .map(|stream| PhaseReport {
+            phase: stream.phase,
+            totals: MethodTotals::default(),
+            breakdown: ClassBreakdown::default(),
+            launches: 0.0,
+            tokens: phase_tokens(c, stream.phase),
+            steps: phase_steps(c, stream.phase),
+        })
+        .collect();
+
+    // kernel launches accumulated for one batched routing pass per view,
+    // tagged with (phase index, repetition count)
+    let mut kernel_reqs: Vec<(KernelConfig, GpuSpec)> = Vec::new();
+    let mut kernel_meta: Vec<(usize, f64)> = Vec::new();
+
+    for (pi, stream) in c.phases.iter().enumerate() {
+        for (j, item) in stream.items.iter().enumerate() {
+            // phase-stable op-seed stream: seed_base + offset equals the
+            // global trace index of a both-phase run
+            let op_seed = c.seed.wrapping_add((stream.seed_base + j) as u64 * 0x9E37);
+            let ph = &mut reports[pi];
+            match &item.op {
+                Op::Kernel(cfg) => {
+                    let s = engine.make_sample(cfg, gpu, op_seed);
+                    let actual = item.count * (s.latency_sec + host_gap);
+                    grand.actual += actual;
+                    ph.totals.actual += actual;
+                    grand.roofline += item.count * s.roofline_sec;
+                    ph.totals.roofline += item.count * s.roofline_sec;
+                    grand.habitat += item.count * s.habitat_sec;
+                    ph.totals.habitat += item.count * s.habitat_sec;
+                    let linear = match models.linear.get(&s.kind) {
+                        Some(lm) => item.count * lm.predict(&s),
+                        None => item.count * s.roofline_sec, // no model: fall back
+                    };
+                    grand.linear += linear;
+                    ph.totals.linear += linear;
+
+                    let class = OpClass::of_kind(s.kind);
+                    ph.breakdown.add(class, item.count * s.latency_sec);
+                    ph.breakdown.add(OpClass::HostGap, item.count * host_gap);
+                    grand_breakdown.add(class, item.count * s.latency_sec);
+                    grand_breakdown.add(OpClass::HostGap, item.count * host_gap);
+                    ph.launches += item.count;
+                    launches += item.count;
+                    kernel_reqs.push((cfg.clone(), gpu.clone()));
+                    kernel_meta.push((pi, item.count));
+                }
+                Op::AllReduce { bytes } => {
+                    let actual = allreduce_oracle(*bytes, c.tp, gpu, op_seed);
+                    let pred = comm.predict_allreduce(*bytes, c.tp, gpu);
+                    add_comm_op(
+                        &mut grand,
+                        &mut grand_breakdown,
+                        ph,
+                        OpClass::AllReduce,
+                        item.count,
+                        actual,
+                        pred,
+                    );
+                }
+                Op::SendRecv { bytes } => {
+                    let actual = sendrecv_oracle(*bytes, gpu, op_seed);
+                    let pred = comm.predict_sendrecv(*bytes, gpu);
+                    add_comm_op(
+                        &mut grand,
+                        &mut grand_breakdown,
+                        ph,
+                        OpClass::SendRecv,
+                        item.count,
+                        actual,
+                        pred,
+                    );
+                }
+            }
+        }
+    }
+
+    // the one request path: per-category batched MLP routing with
+    // provenance, once per feature view (SynPerf, Neusight baseline)
+    let syn = api::predict_batch_view(&models.synperf, FeatureView::SynPerf, &kernel_reqs);
+    let neu = api::predict_batch_view(&models.neusight, FeatureView::Neusight, &kernel_reqs);
+    let mut cache_hits = 0usize;
+    for ((sp, np), (pi, count)) in syn.iter().zip(&neu).zip(&kernel_meta) {
+        grand.synperf += count * sp.latency_sec;
+        reports[*pi].totals.synperf += count * sp.latency_sec;
+        grand.neusight += count * np.latency_sec;
+        reports[*pi].totals.neusight += count * np.latency_sec;
+        if sp.provenance.source == Source::Roofline {
+            grand.degraded_kernels += 1;
+            reports[*pi].totals.degraded_kernels += 1;
+        }
+        if sp.provenance.cache_hit {
+            cache_hits += 1;
+        }
+    }
+
+    ScenarioReport {
+        model: c.llm.name.to_string(),
+        gpu: c.gpu.name.to_string(),
+        tp: c.tp,
+        pp: c.pp,
+        phases: reports,
+        totals: grand,
+        breakdown: grand_breakdown,
+        launches,
+        cache_hits,
+        host_gap_sec: c.host_gap_sec,
+        seed: c.seed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::e2e::workload::Request;
+    use crate::scenario::{PhaseSelection, ScenarioSpec, Simulator, WorkloadSpec};
+
+    #[test]
+    fn phase_totals_partition_the_grand_totals() {
+        let sim = Simulator::degraded();
+        let spec = ScenarioSpec::new("Qwen2.5-14B", "A100")
+            .tp(2)
+            .pp(2)
+            .workload(WorkloadSpec::Explicit(vec![
+                Request { input_len: 192, output_len: 24 },
+                Request { input_len: 80, output_len: 12 },
+            ]))
+            .seed(17);
+        let r = sim.simulate(&spec).unwrap();
+        assert_eq!(r.phases.len(), 2);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * a.abs().max(b.abs()).max(1e-30);
+        let mut actual = 0.0;
+        let mut synperf = 0.0;
+        let mut roofline = 0.0;
+        let mut launches = 0.0;
+        let mut bd_total = 0.0;
+        let mut degraded = 0usize;
+        for p in &r.phases {
+            actual += p.totals.actual;
+            synperf += p.totals.synperf;
+            roofline += p.totals.roofline;
+            launches += p.launches;
+            bd_total += p.breakdown.total();
+            degraded += p.totals.degraded_kernels;
+        }
+        assert!(close(actual, r.totals.actual));
+        assert!(close(synperf, r.totals.synperf));
+        assert!(close(roofline, r.totals.roofline));
+        assert!(close(launches, r.launches));
+        assert_eq!(degraded, r.totals.degraded_kernels);
+        // tp=2, pp=2: collectives show up in the typed breakdown
+        assert!(r.breakdown.get(OpClass::AllReduce) > 0.0);
+        assert!(r.breakdown.get(OpClass::SendRecv) > 0.0);
+        assert!(close(bd_total, r.breakdown.total()));
+        // the breakdown's actual-side classes + comm == ground truth total
+        assert!(close(r.breakdown.total(), r.totals.actual));
+    }
+
+    #[test]
+    fn decode_phase_is_invariant_under_phase_selection() {
+        // a disaggregated decode node must reproduce the decode phase of
+        // the colocated run bit for bit (phase-stable op-seed bases)
+        let sim = Simulator::degraded();
+        let spec = ScenarioSpec::new("Llama3.1-8B", "A100")
+            .workload(WorkloadSpec::Explicit(vec![
+                Request { input_len: 96, output_len: 12 },
+                Request { input_len: 48, output_len: 6 },
+            ]))
+            .seed(23);
+        let both = sim.simulate(&spec).unwrap();
+        let only = sim.simulate(&spec.clone().phases(PhaseSelection::DecodeOnly)).unwrap();
+        let b = both.phase(Phase::Decode).unwrap();
+        assert_eq!(only.phases.len(), 1);
+        let o = &only.phases[0];
+        assert_eq!(b.totals.actual.to_bits(), o.totals.actual.to_bits());
+        assert_eq!(b.totals.synperf.to_bits(), o.totals.synperf.to_bits());
+        assert_eq!(b.totals.roofline.to_bits(), o.totals.roofline.to_bits());
+        assert_eq!(b.launches.to_bits(), o.launches.to_bits());
+        assert_eq!(b.breakdown, o.breakdown);
+    }
+}

@@ -1,0 +1,603 @@
+//! **Scenario API v1** — declarative end-to-end serving simulation.
+//!
+//! The paper's headline claim is end-to-end inference prediction (§VI-D);
+//! this module is the typed surface for it. A caller describes a serving
+//! scenario declaratively — model by registry name, GPU by Table-VI name,
+//! `{tp, pp}` parallelism, a workload (sampled mix or explicit requests),
+//! the phase schedule (prefill/decode), a seed and the per-kernel host
+//! launch gap — as a [`ScenarioSpec`]. The [`compiler`] lowers the spec to
+//! phase-tagged kernel/comm op streams ([`CompiledScenario`]); [`eval`]
+//! runs the streams through the protocol-v1 request path
+//! ([`crate::api::predict_batch_view`]) into a typed [`ScenarioReport`]:
+//! per-phase TTFT/TPOT/tokens-per-second, per-method [`MethodTotals`], a
+//! typed [`OpClass`] breakdown (no stringly buckets), and the
+//! degraded-kernel / cache-hit provenance carried up from the protocol.
+//!
+//! Failures speak the **closed** [`ScenarioError`] taxonomy (unknown
+//! model, unknown GPU, invalid parallelism, invalid workload, malformed
+//! spec), mirroring [`crate::api::PredictError`]. The same schema rides
+//! the JSONL wire as the `simulate` verb ([`wire`]): `synperf simulate`
+//! and simulate lines on `synperf serve --stdio` both round-trip a
+//! `ScenarioSpec` object to a `ScenarioReport` line.
+//!
+//! [`Simulator`] is the stateful entry point: it owns the per-category
+//! model set and a per-GPU communication-model cache, so repeated
+//! simulations (a sweep over batch sizes, a wire peer) train each RF comm
+//! model once. [`evaluate`] is pinned bit-identical to the hand-built
+//! `build_trace` + `eval_trace` reference path (`tests/proptests.rs`).
+
+pub mod compiler;
+pub mod eval;
+pub mod wire;
+
+pub use compiler::{compile, CompiledScenario, PhaseStream};
+pub use eval::evaluate;
+
+pub use crate::e2e::predict::{Method, MethodTotals, HOST_GAP_SEC};
+
+use crate::e2e::comm::CommModel;
+use crate::e2e::predict::ModelSet;
+use crate::e2e::workload::{Request, WorkloadKind};
+use crate::hw::GpuSpec;
+use crate::kernels::KernelKind;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::rc::Rc;
+
+/// A serving phase of the scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Phase> {
+        match s {
+            "prefill" => Some(Phase::Prefill),
+            "decode" => Some(Phase::Decode),
+            _ => None,
+        }
+    }
+}
+
+/// Which phases the scenario schedules — `Both` is a colocated server;
+/// `PrefillOnly`/`DecodeOnly` model a disaggregated (Splitwise-style)
+/// prefill or decode node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseSelection {
+    Both,
+    PrefillOnly,
+    DecodeOnly,
+}
+
+impl PhaseSelection {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PhaseSelection::Both => "both",
+            PhaseSelection::PrefillOnly => "prefill",
+            PhaseSelection::DecodeOnly => "decode",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PhaseSelection> {
+        match s {
+            "both" => Some(PhaseSelection::Both),
+            "prefill" => Some(PhaseSelection::PrefillOnly),
+            "decode" => Some(PhaseSelection::DecodeOnly),
+            _ => None,
+        }
+    }
+
+    /// Parse with the closed-taxonomy error — the one owner of the message,
+    /// shared by the wire codec and the CLI so the surfaces cannot drift.
+    pub fn parse(s: &str) -> Result<PhaseSelection, ScenarioError> {
+        PhaseSelection::from_name(s).ok_or_else(|| {
+            ScenarioError::MalformedSpec(format!("unknown phases {s:?} (both|prefill|decode)"))
+        })
+    }
+}
+
+/// Resolve a workload kind by name with the closed-taxonomy error — the
+/// one owner of the message, shared by the wire codec and the CLI.
+pub fn workload_kind(name: &str) -> Result<WorkloadKind, ScenarioError> {
+    WorkloadKind::from_name(name).ok_or_else(|| {
+        ScenarioError::InvalidWorkload(format!("unknown workload kind {name:?} (arxiv|splitwise)"))
+    })
+}
+
+/// The request mix: a sampled batch from one of the paper's workload
+/// distributions, or an explicit list of (input, output) lengths.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkloadSpec {
+    Sampled { kind: WorkloadKind, batch: usize },
+    Explicit(Vec<Request>),
+}
+
+/// The declarative description of one serving scenario. Built fluently:
+///
+/// ```ignore
+/// let spec = ScenarioSpec::new("Qwen2.5-14B", "A100")
+///     .tp(2)
+///     .workload(WorkloadSpec::Sampled { kind: WorkloadKind::Arxiv, batch: 8 })
+///     .seed(7);
+/// let report = Simulator::degraded().simulate(&spec)?;
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Model name, resolved through [`crate::e2e::llm::llm_by_name`].
+    pub model: String,
+    /// GPU name, resolved through [`crate::hw::gpu_by_name`].
+    pub gpu: String,
+    /// Tensor-parallel degree (must divide the model's attention heads).
+    pub tp: u32,
+    /// Pipeline-parallel degree (must not exceed the model's layers).
+    pub pp: u32,
+    pub workload: WorkloadSpec,
+    pub phases: PhaseSelection,
+    /// Seeds both workload sampling and the oracle ground truth.
+    pub seed: u64,
+    /// Per-kernel host launch gap in the measured system (framework
+    /// overhead). Defaults to [`HOST_GAP_SEC`].
+    pub host_gap_sec: f64,
+}
+
+impl ScenarioSpec {
+    pub fn new(model: impl Into<String>, gpu: impl Into<String>) -> ScenarioSpec {
+        ScenarioSpec {
+            model: model.into(),
+            gpu: gpu.into(),
+            tp: 1,
+            pp: 1,
+            workload: WorkloadSpec::Sampled { kind: WorkloadKind::Arxiv, batch: 8 },
+            phases: PhaseSelection::Both,
+            seed: 0,
+            host_gap_sec: HOST_GAP_SEC,
+        }
+    }
+
+    pub fn tp(mut self, tp: u32) -> Self {
+        self.tp = tp;
+        self
+    }
+
+    pub fn pp(mut self, pp: u32) -> Self {
+        self.pp = pp;
+        self
+    }
+
+    pub fn workload(mut self, workload: WorkloadSpec) -> Self {
+        self.workload = workload;
+        self
+    }
+
+    pub fn phases(mut self, phases: PhaseSelection) -> Self {
+        self.phases = phases;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn host_gap_sec(mut self, host_gap_sec: f64) -> Self {
+        self.host_gap_sec = host_gap_sec;
+        self
+    }
+}
+
+/// The closed error taxonomy of the Scenario API. Every public edge —
+/// the compiler, the `Simulator`, the `simulate` wire verb — answers with
+/// one of these, mirroring [`crate::api::PredictError`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScenarioError {
+    /// The named model is not in the [`crate::e2e::llm::registry`].
+    UnknownModel(String),
+    /// The named GPU is not in the Table-VI spec database.
+    UnknownGpu(String),
+    /// `{tp, pp}` is inconsistent with the model architecture.
+    InvalidParallelism(String),
+    /// The request mix is empty or contains impossible lengths.
+    InvalidWorkload(String),
+    /// The spec itself is malformed (bad JSON, bad field types, bad gap).
+    MalformedSpec(String),
+}
+
+impl ScenarioError {
+    /// Stable machine-readable code (the `error.code` of the wire surface).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ScenarioError::UnknownModel(_) => "unknown_model",
+            ScenarioError::UnknownGpu(_) => "unknown_gpu",
+            ScenarioError::InvalidParallelism(_) => "invalid_parallelism",
+            ScenarioError::InvalidWorkload(_) => "invalid_workload",
+            ScenarioError::MalformedSpec(_) => "malformed_spec",
+        }
+    }
+}
+
+impl fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScenarioError::UnknownModel(name) => {
+                write!(f, "unknown model {name:?} (see llm::registry())")
+            }
+            ScenarioError::UnknownGpu(name) => {
+                write!(f, "unknown GPU {name:?} (see Table VI)")
+            }
+            ScenarioError::InvalidParallelism(why) => write!(f, "invalid parallelism: {why}"),
+            ScenarioError::InvalidWorkload(why) => write!(f, "invalid workload: {why}"),
+            ScenarioError::MalformedSpec(why) => write!(f, "malformed scenario spec: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+/// The typed op classes of the breakdown — replaces the former
+/// `Vec<(String, f64)>` rows. `Gemm` covers both plain and scaled matmul
+/// categories; `HostGap` is the per-launch framework overhead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Gemm,
+    Attention,
+    RmsNorm,
+    SiluMul,
+    FusedMoe,
+    AllReduce,
+    SendRecv,
+    HostGap,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 8] = [
+        OpClass::Gemm,
+        OpClass::Attention,
+        OpClass::RmsNorm,
+        OpClass::SiluMul,
+        OpClass::FusedMoe,
+        OpClass::AllReduce,
+        OpClass::SendRecv,
+        OpClass::HostGap,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpClass::Gemm => "gemm",
+            OpClass::Attention => "attention",
+            OpClass::RmsNorm => "rmsnorm",
+            OpClass::SiluMul => "silu_mul",
+            OpClass::FusedMoe => "fused_moe",
+            OpClass::AllReduce => "all_reduce",
+            OpClass::SendRecv => "send_recv",
+            OpClass::HostGap => "host_gap",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<OpClass> {
+        Self::ALL.into_iter().find(|c| c.name() == s)
+    }
+
+    /// The class a kernel category reports under.
+    pub fn of_kind(kind: KernelKind) -> OpClass {
+        match kind {
+            KernelKind::Gemm | KernelKind::ScaledMm => OpClass::Gemm,
+            KernelKind::Attention => OpClass::Attention,
+            KernelKind::RmsNorm => OpClass::RmsNorm,
+            KernelKind::SiluMul => OpClass::SiluMul,
+            KernelKind::FusedMoe => OpClass::FusedMoe,
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            OpClass::Gemm => 0,
+            OpClass::Attention => 1,
+            OpClass::RmsNorm => 2,
+            OpClass::SiluMul => 3,
+            OpClass::FusedMoe => 4,
+            OpClass::AllReduce => 5,
+            OpClass::SendRecv => 6,
+            OpClass::HostGap => 7,
+        }
+    }
+}
+
+/// Ground-truth seconds per op class — the typed runtime breakdown
+/// (Table I view).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassBreakdown {
+    secs: [f64; 8],
+}
+
+impl ClassBreakdown {
+    pub fn add(&mut self, class: OpClass, secs: f64) {
+        self.secs[class.idx()] += secs;
+    }
+
+    pub fn set(&mut self, class: OpClass, secs: f64) {
+        self.secs[class.idx()] = secs;
+    }
+
+    pub fn get(&self, class: OpClass) -> f64 {
+        self.secs[class.idx()]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    /// Share of the breakdown total, percent (0 when the total is zero).
+    pub fn share_pct(&self, class: OpClass) -> f64 {
+        let total = self.total();
+        if total > 0.0 {
+            100.0 * self.get(class) / total
+        } else {
+            0.0
+        }
+    }
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// One scheduled phase of the report: per-method totals, the typed
+/// breakdown, launch and token accounting, and the derived serving
+/// metrics (TTFT for prefill, TPOT for decode, tokens/s for both).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseReport {
+    pub phase: Phase,
+    pub totals: MethodTotals,
+    /// Ground-truth seconds per op class within this phase.
+    pub breakdown: ClassBreakdown,
+    /// Kernel launches in this phase (fractional: decode checkpoints carry
+    /// integration weights).
+    pub launches: f64,
+    /// Tokens this phase processes: prompt tokens for prefill, generated
+    /// tokens for decode.
+    pub tokens: f64,
+    /// Sequential steps the phase spans: 1 for prefill, the longest
+    /// request's generation length for decode (each decode step emits one
+    /// token per active request, so wall time divides by steps — not by
+    /// the batch-aggregate token count — for inter-token latency).
+    pub steps: f64,
+}
+
+impl PhaseReport {
+    /// Phase wall time under one method's model of the world.
+    pub fn time_sec(&self, m: Method) -> f64 {
+        self.totals.get(m)
+    }
+
+    /// Time-to-first-token: the prefill phase's wall time.
+    pub fn ttft_sec(&self, m: Method) -> Option<f64> {
+        (self.phase == Phase::Prefill).then(|| self.time_sec(m))
+    }
+
+    /// Time-per-output-token: decode wall time per decode *step* — the
+    /// batch's inter-token latency, the metric serving systems report
+    /// (dividing by the aggregate token count would understate it by
+    /// roughly the batch size).
+    pub fn tpot_sec(&self, m: Method) -> Option<f64> {
+        (self.phase == Phase::Decode).then(|| ratio(self.time_sec(m), self.steps))
+    }
+
+    /// Aggregate token throughput of the phase (all requests together).
+    pub fn tokens_per_sec(&self, m: Method) -> f64 {
+        ratio(self.tokens, self.time_sec(m))
+    }
+}
+
+/// The typed answer of a simulation — never a bare number. Whole-scenario
+/// totals are accumulated in trace order, so they are bit-identical to the
+/// hand-built `build_trace` + `eval_trace` reference for the same spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioReport {
+    pub model: String,
+    pub gpu: String,
+    pub tp: u32,
+    pub pp: u32,
+    /// Scheduled phases in execution order (prefill before decode).
+    pub phases: Vec<PhaseReport>,
+    /// Whole-scenario per-method totals; `totals.degraded_kernels` is the
+    /// provenance count carried up from the protocol-v1 responses.
+    pub totals: MethodTotals,
+    /// Whole-scenario ground-truth seconds per op class.
+    pub breakdown: ClassBreakdown,
+    /// Total kernel launches across phases.
+    pub launches: f64,
+    /// Kernel items whose analysis came from the engine's memoizing cache.
+    pub cache_hits: usize,
+    pub host_gap_sec: f64,
+    pub seed: u64,
+}
+
+impl ScenarioReport {
+    pub fn phase(&self, phase: Phase) -> Option<&PhaseReport> {
+        self.phases.iter().find(|p| p.phase == phase)
+    }
+
+    /// TTFT under `m`, when the scenario schedules a prefill phase.
+    pub fn ttft_sec(&self, m: Method) -> Option<f64> {
+        self.phase(Phase::Prefill).and_then(|p| p.ttft_sec(m))
+    }
+
+    /// TPOT under `m`, when the scenario schedules a decode phase.
+    pub fn tpot_sec(&self, m: Method) -> Option<f64> {
+        self.phase(Phase::Decode).and_then(|p| p.tpot_sec(m))
+    }
+}
+
+/// The stateful simulation entry point: owns the per-category model set
+/// (empty = documented degraded roofline mode, visible in
+/// `totals.degraded_kernels`) and a per-GPU cache of trained RF
+/// communication models, so a sweep or a wire peer trains each comm model
+/// once.
+pub struct Simulator {
+    models: ModelSet,
+    comm_seed: u64,
+    comms: RefCell<HashMap<String, Rc<CommModel>>>,
+}
+
+impl Simulator {
+    /// Comm-model training seed shared with the experiment `Lab` default;
+    /// reference evaluations must train with the same seed to reproduce a
+    /// `Simulator`'s numbers exactly.
+    pub const DEFAULT_COMM_SEED: u64 = 0x5EED_CAFE;
+
+    pub fn new(models: ModelSet) -> Simulator {
+        Simulator::with_comm_seed(models, Self::DEFAULT_COMM_SEED)
+    }
+
+    pub fn with_comm_seed(models: ModelSet, comm_seed: u64) -> Simulator {
+        Simulator { models, comm_seed, comms: RefCell::new(HashMap::new()) }
+    }
+
+    /// A simulator with no trained models: every kernel item answers the
+    /// analytical roof with `Roofline` provenance.
+    pub fn degraded() -> Simulator {
+        Simulator::new(ModelSet::default())
+    }
+
+    fn comm_for(&self, gpu: &GpuSpec) -> Rc<CommModel> {
+        if let Some(m) = self.comms.borrow().get(gpu.name) {
+            return m.clone();
+        }
+        let m = Rc::new(CommModel::train(gpu, self.comm_seed));
+        self.comms.borrow_mut().insert(gpu.name.to_string(), m.clone());
+        m
+    }
+
+    /// Compile and evaluate one scenario.
+    pub fn simulate(&self, spec: &ScenarioSpec) -> Result<ScenarioReport, ScenarioError> {
+        let compiled = compile(spec)?;
+        let comm = self.comm_for(&compiled.gpu);
+        Ok(evaluate(&compiled, &self.models, &comm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_every_field() {
+        let reqs = vec![Request { input_len: 64, output_len: 8 }];
+        let spec = ScenarioSpec::new("Llama3.1-8B", "H800")
+            .tp(2)
+            .pp(2)
+            .workload(WorkloadSpec::Explicit(reqs.clone()))
+            .phases(PhaseSelection::PrefillOnly)
+            .seed(99)
+            .host_gap_sec(1.5e-6);
+        assert_eq!(spec.model, "Llama3.1-8B");
+        assert_eq!(spec.gpu, "H800");
+        assert_eq!((spec.tp, spec.pp), (2, 2));
+        assert_eq!(spec.workload, WorkloadSpec::Explicit(reqs));
+        assert_eq!(spec.phases, PhaseSelection::PrefillOnly);
+        assert_eq!(spec.seed, 99);
+        assert_eq!(spec.host_gap_sec, 1.5e-6);
+    }
+
+    #[test]
+    fn error_codes_are_stable() {
+        let cases: [(ScenarioError, &str); 5] = [
+            (ScenarioError::UnknownModel("x".into()), "unknown_model"),
+            (ScenarioError::UnknownGpu("x".into()), "unknown_gpu"),
+            (ScenarioError::InvalidParallelism("x".into()), "invalid_parallelism"),
+            (ScenarioError::InvalidWorkload("x".into()), "invalid_workload"),
+            (ScenarioError::MalformedSpec("x".into()), "malformed_spec"),
+        ];
+        for (err, code) in cases {
+            assert_eq!(err.code(), code);
+            assert!(!err.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn class_breakdown_accumulates_and_shares() {
+        let mut b = ClassBreakdown::default();
+        b.add(OpClass::Gemm, 0.3);
+        b.add(OpClass::Gemm, 0.1);
+        b.add(OpClass::HostGap, 0.1);
+        assert_eq!(b.get(OpClass::Gemm), 0.4);
+        assert_eq!(b.total(), 0.5);
+        assert!((b.share_pct(OpClass::Gemm) - 80.0).abs() < 1e-9);
+        assert_eq!(b.share_pct(OpClass::SendRecv), 0.0);
+        assert_eq!(ClassBreakdown::default().share_pct(OpClass::Gemm), 0.0);
+        for c in OpClass::ALL {
+            assert_eq!(OpClass::from_name(c.name()), Some(c));
+        }
+    }
+
+    #[test]
+    fn degraded_simulator_reports_provenance_and_phases() {
+        let sim = Simulator::degraded();
+        let spec = ScenarioSpec::new("llama3.1-8b", "A100")
+            .workload(WorkloadSpec::Explicit(vec![
+                Request { input_len: 96, output_len: 8 },
+                Request { input_len: 64, output_len: 4 },
+            ]))
+            .seed(5);
+        let r = sim.simulate(&spec).unwrap();
+        assert_eq!(r.phases.len(), 2);
+        assert_eq!(r.phases[0].phase, Phase::Prefill);
+        assert_eq!(r.phases[1].phase, Phase::Decode);
+        assert!(r.totals.actual > 0.0 && r.totals.synperf > 0.0);
+        assert!(r.totals.degraded_kernels > 0, "no models: provenance must say degraded");
+        assert!(r.launches > 0.0);
+        assert!(r.ttft_sec(Method::Actual).unwrap() > 0.0);
+        assert!(r.tpot_sec(Method::SynPerf).unwrap() > 0.0);
+        let prefill = r.phase(Phase::Prefill).unwrap();
+        assert_eq!(prefill.tokens, 160.0);
+        assert!(prefill.tokens_per_sec(Method::Actual) > 0.0);
+        assert!(prefill.breakdown.get(OpClass::Gemm) > 0.0);
+        assert!(prefill.breakdown.get(OpClass::HostGap) > 0.0);
+        // tp=1: no collectives anywhere
+        assert_eq!(r.breakdown.get(OpClass::AllReduce), 0.0);
+        assert_eq!(r.breakdown.get(OpClass::SendRecv), 0.0);
+    }
+
+    #[test]
+    fn simulate_surfaces_the_closed_taxonomy() {
+        let sim = Simulator::degraded();
+        let base = |model: &str, gpu: &str| ScenarioSpec::new(model, gpu);
+        assert!(matches!(
+            sim.simulate(&base("GPT-5", "A100")),
+            Err(ScenarioError::UnknownModel(_))
+        ));
+        assert!(matches!(
+            sim.simulate(&base("Qwen2.5-14B", "B300")),
+            Err(ScenarioError::UnknownGpu(_))
+        ));
+        assert!(matches!(
+            sim.simulate(&base("Qwen2.5-14B", "A100").tp(3)),
+            Err(ScenarioError::InvalidParallelism(_))
+        ));
+        assert!(matches!(
+            sim.simulate(
+                &base("Qwen2.5-14B", "A100")
+                    .workload(WorkloadSpec::Sampled { kind: WorkloadKind::Arxiv, batch: 0 })
+            ),
+            Err(ScenarioError::InvalidWorkload(_))
+        ));
+        assert!(matches!(
+            sim.simulate(&base("Qwen2.5-14B", "A100").host_gap_sec(-1.0)),
+            Err(ScenarioError::MalformedSpec(_))
+        ));
+    }
+}

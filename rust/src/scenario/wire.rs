@@ -1,0 +1,568 @@
+//! JSONL wire codec for the **`simulate` verb** of Scenario API v1: a
+//! request line carries a [`ScenarioSpec`], the response line a
+//! [`ScenarioReport`] (or a closed-taxonomy [`ScenarioError`]). The same
+//! lines ride `synperf simulate` and `synperf serve --stdio` (which
+//! dispatches per line between the `predict` and `simulate` verbs).
+//!
+//! Request line:
+//!
+//! ```json
+//! {"v":1,"id":"s1","op":"simulate","scenario":{"model":"Qwen2.5-14B",
+//!  "gpu":"A100","tp":2,"pp":1,"workload":{"kind":"arxiv","batch":8},
+//!  "phases":"both","seed":7,"host_gap_sec":8e-7}}
+//! ```
+//!
+//! `scenario.model` and `scenario.gpu` are required; everything else is
+//! optional with the defaults shown. An explicit request mix replaces the
+//! sampled workload: `"workload":{"requests":[[1000,200],[2000,100]]}`.
+//! The response carries per-phase TTFT/TPOT/tokens-per-second, per-method
+//! totals, the typed per-class breakdown, and provenance counts:
+//!
+//! ```json
+//! {"v":1,"id":"s1","ok":true,"report":{"model":"Qwen2.5-14B","gpu":"A100",
+//!  "tp":2,"pp":1,"seed":7,"host_gap_sec":8e-7,"launches":4.4e2,
+//!  "cache_hits":40,"totals":{...,"degraded_kernels":44},"breakdown":{...},
+//!  "phases":[{"phase":"prefill","ttft_sec":{...},...},...]}}
+//! {"v":1,"id":"s2","ok":false,"error":{"code":"unknown_model",
+//!  "message":"unknown model \"GPT-5\" (see llm::registry())","model":"GPT-5"}}
+//! ```
+//!
+//! Malformed lines map to [`ScenarioError::MalformedSpec`] (mirroring the
+//! predict verb's malformed-request bucket).
+
+use super::{
+    ClassBreakdown, Method, MethodTotals, OpClass, Phase, PhaseReport, PhaseSelection,
+    ScenarioError, ScenarioReport, ScenarioSpec, WorkloadSpec,
+};
+use crate::api::wire::{esc, id_of};
+use crate::api::PROTOCOL_VERSION;
+use crate::e2e::workload::{Request, WorkloadKind};
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Result};
+
+fn malformed(why: impl Into<String>) -> ScenarioError {
+    ScenarioError::MalformedSpec(why.into())
+}
+
+fn num_u32(v: &Json, what: &str) -> Result<u32, ScenarioError> {
+    v.as_f64()
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= u32::MAX as f64)
+        .map(|n| n as u32)
+        .ok_or_else(|| malformed(format!("{what:?} must be an unsigned integer")))
+}
+
+fn num_u64(v: &Json, what: &str) -> Result<u64, ScenarioError> {
+    v.as_f64()
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= (1u64 << 53) as f64)
+        .map(|n| n as u64)
+        .ok_or_else(|| malformed(format!("{what:?} must be an unsigned integer")))
+}
+
+/// Seeds are u64, but JSON numbers only survive the f64-based parser up to
+/// 2^53 — larger seeds travel as strings so the codec round-trips its own
+/// output for every value. [`seed_from`] accepts both shapes.
+fn seed_to_json(seed: u64) -> String {
+    if seed <= (1u64 << 53) {
+        format!("{seed}")
+    } else {
+        format!("\"{seed}\"")
+    }
+}
+
+fn seed_from(v: &Json, what: &str) -> Result<u64, ScenarioError> {
+    match v {
+        Json::Str(s) => s
+            .parse::<u64>()
+            .map_err(|_| malformed(format!("{what:?} must be a u64"))),
+        _ => num_u64(v, what),
+    }
+}
+
+// ---- spec ----------------------------------------------------------------
+
+fn spec_to_json(spec: &ScenarioSpec) -> String {
+    let workload = match &spec.workload {
+        WorkloadSpec::Sampled { kind, batch } => {
+            format!(r#"{{"kind":"{}","batch":{}}}"#, kind.name(), batch)
+        }
+        WorkloadSpec::Explicit(reqs) => {
+            let pairs: Vec<String> =
+                reqs.iter().map(|r| format!("[{},{}]", r.input_len, r.output_len)).collect();
+            format!(r#"{{"requests":[{}]}}"#, pairs.join(","))
+        }
+    };
+    format!(
+        r#"{{"model":"{}","gpu":"{}","tp":{},"pp":{},"workload":{},"phases":"{}","seed":{},"host_gap_sec":{:e}}}"#,
+        esc(&spec.model),
+        esc(&spec.gpu),
+        spec.tp,
+        spec.pp,
+        workload,
+        spec.phases.name(),
+        seed_to_json(spec.seed),
+        spec.host_gap_sec
+    )
+}
+
+/// Serialize a simulate request into its canonical wire line (no trailing
+/// newline). The inverse of [`parse_simulate_request`].
+pub fn encode_simulate_request(id: Option<&str>, spec: &ScenarioSpec) -> String {
+    let mut out = format!("{{\"v\":{PROTOCOL_VERSION}");
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    out.push_str(&format!(",\"op\":\"simulate\",\"scenario\":{}", spec_to_json(spec)));
+    out.push('}');
+    out
+}
+
+/// Parse one bare `scenario` object into a spec.
+fn parse_spec_object(j: &Json) -> Result<ScenarioSpec, ScenarioError> {
+    let model = j
+        .get("model")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| malformed("scenario needs \"model\": \"<name>\""))?;
+    let gpu = j
+        .get("gpu")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| malformed("scenario needs \"gpu\": \"<name>\""))?;
+    let mut spec = ScenarioSpec::new(model, gpu);
+    if let Some(v) = j.get("tp") {
+        spec.tp = num_u32(v, "tp")?;
+    }
+    if let Some(v) = j.get("pp") {
+        spec.pp = num_u32(v, "pp")?;
+    }
+    if let Some(w) = j.get("workload") {
+        spec.workload = if let Some(rs) = w.get("requests") {
+            let arr = rs
+                .as_arr()
+                .ok_or_else(|| malformed("\"requests\" must be an array of [input,output] pairs"))?;
+            let mut reqs = Vec::with_capacity(arr.len());
+            for pair in arr {
+                let p = pair
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| malformed("request entries are [input,output] pairs"))?;
+                reqs.push(Request {
+                    input_len: num_u32(&p[0], "input_len")?,
+                    output_len: num_u32(&p[1], "output_len")?,
+                });
+            }
+            WorkloadSpec::Explicit(reqs)
+        } else {
+            let kind = match w.get("kind") {
+                None => WorkloadKind::Arxiv,
+                Some(v) => super::workload_kind(
+                    v.as_str().ok_or_else(|| malformed("\"kind\" must be a string"))?,
+                )?,
+            };
+            let batch = match w.get("batch") {
+                None => 8,
+                // saturate rather than wrap on 32-bit targets: the
+                // compiler's MAX_BATCH cap owns the rejection either way
+                Some(v) => usize::try_from(num_u64(v, "batch")?).unwrap_or(usize::MAX),
+            };
+            WorkloadSpec::Sampled { kind, batch }
+        };
+    }
+    if let Some(v) = j.get("phases") {
+        let name = v.as_str().ok_or_else(|| malformed("\"phases\" must be a string"))?;
+        spec.phases = PhaseSelection::parse(name)?;
+    }
+    if let Some(v) = j.get("seed") {
+        spec.seed = seed_from(v, "seed")?;
+    }
+    if let Some(v) = j.get("host_gap_sec") {
+        spec.host_gap_sec =
+            v.as_f64().ok_or_else(|| malformed("\"host_gap_sec\" must be a number"))?;
+    }
+    Ok(spec)
+}
+
+fn simulate_fields(j: &Json) -> Result<ScenarioSpec, ScenarioError> {
+    if let Some(v) = j.get("v").and_then(|v| v.as_f64()) {
+        if v as u32 != PROTOCOL_VERSION {
+            return Err(malformed(format!(
+                "protocol version {v} (this build speaks v{PROTOCOL_VERSION})"
+            )));
+        }
+    }
+    let sc = j
+        .get("scenario")
+        .ok_or_else(|| malformed("simulate request needs a \"scenario\" object"))?;
+    parse_spec_object(sc)
+}
+
+/// Parse one simulate request line (the `{"op":"simulate","scenario":{..}}`
+/// envelope). The extracted `id` (if any) is returned even when parsing
+/// fails, so the error response can still be correlated.
+pub fn parse_simulate_request(line: &str) -> (Option<String>, Result<ScenarioSpec, ScenarioError>) {
+    let j = match parse(line) {
+        Ok(j) => j,
+        Err(e) => return (None, Err(malformed(format!("malformed JSON: {e}")))),
+    };
+    parse_simulate_json(&j)
+}
+
+/// Envelope parse over an already-decoded line (single-parse dispatch).
+pub(crate) fn parse_simulate_json(
+    j: &Json,
+) -> (Option<String>, Result<ScenarioSpec, ScenarioError>) {
+    (id_of(j), simulate_fields(j))
+}
+
+/// Parse a spec line in either shape: the wire envelope or a bare
+/// `scenario` object (`{"model":..,"gpu":..}`) — what `synperf simulate
+/// --spec` accepts.
+pub fn parse_spec_line(line: &str) -> (Option<String>, Result<ScenarioSpec, ScenarioError>) {
+    let j = match parse(line) {
+        Ok(j) => j,
+        Err(e) => return (None, Err(malformed(format!("malformed JSON: {e}")))),
+    };
+    let res = if j.get("scenario").is_some() || j.get("op").is_some() {
+        simulate_fields(&j)
+    } else {
+        parse_spec_object(&j)
+    };
+    (id_of(&j), res)
+}
+
+/// Whether a decoded wire object addresses the simulate verb (vs the
+/// predict verb).
+pub(crate) fn is_simulate_json(j: &Json) -> bool {
+    j.get("op").and_then(|v| v.as_str()) == Some("simulate") || j.get("scenario").is_some()
+}
+
+/// Whether a wire line addresses the simulate verb (vs the predict verb).
+/// Malformed JSON is not claimed — the predict codec owns that bucket, so
+/// pre-scenario peers see unchanged error lines.
+pub fn is_simulate_request(line: &str) -> bool {
+    match parse(line) {
+        Ok(j) => is_simulate_json(&j),
+        Err(_) => false,
+    }
+}
+
+// ---- report --------------------------------------------------------------
+
+fn totals_to_json(t: &MethodTotals) -> String {
+    format!(
+        r#"{{"actual_sec":{:e},"synperf_sec":{:e},"roofline_sec":{:e},"linear_sec":{:e},"habitat_sec":{:e},"neusight_sec":{:e},"degraded_kernels":{}}}"#,
+        t.actual, t.synperf, t.roofline, t.linear, t.habitat, t.neusight, t.degraded_kernels
+    )
+}
+
+/// Breakdown keys are `<class>_sec` — except the host-gap aggregate,
+/// which travels as `host_gap_total_sec` so a flat key-scan can never
+/// confuse it with the per-launch `host_gap_sec` spec/report parameter.
+fn class_key(c: OpClass) -> &'static str {
+    match c {
+        OpClass::Gemm => "gemm_sec",
+        OpClass::Attention => "attention_sec",
+        OpClass::RmsNorm => "rmsnorm_sec",
+        OpClass::SiluMul => "silu_mul_sec",
+        OpClass::FusedMoe => "fused_moe_sec",
+        OpClass::AllReduce => "all_reduce_sec",
+        OpClass::SendRecv => "send_recv_sec",
+        OpClass::HostGap => "host_gap_total_sec",
+    }
+}
+
+fn breakdown_to_json(b: &ClassBreakdown) -> String {
+    let fields: Vec<String> = OpClass::ALL
+        .iter()
+        .map(|c| format!(r#""{}":{:e}"#, class_key(*c), b.get(*c)))
+        .collect();
+    format!("{{{}}}", fields.join(","))
+}
+
+fn phase_to_json(p: &PhaseReport) -> String {
+    let mut out = format!(
+        r#"{{"phase":"{}","tokens":{:e},"steps":{:e},"launches":{:e}"#,
+        p.phase.name(),
+        p.tokens,
+        p.steps,
+        p.launches
+    );
+    match p.phase {
+        Phase::Prefill => out.push_str(&format!(
+            r#","ttft_sec":{{"actual":{:e},"synperf":{:e}}}"#,
+            p.ttft_sec(Method::Actual).unwrap_or(0.0),
+            p.ttft_sec(Method::SynPerf).unwrap_or(0.0)
+        )),
+        Phase::Decode => out.push_str(&format!(
+            r#","tpot_sec":{{"actual":{:e},"synperf":{:e}}}"#,
+            p.tpot_sec(Method::Actual).unwrap_or(0.0),
+            p.tpot_sec(Method::SynPerf).unwrap_or(0.0)
+        )),
+    }
+    out.push_str(&format!(
+        r#","tokens_per_sec":{{"actual":{:e},"synperf":{:e}}}"#,
+        p.tokens_per_sec(Method::Actual),
+        p.tokens_per_sec(Method::SynPerf)
+    ));
+    out.push_str(&format!(
+        r#","totals":{},"breakdown":{}}}"#,
+        totals_to_json(&p.totals),
+        breakdown_to_json(&p.breakdown)
+    ));
+    out
+}
+
+fn report_to_json(r: &ScenarioReport) -> String {
+    let phases: Vec<String> = r.phases.iter().map(phase_to_json).collect();
+    format!(
+        r#"{{"model":"{}","gpu":"{}","tp":{},"pp":{},"seed":{},"host_gap_sec":{:e},"launches":{:e},"cache_hits":{},"totals":{},"breakdown":{},"phases":[{}]}}"#,
+        esc(&r.model),
+        esc(&r.gpu),
+        r.tp,
+        r.pp,
+        seed_to_json(r.seed),
+        r.host_gap_sec,
+        r.launches,
+        r.cache_hits,
+        totals_to_json(&r.totals),
+        breakdown_to_json(&r.breakdown),
+        phases.join(",")
+    )
+}
+
+/// Serialize one simulate result into its wire line (no trailing newline).
+pub fn encode_report(id: Option<&str>, res: &Result<ScenarioReport, ScenarioError>) -> String {
+    let mut out = format!("{{\"v\":{PROTOCOL_VERSION}");
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    match res {
+        Ok(r) => out.push_str(&format!(",\"ok\":true,\"report\":{}", report_to_json(r))),
+        Err(e) => {
+            out.push_str(&format!(
+                ",\"ok\":false,\"error\":{{\"code\":\"{}\",\"message\":\"{}\"",
+                e.code(),
+                esc(&e.to_string())
+            ));
+            match e {
+                ScenarioError::UnknownModel(name) => {
+                    out.push_str(&format!(",\"model\":\"{}\"", esc(name)));
+                }
+                ScenarioError::UnknownGpu(name) => {
+                    out.push_str(&format!(",\"gpu\":\"{}\"", esc(name)));
+                }
+                ScenarioError::InvalidParallelism(why)
+                | ScenarioError::InvalidWorkload(why)
+                | ScenarioError::MalformedSpec(why) => {
+                    out.push_str(&format!(",\"reason\":\"{}\"", esc(why)));
+                }
+            }
+            out.push('}');
+        }
+    }
+    out.push('}');
+    out
+}
+
+fn f64_field(j: &Json, key: &str) -> Result<f64> {
+    j.get(key).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("report field {key:?} missing"))
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("report field {key:?} missing"))
+}
+
+fn totals_from_json(j: &Json) -> Result<MethodTotals> {
+    let mut t = MethodTotals::default();
+    for m in Method::ALL {
+        let key = format!("{}_sec", m.name());
+        let v = j
+            .get(&key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("totals field {key:?} missing"))?;
+        t.set(m, v);
+    }
+    t.degraded_kernels = j
+        .get("degraded_kernels")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("totals need \"degraded_kernels\""))? as usize;
+    Ok(t)
+}
+
+fn breakdown_from_json(j: &Json) -> Result<ClassBreakdown> {
+    let mut b = ClassBreakdown::default();
+    for c in OpClass::ALL {
+        let key = class_key(c);
+        let v = j
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("breakdown field {key:?} missing"))?;
+        b.set(c, v);
+    }
+    Ok(b)
+}
+
+fn phase_from_json(j: &Json) -> Result<PhaseReport> {
+    let phase = j
+        .get("phase")
+        .and_then(|v| v.as_str())
+        .and_then(Phase::from_name)
+        .ok_or_else(|| anyhow!("bad phase"))?;
+    Ok(PhaseReport {
+        phase,
+        totals: totals_from_json(j.get("totals").ok_or_else(|| anyhow!("phase needs totals"))?)?,
+        breakdown: breakdown_from_json(
+            j.get("breakdown").ok_or_else(|| anyhow!("phase needs breakdown"))?,
+        )?,
+        launches: f64_field(j, "launches")?,
+        tokens: f64_field(j, "tokens")?,
+        steps: f64_field(j, "steps")?,
+    })
+}
+
+/// Parse one report line back into the typed result — the client half of
+/// the wire, used by round-trip tests and remote tooling.
+pub fn parse_report(
+    line: &str,
+) -> Result<(Option<String>, Result<ScenarioReport, ScenarioError>)> {
+    let j = parse(line)?;
+    let id = id_of(&j);
+    let ok =
+        j.get("ok").and_then(|v| v.as_bool()).ok_or_else(|| anyhow!("response needs \"ok\""))?;
+    if !ok {
+        let err = j.get("error").ok_or_else(|| anyhow!("error response needs \"error\""))?;
+        let code = err
+            .get("code")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("error needs \"code\""))?;
+        let message =
+            err.get("message").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        let reason =
+            err.get("reason").and_then(|v| v.as_str()).map(str::to_string).unwrap_or(message);
+        let detail = |key: &str| {
+            err.get(key).and_then(|v| v.as_str()).unwrap_or_default().to_string()
+        };
+        let e = match code {
+            "unknown_model" => ScenarioError::UnknownModel(detail("model")),
+            "unknown_gpu" => ScenarioError::UnknownGpu(detail("gpu")),
+            "invalid_parallelism" => ScenarioError::InvalidParallelism(reason),
+            "invalid_workload" => ScenarioError::InvalidWorkload(reason),
+            "malformed_spec" => ScenarioError::MalformedSpec(reason),
+            other => anyhow::bail!("unknown error code {other:?}"),
+        };
+        return Ok((id, Err(e)));
+    }
+    let rep = j.get("report").ok_or_else(|| anyhow!("ok response needs a \"report\""))?;
+    let phases = rep
+        .get("phases")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("report needs \"phases\""))?
+        .iter()
+        .map(phase_from_json)
+        .collect::<Result<Vec<PhaseReport>>>()?;
+    Ok((
+        id,
+        Ok(ScenarioReport {
+            model: str_field(rep, "model")?,
+            gpu: str_field(rep, "gpu")?,
+            tp: f64_field(rep, "tp")? as u32,
+            pp: f64_field(rep, "pp")? as u32,
+            phases,
+            totals: totals_from_json(
+                rep.get("totals").ok_or_else(|| anyhow!("report needs \"totals\""))?,
+            )?,
+            breakdown: breakdown_from_json(
+                rep.get("breakdown").ok_or_else(|| anyhow!("report needs \"breakdown\""))?,
+            )?,
+            launches: f64_field(rep, "launches")?,
+            cache_hits: f64_field(rep, "cache_hits")? as usize,
+            host_gap_sec: f64_field(rep, "host_gap_sec")?,
+            seed: seed_from(
+                rep.get("seed").ok_or_else(|| anyhow!("report needs \"seed\""))?,
+                "seed",
+            )?,
+        }),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_lines_round_trip_both_workload_shapes() {
+        let sampled = ScenarioSpec::new("Qwen3-32B", "H800")
+            .tp(8)
+            .workload(WorkloadSpec::Sampled { kind: WorkloadKind::Splitwise, batch: 48 })
+            .phases(PhaseSelection::DecodeOnly)
+            .seed(123)
+            .host_gap_sec(1.25e-6);
+        let explicit = ScenarioSpec::new("Llama3.1-8B", "A100")
+            .workload(WorkloadSpec::Explicit(vec![
+                Request { input_len: 1000, output_len: 200 },
+                Request { input_len: 2000, output_len: 100 },
+            ]));
+        for spec in [sampled, explicit] {
+            let line = encode_simulate_request(Some("x"), &spec);
+            assert!(is_simulate_request(&line), "{line}");
+            let (id, parsed) = parse_simulate_request(&line);
+            assert_eq!(id.as_deref(), Some("x"));
+            assert_eq!(parsed.unwrap(), spec, "round trip of {line}");
+        }
+    }
+
+    #[test]
+    fn bare_spec_objects_parse_too() {
+        let (_, spec) = parse_spec_line(r#"{"model":"qwen2.5-14b","gpu":"A100","tp":2}"#);
+        let spec = spec.unwrap();
+        assert_eq!(spec.model, "qwen2.5-14b");
+        assert_eq!(spec.tp, 2);
+        assert_eq!(spec.host_gap_sec, crate::scenario::HOST_GAP_SEC);
+    }
+
+    #[test]
+    fn malformed_lines_map_into_the_taxonomy() {
+        let cases = [
+            ("not json at all", "malformed_spec"),
+            (r#"{"op":"simulate"}"#, "malformed_spec"),
+            (r#"{"v":9,"op":"simulate","scenario":{"model":"a","gpu":"b"}}"#, "malformed_spec"),
+            (r#"{"op":"simulate","scenario":{"gpu":"A100"}}"#, "malformed_spec"),
+            (
+                r#"{"op":"simulate","scenario":{"model":"a","gpu":"b","workload":{"kind":"mmlu"}}}"#,
+                "invalid_workload",
+            ),
+            (
+                r#"{"op":"simulate","scenario":{"model":"a","gpu":"b","tp":1.5}}"#,
+                "malformed_spec",
+            ),
+        ];
+        for (line, code) in cases {
+            let (_, res) = parse_simulate_request(line);
+            assert_eq!(res.unwrap_err().code(), code, "for line {line}");
+        }
+    }
+
+    #[test]
+    fn large_seeds_round_trip_as_strings() {
+        // above 2^53 a JSON number would lose bits in the f64 parser, so
+        // the codec switches to a string — and accepts both shapes
+        let spec = ScenarioSpec::new("Qwen2.5-14B", "A100").seed(u64::MAX);
+        let line = encode_simulate_request(None, &spec);
+        assert!(line.contains(r#""seed":"18446744073709551615""#), "{line}");
+        let (_, back) = parse_simulate_request(&line);
+        assert_eq!(back.unwrap().seed, u64::MAX);
+        // small seeds stay plain numbers (golden-line compatible)
+        let spec = ScenarioSpec::new("Qwen2.5-14B", "A100").seed(7);
+        assert!(encode_simulate_request(None, &spec).contains(r#""seed":7,"#));
+    }
+
+    #[test]
+    fn predict_lines_are_not_claimed() {
+        assert!(!is_simulate_request(
+            r#"{"gpu":"A100","kernel":{"type":"gemm","m":1,"n":1,"k":1}}"#
+        ));
+        assert!(!is_simulate_request("garbage"));
+        assert!(is_simulate_request(r#"{"scenario":{"model":"m","gpu":"g"}}"#));
+    }
+}

@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use synperf::dataset::finalize_for_gpu;
 use synperf::e2e::comm::CommModel;
-use synperf::e2e::predict::{eval_trace, ModelSet};
+use synperf::e2e::predict::{eval_trace, ModelSet, HOST_GAP_SEC};
 use synperf::e2e::trace::{Op, TraceItem};
 use synperf::engine::{par, PredictionEngine};
 use synperf::features::FeatureSet;
@@ -196,7 +196,7 @@ fn repeated_trace_launches_hit_the_decomposition_cache() {
 
     let engine = PredictionEngine::global();
     let before = engine.stats();
-    let totals = eval_trace(&trace, &gpu, 1, &models, &comm, 99).unwrap();
+    let totals = eval_trace(&trace, &gpu, 1, &models, &comm, 99, HOST_GAP_SEC).unwrap();
     let after = engine.stats();
 
     assert!(totals.actual > 0.0 && totals.synperf > 0.0);

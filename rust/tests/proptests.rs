@@ -544,3 +544,101 @@ fn routing_conserves_tokens_and_grid_covers() {
         assert!(d.num_tasks() > 0);
     });
 }
+
+// ---- Scenario API v1 -----------------------------------------------------
+
+use synperf::e2e::comm::CommModel;
+use synperf::e2e::llm;
+use synperf::e2e::predict::{eval_trace, Method, ModelSet};
+use synperf::e2e::trace;
+use synperf::e2e::workload::Request;
+use synperf::hw::gpu_by_name;
+use synperf::scenario::{compile, ScenarioSpec, Simulator, WorkloadSpec};
+
+/// Kernel launches are a property of the workload, not of how the model is
+/// sharded: compiled traces must conserve `launch_count` across tp/pp
+/// splits (collectives are comm ops, not kernel launches).
+#[test]
+fn compiled_scenarios_conserve_launch_count_across_parallelism() {
+    prop_check("scenario_launch_conservation", 20, |r| {
+        let registry = llm::registry();
+        let cfg = &registry[r.range_usize(0, registry.len() - 1)];
+        let n = r.range_usize(1, 4);
+        let reqs: Vec<Request> = (0..n)
+            .map(|_| Request {
+                input_len: r.range_usize(16, 512) as u32,
+                output_len: r.range_usize(1, 64) as u32,
+            })
+            .collect();
+        let spec_for = |tp: u32, pp: u32| {
+            ScenarioSpec::new(cfg.name, "A100")
+                .tp(tp)
+                .pp(pp)
+                .workload(WorkloadSpec::Explicit(reqs.clone()))
+                .seed(9)
+        };
+        let base = compile(&spec_for(1, 1)).unwrap();
+        let base_lc = base.launch_count();
+        assert!(base_lc > 0.0);
+        for (tp, pp) in [(2u32, 1u32), (4, 1), (8, 1), (2, 2), (1, 2)] {
+            if cfg.heads % tp != 0 || pp > cfg.layers {
+                continue;
+            }
+            let c = compile(&spec_for(tp, pp)).unwrap();
+            assert_eq!(
+                c.launch_count().to_bits(),
+                base_lc.to_bits(),
+                "{} tp={tp} pp={pp}: kernel launches must be conserved",
+                cfg.name
+            );
+            assert_eq!(c.requests, base.requests, "explicit mixes are sharding-invariant");
+        }
+    });
+}
+
+/// The declarative path must not change a single bit of the answer: a
+/// `ScenarioReport`'s method totals are bit-identical to the hand-built
+/// `build_trace` + `eval_trace` reference, for every registered LLM config
+/// on A100 and H800 (the two testbed GPUs of the paper's Table VI splits).
+#[test]
+fn scenario_reports_match_the_handbuilt_trace_reference() {
+    let reqs = vec![
+        Request { input_len: 160, output_len: 24 },
+        Request { input_len: 96, output_len: 12 },
+    ];
+    let sim = Simulator::degraded();
+    let (tp, pp) = (2u32, 2u32);
+    for gpu_name in ["A100", "H800"] {
+        let gpu = gpu_by_name(gpu_name).unwrap();
+        // same comm seed as the simulator's cache: identical RF models
+        let comm = CommModel::train(&gpu, Simulator::DEFAULT_COMM_SEED);
+        for cfg in llm::registry() {
+            let spec = ScenarioSpec::new(cfg.name, gpu_name)
+                .tp(tp)
+                .pp(pp)
+                .workload(WorkloadSpec::Explicit(reqs.clone()))
+                .seed(1234)
+                .host_gap_sec(1.1e-6);
+            let report = sim.simulate(&spec).unwrap();
+            let tr = trace::build_trace(cfg, tp, pp, &reqs);
+            let reference =
+                eval_trace(&tr, &gpu, tp, &ModelSet::default(), &comm, 1234, 1.1e-6).unwrap();
+            for m in Method::ALL {
+                assert_eq!(
+                    report.totals.get(m).to_bits(),
+                    reference.get(m).to_bits(),
+                    "{} on {gpu_name}: {} must be bit-identical to the reference",
+                    cfg.name,
+                    m.name()
+                );
+            }
+            assert_eq!(report.totals.degraded_kernels, reference.degraded_kernels);
+            assert_eq!(
+                report.launches.to_bits(),
+                trace::launch_count(&tr).to_bits(),
+                "{}: launch accounting must match",
+                cfg.name
+            );
+        }
+    }
+}

@@ -3,15 +3,26 @@
 //! (wire-format drift fails loudly), plus the backpressure contract of the
 //! bounded service queue — saturation yields `QueueFull`, never unbounded
 //! growth or a hang — and graceful drain on shutdown.
+//!
+//! The Scenario-API `simulate` verb gets the same treatment: exact golden
+//! lines for the simulate request, the `ScenarioReport` response and every
+//! `ScenarioError` variant, plus a full round trip over the stdio wire.
 
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
+use synperf::api::stdio::serve_lines;
 use synperf::api::{
     wire, Flavor, ModelBundle, PredictError, PredictRequest, PredictResponse, Provenance, Source,
 };
 use synperf::coordinator::{PredictionService, ServiceConfig};
+use synperf::e2e::workload::{Request, WorkloadKind};
 use synperf::hw::gpu_by_name;
 use synperf::kernels::{DType, KernelConfig, KernelKind};
+use synperf::scenario::wire as scenario_wire;
+use synperf::scenario::{
+    ClassBreakdown, MethodTotals, OpClass, Phase, PhaseReport, ScenarioError, ScenarioReport,
+    ScenarioSpec, Simulator, WorkloadSpec,
+};
 
 fn gemm(m: u32, n: u32, k: u32) -> KernelConfig {
     KernelConfig::Gemm { m, n, k, dtype: DType::Bf16 }
@@ -190,5 +201,230 @@ fn service_answers_are_typed_end_to_end() {
         .predict(PredictRequest::new(gemm(911, 433, 277), gpu).strict())
         .unwrap_err();
     assert_eq!(err, PredictError::PredictorUnavailable(KernelKind::Gemm));
+    svc.shutdown();
+}
+
+// ---- Scenario API v1: the simulate verb ----------------------------------
+
+#[test]
+fn simulate_request_golden_lines() {
+    let sampled = ScenarioSpec::new("Qwen2.5-14B", "A100")
+        .tp(2)
+        .workload(WorkloadSpec::Sampled { kind: WorkloadKind::Arxiv, batch: 8 })
+        .seed(7);
+    let line = scenario_wire::encode_simulate_request(Some("s1"), &sampled);
+    assert_eq!(
+        line,
+        r#"{"v":1,"id":"s1","op":"simulate","scenario":{"model":"Qwen2.5-14B","gpu":"A100","tp":2,"pp":1,"workload":{"kind":"arxiv","batch":8},"phases":"both","seed":7,"host_gap_sec":8e-7}}"#
+    );
+    let (id, parsed) = scenario_wire::parse_simulate_request(&line);
+    assert_eq!(id.as_deref(), Some("s1"));
+    assert_eq!(parsed.unwrap(), sampled);
+
+    let explicit = ScenarioSpec::new("Llama3.1-8B", "H800")
+        .pp(2)
+        .workload(WorkloadSpec::Explicit(vec![
+            Request { input_len: 1000, output_len: 200 },
+            Request { input_len: 2000, output_len: 100 },
+        ]))
+        .host_gap_sec(1e-6);
+    let line = scenario_wire::encode_simulate_request(None, &explicit);
+    assert_eq!(
+        line,
+        r#"{"v":1,"op":"simulate","scenario":{"model":"Llama3.1-8B","gpu":"H800","tp":1,"pp":2,"workload":{"requests":[[1000,200],[2000,100]]},"phases":"both","seed":0,"host_gap_sec":1e-6}}"#
+    );
+    let (id, parsed) = scenario_wire::parse_simulate_request(&line);
+    assert_eq!(id, None);
+    assert_eq!(parsed.unwrap(), explicit);
+}
+
+/// A hand-built report with exactly-representable values, so the golden
+/// line is stable and the parse-back is bit-exact.
+fn golden_report() -> ScenarioReport {
+    let mut prefill_bd = ClassBreakdown::default();
+    prefill_bd.set(OpClass::Gemm, 0.125);
+    prefill_bd.set(OpClass::Attention, 0.0625);
+    prefill_bd.set(OpClass::RmsNorm, 0.03125);
+    prefill_bd.set(OpClass::SiluMul, 0.015625);
+    prefill_bd.set(OpClass::AllReduce, 0.0078125);
+    prefill_bd.set(OpClass::HostGap, 0.0078125);
+    let mut decode_bd = ClassBreakdown::default();
+    decode_bd.set(OpClass::Gemm, 0.25);
+    decode_bd.set(OpClass::Attention, 0.125);
+    decode_bd.set(OpClass::RmsNorm, 0.0625);
+    decode_bd.set(OpClass::SiluMul, 0.03125);
+    decode_bd.set(OpClass::AllReduce, 0.015625);
+    decode_bd.set(OpClass::SendRecv, 0.0078125);
+    decode_bd.set(OpClass::HostGap, 0.0078125);
+    let mut grand_bd = ClassBreakdown::default();
+    for c in OpClass::ALL {
+        grand_bd.set(c, prefill_bd.get(c) + decode_bd.get(c));
+    }
+    ScenarioReport {
+        model: "Qwen2.5-32B".to_string(),
+        gpu: "H800".to_string(),
+        tp: 4,
+        pp: 2,
+        phases: vec![
+            PhaseReport {
+                phase: Phase::Prefill,
+                totals: MethodTotals {
+                    actual: 0.25,
+                    synperf: 0.125,
+                    roofline: 0.0625,
+                    linear: 0.25,
+                    habitat: 0.25,
+                    neusight: 0.5,
+                    degraded_kernels: 3,
+                },
+                breakdown: prefill_bd,
+                launches: 128.0,
+                tokens: 4096.0,
+                steps: 1.0,
+            },
+            PhaseReport {
+                phase: Phase::Decode,
+                totals: MethodTotals {
+                    actual: 0.5,
+                    synperf: 0.25,
+                    roofline: 0.125,
+                    linear: 0.5,
+                    habitat: 0.5,
+                    neusight: 1.0,
+                    degraded_kernels: 5,
+                },
+                breakdown: decode_bd,
+                launches: 256.0,
+                tokens: 512.0,
+                steps: 64.0,
+            },
+        ],
+        totals: MethodTotals {
+            actual: 0.75,
+            synperf: 0.375,
+            roofline: 0.25,
+            linear: 0.75,
+            habitat: 0.75,
+            neusight: 1.5,
+            degraded_kernels: 8,
+        },
+        breakdown: grand_bd,
+        launches: 384.0,
+        cache_hits: 42,
+        host_gap_sec: 8e-7,
+        seed: 7,
+    }
+}
+
+#[test]
+fn simulate_report_golden_line_roundtrips() {
+    let report = golden_report();
+    let line = scenario_wire::encode_report(Some("s1"), &Ok(report.clone()));
+    let golden = concat!(
+        r#"{"v":1,"id":"s1","ok":true,"report":{"model":"Qwen2.5-32B","gpu":"H800","tp":4,"pp":2,"seed":7,"host_gap_sec":8e-7,"launches":3.84e2,"cache_hits":42,"#,
+        r#""totals":{"actual_sec":7.5e-1,"synperf_sec":3.75e-1,"roofline_sec":2.5e-1,"linear_sec":7.5e-1,"habitat_sec":7.5e-1,"neusight_sec":1.5e0,"degraded_kernels":8},"#,
+        r#""breakdown":{"gemm_sec":3.75e-1,"attention_sec":1.875e-1,"rmsnorm_sec":9.375e-2,"silu_mul_sec":4.6875e-2,"fused_moe_sec":0e0,"all_reduce_sec":2.34375e-2,"send_recv_sec":7.8125e-3,"host_gap_total_sec":1.5625e-2},"#,
+        r#""phases":[{"phase":"prefill","tokens":4.096e3,"steps":1e0,"launches":1.28e2,"ttft_sec":{"actual":2.5e-1,"synperf":1.25e-1},"tokens_per_sec":{"actual":1.6384e4,"synperf":3.2768e4},"#,
+        r#""totals":{"actual_sec":2.5e-1,"synperf_sec":1.25e-1,"roofline_sec":6.25e-2,"linear_sec":2.5e-1,"habitat_sec":2.5e-1,"neusight_sec":5e-1,"degraded_kernels":3},"#,
+        r#""breakdown":{"gemm_sec":1.25e-1,"attention_sec":6.25e-2,"rmsnorm_sec":3.125e-2,"silu_mul_sec":1.5625e-2,"fused_moe_sec":0e0,"all_reduce_sec":7.8125e-3,"send_recv_sec":0e0,"host_gap_total_sec":7.8125e-3}},"#,
+        r#"{"phase":"decode","tokens":5.12e2,"steps":6.4e1,"launches":2.56e2,"tpot_sec":{"actual":7.8125e-3,"synperf":3.90625e-3},"tokens_per_sec":{"actual":1.024e3,"synperf":2.048e3},"#,
+        r#""totals":{"actual_sec":5e-1,"synperf_sec":2.5e-1,"roofline_sec":1.25e-1,"linear_sec":5e-1,"habitat_sec":5e-1,"neusight_sec":1e0,"degraded_kernels":5},"#,
+        r#""breakdown":{"gemm_sec":2.5e-1,"attention_sec":1.25e-1,"rmsnorm_sec":6.25e-2,"silu_mul_sec":3.125e-2,"fused_moe_sec":0e0,"all_reduce_sec":1.5625e-2,"send_recv_sec":7.8125e-3,"host_gap_total_sec":7.8125e-3}}]}}"#,
+    );
+    assert_eq!(line, golden);
+    let (id, back) = scenario_wire::parse_report(&line).unwrap();
+    assert_eq!(id.as_deref(), Some("s1"));
+    let back = back.unwrap();
+    assert_eq!(back, report);
+    assert_eq!(back.totals.actual.to_bits(), report.totals.actual.to_bits());
+    assert_eq!(back.totals.degraded_kernels, 8);
+}
+
+#[test]
+fn scenario_error_golden_lines_cover_the_whole_taxonomy() {
+    let cases: Vec<(ScenarioError, &str)> = vec![
+        (
+            ScenarioError::UnknownModel("GPT-5".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"unknown_model","message":"unknown model \"GPT-5\" (see llm::registry())","model":"GPT-5"}}"#,
+        ),
+        (
+            ScenarioError::UnknownGpu("B300".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"unknown_gpu","message":"unknown GPU \"B300\" (see Table VI)","gpu":"B300"}}"#,
+        ),
+        (
+            ScenarioError::InvalidParallelism("tp=3 does not divide 40 attention heads of Qwen2.5-14B".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"invalid_parallelism","message":"invalid parallelism: tp=3 does not divide 40 attention heads of Qwen2.5-14B","reason":"tp=3 does not divide 40 attention heads of Qwen2.5-14B"}}"#,
+        ),
+        (
+            ScenarioError::InvalidWorkload("batch must be >= 1".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"invalid_workload","message":"invalid workload: batch must be >= 1","reason":"batch must be >= 1"}}"#,
+        ),
+        (
+            ScenarioError::MalformedSpec("simulate request needs a \"scenario\" object".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"malformed_spec","message":"malformed scenario spec: simulate request needs a \"scenario\" object","reason":"simulate request needs a \"scenario\" object"}}"#,
+        ),
+    ];
+    for (err, golden) in cases {
+        let line = scenario_wire::encode_report(None, &Err(err.clone()));
+        assert_eq!(line, golden, "wire drift for {:?}", err.code());
+        let (_, back) = scenario_wire::parse_report(&line).unwrap();
+        assert_eq!(back.unwrap_err(), err, "round trip for {:?}", err.code());
+    }
+}
+
+#[test]
+fn simulate_round_trips_over_the_stdio_wire() {
+    // the acceptance path: a ScenarioSpec JSON line in, a typed
+    // ScenarioReport line out, interleaved with predict-verb lines, over
+    // the same serve loop `synperf serve --stdio` runs
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let input = concat!(
+        r#"{"v":1,"id":"sim1","op":"simulate","scenario":{"model":"llama3.1-8b","gpu":"A100","tp":2,"workload":{"requests":[[96,8],[64,4]]},"seed":11,"host_gap_sec":1e-6}}"#,
+        "\n",
+        r#"{"id":"p1","gpu":"A100","kernel":{"type":"gemm","m":256,"n":256,"k":256}}"#,
+        "\n",
+        r#"{"id":"sim2","op":"simulate","scenario":{"model":"GPT-5","gpu":"A100"}}"#,
+        "\n",
+        r#"{"id":"sim3","op":"simulate","scenario":{"model":"llama3.1-8b","gpu":"B300"}}"#,
+        "\n",
+        r#"{"id":"sim4","op":"simulate","scenario":{"model":"llama3.1-8b","gpu":"A100","tp":5}}"#,
+        "\n",
+    );
+    let mut out = Vec::new();
+    let stats =
+        serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8).unwrap();
+    assert_eq!(stats.served, 5);
+    assert_eq!(stats.simulated, 4);
+    assert_eq!(stats.errors, 3);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 5);
+
+    // line 0: the full typed report round-trips client-side
+    let (id, rep) = scenario_wire::parse_report(lines[0]).unwrap();
+    assert_eq!(id.as_deref(), Some("sim1"));
+    let rep = rep.unwrap();
+    assert_eq!(rep.model, "Llama3.1-8B");
+    assert_eq!(rep.gpu, "A100");
+    assert_eq!((rep.tp, rep.pp), (2, 1));
+    assert_eq!(rep.host_gap_sec, 1e-6);
+    assert_eq!(rep.phases.len(), 2);
+    assert_eq!(rep.phases[0].phase, Phase::Prefill);
+    assert_eq!(rep.phases[1].phase, Phase::Decode);
+    assert!(rep.ttft_sec(synperf::scenario::Method::SynPerf).unwrap() > 0.0);
+    assert!(rep.tpot_sec(synperf::scenario::Method::Actual).unwrap() > 0.0);
+    assert!(rep.totals.degraded_kernels > 0, "degraded provenance over the wire");
+    assert!(rep.breakdown.get(OpClass::Gemm) > 0.0);
+    assert!(rep.breakdown.get(OpClass::AllReduce) > 0.0, "tp=2 schedules collectives");
+    assert!(rep.launches > 0.0);
+
+    // line 1: the predict verb still answers between simulations
+    assert!(lines[1].contains(r#""id":"p1""#) && lines[1].contains(r#""ok":true"#));
+    // lines 2-4: the closed ScenarioError taxonomy travels the wire
+    assert!(lines[2].contains(r#""id":"sim2""#) && lines[2].contains(r#""code":"unknown_model""#));
+    assert!(lines[3].contains(r#""id":"sim3""#) && lines[3].contains(r#""code":"unknown_gpu""#));
+    assert!(
+        lines[4].contains(r#""id":"sim4""#) && lines[4].contains(r#""code":"invalid_parallelism""#)
+    );
     svc.shutdown();
 }
