@@ -7,9 +7,16 @@
 # Without trained artifacts everything answers in degraded roofline mode,
 # which the reports make explicit (totals.degraded_kernels > 0).
 #
+# THREADS=N runs every invocation with --threads N (CI exercises the
+# parallel two-pass evaluator with THREADS=2). Reports are bit-identical
+# at any thread count, so all assertions below hold unchanged.
+#
 #   ./examples/simulate_stdio.sh
+#   THREADS=2 ./examples/simulate_stdio.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+T_FLAG=${THREADS:+--threads $THREADS}
 
 REQUESTS='{"v":1,"id":"sim1","op":"simulate","scenario":{"model":"qwen2.5-14b","gpu":"A100","tp":2,"workload":{"requests":[[256,16],[128,8]]},"seed":7}}
 {"v":1,"id":"p1","gpu":"A100","kernel":{"type":"gemm","m":512,"n":512,"k":512}}
@@ -17,7 +24,7 @@ REQUESTS='{"v":1,"id":"sim1","op":"simulate","scenario":{"model":"qwen2.5-14b","
 {"v":1,"id":"bad-model","op":"simulate","scenario":{"model":"GPT-5","gpu":"A100"}}
 {"v":1,"id":"bad-par","op":"simulate","scenario":{"model":"qwen2.5-14b","gpu":"A100","tp":3}}'
 
-OUT=$(printf '%s\n' "$REQUESTS" | cargo run --release --quiet --bin synperf -- serve --stdio --queue-cap 64)
+OUT=$(printf '%s\n' "$REQUESTS" | cargo run --release --quiet --bin synperf -- serve --stdio --queue-cap 64 $T_FLAG)
 printf '%s\n' "$OUT"
 
 lines=$(printf '%s\n' "$OUT" | wc -l | tr -d ' ')
@@ -58,7 +65,7 @@ printf '%s\n' "$OUT" | grep -q '"id":"bad-par","ok":false,"error":{"code":"inval
 
 # 2a. the dedicated subcommand, JSON mode: exactly one report line
 JSON_OUT=$(cargo run --release --quiet --bin synperf -- simulate \
-  --model qwen2.5-14b --gpu A100 --tp 2 --batch 4 --seed 7 --json)
+  --model qwen2.5-14b --gpu A100 --tp 2 --batch 4 --seed 7 --json $T_FLAG)
 printf '%s\n' "$JSON_OUT" | grep -q '"ok":true,"report":{' \
   || { echo "FAIL: simulate --json report missing"; exit 1; }
 [ "$(printf '%s\n' "$JSON_OUT" | wc -l | tr -d ' ')" -eq 1 ] \
@@ -68,7 +75,7 @@ printf '%s\n' "$JSON_OUT" | grep -q '"ok":true,"report":{' \
 SPEC_OUT=$(printf '%s\n' \
   '{"model":"llama3.1-8b","gpu":"A100","workload":{"requests":[[64,8]]}}' \
   '{"id":"x","op":"simulate","scenario":{"model":"nope","gpu":"A100"}}' \
-  | cargo run --release --quiet --bin synperf -- simulate --spec -)
+  | cargo run --release --quiet --bin synperf -- simulate --spec - $T_FLAG)
 [ "$(printf '%s\n' "$SPEC_OUT" | wc -l | tr -d ' ')" -eq 2 ] \
   || { echo "FAIL: --spec - must answer every line"; exit 1; }
 printf '%s\n' "$SPEC_OUT" | head -1 | grep -q '"ok":true,"report":{' \

@@ -2,9 +2,12 @@
 //! path (hand-rolled harness; criterion is not in the offline vendor set):
 //!
 //!   decompose -> schedule -> features   (the analytical front half)
+//!   sharded cache under contention      (8 threads, shards 1 vs 16)
 //!   oracle measurement                  (dataset generation throughput)
 //!   scenario compile                    (ScenarioSpec -> phase-tagged op streams)
-//!   native MLP forward                  (artifact-free fallback path)
+//!   scenario evaluate                   (two-pass parallel, 1 vs 8 threads)
+//!   protocol batch routing              (predictions/sec through api::predict_batch)
+//!   native MLP forward                  (artifact-free fallback path, serial + par)
 //!   MLP forward via PJRT (b1 / b256 / b1024)
 //!   end-to-end single prediction       (the Fig. 7 "SynPerf time" path)
 //!   coordinator service throughput
@@ -129,6 +132,34 @@ fn run_benches(h: &mut Harness, smoke: bool) {
         black_box(ds);
     }
 
+    println!("\n== sharded cache under contention ==");
+    // 8 threads hammering a fully hot cache: with one shard every lookup
+    // serializes on the single mutex (the pre-shard baseline); with 16
+    // shards concurrent probes collide only when their probe hashes share
+    // low bits. The sharded variant must win on >= 2 threads.
+    let hot_cfgs: Vec<KernelConfig> = (0..64u32)
+        .map(|i| KernelConfig::RmsNorm { seq: 256 + i, dim: 4096 })
+        .collect();
+    for shards in [1usize, 16] {
+        let e = PredictionEngine::with_shards(4096, shards);
+        for c in &hot_cfgs {
+            e.analyze(c, &gpu);
+        }
+        h.run(&format!("engine/analyze-contended 8thr shards{shards}"), 300, 5, || {
+            std::thread::scope(|s| {
+                for t in 0..8usize {
+                    let (e, hot_cfgs, gpu) = (&e, &hot_cfgs, &gpu);
+                    s.spawn(move || {
+                        for i in 0..200usize {
+                            let c = &hot_cfgs[(i * 7 + t * 13) % hot_cfgs.len()];
+                            black_box(e.analyze(c, gpu));
+                        }
+                    });
+                }
+            });
+        });
+    }
+
     println!("\n== oracle testbed ==");
     let mut seed = 0u64;
     h.run("oracle/gemm", 300, 20, || {
@@ -167,6 +198,14 @@ fn run_benches(h: &mut Harness, smoke: bool) {
             black_box(out.last().copied());
         });
     }
+    // chunked parallel forward with one thread-local Scratch per worker
+    // (bit-identical to the serial path at any thread count)
+    let xs_par = vec![row; 1024];
+    for threads in [1usize, 8] {
+        h.run(&format!("mlp/native_forward_par b1024 t{threads}"), 200, 5, || {
+            black_box(synperf::mlp::native::forward_par(&theta, &bn, &xs_par, threads));
+        });
+    }
 
     println!("\n== scenario compiler (Scenario API v1) ==");
     // spec -> validated, phase-tagged op streams; no prediction work, so
@@ -186,6 +225,44 @@ fn run_benches(h: &mut Harness, smoke: bool) {
     h.run("scenario/compile llama3.1-70b splitwise_32 tp4pp2", 200, 10, || {
         black_box(synperf::scenario::compile(&big_spec).unwrap());
     });
+
+    println!("\n== scenario evaluator (two-pass deterministic parallel) ==");
+    // full compile -> parallel per-item pass -> serial accumulation ->
+    // batched routing, degraded mode: wall clock scales with threads while
+    // the report stays bit-identical (pinned in tests/concurrency.rs)
+    let eval_spec = synperf::scenario::ScenarioSpec::new("Qwen2.5-14B", "A100")
+        .tp(2)
+        .workload(synperf::scenario::WorkloadSpec::Explicit(vec![
+            synperf::e2e::workload::Request { input_len: 256, output_len: 32 },
+            synperf::e2e::workload::Request { input_len: 128, output_len: 16 },
+        ]))
+        .seed(7);
+    for threads in [1usize, 8] {
+        let sim = synperf::scenario::Simulator::degraded().threads(threads);
+        h.run(&format!("scenario/evaluate-{threads}thread"), 400, 3, || {
+            black_box(sim.simulate(&eval_spec).unwrap());
+        });
+    }
+
+    println!("\n== protocol batch routing ==");
+    // the serving-scale unit of work: one typed batch through the one
+    // request path on a hot cache (predictions/sec = 256 / median)
+    let bundle = synperf::api::ModelBundle::default();
+    let preqs: Vec<synperf::api::PredictRequest> = (0..256u32)
+        .map(|i| {
+            synperf::api::PredictRequest::new(
+                KernelConfig::RmsNorm { seq: 512 + (i % 32), dim: 4096 },
+                gpu.clone(),
+            )
+        })
+        .collect();
+    black_box(synperf::api::predict_batch(&bundle, &preqs)); // warm the cache
+    h.run("api/predict_batch b256 (hot cache)", 300, 10, || {
+        black_box(synperf::api::predict_batch(&bundle, &preqs));
+    });
+    if let Some(r) = h.results.last() {
+        println!("  -> {:.0} predictions/sec at the median", 256.0 / (r.median_ns * 1e-9));
+    }
 
     service_bench(&gpu, if smoke { 64 } else { 2000 });
 
@@ -216,8 +293,12 @@ fn run_benches(h: &mut Harness, smoke: bool) {
         });
     }
     let xs1 = vec![row; 256];
+    // threads = 1 keeps this the *serial* cross-check path, comparable to
+    // the BENCH_PR3 numbers (predict_eff_native would auto-parallelize a
+    // 256-row batch); the parallel variant is benched above as
+    // mlp/native_forward_par
     h.run("mlp/native_forward b256 (cross-check path)", 200, 10, || {
-        black_box(pred.predict_eff_native(&xs1));
+        black_box(pred.predict_eff_native_threads(&xs1, 1));
     });
 
     println!("\n== end-to-end single prediction (Fig. 7 path) ==");

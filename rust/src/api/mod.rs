@@ -28,7 +28,7 @@ pub mod stdio;
 pub mod wire;
 
 use crate::dataset::Sample;
-use crate::engine::{Analysis, PredictionEngine};
+use crate::engine::{par, Analysis, PredictionEngine};
 use crate::features::FEATURE_DIM;
 use crate::hw::{gpu_by_name, GpuSpec};
 use crate::kernels::{KernelConfig, KernelKind};
@@ -378,62 +378,140 @@ pub struct BatchReport {
     pub kind_groups: usize,
 }
 
-/// The one batched routing path: featurize every launch through the shared
-/// engine cache, group by kernel category, run one MLP forward per
-/// category, return latencies with provenance in input order. Categories
-/// without a usable model answer the theory roof with
+/// Minimum requests per prospective worker before the routing pass fans
+/// out (see [`route_view`]).
+const ROUTE_PAR_GRAIN: usize = 32;
+
+/// The shared routed-prediction core over borrowed request pairs.
+///
+/// Two fan-out stages, both over [`par::par_map`] (order preserving and
+/// thread-count deterministic, so results are bit-identical to a serial
+/// walk): the cached analyze pass — each worker probes its own cache shard
+/// — and then one MLP forward per kernel category, one category per
+/// worker. Categories without a usable model answer the theory roof with
 /// [`Source::Roofline`] — per category, so one failing model never
 /// degrades the whole batch. Infallible by construction.
-pub fn predict_batch_view(
+///
+/// The per-kind fan-out shares `&Predictor` across workers; under the
+/// offline xla stub every executable is a host-side value (`Sync`), and a
+/// real PJRT backend must keep its executables `Sync` to compile here.
+fn route_view(
     models: &HashMap<KernelKind, Predictor>,
     view: FeatureView,
-    reqs: &[(KernelConfig, GpuSpec)],
+    pairs: &[(&KernelConfig, &GpuSpec)],
+    threads: usize,
 ) -> Vec<RawPrediction> {
+    // Small-batch guard: below ~ROUTE_PAR_GRAIN requests per prospective
+    // worker the scoped-thread spawns cost more than the hot sharded-cache
+    // probes they would parallelize, so a small service batch (the steady
+    // 2–16-request regime under the 2 ms batching deadline) stays serial.
+    // Purely a latency guard — results are identical either way.
+    let threads = threads.min(pairs.len().div_ceil(ROUTE_PAR_GRAIN)).max(1);
     let engine = PredictionEngine::global();
     let analyses: Vec<(Arc<Analysis>, bool)> =
-        reqs.iter().map(|(cfg, gpu)| engine.analyze_hit(cfg, gpu)).collect();
+        par::par_map(pairs, threads, |_, &(cfg, gpu)| engine.analyze_hit(cfg, gpu));
 
-    let mut groups: HashMap<KernelKind, Vec<usize>> = HashMap::new();
+    let mut by_kind: HashMap<KernelKind, Vec<usize>> = HashMap::new();
     for (i, (a, _)) in analyses.iter().enumerate() {
-        groups.entry(a.kind).or_default().push(i);
+        by_kind.entry(a.kind).or_default().push(i);
     }
+    let groups: Vec<(KernelKind, Vec<usize>)> = by_kind.into_iter().collect();
 
-    let mut out: Vec<Option<RawPrediction>> = vec![None; reqs.len()];
-    for (kind, idxs) in groups {
-        let xs: Vec<[f32; FEATURE_DIM]> = idxs
-            .iter()
-            .map(|&i| match view {
-                FeatureView::SynPerf => analyses[i].0.x,
-                FeatureView::Neusight => analyses[i].0.x_alt,
-            })
-            .collect();
-        let (effs, source) = match models.get(&kind).map(|p| p.predict_eff(&xs)) {
-            Some(Ok(effs)) => (effs, Source::Mlp),
-            // untrained category, or a failing forward: the documented
-            // degraded mode — efficiency 1.0 is exactly the theory roof
-            Some(Err(_)) | None => (vec![1.0; xs.len()], Source::Roofline),
-        };
-        for (&i, eff) in idxs.iter().zip(effs) {
-            let a = &analyses[i].0;
-            let theory = match view {
-                FeatureView::SynPerf => a.features.theory_sec,
-                FeatureView::Neusight => a.alt_theory_sec,
+    let routed: Vec<Vec<(usize, RawPrediction)>> =
+        par::par_map(&groups, threads, |_, (kind, idxs)| {
+            let xs: Vec<[f32; FEATURE_DIM]> = idxs
+                .iter()
+                .map(|&i| match view {
+                    FeatureView::SynPerf => analyses[i].0.x,
+                    FeatureView::Neusight => analyses[i].0.x_alt,
+                })
+                .collect();
+            let (effs, source) = match models.get(kind).map(|p| p.predict_eff(&xs)) {
+                Some(Ok(effs)) => (effs, Source::Mlp),
+                // untrained category, or a failing forward: the documented
+                // degraded mode — efficiency 1.0 is exactly the theory roof
+                Some(Err(_)) | None => (vec![1.0; xs.len()], Source::Roofline),
             };
-            out[i] = Some(RawPrediction {
-                latency_sec: theory / eff,
-                kind,
-                provenance: Provenance { source, cache_hit: analyses[i].1 },
-            });
+            idxs.iter()
+                .zip(effs)
+                .map(|(&i, eff)| {
+                    let a = &analyses[i].0;
+                    let theory = match view {
+                        FeatureView::SynPerf => a.features.theory_sec,
+                        FeatureView::Neusight => a.alt_theory_sec,
+                    };
+                    let raw = RawPrediction {
+                        latency_sec: theory / eff,
+                        kind: *kind,
+                        provenance: Provenance { source, cache_hit: analyses[i].1 },
+                    };
+                    (i, raw)
+                })
+                .collect()
+        });
+
+    let mut out: Vec<Option<RawPrediction>> = vec![None; pairs.len()];
+    for part in routed {
+        for (i, p) in part {
+            out[i] = Some(p);
         }
     }
     out.into_iter().map(|p| p.expect("every request routed")).collect()
 }
 
-/// Typed batch prediction: validate, route per flavor through
-/// [`predict_batch_view`], and assemble provenance-carrying responses.
-/// Results are in input order; a bad request yields its typed error without
-/// affecting the rest of the batch.
+/// The one batched routing path: featurize every launch through the shared
+/// engine cache, group by kernel category, run one MLP forward per
+/// category, return latencies with provenance in input order (serial —
+/// the mixed-GPU owned-pair surface the typed batch front door uses).
+pub fn predict_batch_view(
+    models: &HashMap<KernelKind, Predictor>,
+    view: FeatureView,
+    reqs: &[(KernelConfig, GpuSpec)],
+) -> Vec<RawPrediction> {
+    let pairs: Vec<(&KernelConfig, &GpuSpec)> = reqs.iter().map(|(c, g)| (c, g)).collect();
+    route_view(models, view, &pairs, 1)
+}
+
+/// Borrowed single-GPU batched routing with parallel fan-out — the
+/// two-pass evaluators' surface ([`crate::scenario::evaluate`],
+/// `e2e::predict::eval_trace`). No `KernelConfig`/`GpuSpec` clones.
+/// Latencies and provenance *sources* are bit-identical to
+/// [`predict_batch_view`] at any `threads`; the `cache_hit` flag of
+/// duplicate not-yet-cached keys can differ when their probes race
+/// (both may miss). The evaluators are immune: their pass 1 warms every
+/// key before this routing pass runs.
+pub fn predict_batch_view_on(
+    models: &HashMap<KernelKind, Predictor>,
+    view: FeatureView,
+    gpu: &GpuSpec,
+    cfgs: &[&KernelConfig],
+    threads: usize,
+) -> Vec<RawPrediction> {
+    let pairs: Vec<(&KernelConfig, &GpuSpec)> = cfgs.iter().map(|&c| (c, gpu)).collect();
+    route_view(models, view, &pairs, threads)
+}
+
+/// Typed batch prediction: validate, route per flavor through the shared
+/// routing core, and assemble provenance-carrying responses. Results are
+/// in input order; a bad request yields its typed error without affecting
+/// the rest of the batch. Serial; the coordinator's batch loop calls
+/// [`predict_batch_threads`] to fan the routing pass out.
 pub fn predict_batch(bundle: &ModelBundle, reqs: &[PredictRequest]) -> BatchReport {
+    predict_batch_threads(bundle, reqs, 1)
+}
+
+/// [`predict_batch`] with the routing pass (cached analyze + per-kind
+/// forwards) fanned out over `threads` workers — batches below ~32
+/// requests per worker run serially anyway (thread spawns would cost more
+/// than the hot-cache probes), so a steady small-batch service pays
+/// nothing for a large `threads`. Latencies and provenance sources are
+/// identical at any thread count; only the `cache_hit` flag of
+/// *duplicate* keys racing within one batch can differ (both may miss).
+pub fn predict_batch_threads(
+    bundle: &ModelBundle,
+    reqs: &[PredictRequest],
+    threads: usize,
+) -> BatchReport {
     let engine = PredictionEngine::global();
     let mut results: Vec<Option<Result<PredictResponse, PredictError>>> =
         (0..reqs.len()).map(|_| None).collect();
@@ -443,7 +521,7 @@ pub fn predict_batch(bundle: &ModelBundle, reqs: &[PredictRequest]) -> BatchRepo
 
     for flavor in [Flavor::Mean, Flavor::P80] {
         let mut idxs = Vec::new();
-        let mut pairs = Vec::new();
+        let mut pairs: Vec<(&KernelConfig, &GpuSpec)> = Vec::new();
         for (i, r) in reqs.iter().enumerate() {
             if r.opts.flavor != flavor {
                 continue;
@@ -451,7 +529,7 @@ pub fn predict_batch(bundle: &ModelBundle, reqs: &[PredictRequest]) -> BatchRepo
             match r.validate() {
                 Ok(()) => {
                     idxs.push(i);
-                    pairs.push((r.cfg.clone(), r.gpu.clone()));
+                    pairs.push((&r.cfg, &r.gpu));
                 }
                 Err(e) => results[i] = Some(Err(e)),
             }
@@ -459,7 +537,7 @@ pub fn predict_batch(bundle: &ModelBundle, reqs: &[PredictRequest]) -> BatchRepo
         if idxs.is_empty() {
             continue;
         }
-        let raw = predict_batch_view(bundle.map(flavor), FeatureView::SynPerf, &pairs);
+        let raw = route_view(bundle.map(flavor), FeatureView::SynPerf, &pairs, threads);
         for (&i, p) in idxs.iter().zip(&raw) {
             let req = &reqs[i];
             if p.provenance.cache_hit {

@@ -1,9 +1,12 @@
 //! The prediction service: a leader thread owns the per-kernel-category
-//! Predictors (PJRT executables are not Sync) and runs the dynamic-batch
+//! Predictors (constructed on the service thread; the routing pass may
+//! still fan per-kind forwards out over scoped workers that borrow them)
+//! and runs the dynamic-batch
 //! loop; clients hold a cheap cloneable [`Client`] handle speaking protocol
 //! v1. Typed [`PredictRequest`] -> bounded queue -> [batcher] ->
-//! [`crate::api::predict_batch`] (cached analyze + per-kind batched MLP
-//! routing) -> typed [`PredictResponse`] with provenance.
+//! [`crate::api::predict_batch_threads`] (sharded-cache analyze + per-kind
+//! batched MLP routing, fanned out over `ServiceConfig::threads` workers)
+//! -> typed [`PredictResponse`] with provenance.
 //!
 //! Backpressure is explicit: the request queue is bounded
 //! (`ServiceConfig::queue_cap`); [`Client::try_predict`] answers
@@ -35,6 +38,13 @@ pub struct ServiceConfig {
     pub deadline: Duration,
     /// Bounded request-queue capacity (the backpressure knob).
     pub queue_cap: usize,
+    /// Worker threads for the per-batch routing pass (cached analyze +
+    /// per-kind MLP forwards fanned out over the engine's scoped-thread
+    /// `par_map`). Batches below ~32 requests per worker run serially
+    /// regardless, so small steady-state batches never pay thread-spawn
+    /// latency. Latencies are thread-count independent; this is the
+    /// `serve --threads` knob. Defaults to available parallelism.
+    pub threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -43,6 +53,7 @@ impl Default for ServiceConfig {
             max_batch: 256,
             deadline: Duration::from_millis(2),
             queue_cap: 1024,
+            threads: crate::engine::par::default_threads(),
         }
     }
 }
@@ -242,7 +253,7 @@ fn service_loop(
         let (batch, closed) = collect_batch(queue, cfg.max_batch, cfg.deadline);
         if !batch.is_empty() {
             metrics.record_queue_depth(queue.len());
-            process_batch(bundle, batch, metrics);
+            process_batch(bundle, batch, metrics, cfg.threads);
         }
         if closed {
             return;
@@ -250,7 +261,7 @@ fn service_loop(
     }
 }
 
-fn process_batch(bundle: &ModelBundle, batch: Vec<Request>, metrics: &Metrics) {
+fn process_batch(bundle: &ModelBundle, batch: Vec<Request>, metrics: &Metrics, threads: usize) {
     let t0 = Instant::now();
     let mut reqs = Vec::with_capacity(batch.len());
     let mut responders = Vec::with_capacity(batch.len());
@@ -258,7 +269,7 @@ fn process_batch(bundle: &ModelBundle, batch: Vec<Request>, metrics: &Metrics) {
         reqs.push(r.req);
         responders.push(r.resp);
     }
-    let report = api::predict_batch(bundle, &reqs);
+    let report = api::predict_batch_threads(bundle, &reqs, threads);
     // record before answering: a client that sees its response also sees
     // the metrics that accounted for it
     metrics.record_route(report.cache_hits, report.cache_misses, report.kind_groups);

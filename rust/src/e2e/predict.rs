@@ -4,13 +4,22 @@
 //! communication model so the comparison isolates kernel modeling.
 //!
 //! Kernel items route through the protocol-v1 request path
-//! ([`crate::api::predict_batch_view`]): a trace launches the same kernel
-//! shapes layer after layer (and decode step after decode step), so the
-//! analytical half hits the engine's decomposition cache for every repeat;
-//! the per-category MLP forwards are batched across the whole trace. The
-//! answers carry provenance — [`MethodTotals::degraded_kernels`] counts
-//! SynPerf kernel items that fell back to the roofline (untrained
-//! category), so a degraded E2E number is distinguishable from a real one.
+//! ([`crate::api::predict_batch_view_on`]): a trace launches the same
+//! kernel shapes layer after layer (and decode step after decode step), so
+//! the analytical half hits the engine's decomposition cache for every
+//! repeat; the per-category MLP forwards are batched across the whole
+//! trace. The answers carry provenance —
+//! [`MethodTotals::degraded_kernels`] counts SynPerf kernel items that
+//! fell back to the roofline (untrained category), so a degraded E2E
+//! number is distinguishable from a real one.
+//!
+//! Evaluation is **two-pass deterministic-parallel**: pass 1 computes
+//! every item's seed-dependent measurements (oracle sampling, comm
+//! oracles/predictions) in parallel into an index-ordered buffer — each
+//! item's values depend only on `(op, gpu, seed)`, never on its neighbors
+//! — and pass 2 accumulates totals serially in stream order, exactly as
+//! the single-threaded walk always did. Grand totals are therefore
+//! bit-identical at every thread count.
 //!
 //! This is the reference evaluator the declarative Scenario API
 //! ([`crate::scenario`]) is pinned against: `scenario::evaluate` walks the
@@ -21,7 +30,8 @@ use super::comm::{allreduce_oracle, sendrecv_oracle, CommModel};
 use super::trace::{Op, TraceItem};
 use crate::api::{self, FeatureView, Source};
 use crate::baselines::linear::LinearModel;
-use crate::engine::PredictionEngine;
+use crate::dataset::Sample;
+use crate::engine::{par, PredictionEngine};
 use crate::hw::GpuSpec;
 use crate::kernels::{KernelConfig, KernelKind};
 use crate::mlp::Predictor;
@@ -122,6 +132,47 @@ impl MethodTotals {
 /// `eval_trace` takes it as a parameter so ground truth and report agree.
 pub const HOST_GAP_SEC: f64 = 0.8e-6;
 
+/// Minimum op items per prospective worker before the evaluators' pass 1
+/// fans out. Items are heavyweight (a kernel item runs three seeded
+/// oracle simulations), so the grain is small — but a handful-of-item
+/// scenario on a many-core host should run serially rather than pay a
+/// scoped-thread spawn per core.
+pub(crate) const EVAL_PAR_GRAIN: usize = 4;
+
+/// One op's seed-dependent measurements — the output of the parallel
+/// per-item pass both evaluators share. Kernel items carry the full
+/// profiled [`Sample`]; comm items carry the ground-truth latency and the
+/// shared RF prediction.
+pub(crate) enum ItemEval {
+    Kernel(Sample),
+    Comm { actual: f64, pred: f64 },
+}
+
+/// Evaluate one op's seed-dependent half. Pure in `(op, gpu, tp, op_seed)`
+/// — the engine cache only memoizes pure analyses — so fanning items out
+/// over threads cannot change a single bit of any item's result.
+pub(crate) fn eval_op(
+    engine: &PredictionEngine,
+    op: &Op,
+    gpu: &GpuSpec,
+    tp: u32,
+    comm: &CommModel,
+    op_seed: u64,
+) -> ItemEval {
+    match op {
+        Op::Kernel(cfg) => ItemEval::Kernel(engine.make_sample(cfg, gpu, op_seed)),
+        Op::AllReduce { bytes } => ItemEval::Comm {
+            actual: allreduce_oracle(*bytes, tp, gpu, op_seed),
+            pred: comm.predict_allreduce(*bytes, tp, gpu),
+        },
+        Op::SendRecv { bytes } => ItemEval::Comm {
+            actual: sendrecv_oracle(*bytes, gpu, op_seed),
+            pred: comm.predict_sendrecv(*bytes, gpu),
+        },
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 pub fn eval_trace(
     trace: &[TraceItem],
     gpu: &GpuSpec,
@@ -130,46 +181,40 @@ pub fn eval_trace(
     comm: &CommModel,
     seed: u64,
     host_gap_sec: f64,
+    threads: usize,
 ) -> Result<MethodTotals> {
     let engine = PredictionEngine::global();
+    // pass 1 — parallel per-item measurements into an index-ordered
+    // buffer (small traces stay serial: see EVAL_PAR_GRAIN)
+    let threads = threads.min(trace.len().div_ceil(EVAL_PAR_GRAIN)).max(1);
+    let evals: Vec<ItemEval> = par::par_map(trace, threads, |i, item| {
+        eval_op(engine, &item.op, gpu, tp, comm, seed.wrapping_add(i as u64 * 0x9E37))
+    });
+
+    // pass 2 — serial stream-order accumulation, unchanged from the
+    // single-threaded reference (bit-identical at every thread count)
     let mut t = MethodTotals::default();
     // kernel launches accumulated for one batched routing pass per method
-    let mut kernel_reqs: Vec<(KernelConfig, GpuSpec)> = Vec::new();
+    let mut kernel_cfgs: Vec<&KernelConfig> = Vec::new();
     let mut kernel_counts: Vec<f64> = Vec::new();
-
-    for (i, item) in trace.iter().enumerate() {
-        let op_seed = seed.wrapping_add(i as u64 * 0x9E37);
-        match &item.op {
-            Op::Kernel(cfg) => {
-                let s = engine.make_sample(cfg, gpu, op_seed);
+    for (item, ev) in trace.iter().zip(&evals) {
+        match ev {
+            ItemEval::Kernel(s) => {
                 t.actual += item.count * (s.latency_sec + host_gap_sec);
                 t.roofline += item.count * s.roofline_sec;
                 t.habitat += item.count * s.habitat_sec;
                 if let Some(lm) = models.linear.get(&s.kind) {
-                    t.linear += item.count * lm.predict(&s);
+                    t.linear += item.count * lm.predict(s);
                 } else {
                     t.linear += item.count * s.roofline_sec; // no model: fall back
                 }
-                kernel_reqs.push((cfg.clone(), gpu.clone()));
+                let Op::Kernel(cfg) = &item.op else {
+                    unreachable!("pass-1 evals align with trace items")
+                };
+                kernel_cfgs.push(cfg);
                 kernel_counts.push(item.count);
             }
-            Op::AllReduce { bytes } => {
-                let actual = allreduce_oracle(*bytes, tp, gpu, op_seed);
-                let pred = comm.predict_allreduce(*bytes, tp, gpu);
-                t.actual += item.count * actual;
-                for p in [
-                    &mut t.synperf,
-                    &mut t.roofline,
-                    &mut t.linear,
-                    &mut t.habitat,
-                    &mut t.neusight,
-                ] {
-                    *p += item.count * pred;
-                }
-            }
-            Op::SendRecv { bytes } => {
-                let actual = sendrecv_oracle(*bytes, gpu, op_seed);
-                let pred = comm.predict_sendrecv(*bytes, gpu);
+            ItemEval::Comm { actual, pred } => {
                 t.actual += item.count * actual;
                 for p in [
                     &mut t.synperf,
@@ -186,8 +231,15 @@ pub fn eval_trace(
 
     // the one request path: per-category batched MLP routing with
     // provenance, once per feature view (SynPerf, Neusight baseline)
-    let syn = api::predict_batch_view(&models.synperf, FeatureView::SynPerf, &kernel_reqs);
-    let neu = api::predict_batch_view(&models.neusight, FeatureView::Neusight, &kernel_reqs);
+    let syn =
+        api::predict_batch_view_on(&models.synperf, FeatureView::SynPerf, gpu, &kernel_cfgs, threads);
+    let neu = api::predict_batch_view_on(
+        &models.neusight,
+        FeatureView::Neusight,
+        gpu,
+        &kernel_cfgs,
+        threads,
+    );
     for ((sp, np), count) in syn.iter().zip(&neu).zip(&kernel_counts) {
         t.synperf += count * sp.latency_sec;
         t.neusight += count * np.latency_sec;

@@ -79,7 +79,7 @@ impl<K: Eq, V> LruCache<K, V> {
     /// Drop the stalest ~1/8 of entries (at least one). Recency stamps are
     /// unique, so selecting the drop_n-th smallest stamp and retaining
     /// everything newer evicts exactly drop_n entries — O(n), no key clones,
-    /// no full sort (this runs under the engine's shared cache lock).
+    /// no full sort (this runs under one engine cache-shard lock).
     fn evict_lru_batch(&mut self) {
         let drop_n = (self.capacity / 8).max(1).min(self.len);
         if drop_n == 0 {

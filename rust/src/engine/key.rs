@@ -12,6 +12,8 @@
 //! together with the GPU-resolved FA variant, so the hot path neither
 //! clones the config (attention's `batch` vec heap-allocates) nor runs
 //! `finalize_for_gpu`; the owned [`CacheKey`] is only built on a miss.
+//! The same digest doubles as the engine's shard selector (its low bits
+//! pick the cache shard), so a probe touches exactly one shard mutex.
 
 use crate::hw::GpuSpec;
 use crate::kernels::KernelConfig;

@@ -6,10 +6,14 @@
 //! coordinator service loop, the E2E trace evaluator, dataset construction
 //! and the experiment drivers; they now all route through here and share:
 //!
-//!  * a **memoizing analysis cache** keyed by the canonical
-//!    `(KernelConfig, GpuSpec)` key ([`key::CacheKey`]) with LRU bounding
-//!    ([`cache::LruCache`]) — repeated launches in traces and in the
-//!    service loop skip re-decomposition entirely;
+//!  * a **sharded memoizing analysis cache** keyed by the canonical
+//!    `(KernelConfig, GpuSpec)` key ([`key::CacheKey`]): the probe hash
+//!    picks one of [`DEFAULT_CACHE_SHARDS`] independent
+//!    `Mutex<LruCache>` shards ([`cache::LruCache`]), so concurrent
+//!    callers only contend when they touch the same shard — repeated
+//!    launches in traces and in the service loop skip re-decomposition
+//!    entirely, and parallel evaluators never serialize on one global
+//!    lock;
 //!  * **parallel fan-out** ([`par::par_map`], scoped threads, order
 //!    preserving and thread-count deterministic) for dataset generation and
 //!    batch featurization.
@@ -21,10 +25,11 @@
 //!
 //! The cached [`Analysis`] holds everything seed-independent about a launch
 //! (feature set, MLP input vectors for SynPerf and the Neusight baseline,
-//! roof components). Ground-truth oracle measurement is seed-dependent and
-//! is never cached; [`PredictionEngine::make_sample`] reuses the
-//! decomposition computed on a cache miss so profiling does no duplicate
-//! work.
+//! roof components, and — post the run-length refactor — the tiny grouped
+//! [`Decomposition`] itself). Ground-truth oracle measurement is
+//! seed-dependent and is never cached; [`PredictionEngine::make_sample`]
+//! feeds the oracle from the cached decomposition, so the hit path neither
+//! clones the config nor re-decomposes.
 
 pub mod cache;
 pub mod key;
@@ -38,12 +43,21 @@ use crate::oracle;
 use crate::sched::schedule;
 use self::cache::LruCache;
 use self::key::CacheKey;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-/// Default number of cached analyses. An entry is a few hundred bytes (the
-/// task set itself is *not* retained), so this is a few MB at most.
+/// Default requested cache capacity across all shards (each shard is
+/// provisioned with 1/4 headroom over its even split — see
+/// [`PredictionEngine::with_shards`]). An entry is a few hundred bytes
+/// (the grouped decomposition it retains is 1–3 groups for
+/// tile/elementwise kernels and one group per query tile for causal
+/// attention — not the materialized task set), so this is a few MB at most.
 pub const DEFAULT_CACHE_CAPACITY: usize = 8192;
+
+/// Default shard count (power of two). The probe hash's low bits select
+/// the shard, so concurrent `analyze` callers contend on a given shard's
+/// mutex with probability ~1/shards instead of always.
+pub const DEFAULT_CACHE_SHARDS: usize = 16;
 
 /// Everything seed-independent the pipeline derives for one kernel launch
 /// on one GPU.
@@ -62,6 +76,11 @@ pub struct Analysis {
     /// baseline inputs and the Habitat wave-scaling ratios.
     pub compute_sec: f64,
     pub mem_sec: f64,
+    /// The run-length decomposition (post-PR-3 `{template, count}` groups,
+    /// launch order). Retained so seed-dependent consumers — the oracle in
+    /// [`PredictionEngine::make_sample`] — expand tasks from the cache
+    /// instead of re-decomposing on every repeated launch.
+    pub decomp: Decomposition,
 }
 
 impl Analysis {
@@ -70,7 +89,8 @@ impl Analysis {
     }
 }
 
-/// Cache counters — cumulative over the engine's lifetime.
+/// Cache counters — cumulative over the engine's lifetime, aggregated
+/// across shards.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineStats {
     pub hits: u64,
@@ -90,20 +110,56 @@ impl EngineStats {
     }
 }
 
-pub struct PredictionEngine {
+/// One cache shard: an independent LRU plus its own counters, so the hot
+/// path touches exactly one mutex and `stats()` touches none.
+struct Shard {
     cache: Mutex<LruCache<CacheKey, Analysis>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Mirror of `cache.len()`, written under the shard lock on insert and
+    /// read lock-free by [`PredictionEngine::stats`] — metrics scraping
+    /// under load never stalls `analyze`.
+    entries: AtomicUsize,
+}
+
+pub struct PredictionEngine {
+    shards: Vec<Shard>,
+    /// `shards.len() - 1`; shard count is a power of two.
+    shard_mask: u64,
+    /// Total capacity across shards (per-shard capacity × shard count).
+    capacity: usize,
 }
 
 static GLOBAL: OnceLock<PredictionEngine> = OnceLock::new();
 
 impl PredictionEngine {
     pub fn new(capacity: usize) -> PredictionEngine {
+        PredictionEngine::with_shards(capacity, DEFAULT_CACHE_SHARDS)
+    }
+
+    /// Engine with an explicit shard count (rounded up to a power of two;
+    /// `with_shards(cap, 1)` is the single-mutex baseline the contention
+    /// benches compare against). Each shard gets the even split of
+    /// `capacity` plus 1/4 headroom (at least one entry): uniform hashing
+    /// skews shard occupancy (std ≈ √(cap/n) keys), and without headroom a
+    /// working set that fit the single-mutex cache exactly would start
+    /// evicting from the fuller shards. [`stats`](Self::stats) reports the
+    /// actually provisioned total.
+    pub fn with_shards(capacity: usize, shards: usize) -> PredictionEngine {
+        let n = shards.max(1).next_power_of_two();
+        let even = capacity.div_ceil(n);
+        let per_shard = if n > 1 { (even + even.div_ceil(4)).max(1) } else { even.max(1) };
         PredictionEngine {
-            cache: Mutex::new(LruCache::new(capacity)),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            shards: (0..n)
+                .map(|_| Shard {
+                    cache: Mutex::new(LruCache::new(per_shard)),
+                    hits: AtomicU64::new(0),
+                    misses: AtomicU64::new(0),
+                    entries: AtomicUsize::new(0),
+                })
+                .collect(),
+            shard_mask: (n - 1) as u64,
+            capacity: per_shard * n,
         }
     }
 
@@ -114,66 +170,65 @@ impl PredictionEngine {
         GLOBAL.get_or_init(|| PredictionEngine::new(DEFAULT_CACHE_CAPACITY))
     }
 
+    fn shard_for(&self, hash: u64) -> &Shard {
+        &self.shards[(hash & self.shard_mask) as usize]
+    }
+
+    /// Aggregate counters without touching any cache lock: hits/misses and
+    /// per-shard entry counts are atomics, so scraping metrics while
+    /// `analyze` runs hot never blocks it (and cannot deadlock).
     pub fn stats(&self) -> EngineStats {
-        let guard = self.cache.lock().unwrap();
-        EngineStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            entries: guard.len(),
-            capacity: guard.capacity(),
+        let mut stats =
+            EngineStats { hits: 0, misses: 0, entries: 0, capacity: self.capacity };
+        for shard in &self.shards {
+            stats.hits += shard.hits.load(Ordering::Relaxed);
+            stats.misses += shard.misses.load(Ordering::Relaxed);
+            stats.entries += shard.entries.load(Ordering::Relaxed);
         }
+        stats
     }
 
     /// Cached decompose → schedule → featurize. Returns the shared analysis.
     pub fn analyze(&self, cfg: &KernelConfig, gpu: &GpuSpec) -> Arc<Analysis> {
-        self.lookup(cfg, gpu).0
+        self.analyze_hit(cfg, gpu).0
     }
 
     /// Like [`analyze`](Self::analyze) but also reports whether the result
     /// came from the cache (the coordinator metrics consume this).
-    pub fn analyze_hit(&self, cfg: &KernelConfig, gpu: &GpuSpec) -> (Arc<Analysis>, bool) {
-        let (a, _, hit) = self.lookup(cfg, gpu);
-        (a, hit)
-    }
-
-    /// Core lookup. The config may be unfinalized: the cache is probed with
-    /// a borrowed-key hash ([`key::probe_hash`]) over the raw config plus
-    /// the GPU-resolved FA variant, so the **hit path performs no
+    ///
+    /// The config may be unfinalized: the shard is probed with a
+    /// borrowed-key hash ([`key::probe_hash`]) over the raw config plus the
+    /// GPU-resolved FA variant, so the **hit path performs no
     /// `KernelConfig` clone and no allocation** (attention's `batch` vec
     /// would heap-allocate on every request otherwise). Finalization — the
-    /// one clone — happens only on a miss, where the fresh
-    /// [`Decomposition`] is also returned so callers that need the task set
-    /// (the oracle) avoid decomposing twice.
-    fn lookup(
-        &self,
-        cfg: &KernelConfig,
-        gpu: &GpuSpec,
-    ) -> (Arc<Analysis>, Option<Decomposition>, bool) {
-        self.lookup_with(cfg, gpu, false)
-    }
-
-    /// `already_finalized` skips the miss path's re-finalization when the
-    /// caller holds a finalized config (make_sample) — the key is cloned
-    /// directly instead of run through `finalize_for_gpu` a second time.
-    fn lookup_with(
-        &self,
-        cfg: &KernelConfig,
-        gpu: &GpuSpec,
-        already_finalized: bool,
-    ) -> (Arc<Analysis>, Option<Decomposition>, bool) {
+    /// one clone on the whole path — happens only on a miss.
+    pub fn analyze_hit(&self, cfg: &KernelConfig, gpu: &GpuSpec) -> (Arc<Analysis>, bool) {
         let gpu_fp = key::gpu_fingerprint(gpu);
         let fa3 = dataset::fa3_for(gpu);
         let hash = key::probe_hash(cfg, fa3, gpu_fp);
+        let shard = self.shard_for(hash);
         if let Some(hit) =
-            self.cache.lock().unwrap().get_matching(hash, |k| k.matches(cfg, fa3, gpu_fp))
+            shard.cache.lock().unwrap().get_matching(hash, |k| k.matches(cfg, fa3, gpu_fp))
         {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return (hit, None, true);
+            shard.hits.fetch_add(1, Ordering::Relaxed);
+            return (hit, true);
         }
+        (self.compute_and_insert(finalize_for_gpu(cfg, gpu), gpu, gpu_fp, hash, shard), false)
+    }
 
-        // Compute outside the lock: parallel builders must not serialize on
-        // the (cheap) map while doing the (expensive) analysis.
-        let cfg = if already_finalized { cfg.clone() } else { finalize_for_gpu(cfg, gpu) };
+    /// Miss path: run the analytical pipeline **outside the lock** (parallel
+    /// builders must not serialize on the cheap map while doing the
+    /// expensive analysis) and insert. Concurrent misses on the same key
+    /// may both compute; the value is pure, so whichever insert lands last
+    /// wins with an identical analysis.
+    fn compute_and_insert(
+        &self,
+        cfg: KernelConfig,
+        gpu: &GpuSpec,
+        gpu_fp: u64,
+        hash: u64,
+        shard: &Shard,
+    ) -> Arc<Analysis> {
         let decomp = cfg.decompose(gpu);
         let dist = schedule(&decomp, gpu);
         let features = FeatureSet::analyze(&decomp, &dist, gpu);
@@ -189,13 +244,14 @@ impl PredictionEngine {
             compute_sec: compute_roof * gpu.cycle_sec(),
             mem_sec: features.mio.cycles_dram * gpu.cycle_sec(),
             features,
+            decomp,
         });
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert_hashed(hash, CacheKey::from_finalized(cfg, gpu_fp), analysis.clone());
-        (analysis, Some(decomp), false)
+        shard.misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = shard.cache.lock().unwrap();
+        guard.insert_hashed(hash, CacheKey::from_finalized(cfg, gpu_fp), analysis.clone());
+        shard.entries.store(guard.len(), Ordering::Relaxed);
+        drop(guard);
+        analysis
     }
 
     /// Featurize a batch of launches with parallel fan-out. Results are in
@@ -211,28 +267,28 @@ impl PredictionEngine {
 
     /// Analyze + oracle-profile one `(config, gpu, seed)` into a training
     /// [`Sample`]. The analytical half is cached; the oracle measurement is
-    /// seeded and always runs.
+    /// seeded and always runs — fed from the decomposition retained in the
+    /// cached analysis, so a repeated launch performs **zero** config
+    /// clones and zero re-decompositions (the Habitat baseline's
+    /// reference-GPU roofs come from the same cache; only the two seeded
+    /// oracle measurements remain).
     pub fn make_sample(&self, cfg: &KernelConfig, gpu: &GpuSpec, seed: u64) -> Sample {
-        let cfg = finalize_for_gpu(cfg, gpu);
-        let (a, decomp, _) = self.lookup_with(&cfg, gpu, true);
-        // Reuse the miss-path decomposition; on a hit only the oracle needs
-        // the task set, so decompose for it alone.
-        let decomp = decomp.unwrap_or_else(|| cfg.decompose(gpu));
-        let o = oracle::measure_decomposed(cfg.kind(), &decomp, gpu, seed);
-        // the Habitat baseline's reference-GPU roofs come from the same
-        // cache, so a repeated launch costs only the two seeded oracle
-        // measurements (target ground truth + reference wave-scaling base)
+        let (a, _) = self.analyze_hit(cfg, gpu);
+        let o = oracle::measure_decomposed(a.kind, &a.decomp, gpu, seed);
         let reference = crate::baselines::habitat::reference_gpu(gpu);
-        let ref_a = self.analyze(&cfg, &reference);
+        let ref_a = self.analyze(cfg, &reference);
+        // the raw config is equivalent to the target-finalized one here:
+        // predict_with_roofs re-finalizes for the reference GPU, which
+        // overwrites the only field finalization touches (the FA variant)
         let habitat_sec = crate::baselines::habitat::predict_with_roofs(
-            &cfg,
+            cfg,
             &reference,
             seed,
             (a.compute_sec, a.mem_sec),
             (ref_a.compute_sec, ref_a.mem_sec),
         );
         Sample {
-            kind: cfg.kind(),
+            kind: a.kind,
             gpu: gpu.name.to_string(),
             seen: gpu.seen,
             x: a.x,
@@ -283,6 +339,7 @@ mod tests {
     use super::*;
     use crate::hw::gpu_by_name;
     use crate::kernels::DType;
+    use std::time::Duration;
 
     fn gemm(m: u32, n: u32, k: u32) -> KernelConfig {
         KernelConfig::Gemm { m, n, k, dtype: DType::Bf16 }
@@ -349,5 +406,63 @@ mod tests {
         assert_eq!(via_engine.x, cached.x);
         assert_eq!(via_engine.latency_sec.to_bits(), cached.latency_sec.to_bits());
         assert_eq!(via_engine.habitat_sec.to_bits(), cached.habitat_sec.to_bits());
+    }
+
+    #[test]
+    fn cached_decomposition_matches_a_fresh_one() {
+        let engine = PredictionEngine::new(64);
+        let gpu = gpu_by_name("H800").unwrap();
+        let cfg = gemm(1024, 512, 2048);
+        let a = engine.analyze(&cfg, &gpu);
+        let fresh = finalize_for_gpu(&cfg, &gpu).decompose(&gpu);
+        assert_eq!(a.decomp.num_tasks(), fresh.num_tasks());
+        assert_eq!(a.decomp.num_groups(), fresh.num_groups());
+        assert_eq!(
+            a.decomp.total_tensor_ops().to_bits(),
+            fresh.total_tensor_ops().to_bits()
+        );
+    }
+
+    #[test]
+    fn shard_count_does_not_change_results_or_totals() {
+        let gpu = gpu_by_name("H20").unwrap();
+        // capacity well above 40 keys x worst-case shard skew, so neither
+        // layout can evict and the entry totals must agree exactly
+        let one = PredictionEngine::with_shards(1024, 1);
+        let many = PredictionEngine::with_shards(1024, 16);
+        for i in 0..40u32 {
+            let cfg = gemm(64 + i, 128, 256);
+            let a = one.analyze(&cfg, &gpu);
+            let b = many.analyze(&cfg, &gpu);
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.theory_sec().to_bits(), b.theory_sec().to_bits());
+        }
+        let (s1, s16) = (one.stats(), many.stats());
+        assert_eq!((s1.hits, s1.misses), (s16.hits, s16.misses));
+        assert_eq!(s1.entries, s16.entries);
+    }
+
+    #[test]
+    fn stats_never_block_on_held_shard_locks() {
+        // the satellite fix: metrics scraping must not take the hot-path
+        // lock — stats() reads only atomics, so it completes even while
+        // every shard mutex is held by someone else
+        let engine = PredictionEngine::new(64);
+        let gpu = gpu_by_name("L40").unwrap();
+        engine.analyze(&gemm(128, 128, 128), &gpu);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::scope(|s| {
+            let guards: Vec<_> =
+                engine.shards.iter().map(|sh| sh.cache.lock().unwrap()).collect();
+            let eng = &engine;
+            s.spawn(move || {
+                let _ = tx.send(eng.stats());
+            });
+            let got = rx.recv_timeout(Duration::from_secs(10));
+            drop(guards);
+            let stats = got.expect("stats() must not block on cache locks");
+            assert_eq!(stats.entries, 1);
+            assert_eq!(stats.misses, 1);
+        });
     }
 }

@@ -37,9 +37,10 @@ fn usage() -> &'static str {
        simulate   --model qwen2.5-14b --gpu A100 [--tp 1] [--pp 1]\n\
                   [--workload arxiv|splitwise] [--batch 8] [--requests 1000:200,...]\n\
                   [--phases both|prefill|decode] [--seed 7] [--host-gap-us 0.8]\n\
-                  [--json] | [--spec <file|->]\n\
+                  [--threads N] [--json] | [--spec <file|->]\n\
        e2e        --model qwen2.5-14b --gpu H100 [--tp 1] [--pp 1] [--workload arxiv] [--batch 8]\n\
-       serve      [--stdio] [--requests 512] [--gpu A100]\n\
+                  [--threads N]\n\
+       serve      [--stdio] [--requests 512] [--gpu A100] [--threads N]\n\
                   [--max-batch 256] [--deadline-us 2000] [--queue-cap 1024]\n\
        tune       --gpu A40 [--n 20]\n\
        experiment <table1|table7|fig3|fig4|fig5|table8|scaledmm|fig6|fig7|table9|fig8|table10|all>\n\
@@ -66,6 +67,13 @@ fn kernel_of(args: &Args) -> Result<KernelKind> {
 fn gpu_of(args: &Args, default: &str) -> Result<hw::GpuSpec> {
     let name = args.str_or("gpu", default);
     Ok(api::resolve_gpu(&name)?)
+}
+
+/// `--threads` on `simulate`/`serve`/`e2e`: worker-thread count for the
+/// two-pass parallel evaluator and the service routing pass. Outputs are
+/// bit-identical at any value — this is purely a wall-clock knob.
+fn threads_of(args: &Args) -> Result<usize> {
+    Ok(args.usize_or("threads", synperf::engine::par::default_threads())?.max(1))
 }
 
 fn main() -> Result<()> {
@@ -317,7 +325,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         } else {
             std::fs::read_to_string(path)?
         };
-        let sim = simulator_of(scale_of(args));
+        let sim = simulator_of(scale_of(args)).threads(threads_of(args)?);
         for line in text.lines() {
             if line.trim().is_empty() {
                 continue;
@@ -330,7 +338,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
 
     let spec = spec_of(args)?;
-    let sim = simulator_of(scale_of(args));
+    let sim = simulator_of(scale_of(args)).threads(threads_of(args)?);
     let report = sim.simulate(&spec)?;
     if args.has("json") {
         // machine consumers get exactly one report line on stdout
@@ -346,7 +354,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     // trained artifacts (use `simulate` for the degraded-friendly verb)
     let lab = Lab::new(scale_of(args))?;
     let spec = spec_of(args)?;
-    let report = lab.simulator()?.simulate(&spec)?;
+    let report = lab.simulator()?.simulate_with_threads(&spec, threads_of(args)?)?;
     print_report(&report);
     Ok(())
 }
@@ -354,21 +362,24 @@ fn cmd_e2e(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use synperf::coordinator::{PredictionService, ServiceConfig};
     let defaults = ServiceConfig::default();
+    let threads = threads_of(args)?;
     let cfg = ServiceConfig {
         max_batch: args.usize_or("max-batch", defaults.max_batch)?,
         deadline: std::time::Duration::from_micros(
             args.u64_or("deadline-us", defaults.deadline.as_micros() as u64)?,
         ),
         queue_cap: args.usize_or("queue-cap", defaults.queue_cap)?,
+        threads,
     };
     let scale = scale_of(args);
     // effective config at startup (stderr: stdout carries JSONL in --stdio)
     eprintln!(
-        "serve: protocol v{}, max_batch={}, deadline={}us, queue_cap={}",
+        "serve: protocol v{}, max_batch={}, deadline={}us, queue_cap={}, threads={}",
         api::PROTOCOL_VERSION,
         cfg.max_batch,
         cfg.deadline.as_micros(),
-        cfg.queue_cap
+        cfg.queue_cap,
+        cfg.threads
     );
     let svc = PredictionService::spawn(
         move || match Lab::new(scale) {
@@ -394,7 +405,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let stdout = std::io::stdout();
         let stats = synperf::api::stdio::serve_lines(
             &svc.client(),
-            || simulator_of(scale),
+            || simulator_of(scale).threads(threads),
             std::io::BufReader::new(std::io::stdin()),
             &mut stdout.lock(),
             cfg.max_batch,

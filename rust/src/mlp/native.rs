@@ -80,6 +80,38 @@ pub fn forward(theta: &[f32], bn: &[f32], xs: &[[f32; FEATURE_DIM]]) -> Vec<f32>
     out
 }
 
+/// Parallel batched forward: rows split into [`ROW_BLOCK`]-aligned
+/// contiguous chunks fanned out over [`crate::engine::par::par_map`], each
+/// worker reusing one thread-local [`Scratch`] across its whole chunk.
+/// Row blocks are computationally independent (the panel is rebuilt per
+/// block), so splitting at block boundaries is **bit-identical** to
+/// [`forward`] at every thread count.
+pub fn forward_par(
+    theta: &[f32],
+    bn: &[f32],
+    xs: &[[f32; FEATURE_DIM]],
+    threads: usize,
+) -> Vec<f32> {
+    /// Minimum rows per chunk (a `ROW_BLOCK` multiple): a worker gets at
+    /// least this much work, so a large `threads` against a modest batch
+    /// cannot dissolve into per-handful-of-rows thread spawns.
+    const PAR_GRAIN_ROWS: usize = 64;
+    let threads = threads.max(1);
+    if threads == 1 || xs.len() <= PAR_GRAIN_ROWS {
+        return forward(theta, bn, xs);
+    }
+    let chunk =
+        (xs.len().div_ceil(threads).div_ceil(ROW_BLOCK) * ROW_BLOCK).max(PAR_GRAIN_ROWS);
+    let chunks: Vec<&[[f32; FEATURE_DIM]]> = xs.chunks(chunk).collect();
+    let parts: Vec<Vec<f32>> = crate::engine::par::par_map(&chunks, threads, |_, &rows| {
+        let mut scratch = Scratch::new();
+        let mut out = Vec::with_capacity(rows.len());
+        forward_into(theta, bn, rows, &mut scratch, &mut out);
+        out
+    });
+    parts.into_iter().flatten().collect()
+}
+
 /// Batched inference forward appending one efficiency per row to `out`,
 /// reusing `scratch` across calls.
 pub fn forward_into(
@@ -283,6 +315,31 @@ mod tests {
         assert_eq!(want.len(), got.len());
         for (w, g) in want.iter().zip(&got) {
             assert_eq!(w.to_bits(), g.to_bits(), "blocked forward drifted");
+        }
+    }
+
+    #[test]
+    fn parallel_forward_bit_identical_at_any_thread_count() {
+        let (theta, bn) = synthetic_weights();
+        // ragged sizes around the block/chunk boundaries
+        for n in [1usize, 7, 8, 9, 61, 256] {
+            let xs: Vec<[f32; FEATURE_DIM]> = (0..n)
+                .map(|r| {
+                    let mut x = [0f32; FEATURE_DIM];
+                    for (i, v) in x.iter_mut().enumerate() {
+                        *v = ((r * 13 + i * 7) % 5) as f32 - 2.0;
+                    }
+                    x
+                })
+                .collect();
+            let want = forward(&theta, &bn, &xs);
+            for threads in [1usize, 2, 3, 8] {
+                let got = forward_par(&theta, &bn, &xs, threads);
+                assert_eq!(want.len(), got.len());
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(w.to_bits(), g.to_bits(), "n={n} threads={threads} drifted");
+                }
+            }
         }
     }
 

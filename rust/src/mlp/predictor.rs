@@ -86,12 +86,42 @@ impl Predictor {
         Ok(feats.iter().zip(effs).map(|(f, e)| f.theory_sec / e).collect())
     }
 
+    /// Rows at or above which the native forward fans out over
+    /// [`native::forward_par`] (chunked, one thread-local scratch per
+    /// worker); smaller batches stay on the serial reused-scratch path.
+    /// Both paths are bit-identical, so this is purely a wall-clock knob.
+    const NATIVE_PAR_MIN_ROWS: usize = 256;
+
     /// Native (pure-rust) forward for cross-checking the PJRT path and as
-    /// the artifact-free fallback; reuses the predictor's scratch panels
-    /// when they are free, falling back to a fresh local workspace rather
-    /// than serializing concurrent callers on the lock.
+    /// the artifact-free fallback. Large batches split into
+    /// `ROW_BLOCK`-aligned chunks across worker threads (bit-identical to
+    /// the serial walk — row blocks are independent); small batches reuse
+    /// the predictor's scratch panels when they are free, falling back to
+    /// a fresh local workspace rather than serializing concurrent callers
+    /// on the lock. Workers default to available parallelism — callers
+    /// holding a `--threads`-style cap (or already running inside a
+    /// parallel region) use
+    /// [`predict_eff_native_threads`](Self::predict_eff_native_threads).
     pub fn predict_eff_native(&self, xs: &[[f32; FEATURE_DIM]]) -> Vec<f64> {
+        self.predict_eff_native_threads(xs, crate::engine::par::default_threads())
+    }
+
+    /// [`predict_eff_native`](Self::predict_eff_native) with an explicit
+    /// worker cap: `threads = 1` (or a batch under
+    /// [`NATIVE_PAR_MIN_ROWS`](Self::NATIVE_PAR_MIN_ROWS) rows) stays on
+    /// the serial reused-scratch path. Outputs are bit-identical at any
+    /// thread count.
+    pub fn predict_eff_native_threads(
+        &self,
+        xs: &[[f32; FEATURE_DIM]],
+        threads: usize,
+    ) -> Vec<f64> {
         let zs = self.weights.scaler.transform_all(xs);
+        if threads > 1 && zs.len() >= Self::NATIVE_PAR_MIN_ROWS {
+            let effs =
+                native::forward_par(&self.weights.theta, &self.weights.bn, &zs, threads);
+            return effs.into_iter().map(|v| (v as f64).clamp(1e-3, 0.9999)).collect();
+        }
         let mut effs = Vec::with_capacity(zs.len());
         let mut guard;
         let mut local;

@@ -1,13 +1,30 @@
-//! The scenario evaluator: walks the compiled phase streams once, in
-//! execution order, and produces the typed [`ScenarioReport`].
+//! The scenario evaluator: the **two-pass deterministic-parallel** walk of
+//! the compiled phase streams into the typed [`ScenarioReport`].
+//!
+//! Pass 1 fans the per-item seed-dependent measurements (oracle sampling,
+//! comm oracles and RF predictions) out over [`par::par_map`] into an
+//! index-ordered buffer; pass 2 accumulates totals serially in stream
+//! order — the exact walk the serial evaluator always did — and then one
+//! batched MLP routing pass per feature view runs through
+//! [`crate::api::predict_batch_view_on`]. Every item's value depends only
+//! on `(op, gpu, seed)`, and the accumulation order never changes, so the
+//! report is **bit-identical at every thread count**. One precondition
+//! applies to the `cache_hits` provenance counter alone: it re-probes the
+//! engine cache after pass 1, so it equals the kernel-item count (and
+//! stays thread-count independent) as long as the scenario's distinct
+//! analyses fit the engine cache without eviction — comfortably true for
+//! typical serving scenarios against the default 8192-entry cache. A
+//! pathological schedule with tens of thousands of distinct per-step
+//! shapes can evict between the passes, making `cache_hits` advisory
+//! there; the method totals and breakdowns never depend on cache state
+//! at all.
 //!
 //! The walk mirrors [`crate::e2e::predict::eval_trace`] **exactly** — the
 //! same per-item op seeds (each stream's `seed_base` + offset, which for a
 //! both-phase run is precisely the global trace index), the same oracle
-//! calls, the same single batched MLP routing pass over all kernel items
-//! via [`crate::api::predict_batch_view`] — while additionally tagging
-//! every contribution with its phase and [`OpClass`]. The whole-scenario
-//! totals are accumulated item by item in stream order (not by summing the
+//! calls, the same batched routing — while additionally tagging every
+//! contribution with its phase and [`OpClass`]. The whole-scenario totals
+//! are accumulated item by item in stream order (not by summing the
 //! per-phase subtotals), so they are bit-identical to the hand-built
 //! `build_trace` + `eval_trace` reference (pinned in `tests/proptests.rs`).
 //! Because seed bases are phase-stable, a decode-only (disaggregated) run
@@ -15,11 +32,10 @@
 
 use super::{ClassBreakdown, CompiledScenario, OpClass, Phase, PhaseReport, ScenarioReport};
 use crate::api::{self, FeatureView, Source};
-use crate::e2e::comm::{allreduce_oracle, sendrecv_oracle, CommModel};
-use crate::e2e::predict::{MethodTotals, ModelSet};
+use crate::e2e::comm::CommModel;
+use crate::e2e::predict::{eval_op, ItemEval, MethodTotals, ModelSet, EVAL_PAR_GRAIN};
 use crate::e2e::trace::Op;
-use crate::engine::PredictionEngine;
-use crate::hw::GpuSpec;
+use crate::engine::{par, PredictionEngine};
 use crate::kernels::KernelConfig;
 
 fn phase_tokens(c: &CompiledScenario, phase: Phase) -> f64 {
@@ -71,15 +87,41 @@ fn add_comm_op(
     grand_breakdown.add(class, count * actual);
 }
 
-/// Evaluate a compiled scenario against ground truth and every predictor.
+/// Evaluate a compiled scenario against ground truth and every predictor,
+/// fanning the per-item pass out over `threads` workers (the report is
+/// bit-identical at every thread count — see the module docs).
 /// Infallible by construction: compilation already validated the spec, and
 /// missing models answer in the documented degraded roofline mode (counted
 /// in `totals.degraded_kernels`).
-pub fn evaluate(c: &CompiledScenario, models: &ModelSet, comm: &CommModel) -> ScenarioReport {
+pub fn evaluate(
+    c: &CompiledScenario,
+    models: &ModelSet,
+    comm: &CommModel,
+    threads: usize,
+) -> ScenarioReport {
     let engine = PredictionEngine::global();
     let gpu = &c.gpu;
     let host_gap = c.host_gap_sec;
 
+    // pass 1 — parallel per-item measurements, index-ordered. Op seeds are
+    // phase-stable: seed_base + offset equals the global trace index of a
+    // both-phase run.
+    let flat: Vec<(usize, usize)> = c
+        .phases
+        .iter()
+        .enumerate()
+        .flat_map(|(pi, stream)| (0..stream.items.len()).map(move |j| (pi, j)))
+        .collect();
+    // small scenarios stay serial: see EVAL_PAR_GRAIN
+    let threads = threads.min(flat.len().div_ceil(EVAL_PAR_GRAIN)).max(1);
+    let evals: Vec<ItemEval> = par::par_map(&flat, threads, |_, &(pi, j)| {
+        let stream = &c.phases[pi];
+        let op_seed = c.seed.wrapping_add((stream.seed_base + j) as u64 * 0x9E37);
+        eval_op(engine, &stream.items[j].op, gpu, c.tp, comm, op_seed)
+    });
+
+    // pass 2 — serial stream-order accumulation, unchanged from the serial
+    // reference (grand totals stay bit-identical to eval_trace)
     let mut grand = MethodTotals::default();
     let mut grand_breakdown = ClassBreakdown::default();
     let mut launches = 0.0f64;
@@ -98,18 +140,17 @@ pub fn evaluate(c: &CompiledScenario, models: &ModelSet, comm: &CommModel) -> Sc
 
     // kernel launches accumulated for one batched routing pass per view,
     // tagged with (phase index, repetition count)
-    let mut kernel_reqs: Vec<(KernelConfig, GpuSpec)> = Vec::new();
+    let mut kernel_cfgs: Vec<&KernelConfig> = Vec::new();
     let mut kernel_meta: Vec<(usize, f64)> = Vec::new();
 
+    let mut fi = 0usize;
     for (pi, stream) in c.phases.iter().enumerate() {
-        for (j, item) in stream.items.iter().enumerate() {
-            // phase-stable op-seed stream: seed_base + offset equals the
-            // global trace index of a both-phase run
-            let op_seed = c.seed.wrapping_add((stream.seed_base + j) as u64 * 0x9E37);
+        for item in &stream.items {
+            let ev = &evals[fi];
+            fi += 1;
             let ph = &mut reports[pi];
-            match &item.op {
-                Op::Kernel(cfg) => {
-                    let s = engine.make_sample(cfg, gpu, op_seed);
+            match ev {
+                ItemEval::Kernel(s) => {
                     let actual = item.count * (s.latency_sec + host_gap);
                     grand.actual += actual;
                     ph.totals.actual += actual;
@@ -118,7 +159,7 @@ pub fn evaluate(c: &CompiledScenario, models: &ModelSet, comm: &CommModel) -> Sc
                     grand.habitat += item.count * s.habitat_sec;
                     ph.totals.habitat += item.count * s.habitat_sec;
                     let linear = match models.linear.get(&s.kind) {
-                        Some(lm) => item.count * lm.predict(&s),
+                        Some(lm) => item.count * lm.predict(s),
                         None => item.count * s.roofline_sec, // no model: fall back
                     };
                     grand.linear += linear;
@@ -131,33 +172,28 @@ pub fn evaluate(c: &CompiledScenario, models: &ModelSet, comm: &CommModel) -> Sc
                     grand_breakdown.add(OpClass::HostGap, item.count * host_gap);
                     ph.launches += item.count;
                     launches += item.count;
-                    kernel_reqs.push((cfg.clone(), gpu.clone()));
+                    let Op::Kernel(cfg) = &item.op else {
+                        unreachable!("pass-1 evals align with stream items")
+                    };
+                    kernel_cfgs.push(cfg);
                     kernel_meta.push((pi, item.count));
                 }
-                Op::AllReduce { bytes } => {
-                    let actual = allreduce_oracle(*bytes, c.tp, gpu, op_seed);
-                    let pred = comm.predict_allreduce(*bytes, c.tp, gpu);
+                ItemEval::Comm { actual, pred } => {
+                    let class = match &item.op {
+                        Op::AllReduce { .. } => OpClass::AllReduce,
+                        Op::SendRecv { .. } => OpClass::SendRecv,
+                        Op::Kernel(_) => {
+                            unreachable!("pass-1 evals align with stream items")
+                        }
+                    };
                     add_comm_op(
                         &mut grand,
                         &mut grand_breakdown,
                         ph,
-                        OpClass::AllReduce,
+                        class,
                         item.count,
-                        actual,
-                        pred,
-                    );
-                }
-                Op::SendRecv { bytes } => {
-                    let actual = sendrecv_oracle(*bytes, gpu, op_seed);
-                    let pred = comm.predict_sendrecv(*bytes, gpu);
-                    add_comm_op(
-                        &mut grand,
-                        &mut grand_breakdown,
-                        ph,
-                        OpClass::SendRecv,
-                        item.count,
-                        actual,
-                        pred,
+                        *actual,
+                        *pred,
                     );
                 }
             }
@@ -166,8 +202,15 @@ pub fn evaluate(c: &CompiledScenario, models: &ModelSet, comm: &CommModel) -> Sc
 
     // the one request path: per-category batched MLP routing with
     // provenance, once per feature view (SynPerf, Neusight baseline)
-    let syn = api::predict_batch_view(&models.synperf, FeatureView::SynPerf, &kernel_reqs);
-    let neu = api::predict_batch_view(&models.neusight, FeatureView::Neusight, &kernel_reqs);
+    let syn =
+        api::predict_batch_view_on(&models.synperf, FeatureView::SynPerf, gpu, &kernel_cfgs, threads);
+    let neu = api::predict_batch_view_on(
+        &models.neusight,
+        FeatureView::Neusight,
+        gpu,
+        &kernel_cfgs,
+        threads,
+    );
     let mut cache_hits = 0usize;
     for ((sp, np), (pi, count)) in syn.iter().zip(&neu).zip(&kernel_meta) {
         grand.synperf += count * sp.latency_sec;

@@ -7,8 +7,10 @@
 //! the phase schedule (prefill/decode), a seed and the per-kernel host
 //! launch gap — as a [`ScenarioSpec`]. The [`compiler`] lowers the spec to
 //! phase-tagged kernel/comm op streams ([`CompiledScenario`]); [`eval`]
-//! runs the streams through the protocol-v1 request path
-//! ([`crate::api::predict_batch_view`]) into a typed [`ScenarioReport`]:
+//! runs the streams — a parallel per-item pass then a serial stream-order
+//! accumulation, bit-identical at every thread count — through the
+//! protocol-v1 request path ([`crate::api::predict_batch_view_on`]) into
+//! a typed [`ScenarioReport`]:
 //! per-phase TTFT/TPOT/tokens-per-second, per-method [`MethodTotals`], a
 //! typed [`OpClass`] breakdown (no stringly buckets), and the
 //! degraded-kernel / cache-hit provenance carried up from the protocol.
@@ -450,6 +452,10 @@ impl ScenarioReport {
 pub struct Simulator {
     models: ModelSet,
     comm_seed: u64,
+    /// Worker threads for the two-pass parallel evaluator. Reports are
+    /// bit-identical at every thread count, so this is purely a wall-clock
+    /// knob (the CLI's `--threads`).
+    threads: usize,
     comms: RefCell<HashMap<String, Rc<CommModel>>>,
 }
 
@@ -464,13 +470,25 @@ impl Simulator {
     }
 
     pub fn with_comm_seed(models: ModelSet, comm_seed: u64) -> Simulator {
-        Simulator { models, comm_seed, comms: RefCell::new(HashMap::new()) }
+        Simulator {
+            models,
+            comm_seed,
+            threads: crate::engine::par::default_threads(),
+            comms: RefCell::new(HashMap::new()),
+        }
     }
 
     /// A simulator with no trained models: every kernel item answers the
     /// analytical roof with `Roofline` provenance.
     pub fn degraded() -> Simulator {
         Simulator::new(ModelSet::default())
+    }
+
+    /// Set the evaluator's worker-thread count (default: available
+    /// parallelism). Purely a speed knob — outputs do not change.
+    pub fn threads(mut self, threads: usize) -> Simulator {
+        self.threads = threads.max(1);
+        self
     }
 
     fn comm_for(&self, gpu: &GpuSpec) -> Rc<CommModel> {
@@ -482,11 +500,23 @@ impl Simulator {
         m
     }
 
-    /// Compile and evaluate one scenario.
+    /// Compile and evaluate one scenario with the configured thread count.
     pub fn simulate(&self, spec: &ScenarioSpec) -> Result<ScenarioReport, ScenarioError> {
+        self.simulate_with_threads(spec, self.threads)
+    }
+
+    /// Compile and evaluate one scenario with an explicit thread count
+    /// (shared-`Simulator` callers — e.g. the cached `Lab::simulator()` —
+    /// use this instead of the consuming [`threads`](Self::threads)
+    /// builder). Bit-identical to `threads = 1`.
+    pub fn simulate_with_threads(
+        &self,
+        spec: &ScenarioSpec,
+        threads: usize,
+    ) -> Result<ScenarioReport, ScenarioError> {
         let compiled = compile(spec)?;
         let comm = self.comm_for(&compiled.gpu);
-        Ok(evaluate(&compiled, &self.models, &comm))
+        Ok(evaluate(&compiled, &self.models, &comm, threads.max(1)))
     }
 }
 

@@ -1,0 +1,190 @@
+//! Concurrency acceptance tests for the throughput-scale back half: the
+//! sharded engine cache and the two-pass deterministic-parallel evaluators.
+//! N threads hammer the global engine and the stdio serve loop with mixed
+//! predict/simulate traffic; the assertions are the contract — no
+//! deadlock, responses strictly in input order, and every report
+//! byte-identical to a single-threaded run.
+
+use synperf::api::stdio::serve_lines;
+use synperf::api::ModelBundle;
+use synperf::coordinator::{PredictionService, ServiceConfig};
+use synperf::e2e::workload::{Request, WorkloadKind};
+use synperf::engine::PredictionEngine;
+use synperf::hw::gpu_by_name;
+use synperf::kernels::KernelConfig;
+use synperf::scenario::{wire as scenario_wire, ScenarioSpec, Simulator, WorkloadSpec};
+
+#[test]
+fn concurrent_analyze_and_make_sample_stay_bit_identical() {
+    // 8 threads × mixed analyze/make_sample over overlapping shapes on two
+    // GPUs: every lookup lands on some shard, concurrent misses may race,
+    // and none of it may change a single bit of any analysis
+    let engine = PredictionEngine::global();
+    let gpus = [gpu_by_name("A100").unwrap(), gpu_by_name("H800").unwrap()];
+    // unique shapes (seq >= 9000) keep this test independent of other
+    // tests sharing the global engine
+    let shape =
+        |i: u32| KernelConfig::RmsNorm { seq: 9000 + (i % 12), dim: 4096 + 64 * (i % 3) };
+    std::thread::scope(|s| {
+        for t in 0..8u32 {
+            let gpus = &gpus;
+            s.spawn(move || {
+                for i in 0..48u32 {
+                    let gpu = &gpus[((t + i) % 2) as usize];
+                    let cfg = shape(i);
+                    let a = PredictionEngine::global().analyze(&cfg, gpu);
+                    assert!(a.theory_sec() > 0.0);
+                    if i % 6 == 0 {
+                        let sm =
+                            PredictionEngine::global().make_sample(&cfg, gpu, u64::from(i));
+                        assert!(sm.latency_sec > 0.0);
+                    }
+                }
+            });
+        }
+    });
+    // the hammered cache must answer exactly what a fresh single-shard
+    // serial engine computes
+    let serial = PredictionEngine::with_shards(256, 1);
+    for i in 0..12u32 {
+        let cfg = shape(i);
+        for gpu in &gpus {
+            let a = engine.analyze(&cfg, gpu);
+            let b = serial.analyze(&cfg, gpu);
+            assert_eq!(a.x, b.x, "shape {i} on {}: hammered analysis drifted", gpu.name);
+            assert_eq!(a.theory_sec().to_bits(), b.theory_sec().to_bits());
+        }
+    }
+    let stats = engine.stats();
+    assert!(stats.hits + stats.misses > 0, "counters must account the hammering");
+}
+
+#[test]
+fn service_answers_all_clients_under_contention() {
+    // 8 client threads × blocking predicts through the bounded queue: no
+    // deadlock, every request answered, every latency physical
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    std::thread::scope(|s| {
+        for t in 0..8u32 {
+            let client = svc.client();
+            s.spawn(move || {
+                let gpu = gpu_by_name("L40").unwrap();
+                for i in 0..32u32 {
+                    let cfg = KernelConfig::SiluMul { seq: 8000 + (i % 8), dim: 1024 + t };
+                    let resp = client
+                        .predict(synperf::api::PredictRequest::new(cfg, gpu.clone()))
+                        .expect("service answers under contention");
+                    assert!(resp.latency_sec > 0.0 && resp.latency_sec.is_finite());
+                }
+            });
+        }
+    });
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.requests, 8 * 32, "every request must be accounted");
+    svc.shutdown();
+}
+
+#[test]
+fn stdio_mixed_verbs_stay_in_order_under_parallel_load() {
+    // the serve loop runs a multi-threaded simulator while extra threads
+    // hammer the same global engine: responses must arrive strictly in
+    // input order, and every simulate report must be byte-identical to a
+    // single-threaded evaluation of the same spec
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let sim_seed = |i: usize| 11 + (i % 2) as u64;
+    let mut input = String::new();
+    for i in 0..24usize {
+        if i % 3 == 0 {
+            input.push_str(&format!(
+                "{{\"id\":\"l{i}\",\"op\":\"simulate\",\"scenario\":{{\"model\":\"llama3.1-8b\",\
+                 \"gpu\":\"A100\",\"tp\":2,\"workload\":{{\"requests\":[[96,8],[64,4]]}},\
+                 \"seed\":{}}}}}\n",
+                sim_seed(i)
+            ));
+        } else {
+            input.push_str(&format!(
+                "{{\"id\":\"l{i}\",\"gpu\":\"A100\",\"kernel\":{{\"type\":\"rmsnorm\",\
+                 \"seq\":{},\"dim\":2048}}}}\n",
+                64 + i
+            ));
+        }
+    }
+    let mut out = Vec::new();
+    let stats = std::thread::scope(|s| {
+        let hammer: Vec<_> = (0..4u32)
+            .map(|t| {
+                s.spawn(move || {
+                    let gpu = gpu_by_name("H20").unwrap();
+                    for i in 0..64u32 {
+                        let cfg =
+                            KernelConfig::SiluMul { seq: 7000 + (i % 16), dim: 2048 + t };
+                        assert!(
+                            PredictionEngine::global().analyze(&cfg, &gpu).theory_sec() > 0.0
+                        );
+                    }
+                })
+            })
+            .collect();
+        let stats = serve_lines(
+            &svc.client(),
+            || Simulator::degraded().threads(7),
+            input.as_bytes(),
+            &mut out,
+            8,
+        )
+        .unwrap();
+        for h in hammer {
+            h.join().unwrap();
+        }
+        stats
+    });
+    assert_eq!(stats.served, 24);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.simulated, 8);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 24);
+    for (i, line) in lines.iter().enumerate() {
+        assert!(
+            line.contains(&format!("\"id\":\"l{i}\"")),
+            "response {i} out of order: {line}"
+        );
+    }
+    // every simulate line == the 1-thread evaluation, byte for byte
+    let sim1 = Simulator::degraded().threads(1);
+    for (i, line) in lines.iter().enumerate() {
+        if i % 3 != 0 {
+            continue;
+        }
+        let spec = ScenarioSpec::new("llama3.1-8b", "A100")
+            .tp(2)
+            .workload(WorkloadSpec::Explicit(vec![
+                Request { input_len: 96, output_len: 8 },
+                Request { input_len: 64, output_len: 4 },
+            ]))
+            .seed(sim_seed(i));
+        let id = format!("l{i}");
+        let expect = scenario_wire::encode_report(Some(&id), &sim1.simulate(&spec));
+        assert_eq!(*line, expect, "simulate line {i} must match the 1-thread run");
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn parallel_evaluator_is_byte_identical_across_thread_counts() {
+    // sampled workload + collectives: the whole JSONL report (totals,
+    // per-phase breakdowns, cache-hit provenance) must not move by a byte
+    // between 1, 2 and 7 evaluation threads
+    let spec = ScenarioSpec::new("qwen2.5-14b", "H800")
+        .tp(2)
+        .workload(WorkloadSpec::Sampled { kind: WorkloadKind::Splitwise, batch: 6 })
+        .seed(29);
+    let sim = Simulator::degraded();
+    let lines: Vec<String> = [1usize, 2, 7]
+        .iter()
+        .map(|&t| scenario_wire::encode_report(None, &sim.simulate_with_threads(&spec, t)))
+        .collect();
+    assert!(lines[0].contains("\"ok\":true"), "simulation must succeed: {}", lines[0]);
+    assert_eq!(lines[0], lines[1], "2-thread report drifted from 1-thread");
+    assert_eq!(lines[0], lines[2], "7-thread report drifted from 1-thread");
+}

@@ -196,7 +196,7 @@ fn repeated_trace_launches_hit_the_decomposition_cache() {
 
     let engine = PredictionEngine::global();
     let before = engine.stats();
-    let totals = eval_trace(&trace, &gpu, 1, &models, &comm, 99, HOST_GAP_SEC).unwrap();
+    let totals = eval_trace(&trace, &gpu, 1, &models, &comm, 99, HOST_GAP_SEC, 1).unwrap();
     let after = engine.stats();
 
     assert!(totals.actual > 0.0 && totals.synperf > 0.0);

@@ -596,10 +596,13 @@ fn compiled_scenarios_conserve_launch_count_across_parallelism() {
     });
 }
 
-/// The declarative path must not change a single bit of the answer: a
-/// `ScenarioReport`'s method totals are bit-identical to the hand-built
-/// `build_trace` + `eval_trace` reference, for every registered LLM config
-/// on A100 and H800 (the two testbed GPUs of the paper's Table VI splits).
+/// The declarative path must not change a single bit of the answer — at
+/// any thread count. For every registered LLM config on A100 and H800
+/// (the two testbed GPUs of the paper's Table VI splits), the sharded
+/// cache + parallel two-pass evaluator at `threads ∈ {1, 2, 7}` is pinned
+/// against the serial hand-built `build_trace` + `eval_trace` reference,
+/// and the encoded JSONL report lines must be byte-identical across
+/// thread counts.
 #[test]
 fn scenario_reports_match_the_handbuilt_trace_reference() {
     let reqs = vec![
@@ -619,24 +622,35 @@ fn scenario_reports_match_the_handbuilt_trace_reference() {
                 .workload(WorkloadSpec::Explicit(reqs.clone()))
                 .seed(1234)
                 .host_gap_sec(1.1e-6);
-            let report = sim.simulate(&spec).unwrap();
             let tr = trace::build_trace(cfg, tp, pp, &reqs);
             let reference =
-                eval_trace(&tr, &gpu, tp, &ModelSet::default(), &comm, 1234, 1.1e-6).unwrap();
-            for m in Method::ALL {
+                eval_trace(&tr, &gpu, tp, &ModelSet::default(), &comm, 1234, 1.1e-6, 1)
+                    .unwrap();
+            let mut lines: Vec<String> = Vec::new();
+            for threads in [1usize, 2, 7] {
+                let report = sim.simulate_with_threads(&spec, threads).unwrap();
+                for m in Method::ALL {
+                    assert_eq!(
+                        report.totals.get(m).to_bits(),
+                        reference.get(m).to_bits(),
+                        "{} on {gpu_name} ({threads} threads): {} must be bit-identical \
+                         to the serial reference",
+                        cfg.name,
+                        m.name()
+                    );
+                }
+                assert_eq!(report.totals.degraded_kernels, reference.degraded_kernels);
                 assert_eq!(
-                    report.totals.get(m).to_bits(),
-                    reference.get(m).to_bits(),
-                    "{} on {gpu_name}: {} must be bit-identical to the reference",
-                    cfg.name,
-                    m.name()
+                    report.launches.to_bits(),
+                    trace::launch_count(&tr).to_bits(),
+                    "{}: launch accounting must match",
+                    cfg.name
                 );
+                lines.push(synperf::scenario::wire::encode_report(None, &Ok(report)));
             }
-            assert_eq!(report.totals.degraded_kernels, reference.degraded_kernels);
-            assert_eq!(
-                report.launches.to_bits(),
-                trace::launch_count(&tr).to_bits(),
-                "{}: launch accounting must match",
+            assert!(
+                lines.windows(2).all(|w| w[0] == w[1]),
+                "{} on {gpu_name}: JSONL reports must be byte-identical across thread counts",
                 cfg.name
             );
         }

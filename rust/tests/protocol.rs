@@ -130,7 +130,12 @@ fn saturated_queue_returns_queue_full_not_a_hang() {
             gate_rx.recv().ok();
             ModelBundle::default()
         },
-        ServiceConfig { max_batch: 8, deadline: Duration::from_millis(1), queue_cap: 2 },
+        ServiceConfig {
+            max_batch: 8,
+            deadline: Duration::from_millis(1),
+            queue_cap: 2,
+            ..ServiceConfig::default()
+        },
     );
     let client = svc.client();
     let gpu = gpu_by_name("A100").unwrap();
