@@ -83,4 +83,41 @@ printf '%s\n' "$SPEC_OUT" | head -1 | grep -q '"ok":true,"report":{' \
 printf '%s\n' "$SPEC_OUT" | grep -q '"id":"x","ok":false,"error":{"code":"unknown_model"' \
   || { echo "FAIL: spec-mode error correlation missing"; exit 1; }
 
+# 3. Scenario v2: a "cluster" object rides the same simulate verb and
+# answers with the continuous-batching report (percentiles, SLO, replicas)
+CLUSTER_REQS='{"v":1,"id":"c1","op":"simulate","cluster":{"model":"llama3.1-8b","gpu":"A100","replicas":2,"policy":"round_robin","arrivals":{"trace":[[0.0,64,8],[0.01,96,8],[0.02,64,4],[0.03,128,8]]},"max_batch":4,"kv_capacity_tokens":4096,"seed":7}}
+{"v":1,"id":"c-bad","op":"simulate","cluster":{"model":"llama3.1-8b","gpu":"A100","replicas":0}}'
+
+CL_OUT=$(printf '%s\n' "$CLUSTER_REQS" | cargo run --release --quiet --bin synperf -- serve --stdio --queue-cap 64 $T_FLAG)
+printf '%s\n' "$CL_OUT"
+printf '%s\n' "$CL_OUT" | grep '"id":"c1"' | grep -q '"ok":true,"report":{"cluster":true' \
+  || { echo "FAIL: c1 cluster report missing"; exit 1; }
+printf '%s\n' "$CL_OUT" | grep '"id":"c1"' | grep -q '"completed":4' \
+  || { echo "FAIL: c1 must complete all 4 offered requests"; exit 1; }
+printf '%s\n' "$CL_OUT" | grep '"id":"c1"' | grep -q '"p99_sec":' \
+  || { echo "FAIL: c1 percentile summaries missing"; exit 1; }
+printf '%s\n' "$CL_OUT" | grep '"id":"c1"' | grep -q '"slo":{' \
+  || { echo "FAIL: c1 SLO attainment missing"; exit 1; }
+# the v2 taxonomy extension travels the wire with correlation intact
+printf '%s\n' "$CL_OUT" | grep -q '"id":"c-bad","ok":false,"error":{"code":"invalid_cluster"' \
+  || { echo "FAIL: invalid_cluster error missing"; exit 1; }
+
+# determinism: the same cluster line answers byte-identically at
+# --threads 1 and --threads 8 (the event loop is serial; threads only
+# fan out the per-step batch prediction)
+CL_T1=$(printf '%s\n' "$CLUSTER_REQS" | cargo run --release --quiet --bin synperf -- serve --stdio --queue-cap 64 --threads 1)
+CL_T8=$(printf '%s\n' "$CLUSTER_REQS" | cargo run --release --quiet --bin synperf -- serve --stdio --queue-cap 64 --threads 8)
+[ "$CL_T1" = "$CL_T8" ] \
+  || { echo "FAIL: cluster reports must be byte-identical across thread counts"; exit 1; }
+
+# 3b. the dedicated subcommand grows a --cluster mode (seeded Poisson
+# arrivals; --json emits exactly one v2 report line)
+CL_JSON=$(cargo run --release --quiet --bin synperf -- simulate --cluster \
+  --model llama3.1-8b --gpu A100 --replicas 2 --policy least_loaded \
+  --rate 8 --n 8 --seed 7 --json $T_FLAG)
+printf '%s\n' "$CL_JSON" | grep -q '"ok":true,"report":{"cluster":true' \
+  || { echo "FAIL: simulate --cluster --json report missing"; exit 1; }
+[ "$(printf '%s\n' "$CL_JSON" | wc -l | tr -d ' ')" -eq 1 ] \
+  || { echo "FAIL: --cluster --json must emit exactly one line"; exit 1; }
+
 echo "simulate_stdio: all assertions passed"

@@ -244,6 +244,38 @@ fn run_benches(h: &mut Harness, smoke: bool) {
         });
     }
 
+    println!("\n== cluster simulator (Scenario v2) ==");
+    // seeded Poisson arrivals through continuous batching on two replicas;
+    // the event loop is serial, threads only fan out the per-step batch
+    // prediction, so the report is byte-identical at any thread count
+    // (events/sec = report.events / median)
+    let cluster_n = if smoke { 8 } else { 64 };
+    let cluster_spec = synperf::scenario::ClusterSpec::new("Llama3.1-8B", "A100")
+        .replicas(2)
+        .arrivals(synperf::scenario::ArrivalSpec::Poisson {
+            rate_rps: 32.0,
+            n: cluster_n,
+            kind: synperf::e2e::workload::WorkloadKind::Arxiv,
+        })
+        .max_batch(8)
+        .kv_capacity_tokens(1 << 17)
+        .seed(7);
+    let cluster_sim = synperf::scenario::Simulator::degraded();
+    let mut cluster_events = 0u64;
+    for threads in [1usize, 8] {
+        h.run(&format!("scenario/cluster-sim-{threads}thread n{cluster_n}"), 400, 3, || {
+            let r = cluster_sim.simulate_cluster_with_threads(&cluster_spec, threads).unwrap();
+            cluster_events = r.events;
+            black_box(r);
+        });
+        if let Some(r) = h.results.last() {
+            println!(
+                "  -> {:.0} events/sec at the median ({cluster_events} events)",
+                cluster_events as f64 / (r.median_ns * 1e-9)
+            );
+        }
+    }
+
     println!("\n== protocol batch routing ==");
     // the serving-scale unit of work: one typed batch through the one
     // request path on a hot cache (predictions/sec = 256 / median)

@@ -9,8 +9,9 @@
 //!
 //! The surface speaks two verbs, dispatched per line: **predict** (the
 //! default — a kernel-latency request into the coordinator queue) and
-//! **simulate** (`"op":"simulate"` with a `"scenario"` object — a whole
-//! serving scenario through the [`Simulator`]). Each line is JSON-decoded
+//! **simulate** (`"op":"simulate"` with a `"scenario"` object for the v1
+//! single-node path, or a `"cluster"` object for the v2 discrete-event
+//! cluster simulation — both through the [`Simulator`]). Each line is JSON-decoded
 //! exactly once; the decoded object picks the verb and feeds the winning
 //! codec. Simulate lines are evaluated on the writer thread when their
 //! turn comes, so output order still matches input order exactly — the
@@ -23,7 +24,8 @@
 use super::wire;
 use super::{PredictError, PredictResponse};
 use crate::coordinator::{Client, Pending};
-use crate::scenario::{self, ScenarioError, ScenarioSpec, Simulator};
+use crate::scenario::wire::SimulateRequest;
+use crate::scenario::{self, ScenarioError, Simulator};
 use crate::util::json::parse as parse_json;
 use std::io::{BufRead, Write};
 use std::sync::mpsc::{sync_channel, TryRecvError};
@@ -43,7 +45,7 @@ pub struct StdioStats {
 enum Slot {
     Queued(Option<String>, Pending),
     Ready(Option<String>, Result<PredictResponse, PredictError>),
-    Simulate(Option<String>, Result<ScenarioSpec, ScenarioError>),
+    Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
 }
 
 /// Run the serve loop until the reader is exhausted. Every input line
@@ -78,8 +80,8 @@ where
                         Err(PredictError::UnsupportedKernel(format!("malformed JSON: {e}"))),
                     ),
                     Ok(j) if scenario::wire::is_simulate_json(&j) => {
-                        let (id, spec) = scenario::wire::parse_simulate_json(&j);
-                        Slot::Simulate(id, spec)
+                        let (id, req) = scenario::wire::parse_request_json(&j);
+                        Slot::Simulate(id, req)
                     }
                     Ok(j) => {
                         let (id, parsed) = wire::parse_request_json(&j);
@@ -138,16 +140,34 @@ fn drain_slots<W: Write, F: FnOnce() -> Simulator>(
         let (id, res) = match slot {
             Slot::Queued(id, pending) => (id, pending.wait()),
             Slot::Ready(id, res) => (id, res),
-            Slot::Simulate(id, spec) => {
+            Slot::Simulate(id, req) => {
                 let sim = sim
                     .get_or_insert_with(|| (factory.take().expect("simulator built once"))());
-                let res = spec.and_then(|s| sim.simulate(&s));
                 stats.served += 1;
                 stats.simulated += 1;
-                if res.is_err() {
-                    stats.errors += 1;
-                }
-                writeln!(writer, "{}", scenario::wire::encode_report(id.as_deref(), &res))?;
+                // parse errors answer in the shape the request asked for;
+                // an unparseable line defaults to the v1 report envelope
+                let line = match req {
+                    Ok(SimulateRequest::Scenario(spec)) => {
+                        let res = sim.simulate(&spec);
+                        if res.is_err() {
+                            stats.errors += 1;
+                        }
+                        scenario::wire::encode_report(id.as_deref(), &res)
+                    }
+                    Ok(SimulateRequest::Cluster(spec)) => {
+                        let res = sim.simulate_cluster(&spec);
+                        if res.is_err() {
+                            stats.errors += 1;
+                        }
+                        scenario::wire::encode_cluster_report(id.as_deref(), &res)
+                    }
+                    Err(e) => {
+                        stats.errors += 1;
+                        scenario::wire::encode_report(id.as_deref(), &Err(e))
+                    }
+                };
+                writeln!(writer, "{line}")?;
                 continue;
             }
         };
@@ -233,6 +253,39 @@ mod tests {
         let rep = rep.unwrap();
         assert_eq!(rep.phases.len(), 2);
         assert!(rep.totals.degraded_kernels > 0, "degraded provenance travels the wire");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cluster_lines_ride_the_simulate_verb() {
+        let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+        let input = concat!(
+            r#"{"id":"c1","op":"simulate","cluster":{"model":"Llama3.1-8B","gpu":"A100","replicas":2,"arrivals":{"trace":[[0.0,128,8],[0.001,96,4]]},"kv_capacity_tokens":4096}}"#,
+            "\n",
+            r#"{"id":"p1","gpu":"A100","kernel":{"type":"rmsnorm","seq":128,"dim":2048}}"#,
+            "\n",
+            r#"{"id":"c2","op":"simulate","cluster":{"model":"Llama3.1-8B","gpu":"A100","replicas":0}}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        let stats =
+            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8)
+                .unwrap();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.simulated, 2);
+        assert_eq!(stats.errors, 1);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains(r#""id":"c1""#) && lines[0].contains(r#""cluster":true"#));
+        assert!(lines[1].contains(r#""id":"p1""#) && lines[1].contains(r#""ok":true"#));
+        assert!(lines[2].contains(r#""code":"invalid_cluster""#));
+        let (id, rep) = scenario::wire::parse_cluster_report(lines[0]).unwrap();
+        assert_eq!(id.as_deref(), Some("c1"));
+        let rep = rep.unwrap();
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.replicas.len(), 2);
+        assert!(rep.ttft.p50_sec > 0.0);
         svc.shutdown();
     }
 

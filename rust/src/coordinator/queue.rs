@@ -35,6 +35,11 @@ pub enum Pop<T> {
 struct State<T> {
     buf: VecDeque<T>,
     closed: bool,
+    /// Pushers currently blocked in `push_wait` (incremented under the lock
+    /// before waiting on `not_full`). Poppers only signal `not_full` when
+    /// this is non-zero, so the hot drain path stops paying a syscall per
+    /// pop when nobody can be waiting.
+    push_waiters: usize,
 }
 
 pub struct Bounded<T> {
@@ -48,7 +53,11 @@ impl<T> Bounded<T> {
     pub fn new(cap: usize) -> Bounded<T> {
         let cap = cap.max(1);
         Bounded {
-            state: Mutex::new(State { buf: VecDeque::with_capacity(cap.min(4096)), closed: false }),
+            state: Mutex::new(State {
+                buf: VecDeque::with_capacity(cap.min(4096)),
+                closed: false,
+                push_waiters: 0,
+            }),
             cap,
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
@@ -87,6 +96,20 @@ impl<T> Bounded<T> {
     /// Blocking push: wait for space up to `timeout` (`None` = as long as
     /// it takes). Returns [`PushError::Full`] only when the timeout expires
     /// with the queue still at capacity.
+    ///
+    /// Wakeup protocol (audited for lost wakeups with multiple blocked
+    /// pushers): a slot is freed only by a pop, and every pop that frees a
+    /// slot while `push_waiters > 0` issues exactly one `notify_one` — one
+    /// signal per freed slot, so N frees wake up to N pushers. A woken
+    /// pusher re-checks space in the loop; if a `try_push` stole the slot
+    /// first, the queue is full again and no free slot is stranded. Exits
+    /// that consume a notification without pushing are safe too: the
+    /// `closed` exit is covered by `close()`'s `notify_all`, and the
+    /// timeout exit only returns Full while the queue is at capacity (a
+    /// woken-but-expired pusher still takes a free slot if one exists).
+    /// The waiter count is mutated only under the mutex and `Condvar::wait`
+    /// releases it atomically, so a popper can never observe zero waiters
+    /// while a pusher is between deciding to wait and waiting.
     pub fn push_wait(&self, item: T, timeout: Option<Duration>) -> Result<(), PushError<T>> {
         let deadline = timeout.map(|t| Instant::now() + t);
         let mut g = self.state.lock().unwrap();
@@ -100,16 +123,19 @@ impl<T> Bounded<T> {
                 self.not_empty.notify_one();
                 return Ok(());
             }
+            g.push_waiters += 1;
             match deadline {
                 None => g = self.not_full.wait(g).unwrap(),
                 Some(d) => {
                     let left = d.saturating_duration_since(Instant::now());
                     if left.is_zero() {
+                        g.push_waiters -= 1;
                         return Err(PushError::Full(item));
                     }
                     g = self.not_full.wait_timeout(g, left).unwrap().0;
                 }
             }
+            g.push_waiters -= 1;
         }
     }
 
@@ -118,8 +144,13 @@ impl<T> Bounded<T> {
         let mut g = self.state.lock().unwrap();
         loop {
             if let Some(item) = g.buf.pop_front() {
+                // signal only when a pusher is actually parked — the
+                // uncontended drain path used to notify_one on every pop
+                let wake = g.push_waiters > 0;
                 drop(g);
-                self.not_full.notify_one();
+                if wake {
+                    self.not_full.notify_one();
+                }
                 return Some(item);
             }
             if g.closed {
@@ -134,8 +165,11 @@ impl<T> Bounded<T> {
         let mut g = self.state.lock().unwrap();
         loop {
             if let Some(item) = g.buf.pop_front() {
+                let wake = g.push_waiters > 0;
                 drop(g);
-                self.not_full.notify_one();
+                if wake {
+                    self.not_full.notify_one();
+                }
                 return Pop::Item(item);
             }
             if g.closed {
@@ -216,6 +250,61 @@ mod tests {
         let t0 = Instant::now();
         assert!(matches!(q.pop_until(t0 + Duration::from_millis(20)), Pop::Timeout));
         assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn multi_pusher_stress_every_accepted_item_is_popped() {
+        // 8 pushers hammer a capacity-2 queue against one deliberately
+        // stalling popper, mixing unbounded and timed waits. The contract
+        // under test is the wakeup protocol: no accepted item may be lost
+        // and no pusher may be stranded (an unbounded push_wait that never
+        // wakes would hang this test).
+        let q = Arc::new(Bounded::new(2));
+        let accepted = Arc::new(Mutex::new(Vec::new()));
+        let popped = Arc::new(Mutex::new(Vec::new()));
+        let popper = {
+            let (q, popped) = (q.clone(), popped.clone());
+            std::thread::spawn(move || {
+                while let Some(v) = q.pop() {
+                    popped.lock().unwrap().push(v);
+                    if v % 13 == 0 {
+                        // stall so pushers pile up on the full queue
+                        std::thread::sleep(Duration::from_micros(300));
+                    }
+                }
+            })
+        };
+        let pushers: Vec<_> = (0..8u32)
+            .map(|t| {
+                let (q, accepted) = (q.clone(), accepted.clone());
+                std::thread::spawn(move || {
+                    for i in 0..200u32 {
+                        let item = t * 1_000 + i;
+                        let timeout = if t % 2 == 0 {
+                            None // must eventually succeed or the test hangs
+                        } else {
+                            Some(Duration::from_millis(2))
+                        };
+                        match q.push_wait(item, timeout) {
+                            Ok(()) => accepted.lock().unwrap().push(item),
+                            Err(PushError::Full(_)) => {} // timed out, never accepted
+                            Err(PushError::Closed(_)) => panic!("closed while pushers live"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in pushers {
+            h.join().unwrap();
+        }
+        q.close();
+        popper.join().unwrap();
+        let mut acc = accepted.lock().unwrap().clone();
+        let mut got = popped.lock().unwrap().clone();
+        acc.sort_unstable();
+        got.sort_unstable();
+        assert!(acc.len() >= 4 * 200, "unbounded pushers must all be accepted");
+        assert_eq!(acc, got, "every accepted item must be popped exactly once");
     }
 
     #[test]

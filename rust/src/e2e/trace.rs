@@ -91,19 +91,15 @@ pub fn build_trace(llm: &LlmConfig, tp: u32, pp: u32, reqs: &[Request]) -> Vec<T
     prefill
 }
 
-/// Build the prefill and decode traces separately (Table I reports the
-/// runtime breakdown per phase).
-pub fn build_phase_traces(
-    llm: &LlmConfig,
-    tp: u32,
-    pp: u32,
-    reqs: &[Request],
-) -> (Vec<TraceItem>, Vec<TraceItem>) {
+/// Build the prefill trace alone: one forward pass over the whole prompt
+/// batch plus the LM head on each request's last token. This is also the
+/// cluster simulator's prefill-step trace (Scenario v2), so it is public
+/// and `build_phase_traces` delegates to it — the two surfaces cannot
+/// drift.
+pub fn build_prefill_trace(llm: &LlmConfig, tp: u32, pp: u32, reqs: &[Request]) -> Vec<TraceItem> {
     assert!(!reqs.is_empty());
     let mut out = Vec::new();
     let layers = llm.layers as f64;
-
-    // ---- prefill ---------------------------------------------------------
     let m_prefill: u32 = reqs.iter().map(|r| r.input_len).sum();
     let attn_prefill: Vec<(u32, u32)> =
         reqs.iter().map(|r| (r.input_len, r.input_len)).collect();
@@ -125,7 +121,55 @@ pub fn build_phase_traces(
         }),
         count: 1.0,
     });
-    let prefill_trace = std::mem::take(&mut out);
+    out
+}
+
+/// One continuous-batching decode step (Scenario v2): every running
+/// request appends a single token against its current KV length, so the
+/// attention batch is `[(1, kv)]` per request in the given order, followed
+/// by the LM head over the step's batch.
+pub fn build_decode_step_trace(
+    llm: &LlmConfig,
+    tp: u32,
+    pp: u32,
+    kv_lens: &[u32],
+) -> Vec<TraceItem> {
+    assert!(!kv_lens.is_empty());
+    let mut out = Vec::new();
+    let layers = llm.layers as f64;
+    let m_dec = kv_lens.len() as u32;
+    let attn: Vec<(u32, u32)> = kv_lens.iter().map(|&kv| (1u32, kv.max(1))).collect();
+    layer_ops(llm, tp, m_dec, attn, layers, &mut out);
+    if pp > 1 {
+        out.push(TraceItem {
+            op: Op::SendRecv { bytes: m_dec as f64 * llm.hidden as f64 * 2.0 },
+            count: (pp - 1) as f64,
+        });
+    }
+    out.push(TraceItem {
+        op: Op::Kernel(KernelConfig::Gemm {
+            m: m_dec,
+            n: (llm.vocab / tp).max(1),
+            k: llm.hidden,
+            dtype: DType::Bf16,
+        }),
+        count: 1.0,
+    });
+    out
+}
+
+/// Build the prefill and decode traces separately (Table I reports the
+/// runtime breakdown per phase).
+pub fn build_phase_traces(
+    llm: &LlmConfig,
+    tp: u32,
+    pp: u32,
+    reqs: &[Request],
+) -> (Vec<TraceItem>, Vec<TraceItem>) {
+    assert!(!reqs.is_empty());
+    let prefill_trace = build_prefill_trace(llm, tp, pp, reqs);
+    let mut out = Vec::new();
+    let layers = llm.layers as f64;
 
     // ---- decode: four quartile-midpoint checkpoints ----------------------
     let max_out = reqs.iter().map(|r| r.output_len).max().unwrap_or(1);
@@ -262,6 +306,25 @@ mod tests {
             .collect();
         assert!(kvs.len() >= 2);
         assert!(kvs.windows(2).all(|w| w[0] <= w[1]), "{kvs:?}");
+    }
+
+    #[test]
+    fn decode_step_trace_is_one_token_per_request() {
+        let t = build_decode_step_trace(&model("Qwen2.5-14B"), 2, 2, &[100, 350, 7]);
+        let attn = t
+            .iter()
+            .find_map(|i| match &i.op {
+                Op::Kernel(KernelConfig::Attention { batch, .. }) => Some(batch.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(attn, vec![(1, 100), (1, 350), (1, 7)]);
+        // LM head covers the step batch; pp=2 adds a send/recv
+        assert!(t.iter().any(|i| matches!(
+            &i.op,
+            Op::Kernel(KernelConfig::Gemm { m: 3, .. })
+        )));
+        assert!(t.iter().any(|i| matches!(i.op, Op::SendRecv { .. })));
     }
 
     #[test]

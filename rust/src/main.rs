@@ -6,7 +6,10 @@
 //!   predict     one-shot kernel latency prediction (protocol v1)
 //!   simulate    declarative end-to-end serving simulation (Scenario API
 //!               v1): a ScenarioSpec in, a typed ScenarioReport out —
-//!               flags, a JSONL spec file, or stdin (`--spec -`)
+//!               flags, a JSONL spec file, or stdin (`--spec -`); with
+//!               `--cluster`, the Scenario v2 deterministic
+//!               continuous-batching cluster simulation (replicas,
+//!               routing policies, per-request percentile reports)
 //!   e2e         end-to-end prediction vs ground truth (a scenario
 //!               simulation printed as the paper's method comparison)
 //!   serve       run the batching prediction service (synthetic load or
@@ -21,9 +24,10 @@ use synperf::dataset;
 use synperf::experiments::{self, Lab, ModelFlavor, Scale};
 use synperf::hw;
 use synperf::kernels::{DType, KernelConfig, KernelKind};
+use synperf::scenario::wire::SimulateRequest;
 use synperf::scenario::{
-    self, Method, OpClass, Phase, PhaseSelection, ScenarioReport, ScenarioSpec, Simulator,
-    WorkloadSpec,
+    self, ArrivalSpec, ClusterReport, ClusterSpec, Method, OpClass, Phase, PhaseSelection,
+    RoutePolicy, ScenarioReport, ScenarioSpec, Simulator, WorkloadSpec,
 };
 use synperf::util::argp::Args;
 
@@ -38,6 +42,9 @@ fn usage() -> &'static str {
                   [--workload arxiv|splitwise] [--batch 8] [--requests 1000:200,...]\n\
                   [--phases both|prefill|decode] [--seed 7] [--host-gap-us 0.8]\n\
                   [--threads N] [--json] | [--spec <file|->]\n\
+                  --cluster [--replicas 1] [--policy round_robin|least_loaded|session_affinity]\n\
+                  [--rate 4.0 | --gap-ms 250] [--n 16] [--max-batch 16]\n\
+                  [--kv-tokens 262144] [--kv-quant 16] [--slo-ttft-ms 2000] [--slo-tpot-ms 200]\n\
        e2e        --model qwen2.5-14b --gpu H100 [--tp 1] [--pp 1] [--workload arxiv] [--batch 8]\n\
                   [--threads N]\n\
        serve      [--stdio] [--requests 512] [--gpu A100] [--threads N]\n\
@@ -229,6 +236,40 @@ fn spec_of(args: &Args) -> Result<ScenarioSpec> {
     Ok(spec)
 }
 
+/// Build a [`ClusterSpec`] from `simulate --cluster` flags. Shares the
+/// model/GPU/parallelism/seed/host-gap flags with [`spec_of`]; arrivals
+/// default to a seeded Poisson process (`--rate`), or a fixed-gap uniform
+/// process when `--gap-ms` is given.
+fn cluster_spec_of(args: &Args) -> Result<ClusterSpec> {
+    let host_gap_sec = match args.str_opt("host-gap-us") {
+        Some(_) => args.f64_or("host-gap-us", 0.0)? * 1e-6,
+        None => scenario::HOST_GAP_SEC,
+    };
+    let kind = scenario::workload_kind(&args.str_or("workload", "arxiv"))?;
+    let n = args.usize_or("n", 16)?;
+    let arrivals = match args.str_opt("gap-ms") {
+        Some(_) => {
+            ArrivalSpec::Uniform { gap_sec: args.f64_or("gap-ms", 0.0)? * 1e-3, n, kind }
+        }
+        None => ArrivalSpec::Poisson { rate_rps: args.f64_or("rate", 4.0)?, n, kind },
+    };
+    Ok(ClusterSpec::new(args.str_or("model", "qwen2.5-14b"), args.str_or("gpu", "A100"))
+        .tp(args.usize_or("tp", 1)? as u32)
+        .pp(args.usize_or("pp", 1)? as u32)
+        .replicas(args.usize_or("replicas", 1)? as u32)
+        .policy(RoutePolicy::parse(&args.str_or("policy", "round_robin"))?)
+        .arrivals(arrivals)
+        .max_batch(args.usize_or("max-batch", 16)? as u32)
+        .kv_capacity_tokens(args.u64_or("kv-tokens", 262_144)?)
+        .kv_quant(args.usize_or("kv-quant", 16)? as u32)
+        .seed(args.u64_or("seed", 7)?)
+        .host_gap_sec(host_gap_sec)
+        .slo(
+            args.f64_or("slo-ttft-ms", 2000.0)? * 1e-3,
+            args.f64_or("slo-tpot-ms", 200.0)? * 1e-3,
+        ))
+}
+
 /// Best-effort simulator: trained models when artifacts exist, otherwise
 /// the documented degraded roofline mode (visible in the report counts).
 /// Both fallback paths say so on stderr — degraded numbers are never
@@ -303,10 +344,62 @@ fn print_report(report: &ScenarioReport) {
     );
 }
 
+fn print_cluster_report(r: &ClusterReport) {
+    println!(
+        "cluster: {} on {} (TP={}, PP={}) x {} replicas, policy {}, seed {}",
+        r.model,
+        r.gpu,
+        r.tp,
+        r.pp,
+        r.replicas.len(),
+        r.policy.name(),
+        r.seed
+    );
+    println!(
+        "  {} offered, {} completed in {:.3} s  ({:.2} req/s, {:.0} tok/s)",
+        r.offered, r.completed, r.makespan_sec, r.requests_per_sec, r.tokens_per_sec
+    );
+    let line = |label: &str, s: &synperf::scenario::LatencySummary| {
+        println!(
+            "  {:<12} p50 {:>8.2} ms, p95 {:>8.2} ms, p99 {:>8.2} ms, mean {:>8.2} ms  (n={})",
+            label,
+            s.p50_sec * 1e3,
+            s.p95_sec * 1e3,
+            s.p99_sec * 1e3,
+            s.mean_sec * 1e3,
+            s.count
+        );
+    };
+    line("TTFT", &r.ttft);
+    line("TPOT", &r.tpot);
+    line("queue delay", &r.queue_delay);
+    println!(
+        "  SLO attainment: {:.1}% ttft, {:.1}% tpot, {:.1}% joint",
+        100.0 * r.slo_ttft_attainment,
+        100.0 * r.slo_tpot_attainment,
+        100.0 * r.slo_attainment
+    );
+    for (i, rep) in r.replicas.iter().enumerate() {
+        println!(
+            "  replica {i}: {} done, {} steps ({} prefill), util {:.0}%, peak KV {} tok, max batch {}",
+            rep.completed,
+            rep.steps,
+            rep.prefill_steps,
+            100.0 * rep.utilization,
+            rep.peak_kv_tokens,
+            rep.max_batch_seen
+        );
+    }
+    println!(
+        "  provenance: {} events, {} distinct step shapes, {} degraded kernel items",
+        r.events, r.distinct_steps, r.degraded_kernels
+    );
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
-    // --spec <file|->: JSONL in (wire envelopes or bare scenario objects),
-    // one report line out per input line — the offline twin of the
-    // `serve --stdio` simulate verb.
+    // --spec <file|->: JSONL in (wire envelopes or bare scenario/cluster
+    // objects), one report line out per input line — the offline twin of
+    // the `serve --stdio` simulate verb.
     if let Some(path) = args.str_opt("spec") {
         // spec lines carry their own scenario fields; flag-built fields
         // would be contradictory, so say so instead of silently dropping
@@ -330,15 +423,34 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             if line.trim().is_empty() {
                 continue;
             }
-            let (id, spec) = scenario::wire::parse_spec_line(line);
-            let res = spec.and_then(|s| sim.simulate(&s));
-            println!("{}", scenario::wire::encode_report(id.as_deref(), &res));
+            let (id, req) = scenario::wire::parse_request_line(line);
+            let out = match req {
+                Ok(SimulateRequest::Scenario(spec)) => {
+                    scenario::wire::encode_report(id.as_deref(), &sim.simulate(&spec))
+                }
+                Ok(SimulateRequest::Cluster(spec)) => scenario::wire::encode_cluster_report(
+                    id.as_deref(),
+                    &sim.simulate_cluster(&spec),
+                ),
+                Err(e) => scenario::wire::encode_report(id.as_deref(), &Err(e)),
+            };
+            println!("{out}");
         }
         return Ok(());
     }
 
-    let spec = spec_of(args)?;
     let sim = simulator_of(scale_of(args)).threads(threads_of(args)?);
+    if args.has("cluster") {
+        let spec = cluster_spec_of(args)?;
+        let report = sim.simulate_cluster(&spec)?;
+        if args.has("json") {
+            println!("{}", scenario::wire::encode_cluster_report(None, &Ok(report)));
+        } else {
+            print_cluster_report(&report);
+        }
+        return Ok(());
+    }
+    let spec = spec_of(args)?;
     let report = sim.simulate(&spec)?;
     if args.has("json") {
         // machine consumers get exactly one report line on stdout

@@ -1,0 +1,1129 @@
+//! **Scenario v2 — deterministic continuous-batching cluster simulation.**
+//!
+//! Where Scenario v1 walks a static phase schedule once, this module runs
+//! a discrete-event simulation of a serving *cluster*: requests arrive
+//! over virtual time (an explicit trace, or a seeded Poisson/uniform
+//! process), a router spreads them over N identical replicas
+//! ([`RoutePolicy`]), and each replica runs prefill-prioritized continuous
+//! batching — a step is either a **prefill** over every admissible waiting
+//! request or a **decode** appending one token to every running request.
+//! Admission is gated by two knobs: `max_batch` running requests and a
+//! per-replica KV budget (`kv_capacity_tokens`), with a request's full
+//! `input + output` token footprint reserved up front so a running batch
+//! can never overflow (no preemption modeling). The waiting queue is
+//! strict FIFO — a head-of-line request that does not fit blocks later
+//! ones (fairness over packing), and because compilation rejects any
+//! request that cannot fit an *empty* replica, every request eventually
+//! completes.
+//!
+//! Step service times come from the predictor path
+//! ([`super::eval::predict_stream_cost`] →
+//! [`crate::api::predict_batch_view_on`]) — no oracle sampling enters the
+//! virtual clock, so a timeline is a pure function of
+//! `(spec, models, comm)`. Step shapes repeat heavily under continuous
+//! batching; costs are memoized per shape with the KV length quantized to
+//! `kv_quant` tokens (lookup-only `HashMap`, never iterated). The event
+//! loop itself is serial and tie-breaks simultaneous events by push order
+//! ([`super::event::EventQueue`]); `threads` only fans out the batched
+//! prediction calls inside a step, which are pinned bit-identical across
+//! thread counts. Reports are therefore **byte-identical at any
+//! `--threads` count and across runs**.
+//!
+//! Per-request latencies (TTFT, TPOT, queueing delay) aggregate into
+//! fixed-bin mergeable [`LogHistogram`]s → bin-resolution p50/p95/p99,
+//! while SLO attainment is computed exactly per request at completion.
+
+use super::compiler::{self, MAX_BATCH};
+use super::event::EventQueue;
+use super::{eval, ScenarioError};
+use crate::e2e::comm::CommModel;
+use crate::e2e::llm::LlmConfig;
+use crate::e2e::predict::{ModelSet, HOST_GAP_SEC};
+use crate::e2e::trace;
+use crate::e2e::workload::{sample_batch, Request, WorkloadKind};
+use crate::hw::GpuSpec;
+use crate::util::rng::{splitmix64, Rng};
+use crate::util::stats::LogHistogram;
+use std::collections::{HashMap, VecDeque};
+
+/// Most replicas a cluster spec may ask for.
+pub const MAX_REPLICAS: u32 = 64;
+/// Most requests a cluster spec may offer (same wire-scale reasoning as
+/// [`MAX_BATCH`]: one JSONL line must not be able to take the process
+/// down).
+pub const MAX_CLUSTER_REQUESTS: usize = MAX_BATCH;
+/// Cap on the total token footprint (inputs + outputs) of the offered
+/// load. The event loop walks every decode step, so unlike the v1
+/// checkpoint integrator its work is proportional to generated tokens —
+/// this bounds a hostile line's compute, not just its allocation.
+pub const MAX_CLUSTER_TOKENS: u64 = 1 << 22;
+
+/// One request offered to the cluster: arrival instant, prompt/generation
+/// lengths, and a session key (the input of the affinity router).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterRequest {
+    pub arrival_sec: f64,
+    pub input_len: u32,
+    pub output_len: u32,
+    pub session: u64,
+}
+
+/// How requests arrive over virtual time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    /// Deterministic replay of an explicit arrival trace.
+    Trace(Vec<ClusterRequest>),
+    /// Seeded Poisson process: exponential inter-arrival gaps at
+    /// `rate_rps` requests/sec, lengths sampled from `kind`.
+    Poisson { rate_rps: f64, n: usize, kind: WorkloadKind },
+    /// Seeded uniform process: arrivals a fixed `gap_sec` apart, lengths
+    /// sampled from `kind`.
+    Uniform { gap_sec: f64, n: usize, kind: WorkloadKind },
+}
+
+/// Which replica an arriving request queues on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Arrival order modulo replica count.
+    RoundRobin,
+    /// Fewest waiting + in-step + running requests; ties break to the
+    /// lowest replica index.
+    LeastLoaded,
+    /// `splitmix64(session) % replicas` — one session always lands on the
+    /// same replica (KV locality), at the cost of skew under hot sessions.
+    SessionAffinity,
+}
+
+impl RoutePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::LeastLoaded => "least_loaded",
+            RoutePolicy::SessionAffinity => "session_affinity",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "round_robin" => Some(RoutePolicy::RoundRobin),
+            "least_loaded" => Some(RoutePolicy::LeastLoaded),
+            "session_affinity" => Some(RoutePolicy::SessionAffinity),
+            _ => None,
+        }
+    }
+
+    /// Parse with the closed-taxonomy error — one owner of the message,
+    /// shared by the wire codec and the CLI.
+    pub fn parse(s: &str) -> Result<RoutePolicy, ScenarioError> {
+        RoutePolicy::from_name(s).ok_or_else(|| {
+            ScenarioError::InvalidCluster(format!(
+                "unknown policy {s:?} (round_robin|least_loaded|session_affinity)"
+            ))
+        })
+    }
+}
+
+/// The declarative description of one cluster scenario (Scenario v2).
+/// Built fluently like [`super::ScenarioSpec`]:
+///
+/// ```ignore
+/// let spec = ClusterSpec::new("Llama3.1-8B", "A100")
+///     .replicas(2)
+///     .policy(RoutePolicy::LeastLoaded)
+///     .arrivals(ArrivalSpec::Poisson { rate_rps: 8.0, n: 32, kind: WorkloadKind::Arxiv })
+///     .seed(7);
+/// let report = Simulator::degraded().simulate_cluster(&spec)?;
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub model: String,
+    pub gpu: String,
+    /// Tensor/pipeline parallelism *within* each replica.
+    pub tp: u32,
+    pub pp: u32,
+    pub replicas: u32,
+    pub policy: RoutePolicy,
+    pub arrivals: ArrivalSpec,
+    /// Continuous-batching admission: most concurrently running requests
+    /// per replica.
+    pub max_batch: u32,
+    /// Per-replica KV budget, tokens. Admission reserves a request's full
+    /// `input + output` footprint up front.
+    pub kv_capacity_tokens: u64,
+    /// KV-length quantum for the step-cost memo: decode service times are
+    /// evaluated at KV lengths rounded up to this multiple, so `T` steps
+    /// cost roughly `T / kv_quant` distinct predictions. 1 = exact.
+    pub kv_quant: u32,
+    /// Seeds arrival generation (gap sampling, request lengths, sessions).
+    pub seed: u64,
+    /// Per-kernel host launch gap inside every step.
+    pub host_gap_sec: f64,
+    /// SLO threshold on time-to-first-token, seconds.
+    pub slo_ttft_sec: f64,
+    /// SLO threshold on time-per-output-token, seconds.
+    pub slo_tpot_sec: f64,
+}
+
+impl ClusterSpec {
+    pub fn new(model: impl Into<String>, gpu: impl Into<String>) -> ClusterSpec {
+        ClusterSpec {
+            model: model.into(),
+            gpu: gpu.into(),
+            tp: 1,
+            pp: 1,
+            replicas: 1,
+            policy: RoutePolicy::RoundRobin,
+            arrivals: ArrivalSpec::Poisson { rate_rps: 4.0, n: 16, kind: WorkloadKind::Arxiv },
+            max_batch: 16,
+            kv_capacity_tokens: 262_144,
+            kv_quant: 16,
+            seed: 0,
+            host_gap_sec: HOST_GAP_SEC,
+            slo_ttft_sec: 2.0,
+            slo_tpot_sec: 0.2,
+        }
+    }
+
+    pub fn tp(mut self, tp: u32) -> Self {
+        self.tp = tp;
+        self
+    }
+
+    pub fn pp(mut self, pp: u32) -> Self {
+        self.pp = pp;
+        self
+    }
+
+    pub fn replicas(mut self, replicas: u32) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
+    pub fn policy(mut self, policy: RoutePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn arrivals(mut self, arrivals: ArrivalSpec) -> Self {
+        self.arrivals = arrivals;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: u32) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    pub fn kv_capacity_tokens(mut self, kv: u64) -> Self {
+        self.kv_capacity_tokens = kv;
+        self
+    }
+
+    pub fn kv_quant(mut self, kv_quant: u32) -> Self {
+        self.kv_quant = kv_quant;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn host_gap_sec(mut self, host_gap_sec: f64) -> Self {
+        self.host_gap_sec = host_gap_sec;
+        self
+    }
+
+    pub fn slo(mut self, ttft_sec: f64, tpot_sec: f64) -> Self {
+        self.slo_ttft_sec = ttft_sec;
+        self.slo_tpot_sec = tpot_sec;
+        self
+    }
+}
+
+/// A validated cluster scenario: resolved model + GPU and the materialized
+/// arrival-sorted request list. Everything the event loop needs.
+#[derive(Debug, Clone)]
+pub struct CompiledCluster {
+    pub llm: LlmConfig,
+    pub gpu: GpuSpec,
+    pub tp: u32,
+    pub pp: u32,
+    pub replicas: u32,
+    pub policy: RoutePolicy,
+    pub requests: Vec<ClusterRequest>,
+    pub max_batch: u32,
+    pub kv_capacity_tokens: u64,
+    pub kv_quant: u32,
+    pub seed: u64,
+    pub host_gap_sec: f64,
+    pub slo_ttft_sec: f64,
+    pub slo_tpot_sec: f64,
+}
+
+fn materialize_arrivals(spec: &ClusterSpec) -> Result<Vec<ClusterRequest>, ScenarioError> {
+    let bad = |why: String| Err(ScenarioError::InvalidCluster(why));
+    let bad_wl = |why: String| Err(ScenarioError::InvalidWorkload(why));
+    let check_n = |n: usize| -> Result<(), ScenarioError> {
+        if n == 0 {
+            return bad_wl("request mix must be non-empty".to_string());
+        }
+        if n > MAX_CLUSTER_REQUESTS {
+            return bad_wl(format!("{n} requests exceed the cap of {MAX_CLUSTER_REQUESTS}"));
+        }
+        Ok(())
+    };
+    let mut reqs = match &spec.arrivals {
+        ArrivalSpec::Trace(t) => {
+            check_n(t.len())?;
+            for (i, r) in t.iter().enumerate() {
+                if !r.arrival_sec.is_finite() || r.arrival_sec < 0.0 {
+                    return bad(format!(
+                        "request {i} needs a finite arrival_sec >= 0, got {}",
+                        r.arrival_sec
+                    ));
+                }
+            }
+            t.clone()
+        }
+        ArrivalSpec::Poisson { rate_rps, n, kind } => {
+            check_n(*n)?;
+            if !rate_rps.is_finite() || *rate_rps <= 0.0 {
+                return bad(format!("poisson arrivals need rate_rps > 0, got {rate_rps}"));
+            }
+            generated_arrivals(spec, *n, *kind, |rng| rng.exponential(*rate_rps))
+        }
+        ArrivalSpec::Uniform { gap_sec, n, kind } => {
+            check_n(*n)?;
+            if !gap_sec.is_finite() || *gap_sec < 0.0 {
+                return bad(format!("uniform arrivals need gap_sec >= 0, got {gap_sec}"));
+            }
+            generated_arrivals(spec, *n, *kind, |_| *gap_sec)
+        }
+    };
+    let mut total_tokens = 0u64;
+    for (i, r) in reqs.iter().enumerate() {
+        compiler::validate_request_lens(i, r.input_len, r.output_len)?;
+        total_tokens += r.input_len as u64 + r.output_len as u64;
+    }
+    if total_tokens > MAX_CLUSTER_TOKENS {
+        return bad(format!(
+            "offered load of {total_tokens} tokens exceeds the cap of {MAX_CLUSTER_TOKENS}"
+        ));
+    }
+    // stable sort: same-instant arrivals keep their trace order, so the
+    // event timeline is fully determined by the spec
+    reqs.sort_by(|a, b| a.arrival_sec.total_cmp(&b.arrival_sec));
+    Ok(reqs)
+}
+
+/// Generate `n` seeded arrivals: lengths from the workload sampler, gaps
+/// from `gap_of`, sessions from a pool of ~n/4 ids. Three forked streams
+/// keep the three draws independent of each other's draw counts.
+fn generated_arrivals(
+    spec: &ClusterSpec,
+    n: usize,
+    kind: WorkloadKind,
+    mut gap_of: impl FnMut(&mut Rng) -> f64,
+) -> Vec<ClusterRequest> {
+    let base = Rng::new(spec.seed);
+    let mut len_rng = base.fork(1);
+    let mut gap_rng = base.fork(2);
+    let mut ses_rng = base.fork(3);
+    let lens = sample_batch(kind, n, &mut len_rng);
+    let pool = (n as u64 / 4).max(1);
+    let mut t = 0.0;
+    lens.into_iter()
+        .map(|r| {
+            t += gap_of(&mut gap_rng);
+            ClusterRequest {
+                arrival_sec: t,
+                input_len: r.input_len,
+                output_len: r.output_len,
+                session: ses_rng.range_u64(0, pool - 1),
+            }
+        })
+        .collect()
+}
+
+/// Validate a [`ClusterSpec`] and materialize its arrivals. Validation
+/// order is part of the contract: model, GPU, parallelism, host gap,
+/// cluster knobs, arrivals, per-request fit.
+pub fn compile_cluster(spec: &ClusterSpec) -> Result<CompiledCluster, ScenarioError> {
+    let (llm, gpu) = compiler::resolve_model_gpu(&spec.model, &spec.gpu)?;
+    compiler::validate_parallelism(&llm, spec.tp, spec.pp)?;
+    if !spec.host_gap_sec.is_finite() || spec.host_gap_sec < 0.0 {
+        return Err(ScenarioError::MalformedSpec(format!(
+            "host_gap_sec must be finite and >= 0, got {}",
+            spec.host_gap_sec
+        )));
+    }
+    let bad = |why: String| Err(ScenarioError::InvalidCluster(why));
+    if spec.replicas == 0 || spec.replicas > MAX_REPLICAS {
+        return bad(format!("replicas must be in 1..={MAX_REPLICAS}, got {}", spec.replicas));
+    }
+    if spec.max_batch == 0 || spec.max_batch as usize > MAX_BATCH {
+        return bad(format!("max_batch must be in 1..={MAX_BATCH}, got {}", spec.max_batch));
+    }
+    if spec.kv_capacity_tokens == 0 {
+        return bad("kv_capacity_tokens must be >= 1".to_string());
+    }
+    if spec.kv_quant == 0 {
+        return bad("kv_quant must be >= 1".to_string());
+    }
+    for (label, v) in [("slo_ttft_sec", spec.slo_ttft_sec), ("slo_tpot_sec", spec.slo_tpot_sec)] {
+        if !v.is_finite() || v <= 0.0 {
+            return bad(format!("{label} must be finite and > 0, got {v}"));
+        }
+    }
+    let requests = materialize_arrivals(spec)?;
+    // every request must fit an empty replica, or it would wait forever
+    // behind the strict-FIFO admission rule
+    for (i, r) in requests.iter().enumerate() {
+        let need = r.input_len as u64 + r.output_len as u64;
+        if need > spec.kv_capacity_tokens {
+            return bad(format!(
+                "request {i} needs {need} KV tokens but kv_capacity_tokens is {}",
+                spec.kv_capacity_tokens
+            ));
+        }
+    }
+    Ok(CompiledCluster {
+        llm,
+        gpu,
+        tp: spec.tp,
+        pp: spec.pp,
+        replicas: spec.replicas,
+        policy: spec.policy,
+        requests,
+        max_batch: spec.max_batch,
+        kv_capacity_tokens: spec.kv_capacity_tokens,
+        kv_quant: spec.kv_quant,
+        seed: spec.seed,
+        host_gap_sec: spec.host_gap_sec,
+        slo_ttft_sec: spec.slo_ttft_sec,
+        slo_tpot_sec: spec.slo_tpot_sec,
+    })
+}
+
+/// Latency summary derived from a [`LogHistogram`]: exact count/mean/max,
+/// bin-resolution p50/p95/p99. All-zero when no sample was recorded (e.g.
+/// TPOT when every request generates a single token), so it serializes
+/// without NaN.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_sec: f64,
+    pub p50_sec: f64,
+    pub p95_sec: f64,
+    pub p99_sec: f64,
+    pub max_sec: f64,
+}
+
+impl LatencySummary {
+    pub fn of(h: &LogHistogram) -> LatencySummary {
+        if h.count() == 0 {
+            return LatencySummary {
+                count: 0,
+                mean_sec: 0.0,
+                p50_sec: 0.0,
+                p95_sec: 0.0,
+                p99_sec: 0.0,
+                max_sec: 0.0,
+            };
+        }
+        LatencySummary {
+            count: h.count(),
+            mean_sec: h.mean(),
+            p50_sec: h.percentile(50.0),
+            p95_sec: h.percentile(95.0),
+            p99_sec: h.percentile(99.0),
+            max_sec: h.max(),
+        }
+    }
+}
+
+/// Per-replica accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaReport {
+    pub completed: u64,
+    /// Steps the replica executed (prefill + decode).
+    pub steps: u64,
+    pub prefill_steps: u64,
+    /// Virtual seconds the replica spent inside steps.
+    pub busy_sec: f64,
+    /// `busy_sec / makespan` (0 for an empty simulation).
+    pub utilization: f64,
+    /// Peak KV reservation observed, tokens.
+    pub peak_kv_tokens: u64,
+    /// Largest step batch (running + entering) observed.
+    pub max_batch_seen: u32,
+}
+
+/// The typed answer of a cluster simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterReport {
+    pub model: String,
+    pub gpu: String,
+    pub tp: u32,
+    pub pp: u32,
+    pub policy: RoutePolicy,
+    pub seed: u64,
+    pub host_gap_sec: f64,
+    /// Requests offered by the arrival process.
+    pub offered: u64,
+    /// Requests completed (equals `offered`: admission is starvation-free).
+    pub completed: u64,
+    /// Virtual time of the last event, seconds.
+    pub makespan_sec: f64,
+    /// Output tokens generated across all completed requests.
+    pub generated_tokens: f64,
+    pub tokens_per_sec: f64,
+    pub requests_per_sec: f64,
+    /// Time-to-first-token: arrival → prefill completion.
+    pub ttft: LatencySummary,
+    /// Time-per-output-token: (finish − first token) / (output − 1);
+    /// recorded only for requests generating more than one token.
+    pub tpot: LatencySummary,
+    /// Queueing delay: arrival → prefill start.
+    pub queue_delay: LatencySummary,
+    pub ttft_hist: LogHistogram,
+    pub tpot_hist: LogHistogram,
+    pub queue_hist: LogHistogram,
+    /// Fraction of completed requests meeting the TTFT SLO (exact,
+    /// per-request — not derived from histogram bins).
+    pub slo_ttft_attainment: f64,
+    /// Fraction meeting the TPOT SLO (single-token requests count as
+    /// meeting it).
+    pub slo_tpot_attainment: f64,
+    /// Fraction meeting both.
+    pub slo_attainment: f64,
+    pub replicas: Vec<ReplicaReport>,
+    /// Kernel items answered with degraded (roofline) provenance across
+    /// distinct evaluated step shapes.
+    pub degraded_kernels: usize,
+    /// Distinct step shapes evaluated through the predictor (memo size).
+    pub distinct_steps: usize,
+    /// Events processed by the virtual clock.
+    pub events: u64,
+}
+
+enum Event {
+    Arrival(usize),
+    StepDone(usize),
+}
+
+/// What a replica is doing right now.
+enum StepKind {
+    Idle,
+    /// Prefilling these newly admitted requests (by request index).
+    Prefill(Vec<usize>),
+    /// One decode step over the running set.
+    Decode,
+}
+
+struct Replica {
+    waiting: VecDeque<usize>,
+    running: Vec<usize>,
+    kv_reserved: u64,
+    step: StepKind,
+    completed: u64,
+    steps: u64,
+    prefill_steps: u64,
+    busy_sec: f64,
+    peak_kv_tokens: u64,
+    max_batch_seen: u32,
+}
+
+impl Replica {
+    fn new() -> Replica {
+        Replica {
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            kv_reserved: 0,
+            step: StepKind::Idle,
+            completed: 0,
+            steps: 0,
+            prefill_steps: 0,
+            busy_sec: 0.0,
+            peak_kv_tokens: 0,
+            max_batch_seen: 0,
+        }
+    }
+
+    /// Router-visible load: waiting + currently prefilling + running.
+    fn load(&self) -> usize {
+        let entering = match &self.step {
+            StepKind::Prefill(v) => v.len(),
+            _ => 0,
+        };
+        self.waiting.len() + entering + self.running.len()
+    }
+}
+
+/// Per-request timeline.
+#[derive(Clone)]
+struct ReqState {
+    replica: usize,
+    prefill_start: f64,
+    first_token: f64,
+    finish: f64,
+    decoded: u32,
+}
+
+#[derive(Hash, PartialEq, Eq)]
+enum StepKey {
+    /// Prompt lengths of the admitted batch, in admission order.
+    Prefill(Vec<u32>),
+    /// Quantized KV lengths of the running set, in running order.
+    Decode(Vec<u32>),
+}
+
+/// Memoizing step-cost model over the predictor path. The memo is
+/// lookup-only (never iterated), so `HashMap` order cannot leak into any
+/// output.
+struct CostModel<'a> {
+    llm: &'a LlmConfig,
+    gpu: &'a GpuSpec,
+    tp: u32,
+    pp: u32,
+    models: &'a ModelSet,
+    comm: &'a CommModel,
+    host_gap_sec: f64,
+    threads: usize,
+    memo: HashMap<StepKey, f64>,
+    degraded: usize,
+}
+
+impl CostModel<'_> {
+    fn step_cost(&mut self, key: StepKey) -> f64 {
+        if let Some(&secs) = self.memo.get(&key) {
+            return secs;
+        }
+        let items = match &key {
+            StepKey::Prefill(inputs) => {
+                let reqs: Vec<Request> = inputs
+                    .iter()
+                    .map(|&input_len| Request { input_len, output_len: 1 })
+                    .collect();
+                trace::build_prefill_trace(self.llm, self.tp, self.pp, &reqs)
+            }
+            StepKey::Decode(kvs) => {
+                trace::build_decode_step_trace(self.llm, self.tp, self.pp, kvs)
+            }
+        };
+        let (secs, degraded) = eval::predict_stream_cost(
+            &items,
+            self.gpu,
+            self.tp,
+            self.models,
+            self.comm,
+            self.host_gap_sec,
+            self.threads,
+        );
+        self.degraded += degraded;
+        self.memo.insert(key, secs);
+        secs
+    }
+}
+
+fn quantize_kv(kv: u32, quant: u32) -> u32 {
+    kv.div_ceil(quant).max(1) * quant
+}
+
+/// Metric accumulators filled at request completion.
+struct Tally {
+    ttft: LogHistogram,
+    tpot: LogHistogram,
+    queue: LogHistogram,
+    completed: u64,
+    generated_tokens: f64,
+    slo_ttft_ok: u64,
+    slo_tpot_ok: u64,
+    slo_joint_ok: u64,
+}
+
+struct Sim<'a> {
+    c: &'a CompiledCluster,
+    reqs: Vec<ReqState>,
+    reps: Vec<Replica>,
+    q: EventQueue<Event>,
+    rr_next: usize,
+    tally: Tally,
+}
+
+impl Sim<'_> {
+    fn route(&mut self, i: usize) -> usize {
+        match self.c.policy {
+            RoutePolicy::RoundRobin => {
+                let r = self.rr_next % self.reps.len();
+                self.rr_next += 1;
+                r
+            }
+            RoutePolicy::LeastLoaded => {
+                // min_by_key keeps the first minimum — lowest index wins
+                self.reps
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, rep)| rep.load())
+                    .map(|(idx, _)| idx)
+                    .unwrap_or(0)
+            }
+            RoutePolicy::SessionAffinity => {
+                let mut s = self.c.requests[i].session;
+                (splitmix64(&mut s) % self.reps.len() as u64) as usize
+            }
+        }
+    }
+
+    /// Start the next step on replica `r` if it is idle and has work.
+    /// Prefill (admission) takes priority over decode; admission is strict
+    /// FIFO under the `max_batch` and KV-reservation gates.
+    fn try_start_step(&mut self, cost: &mut CostModel, r: usize, now: f64) {
+        if !matches!(self.reps[r].step, StepKind::Idle) {
+            return;
+        }
+        let mut entering: Vec<usize> = Vec::new();
+        loop {
+            let Some(&i) = self.reps[r].waiting.front() else { break };
+            let req = &self.c.requests[i];
+            let need = req.input_len as u64 + req.output_len as u64;
+            if self.reps[r].running.len() + entering.len() >= self.c.max_batch as usize {
+                break;
+            }
+            if self.reps[r].kv_reserved + need > self.c.kv_capacity_tokens {
+                break;
+            }
+            self.reps[r].kv_reserved += need;
+            entering.push(i);
+            self.reps[r].waiting.pop_front();
+        }
+        let (secs, kind) = if !entering.is_empty() {
+            for &i in &entering {
+                self.reqs[i].prefill_start = now;
+            }
+            let inputs: Vec<u32> =
+                entering.iter().map(|&i| self.c.requests[i].input_len).collect();
+            (cost.step_cost(StepKey::Prefill(inputs)), StepKind::Prefill(entering))
+        } else if !self.reps[r].running.is_empty() {
+            let kvs: Vec<u32> = self.reps[r]
+                .running
+                .iter()
+                .map(|&i| {
+                    let kv = self.c.requests[i].input_len.saturating_add(self.reqs[i].decoded);
+                    quantize_kv(kv, self.c.kv_quant)
+                })
+                .collect();
+            (cost.step_cost(StepKey::Decode(kvs)), StepKind::Decode)
+        } else {
+            return;
+        };
+        let batch = self.reps[r].running.len()
+            + match &kind {
+                StepKind::Prefill(v) => v.len(),
+                _ => 0,
+            };
+        let rep = &mut self.reps[r];
+        rep.steps += 1;
+        if matches!(kind, StepKind::Prefill(_)) {
+            rep.prefill_steps += 1;
+        }
+        rep.busy_sec += secs;
+        rep.max_batch_seen = rep.max_batch_seen.max(batch as u32);
+        rep.peak_kv_tokens = rep.peak_kv_tokens.max(rep.kv_reserved);
+        rep.step = kind;
+        self.q.push(now + secs, Event::StepDone(r));
+    }
+
+    fn finish_step(&mut self, r: usize, now: f64) {
+        let step = std::mem::replace(&mut self.reps[r].step, StepKind::Idle);
+        let mut done: Vec<usize> = Vec::new();
+        match step {
+            StepKind::Idle => unreachable!("StepDone for an idle replica"),
+            StepKind::Prefill(entering) => {
+                for i in entering {
+                    let out_len = self.c.requests[i].output_len;
+                    let st = &mut self.reqs[i];
+                    st.first_token = now; // prefill emits the first token
+                    st.decoded = 1;
+                    if st.decoded >= out_len {
+                        done.push(i);
+                    } else {
+                        self.reps[r].running.push(i);
+                    }
+                }
+            }
+            StepKind::Decode => {
+                let running = std::mem::take(&mut self.reps[r].running);
+                for i in running {
+                    let out_len = self.c.requests[i].output_len;
+                    let finished = {
+                        let st = &mut self.reqs[i];
+                        st.decoded += 1;
+                        st.decoded >= out_len
+                    };
+                    if finished {
+                        done.push(i);
+                    } else {
+                        self.reps[r].running.push(i);
+                    }
+                }
+            }
+        }
+        for i in done {
+            self.complete(r, i, now);
+        }
+    }
+
+    fn complete(&mut self, r: usize, i: usize, now: f64) {
+        let req = &self.c.requests[i];
+        let st = &mut self.reqs[i];
+        st.finish = now;
+        let ttft = st.first_token - req.arrival_sec;
+        let queue_delay = st.prefill_start - req.arrival_sec;
+        self.tally.ttft.insert(ttft);
+        self.tally.queue.insert(queue_delay);
+        let ttft_ok = ttft <= self.c.slo_ttft_sec;
+        let tpot_ok = if req.output_len > 1 {
+            let tpot = (st.finish - st.first_token) / (req.output_len - 1) as f64;
+            self.tally.tpot.insert(tpot);
+            tpot <= self.c.slo_tpot_sec
+        } else {
+            true // a single-token request has no inter-token latency
+        };
+        self.tally.completed += 1;
+        self.tally.generated_tokens += req.output_len as f64;
+        self.tally.slo_ttft_ok += ttft_ok as u64;
+        self.tally.slo_tpot_ok += tpot_ok as u64;
+        self.tally.slo_joint_ok += (ttft_ok && tpot_ok) as u64;
+        let rep = &mut self.reps[r];
+        rep.completed += 1;
+        rep.kv_reserved -= req.input_len as u64 + req.output_len as u64;
+    }
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Run the event loop. Infallible by construction: [`compile_cluster`]
+/// already validated the spec, and missing models answer in the documented
+/// degraded roofline mode (visible in `degraded_kernels`).
+pub fn simulate_cluster(
+    c: &CompiledCluster,
+    models: &ModelSet,
+    comm: &CommModel,
+    threads: usize,
+) -> ClusterReport {
+    let n = c.requests.len();
+    let mut cost = CostModel {
+        llm: &c.llm,
+        gpu: &c.gpu,
+        tp: c.tp,
+        pp: c.pp,
+        models,
+        comm,
+        host_gap_sec: c.host_gap_sec,
+        threads: threads.max(1),
+        memo: HashMap::new(),
+        degraded: 0,
+    };
+    let mut sim = Sim {
+        c,
+        reqs: vec![
+            ReqState {
+                replica: usize::MAX,
+                prefill_start: 0.0,
+                first_token: 0.0,
+                finish: 0.0,
+                decoded: 0,
+            };
+            n
+        ],
+        reps: (0..c.replicas).map(|_| Replica::new()).collect(),
+        q: EventQueue::new(),
+        rr_next: 0,
+        tally: Tally {
+            ttft: LogHistogram::new(),
+            tpot: LogHistogram::new(),
+            queue: LogHistogram::new(),
+            completed: 0,
+            generated_tokens: 0.0,
+            slo_ttft_ok: 0,
+            slo_tpot_ok: 0,
+            slo_joint_ok: 0,
+        },
+    };
+    // requests are arrival-sorted; same-instant arrivals keep their order
+    // through the queue's FIFO tie-break
+    for (i, r) in c.requests.iter().enumerate() {
+        sim.q.push(r.arrival_sec, Event::Arrival(i));
+    }
+    let mut events = 0u64;
+    let mut makespan = 0.0f64;
+    while let Some((now, ev)) = sim.q.pop() {
+        events += 1;
+        makespan = makespan.max(now);
+        match ev {
+            Event::Arrival(i) => {
+                let r = sim.route(i);
+                sim.reqs[i].replica = r;
+                sim.reps[r].waiting.push_back(i);
+                sim.try_start_step(&mut cost, r, now);
+            }
+            Event::StepDone(r) => {
+                sim.finish_step(r, now);
+                sim.try_start_step(&mut cost, r, now);
+            }
+        }
+    }
+    debug_assert_eq!(sim.tally.completed as usize, n, "admission must be starvation-free");
+
+    let replicas: Vec<ReplicaReport> = sim
+        .reps
+        .iter()
+        .map(|rep| ReplicaReport {
+            completed: rep.completed,
+            steps: rep.steps,
+            prefill_steps: rep.prefill_steps,
+            busy_sec: rep.busy_sec,
+            utilization: ratio(rep.busy_sec, makespan),
+            peak_kv_tokens: rep.peak_kv_tokens,
+            max_batch_seen: rep.max_batch_seen,
+        })
+        .collect();
+    let t = &sim.tally;
+    ClusterReport {
+        model: c.llm.name.to_string(),
+        gpu: c.gpu.name.to_string(),
+        tp: c.tp,
+        pp: c.pp,
+        policy: c.policy,
+        seed: c.seed,
+        host_gap_sec: c.host_gap_sec,
+        offered: n as u64,
+        completed: t.completed,
+        makespan_sec: makespan,
+        generated_tokens: t.generated_tokens,
+        tokens_per_sec: ratio(t.generated_tokens, makespan),
+        requests_per_sec: ratio(t.completed as f64, makespan),
+        ttft: LatencySummary::of(&t.ttft),
+        tpot: LatencySummary::of(&t.tpot),
+        queue_delay: LatencySummary::of(&t.queue),
+        ttft_hist: t.ttft.clone(),
+        tpot_hist: t.tpot.clone(),
+        queue_hist: t.queue.clone(),
+        slo_ttft_attainment: ratio(t.slo_ttft_ok as f64, t.completed as f64),
+        slo_tpot_attainment: ratio(t.slo_tpot_ok as f64, t.completed as f64),
+        slo_attainment: ratio(t.slo_joint_ok as f64, t.completed as f64),
+        replicas,
+        degraded_kernels: cost.degraded,
+        distinct_steps: cost.memo.len(),
+        events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Simulator;
+
+    fn trace4() -> ArrivalSpec {
+        ArrivalSpec::Trace(vec![
+            ClusterRequest { arrival_sec: 0.0, input_len: 128, output_len: 8, session: 0 },
+            ClusterRequest { arrival_sec: 0.001, input_len: 96, output_len: 4, session: 1 },
+            ClusterRequest { arrival_sec: 0.002, input_len: 64, output_len: 6, session: 2 },
+            ClusterRequest { arrival_sec: 0.003, input_len: 32, output_len: 2, session: 3 },
+        ])
+    }
+
+    fn small_spec() -> ClusterSpec {
+        ClusterSpec::new("Llama3.1-8B", "A100")
+            .replicas(2)
+            .arrivals(trace4())
+            .max_batch(4)
+            .kv_capacity_tokens(4096)
+            .seed(7)
+    }
+
+    #[test]
+    fn every_offered_request_completes() {
+        let r = Simulator::degraded().simulate_cluster(&small_spec()).unwrap();
+        assert_eq!(r.offered, 4);
+        assert_eq!(r.completed, 4);
+        assert_eq!(r.replicas.len(), 2);
+        assert_eq!(r.replicas.iter().map(|x| x.completed).sum::<u64>(), 4);
+        // round-robin over 2 replicas: 2 requests each
+        assert_eq!(r.replicas[0].completed, 2);
+        assert_eq!(r.replicas[1].completed, 2);
+        assert_eq!(r.generated_tokens, 20.0);
+        assert!(r.makespan_sec > 0.0 && r.makespan_sec.is_finite());
+        assert!(r.tokens_per_sec > 0.0);
+        assert_eq!(r.ttft.count, 4);
+        assert_eq!(r.queue_delay.count, 4);
+        // request 3 generates 2 tokens; 0, 1, 2 generate > 1 too
+        assert_eq!(r.tpot.count, 4);
+        assert!(r.ttft.p50_sec > 0.0);
+        assert!(r.ttft.p99_sec >= r.ttft.p50_sec);
+        assert!(r.events >= 4, "at least one event per arrival");
+        assert!(r.distinct_steps > 0);
+        assert!(r.degraded_kernels > 0, "degraded simulator must say so");
+    }
+
+    #[test]
+    fn slo_attainment_hits_both_extremes() {
+        let sim = Simulator::degraded();
+        let lax = sim.simulate_cluster(&small_spec().slo(1e6, 1e6)).unwrap();
+        assert_eq!(lax.slo_ttft_attainment, 1.0);
+        assert_eq!(lax.slo_tpot_attainment, 1.0);
+        assert_eq!(lax.slo_attainment, 1.0);
+        let strict = sim.simulate_cluster(&small_spec().slo(1e-12, 1e-12)).unwrap();
+        assert_eq!(strict.slo_ttft_attainment, 0.0);
+        assert_eq!(strict.slo_attainment, 0.0);
+    }
+
+    #[test]
+    fn kv_pressure_forces_queueing_but_not_starvation() {
+        // capacity fits only one request at a time: strictly serial service
+        let spec = small_spec().kv_capacity_tokens(150).max_batch(4);
+        let r = Simulator::degraded().simulate_cluster(&spec).unwrap();
+        assert_eq!(r.completed, 4);
+        for rep in &r.replicas {
+            assert!(rep.max_batch_seen <= 1, "KV budget admits one request at a time");
+            assert!(rep.peak_kv_tokens <= 150);
+        }
+    }
+
+    #[test]
+    fn policies_route_deterministically() {
+        let sim = Simulator::degraded();
+        for policy in
+            [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::SessionAffinity]
+        {
+            let spec = small_spec().policy(policy);
+            let a = sim.simulate_cluster(&spec).unwrap();
+            let b = sim.simulate_cluster(&spec).unwrap();
+            assert_eq!(a, b, "{} must be run-to-run deterministic", policy.name());
+            assert_eq!(a.completed, 4);
+        }
+        // session affinity: all four sessions distinct, but both requests
+        // of one session land on one replica
+        let spec = small_spec()
+            .policy(RoutePolicy::SessionAffinity)
+            .arrivals(ArrivalSpec::Trace(vec![
+                ClusterRequest { arrival_sec: 0.0, input_len: 64, output_len: 4, session: 42 },
+                ClusterRequest { arrival_sec: 0.1, input_len: 64, output_len: 4, session: 42 },
+            ]));
+        let r = sim.simulate_cluster(&spec).unwrap();
+        assert!(
+            r.replicas.iter().any(|rep| rep.completed == 2),
+            "one session must stick to one replica"
+        );
+    }
+
+    #[test]
+    fn generated_arrivals_are_seeded_and_sorted() {
+        let spec = ClusterSpec::new("Llama3.1-8B", "A100").arrivals(ArrivalSpec::Poisson {
+            rate_rps: 10.0,
+            n: 12,
+            kind: WorkloadKind::Splitwise,
+        });
+        let a = compile_cluster(&spec).unwrap();
+        let b = compile_cluster(&spec).unwrap();
+        assert_eq!(a.requests, b.requests);
+        assert!(a.requests.windows(2).all(|w| w[0].arrival_sec <= w[1].arrival_sec));
+        assert!(a.requests[0].arrival_sec > 0.0, "poisson gaps are positive a.s.");
+        let c = compile_cluster(&spec.clone().seed(1)).unwrap();
+        assert_ne!(a.requests, c.requests, "different seed, different arrivals");
+        // uniform: exact gaps
+        let u = compile_cluster(&ClusterSpec::new("Llama3.1-8B", "A100").arrivals(
+            ArrivalSpec::Uniform { gap_sec: 0.5, n: 3, kind: WorkloadKind::Arxiv },
+        ))
+        .unwrap();
+        let times: Vec<f64> = u.requests.iter().map(|r| r.arrival_sec).collect();
+        assert_eq!(times, vec![0.5, 1.0, 1.5]);
+    }
+
+    #[test]
+    fn cluster_taxonomy_is_closed() {
+        let sim = Simulator::degraded();
+        let bad = |spec: ClusterSpec| sim.simulate_cluster(&spec).unwrap_err();
+        assert!(matches!(
+            bad(ClusterSpec::new("GPT-5", "A100")),
+            ScenarioError::UnknownModel(_)
+        ));
+        assert!(matches!(
+            bad(ClusterSpec::new("Llama3.1-8B", "B300")),
+            ScenarioError::UnknownGpu(_)
+        ));
+        assert!(matches!(
+            bad(small_spec().tp(3)),
+            ScenarioError::InvalidParallelism(_)
+        ));
+        assert!(matches!(
+            bad(small_spec().host_gap_sec(-1.0)),
+            ScenarioError::MalformedSpec(_)
+        ));
+        assert!(matches!(bad(small_spec().replicas(0)), ScenarioError::InvalidCluster(_)));
+        assert!(matches!(
+            bad(small_spec().replicas(MAX_REPLICAS + 1)),
+            ScenarioError::InvalidCluster(_)
+        ));
+        assert!(matches!(bad(small_spec().max_batch(0)), ScenarioError::InvalidCluster(_)));
+        assert!(matches!(bad(small_spec().kv_quant(0)), ScenarioError::InvalidCluster(_)));
+        assert!(matches!(
+            bad(small_spec().slo(0.0, 1.0)),
+            ScenarioError::InvalidCluster(_)
+        ));
+        // a request that cannot fit an empty replica is rejected up front
+        assert!(matches!(
+            bad(small_spec().kv_capacity_tokens(10)),
+            ScenarioError::InvalidCluster(_)
+        ));
+        // arrival-process parameter errors
+        assert!(matches!(
+            bad(small_spec().arrivals(ArrivalSpec::Poisson {
+                rate_rps: 0.0,
+                n: 4,
+                kind: WorkloadKind::Arxiv
+            })),
+            ScenarioError::InvalidCluster(_)
+        ));
+        assert!(matches!(
+            bad(small_spec().arrivals(ArrivalSpec::Trace(vec![ClusterRequest {
+                arrival_sec: f64::NAN,
+                input_len: 8,
+                output_len: 2,
+                session: 0,
+            }]))),
+            ScenarioError::InvalidCluster(_)
+        ));
+        // workload-shaped problems keep the v1 taxonomy
+        assert!(matches!(
+            bad(small_spec().arrivals(ArrivalSpec::Trace(vec![]))),
+            ScenarioError::InvalidWorkload(_)
+        ));
+        assert!(matches!(
+            bad(small_spec().arrivals(ArrivalSpec::Trace(vec![ClusterRequest {
+                arrival_sec: 0.0,
+                input_len: 0,
+                output_len: 2,
+                session: 0,
+            }]))),
+            ScenarioError::InvalidWorkload(_)
+        ));
+    }
+
+    #[test]
+    fn kv_quant_trades_memo_size_for_fidelity() {
+        let sim = Simulator::degraded();
+        let exact = sim.simulate_cluster(&small_spec().kv_quant(1)).unwrap();
+        let coarse = sim.simulate_cluster(&small_spec().kv_quant(64)).unwrap();
+        assert!(coarse.distinct_steps <= exact.distinct_steps);
+        assert_eq!(coarse.completed, exact.completed);
+    }
+}

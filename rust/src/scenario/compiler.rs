@@ -59,7 +59,20 @@ impl CompiledScenario {
     }
 }
 
-fn validate_parallelism(llm: &LlmConfig, tp: u32, pp: u32) -> Result<(), ScenarioError> {
+/// Resolve model + GPU names with the closed taxonomy — shared by the v1
+/// compiler and the cluster (Scenario v2) compiler so the two surfaces
+/// report identical errors.
+pub(crate) fn resolve_model_gpu(
+    model: &str,
+    gpu: &str,
+) -> Result<(LlmConfig, GpuSpec), ScenarioError> {
+    let llm =
+        llm::llm_by_name(model).ok_or_else(|| ScenarioError::UnknownModel(model.to_string()))?;
+    let g = gpu_by_name(gpu).ok_or_else(|| ScenarioError::UnknownGpu(gpu.to_string()))?;
+    Ok((llm, g))
+}
+
+pub(crate) fn validate_parallelism(llm: &LlmConfig, tp: u32, pp: u32) -> Result<(), ScenarioError> {
     let bad = |why: String| Err(ScenarioError::InvalidParallelism(why));
     if tp == 0 || pp == 0 {
         return bad(format!("tp and pp must be >= 1, got tp={tp} pp={pp}"));
@@ -113,29 +126,36 @@ fn materialize_requests(spec: &ScenarioSpec) -> Result<Vec<Request>, ScenarioErr
         return bad("request mix must be non-empty".to_string());
     }
     for (i, r) in reqs.iter().enumerate() {
-        if r.input_len == 0 || r.output_len == 0 {
-            return bad(format!(
-                "request {i} needs input_len >= 1 and output_len >= 1 (got {}x{})",
-                r.input_len, r.output_len
-            ));
-        }
-        if r.input_len > MAX_INPUT_LEN || r.output_len > MAX_OUTPUT_LEN {
-            return bad(format!(
-                "request {i} exceeds the length caps ({}x{} vs {MAX_INPUT_LEN}x{MAX_OUTPUT_LEN})",
-                r.input_len, r.output_len
-            ));
-        }
+        validate_request_lens(i, r.input_len, r.output_len)?;
     }
     Ok(reqs)
+}
+
+/// Validate one request's lengths against the wire-scale caps — shared by
+/// the v1 workload materializer and the cluster arrival materializer.
+pub(crate) fn validate_request_lens(
+    i: usize,
+    input_len: u32,
+    output_len: u32,
+) -> Result<(), ScenarioError> {
+    let bad = |why: String| Err(ScenarioError::InvalidWorkload(why));
+    if input_len == 0 || output_len == 0 {
+        return bad(format!(
+            "request {i} needs input_len >= 1 and output_len >= 1 (got {input_len}x{output_len})"
+        ));
+    }
+    if input_len > MAX_INPUT_LEN || output_len > MAX_OUTPUT_LEN {
+        return bad(format!(
+            "request {i} exceeds the length caps ({input_len}x{output_len} vs {MAX_INPUT_LEN}x{MAX_OUTPUT_LEN})"
+        ));
+    }
+    Ok(())
 }
 
 /// Lower a spec to its phase-tagged op streams. Validation order is part
 /// of the contract: model, GPU, parallelism, host gap, workload.
 pub fn compile(spec: &ScenarioSpec) -> Result<CompiledScenario, ScenarioError> {
-    let llm = llm::llm_by_name(&spec.model)
-        .ok_or_else(|| ScenarioError::UnknownModel(spec.model.clone()))?;
-    let gpu =
-        gpu_by_name(&spec.gpu).ok_or_else(|| ScenarioError::UnknownGpu(spec.gpu.clone()))?;
+    let (llm, gpu) = resolve_model_gpu(&spec.model, &spec.gpu)?;
     validate_parallelism(&llm, spec.tp, spec.pp)?;
     if !spec.host_gap_sec.is_finite() || spec.host_gap_sec < 0.0 {
         return Err(ScenarioError::MalformedSpec(format!(

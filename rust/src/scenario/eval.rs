@@ -34,7 +34,8 @@ use super::{ClassBreakdown, CompiledScenario, OpClass, Phase, PhaseReport, Scena
 use crate::api::{self, FeatureView, Source};
 use crate::e2e::comm::CommModel;
 use crate::e2e::predict::{eval_op, ItemEval, MethodTotals, ModelSet, EVAL_PAR_GRAIN};
-use crate::e2e::trace::Op;
+use crate::e2e::trace::{Op, TraceItem};
+use crate::hw::GpuSpec;
 use crate::engine::{par, PredictionEngine};
 use crate::kernels::KernelConfig;
 
@@ -239,6 +240,55 @@ pub fn evaluate(
         host_gap_sec: c.host_gap_sec,
         seed: c.seed,
     }
+}
+
+/// Predictor-side wall time of one op stream — the cluster simulator's
+/// step clock (Scenario v2). Kernel latencies go through the same batched
+/// [`api::predict_batch_view_on`] routing path as [`evaluate`], so the
+/// sharded engine cache is exercised identically; comm ops use the shared
+/// RF predictions; every kernel launch pays the host gap. Unlike
+/// [`evaluate`] there is **no oracle sampling**: service times are what
+/// the *predictor* says, which keeps the virtual clock a pure function of
+/// `(items, gpu, models)` — no seed enters, so cluster timelines are
+/// trivially deterministic. Returns the seconds plus the count of kernel
+/// items answered with degraded (roofline-fallback) provenance.
+pub(crate) fn predict_stream_cost(
+    items: &[TraceItem],
+    gpu: &GpuSpec,
+    tp: u32,
+    models: &ModelSet,
+    comm: &CommModel,
+    host_gap_sec: f64,
+    threads: usize,
+) -> (f64, usize) {
+    let mut secs = 0.0;
+    let mut kernel_cfgs: Vec<&KernelConfig> = Vec::new();
+    let mut kernel_counts: Vec<f64> = Vec::new();
+    for item in items {
+        match &item.op {
+            Op::Kernel(cfg) => {
+                kernel_cfgs.push(cfg);
+                kernel_counts.push(item.count);
+                secs += item.count * host_gap_sec;
+            }
+            Op::AllReduce { bytes } => {
+                secs += item.count * comm.predict_allreduce(*bytes, tp, gpu);
+            }
+            Op::SendRecv { bytes } => {
+                secs += item.count * comm.predict_sendrecv(*bytes, gpu);
+            }
+        }
+    }
+    let syn =
+        api::predict_batch_view_on(&models.synperf, FeatureView::SynPerf, gpu, &kernel_cfgs, threads);
+    let mut degraded = 0usize;
+    for (p, count) in syn.iter().zip(&kernel_counts) {
+        secs += count * p.latency_sec;
+        if p.provenance.source == Source::Roofline {
+            degraded += 1;
+        }
+    }
+    (secs, degraded)
 }
 
 #[cfg(test)]

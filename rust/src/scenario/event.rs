@@ -1,0 +1,125 @@
+//! Deterministic discrete-event core for Scenario v2: a virtual-clock
+//! event queue ordered by `(time, sequence)`. The sequence number is
+//! assigned at push, so events scheduled for the same instant pop in push
+//! order — ordering can never depend on `BinaryHeap` internals, insertion
+//! races, or float ties, which is what keeps whole cluster simulations
+//! byte-identical run to run and thread count to thread count (the event
+//! loop itself is serial; `--threads` only parallelizes the batched
+//! prediction calls inside a step).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed on both keys: BinaryHeap is a max-heap and we pop the
+        // earliest (time, seq). total_cmp gives a total order on f64 so no
+        // comparator panic is reachable.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-queue of timed events with FIFO tie-breaking.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at virtual time `time` (seconds, finite).
+    pub fn push(&mut self, time: f64, payload: T) {
+        debug_assert!(time.is_finite(), "virtual time must be finite");
+        self.heap.push(Entry { time, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event; same-instant events pop in push order.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.time, e.payload))
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_break_in_push_order() {
+        let mut q = EventQueue::new();
+        for i in 0..16u32 {
+            q.push(1.5, i);
+        }
+        for i in 0..16u32 {
+            assert_eq!(q.pop(), Some((1.5, i)), "FIFO within one instant");
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, 50);
+        q.push(1.0, 10);
+        assert_eq!(q.pop(), Some((1.0, 10)));
+        // a later push for an earlier time still pops first
+        q.push(2.0, 20);
+        q.push(5.0, 51);
+        assert_eq!(q.pop(), Some((2.0, 20)));
+        assert_eq!(q.pop(), Some((5.0, 50)), "equal times keep insertion order");
+        assert_eq!(q.pop(), Some((5.0, 51)));
+    }
+}

@@ -15,9 +15,14 @@
 //! typed [`OpClass`] breakdown (no stringly buckets), and the
 //! degraded-kernel / cache-hit provenance carried up from the protocol.
 //!
+//! **Scenario v2** ([`cluster`]) layers a deterministic discrete-event
+//! cluster simulation on the same predictor path: seeded arrival
+//! processes, N replicas behind a router, continuous batching, and
+//! per-request TTFT/TPOT/queueing percentiles (see the module docs).
+//!
 //! Failures speak the **closed** [`ScenarioError`] taxonomy (unknown
 //! model, unknown GPU, invalid parallelism, invalid workload, malformed
-//! spec), mirroring [`crate::api::PredictError`]. The same schema rides
+//! spec, invalid cluster), mirroring [`crate::api::PredictError`]. The same schema rides
 //! the JSONL wire as the `simulate` verb ([`wire`]): `synperf simulate`
 //! and simulate lines on `synperf serve --stdio` both round-trip a
 //! `ScenarioSpec` object to a `ScenarioReport` line.
@@ -28,10 +33,16 @@
 //! model once. [`evaluate`] is pinned bit-identical to the hand-built
 //! `build_trace` + `eval_trace` reference path (`tests/proptests.rs`).
 
+pub mod cluster;
 pub mod compiler;
 pub mod eval;
+pub mod event;
 pub mod wire;
 
+pub use cluster::{
+    compile_cluster, ArrivalSpec, ClusterReport, ClusterRequest, ClusterSpec, CompiledCluster,
+    LatencySummary, ReplicaReport, RoutePolicy,
+};
 pub use compiler::{compile, CompiledScenario, PhaseStream};
 pub use eval::evaluate;
 
@@ -212,6 +223,9 @@ pub enum ScenarioError {
     InvalidWorkload(String),
     /// The spec itself is malformed (bad JSON, bad field types, bad gap).
     MalformedSpec(String),
+    /// A cluster-level knob (replicas, policy, admission limits, arrival
+    /// process, SLO thresholds) is out of range — Scenario v2 only.
+    InvalidCluster(String),
 }
 
 impl ScenarioError {
@@ -223,6 +237,7 @@ impl ScenarioError {
             ScenarioError::InvalidParallelism(_) => "invalid_parallelism",
             ScenarioError::InvalidWorkload(_) => "invalid_workload",
             ScenarioError::MalformedSpec(_) => "malformed_spec",
+            ScenarioError::InvalidCluster(_) => "invalid_cluster",
         }
     }
 }
@@ -239,6 +254,7 @@ impl fmt::Display for ScenarioError {
             ScenarioError::InvalidParallelism(why) => write!(f, "invalid parallelism: {why}"),
             ScenarioError::InvalidWorkload(why) => write!(f, "invalid workload: {why}"),
             ScenarioError::MalformedSpec(why) => write!(f, "malformed scenario spec: {why}"),
+            ScenarioError::InvalidCluster(why) => write!(f, "invalid cluster: {why}"),
         }
     }
 }
@@ -518,6 +534,26 @@ impl Simulator {
         let comm = self.comm_for(&compiled.gpu);
         Ok(evaluate(&compiled, &self.models, &comm, threads.max(1)))
     }
+
+    /// Compile and run one cluster simulation (Scenario v2) with the
+    /// configured thread count.
+    pub fn simulate_cluster(&self, spec: &ClusterSpec) -> Result<ClusterReport, ScenarioError> {
+        self.simulate_cluster_with_threads(spec, self.threads)
+    }
+
+    /// Compile and run one cluster simulation with an explicit thread
+    /// count. The event loop is serial; `threads` only fans out the
+    /// batched prediction calls inside each step, so reports are
+    /// byte-identical to `threads = 1`.
+    pub fn simulate_cluster_with_threads(
+        &self,
+        spec: &ClusterSpec,
+        threads: usize,
+    ) -> Result<ClusterReport, ScenarioError> {
+        let compiled = compile_cluster(spec)?;
+        let comm = self.comm_for(&compiled.gpu);
+        Ok(cluster::simulate_cluster(&compiled, &self.models, &comm, threads.max(1)))
+    }
 }
 
 #[cfg(test)]
@@ -545,12 +581,13 @@ mod tests {
 
     #[test]
     fn error_codes_are_stable() {
-        let cases: [(ScenarioError, &str); 5] = [
+        let cases: [(ScenarioError, &str); 6] = [
             (ScenarioError::UnknownModel("x".into()), "unknown_model"),
             (ScenarioError::UnknownGpu("x".into()), "unknown_gpu"),
             (ScenarioError::InvalidParallelism("x".into()), "invalid_parallelism"),
             (ScenarioError::InvalidWorkload("x".into()), "invalid_workload"),
             (ScenarioError::MalformedSpec("x".into()), "malformed_spec"),
+            (ScenarioError::InvalidCluster("x".into()), "invalid_cluster"),
         ];
         for (err, code) in cases {
             assert_eq!(err.code(), code);

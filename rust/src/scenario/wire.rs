@@ -29,15 +29,37 @@
 //!
 //! Malformed lines map to [`ScenarioError::MalformedSpec`] (mirroring the
 //! predict verb's malformed-request bucket).
+//!
+//! **Scenario v2** rides the same verb with a `cluster` object in place of
+//! `scenario`:
+//!
+//! ```json
+//! {"v":1,"id":"c1","op":"simulate","cluster":{"model":"Llama3.1-8B",
+//!  "gpu":"A100","replicas":2,"policy":"least_loaded",
+//!  "arrivals":{"poisson":{"rate_rps":8,"n":32,"kind":"arxiv"}},
+//!  "max_batch":16,"kv_capacity_tokens":262144,"kv_quant":16,"seed":7,
+//!  "slo":{"ttft_sec":2,"tpot_sec":0.2}}}
+//! ```
+//!
+//! Deterministic traces replace the sampled process:
+//! `"arrivals":{"trace":[[0.0,1000,200,0],[0.5,600,100,1]]}` — entries are
+//! `[arrival_sec, input, output]` or `[arrival_sec, input, output,
+//! session]` (session defaults to the entry index). The response report
+//! carries a `"cluster":true` discriminator, the per-request percentile
+//! summaries (`ttft`, `tpot`, `queue_delay`), the mergeable fixed-bin
+//! histograms behind them, SLO attainment, and per-replica accounting.
+//! Cluster-knob errors speak the `invalid_cluster` taxonomy code.
 
 use super::{
-    ClassBreakdown, Method, MethodTotals, OpClass, Phase, PhaseReport, PhaseSelection,
+    ArrivalSpec, ClassBreakdown, ClusterReport, ClusterRequest, ClusterSpec, LatencySummary,
+    Method, MethodTotals, OpClass, Phase, PhaseReport, PhaseSelection, ReplicaReport, RoutePolicy,
     ScenarioError, ScenarioReport, ScenarioSpec, WorkloadSpec,
 };
 use crate::api::wire::{esc, id_of};
 use crate::api::PROTOCOL_VERSION;
 use crate::e2e::workload::{Request, WorkloadKind};
 use crate::util::json::{parse, Json};
+use crate::util::stats::LogHistogram;
 use anyhow::{anyhow, Result};
 
 fn malformed(why: impl Into<String>) -> ScenarioError {
@@ -180,7 +202,7 @@ fn parse_spec_object(j: &Json) -> Result<ScenarioSpec, ScenarioError> {
     Ok(spec)
 }
 
-fn simulate_fields(j: &Json) -> Result<ScenarioSpec, ScenarioError> {
+fn check_version(j: &Json) -> Result<(), ScenarioError> {
     if let Some(v) = j.get("v").and_then(|v| v.as_f64()) {
         if v as u32 != PROTOCOL_VERSION {
             return Err(malformed(format!(
@@ -188,6 +210,11 @@ fn simulate_fields(j: &Json) -> Result<ScenarioSpec, ScenarioError> {
             )));
         }
     }
+    Ok(())
+}
+
+fn simulate_fields(j: &Json) -> Result<ScenarioSpec, ScenarioError> {
+    check_version(j)?;
     let sc = j
         .get("scenario")
         .ok_or_else(|| malformed("simulate request needs a \"scenario\" object"))?;
@@ -229,9 +256,232 @@ pub fn parse_spec_line(line: &str) -> (Option<String>, Result<ScenarioSpec, Scen
 }
 
 /// Whether a decoded wire object addresses the simulate verb (vs the
-/// predict verb).
+/// predict verb) — in either of its shapes (v1 `scenario`, v2 `cluster`).
 pub(crate) fn is_simulate_json(j: &Json) -> bool {
-    j.get("op").and_then(|v| v.as_str()) == Some("simulate") || j.get("scenario").is_some()
+    j.get("op").and_then(|v| v.as_str()) == Some("simulate")
+        || j.get("scenario").is_some()
+        || j.get("cluster").is_some()
+}
+
+// ---- cluster spec (Scenario v2) -------------------------------------------
+
+/// One parsed `simulate` request: the v1 single-node scenario or the v2
+/// cluster simulation. Both ride the same wire verb; the `scenario` /
+/// `cluster` object key discriminates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimulateRequest {
+    Scenario(ScenarioSpec),
+    Cluster(ClusterSpec),
+}
+
+fn arrivals_to_json(a: &ArrivalSpec) -> String {
+    match a {
+        ArrivalSpec::Trace(reqs) => {
+            let rows: Vec<String> = reqs
+                .iter()
+                .map(|r| {
+                    format!(
+                        "[{:e},{},{},{}]",
+                        r.arrival_sec,
+                        r.input_len,
+                        r.output_len,
+                        seed_to_json(r.session)
+                    )
+                })
+                .collect();
+            format!(r#"{{"trace":[{}]}}"#, rows.join(","))
+        }
+        ArrivalSpec::Poisson { rate_rps, n, kind } => format!(
+            r#"{{"poisson":{{"rate_rps":{:e},"n":{},"kind":"{}"}}}}"#,
+            rate_rps,
+            n,
+            kind.name()
+        ),
+        ArrivalSpec::Uniform { gap_sec, n, kind } => format!(
+            r#"{{"uniform":{{"gap_sec":{:e},"n":{},"kind":"{}"}}}}"#,
+            gap_sec,
+            n,
+            kind.name()
+        ),
+    }
+}
+
+fn arrivals_from_json(j: &Json) -> Result<ArrivalSpec, ScenarioError> {
+    if let Some(t) = j.get("trace") {
+        let arr = t.as_arr().ok_or_else(|| malformed("\"trace\" must be an array"))?;
+        let mut reqs = Vec::with_capacity(arr.len());
+        for (i, row) in arr.iter().enumerate() {
+            let p = row.as_arr().filter(|p| p.len() == 3 || p.len() == 4).ok_or_else(|| {
+                malformed("trace entries are [arrival_sec,input,output] or [arrival_sec,input,output,session]")
+            })?;
+            let arrival_sec =
+                p[0].as_f64().ok_or_else(|| malformed("\"arrival_sec\" must be a number"))?;
+            let session = if p.len() == 4 { seed_from(&p[3], "session")? } else { i as u64 };
+            reqs.push(ClusterRequest {
+                arrival_sec,
+                input_len: num_u32(&p[1], "input_len")?,
+                output_len: num_u32(&p[2], "output_len")?,
+                session,
+            });
+        }
+        return Ok(ArrivalSpec::Trace(reqs));
+    }
+    let n_and_kind = |o: &Json| -> Result<(usize, WorkloadKind), ScenarioError> {
+        let n = match o.get("n") {
+            None => 16,
+            // saturate rather than wrap on 32-bit targets: the request cap
+            // owns the rejection either way
+            Some(v) => usize::try_from(num_u64(v, "n")?).unwrap_or(usize::MAX),
+        };
+        let kind = match o.get("kind") {
+            None => WorkloadKind::Arxiv,
+            Some(v) => super::workload_kind(
+                v.as_str().ok_or_else(|| malformed("\"kind\" must be a string"))?,
+            )?,
+        };
+        Ok((n, kind))
+    };
+    if let Some(o) = j.get("poisson") {
+        let rate_rps = o
+            .get("rate_rps")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| malformed("poisson arrivals need \"rate_rps\""))?;
+        let (n, kind) = n_and_kind(o)?;
+        return Ok(ArrivalSpec::Poisson { rate_rps, n, kind });
+    }
+    if let Some(o) = j.get("uniform") {
+        let gap_sec = o
+            .get("gap_sec")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| malformed("uniform arrivals need \"gap_sec\""))?;
+        let (n, kind) = n_and_kind(o)?;
+        return Ok(ArrivalSpec::Uniform { gap_sec, n, kind });
+    }
+    Err(malformed("\"arrivals\" must contain \"trace\", \"poisson\" or \"uniform\""))
+}
+
+fn cluster_to_json(spec: &ClusterSpec) -> String {
+    format!(
+        r#"{{"model":"{}","gpu":"{}","tp":{},"pp":{},"replicas":{},"policy":"{}","arrivals":{},"max_batch":{},"kv_capacity_tokens":{},"kv_quant":{},"seed":{},"host_gap_sec":{:e},"slo":{{"ttft_sec":{:e},"tpot_sec":{:e}}}}}"#,
+        esc(&spec.model),
+        esc(&spec.gpu),
+        spec.tp,
+        spec.pp,
+        spec.replicas,
+        spec.policy.name(),
+        arrivals_to_json(&spec.arrivals),
+        spec.max_batch,
+        seed_to_json(spec.kv_capacity_tokens),
+        spec.kv_quant,
+        seed_to_json(spec.seed),
+        spec.host_gap_sec,
+        spec.slo_ttft_sec,
+        spec.slo_tpot_sec
+    )
+}
+
+fn parse_cluster_object(j: &Json) -> Result<ClusterSpec, ScenarioError> {
+    let model = j
+        .get("model")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| malformed("cluster needs \"model\": \"<name>\""))?;
+    let gpu = j
+        .get("gpu")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| malformed("cluster needs \"gpu\": \"<name>\""))?;
+    let mut spec = ClusterSpec::new(model, gpu);
+    if let Some(v) = j.get("tp") {
+        spec.tp = num_u32(v, "tp")?;
+    }
+    if let Some(v) = j.get("pp") {
+        spec.pp = num_u32(v, "pp")?;
+    }
+    if let Some(v) = j.get("replicas") {
+        spec.replicas = num_u32(v, "replicas")?;
+    }
+    if let Some(v) = j.get("policy") {
+        spec.policy = RoutePolicy::parse(
+            v.as_str().ok_or_else(|| malformed("\"policy\" must be a string"))?,
+        )?;
+    }
+    if let Some(v) = j.get("arrivals") {
+        spec.arrivals = arrivals_from_json(v)?;
+    }
+    if let Some(v) = j.get("max_batch") {
+        spec.max_batch = num_u32(v, "max_batch")?;
+    }
+    if let Some(v) = j.get("kv_capacity_tokens") {
+        spec.kv_capacity_tokens = seed_from(v, "kv_capacity_tokens")?;
+    }
+    if let Some(v) = j.get("kv_quant") {
+        spec.kv_quant = num_u32(v, "kv_quant")?;
+    }
+    if let Some(v) = j.get("seed") {
+        spec.seed = seed_from(v, "seed")?;
+    }
+    if let Some(v) = j.get("host_gap_sec") {
+        spec.host_gap_sec =
+            v.as_f64().ok_or_else(|| malformed("\"host_gap_sec\" must be a number"))?;
+    }
+    if let Some(s) = j.get("slo") {
+        if let Some(v) = s.get("ttft_sec") {
+            spec.slo_ttft_sec =
+                v.as_f64().ok_or_else(|| malformed("\"slo.ttft_sec\" must be a number"))?;
+        }
+        if let Some(v) = s.get("tpot_sec") {
+            spec.slo_tpot_sec =
+                v.as_f64().ok_or_else(|| malformed("\"slo.tpot_sec\" must be a number"))?;
+        }
+    }
+    Ok(spec)
+}
+
+/// Serialize a cluster simulate request into its canonical wire line (no
+/// trailing newline). The inverse of [`parse_request_line`].
+pub fn encode_cluster_request(id: Option<&str>, spec: &ClusterSpec) -> String {
+    let mut out = format!("{{\"v\":{PROTOCOL_VERSION}");
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    out.push_str(&format!(",\"op\":\"simulate\",\"cluster\":{}", cluster_to_json(spec)));
+    out.push('}');
+    out
+}
+
+fn simulate_any_fields(j: &Json) -> Result<SimulateRequest, ScenarioError> {
+    check_version(j)?;
+    if let Some(c) = j.get("cluster") {
+        return parse_cluster_object(c).map(SimulateRequest::Cluster);
+    }
+    let sc = j
+        .get("scenario")
+        .ok_or_else(|| malformed("simulate request needs a \"scenario\" or \"cluster\" object"))?;
+    parse_spec_object(sc).map(SimulateRequest::Scenario)
+}
+
+/// Envelope parse over an already-decoded line, accepting both request
+/// shapes (single-parse dispatch — what the stdio loop uses).
+pub(crate) fn parse_request_json(
+    j: &Json,
+) -> (Option<String>, Result<SimulateRequest, ScenarioError>) {
+    (id_of(j), simulate_any_fields(j))
+}
+
+/// Parse a request line in any accepted shape: the wire envelope (with a
+/// `scenario` or `cluster` object), a bare scenario object, or a bare
+/// `{"cluster":{..}}` wrapper — what `synperf simulate --spec` accepts.
+pub fn parse_request_line(line: &str) -> (Option<String>, Result<SimulateRequest, ScenarioError>) {
+    let j = match parse(line) {
+        Ok(j) => j,
+        Err(e) => return (None, Err(malformed(format!("malformed JSON: {e}")))),
+    };
+    let res = if j.get("cluster").is_some() || j.get("scenario").is_some() || j.get("op").is_some()
+    {
+        simulate_any_fields(&j)
+    } else {
+        parse_spec_object(&j).map(SimulateRequest::Scenario)
+    };
+    (id_of(&j), res)
 }
 
 /// Whether a wire line addresses the simulate verb (vs the predict verb).
@@ -328,6 +578,29 @@ fn report_to_json(r: &ScenarioReport) -> String {
     )
 }
 
+/// One owner of the error-object encoding, shared by the v1 and v2 report
+/// encoders so the taxonomy cannot drift between them.
+fn error_to_json(e: &ScenarioError) -> String {
+    let mut out =
+        format!("{{\"code\":\"{}\",\"message\":\"{}\"", e.code(), esc(&e.to_string()));
+    match e {
+        ScenarioError::UnknownModel(name) => {
+            out.push_str(&format!(",\"model\":\"{}\"", esc(name)));
+        }
+        ScenarioError::UnknownGpu(name) => {
+            out.push_str(&format!(",\"gpu\":\"{}\"", esc(name)));
+        }
+        ScenarioError::InvalidParallelism(why)
+        | ScenarioError::InvalidWorkload(why)
+        | ScenarioError::MalformedSpec(why)
+        | ScenarioError::InvalidCluster(why) => {
+            out.push_str(&format!(",\"reason\":\"{}\"", esc(why)));
+        }
+    }
+    out.push('}');
+    out
+}
+
 /// Serialize one simulate result into its wire line (no trailing newline).
 pub fn encode_report(id: Option<&str>, res: &Result<ScenarioReport, ScenarioError>) -> String {
     let mut out = format!("{{\"v\":{PROTOCOL_VERSION}");
@@ -336,27 +609,7 @@ pub fn encode_report(id: Option<&str>, res: &Result<ScenarioReport, ScenarioErro
     }
     match res {
         Ok(r) => out.push_str(&format!(",\"ok\":true,\"report\":{}", report_to_json(r))),
-        Err(e) => {
-            out.push_str(&format!(
-                ",\"ok\":false,\"error\":{{\"code\":\"{}\",\"message\":\"{}\"",
-                e.code(),
-                esc(&e.to_string())
-            ));
-            match e {
-                ScenarioError::UnknownModel(name) => {
-                    out.push_str(&format!(",\"model\":\"{}\"", esc(name)));
-                }
-                ScenarioError::UnknownGpu(name) => {
-                    out.push_str(&format!(",\"gpu\":\"{}\"", esc(name)));
-                }
-                ScenarioError::InvalidParallelism(why)
-                | ScenarioError::InvalidWorkload(why)
-                | ScenarioError::MalformedSpec(why) => {
-                    out.push_str(&format!(",\"reason\":\"{}\"", esc(why)));
-                }
-            }
-            out.push('}');
-        }
+        Err(e) => out.push_str(&format!(",\"ok\":false,\"error\":{}", error_to_json(e))),
     }
     out.push('}');
     out
@@ -371,6 +624,37 @@ fn str_field(j: &Json, key: &str) -> Result<String> {
         .and_then(|v| v.as_str())
         .map(str::to_string)
         .ok_or_else(|| anyhow!("report field {key:?} missing"))
+}
+
+fn u64_field(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+        .map(|n| n as u64)
+        .ok_or_else(|| anyhow!("report field {key:?} must be an unsigned integer"))
+}
+
+/// Client half of [`error_to_json`] — shared by the v1 and v2 report
+/// parsers.
+fn error_from_json(err: &Json) -> Result<ScenarioError> {
+    let code = err
+        .get("code")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("error needs \"code\""))?;
+    let message = err.get("message").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+    let reason =
+        err.get("reason").and_then(|v| v.as_str()).map(str::to_string).unwrap_or(message);
+    let detail =
+        |key: &str| err.get(key).and_then(|v| v.as_str()).unwrap_or_default().to_string();
+    Ok(match code {
+        "unknown_model" => ScenarioError::UnknownModel(detail("model")),
+        "unknown_gpu" => ScenarioError::UnknownGpu(detail("gpu")),
+        "invalid_parallelism" => ScenarioError::InvalidParallelism(reason),
+        "invalid_workload" => ScenarioError::InvalidWorkload(reason),
+        "malformed_spec" => ScenarioError::MalformedSpec(reason),
+        "invalid_cluster" => ScenarioError::InvalidCluster(reason),
+        other => anyhow::bail!("unknown error code {other:?}"),
+    })
 }
 
 fn totals_from_json(j: &Json) -> Result<MethodTotals> {
@@ -432,26 +716,7 @@ pub fn parse_report(
         j.get("ok").and_then(|v| v.as_bool()).ok_or_else(|| anyhow!("response needs \"ok\""))?;
     if !ok {
         let err = j.get("error").ok_or_else(|| anyhow!("error response needs \"error\""))?;
-        let code = err
-            .get("code")
-            .and_then(|v| v.as_str())
-            .ok_or_else(|| anyhow!("error needs \"code\""))?;
-        let message =
-            err.get("message").and_then(|v| v.as_str()).unwrap_or_default().to_string();
-        let reason =
-            err.get("reason").and_then(|v| v.as_str()).map(str::to_string).unwrap_or(message);
-        let detail = |key: &str| {
-            err.get(key).and_then(|v| v.as_str()).unwrap_or_default().to_string()
-        };
-        let e = match code {
-            "unknown_model" => ScenarioError::UnknownModel(detail("model")),
-            "unknown_gpu" => ScenarioError::UnknownGpu(detail("gpu")),
-            "invalid_parallelism" => ScenarioError::InvalidParallelism(reason),
-            "invalid_workload" => ScenarioError::InvalidWorkload(reason),
-            "malformed_spec" => ScenarioError::MalformedSpec(reason),
-            other => anyhow::bail!("unknown error code {other:?}"),
-        };
-        return Ok((id, Err(e)));
+        return Ok((id, Err(error_from_json(err)?)));
     }
     let rep = j.get("report").ok_or_else(|| anyhow!("ok response needs a \"report\""))?;
     let phases = rep
@@ -482,6 +747,219 @@ pub fn parse_report(
                 rep.get("seed").ok_or_else(|| anyhow!("report needs \"seed\""))?,
                 "seed",
             )?,
+        }),
+    ))
+}
+
+// ---- cluster report (Scenario v2) -----------------------------------------
+
+/// Sparse histogram encoding: fixed geometry up front (`lo_sec`,
+/// `bins_per_decade`), exact `count`/`sum_sec`/`min_sec`/`max_sec`, then
+/// only the non-zero `[index, count]` bins. Mergeable on the client by
+/// summing bins. An empty histogram encodes zeros (never NaN) for the
+/// float fields.
+fn hist_to_json(h: &LogHistogram) -> String {
+    let bins: Vec<String> = h.nonzero_bins().map(|(i, c)| format!("[{i},{c}]")).collect();
+    let (sum, min, max) =
+        if h.count() == 0 { (0.0, 0.0, 0.0) } else { (h.sum(), h.min(), h.max()) };
+    format!(
+        r#"{{"lo_sec":{:e},"bins_per_decade":{},"count":{},"sum_sec":{:e},"min_sec":{:e},"max_sec":{:e},"bins":[{}]}}"#,
+        LogHistogram::LO,
+        LogHistogram::BINS_PER_DECADE,
+        h.count(),
+        sum,
+        min,
+        max,
+        bins.join(",")
+    )
+}
+
+fn hist_from_json(j: &Json) -> Result<LogHistogram> {
+    let arr = j
+        .get("bins")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("histogram needs \"bins\""))?;
+    let mut bins = Vec::with_capacity(arr.len());
+    for row in arr {
+        let p = row
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| anyhow!("histogram bins are [index,count] pairs"))?;
+        let i = p[0]
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .ok_or_else(|| anyhow!("bad histogram bin index"))? as usize;
+        let c = p[1]
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .ok_or_else(|| anyhow!("bad histogram bin count"))? as u64;
+        bins.push((i, c));
+    }
+    LogHistogram::from_parts(
+        &bins,
+        f64_field(j, "sum_sec")?,
+        f64_field(j, "min_sec")?,
+        f64_field(j, "max_sec")?,
+    )
+    .ok_or_else(|| anyhow!("histogram bin index out of range"))
+}
+
+fn summary_to_json(s: &LatencySummary) -> String {
+    format!(
+        r#"{{"count":{},"mean_sec":{:e},"p50_sec":{:e},"p95_sec":{:e},"p99_sec":{:e},"max_sec":{:e}}}"#,
+        s.count, s.mean_sec, s.p50_sec, s.p95_sec, s.p99_sec, s.max_sec
+    )
+}
+
+fn summary_from_json(j: &Json) -> Result<LatencySummary> {
+    Ok(LatencySummary {
+        count: u64_field(j, "count")?,
+        mean_sec: f64_field(j, "mean_sec")?,
+        p50_sec: f64_field(j, "p50_sec")?,
+        p95_sec: f64_field(j, "p95_sec")?,
+        p99_sec: f64_field(j, "p99_sec")?,
+        max_sec: f64_field(j, "max_sec")?,
+    })
+}
+
+fn replica_to_json(r: &ReplicaReport) -> String {
+    format!(
+        r#"{{"completed":{},"steps":{},"prefill_steps":{},"busy_sec":{:e},"utilization":{:e},"peak_kv_tokens":{},"max_batch_seen":{}}}"#,
+        r.completed,
+        r.steps,
+        r.prefill_steps,
+        r.busy_sec,
+        r.utilization,
+        r.peak_kv_tokens,
+        r.max_batch_seen
+    )
+}
+
+fn replica_from_json(j: &Json) -> Result<ReplicaReport> {
+    Ok(ReplicaReport {
+        completed: u64_field(j, "completed")?,
+        steps: u64_field(j, "steps")?,
+        prefill_steps: u64_field(j, "prefill_steps")?,
+        busy_sec: f64_field(j, "busy_sec")?,
+        utilization: f64_field(j, "utilization")?,
+        peak_kv_tokens: u64_field(j, "peak_kv_tokens")?,
+        max_batch_seen: u64_field(j, "max_batch_seen")? as u32,
+    })
+}
+
+fn cluster_report_to_json(r: &ClusterReport) -> String {
+    let reps: Vec<String> = r.replicas.iter().map(replica_to_json).collect();
+    format!(
+        r#"{{"cluster":true,"model":"{}","gpu":"{}","tp":{},"pp":{},"policy":"{}","seed":{},"host_gap_sec":{:e},"offered":{},"completed":{},"makespan_sec":{:e},"generated_tokens":{:e},"tokens_per_sec":{:e},"requests_per_sec":{:e},"ttft":{},"tpot":{},"queue_delay":{},"ttft_hist":{},"tpot_hist":{},"queue_hist":{},"slo":{{"ttft_attainment":{:e},"tpot_attainment":{:e},"attainment":{:e}}},"replicas":[{}],"degraded_kernels":{},"distinct_steps":{},"events":{}}}"#,
+        esc(&r.model),
+        esc(&r.gpu),
+        r.tp,
+        r.pp,
+        r.policy.name(),
+        seed_to_json(r.seed),
+        r.host_gap_sec,
+        r.offered,
+        r.completed,
+        r.makespan_sec,
+        r.generated_tokens,
+        r.tokens_per_sec,
+        r.requests_per_sec,
+        summary_to_json(&r.ttft),
+        summary_to_json(&r.tpot),
+        summary_to_json(&r.queue_delay),
+        hist_to_json(&r.ttft_hist),
+        hist_to_json(&r.tpot_hist),
+        hist_to_json(&r.queue_hist),
+        r.slo_ttft_attainment,
+        r.slo_tpot_attainment,
+        r.slo_attainment,
+        reps.join(","),
+        r.degraded_kernels,
+        r.distinct_steps,
+        r.events
+    )
+}
+
+/// Serialize one cluster simulate result into its wire line (no trailing
+/// newline). The report object leads with `"cluster":true` so clients can
+/// discriminate v2 reports from v1 without schema knowledge.
+pub fn encode_cluster_report(
+    id: Option<&str>,
+    res: &Result<ClusterReport, ScenarioError>,
+) -> String {
+    let mut out = format!("{{\"v\":{PROTOCOL_VERSION}");
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    match res {
+        Ok(r) => out.push_str(&format!(",\"ok\":true,\"report\":{}", cluster_report_to_json(r))),
+        Err(e) => out.push_str(&format!(",\"ok\":false,\"error\":{}", error_to_json(e))),
+    }
+    out.push('}');
+    out
+}
+
+/// Parse one cluster report line back into the typed result — the client
+/// half of the v2 wire, used by round-trip tests and remote tooling.
+pub fn parse_cluster_report(
+    line: &str,
+) -> Result<(Option<String>, Result<ClusterReport, ScenarioError>)> {
+    let j = parse(line)?;
+    let id = id_of(&j);
+    let ok =
+        j.get("ok").and_then(|v| v.as_bool()).ok_or_else(|| anyhow!("response needs \"ok\""))?;
+    if !ok {
+        let err = j.get("error").ok_or_else(|| anyhow!("error response needs \"error\""))?;
+        return Ok((id, Err(error_from_json(err)?)));
+    }
+    let rep = j.get("report").ok_or_else(|| anyhow!("ok response needs a \"report\""))?;
+    if rep.get("cluster").and_then(|v| v.as_bool()) != Some(true) {
+        anyhow::bail!("not a cluster report (missing \"cluster\":true)");
+    }
+    let policy_name = str_field(rep, "policy")?;
+    let policy = RoutePolicy::from_name(&policy_name)
+        .ok_or_else(|| anyhow!("unknown policy {policy_name:?}"))?;
+    let slo = rep.get("slo").ok_or_else(|| anyhow!("cluster report needs \"slo\""))?;
+    let replicas = rep
+        .get("replicas")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("cluster report needs \"replicas\""))?
+        .iter()
+        .map(replica_from_json)
+        .collect::<Result<Vec<ReplicaReport>>>()?;
+    let sub = |key: &str| rep.get(key).ok_or_else(|| anyhow!("cluster report needs {key:?}"));
+    Ok((
+        id,
+        Ok(ClusterReport {
+            model: str_field(rep, "model")?,
+            gpu: str_field(rep, "gpu")?,
+            tp: f64_field(rep, "tp")? as u32,
+            pp: f64_field(rep, "pp")? as u32,
+            policy,
+            seed: seed_from(
+                rep.get("seed").ok_or_else(|| anyhow!("report needs \"seed\""))?,
+                "seed",
+            )?,
+            host_gap_sec: f64_field(rep, "host_gap_sec")?,
+            offered: u64_field(rep, "offered")?,
+            completed: u64_field(rep, "completed")?,
+            makespan_sec: f64_field(rep, "makespan_sec")?,
+            generated_tokens: f64_field(rep, "generated_tokens")?,
+            tokens_per_sec: f64_field(rep, "tokens_per_sec")?,
+            requests_per_sec: f64_field(rep, "requests_per_sec")?,
+            ttft: summary_from_json(sub("ttft")?)?,
+            tpot: summary_from_json(sub("tpot")?)?,
+            queue_delay: summary_from_json(sub("queue_delay")?)?,
+            ttft_hist: hist_from_json(sub("ttft_hist")?)?,
+            tpot_hist: hist_from_json(sub("tpot_hist")?)?,
+            queue_hist: hist_from_json(sub("queue_hist")?)?,
+            slo_ttft_attainment: f64_field(slo, "ttft_attainment")?,
+            slo_tpot_attainment: f64_field(slo, "tpot_attainment")?,
+            slo_attainment: f64_field(slo, "attainment")?,
+            replicas,
+            degraded_kernels: f64_field(rep, "degraded_kernels")? as usize,
+            distinct_steps: f64_field(rep, "distinct_steps")? as usize,
+            events: u64_field(rep, "events")?,
         }),
     ))
 }
@@ -564,5 +1042,111 @@ mod tests {
         ));
         assert!(!is_simulate_request("garbage"));
         assert!(is_simulate_request(r#"{"scenario":{"model":"m","gpu":"g"}}"#));
+        assert!(is_simulate_request(r#"{"cluster":{"model":"m","gpu":"g"}}"#));
+    }
+
+    #[test]
+    fn cluster_requests_round_trip_every_arrival_shape() {
+        let trace = ClusterSpec::new("Llama3.1-8B", "A100")
+            .replicas(2)
+            .policy(RoutePolicy::SessionAffinity)
+            .arrivals(ArrivalSpec::Trace(vec![
+                ClusterRequest { arrival_sec: 0.0, input_len: 1000, output_len: 200, session: 0 },
+                ClusterRequest {
+                    arrival_sec: 0.5,
+                    input_len: 600,
+                    output_len: 100,
+                    session: u64::MAX,
+                },
+            ]))
+            .max_batch(8)
+            .kv_capacity_tokens(65_536)
+            .kv_quant(32)
+            .seed(9)
+            .slo(1.5, 0.1);
+        let poisson = ClusterSpec::new("Qwen2.5-14B", "H800").arrivals(ArrivalSpec::Poisson {
+            rate_rps: 8.0,
+            n: 32,
+            kind: WorkloadKind::Splitwise,
+        });
+        let uniform = ClusterSpec::new("Qwen3-32B", "A100")
+            .policy(RoutePolicy::LeastLoaded)
+            .arrivals(ArrivalSpec::Uniform { gap_sec: 0.25, n: 4, kind: WorkloadKind::Arxiv });
+        for spec in [trace, poisson, uniform] {
+            let line = encode_cluster_request(Some("c"), &spec);
+            assert!(is_simulate_request(&line), "{line}");
+            let (id, parsed) = parse_request_line(&line);
+            assert_eq!(id.as_deref(), Some("c"));
+            assert_eq!(parsed.unwrap(), SimulateRequest::Cluster(spec), "round trip of {line}");
+        }
+    }
+
+    #[test]
+    fn request_parser_still_speaks_v1_shapes() {
+        let spec = ScenarioSpec::new("Qwen2.5-14B", "A100").tp(2);
+        let line = encode_simulate_request(Some("s"), &spec);
+        let (_, parsed) = parse_request_line(&line);
+        assert_eq!(parsed.unwrap(), SimulateRequest::Scenario(spec));
+        // bare objects stay scenario unless wrapped in "cluster"
+        let (_, bare) = parse_request_line(r#"{"model":"Qwen2.5-14B","gpu":"A100"}"#);
+        assert!(matches!(bare.unwrap(), SimulateRequest::Scenario(_)));
+        let (_, wrapped) = parse_request_line(r#"{"cluster":{"model":"m","gpu":"g"}}"#);
+        assert!(matches!(wrapped.unwrap(), SimulateRequest::Cluster(_)));
+    }
+
+    #[test]
+    fn cluster_reports_round_trip_over_the_wire() {
+        let sim = crate::scenario::Simulator::degraded();
+        let spec = ClusterSpec::new("Llama3.1-8B", "A100")
+            .replicas(2)
+            .arrivals(ArrivalSpec::Trace(vec![
+                ClusterRequest { arrival_sec: 0.0, input_len: 128, output_len: 8, session: 0 },
+                ClusterRequest { arrival_sec: 0.001, input_len: 96, output_len: 1, session: 1 },
+            ]))
+            .kv_capacity_tokens(4096);
+        let res = sim.simulate_cluster(&spec);
+        assert!(res.is_ok());
+        let line = encode_cluster_report(Some("c1"), &res);
+        assert!(line.contains(r#""cluster":true"#), "{line}");
+        let (id, back) = parse_cluster_report(&line).unwrap();
+        assert_eq!(id.as_deref(), Some("c1"));
+        let back = back.unwrap();
+        assert_eq!(back, res.unwrap(), "typed round trip of {line}");
+        // re-encoding the parsed report is byte-identical (canonical form)
+        assert_eq!(encode_cluster_report(Some("c1"), &Ok(back)), line);
+    }
+
+    #[test]
+    fn cluster_errors_ride_the_closed_taxonomy() {
+        let sim = crate::scenario::Simulator::degraded();
+        let res = sim.simulate_cluster(&ClusterSpec::new("Llama3.1-8B", "A100").replicas(0));
+        let line = encode_cluster_report(None, &res);
+        assert!(line.contains(r#""code":"invalid_cluster""#), "{line}");
+        let (_, back) = parse_cluster_report(&line).unwrap();
+        assert!(matches!(back.unwrap_err(), ScenarioError::InvalidCluster(_)));
+        // malformed cluster objects keep the malformed_spec bucket
+        let (_, parsed) = parse_request_line(r#"{"cluster":{"gpu":"A100"}}"#);
+        assert_eq!(parsed.unwrap_err().code(), "malformed_spec");
+        let (_, parsed) =
+            parse_request_line(r#"{"cluster":{"model":"m","gpu":"g","policy":"random"}}"#);
+        assert_eq!(parsed.unwrap_err().code(), "invalid_cluster");
+        let (_, parsed) =
+            parse_request_line(r#"{"cluster":{"model":"m","gpu":"g","arrivals":{"burst":{}}}}"#);
+        assert_eq!(parsed.unwrap_err().code(), "malformed_spec");
+    }
+
+    #[test]
+    fn empty_histograms_encode_zeros_not_nan() {
+        let h = LogHistogram::new();
+        let line = hist_to_json(&h);
+        assert!(!line.contains("NaN") && !line.contains("null"), "{line}");
+        let back = hist_from_json(&parse(&line).unwrap()).unwrap();
+        assert_eq!(back, h);
+        let mut h = LogHistogram::new();
+        h.insert(0.002);
+        h.insert(0.75);
+        let back = hist_from_json(&parse(&hist_to_json(&h)).unwrap()).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(back.percentile(50.0), h.percentile(50.0));
     }
 }

@@ -61,12 +61,32 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
-    /// Uniform integer in [lo, hi] (inclusive).
+    /// Uniform integer in [lo, hi] (inclusive). Spans that fit the f64
+    /// mantissa (≤ 2^53) keep the original float path bit-for-bit, so every
+    /// pinned sampled stream (proptest seeds, golden traces) is unchanged.
+    /// Wider spans take an unbiased masked-rejection integer path instead:
+    /// the old `hi - lo + 1` overflowed at `(0, u64::MAX)` (panic in debug,
+    /// span 0 in release) and the f64 round-trip collapses/biases values
+    /// beyond 2^53.
     pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
         debug_assert!(lo <= hi);
-        let span = hi - lo + 1;
-        let v = (self.f64() * span as f64) as u64;
-        lo + v.min(span - 1)
+        let span = (hi - lo).wrapping_add(1); // 0 encodes the full u64 range
+        if span != 0 && span <= (1u64 << 53) {
+            let v = (self.f64() * span as f64) as u64;
+            return lo + v.min(span - 1);
+        }
+        if span == 0 {
+            return self.next_u64();
+        }
+        // masked rejection: draw span.next_power_of_two()-sized words and
+        // keep the first below span — expected < 2 draws per call
+        let mask = u64::MAX >> span.leading_zeros();
+        loop {
+            let v = self.next_u64() & mask;
+            if v < span {
+                return lo.wrapping_add(v);
+            }
+        }
     }
 
     pub fn range_u32(&mut self, lo: u32, hi: u32) -> u32 {
@@ -91,6 +111,14 @@ impl Rng {
         let h = (hi as f64).ln();
         let v = self.range_f64(l, h).exp().round() as u32;
         v.clamp(lo, hi)
+    }
+
+    /// Exponential variate with the given rate (events/sec) — the
+    /// inter-arrival gap of the cluster simulator's Poisson process.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        // 1 - f64() is in (0, 1], so ln() is finite and the gap >= 0
+        -(1.0 - self.f64()).ln() / rate
     }
 
     /// Standard normal via Box-Muller.
@@ -175,6 +203,75 @@ mod tests {
         }
         assert!(small > 200, "log sampling should hit small values: {small}");
         assert!(large > 200, "log sampling should hit large values: {large}");
+    }
+
+    #[test]
+    fn range_u64_narrow_spans_keep_the_pinned_float_path() {
+        // the wide-span fix must not move a single draw for spans <= 2^53 —
+        // replay the pre-fix formula against a cloned stream
+        let mut fixed = Rng::new(99);
+        let mut replay = fixed.clone();
+        for (lo, hi) in [(0u64, 0u64), (3, 9), (0, (1 << 53) - 1), (7, 7 + (1 << 53) - 1)] {
+            for _ in 0..200 {
+                let span = hi - lo + 1;
+                let old = {
+                    let v = (replay.f64() * span as f64) as u64;
+                    lo + v.min(span - 1)
+                };
+                assert_eq!(fixed.range_u64(lo, hi), old, "float path drifted at ({lo}, {hi})");
+            }
+        }
+    }
+
+    #[test]
+    fn range_u64_full_span_no_longer_overflows() {
+        // pre-fix: hi - lo + 1 overflowed (debug panic / span 0 in release)
+        let mut r = Rng::new(6);
+        let mut high_half = 0;
+        for _ in 0..1_000 {
+            let v = r.range_u64(0, u64::MAX);
+            if v > u64::MAX / 2 {
+                high_half += 1;
+            }
+        }
+        assert!((300..=700).contains(&high_half), "full-span draws skewed: {high_half}");
+    }
+
+    #[test]
+    fn range_u64_wide_spans_stay_in_bounds_and_reach_past_2p53() {
+        // pre-fix the f64 round-trip could neither represent nor fairly
+        // reach offsets beyond 2^53
+        let (lo, hi) = (5u64, 5 + (1 << 60));
+        let mut r = Rng::new(7);
+        let mut beyond = 0;
+        for _ in 0..1_000 {
+            let v = r.range_u64(lo, hi);
+            assert!((lo..=hi).contains(&v));
+            if v - lo > (1 << 53) {
+                beyond += 1;
+            }
+        }
+        // P(v - lo <= 2^53) = 2^-7 per draw, so ~992 of 1000 land beyond
+        assert!(beyond > 900, "wide span rarely passes 2^53: {beyond}");
+        // an exact-boundary wide case: [u64::MAX - 1, u64::MAX]
+        for _ in 0..100 {
+            let v = r.range_u64(u64::MAX - 1, u64::MAX);
+            assert!(v >= u64::MAX - 1);
+        }
+    }
+
+    #[test]
+    fn exponential_gaps_are_nonnegative_with_the_right_mean() {
+        let mut r = Rng::new(8);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let g = r.exponential(2.0);
+            assert!(g >= 0.0 && g.is_finite());
+            sum += g;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean gap {mean}, want ~0.5");
     }
 
     #[test]

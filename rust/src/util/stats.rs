@@ -3,20 +3,25 @@
 //! plus small fitting utilities.
 
 /// Mean Absolute Percentage Error (%), the paper's headline metric.
+/// The denominator clamp works on |actual| so a negative actual (signed
+/// residuals, deltas) keeps its magnitude instead of collapsing to 1e-12
+/// and exploding the reported error.
 pub fn mape(pred: &[f64], actual: &[f64]) -> f64 {
     assert_eq!(pred.len(), actual.len());
     assert!(!pred.is_empty());
     let s: f64 = pred
         .iter()
         .zip(actual)
-        .map(|(p, a)| ((p - a) / a.max(1e-12)).abs())
+        .map(|(p, a)| ((p - a) / a.abs().max(1e-12)).abs())
         .sum();
     100.0 * s / pred.len() as f64
 }
 
 /// Signed relative error (%) — used by Fig. 7 to show over/under-estimation.
+/// |actual| in the denominator preserves the sign convention (positive =
+/// over-estimate) for negative actuals too.
 pub fn signed_rel_err(pred: f64, actual: f64) -> f64 {
-    100.0 * (pred - actual) / actual.max(1e-12)
+    100.0 * (pred - actual) / actual.abs().max(1e-12)
 }
 
 pub fn mean(xs: &[f64]) -> f64 {
@@ -33,11 +38,15 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
-/// Linear-interpolated percentile, q in [0, 100].
+/// Linear-interpolated percentile, q in [0, 100]. Empty input yields NaN
+/// (like `mean`); NaN elements sort last via `total_cmp` instead of
+/// panicking the comparator.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return f64::NAN;
+    }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -50,7 +59,6 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 
 pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
     assert_eq!(xs.len(), ys.len());
-    let n = xs.len() as f64;
     let mx = mean(xs);
     let my = mean(ys);
     let mut cov = 0.0;
@@ -61,18 +69,179 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
         vx += (x - mx) * (x - mx);
         vy += (y - my) * (y - my);
     }
-    cov / (vx.sqrt() * vy.sqrt()).max(1e-300) * (n / n)
+    cov / (vx.sqrt() * vy.sqrt()).max(1e-300)
 }
 
 /// CDF sample points (sorted values with cumulative fraction) for Fig. 8.
 pub fn cdf(xs: &[f64]) -> Vec<(f64, f64)> {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len() as f64;
     v.into_iter()
         .enumerate()
         .map(|(i, x)| (x, (i + 1) as f64 / n))
         .collect()
+}
+
+/// Fixed-bin mergeable latency histogram on a logarithmic grid: 20 bins per
+/// decade over [1 µs, 10 ks), 200 bins total. Bin layout is a compile-time
+/// constant, so histograms built on different replicas (or different runs)
+/// merge by adding counts and aggregate reports stay byte-deterministic —
+/// identical insert multisets always produce identical bins regardless of
+/// insert order or thread count. Values below the grid (including 0 and
+/// NaN) land in bin 0; values above it land in the last bin; exact
+/// count/sum/min/max are carried alongside so the tails stay sharp.
+/// Percentile estimates are bin-resolution: each bin spans a factor of
+/// 10^(1/20) ≈ 12 %.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// Lower edge of the grid, seconds.
+    pub const LO: f64 = 1e-6;
+    pub const BINS_PER_DECADE: usize = 20;
+    pub const DECADES: usize = 10;
+    pub const NUM_BINS: usize = Self::BINS_PER_DECADE * Self::DECADES;
+
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            counts: vec![0; Self::NUM_BINS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bin_of(v: f64) -> usize {
+        if !(v > Self::LO) {
+            // underflow — and NaN, which fails every comparison
+            return 0;
+        }
+        let idx = ((v / Self::LO).log10() * Self::BINS_PER_DECADE as f64).floor() as isize;
+        idx.clamp(0, Self::NUM_BINS as isize - 1) as usize
+    }
+
+    /// Upper edge of bin `i` — what the percentile estimator reports.
+    fn bin_hi(i: usize) -> f64 {
+        Self::LO * 10f64.powf((i + 1) as f64 / Self::BINS_PER_DECADE as f64)
+    }
+
+    pub fn insert(&mut self, v: f64) {
+        self.counts[Self::bin_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.max
+    }
+
+    /// Nearest-rank percentile at bin resolution: the upper edge of the bin
+    /// holding the ⌈q/100·n⌉-th ranked sample, clamped into [min, max] so
+    /// the extremes are exact. q ≤ 0 returns the exact min, q ≥ 100 the
+    /// exact max; the empty histogram returns NaN.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 100.0 {
+            return self.max;
+        }
+        let rank = ((q / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                // max().min() rather than clamp(): a histogram fed only
+                // NaN keeps min=+inf/max=-inf, and clamp would panic
+                return Self::bin_hi(i).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Sparse view for serialization: (bin index, count) for occupied bins,
+    /// in index order.
+    pub fn nonzero_bins(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+    }
+
+    /// Rebuild from a sparse serialization. Returns None on an out-of-range
+    /// bin index. An empty bin set yields the canonical empty histogram
+    /// (whatever min/max the wire carried).
+    pub fn from_parts(bins: &[(usize, u64)], sum: f64, min: f64, max: f64) -> Option<LogHistogram> {
+        let mut h = LogHistogram::new();
+        for &(i, c) in bins {
+            if i >= Self::NUM_BINS {
+                return None;
+            }
+            h.counts[i] += c;
+            h.count += c;
+        }
+        if h.count > 0 {
+            h.sum = sum;
+            h.min = min;
+            h.max = max;
+        }
+        Some(h)
+    }
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Ordinary least squares for small systems: solves X^T X beta = X^T y via
@@ -193,5 +362,123 @@ mod tests {
         assert_eq!(c[0].0, 1.0);
         assert!((c[2].1 - 1.0).abs() < 1e-12);
         assert!(c.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 <= w[1].1));
+    }
+
+    // --- regression tests for the PR-6 bugfix batch ---
+
+    #[test]
+    fn mape_handles_negative_actuals() {
+        // pre-fix: a.max(1e-12) clamped -2.0 to 1e-12 and the error blew up
+        // to ~1e14 %; |actual| keeps it at the true 50 %
+        let m = mape(&[-1.0], &[-2.0]);
+        assert!((m - 50.0).abs() < 1e-9, "mape on negative actual: {m}");
+        // zero actual still falls back to the epsilon clamp, not a division
+        // by zero
+        assert!(mape(&[1.0], &[0.0]).is_finite());
+    }
+
+    #[test]
+    fn signed_rel_err_keeps_sign_convention_for_negative_actuals() {
+        // pred above actual must read as over-estimation regardless of the
+        // actual's sign; pre-fix the clamped denominator flipped/blew it up
+        let e = signed_rel_err(-1.0, -2.0);
+        assert!((e - 50.0).abs() < 1e-9, "over-estimate of a negative actual: {e}");
+        let e = signed_rel_err(-3.0, -2.0);
+        assert!((e + 50.0).abs() < 1e-9, "under-estimate of a negative actual: {e}");
+    }
+
+    #[test]
+    fn percentile_empty_is_nan_not_a_panic() {
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_and_cdf_tolerate_nan_input() {
+        // pre-fix: partial_cmp().unwrap() panicked inside sort on any NaN
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        // total_cmp sorts NaN last, so low quantiles are still meaningful
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        let c = cdf(&xs);
+        assert_eq!(c[0].0, 1.0);
+        assert!(c[3].0.is_nan());
+    }
+
+    #[test]
+    fn pearson_unchanged_by_dead_term_removal() {
+        // the `* (n / n)` factor was exactly 1 for every non-empty input;
+        // removing it must not move the statistic
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let ys = [3.0, 1.0, 4.0, 1.0];
+        let r = pearson(&xs, &ys);
+        assert!((-1.0..=1.0).contains(&r));
+        assert!((r - pearson(&ys, &xs)).abs() < 1e-12, "symmetry");
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_exact_ones() {
+        let mut h = LogHistogram::new();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 1e-3).collect();
+        for &x in &xs {
+            h.insert(x);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - mean(&xs)).abs() < 1e-9);
+        assert_eq!(h.min(), 1e-3);
+        assert_eq!(h.max(), 1.0);
+        for q in [50.0, 95.0, 99.0] {
+            let exact = percentile(&xs, q);
+            let est = h.percentile(q);
+            // one log bin is a 10^(1/20) ≈ 1.122x span; the estimate sits at
+            // the bin's upper edge, so it is ≥ exact and within ~12.3 %
+            assert!(est >= exact * 0.999, "p{q}: est {est} < exact {exact}");
+            assert!(est <= exact * 1.123, "p{q}: est {est} too far above exact {exact}");
+        }
+        assert_eq!(h.percentile(0.0), 1e-3);
+        assert_eq!(h.percentile(100.0), 1.0);
+    }
+
+    #[test]
+    fn histogram_merge_equals_bulk_insert() {
+        let (mut a, mut b, mut whole) = (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+        for i in 0..500 {
+            let v = 1e-5 * (1.0 + i as f64);
+            if i % 2 == 0 {
+                a.insert(v);
+            } else {
+                b.insert(v);
+            }
+            whole.insert(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole, "merge must equal the bulk-inserted histogram");
+    }
+
+    #[test]
+    fn histogram_edges_and_empty() {
+        let h = LogHistogram::new();
+        assert!(h.percentile(50.0).is_nan());
+        assert!(h.mean().is_nan());
+        let mut h = LogHistogram::new();
+        h.insert(0.0); // below the grid -> bin 0
+        h.insert(1e9); // above the grid -> last bin
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e9);
+        // clamped into [min, max] even though the bins saturate
+        assert_eq!(h.percentile(100.0), 1e9);
+        assert_eq!(h.percentile(0.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_sparse_roundtrip() {
+        let mut h = LogHistogram::new();
+        for v in [3e-4, 2.5e-1, 2.5e-1, 7.0] {
+            h.insert(v);
+        }
+        let bins: Vec<(usize, u64)> = h.nonzero_bins().collect();
+        assert!(bins.len() <= 3);
+        let back = LogHistogram::from_parts(&bins, h.sum(), h.min(), h.max()).unwrap();
+        assert_eq!(back, h);
+        assert!(LogHistogram::from_parts(&[(LogHistogram::NUM_BINS, 1)], 0.0, 0.0, 0.0).is_none());
     }
 }

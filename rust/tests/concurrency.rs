@@ -188,3 +188,54 @@ fn parallel_evaluator_is_byte_identical_across_thread_counts() {
     assert_eq!(lines[0], lines[1], "2-thread report drifted from 1-thread");
     assert_eq!(lines[0], lines[2], "7-thread report drifted from 1-thread");
 }
+
+#[test]
+fn cluster_simulation_is_byte_identical_across_thread_counts() {
+    // Scenario v2's contract: the event loop is serial and threads only
+    // fan out the per-step batched predictions, so the whole cluster
+    // report — histograms, percentiles, SLO attainment, per-replica
+    // accounting — must not move by a byte between 1, 2 and 7 threads,
+    // even while other threads hammer the shared global engine cache
+    use synperf::scenario::{ArrivalSpec, ClusterSpec, RoutePolicy};
+    let spec = ClusterSpec::new("Llama3.1-8B", "A100")
+        .replicas(2)
+        .policy(RoutePolicy::LeastLoaded)
+        .arrivals(ArrivalSpec::Poisson { rate_rps: 16.0, n: 12, kind: WorkloadKind::Arxiv })
+        .max_batch(8)
+        .kv_capacity_tokens(1 << 17)
+        .seed(5);
+    let sim = Simulator::degraded();
+    let lines: Vec<String> = std::thread::scope(|s| {
+        let hammer: Vec<_> = (0..4u32)
+            .map(|t| {
+                s.spawn(move || {
+                    let gpu = gpu_by_name("A100").unwrap();
+                    for i in 0..64u32 {
+                        let cfg =
+                            KernelConfig::RmsNorm { seq: 6000 + (i % 16), dim: 1024 + t };
+                        assert!(
+                            PredictionEngine::global().analyze(&cfg, &gpu).theory_sec() > 0.0
+                        );
+                    }
+                })
+            })
+            .collect();
+        let lines = [1usize, 2, 7]
+            .iter()
+            .map(|&t| {
+                scenario_wire::encode_cluster_report(
+                    None,
+                    &sim.simulate_cluster_with_threads(&spec, t),
+                )
+            })
+            .collect();
+        for h in hammer {
+            h.join().unwrap();
+        }
+        lines
+    });
+    assert!(lines[0].contains("\"ok\":true"), "simulation must succeed: {}", lines[0]);
+    assert!(lines[0].contains("\"cluster\":true"));
+    assert_eq!(lines[0], lines[1], "2-thread cluster report drifted from 1-thread");
+    assert_eq!(lines[0], lines[2], "7-thread cluster report drifted from 1-thread");
+}

@@ -656,3 +656,105 @@ fn scenario_reports_match_the_handbuilt_trace_reference() {
         }
     }
 }
+
+// ---- Scenario v2: cluster simulation -------------------------------------
+
+use synperf::scenario::{ArrivalSpec, ClusterRequest, ClusterSpec, RoutePolicy};
+
+/// The tentpole determinism contract: a cluster simulation's encoded JSONL
+/// report is **byte-identical** across thread counts, across repeated runs
+/// in one process (warm per-GPU comm-model and engine caches), and across
+/// routing policies' own reruns. Seeded arrival generation is covered by
+/// sweeping seeds.
+#[test]
+fn cluster_reports_are_byte_identical_across_threads_and_runs() {
+    let sim = Simulator::degraded();
+    for seed in [0u64, 0xDEAD_BEEF] {
+        for policy in
+            [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::SessionAffinity]
+        {
+            let spec = ClusterSpec::new("Llama3.1-8B", "A100")
+                .replicas(3)
+                .policy(policy)
+                .arrivals(ArrivalSpec::Poisson {
+                    rate_rps: 32.0,
+                    n: 24,
+                    kind: synperf::e2e::workload::WorkloadKind::Splitwise,
+                })
+                .max_batch(8)
+                .kv_capacity_tokens(1 << 17)
+                .seed(seed);
+            let mut lines: Vec<String> = Vec::new();
+            for threads in [1usize, 2, 7] {
+                for _run in 0..2 {
+                    let report = sim.simulate_cluster_with_threads(&spec, threads).unwrap();
+                    assert_eq!(report.completed, 24);
+                    lines.push(synperf::scenario::wire::encode_cluster_report(
+                        None,
+                        &Ok(report),
+                    ));
+                }
+            }
+            assert!(
+                lines.windows(2).all(|w| w[0] == w[1]),
+                "policy {} seed {seed}: cluster JSONL must be byte-identical across \
+                 thread counts and runs",
+                policy.name()
+            );
+        }
+    }
+}
+
+/// Golden two-replica scenario over a deterministic trace: every field
+/// that is exactly computable without the predictor's numbers is pinned
+/// (conservation, routing distribution, histogram counts, SLO extremes),
+/// and the predictor-dependent fields are sanity-bounded.
+#[test]
+fn two_replica_trace_scenario_pins_its_exact_fields() {
+    let sim = Simulator::degraded();
+    let trace: Vec<ClusterRequest> = (0..6u32)
+        .map(|i| ClusterRequest {
+            arrival_sec: i as f64 * 0.01,
+            input_len: 64 + 32 * i,
+            output_len: 4 + i,
+            session: i as u64,
+        })
+        .collect();
+    let spec = ClusterSpec::new("Llama3.1-8B", "A100")
+        .replicas(2)
+        .arrivals(ArrivalSpec::Trace(trace))
+        .max_batch(4)
+        .kv_capacity_tokens(4096)
+        .seed(11);
+    let r = sim.simulate_cluster(&spec).unwrap();
+    assert_eq!(r.offered, 6);
+    assert_eq!(r.completed, 6);
+    // round-robin: arrivals 0,2,4 on replica 0; 1,3,5 on replica 1
+    assert_eq!(r.replicas.len(), 2);
+    assert_eq!(r.replicas[0].completed, 3);
+    assert_eq!(r.replicas[1].completed, 3);
+    // outputs 4..=9 sum to 39 generated tokens
+    assert_eq!(r.generated_tokens, 39.0);
+    // one TTFT and one queue-delay sample per request; every request
+    // generates > 1 token so TPOT is recorded for all six
+    assert_eq!(r.ttft.count, 6);
+    assert_eq!(r.ttft_hist.count(), 6);
+    assert_eq!(r.tpot.count, 6);
+    assert_eq!(r.queue_delay.count, 6);
+    assert!(r.makespan_sec.is_finite() && r.makespan_sec > 0.05);
+    assert!(r.ttft.p50_sec > 0.0 && r.ttft.p99_sec >= r.ttft.p50_sec);
+    assert!(r.events >= 12, "at least arrival + one step per request");
+    for rep in &r.replicas {
+        assert!(rep.peak_kv_tokens <= 4096);
+        assert!(rep.max_batch_seen <= 4);
+        assert!(rep.utilization >= 0.0 && rep.utilization <= 1.0 + 1e-9);
+    }
+    // SLO extremes bracket the attainment fields exactly
+    let lax = sim.simulate_cluster(&spec.clone().slo(1e6, 1e6)).unwrap();
+    assert_eq!(lax.slo_attainment, 1.0);
+    let strict = sim.simulate_cluster(&spec.clone().slo(1e-12, 1e-12)).unwrap();
+    assert_eq!(strict.slo_attainment, 0.0);
+    // the latency summaries derive from the shipped histograms
+    assert_eq!(r.ttft.p95_sec, r.ttft_hist.percentile(95.0));
+    assert_eq!(r.queue_delay.p50_sec, r.queue_hist.percentile(50.0));
+}

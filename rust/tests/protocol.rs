@@ -368,6 +368,10 @@ fn scenario_error_golden_lines_cover_the_whole_taxonomy() {
             ScenarioError::MalformedSpec("simulate request needs a \"scenario\" object".to_string()),
             r#"{"v":1,"ok":false,"error":{"code":"malformed_spec","message":"malformed scenario spec: simulate request needs a \"scenario\" object","reason":"simulate request needs a \"scenario\" object"}}"#,
         ),
+        (
+            ScenarioError::InvalidCluster("replicas must be in 1..=64, got 0".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"invalid_cluster","message":"invalid cluster: replicas must be in 1..=64, got 0","reason":"replicas must be in 1..=64, got 0"}}"#,
+        ),
     ];
     for (err, golden) in cases {
         let line = scenario_wire::encode_report(None, &Err(err.clone()));
