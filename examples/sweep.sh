@@ -1,0 +1,89 @@
+#!/usr/bin/env bash
+# Drive the hardware-sweep surface from a clean checkout, four ways:
+#  1. `synperf sweep --spec -`: a small 3-GPU x 2-tp grid over a scenario
+#     and a cluster workload — streamed JSONL rows (infeasible points as
+#     typed error rows, not aborts), a frontier line, and a byte-identity
+#     diff of stdout at --threads 1 vs --threads 8;
+#  2. the acceptance grid: all 11 registry GPUs x tp {1,2} x replicas
+#     {1,2} x 2 workloads = 88 points through one spec line;
+#  3. spec-level errors: an unknown GPU aborts before any row, with
+#     nearest-name suggestions in the message;
+#  4. the same sweep request over `serve --stdio` (rows + frontier embed
+#     in one response line), plus `synperf gpus` listing the registry.
+# Without trained artifacts everything answers in degraded roofline mode.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+RUN="cargo run --release --quiet --bin synperf --"
+
+# 1. small grid: 2 workloads x 3 GPUs x tp {1,3} = 12 rows; tp=3 does not
+# divide llama3.1-8b's 32 attention heads, so half the grid is infeasible
+SMALL='{"v":1,"id":"sw1","op":"sweep","sweep":{"gpus":["A100","H800","L20"],"tp":[1,3],"workloads":[{"name":"chat","scenario":{"model":"llama3.1-8b","workload":{"requests":[[64,4]]},"seed":3}},{"name":"batch","cluster":{"model":"llama3.1-8b","arrivals":{"trace":[[0.0,64,8],[0.01,96,8]]},"max_batch":4,"kv_capacity_tokens":4096,"seed":7}}]}}'
+
+T1=$(printf '%s\n' "$SMALL" | $RUN sweep --spec - --threads 1 --json)
+T8=$(printf '%s\n' "$SMALL" | $RUN sweep --spec - --threads 8 --json)
+printf '%s\n' "$T1"
+
+lines=$(printf '%s\n' "$T1" | wc -l | tr -d ' ')
+[ "$lines" -eq 13 ] || { echo "FAIL: expected 12 rows + 1 frontier line, got $lines"; exit 1; }
+rows_ok=$(printf '%s\n' "$T1" | grep -c '"row":{.*"ok":true' || true)
+rows_err=$(printf '%s\n' "$T1" | grep -c '"row":{.*"ok":false' || true)
+[ "$rows_ok" -eq 6 ] || { echo "FAIL: expected 6 feasible rows, got $rows_ok"; exit 1; }
+[ "$rows_err" -eq 6 ] || { echo "FAIL: expected 6 infeasible rows, got $rows_err"; exit 1; }
+printf '%s\n' "$T1" | grep '"ok":false' | grep -q '"code":"invalid_parallelism"' \
+  || { echo "FAIL: infeasible points must carry the typed ScenarioError"; exit 1; }
+printf '%s\n' "$T1" | tail -1 | grep -q '"frontier":\[{"rank":1,' \
+  || { echo "FAIL: frontier line missing or unranked"; exit 1; }
+printf '%s\n' "$T1" | tail -1 | grep -q '"dominated":\[' \
+  || { echo "FAIL: dominated-by annotations missing"; exit 1; }
+
+# the sweep contract: stdout (rows + frontier) is byte-identical across
+# thread counts — work stealing may reorder evaluation, never output
+[ "$T1" = "$T8" ] \
+  || { echo "FAIL: sweep rows must be byte-identical across --threads 1 vs 8"; exit 1; }
+
+# 2. the acceptance grid: the whole registry x tp {1,2} x replicas {1,2}
+# x 2 workloads = 88 points (>= 50), every one feasible, one spec line
+BIG='{"gpus":"all","tp":[1,2],"replicas":[1,2],"workloads":[{"name":"chat","scenario":{"model":"llama3.1-8b","workload":{"requests":[[64,4]]},"seed":3}},{"name":"long","scenario":{"model":"llama3.1-8b","workload":{"requests":[[96,8]]},"seed":5}}]}'
+BIG_OUT=$(printf '%s\n' "$BIG" | $RUN sweep --spec - --threads 8 --json)
+big_rows=$(printf '%s\n' "$BIG_OUT" | grep -c '"row":{' || true)
+[ "$big_rows" -eq 88 ] || { echo "FAIL: expected 88 grid rows, got $big_rows"; exit 1; }
+big_ok=$(printf '%s\n' "$BIG_OUT" | grep -c '"ok":true' || true)
+[ "$big_ok" -eq 88 ] || { echo "FAIL: all 88 points should be feasible, got $big_ok"; exit 1; }
+# unseen (held-out) GPUs sweep alongside the training split
+printf '%s\n' "$BIG_OUT" | grep -q '"gpu":"RTX PRO 6000 S"' \
+  || { echo "FAIL: held-out GPUs missing from the all-registry sweep"; exit 1; }
+printf '%s\n' "$BIG_OUT" | tail -1 | grep -q '"frontier":\[{"rank":1,' \
+  || { echo "FAIL: acceptance-grid frontier missing"; exit 1; }
+
+# 3. spec-level errors abort before any row, with nearest-name hints
+ERR_OUT=$(printf '%s\n' '{"id":"bad","gpus":["B300"],"workloads":[{"scenario":{"model":"llama3.1-8b"}}]}' \
+  | $RUN sweep --spec - --json)
+[ "$(printf '%s\n' "$ERR_OUT" | wc -l | tr -d ' ')" -eq 1 ] \
+  || { echo "FAIL: spec-level error must be exactly one line"; exit 1; }
+printf '%s\n' "$ERR_OUT" | grep -q '"id":"bad","ok":false,"error":{"code":"unknown_gpu"' \
+  || { echo "FAIL: unknown_gpu spec error missing"; exit 1; }
+printf '%s\n' "$ERR_OUT" | grep -q 'closest: A100, H800, H100' \
+  || { echo "FAIL: nearest-name suggestions missing from unknown_gpu"; exit 1; }
+
+# 4a. the same request over the stdio wire: one response line embedding
+# rows + frontier, interleaved with the predict verb
+WIRE_OUT=$(printf '%s\n' \
+  '{"v":1,"id":"p1","gpu":"A100","kernel":{"type":"gemm","m":512,"n":512,"k":512}}' \
+  "$SMALL" \
+  | $RUN serve --stdio --queue-cap 64)
+printf '%s\n' "$WIRE_OUT" | grep -q '"id":"p1","ok":true' \
+  || { echo "FAIL: predict verb broken next to sweep"; exit 1; }
+printf '%s\n' "$WIRE_OUT" | grep '"id":"sw1"' | grep -q '"ok":true,"sweep":{"rows":\[' \
+  || { echo "FAIL: stdio sweep response missing embedded rows"; exit 1; }
+printf '%s\n' "$WIRE_OUT" | grep '"id":"sw1"' | grep -q '"frontier":\[' \
+  || { echo "FAIL: stdio sweep response missing frontier"; exit 1; }
+
+# 4b. the registry listing sweep specs are authored against
+GPUS_OUT=$($RUN gpus)
+printf '%s\n' "$GPUS_OUT" | grep -q '11 GPUs: 6 seen (training split), 5 unseen (held out)' \
+  || { echo "FAIL: gpus verb must summarize the 6/5 registry split"; exit 1; }
+printf '%s\n' "$GPUS_OUT" | grep -q 'RTX PRO 6000 S' \
+  || { echo "FAIL: gpus verb must list the Blackwell part"; exit 1; }
+
+echo "sweep: all assertions passed"

@@ -6,6 +6,7 @@
 //!   oracle measurement                  (dataset generation throughput)
 //!   scenario compile                    (ScenarioSpec -> phase-tagged op streams)
 //!   scenario evaluate                   (two-pass parallel, 1 vs 8 threads)
+//!   sweep grid expand + run             (fleet search: points/sec, 2 vs 4 workers)
 //!   protocol batch routing              (predictions/sec through api::predict_batch)
 //!   native MLP forward                  (artifact-free fallback path, serial + par)
 //!   MLP forward via PJRT (b1 / b256 / b1024)
@@ -274,6 +275,57 @@ fn run_benches(h: &mut Harness, smoke: bool) {
                 cluster_events as f64 / (r.median_ns * 1e-9)
             );
         }
+    }
+
+    println!("\n== sweep grid (fleet-scale hardware search) ==");
+    // the 88-point acceptance grid — whole registry x tp {1,2} x replicas
+    // {1,2} x 2 workloads; expand is pure validation + cross-product, so
+    // it must stay negligible next to evaluating even one grid point
+    let chat = synperf::scenario::ScenarioSpec::new("Llama3.1-8B", "A100").workload(
+        synperf::scenario::WorkloadSpec::Explicit(vec![synperf::e2e::workload::Request {
+            input_len: 64,
+            output_len: 4,
+        }]),
+    );
+    let long = synperf::scenario::ScenarioSpec::new("Llama3.1-8B", "A100")
+        .workload(synperf::scenario::WorkloadSpec::Explicit(vec![
+            synperf::e2e::workload::Request { input_len: 96, output_len: 8 },
+        ]))
+        .seed(5);
+    let grid_spec = synperf::sweep::SweepSpec::new()
+        .tp(vec![1, 2])
+        .replicas(vec![1, 2])
+        .scenario("chat", chat.clone())
+        .scenario("long", long);
+    let grid_points = synperf::sweep::expand(&grid_spec).unwrap().len();
+    h.run(&format!("sweep/grid expand {grid_points}pt"), 200, 20, || {
+        black_box(synperf::sweep::expand(&grid_spec).unwrap());
+    });
+    if let Some(r) = h.results.last() {
+        println!(
+            "  -> {:.0} points/sec at the median",
+            grid_points as f64 / (r.median_ns * 1e-9)
+        );
+    }
+    // a sweep end to end: work-stealing workers with per-worker simulators
+    // over a 4-point grid; rows are byte-identical at any thread count
+    // (pinned in src/sweep/runner.rs), so threads is a wall-clock-only knob
+    let run_spec = synperf::sweep::SweepSpec::new()
+        .gpus(synperf::sweep::GpuFilter::Named(vec!["A100".into(), "H800".into()]))
+        .tp(vec![1, 2])
+        .scenario("chat", chat);
+    for threads in [2usize, 4] {
+        h.run(&format!("sweep/run 4pt {threads}thread"), 300, 3, || {
+            black_box(
+                synperf::sweep::run_sweep(
+                    &run_spec,
+                    synperf::scenario::Simulator::degraded,
+                    threads,
+                    |_| {},
+                )
+                .unwrap(),
+            );
+        });
     }
 
     println!("\n== protocol batch routing ==");

@@ -254,7 +254,11 @@ impl fmt::Display for PredictError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             PredictError::UnknownGpu(name) => {
-                write!(f, "unknown GPU {name:?} (see Table VI)")
+                write!(
+                    f,
+                    "unknown GPU {name:?} (see Table VI; closest: {})",
+                    crate::hw::nearest_names(name, 3).join(", ")
+                )
             }
             PredictError::UnsupportedKernel(why) => {
                 write!(f, "unsupported kernel: {why}")

@@ -7,25 +7,29 @@
 //! pipelining peer fills real batches. The in-flight window is bounded by
 //! `max_inflight` (a `sync_channel`), bounding memory.
 //!
-//! The surface speaks two verbs, dispatched per line: **predict** (the
-//! default — a kernel-latency request into the coordinator queue) and
+//! The surface speaks three verbs, dispatched per line: **predict** (the
+//! default — a kernel-latency request into the coordinator queue),
 //! **simulate** (`"op":"simulate"` with a `"scenario"` object for the v1
 //! single-node path, or a `"cluster"` object for the v2 discrete-event
-//! cluster simulation — both through the [`Simulator`]). Each line is JSON-decoded
+//! cluster simulation — both through the [`Simulator`]) and **sweep**
+//! (`"op":"sweep"` — a whole hardware-search grid answered as one line
+//! embedding every row plus the Pareto frontier). Each line is JSON-decoded
 //! exactly once; the decoded object picks the verb and feeds the winning
-//! codec. Simulate lines are evaluated on the writer thread when their
-//! turn comes, so output order still matches input order exactly — the
-//! in-order contract means later predict answers intentionally wait
+//! codec. Simulate and sweep lines are evaluated on the writer thread when
+//! their turn comes, so output order still matches input order exactly —
+//! the in-order contract means later predict answers intentionally wait
 //! behind an earlier simulate line (head-of-line), exactly as they wait
 //! behind any earlier slow response. The `Simulator` is built lazily by
 //! the supplied factory on the first simulate line, so predict-only peers
-//! never pay its model-set startup cost.
+//! never pay its model-set startup cost; sweep lines build one simulator
+//! per sweep worker through the same factory.
 
 use super::wire;
 use super::{PredictError, PredictResponse};
 use crate::coordinator::{Client, Pending};
 use crate::scenario::wire::SimulateRequest;
 use crate::scenario::{self, ScenarioError, Simulator};
+use crate::sweep::{self, SweepError, SweepSpec};
 use crate::util::json::parse as parse_json;
 use std::io::{BufRead, Write};
 use std::sync::mpsc::{sync_channel, TryRecvError};
@@ -37,6 +41,9 @@ pub struct StdioStats {
     pub errors: u64,
     /// How many of `served` were simulate-verb lines.
     pub simulated: u64,
+    /// How many of `served` were sweep-verb lines (each answering a whole
+    /// grid in one response).
+    pub swept: u64,
 }
 
 /// One in-flight line: a queued prediction, an already-decided
@@ -46,6 +53,7 @@ enum Slot {
     Queued(Option<String>, Pending),
     Ready(Option<String>, Result<PredictResponse, PredictError>),
     Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
+    Sweep(Option<String>, Result<SweepSpec, SweepError>),
 }
 
 /// Run the serve loop until the reader is exhausted. Every input line
@@ -58,11 +66,12 @@ pub fn serve_lines<R, W, F>(
     reader: R,
     writer: &mut W,
     max_inflight: usize,
+    threads: usize,
 ) -> std::io::Result<StdioStats>
 where
     R: BufRead + Send,
     W: Write,
-    F: FnOnce() -> Simulator,
+    F: Fn() -> Simulator + Sync,
 {
     let mut stats = StdioStats::default();
     let (slot_tx, slot_rx) = sync_channel::<Slot>(max_inflight.max(1));
@@ -79,6 +88,10 @@ where
                         None,
                         Err(PredictError::UnsupportedKernel(format!("malformed JSON: {e}"))),
                     ),
+                    Ok(j) if sweep::wire::is_sweep_json(&j) => {
+                        let (id, spec) = sweep::wire::parse_sweep_json(&j);
+                        Slot::Sweep(id, spec)
+                    }
                     Ok(j) if scenario::wire::is_simulate_json(&j) => {
                         let (id, req) = scenario::wire::parse_request_json(&j);
                         Slot::Simulate(id, req)
@@ -105,7 +118,7 @@ where
         // drain_slots takes the receiver by value: on a writer I/O error
         // the receiver is dropped before we join, which unblocks the
         // reader thread's send — the scope join cannot deadlock
-        let drain_res = drain_slots(slot_rx, simulator, writer, &mut stats);
+        let drain_res = drain_slots(slot_rx, &simulator, threads, writer, &mut stats);
         let read_res = reader_thread.join().expect("stdio reader thread");
         drain_res?;
         read_res
@@ -116,14 +129,16 @@ where
 /// Writer side, on the caller's thread: answer slots in order; flush
 /// before blocking so a waiting peer sees everything answered so far.
 /// Simulate slots run here — the `Simulator` never crosses a thread, and
-/// is only built (once) when the first simulate line arrives.
-fn drain_slots<W: Write, F: FnOnce() -> Simulator>(
+/// is only built (once) when the first simulate line arrives. Sweep slots
+/// fan out through [`sweep::run_sweep`], which builds one simulator per
+/// worker from the same factory; `threads` bounds that fan-out.
+fn drain_slots<W: Write, F: Fn() -> Simulator + Sync>(
     slot_rx: std::sync::mpsc::Receiver<Slot>,
-    simulator: F,
+    simulator: &F,
+    threads: usize,
     writer: &mut W,
     stats: &mut StdioStats,
 ) -> std::io::Result<()> {
-    let mut factory = Some(simulator);
     let mut sim: Option<Simulator> = None;
     loop {
         let slot = match slot_rx.try_recv() {
@@ -140,9 +155,20 @@ fn drain_slots<W: Write, F: FnOnce() -> Simulator>(
         let (id, res) = match slot {
             Slot::Queued(id, pending) => (id, pending.wait()),
             Slot::Ready(id, res) => (id, res),
+            Slot::Sweep(id, spec) => {
+                stats.served += 1;
+                stats.swept += 1;
+                // rows stream internally but the wire stays
+                // one-line-per-request: the response embeds every row
+                let res = spec.and_then(|spec| sweep::run_sweep(&spec, simulator, threads, |_| {}));
+                if res.is_err() {
+                    stats.errors += 1;
+                }
+                writeln!(writer, "{}", sweep::wire::encode_sweep_response(id.as_deref(), &res))?;
+                continue;
+            }
             Slot::Simulate(id, req) => {
-                let sim = sim
-                    .get_or_insert_with(|| (factory.take().expect("simulator built once"))());
+                let sim = sim.get_or_insert_with(simulator);
                 stats.served += 1;
                 stats.simulated += 1;
                 // parse errors answer in the shape the request asked for;
@@ -205,7 +231,7 @@ mod tests {
         );
         let mut out = Vec::new();
         let stats =
-            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8)
+            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8, 2)
                 .unwrap();
         assert_eq!(stats.served, 4);
         assert_eq!(stats.errors, 2);
@@ -235,7 +261,7 @@ mod tests {
         );
         let mut out = Vec::new();
         let stats =
-            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8)
+            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8, 2)
                 .unwrap();
         assert_eq!(stats.served, 3);
         assert_eq!(stats.simulated, 2);
@@ -269,7 +295,7 @@ mod tests {
         );
         let mut out = Vec::new();
         let stats =
-            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8)
+            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8, 2)
                 .unwrap();
         assert_eq!(stats.served, 3);
         assert_eq!(stats.simulated, 2);
@@ -286,6 +312,43 @@ mod tests {
         assert_eq!(rep.completed, 2);
         assert_eq!(rep.replicas.len(), 2);
         assert!(rep.ttft.p50_sec > 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sweep_lines_answer_in_one_line_between_other_verbs() {
+        let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+        let input = concat!(
+            r#"{"id":"p1","gpu":"A100","kernel":{"type":"rmsnorm","seq":128,"dim":2048}}"#,
+            "\n",
+            r#"{"id":"w1","op":"sweep","sweep":{"gpus":["A100","H800"],"tp":[1,3],"workloads":[{"name":"tiny","scenario":{"model":"llama3.1-8b","workload":{"requests":[[64,4]]},"seed":3}}]}}"#,
+            "\n",
+            r#"{"id":"w2","op":"sweep","sweep":{"gpus":["B300"],"workloads":[{"scenario":{"model":"llama3.1-8b"}}]}}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        let stats =
+            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8, 2)
+                .unwrap();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.swept, 2);
+        assert_eq!(stats.simulated, 0);
+        // only the spec-level failure counts as an error: infeasible
+        // points are typed rows inside an ok response
+        assert_eq!(stats.errors, 1);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains(r#""id":"p1""#) && lines[0].contains(r#""ok":true"#));
+        assert!(lines[1].contains(r#""id":"w1""#) && lines[1].contains(r#""ok":true"#));
+        // 2 GPUs x tp {1,3}: four rows, the tp=3 ones infeasible for a
+        // 32-head model, plus a non-empty frontier — all in one line
+        assert!(lines[1].contains(r#""index":3"#), "{}", lines[1]);
+        assert!(lines[1].contains(r#""code":"invalid_parallelism""#));
+        assert!(lines[1].contains(r#""frontier":[{"rank":1,"#));
+        assert!(lines[2].contains(r#""id":"w2""#) && lines[2].contains(r#""ok":false"#));
+        assert!(lines[2].contains(r#""code":"unknown_gpu""#));
+        assert!(lines[2].contains("closest: A100, H800, H100"));
         svc.shutdown();
     }
 
@@ -340,7 +403,7 @@ mod tests {
         let server = std::thread::spawn(move || {
             let reader =
                 std::io::BufReader::new(ChanReader { rx: line_rx, buf: Vec::new(), pos: 0 });
-            serve_lines(&client, Simulator::degraded, reader, &mut writer, 256)
+            serve_lines(&client, Simulator::degraded, reader, &mut writer, 256, 2)
         });
         for i in 0..3usize {
             line_tx

@@ -17,7 +17,7 @@
 //! {"v":1,"id":"r1","ok":true,"latency_sec":1.234e-4,"latency_us":123.400,
 //!  "source":"mlp","cache_hit":false,"flavor":"mean","kernel":"gemm","gpu":"A100"}
 //! {"v":1,"id":"r2","ok":false,"error":{"code":"unknown_gpu",
-//!  "message":"unknown GPU \"B300\" (see Table VI)","gpu":"B300"}}
+//!  "message":"unknown GPU \"B300\" (see Table VI; closest: A100, H800, H100)","gpu":"B300"}}
 //! ```
 //!
 //! Malformed lines map into the closed taxonomy as

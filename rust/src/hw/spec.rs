@@ -165,11 +165,48 @@ pub fn unseen_gpus() -> Vec<GpuSpec> {
     all_gpus().into_iter().filter(|g| !g.seen).collect()
 }
 
+/// The lookup key behind [`gpu_by_name`]: case- and separator-insensitive,
+/// so `"rtx_6000_ada"`, `"RTX 6000 Ada"` and `"rtx-6000-ada"` all hit the
+/// same registry entry.
+fn normalize(name: &str) -> String {
+    name.to_lowercase().replace([' ', '_', '-'], "")
+}
+
 pub fn gpu_by_name(name: &str) -> Option<GpuSpec> {
-    let want = name.to_lowercase().replace([' ', '_', '-'], "");
-    all_gpus()
-        .into_iter()
-        .find(|g| g.name.to_lowercase().replace([' ', '_', '-'], "") == want)
+    let want = normalize(name);
+    all_gpus().into_iter().find(|g| normalize(g.name) == want)
+}
+
+/// Levenshtein distance between two normalized name keys — small enough
+/// strings (≤ 16 chars) that the O(|a|·|b|) DP is trivially cheap.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// The `k` registry names nearest to `name` under edit distance over
+/// normalized keys, ties broken by registry (Table VI) order — the
+/// suggestion list behind the `unknown_gpu` error detail on the CLI and
+/// wire paths.
+pub fn nearest_names(name: &str, k: usize) -> Vec<&'static str> {
+    let want = normalize(name);
+    let mut scored: Vec<(usize, usize, &'static str)> = all_gpus()
+        .iter()
+        .enumerate()
+        .map(|(i, g)| (edit_distance(&want, &normalize(g.name)), i, g.name))
+        .collect();
+    scored.sort_by_key(|&(d, i, _)| (d, i));
+    scored.into_iter().take(k).map(|(_, _, n)| n).collect()
 }
 
 /// The most architecturally similar *seen* GPU — used for closed-source
@@ -264,5 +301,64 @@ mod tests {
             assert!(g.dram_bytes_per_cycle() > 0.0);
             assert!(g.cycle_sec() > 0.0 && g.cycle_sec() < 1e-8);
         }
+    }
+
+    #[test]
+    fn registry_invariants_hold() {
+        // every rate and clock strictly positive — a zero here would turn
+        // into an Inf/NaN latency deep inside the rooflines
+        for g in all_gpus() {
+            assert!(g.sm_clock_mhz > 0.0, "{}", g.name);
+            assert!(g.tensor_ops_clk_sm > 0.0, "{}", g.name);
+            assert!(g.fma_ops_clk_sm > 0.0, "{}", g.name);
+            assert!(g.xu_ops_clk_sm > 0.0, "{}", g.name);
+            assert!(g.dram_bw_gbs > 0.0, "{}", g.name);
+            assert!(g.l2_bw_gbs > 0.0, "{}", g.name);
+            assert!(g.smem_bw_byte_clk_sm > 0.0, "{}", g.name);
+            assert!(g.interconnect_gbs > 0.0, "{}", g.name);
+            assert!(g.fp8_tensor_mult >= 1.0, "{}", g.name);
+            assert!(g.num_sms > 0 && g.max_warps_per_sm > 0 && g.max_ctas_per_sm > 0);
+        }
+    }
+
+    #[test]
+    fn normalized_names_are_unique() {
+        // gpu_by_name keys on the normalized form; a collision would make
+        // one registry entry unreachable
+        let mut keys: Vec<String> = all_gpus().iter().map(|g| normalize(g.name)).collect();
+        keys.sort();
+        let before = keys.len();
+        keys.dedup();
+        assert_eq!(keys.len(), before, "normalized registry names must be unique");
+    }
+
+    #[test]
+    fn seen_unseen_partition_the_registry() {
+        let all: Vec<&str> = all_gpus().iter().map(|g| g.name).collect();
+        let mut split: Vec<&str> = seen_gpus().iter().map(|g| g.name).collect();
+        split.extend(unseen_gpus().iter().map(|g| g.name));
+        // all_gpus lists the seen group first, so the concatenation must
+        // reproduce the registry exactly — no overlap, nothing dropped
+        assert_eq!(all, split, "seen/unseen must partition all_gpus in order");
+    }
+
+    #[test]
+    fn nearest_seen_lands_in_the_seen_split_for_every_unseen_gpu() {
+        for g in unseen_gpus() {
+            let near = nearest_seen(&g);
+            assert!(near.seen, "nearest_seen({}) returned unseen {}", g.name, near.name);
+        }
+    }
+
+    #[test]
+    fn nearest_names_ranks_by_edit_distance_then_registry_order() {
+        // "B300": distance 2 to A100/H800/H100/H200, 3 to A40/L20/H20/L40 —
+        // the top 3 follow Table VI order among the distance-2 ties
+        assert_eq!(nearest_names("B300", 3), vec!["A100", "H800", "H100"]);
+        // exact (normalized) matches rank themselves first
+        assert_eq!(nearest_names("h800", 1), vec!["H800"]);
+        assert_eq!(nearest_names("rtx_6000_ada", 1), vec!["RTX 6000 Ada"]);
+        // k larger than the registry just returns everything
+        assert_eq!(nearest_names("A100", 99).len(), 11);
     }
 }

@@ -27,6 +27,13 @@
 //! per-phase TTFT/TPOT/tokens-per-second, per-method totals, a typed
 //! `OpClass` breakdown, and degraded-kernel provenance — also exposed as
 //! the `synperf simulate` JSONL wire verb.
+//!
+//! On top of the scenario stack, the [`sweep`] subsystem runs
+//! fleet-scale hardware search: a declarative grid over GPUs ×
+//! parallelism × replicas × routing policies × workloads, fanned through
+//! work-stealing evaluators into deterministic JSONL rows and ranked by
+//! Pareto frontier over (tokens/sec, SLO attainment, GPU count) — the
+//! `synperf sweep` verb.
 
 pub mod api;
 pub mod coordinator;
@@ -45,4 +52,5 @@ pub mod oracle;
 pub mod runtime;
 pub mod sched;
 pub mod scenario;
+pub mod sweep;
 pub mod util;

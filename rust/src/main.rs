@@ -12,9 +12,15 @@
 //!               routing policies, per-request percentile reports)
 //!   e2e         end-to-end prediction vs ground truth (a scenario
 //!               simulation printed as the paper's method comparison)
+//!   sweep       fleet-scale hardware search: a declarative grid over
+//!               GPUs x tp x pp x replicas x policies x workloads,
+//!               streamed as one JSONL row per config plus a Pareto
+//!               frontier over (tokens/sec, SLO attainment, GPU count)
+//!   gpus        list the Table-VI hardware registry (seen/unseen split,
+//!               headline compute:memory ratios)
 //!   serve       run the batching prediction service (synthetic load or
 //!               the JSONL stdio wire surface: `serve --stdio`; speaks
-//!               both the predict and simulate verbs)
+//!               the predict, simulate and sweep verbs)
 //!   tune        model-guided Fused-MoE autotuning (§VII)
 //!   experiment  regenerate a paper table/figure (see DESIGN.md §5)
 
@@ -47,6 +53,8 @@ fn usage() -> &'static str {
                   [--kv-tokens 262144] [--kv-quant 16] [--slo-ttft-ms 2000] [--slo-tpot-ms 200]\n\
        e2e        --model qwen2.5-14b --gpu H100 [--tp 1] [--pp 1] [--workload arxiv] [--batch 8]\n\
                   [--threads N]\n\
+       sweep      --spec <file|-> [--threads N] [--json]\n\
+       gpus\n\
        serve      [--stdio] [--requests 512] [--gpu A100] [--threads N]\n\
                   [--max-batch 256] [--deadline-us 2000] [--queue-cap 1024]\n\
        tune       --gpu A40 [--n 20]\n\
@@ -94,6 +102,8 @@ fn main() -> Result<()> {
         "train" => cmd_train(&rest),
         "predict" => cmd_predict(&rest),
         "simulate" => cmd_simulate(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "gpus" => cmd_gpus(),
         "e2e" => cmd_e2e(&rest),
         "serve" => cmd_serve(&rest),
         "tune" => cmd_tune(&rest),
@@ -290,6 +300,25 @@ fn simulator_of(scale: Scale) -> Simulator {
     }
 }
 
+/// Simulator factory for the multi-simulator surfaces (sweep workers, the
+/// stdio wire). Each call probes the artifact lab so workers get
+/// independent, artifact-backed simulators; the degraded fallback is
+/// announced once, not once per worker — and only if a simulator is ever
+/// actually built, so predict-only stdio peers stay silent and pay
+/// nothing.
+fn simulator_factory(scale: Scale) -> impl Fn() -> Simulator + Sync {
+    let warned = std::sync::Once::new();
+    move || match Lab::new(scale).and_then(|lab| Ok((lab.model_set()?, lab.seed))) {
+        Ok((models, seed)) => Simulator::with_comm_seed(models, seed),
+        Err(e) => {
+            warned.call_once(|| {
+                eprintln!("(no artifacts: {e} — simulating in degraded roofline mode)");
+            });
+            Simulator::degraded()
+        }
+    }
+}
+
 fn print_report(report: &ScenarioReport) {
     println!(
         "scenario: {} on {} (TP={}, PP={}), seed {}, host gap {:.2} us",
@@ -461,6 +490,119 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Human summary of a finished sweep, on stderr (stdout carries only the
+/// JSONL rows + frontier, so `--threads` runs stay byte-diffable).
+fn print_frontier(out: &synperf::sweep::SweepOutcome) {
+    use synperf::util::table;
+    let ok = out.rows.iter().filter(|r| r.outcome.is_ok()).count();
+    eprintln!(
+        "sweep: {} configs ({} ok, {} infeasible), frontier of {}",
+        out.rows.len(),
+        ok,
+        out.rows.len() - ok,
+        out.pareto.frontier.len()
+    );
+    let mut t = table::Table::new(
+        "Pareto frontier (tok/s up, SLO up, GPUs down)",
+        &["rank", "workload", "gpu", "tp", "pp", "rep", "policy", "gpus", "tok/s", "slo", "tok/s/gpu"],
+    );
+    for (rank, &ri) in out.pareto.frontier.iter().enumerate() {
+        let r = &out.rows[ri];
+        let m = r.outcome.as_ref().expect("frontier rows carry metrics");
+        t.row(vec![
+            (rank + 1).to_string(),
+            r.workload.clone(),
+            r.gpu.clone(),
+            r.tp.to_string(),
+            r.pp.to_string(),
+            r.replicas.to_string(),
+            r.policy.name().to_string(),
+            r.gpu_count.to_string(),
+            table::f(m.tokens_per_sec, 0),
+            table::pct(m.slo_attainment),
+            table::f(m.tokens_per_sec / f64::from(r.gpu_count), 0),
+        ]);
+    }
+    eprint!("{}", t.render());
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use synperf::sweep::{run_sweep, wire as sweep_wire};
+    // JSONL in (wire envelopes or bare sweep objects), streaming out: one
+    // row line per grid point, then one frontier line — the offline twin
+    // of the `serve --stdio` sweep verb, which answers in a single line.
+    let Some(path) = args.str_opt("spec") else {
+        bail!("sweep requires --spec <file|-> (JSONL sweep specs; see rust/README.md)\n{}", usage());
+    };
+    let text = if path == "-" {
+        use std::io::Read;
+        let mut buf = String::new();
+        std::io::stdin().read_to_string(&mut buf)?;
+        buf
+    } else {
+        std::fs::read_to_string(path)?
+    };
+    let threads = threads_of(args)?;
+    let factory = simulator_factory(scale_of(args));
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (id, spec) = sweep_wire::parse_sweep_line(line);
+        // spec-level failures (bad JSON, bad axes, unknown GPUs, oversized
+        // grids) answer as one typed error line; infeasible grid points
+        // surface as per-row error rows inside a succeeding sweep instead
+        let res = spec.and_then(|spec| {
+            run_sweep(&spec, &factory, threads, |row| {
+                println!("{}", sweep_wire::encode_row(row));
+            })
+        });
+        match res {
+            Ok(out) => {
+                println!("{}", sweep_wire::encode_frontier(&out.rows, &out.pareto));
+                if !args.has("json") {
+                    print_frontier(&out);
+                }
+            }
+            Err(e) => {
+                println!("{}", sweep_wire::encode_sweep_response(id.as_deref(), &Err(e)));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gpus() -> Result<()> {
+    use synperf::util::table;
+    let mut t = table::Table::new(
+        "Hardware registry (Table VI)",
+        &["gpu", "arch", "gen", "split", "SMs", "clk MHz", "Ttops/s", "DRAM GB/s", "ops:byte"],
+    );
+    let gpus = hw::all_gpus();
+    for g in &gpus {
+        t.row(vec![
+            g.name.to_string(),
+            g.arch.name().to_string(),
+            g.arch.generation().to_string(),
+            if g.seen { "seen" } else { "unseen" }.to_string(),
+            g.num_sms.to_string(),
+            table::f(g.sm_clock_mhz, 0),
+            table::f(g.tensor_ops_per_sec() / 1e12, 1),
+            table::f(g.dram_bw_gbs, 0),
+            table::f(g.compute_mem_ratio(), 1),
+        ]);
+    }
+    t.print();
+    let seen = gpus.iter().filter(|g| g.seen).count();
+    println!(
+        "{} GPUs: {} seen (training split), {} unseen (held out)",
+        gpus.len(),
+        seen,
+        gpus.len() - seen
+    );
+    Ok(())
+}
+
 fn cmd_e2e(args: &Args) -> Result<()> {
     // the paper's method comparison, now a scenario simulation: requires
     // trained artifacts (use `simulate` for the degraded-friendly verb)
@@ -515,17 +657,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // is wrapped (not locked): the reader moves into serve_lines'
         // reader thread, and StdinLock is not Send.
         let stdout = std::io::stdout();
+        let factory = simulator_factory(scale);
         let stats = synperf::api::stdio::serve_lines(
             &svc.client(),
-            || simulator_of(scale).threads(threads),
+            move || factory().threads(threads),
             std::io::BufReader::new(std::io::stdin()),
             &mut stdout.lock(),
             cfg.max_batch,
+            threads,
         )?;
         let snap = svc.metrics.snapshot();
         eprintln!(
-            "stdio: {} responses ({} errors, {} simulations), mean batch {:.1}, rejected {}, max depth {}",
-            stats.served, stats.errors, stats.simulated, snap.mean_batch, snap.rejected_requests, snap.max_queue_depth
+            "stdio: {} responses ({} errors, {} simulations, {} sweeps), mean batch {:.1}, rejected {}, max depth {}",
+            stats.served, stats.errors, stats.simulated, stats.swept, snap.mean_batch, snap.rejected_requests, snap.max_queue_depth
         );
         svc.shutdown();
         return Ok(());

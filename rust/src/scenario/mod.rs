@@ -249,7 +249,11 @@ impl fmt::Display for ScenarioError {
                 write!(f, "unknown model {name:?} (see llm::registry())")
             }
             ScenarioError::UnknownGpu(name) => {
-                write!(f, "unknown GPU {name:?} (see Table VI)")
+                write!(
+                    f,
+                    "unknown GPU {name:?} (see Table VI; closest: {})",
+                    crate::hw::nearest_names(name, 3).join(", ")
+                )
             }
             ScenarioError::InvalidParallelism(why) => write!(f, "invalid parallelism: {why}"),
             ScenarioError::InvalidWorkload(why) => write!(f, "invalid workload: {why}"),

@@ -102,7 +102,9 @@ fn seed_from(v: &Json, what: &str) -> Result<u64, ScenarioError> {
 
 // ---- spec ----------------------------------------------------------------
 
-fn spec_to_json(spec: &ScenarioSpec) -> String {
+/// Canonical JSON for one scenario object — shared with the sweep codec,
+/// which embeds specs as workload templates.
+pub(crate) fn spec_to_json(spec: &ScenarioSpec) -> String {
     let workload = match &spec.workload {
         WorkloadSpec::Sampled { kind, batch } => {
             format!(r#"{{"kind":"{}","batch":{}}}"#, kind.name(), batch)
@@ -140,14 +142,24 @@ pub fn encode_simulate_request(id: Option<&str>, spec: &ScenarioSpec) -> String 
 
 /// Parse one bare `scenario` object into a spec.
 fn parse_spec_object(j: &Json) -> Result<ScenarioSpec, ScenarioError> {
+    parse_spec_fields(j, None)
+}
+
+/// Sweep-template variant: `gpu` may be omitted (the grid overwrites it —
+/// along with `tp`/`pp` — per point).
+pub(crate) fn parse_spec_template(j: &Json) -> Result<ScenarioSpec, ScenarioError> {
+    parse_spec_fields(j, Some(""))
+}
+
+fn parse_spec_fields(j: &Json, default_gpu: Option<&str>) -> Result<ScenarioSpec, ScenarioError> {
     let model = j
         .get("model")
         .and_then(|v| v.as_str())
         .ok_or_else(|| malformed("scenario needs \"model\": \"<name>\""))?;
-    let gpu = j
-        .get("gpu")
-        .and_then(|v| v.as_str())
-        .ok_or_else(|| malformed("scenario needs \"gpu\": \"<name>\""))?;
+    let gpu = match j.get("gpu").and_then(|v| v.as_str()) {
+        Some(g) => g,
+        None => default_gpu.ok_or_else(|| malformed("scenario needs \"gpu\": \"<name>\""))?,
+    };
     let mut spec = ScenarioSpec::new(model, gpu);
     if let Some(v) = j.get("tp") {
         spec.tp = num_u32(v, "tp")?;
@@ -360,7 +372,9 @@ fn arrivals_from_json(j: &Json) -> Result<ArrivalSpec, ScenarioError> {
     Err(malformed("\"arrivals\" must contain \"trace\", \"poisson\" or \"uniform\""))
 }
 
-fn cluster_to_json(spec: &ClusterSpec) -> String {
+/// Canonical JSON for one cluster object — shared with the sweep codec,
+/// which embeds cluster specs as workload templates.
+pub(crate) fn cluster_to_json(spec: &ClusterSpec) -> String {
     format!(
         r#"{{"model":"{}","gpu":"{}","tp":{},"pp":{},"replicas":{},"policy":"{}","arrivals":{},"max_batch":{},"kv_capacity_tokens":{},"kv_quant":{},"seed":{},"host_gap_sec":{:e},"slo":{{"ttft_sec":{:e},"tpot_sec":{:e}}}}}"#,
         esc(&spec.model),
@@ -381,14 +395,24 @@ fn cluster_to_json(spec: &ClusterSpec) -> String {
 }
 
 fn parse_cluster_object(j: &Json) -> Result<ClusterSpec, ScenarioError> {
+    parse_cluster_fields(j, None)
+}
+
+/// Sweep-template variant: `gpu` may be omitted (the grid overwrites it —
+/// along with `tp`/`pp`/`replicas`/`policy` — per point).
+pub(crate) fn parse_cluster_template(j: &Json) -> Result<ClusterSpec, ScenarioError> {
+    parse_cluster_fields(j, Some(""))
+}
+
+fn parse_cluster_fields(j: &Json, default_gpu: Option<&str>) -> Result<ClusterSpec, ScenarioError> {
     let model = j
         .get("model")
         .and_then(|v| v.as_str())
         .ok_or_else(|| malformed("cluster needs \"model\": \"<name>\""))?;
-    let gpu = j
-        .get("gpu")
-        .and_then(|v| v.as_str())
-        .ok_or_else(|| malformed("cluster needs \"gpu\": \"<name>\""))?;
+    let gpu = match j.get("gpu").and_then(|v| v.as_str()) {
+        Some(g) => g,
+        None => default_gpu.ok_or_else(|| malformed("cluster needs \"gpu\": \"<name>\""))?,
+    };
     let mut spec = ClusterSpec::new(model, gpu);
     if let Some(v) = j.get("tp") {
         spec.tp = num_u32(v, "tp")?;
@@ -579,8 +603,9 @@ fn report_to_json(r: &ScenarioReport) -> String {
 }
 
 /// One owner of the error-object encoding, shared by the v1 and v2 report
-/// encoders so the taxonomy cannot drift between them.
-fn error_to_json(e: &ScenarioError) -> String {
+/// encoders (and the sweep codec's per-row error objects) so the taxonomy
+/// cannot drift between them.
+pub(crate) fn error_to_json(e: &ScenarioError) -> String {
     let mut out =
         format!("{{\"code\":\"{}\",\"message\":\"{}\"", e.code(), esc(&e.to_string()));
     match e {

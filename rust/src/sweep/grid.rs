@@ -1,0 +1,274 @@
+//! Grid expansion: validate the sweep axes and materialize the
+//! cross-product as indexed [`SweepPoint`]s. Expansion order is
+//! workloads → GPUs → tp → pp → replicas → policies, so row indices are
+//! stable and human-predictable; the routing axis only multiplies cluster
+//! workloads (it is a v2 knob).
+
+use super::{GpuFilter, SweepError, SweepSpec};
+use crate::hw;
+use crate::scenario::cluster::MAX_REPLICAS;
+use crate::scenario::wire::SimulateRequest;
+use crate::scenario::RoutePolicy;
+
+/// Hard cap on the grid size — the same order as the wire batch cap, far
+/// above any interactive search but low enough that the one-line stdio
+/// response and the row buffer stay bounded.
+pub const MAX_SWEEP_POINTS: usize = 4096;
+
+/// tp/pp axis values beyond this are rejected at the grid level; the
+/// per-model feasibility check (divisibility, layer count) still runs per
+/// point and yields typed error rows.
+const MAX_AXIS_DEGREE: u32 = 64;
+
+/// One cell of the expanded grid: the workload it evaluates (by spec
+/// index) and the hardware coordinates written over that template.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    pub index: usize,
+    pub workload: usize,
+    /// Canonical registry name (post [`hw::gpu_by_name`] resolution).
+    pub gpu: String,
+    pub tp: u32,
+    pub pp: u32,
+    pub replicas: u32,
+    pub policy: RoutePolicy,
+}
+
+/// Resolve a GPU filter to canonical registry names, in registry order
+/// (or, for [`GpuFilter::Named`], in the order given).
+pub fn gpu_names(filter: &GpuFilter) -> Result<Vec<String>, SweepError> {
+    let names = |gpus: Vec<hw::GpuSpec>| gpus.iter().map(|g| g.name.to_string()).collect();
+    match filter {
+        GpuFilter::All => Ok(names(hw::all_gpus())),
+        GpuFilter::Seen => Ok(names(hw::seen_gpus())),
+        GpuFilter::Unseen => Ok(names(hw::unseen_gpus())),
+        GpuFilter::Named(list) => {
+            if list.is_empty() {
+                return Err(SweepError::InvalidAxis(
+                    "\"gpus\" must name at least one GPU".into(),
+                ));
+            }
+            list.iter()
+                .map(|n| {
+                    hw::gpu_by_name(n)
+                        .map(|g| g.name.to_string())
+                        .ok_or_else(|| SweepError::UnknownGpu(n.clone()))
+                })
+                .collect()
+        }
+    }
+}
+
+fn check_axis(name: &str, values: &[u32], max: u32) -> Result<(), SweepError> {
+    if values.is_empty() {
+        return Err(SweepError::InvalidAxis(format!(
+            "\"{name}\" must list at least one value"
+        )));
+    }
+    for &v in values {
+        if v == 0 {
+            return Err(SweepError::InvalidAxis(format!("\"{name}\" values must be >= 1")));
+        }
+        if v > max {
+            return Err(SweepError::InvalidAxis(format!(
+                "\"{name}\" values must be <= {max}, got {v}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn check_slo(name: &str, v: f64) -> Result<(), SweepError> {
+    if v > 0.0 && v.is_finite() {
+        Ok(())
+    } else {
+        Err(SweepError::InvalidAxis(format!("\"slo.{name}\" must be positive and finite")))
+    }
+}
+
+/// The policies a workload actually multiplies over: the full axis for
+/// cluster templates, a single fixed policy for v1 scenarios (routing is
+/// meaningless without a router — duplicating rows would skew the grid).
+fn policies_for<'a>(spec: &'a SweepSpec, template: &SimulateRequest) -> &'a [RoutePolicy] {
+    match template {
+        SimulateRequest::Cluster(_) => &spec.policies,
+        SimulateRequest::Scenario(_) => &spec.policies[..1],
+    }
+}
+
+/// Validate every axis and expand the cross-product. Fails closed before
+/// any evaluation: unknown named GPUs, empty/zero axes, non-finite SLOs
+/// and oversized grids are spec-level [`SweepError`]s.
+pub fn expand(spec: &SweepSpec) -> Result<Vec<SweepPoint>, SweepError> {
+    let gpus = gpu_names(&spec.gpus)?;
+    check_axis("tp", &spec.tp, MAX_AXIS_DEGREE)?;
+    check_axis("pp", &spec.pp, MAX_AXIS_DEGREE)?;
+    check_axis("replicas", &spec.replicas, MAX_REPLICAS)?;
+    if spec.policies.is_empty() {
+        return Err(SweepError::InvalidAxis("\"policies\" must list at least one policy".into()));
+    }
+    if spec.workloads.is_empty() {
+        return Err(SweepError::InvalidAxis(
+            "\"workloads\" must list at least one workload".into(),
+        ));
+    }
+    check_slo("ttft_sec", spec.slo_ttft_sec)?;
+    check_slo("tpot_sec", spec.slo_tpot_sec)?;
+    let per_point = gpus.len() * spec.tp.len() * spec.pp.len() * spec.replicas.len();
+    let total: usize = spec
+        .workloads
+        .iter()
+        .map(|w| per_point.saturating_mul(policies_for(spec, &w.template).len()))
+        .fold(0usize, usize::saturating_add);
+    if total > MAX_SWEEP_POINTS {
+        return Err(SweepError::GridTooLarge(format!(
+            "{total} points exceed the cap of {MAX_SWEEP_POINTS}"
+        )));
+    }
+    let mut points = Vec::with_capacity(total);
+    for (wi, w) in spec.workloads.iter().enumerate() {
+        let policies = policies_for(spec, &w.template);
+        for gpu in &gpus {
+            for &tp in &spec.tp {
+                for &pp in &spec.pp {
+                    for &replicas in &spec.replicas {
+                        for &policy in policies {
+                            points.push(SweepPoint {
+                                index: points.len(),
+                                workload: wi,
+                                gpu: gpu.clone(),
+                                tp,
+                                pp,
+                                replicas,
+                                policy,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{ArrivalSpec, ClusterSpec, ScenarioSpec};
+
+    fn v1(name: &str) -> SweepSpec {
+        SweepSpec::new().scenario(name, ScenarioSpec::new("llama3.1-8b", ""))
+    }
+
+    #[test]
+    fn default_filter_covers_the_whole_registry_in_order() {
+        let points = expand(&v1("w")).unwrap();
+        assert_eq!(points.len(), 11);
+        assert_eq!(points[0].gpu, "A40");
+        assert_eq!(points[1].gpu, "A100");
+        assert_eq!(points[10].gpu, "RTX PRO 6000 S");
+        for (i, p) in points.iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+    }
+
+    #[test]
+    fn seen_unseen_filters_slice_the_registry() {
+        assert_eq!(expand(&v1("w").gpus(GpuFilter::Seen)).unwrap().len(), 6);
+        assert_eq!(expand(&v1("w").gpus(GpuFilter::Unseen)).unwrap().len(), 5);
+    }
+
+    #[test]
+    fn named_gpus_resolve_fuzzily_to_canonical_names() {
+        let spec = v1("w").gpus(GpuFilter::Named(vec!["h800".into(), "rtx_6000_ada".into()]));
+        let points = expand(&spec).unwrap();
+        assert_eq!(points[0].gpu, "H800");
+        assert_eq!(points[1].gpu, "RTX 6000 Ada");
+    }
+
+    #[test]
+    fn unknown_named_gpu_fails_the_whole_sweep() {
+        let spec = v1("w").gpus(GpuFilter::Named(vec!["B300".into()]));
+        let err = expand(&spec).unwrap_err();
+        assert_eq!(err.code(), "unknown_gpu");
+        assert!(err.to_string().contains("closest: A100, H800, H100"), "{err}");
+    }
+
+    #[test]
+    fn expansion_order_is_workload_gpu_tp_pp_replicas_policy() {
+        let spec = v1("w")
+            .gpus(GpuFilter::Named(vec!["A100".into(), "H800".into()]))
+            .tp(vec![1, 2])
+            .replicas(vec![1, 2]);
+        let points = expand(&spec).unwrap();
+        assert_eq!(points.len(), 8);
+        // replicas vary fastest, then pp/tp, then GPU
+        let coords: Vec<(&str, u32, u32)> =
+            points.iter().map(|p| (p.gpu.as_str(), p.tp, p.replicas)).collect();
+        assert_eq!(
+            coords,
+            vec![
+                ("A100", 1, 1),
+                ("A100", 1, 2),
+                ("A100", 2, 1),
+                ("A100", 2, 2),
+                ("H800", 1, 1),
+                ("H800", 1, 2),
+                ("H800", 2, 1),
+                ("H800", 2, 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn policy_axis_multiplies_cluster_workloads_only() {
+        use crate::e2e::workload::WorkloadKind;
+        let cluster = ClusterSpec::new("llama3.1-8b", "").arrivals(ArrivalSpec::Uniform {
+            gap_sec: 0.5,
+            n: 2,
+            kind: WorkloadKind::Arxiv,
+        });
+        let spec = SweepSpec::new()
+            .gpus(GpuFilter::Named(vec!["A100".into()]))
+            .policies(vec![RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded])
+            .scenario("v1", ScenarioSpec::new("llama3.1-8b", ""))
+            .workload("v2", SimulateRequest::Cluster(cluster));
+        let points = expand(&spec).unwrap();
+        // 1 (v1 pinned to the first policy) + 2 (v2 crosses the axis)
+        assert_eq!(points.len(), 3);
+        assert_eq!(points[0].policy, RoutePolicy::RoundRobin);
+        assert_eq!(points[1].policy, RoutePolicy::RoundRobin);
+        assert_eq!(points[2].policy, RoutePolicy::LeastLoaded);
+    }
+
+    #[test]
+    fn invalid_axes_speak_the_taxonomy() {
+        assert_eq!(expand(&v1("w").tp(vec![])).unwrap_err().code(), "invalid_axis");
+        assert_eq!(expand(&v1("w").tp(vec![0])).unwrap_err().code(), "invalid_axis");
+        assert_eq!(expand(&v1("w").pp(vec![65])).unwrap_err().code(), "invalid_axis");
+        assert_eq!(
+            expand(&v1("w").replicas(vec![MAX_REPLICAS + 1])).unwrap_err().code(),
+            "invalid_axis"
+        );
+        assert_eq!(expand(&v1("w").policies(vec![])).unwrap_err().code(), "invalid_axis");
+        assert_eq!(expand(&SweepSpec::new()).unwrap_err().code(), "invalid_axis");
+        assert_eq!(expand(&v1("w").slo(0.0, 0.2)).unwrap_err().code(), "invalid_axis");
+        assert_eq!(expand(&v1("w").slo(2.0, f64::NAN)).unwrap_err().code(), "invalid_axis");
+        assert_eq!(
+            expand(&v1("w").gpus(GpuFilter::Named(vec![]))).unwrap_err().code(),
+            "invalid_axis"
+        );
+    }
+
+    #[test]
+    fn oversized_grids_are_rejected_up_front() {
+        // 11 GPUs × 8 tp × 8 pp × 8 replicas = 5632 > 4096
+        let spec = v1("w")
+            .tp(vec![1, 2, 3, 4, 5, 6, 7, 8])
+            .pp(vec![1, 2, 3, 4, 5, 6, 7, 8])
+            .replicas(vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        let err = expand(&spec).unwrap_err();
+        assert_eq!(err.code(), "grid_too_large");
+        assert!(err.to_string().contains("5632"), "{err}");
+    }
+}

@@ -1,0 +1,280 @@
+//! **Sweep subsystem** — fleet-scale hardware search over the full
+//! prediction stack (the paper's headline use case: next-generation
+//! hardware selection across the 11 GPUs of Table VI).
+//!
+//! A declarative [`SweepSpec`] names the axes of a config grid — GPUs
+//! (the whole registry by default, or the seen/unseen split, or explicit
+//! names), tensor/pipeline parallel degrees, replica counts, routing
+//! policies — and one or more workloads: a Scenario-v1 [`ScenarioSpec`]
+//! or a Scenario-v2 [`crate::scenario::ClusterSpec`] used as a *template*
+//! whose hardware axes the grid overwrites per point. [`grid::expand`]
+//! validates the axes against the closed [`SweepError`] taxonomy
+//! (mirroring [`ScenarioError`]) and materializes the cross-product;
+//! [`runner::run_sweep`] fans the points over work-stealing workers —
+//! each owning one [`crate::scenario::Simulator`] so per-GPU comm models
+//! train once per worker and the sharded engine cache is hammered as
+//! designed — and streams one [`SweepRow`] per config in deterministic
+//! index order regardless of scheduling. Infeasible configs (tp that does
+//! not divide the heads, overlong requests, …) become typed per-row
+//! error rows instead of aborting the sweep.
+//!
+//! On top of the rows, [`pareto::pareto`] computes the Pareto frontier
+//! over (tokens/sec ↑, SLO attainment ↑, GPU count = replicas × tp × pp
+//! ↓) with ranked dominated-by annotations. The whole surface rides the
+//! `synperf sweep` CLI verb and a `sweep` request shape on the stdio
+//! wire ([`wire`]).
+
+pub mod grid;
+pub mod pareto;
+pub mod runner;
+pub mod wire;
+
+pub use grid::{expand, SweepPoint, MAX_SWEEP_POINTS};
+pub use pareto::{pareto, Pareto, DOMINATED_BY_CAP};
+pub use runner::{point_request, run_sweep};
+
+use crate::scenario::wire::SimulateRequest;
+use crate::scenario::{
+    ClusterReport, Method, Phase, RoutePolicy, ScenarioError, ScenarioReport, ScenarioSpec,
+};
+use std::fmt;
+
+/// Which registry slice a sweep covers when GPUs are not named explicitly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GpuFilter {
+    /// Every GPU of Table VI (the default).
+    All,
+    /// The training ("seen") split only.
+    Seen,
+    /// The held-out ("unseen") split only — the what-if regime.
+    Unseen,
+    /// Explicit names, resolved through the fuzzy [`crate::hw::gpu_by_name`].
+    Named(Vec<String>),
+}
+
+/// One workload of the sweep: a display name plus a v1 scenario or v2
+/// cluster template. The template's `gpu`/`tp`/`pp` (and, for clusters,
+/// `replicas`/`policy`/SLOs) are overwritten by the grid per point, so a
+/// template may omit its `gpu` entirely on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepWorkload {
+    pub name: String,
+    pub template: SimulateRequest,
+}
+
+/// The declarative sweep: axes × workloads. Empty axes are invalid; the
+/// builder defaults mirror a single-node, single-replica serving setup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub gpus: GpuFilter,
+    pub tp: Vec<u32>,
+    pub pp: Vec<u32>,
+    pub replicas: Vec<u32>,
+    /// Routing policies — a cluster knob; v1 scenario workloads take only
+    /// the first entry so the grid carries no duplicate rows.
+    pub policies: Vec<RoutePolicy>,
+    /// Sweep-level SLO thresholds, pinned over every workload template so
+    /// attainment is comparable across the whole grid.
+    pub slo_ttft_sec: f64,
+    pub slo_tpot_sec: f64,
+    pub workloads: Vec<SweepWorkload>,
+}
+
+impl SweepSpec {
+    pub fn new() -> Self {
+        SweepSpec {
+            gpus: GpuFilter::All,
+            tp: vec![1],
+            pp: vec![1],
+            replicas: vec![1],
+            policies: vec![RoutePolicy::RoundRobin],
+            slo_ttft_sec: 2.0,
+            slo_tpot_sec: 0.2,
+            workloads: Vec::new(),
+        }
+    }
+
+    pub fn gpus(mut self, gpus: GpuFilter) -> Self {
+        self.gpus = gpus;
+        self
+    }
+
+    pub fn tp(mut self, tp: Vec<u32>) -> Self {
+        self.tp = tp;
+        self
+    }
+
+    pub fn pp(mut self, pp: Vec<u32>) -> Self {
+        self.pp = pp;
+        self
+    }
+
+    pub fn replicas(mut self, replicas: Vec<u32>) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
+    pub fn policies(mut self, policies: Vec<RoutePolicy>) -> Self {
+        self.policies = policies;
+        self
+    }
+
+    pub fn slo(mut self, ttft_sec: f64, tpot_sec: f64) -> Self {
+        self.slo_ttft_sec = ttft_sec;
+        self.slo_tpot_sec = tpot_sec;
+        self
+    }
+
+    /// Append a workload (any [`SimulateRequest`] shape) under a name.
+    pub fn workload(mut self, name: &str, template: SimulateRequest) -> Self {
+        self.workloads.push(SweepWorkload { name: name.to_string(), template });
+        self
+    }
+
+    /// Convenience: append a v1 scenario workload.
+    pub fn scenario(self, name: &str, template: ScenarioSpec) -> Self {
+        self.workload(name, SimulateRequest::Scenario(template))
+    }
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The closed error taxonomy of the sweep surface, mirroring
+/// [`ScenarioError`]. These are *spec-level* failures that abort before
+/// any row is evaluated; per-point runtime failures stay `ScenarioError`
+/// values inside typed error rows and never abort the sweep.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SweepError {
+    /// A named GPU is not in the Table-VI registry.
+    UnknownGpu(String),
+    /// An axis is empty, zero-valued or out of range.
+    InvalidAxis(String),
+    /// The cross-product exceeds [`MAX_SWEEP_POINTS`].
+    GridTooLarge(String),
+    /// The spec itself is malformed (bad JSON, bad field types).
+    MalformedSpec(String),
+    /// A workload template is invalid before any point is evaluated.
+    InvalidWorkload(String),
+}
+
+impl SweepError {
+    /// Stable machine-readable code (the `error.code` of the wire surface).
+    pub fn code(&self) -> &'static str {
+        match self {
+            SweepError::UnknownGpu(_) => "unknown_gpu",
+            SweepError::InvalidAxis(_) => "invalid_axis",
+            SweepError::GridTooLarge(_) => "grid_too_large",
+            SweepError::MalformedSpec(_) => "malformed_spec",
+            SweepError::InvalidWorkload(_) => "invalid_workload",
+        }
+    }
+}
+
+impl fmt::Display for SweepError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SweepError::UnknownGpu(name) => {
+                write!(
+                    f,
+                    "unknown GPU {name:?} (see Table VI; closest: {})",
+                    crate::hw::nearest_names(name, 3).join(", ")
+                )
+            }
+            SweepError::InvalidAxis(why) => write!(f, "invalid sweep axis: {why}"),
+            SweepError::GridTooLarge(why) => write!(f, "sweep grid too large: {why}"),
+            SweepError::MalformedSpec(why) => write!(f, "malformed sweep spec: {why}"),
+            SweepError::InvalidWorkload(why) => write!(f, "invalid sweep workload: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SweepError {}
+
+/// The comparable metrics every grid point collapses to — the three
+/// Pareto objectives plus the latency headline behind the attainment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepMetrics {
+    pub tokens_per_sec: f64,
+    pub slo_attainment: f64,
+    /// v1: SynPerf-method TTFT; v2: cluster p95 TTFT.
+    pub ttft_sec: f64,
+    /// v1: SynPerf-method TPOT; v2: cluster p95 TPOT.
+    pub tpot_sec: f64,
+    /// Whether the row came from a v2 cluster simulation.
+    pub cluster: bool,
+}
+
+/// One streamed result row: the point's coordinates plus either its
+/// metrics or the typed per-point failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRow {
+    pub index: usize,
+    pub workload: String,
+    pub gpu: String,
+    pub tp: u32,
+    pub pp: u32,
+    pub replicas: u32,
+    pub policy: RoutePolicy,
+    /// replicas × tp × pp — the Pareto cost objective.
+    pub gpu_count: u32,
+    pub outcome: Result<SweepMetrics, ScenarioError>,
+}
+
+/// Everything a finished sweep yields: the rows (in index order) and the
+/// ranked Pareto frontier over them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepOutcome {
+    pub rows: Vec<SweepRow>,
+    pub pareto: Pareto,
+}
+
+/// Collapse a v1 scenario report into sweep metrics: SynPerf-method
+/// throughput scaled by independent replicas (TTFT/TPOT are per-replica
+/// and stay unchanged), SLO attainment = fraction of scheduled phase
+/// checks met (1.0 when no phase is scheduled).
+pub fn scenario_metrics(
+    slo_ttft_sec: f64,
+    slo_tpot_sec: f64,
+    replicas: u32,
+    r: &ScenarioReport,
+) -> SweepMetrics {
+    let m = Method::SynPerf;
+    let tokens: f64 = r.phases.iter().map(|p| p.tokens).sum();
+    let time = r.totals.get(m);
+    let per_replica = if time > 0.0 { tokens / time } else { 0.0 };
+    let ttft_sec = r.ttft_sec(m).unwrap_or(0.0);
+    let tpot_sec = r.tpot_sec(m).unwrap_or(0.0);
+    let mut checks = 0u32;
+    let mut met = 0u32;
+    if r.phase(Phase::Prefill).is_some() {
+        checks += 1;
+        met += u32::from(ttft_sec <= slo_ttft_sec);
+    }
+    if r.phase(Phase::Decode).is_some() {
+        checks += 1;
+        met += u32::from(tpot_sec <= slo_tpot_sec);
+    }
+    SweepMetrics {
+        tokens_per_sec: per_replica * f64::from(replicas),
+        slo_attainment: if checks > 0 { f64::from(met) / f64::from(checks) } else { 1.0 },
+        ttft_sec,
+        tpot_sec,
+        cluster: false,
+    }
+}
+
+/// Collapse a v2 cluster report into sweep metrics — the report already
+/// aggregates across replicas, so no scaling is applied.
+pub fn cluster_metrics(r: &ClusterReport) -> SweepMetrics {
+    SweepMetrics {
+        tokens_per_sec: r.tokens_per_sec,
+        slo_attainment: r.slo_attainment,
+        ttft_sec: r.ttft.p95_sec,
+        tpot_sec: r.tpot.p95_sec,
+        cluster: true,
+    }
+}

@@ -1,0 +1,166 @@
+//! Pareto frontier over the sweep rows: maximize tokens/sec, maximize
+//! SLO attainment, minimize GPU count (replicas × tp × pp). Error rows
+//! never participate. The frontier is ranked by throughput-per-GPU (the
+//! capacity-planning headline), and every dominated row is annotated with
+//! the frontier rows that dominate it, in rank order.
+
+use super::{SweepMetrics, SweepRow};
+use std::collections::BTreeSet;
+
+/// Cap on the per-row dominated-by annotation — enough to point at the
+/// configs worth switching to without quadratic output on dense grids.
+pub const DOMINATED_BY_CAP: usize = 3;
+
+/// The ranked frontier plus dominated-by annotations, all in terms of row
+/// indices (rows are emitted in index order, so `frontier[0]` names the
+/// rank-1 row directly).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Pareto {
+    /// Row indices on the frontier, best throughput-per-GPU first.
+    pub frontier: Vec<usize>,
+    /// `(row index, dominating frontier row indices)` for every ok row
+    /// off the frontier, in row order; the inner list follows frontier
+    /// rank and is capped at [`DOMINATED_BY_CAP`].
+    pub dominated: Vec<(usize, Vec<usize>)>,
+}
+
+/// Strict Pareto dominance: at least as good on all three objectives and
+/// strictly better on one.
+fn dominates(a: (&SweepMetrics, u32), b: (&SweepMetrics, u32)) -> bool {
+    let (am, ag) = a;
+    let (bm, bg) = b;
+    let better_eq = am.tokens_per_sec >= bm.tokens_per_sec
+        && am.slo_attainment >= bm.slo_attainment
+        && ag <= bg;
+    let strict = am.tokens_per_sec > bm.tokens_per_sec
+        || am.slo_attainment > bm.slo_attainment
+        || ag < bg;
+    better_eq && strict
+}
+
+/// Compute the frontier over `rows`. O(n²) dominance checks — bounded by
+/// [`super::MAX_SWEEP_POINTS`], far below anything measurable.
+pub fn pareto(rows: &[SweepRow]) -> Pareto {
+    let ok: Vec<(usize, &SweepMetrics, u32)> = rows
+        .iter()
+        .filter_map(|r| r.outcome.as_ref().ok().map(|m| (r.index, m, r.gpu_count)))
+        .collect();
+    // positions (into `ok`) of rows no other ok row dominates
+    let mut frontier: Vec<usize> = (0..ok.len())
+        .filter(|&i| {
+            !ok.iter()
+                .enumerate()
+                .any(|(j, b)| j != i && dominates((b.1, b.2), (ok[i].1, ok[i].2)))
+        })
+        .collect();
+    frontier.sort_by(|&x, &y| {
+        let (ix, mx, gx) = ok[x];
+        let (iy, my, gy) = ok[y];
+        let ex = mx.tokens_per_sec / f64::from(gx);
+        let ey = my.tokens_per_sec / f64::from(gy);
+        ey.total_cmp(&ex)
+            .then(my.tokens_per_sec.total_cmp(&mx.tokens_per_sec))
+            .then(ix.cmp(&iy))
+    });
+    let frontier_rows: Vec<usize> = frontier.iter().map(|&p| ok[p].0).collect();
+    let on_frontier: BTreeSet<usize> = frontier_rows.iter().copied().collect();
+    let dominated: Vec<(usize, Vec<usize>)> = ok
+        .iter()
+        .filter(|(ri, _, _)| !on_frontier.contains(ri))
+        .map(|&(ri, m, g)| {
+            let by: Vec<usize> = frontier
+                .iter()
+                .filter(|&&p| dominates((ok[p].1, ok[p].2), (m, g)))
+                .map(|&p| ok[p].0)
+                .take(DOMINATED_BY_CAP)
+                .collect();
+            (ri, by)
+        })
+        .collect();
+    Pareto { frontier: frontier_rows, dominated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{RoutePolicy, ScenarioError};
+
+    fn row(index: usize, tps: f64, slo: f64, gpus: u32) -> SweepRow {
+        SweepRow {
+            index,
+            workload: "w".into(),
+            gpu: "A100".into(),
+            tp: gpus,
+            pp: 1,
+            replicas: 1,
+            policy: RoutePolicy::RoundRobin,
+            gpu_count: gpus,
+            outcome: Ok(SweepMetrics {
+                tokens_per_sec: tps,
+                slo_attainment: slo,
+                ttft_sec: 0.1,
+                tpot_sec: 0.01,
+                cluster: false,
+            }),
+        }
+    }
+
+    fn err_row(index: usize) -> SweepRow {
+        let mut r = row(index, 0.0, 0.0, 1);
+        r.outcome = Err(ScenarioError::InvalidParallelism("tp".into()));
+        r
+    }
+
+    #[test]
+    fn frontier_keeps_tradeoffs_and_ranks_by_efficiency() {
+        // r0: efficient; r1: 2x throughput at 2x cost (tie on tps/GPU,
+        // higher raw tps ranks first); r2: dominated by both
+        let rows = vec![row(0, 1024.0, 1.0, 1), row(1, 2048.0, 0.5, 2), row(2, 512.0, 0.5, 2)];
+        let p = pareto(&rows);
+        assert_eq!(p.frontier, vec![1, 0]);
+        assert_eq!(p.dominated, vec![(2, vec![1, 0])]);
+    }
+
+    #[test]
+    fn strictly_better_config_dominates_everything() {
+        let rows =
+            vec![row(0, 100.0, 0.5, 4), row(1, 200.0, 1.0, 1), row(2, 150.0, 0.75, 2)];
+        let p = pareto(&rows);
+        assert_eq!(p.frontier, vec![1]);
+        assert_eq!(p.dominated.len(), 2);
+        for (_, by) in &p.dominated {
+            assert_eq!(by, &vec![1]);
+        }
+    }
+
+    #[test]
+    fn error_rows_never_participate() {
+        let rows = vec![err_row(0), row(1, 10.0, 1.0, 1), err_row(2)];
+        let p = pareto(&rows);
+        assert_eq!(p.frontier, vec![1]);
+        assert!(p.dominated.is_empty());
+    }
+
+    #[test]
+    fn empty_and_all_error_sweeps_yield_empty_frontiers() {
+        assert_eq!(pareto(&[]), Pareto::default());
+        assert_eq!(pareto(&[err_row(0)]), Pareto::default());
+    }
+
+    #[test]
+    fn dominated_by_honors_the_cap() {
+        // four mutually non-dominating frontier points that all dominate r4
+        let rows = vec![
+            row(0, 400.0, 1.0, 4),
+            row(1, 300.0, 1.0, 3),
+            row(2, 200.0, 1.0, 2),
+            row(3, 100.0, 1.0, 1),
+            row(4, 50.0, 0.5, 5),
+        ];
+        let p = pareto(&rows);
+        assert_eq!(p.frontier.len(), 4);
+        let (ri, by) = &p.dominated[0];
+        assert_eq!(*ri, 4);
+        assert_eq!(by.len(), DOMINATED_BY_CAP);
+    }
+}

@@ -1,0 +1,231 @@
+//! The sweep executor: fan the expanded grid over work-stealing workers,
+//! each owning one [`Simulator`] for its whole lifetime (per-GPU comm
+//! models train once per worker, deterministically, and every evaluation
+//! hammers the shared sharded engine cache), and re-emit finished rows in
+//! strict index order regardless of scheduling. Rows are streamed through
+//! the `on_row` callback as soon as their turn comes, so a caller can
+//! print JSONL incrementally while the grid is still running.
+
+use super::grid::{expand, SweepPoint};
+use super::pareto::pareto;
+use super::{cluster_metrics, scenario_metrics, SweepError, SweepOutcome, SweepRow, SweepSpec};
+use crate::scenario::wire::SimulateRequest;
+use crate::scenario::Simulator;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+
+/// Materialize the simulate request for one grid point: the workload
+/// template with the point's hardware coordinates written over it. For
+/// cluster templates the sweep-level SLOs are pinned too, so attainment
+/// is comparable across every row.
+pub fn point_request(spec: &SweepSpec, point: &SweepPoint) -> SimulateRequest {
+    match &spec.workloads[point.workload].template {
+        SimulateRequest::Scenario(t) => {
+            let mut s = t.clone();
+            s.gpu = point.gpu.clone();
+            s.tp = point.tp;
+            s.pp = point.pp;
+            SimulateRequest::Scenario(s)
+        }
+        SimulateRequest::Cluster(t) => {
+            let mut c = t.clone();
+            c.gpu = point.gpu.clone();
+            c.tp = point.tp;
+            c.pp = point.pp;
+            c.replicas = point.replicas;
+            c.policy = point.policy;
+            c.slo_ttft_sec = spec.slo_ttft_sec;
+            c.slo_tpot_sec = spec.slo_tpot_sec;
+            SimulateRequest::Cluster(c)
+        }
+    }
+}
+
+/// Evaluate one point into its row. Never fails: infeasible configs
+/// carry their typed [`crate::scenario::ScenarioError`] in the outcome.
+fn eval_point(sim: &Simulator, spec: &SweepSpec, point: &SweepPoint, threads: usize) -> SweepRow {
+    let outcome = match point_request(spec, point) {
+        SimulateRequest::Scenario(s) => sim
+            .simulate_with_threads(&s, threads)
+            .map(|r| scenario_metrics(spec.slo_ttft_sec, spec.slo_tpot_sec, point.replicas, &r)),
+        SimulateRequest::Cluster(c) => {
+            sim.simulate_cluster_with_threads(&c, threads).map(|r| cluster_metrics(&r))
+        }
+    };
+    SweepRow {
+        index: point.index,
+        workload: spec.workloads[point.workload].name.clone(),
+        gpu: point.gpu.clone(),
+        tp: point.tp,
+        pp: point.pp,
+        replicas: point.replicas,
+        policy: point.policy,
+        gpu_count: point.replicas * point.tp * point.pp,
+        outcome,
+    }
+}
+
+/// Run the whole sweep. `factory` builds one [`Simulator`] per worker
+/// ([`Simulator`] is not `Send`, and per-worker construction is exactly
+/// what keeps the comm-model cache hot); `threads` bounds the worker
+/// count (a single worker evaluates serially and hands the full thread
+/// budget to the inner evaluators instead — rows are byte-identical
+/// either way, which is the repo-wide `--threads` invariant). `on_row`
+/// fires once per row, in index order, as soon as the row's turn
+/// completes.
+pub fn run_sweep<F, G>(
+    spec: &SweepSpec,
+    factory: F,
+    threads: usize,
+    mut on_row: G,
+) -> Result<SweepOutcome, SweepError>
+where
+    F: Fn() -> Simulator + Sync,
+    G: FnMut(&SweepRow),
+{
+    let points = expand(spec)?;
+    let threads = threads.max(1);
+    let workers = threads.min(points.len()).max(1);
+    let mut rows: Vec<SweepRow> = Vec::with_capacity(points.len());
+    if workers <= 1 {
+        let sim = factory();
+        for point in &points {
+            let row = eval_point(&sim, spec, point, threads);
+            on_row(&row);
+            rows.push(row);
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = sync_channel::<SweepRow>(workers * 4);
+        let next_ref = &next;
+        let factory_ref = &factory;
+        let points_ref = &points[..];
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                s.spawn(move || {
+                    let sim = factory_ref();
+                    loop {
+                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= points_ref.len() {
+                            break;
+                        }
+                        // inner evaluation stays single-threaded — the
+                        // outer fan-out owns the parallelism budget
+                        if tx.send(eval_point(&sim, spec, &points_ref[i], 1)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            // reorder out-of-order completions with O(workers + channel)
+            // buffered rows: emit strictly by index as gaps fill
+            let mut pending: BTreeMap<usize, SweepRow> = BTreeMap::new();
+            let mut next_emit = 0usize;
+            while let Ok(row) = rx.recv() {
+                pending.insert(row.index, row);
+                while let Some(row) = pending.remove(&next_emit) {
+                    on_row(&row);
+                    rows.push(row);
+                    next_emit += 1;
+                }
+            }
+        });
+    }
+    let frontier = pareto(&rows);
+    Ok(SweepOutcome { rows, pareto: frontier })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::e2e::workload::Request;
+    use crate::scenario::{ScenarioSpec, WorkloadSpec};
+    use crate::sweep::GpuFilter;
+
+    fn small_sweep() -> SweepSpec {
+        // llama3.1-8b has 32 attention heads: tp=3 cannot divide them, so
+        // half the grid is infeasible by construction
+        SweepSpec::new()
+            .gpus(GpuFilter::Named(vec!["A100".into(), "H800".into()]))
+            .tp(vec![1, 3])
+            .scenario(
+                "tiny",
+                ScenarioSpec::new("llama3.1-8b", "")
+                    .workload(WorkloadSpec::Explicit(vec![Request {
+                        input_len: 64,
+                        output_len: 4,
+                    }]))
+                    .seed(3),
+            )
+    }
+
+    #[test]
+    fn rows_stream_in_index_order_and_are_identical_across_thread_counts() {
+        let spec = small_sweep();
+        let run = |threads: usize| {
+            let mut streamed: Vec<usize> = Vec::new();
+            let out = run_sweep(&spec, Simulator::degraded, threads, |r| streamed.push(r.index))
+                .unwrap();
+            assert_eq!(streamed, vec![0, 1, 2, 3], "streaming order at {threads} threads");
+            out
+        };
+        let one = run(1);
+        let four = run(4);
+        assert_eq!(one.rows, four.rows, "rows must not depend on scheduling");
+        assert_eq!(one.pareto, four.pareto);
+        for (i, r) in one.rows.iter().enumerate() {
+            assert_eq!(r.index, i);
+        }
+    }
+
+    #[test]
+    fn infeasible_points_become_typed_error_rows_without_aborting() {
+        let out = run_sweep(&small_sweep(), Simulator::degraded, 2, |_| {}).unwrap();
+        assert_eq!(out.rows.len(), 4);
+        // grid order: (A100,1) (A100,3) (H800,1) (H800,3)
+        for (i, r) in out.rows.iter().enumerate() {
+            if r.tp == 3 {
+                assert_eq!(
+                    r.outcome.as_ref().unwrap_err().code(),
+                    "invalid_parallelism",
+                    "row {i}"
+                );
+            } else {
+                let m = r.outcome.as_ref().expect("tp=1 rows must succeed");
+                assert!(m.tokens_per_sec > 0.0, "row {i}");
+            }
+        }
+        // error rows never reach the frontier
+        for &fi in &out.pareto.frontier {
+            assert!(out.rows[fi].outcome.is_ok());
+        }
+        assert!(!out.pareto.frontier.is_empty());
+    }
+
+    #[test]
+    fn spec_level_failures_abort_before_any_row() {
+        let spec = small_sweep().gpus(GpuFilter::Named(vec!["B300".into()]));
+        let mut streamed = 0usize;
+        let err = run_sweep(&spec, Simulator::degraded, 2, |_| streamed += 1).unwrap_err();
+        assert_eq!(err.code(), "unknown_gpu");
+        assert_eq!(streamed, 0);
+    }
+
+    #[test]
+    fn v1_replicas_scale_throughput_but_not_latency() {
+        let spec = small_sweep()
+            .gpus(GpuFilter::Named(vec!["A100".into()]))
+            .tp(vec![1])
+            .replicas(vec![1, 2]);
+        let out = run_sweep(&spec, Simulator::degraded, 1, |_| {}).unwrap();
+        let one = out.rows[0].outcome.as_ref().unwrap();
+        let two = out.rows[1].outcome.as_ref().unwrap();
+        assert_eq!(out.rows[1].gpu_count, 2);
+        assert!((two.tokens_per_sec - 2.0 * one.tokens_per_sec).abs() < 1e-9);
+        assert_eq!(two.ttft_sec, one.ttft_sec);
+        assert_eq!(two.tpot_sec, one.tpot_sec);
+    }
+}

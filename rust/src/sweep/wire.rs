@@ -1,0 +1,512 @@
+//! JSONL wire codec for the **`sweep` verb**: a request line carries a
+//! [`SweepSpec`]; the CLI streams one row line per grid point plus a
+//! frontier block, while the stdio wire answers with a single line
+//! embedding every row and the frontier (one-line-per-request holds).
+//!
+//! Request line:
+//!
+//! ```json
+//! {"v":1,"id":"sw1","op":"sweep","sweep":{"gpus":"all","tp":[1,2],
+//!  "pp":[1],"replicas":[1],"policies":["round_robin"],
+//!  "slo":{"ttft_sec":2e0,"tpot_sec":2e-1},
+//!  "workloads":[{"name":"chat","scenario":{"model":"Qwen2.5-14B",
+//!  "workload":{"kind":"arxiv","batch":8},"seed":7}}]}}
+//! ```
+//!
+//! `gpus` is `"all"` (default), `"seen"`, `"unseen"`, or an array of
+//! names; every other axis defaults to `[1]` / `["round_robin"]`.
+//! Workload templates are ordinary `scenario` / `cluster` objects whose
+//! `gpu` (and `tp`/`pp`/`replicas`/`policy`) the grid overwrites per
+//! point, so they may omit `gpu` entirely. Streamed row lines and the
+//! frontier block:
+//!
+//! ```json
+//! {"v":1,"row":{"index":0,"workload":"chat","gpu":"A40","tp":1,"pp":1,
+//!  "replicas":1,"policy":"round_robin","gpu_count":1,"ok":true,
+//!  "cluster":false,"tokens_per_sec":1.1e3,"slo_attainment":1e0,
+//!  "ttft_sec":2.1e-1,"tpot_sec":1.9e-2}}
+//! {"v":1,"row":{"index":3,...,"ok":false,"error":{"code":
+//!  "invalid_parallelism","message":"...","reason":"..."}}}
+//! {"v":1,"frontier":[{"rank":1,"index":5,...}],"dominated":[{"index":0,
+//!  "by":[5]}]}
+//! ```
+//!
+//! Spec-level failures speak the closed [`SweepError`] taxonomy; per-row
+//! errors reuse the scenario error object byte-for-byte.
+
+use super::{GpuFilter, Pareto, SweepError, SweepOutcome, SweepRow, SweepSpec, SweepWorkload};
+use crate::api::wire::{esc, id_of};
+use crate::api::PROTOCOL_VERSION;
+use crate::scenario::wire::{self as scenario_wire, SimulateRequest};
+use crate::scenario::{RoutePolicy, ScenarioError};
+use crate::util::json::{parse, Json};
+
+fn malformed(why: impl Into<String>) -> SweepError {
+    SweepError::MalformedSpec(why.into())
+}
+
+/// Map a workload-template parse failure into the sweep taxonomy.
+fn template_err(e: ScenarioError) -> SweepError {
+    match e {
+        ScenarioError::MalformedSpec(why) => SweepError::MalformedSpec(why),
+        ScenarioError::UnknownGpu(gpu) => SweepError::UnknownGpu(gpu),
+        other => SweepError::InvalidWorkload(other.to_string()),
+    }
+}
+
+fn axis_u32(v: &Json, what: &str) -> Result<Vec<u32>, SweepError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| malformed(format!("{what:?} must be an array of unsigned integers")))?;
+    arr.iter()
+        .map(|x| {
+            x.as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= f64::from(u32::MAX))
+                .map(|n| n as u32)
+                .ok_or_else(|| malformed(format!("{what:?} entries must be unsigned integers")))
+        })
+        .collect()
+}
+
+// ---- spec ----------------------------------------------------------------
+
+fn filter_to_json(f: &GpuFilter) -> String {
+    match f {
+        GpuFilter::All => "\"all\"".to_string(),
+        GpuFilter::Seen => "\"seen\"".to_string(),
+        GpuFilter::Unseen => "\"unseen\"".to_string(),
+        GpuFilter::Named(names) => {
+            let items: Vec<String> = names.iter().map(|n| format!("\"{}\"", esc(n))).collect();
+            format!("[{}]", items.join(","))
+        }
+    }
+}
+
+fn filter_from_json(v: &Json) -> Result<GpuFilter, SweepError> {
+    match v {
+        Json::Str(s) => match s.as_str() {
+            "all" => Ok(GpuFilter::All),
+            "seen" => Ok(GpuFilter::Seen),
+            "unseen" => Ok(GpuFilter::Unseen),
+            other => Err(malformed(format!(
+                "\"gpus\" filter {other:?} is not all|seen|unseen"
+            ))),
+        },
+        Json::Arr(items) => items
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| malformed("\"gpus\" entries must be strings"))
+            })
+            .collect::<Result<Vec<String>, SweepError>>()
+            .map(GpuFilter::Named),
+        _ => Err(malformed("\"gpus\" must be \"all\"|\"seen\"|\"unseen\" or an array of names")),
+    }
+}
+
+fn sweep_to_json(spec: &SweepSpec) -> String {
+    let ints = |xs: &[u32]| xs.iter().map(u32::to_string).collect::<Vec<_>>().join(",");
+    let policies: Vec<String> =
+        spec.policies.iter().map(|p| format!("\"{}\"", p.name())).collect();
+    let workloads: Vec<String> = spec
+        .workloads
+        .iter()
+        .map(|w| {
+            let body = match &w.template {
+                SimulateRequest::Scenario(s) => {
+                    format!("\"scenario\":{}", scenario_wire::spec_to_json(s))
+                }
+                SimulateRequest::Cluster(c) => {
+                    format!("\"cluster\":{}", scenario_wire::cluster_to_json(c))
+                }
+            };
+            format!("{{\"name\":\"{}\",{}}}", esc(&w.name), body)
+        })
+        .collect();
+    format!(
+        r#"{{"gpus":{},"tp":[{}],"pp":[{}],"replicas":[{}],"policies":[{}],"slo":{{"ttft_sec":{:e},"tpot_sec":{:e}}},"workloads":[{}]}}"#,
+        filter_to_json(&spec.gpus),
+        ints(&spec.tp),
+        ints(&spec.pp),
+        ints(&spec.replicas),
+        policies.join(","),
+        spec.slo_ttft_sec,
+        spec.slo_tpot_sec,
+        workloads.join(",")
+    )
+}
+
+/// Serialize a sweep request into its canonical wire line (no trailing
+/// newline). The inverse of [`parse_sweep_line`].
+pub fn encode_sweep_request(id: Option<&str>, spec: &SweepSpec) -> String {
+    let mut out = format!("{{\"v\":{PROTOCOL_VERSION}");
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    out.push_str(&format!(",\"op\":\"sweep\",\"sweep\":{}", sweep_to_json(spec)));
+    out.push('}');
+    out
+}
+
+fn parse_sweep_object(j: &Json) -> Result<SweepSpec, SweepError> {
+    let mut spec = SweepSpec::new();
+    if let Some(v) = j.get("gpus") {
+        spec.gpus = filter_from_json(v)?;
+    }
+    if let Some(v) = j.get("tp") {
+        spec.tp = axis_u32(v, "tp")?;
+    }
+    if let Some(v) = j.get("pp") {
+        spec.pp = axis_u32(v, "pp")?;
+    }
+    if let Some(v) = j.get("replicas") {
+        spec.replicas = axis_u32(v, "replicas")?;
+    }
+    if let Some(v) = j.get("policies") {
+        let arr =
+            v.as_arr().ok_or_else(|| malformed("\"policies\" must be an array of names"))?;
+        spec.policies = arr
+            .iter()
+            .map(|x| {
+                let s = x
+                    .as_str()
+                    .ok_or_else(|| malformed("\"policies\" entries must be strings"))?;
+                RoutePolicy::from_name(s).ok_or_else(|| {
+                    SweepError::InvalidAxis(format!(
+                        "unknown policy {s:?} (round_robin|least_loaded|session_affinity)"
+                    ))
+                })
+            })
+            .collect::<Result<Vec<RoutePolicy>, SweepError>>()?;
+    }
+    if let Some(s) = j.get("slo") {
+        if let Some(v) = s.get("ttft_sec") {
+            spec.slo_ttft_sec =
+                v.as_f64().ok_or_else(|| malformed("\"slo.ttft_sec\" must be a number"))?;
+        }
+        if let Some(v) = s.get("tpot_sec") {
+            spec.slo_tpot_sec =
+                v.as_f64().ok_or_else(|| malformed("\"slo.tpot_sec\" must be a number"))?;
+        }
+    }
+    let w = j.get("workloads").ok_or_else(|| malformed("sweep needs \"workloads\": [..]"))?;
+    let arr = w.as_arr().ok_or_else(|| malformed("\"workloads\" must be an array"))?;
+    let mut workloads = Vec::with_capacity(arr.len());
+    for (i, item) in arr.iter().enumerate() {
+        let name = match item.get("name") {
+            None => format!("w{i}"),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| malformed("workload \"name\" must be a string"))?
+                .to_string(),
+        };
+        let template = if let Some(c) = item.get("cluster") {
+            scenario_wire::parse_cluster_template(c).map(SimulateRequest::Cluster)
+        } else if let Some(s) = item.get("scenario") {
+            scenario_wire::parse_spec_template(s).map(SimulateRequest::Scenario)
+        } else {
+            Err(ScenarioError::MalformedSpec(
+                "workloads need a \"scenario\" or \"cluster\" template".into(),
+            ))
+        }
+        .map_err(template_err)?;
+        workloads.push(SweepWorkload { name, template });
+    }
+    spec.workloads = workloads;
+    Ok(spec)
+}
+
+fn check_version(j: &Json) -> Result<(), SweepError> {
+    if let Some(v) = j.get("v").and_then(|v| v.as_f64()) {
+        if v as u32 != PROTOCOL_VERSION {
+            return Err(malformed(format!(
+                "protocol version {v} (this build speaks v{PROTOCOL_VERSION})"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn sweep_fields(j: &Json) -> Result<SweepSpec, SweepError> {
+    check_version(j)?;
+    let sw = j.get("sweep").ok_or_else(|| malformed("sweep request needs a \"sweep\" object"))?;
+    parse_sweep_object(sw)
+}
+
+/// Envelope parse over an already-decoded line (single-parse dispatch —
+/// what the stdio loop uses).
+pub(crate) fn parse_sweep_json(j: &Json) -> (Option<String>, Result<SweepSpec, SweepError>) {
+    (id_of(j), sweep_fields(j))
+}
+
+/// Whether a decoded wire object addresses the sweep verb. Checked before
+/// the simulate shapes in the stdio dispatcher.
+pub(crate) fn is_sweep_json(j: &Json) -> bool {
+    j.get("op").and_then(|v| v.as_str()) == Some("sweep") || j.get("sweep").is_some()
+}
+
+/// Parse a sweep line in either shape: the wire envelope or a bare sweep
+/// object (`{"gpus":..,"workloads":[..]}`) — what `synperf sweep --spec`
+/// accepts.
+pub fn parse_sweep_line(line: &str) -> (Option<String>, Result<SweepSpec, SweepError>) {
+    let j = match parse(line) {
+        Ok(j) => j,
+        Err(e) => return (None, Err(malformed(format!("malformed JSON: {e}")))),
+    };
+    let res = if j.get("sweep").is_some() || j.get("op").is_some() {
+        sweep_fields(&j)
+    } else {
+        parse_sweep_object(&j)
+    };
+    (id_of(&j), res)
+}
+
+/// Whether a wire line addresses the sweep verb (malformed JSON is not
+/// claimed — the predict codec owns that bucket).
+pub fn is_sweep_request(line: &str) -> bool {
+    match parse(line) {
+        Ok(j) => is_sweep_json(&j),
+        Err(_) => false,
+    }
+}
+
+// ---- rows & frontier ------------------------------------------------------
+
+fn row_to_json(r: &SweepRow) -> String {
+    let mut out = format!(
+        r#"{{"index":{},"workload":"{}","gpu":"{}","tp":{},"pp":{},"replicas":{},"policy":"{}","gpu_count":{}"#,
+        r.index,
+        esc(&r.workload),
+        esc(&r.gpu),
+        r.tp,
+        r.pp,
+        r.replicas,
+        r.policy.name(),
+        r.gpu_count
+    );
+    match &r.outcome {
+        Ok(m) => out.push_str(&format!(
+            r#","ok":true,"cluster":{},"tokens_per_sec":{:e},"slo_attainment":{:e},"ttft_sec":{:e},"tpot_sec":{:e}"#,
+            m.cluster, m.tokens_per_sec, m.slo_attainment, m.ttft_sec, m.tpot_sec
+        )),
+        Err(e) => {
+            out.push_str(&format!(",\"ok\":false,\"error\":{}", scenario_wire::error_to_json(e)))
+        }
+    }
+    out.push('}');
+    out
+}
+
+/// One streamed JSONL result row (no trailing newline).
+pub fn encode_row(r: &SweepRow) -> String {
+    format!("{{\"v\":{PROTOCOL_VERSION},\"row\":{}}}", row_to_json(r))
+}
+
+fn frontier_entry_to_json(rank: usize, r: &SweepRow) -> String {
+    // frontier members are ok rows by construction
+    let m = r.outcome.as_ref().expect("frontier rows carry metrics");
+    format!(
+        r#"{{"rank":{},"index":{},"workload":"{}","gpu":"{}","tp":{},"pp":{},"replicas":{},"policy":"{}","gpu_count":{},"tokens_per_sec":{:e},"slo_attainment":{:e}}}"#,
+        rank,
+        r.index,
+        esc(&r.workload),
+        esc(&r.gpu),
+        r.tp,
+        r.pp,
+        r.replicas,
+        r.policy.name(),
+        r.gpu_count,
+        m.tokens_per_sec,
+        m.slo_attainment
+    )
+}
+
+/// `rows` must be in index order (what [`super::run_sweep`] yields), so
+/// the frontier's row indices can be used as positions directly.
+fn frontier_body(rows: &[SweepRow], p: &Pareto) -> String {
+    let entries: Vec<String> = p
+        .frontier
+        .iter()
+        .enumerate()
+        .map(|(i, &ri)| frontier_entry_to_json(i + 1, &rows[ri]))
+        .collect();
+    let dom: Vec<String> = p
+        .dominated
+        .iter()
+        .map(|(ri, by)| {
+            let by: Vec<String> = by.iter().map(usize::to_string).collect();
+            format!(r#"{{"index":{},"by":[{}]}}"#, ri, by.join(","))
+        })
+        .collect();
+    format!(r#""frontier":[{}],"dominated":[{}]"#, entries.join(","), dom.join(","))
+}
+
+/// The frontier block the CLI emits after the last row (no trailing
+/// newline).
+pub fn encode_frontier(rows: &[SweepRow], p: &Pareto) -> String {
+    format!("{{\"v\":{PROTOCOL_VERSION},{}}}", frontier_body(rows, p))
+}
+
+fn sweep_error_to_json(e: &SweepError) -> String {
+    let mut out =
+        format!("{{\"code\":\"{}\",\"message\":\"{}\"", e.code(), esc(&e.to_string()));
+    match e {
+        SweepError::UnknownGpu(name) => out.push_str(&format!(",\"gpu\":\"{}\"", esc(name))),
+        SweepError::InvalidAxis(why)
+        | SweepError::GridTooLarge(why)
+        | SweepError::MalformedSpec(why)
+        | SweepError::InvalidWorkload(why) => {
+            out.push_str(&format!(",\"reason\":\"{}\"", esc(why)));
+        }
+    }
+    out.push('}');
+    out
+}
+
+/// One-line sweep response for the stdio wire: every row plus the ranked
+/// frontier in a single envelope, or the spec-level error. The grid cap
+/// ([`super::MAX_SWEEP_POINTS`]) bounds the line length.
+pub fn encode_sweep_response(id: Option<&str>, res: &Result<SweepOutcome, SweepError>) -> String {
+    let mut out = format!("{{\"v\":{PROTOCOL_VERSION}");
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    match res {
+        Ok(o) => {
+            let rows: Vec<String> = o.rows.iter().map(row_to_json).collect();
+            out.push_str(&format!(
+                ",\"ok\":true,\"sweep\":{{\"rows\":[{}],{}}}",
+                rows.join(","),
+                frontier_body(&o.rows, &o.pareto)
+            ));
+        }
+        Err(e) => out.push_str(&format!(",\"ok\":false,\"error\":{}", sweep_error_to_json(e))),
+    }
+    out.push('}');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::e2e::workload::WorkloadKind;
+    use crate::scenario::{ArrivalSpec, ClusterSpec, ScenarioSpec};
+    use crate::sweep::run_sweep;
+    use crate::scenario::Simulator;
+
+    fn round_trip_spec() -> SweepSpec {
+        SweepSpec::new()
+            .gpus(GpuFilter::Named(vec!["A100".into(), "H800".into()]))
+            .tp(vec![1, 2])
+            .replicas(vec![1, 4])
+            .policies(vec![RoutePolicy::LeastLoaded])
+            .slo(1.5, 0.25)
+            .scenario("chat", ScenarioSpec::new("Qwen2.5-14B", "").seed(7))
+            .workload(
+                "serve",
+                SimulateRequest::Cluster(ClusterSpec::new("Llama3.1-8B", "").arrivals(
+                    ArrivalSpec::Uniform { gap_sec: 0.5, n: 4, kind: WorkloadKind::Arxiv },
+                )),
+            )
+    }
+
+    #[test]
+    fn sweep_requests_round_trip() {
+        let spec = round_trip_spec();
+        let line = encode_sweep_request(Some("sw"), &spec);
+        assert!(is_sweep_request(&line), "{line}");
+        let (id, parsed) = parse_sweep_line(&line);
+        assert_eq!(id.as_deref(), Some("sw"));
+        assert_eq!(parsed.unwrap(), spec, "round trip of {line}");
+    }
+
+    #[test]
+    fn bare_sweep_objects_parse_with_defaults() {
+        let (_, res) = parse_sweep_line(
+            r#"{"workloads":[{"scenario":{"model":"Qwen2.5-14B"}},{"cluster":{"model":"Llama3.1-8B"}}]}"#,
+        );
+        let spec = res.unwrap();
+        assert_eq!(spec.gpus, GpuFilter::All);
+        assert_eq!(spec.tp, vec![1]);
+        assert_eq!(spec.policies, vec![RoutePolicy::RoundRobin]);
+        assert_eq!(spec.slo_ttft_sec, 2.0);
+        assert_eq!(spec.workloads.len(), 2);
+        // auto-named by position
+        assert_eq!(spec.workloads[0].name, "w0");
+        assert_eq!(spec.workloads[1].name, "w1");
+        assert!(matches!(spec.workloads[1].template, SimulateRequest::Cluster(_)));
+    }
+
+    #[test]
+    fn malformed_sweeps_map_into_the_taxonomy() {
+        let cases = [
+            ("not json", "malformed_spec"),
+            (r#"{"op":"sweep"}"#, "malformed_spec"),
+            (r#"{"v":9,"op":"sweep","sweep":{"workloads":[]}}"#, "malformed_spec"),
+            (r#"{"sweep":{}}"#, "malformed_spec"),
+            (r#"{"sweep":{"gpus":"fastest","workloads":[]}}"#, "malformed_spec"),
+            (r#"{"sweep":{"tp":[1.5],"workloads":[]}}"#, "malformed_spec"),
+            (
+                r#"{"sweep":{"policies":["random"],"workloads":[{"scenario":{"model":"m"}}]}}"#,
+                "invalid_axis",
+            ),
+            (r#"{"sweep":{"workloads":[{"scenario":{"gpu":"A100"}}]}}"#, "malformed_spec"),
+            (r#"{"sweep":{"workloads":[{"name":"x"}]}}"#, "malformed_spec"),
+            (
+                r#"{"sweep":{"workloads":[{"scenario":{"model":"m","workload":{"kind":"mmlu"}}}]}}"#,
+                "invalid_workload",
+            ),
+        ];
+        for (line, code) in cases {
+            let (_, res) = parse_sweep_line(line);
+            assert_eq!(res.unwrap_err().code(), code, "for line {line}");
+        }
+    }
+
+    #[test]
+    fn verb_dispatch_does_not_overlap_simulate() {
+        assert!(is_sweep_request(r#"{"op":"sweep","sweep":{"workloads":[]}}"#));
+        assert!(is_sweep_request(r#"{"sweep":{"workloads":[]}}"#));
+        assert!(!is_sweep_request(r#"{"scenario":{"model":"m","gpu":"g"}}"#));
+        assert!(!is_sweep_request(r#"{"cluster":{"model":"m","gpu":"g"}}"#));
+        assert!(!is_sweep_request(r#"{"gpu":"A100","kernel":{"type":"rmsnorm","seq":1,"dim":8}}"#));
+        assert!(!crate::scenario::wire::is_simulate_request(
+            r#"{"op":"sweep","sweep":{"workloads":[]}}"#
+        ));
+    }
+
+    #[test]
+    fn responses_embed_rows_and_frontier_in_one_line() {
+        use crate::e2e::workload::Request;
+        use crate::scenario::WorkloadSpec;
+        let spec = SweepSpec::new()
+            .gpus(GpuFilter::Named(vec!["A100".into(), "H20".into()]))
+            .scenario(
+                "tiny",
+                ScenarioSpec::new("llama3.1-8b", "").workload(WorkloadSpec::Explicit(vec![
+                    Request { input_len: 48, output_len: 2 },
+                ])),
+            );
+        let out = run_sweep(&spec, Simulator::degraded, 2, |_| {}).unwrap();
+        let line = encode_sweep_response(Some("sw1"), &Ok(out.clone()));
+        assert!(line.starts_with(r#"{"v":1,"id":"sw1","ok":true,"sweep":{"rows":["#), "{line}");
+        assert!(line.contains(r#""frontier":["#), "{line}");
+        assert!(!line.contains('\n'));
+        // each row's embedded object matches its streamed encoding
+        for row in &out.rows {
+            let streamed = encode_row(row);
+            let inner = streamed
+                .strip_prefix(r#"{"v":1,"row":"#)
+                .and_then(|s| s.strip_suffix('}'))
+                .unwrap();
+            assert!(line.contains(inner), "row {} drifted between shapes", row.index);
+        }
+        // spec-level errors ride the same envelope
+        let err = encode_sweep_response(None, &Err(SweepError::GridTooLarge("big".into())));
+        assert_eq!(
+            err,
+            r#"{"v":1,"ok":false,"error":{"code":"grid_too_large","message":"sweep grid too large: big","reason":"big"}}"#
+        );
+    }
+}

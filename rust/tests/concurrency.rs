@@ -131,6 +131,7 @@ fn stdio_mixed_verbs_stay_in_order_under_parallel_load() {
             input.as_bytes(),
             &mut out,
             8,
+            7,
         )
         .unwrap();
         for h in hammer {

@@ -7,6 +7,10 @@
 //! The Scenario-API `simulate` verb gets the same treatment: exact golden
 //! lines for the simulate request, the `ScenarioReport` response and every
 //! `ScenarioError` variant, plus a full round trip over the stdio wire.
+//!
+//! The `sweep` verb is pinned the same way: exact goldens for the sweep
+//! request, the streamed row shapes (ok and per-row error), the frontier
+//! block and the spec-level `SweepError` envelope.
 
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
@@ -20,8 +24,11 @@ use synperf::hw::gpu_by_name;
 use synperf::kernels::{DType, KernelConfig, KernelKind};
 use synperf::scenario::wire as scenario_wire;
 use synperf::scenario::{
-    ClassBreakdown, MethodTotals, OpClass, Phase, PhaseReport, ScenarioError, ScenarioReport,
-    ScenarioSpec, Simulator, WorkloadSpec,
+    ClassBreakdown, MethodTotals, OpClass, Phase, PhaseReport, RoutePolicy, ScenarioError,
+    ScenarioReport, ScenarioSpec, Simulator, WorkloadSpec,
+};
+use synperf::sweep::{
+    pareto, wire as sweep_wire, GpuFilter, SweepError, SweepMetrics, SweepRow, SweepSpec,
 };
 
 fn gemm(m: u32, n: u32, k: u32) -> KernelConfig {
@@ -71,7 +78,7 @@ fn error_golden_lines_cover_the_whole_taxonomy() {
     let cases: Vec<(PredictError, &str)> = vec![
         (
             PredictError::UnknownGpu("B300".to_string()),
-            r#"{"v":1,"ok":false,"error":{"code":"unknown_gpu","message":"unknown GPU \"B300\" (see Table VI)","gpu":"B300"}}"#,
+            r#"{"v":1,"ok":false,"error":{"code":"unknown_gpu","message":"unknown GPU \"B300\" (see Table VI; closest: A100, H800, H100)","gpu":"B300"}}"#,
         ),
         (
             PredictError::UnsupportedKernel("attention batch must be non-empty".to_string()),
@@ -354,7 +361,7 @@ fn scenario_error_golden_lines_cover_the_whole_taxonomy() {
         ),
         (
             ScenarioError::UnknownGpu("B300".to_string()),
-            r#"{"v":1,"ok":false,"error":{"code":"unknown_gpu","message":"unknown GPU \"B300\" (see Table VI)","gpu":"B300"}}"#,
+            r#"{"v":1,"ok":false,"error":{"code":"unknown_gpu","message":"unknown GPU \"B300\" (see Table VI; closest: A100, H800, H100)","gpu":"B300"}}"#,
         ),
         (
             ScenarioError::InvalidParallelism("tp=3 does not divide 40 attention heads of Qwen2.5-14B".to_string()),
@@ -401,7 +408,7 @@ fn simulate_round_trips_over_the_stdio_wire() {
     );
     let mut out = Vec::new();
     let stats =
-        serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8).unwrap();
+        serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8, 2).unwrap();
     assert_eq!(stats.served, 5);
     assert_eq!(stats.simulated, 4);
     assert_eq!(stats.errors, 3);
@@ -435,5 +442,143 @@ fn simulate_round_trips_over_the_stdio_wire() {
     assert!(
         lines[4].contains(r#""id":"sim4""#) && lines[4].contains(r#""code":"invalid_parallelism""#)
     );
+    svc.shutdown();
+}
+
+// ---- Sweep subsystem: the sweep verb --------------------------------------
+
+#[test]
+fn sweep_request_golden_line() {
+    let spec = SweepSpec::new()
+        .gpus(GpuFilter::Named(vec!["A100".into(), "H800".into()]))
+        .tp(vec![1, 2])
+        .slo(2.0, 0.25)
+        .scenario("chat", ScenarioSpec::new("Qwen2.5-14B", ""));
+    let line = sweep_wire::encode_sweep_request(Some("sw1"), &spec);
+    assert_eq!(
+        line,
+        r#"{"v":1,"id":"sw1","op":"sweep","sweep":{"gpus":["A100","H800"],"tp":[1,2],"pp":[1],"replicas":[1],"policies":["round_robin"],"slo":{"ttft_sec":2e0,"tpot_sec":2.5e-1},"workloads":[{"name":"chat","scenario":{"model":"Qwen2.5-14B","gpu":"","tp":1,"pp":1,"workload":{"kind":"arxiv","batch":8},"phases":"both","seed":0,"host_gap_sec":8e-7}}]}}"#
+    );
+    let (id, parsed) = sweep_wire::parse_sweep_line(&line);
+    assert_eq!(id.as_deref(), Some("sw1"));
+    assert_eq!(parsed.unwrap(), spec);
+}
+
+/// Hand-built row with power-of-two metrics, so the `{:e}` golden is
+/// hand-computable and the line is stable.
+fn sweep_row(index: usize, tp: u32, tps: f64, slo: f64) -> SweepRow {
+    SweepRow {
+        index,
+        workload: "chat".to_string(),
+        gpu: "H800".to_string(),
+        tp,
+        pp: 1,
+        replicas: 1,
+        policy: RoutePolicy::RoundRobin,
+        gpu_count: tp,
+        outcome: Ok(SweepMetrics {
+            tokens_per_sec: tps,
+            slo_attainment: slo,
+            ttft_sec: 0.25,
+            tpot_sec: 0.03125,
+            cluster: false,
+        }),
+    }
+}
+
+#[test]
+fn sweep_row_golden_lines() {
+    let ok = sweep_row(3, 2, 4096.0, 0.5);
+    assert_eq!(
+        sweep_wire::encode_row(&ok),
+        r#"{"v":1,"row":{"index":3,"workload":"chat","gpu":"H800","tp":2,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":2,"ok":true,"cluster":false,"tokens_per_sec":4.096e3,"slo_attainment":5e-1,"ttft_sec":2.5e-1,"tpot_sec":3.125e-2}}"#
+    );
+    // infeasible configs are rows, not failures — the scenario error
+    // object rides inside the row byte-for-byte
+    let mut err = sweep_row(1, 3, 0.0, 0.0);
+    err.outcome = Err(ScenarioError::InvalidParallelism(
+        "tp=3 does not divide 32 attention heads of Llama3.1-8B".to_string(),
+    ));
+    assert_eq!(
+        sweep_wire::encode_row(&err),
+        r#"{"v":1,"row":{"index":1,"workload":"chat","gpu":"H800","tp":3,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":3,"ok":false,"error":{"code":"invalid_parallelism","message":"invalid parallelism: tp=3 does not divide 32 attention heads of Llama3.1-8B","reason":"tp=3 does not divide 32 attention heads of Llama3.1-8B"}}}"#
+    );
+}
+
+#[test]
+fn sweep_frontier_golden_line() {
+    // r1 (2x throughput at 2x cost) and r0 (efficient) both survive; the
+    // efficiency tie (1024 tok/s/GPU) ranks r1 first on raw throughput;
+    // r2 is dominated by both, in rank order
+    let rows = vec![
+        sweep_row(0, 1, 1024.0, 1.0),
+        sweep_row(1, 2, 2048.0, 0.5),
+        sweep_row(2, 2, 512.0, 0.5),
+    ];
+    let p = pareto(&rows);
+    assert_eq!(
+        sweep_wire::encode_frontier(&rows, &p),
+        r#"{"v":1,"frontier":[{"rank":1,"index":1,"workload":"chat","gpu":"H800","tp":2,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":2,"tokens_per_sec":2.048e3,"slo_attainment":5e-1},{"rank":2,"index":0,"workload":"chat","gpu":"H800","tp":1,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":1,"tokens_per_sec":1.024e3,"slo_attainment":1e0}],"dominated":[{"index":2,"by":[1,0]}]}"#
+    );
+}
+
+#[test]
+fn sweep_error_golden_lines_cover_the_whole_taxonomy() {
+    let cases: Vec<(SweepError, &str)> = vec![
+        (
+            SweepError::UnknownGpu("B300".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"unknown_gpu","message":"unknown GPU \"B300\" (see Table VI; closest: A100, H800, H100)","gpu":"B300"}}"#,
+        ),
+        (
+            SweepError::InvalidAxis("\"tp\" values must be >= 1".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"invalid_axis","message":"invalid sweep axis: \"tp\" values must be >= 1","reason":"\"tp\" values must be >= 1"}}"#,
+        ),
+        (
+            SweepError::GridTooLarge("5632 points exceed the cap of 4096".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"grid_too_large","message":"sweep grid too large: 5632 points exceed the cap of 4096","reason":"5632 points exceed the cap of 4096"}}"#,
+        ),
+        (
+            SweepError::MalformedSpec("sweep needs \"workloads\": [..]".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"malformed_spec","message":"malformed sweep spec: sweep needs \"workloads\": [..]","reason":"sweep needs \"workloads\": [..]"}}"#,
+        ),
+        (
+            SweepError::InvalidWorkload("invalid workload: unknown workload kind \"mmlu\" (arxiv|splitwise)".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"invalid_workload","message":"invalid sweep workload: invalid workload: unknown workload kind \"mmlu\" (arxiv|splitwise)","reason":"invalid workload: unknown workload kind \"mmlu\" (arxiv|splitwise)"}}"#,
+        ),
+    ];
+    for (err, golden) in cases {
+        let line = sweep_wire::encode_sweep_response(None, &Err(err.clone()));
+        assert_eq!(line, golden, "wire drift for {:?}", err.code());
+    }
+}
+
+#[test]
+fn sweep_round_trips_over_the_stdio_wire() {
+    // a sweep line between predict lines: one request in, one line out,
+    // rows + frontier embedded, order preserved
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let input = concat!(
+        r#"{"id":"p1","gpu":"A100","kernel":{"type":"gemm","m":256,"n":256,"k":256}}"#,
+        "\n",
+        r#"{"v":1,"id":"sw1","op":"sweep","sweep":{"gpus":["A100","H800"],"tp":[1,2],"workloads":[{"name":"tiny","scenario":{"model":"llama3.1-8b","workload":{"requests":[[64,4]]},"seed":3}}]}}"#,
+        "\n",
+    );
+    let mut out = Vec::new();
+    let stats =
+        serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8, 2).unwrap();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.swept, 1);
+    assert_eq!(stats.errors, 0);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2);
+    assert!(lines[0].contains(r#""id":"p1""#) && lines[0].contains(r#""ok":true"#));
+    // 2 GPUs x tp {1,2} = 4 rows (all feasible: 32 heads divide by 2),
+    // every index present and a ranked frontier behind them
+    assert!(lines[1].starts_with(r#"{"v":1,"id":"sw1","ok":true,"sweep":{"rows":["#));
+    for i in 0..4 {
+        assert!(lines[1].contains(&format!(r#""index":{i},"#)), "row {i} missing: {}", lines[1]);
+    }
+    assert!(lines[1].contains(r#""frontier":[{"rank":1,"#));
     svc.shutdown();
 }
