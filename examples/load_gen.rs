@@ -1,0 +1,108 @@
+//! TCP load generator for `synperf serve --tcp`: N concurrent
+//! connections each pipeline M JSONL predict requests and read every
+//! response back, tallying ok/error lines and overall throughput.
+//!
+//!   # terminal 1
+//!   cargo run --release --bin synperf -- serve --tcp 127.0.0.1:7411
+//!   # terminal 2
+//!   cargo run --release --example load_gen -- 127.0.0.1:7411 8 50
+//!
+//! Exits non-zero if any connection fails or any request goes
+//! unanswered — the serving contract is exactly one response per line,
+//! in order, per connection.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+struct Tally {
+    ok: usize,
+    errors: usize,
+}
+
+fn drive(addr: &str, client: usize, requests: usize) -> anyhow::Result<Tally> {
+    let stream = TcpStream::connect(addr)?;
+    let reader = stream.try_clone()?;
+    let mut tally = Tally { ok: 0, errors: 0 };
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let writer = s.spawn(move || -> std::io::Result<()> {
+            // pipeline every request; a mix of shapes so the shared
+            // engine cache sees both hits and misses
+            let mut w = BufWriter::new(stream);
+            for j in 0..requests {
+                writeln!(
+                    w,
+                    "{{\"id\":\"c{client}-r{j}\",\"gpu\":\"A100\",\"kernel\":{{\"type\":\"rmsnorm\",\
+                     \"seq\":{},\"dim\":{}}}}}",
+                    1024 + (j % 16) * 64,
+                    2048 + client * 256
+                )?;
+            }
+            w.flush()
+            // the write half stays open: the reader below stops after
+            // `requests` lines, so no half-close choreography is needed
+        });
+        let mut lines = BufReader::new(reader);
+        let mut line = String::new();
+        for j in 0..requests {
+            line.clear();
+            let n = lines.read_line(&mut line)?;
+            anyhow::ensure!(
+                n > 0,
+                "connection {client}: EOF after {j} of {requests} responses"
+            );
+            if line.contains("\"ok\":true") {
+                tally.ok += 1;
+            } else {
+                tally.errors += 1;
+            }
+        }
+        writer.join().expect("writer thread")?;
+        Ok(())
+    })?;
+    Ok(tally)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let addr = args.next().unwrap_or_else(|| "127.0.0.1:7411".to_string());
+    let clients: usize = match args.next() {
+        Some(s) => s.parse().map_err(|_| anyhow::anyhow!("bad client count: {s}"))?,
+        None => 8,
+    };
+    let requests: usize = match args.next() {
+        Some(s) => s.parse().map_err(|_| anyhow::anyhow!("bad request count: {s}"))?,
+        None => 50,
+    };
+
+    let t0 = Instant::now();
+    let tallies = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = addr.as_str();
+                s.spawn(move || drive(addr, c, requests))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .collect::<anyhow::Result<Vec<Tally>>>()
+    })?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    let ok: usize = tallies.iter().map(|t| t.ok).sum();
+    let errors: usize = tallies.iter().map(|t| t.errors).sum();
+    let total = clients * requests;
+    println!(
+        "load_gen: {clients} clients x {requests} requests -> {} responses in {secs:.3}s \
+         ({:.0} req/s): {ok} ok, {errors} errors",
+        ok + errors,
+        total as f64 / secs.max(1e-9),
+    );
+    anyhow::ensure!(
+        ok + errors == total,
+        "answered {} of {total} requests",
+        ok + errors
+    );
+    Ok(())
+}

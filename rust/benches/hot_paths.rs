@@ -12,6 +12,7 @@
 //!   MLP forward via PJRT (b1 / b256 / b1024)
 //!   end-to-end single prediction       (the Fig. 7 "SynPerf time" path)
 //!   coordinator service throughput
+//!   tcp serving front end              (8 pipelined JSONL connections)
 //!
 //! Flags (after `--`):
 //!   --json <path>   also write results as JSON (BENCH_PR*.json schema)
@@ -350,6 +351,8 @@ fn run_benches(h: &mut Harness, smoke: bool) {
 
     service_bench(&gpu, if smoke { 64 } else { 2000 });
 
+    tcp_bench(h, if smoke { 8 } else { 64 });
+
     println!("\n== detailed comparator costs (Fig. 7) ==");
     h.run("baseline/amali gemm-4096^3", 300, 5, || {
         black_box(synperf::baselines::amali::predict_gemm(4096, 4096, 4096, &gpu));
@@ -393,6 +396,75 @@ fn run_benches(h: &mut Harness, smoke: bool) {
         let x = f.to_model_input(&gpu);
         black_box(f.theory_sec / pred.predict_eff(&[x]).unwrap()[0]);
     });
+}
+
+fn tcp_bench(h: &mut Harness, per_client: usize) {
+    println!("\n== tcp serving front end ==");
+    use std::io::{BufRead, BufReader, BufWriter, Write};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use synperf::api::tcp::{self, TcpConfig};
+    const CLIENTS: usize = 8;
+    let svc = PredictionService::spawn(
+        synperf::api::ModelBundle::default,
+        ServiceConfig::default(),
+    );
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let client = svc.client();
+    let cfg = TcpConfig::default();
+    let shutdown = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let server = s.spawn(|| {
+            tcp::serve(
+                listener,
+                &client,
+                synperf::scenario::Simulator::degraded,
+                &cfg,
+                &shutdown,
+            )
+            .unwrap()
+        });
+        // one iteration = 8 fresh connections, each pipelining
+        // `per_client` predict lines and reading every response — the
+        // full read -> classify -> admit -> batch -> encode path,
+        // connection setup included
+        h.run(&format!("tcp/serve-8client x{per_client}"), 500, 3, || {
+            std::thread::scope(|conns| {
+                for c in 0..CLIENTS {
+                    conns.spawn(move || {
+                        let stream = std::net::TcpStream::connect(addr).unwrap();
+                        let mut w = BufWriter::new(stream.try_clone().unwrap());
+                        for j in 0..per_client {
+                            writeln!(
+                                w,
+                                "{{\"id\":\"b{c}-{j}\",\"gpu\":\"A100\",\"kernel\":\
+                                 {{\"type\":\"rmsnorm\",\"seq\":{},\"dim\":4096}}}}",
+                                512 + (j % 32)
+                            )
+                            .unwrap();
+                        }
+                        w.flush().unwrap();
+                        let mut r = BufReader::new(stream);
+                        let mut line = String::new();
+                        for _ in 0..per_client {
+                            line.clear();
+                            assert!(r.read_line(&mut line).unwrap() > 0, "early EOF");
+                        }
+                    });
+                }
+            });
+        });
+        if let Some(r) = h.results.last() {
+            println!(
+                "  -> {:.0} req/s at the median across {CLIENTS} connections",
+                (CLIENTS * per_client) as f64 / (r.median_ns * 1e-9)
+            );
+        }
+        shutdown.store(true, Ordering::Release);
+        let stats = server.join().unwrap();
+        assert_eq!(stats.errors, 0, "tcp bench must serve clean: {stats:?}");
+    });
+    svc.shutdown();
 }
 
 fn service_bench(gpu: &synperf::hw::GpuSpec, n: usize) {

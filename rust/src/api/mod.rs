@@ -24,7 +24,9 @@
 //! externally as a JSONL wire surface ([`wire`], `synperf serve --stdio`;
 //! line-delimited requests in, line-delimited responses out — [`stdio`]).
 
+pub mod serve;
 pub mod stdio;
+pub mod tcp;
 pub mod wire;
 
 use crate::dataset::Sample;
@@ -105,6 +107,11 @@ pub struct PredictOptions {
     /// Opaque trace tag echoed back in the response (request correlation
     /// for trace-level callers and the JSONL surface).
     pub tag: Option<String>,
+    /// Admission deadline in milliseconds: how long the request may wait
+    /// for queue space before answering
+    /// [`PredictError::DeadlineExceeded`]. `None` waits as long as it
+    /// takes (the stdio default — backpressure propagates to the peer).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for PredictOptions {
@@ -114,6 +121,7 @@ impl Default for PredictOptions {
             allow_degraded: true,
             with_breakdown: false,
             tag: None,
+            deadline_ms: None,
         }
     }
 }
@@ -153,6 +161,13 @@ impl PredictRequest {
     /// Attach an opaque correlation tag, echoed back in the response.
     pub fn tagged(mut self, tag: impl Into<String>) -> Self {
         self.opts.tag = Some(tag.into());
+        self
+    }
+
+    /// Bound how long this request may wait for queue admission; an
+    /// expired wait answers [`PredictError::DeadlineExceeded`].
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.opts.deadline_ms = Some(ms);
         self
     }
 
@@ -233,6 +248,9 @@ pub enum PredictError {
     PredictorUnavailable(KernelKind),
     /// The bounded request queue is at capacity (backpressure signal).
     QueueFull,
+    /// The request's admission deadline expired while the queue stayed
+    /// saturated (the per-request `deadline_ms` backpressure edge).
+    DeadlineExceeded,
     /// The service is shutting down (or already gone).
     Shutdown,
 }
@@ -245,6 +263,7 @@ impl PredictError {
             PredictError::UnsupportedKernel(_) => "unsupported_kernel",
             PredictError::PredictorUnavailable(_) => "predictor_unavailable",
             PredictError::QueueFull => "queue_full",
+            PredictError::DeadlineExceeded => "deadline_exceeded",
             PredictError::Shutdown => "shutdown",
         }
     }
@@ -267,6 +286,7 @@ impl fmt::Display for PredictError {
                 write!(f, "no trained predictor for category {:?} (degraded answers disabled)", kind)
             }
             PredictError::QueueFull => write!(f, "prediction queue at capacity"),
+            PredictError::DeadlineExceeded => write!(f, "request deadline exceeded"),
             PredictError::Shutdown => write!(f, "prediction service is shut down"),
         }
     }

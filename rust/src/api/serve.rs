@@ -1,0 +1,330 @@
+//! Shared line-serving core of the two JSONL wire surfaces
+//! ([`super::stdio`] and [`super::tcp`]): a **capped** line reader (the
+//! unbounded `BufRead::lines` hazard is gone — a hostile peer cannot make
+//! one line exhaust memory), per-line verb classification (one JSON decode
+//! per line picks predict / simulate / sweep / stats), deadline-aware
+//! queue admission, and the assembly of the `stats` verb's report. Both
+//! surfaces answer through the same codecs in [`super::wire`],
+//! [`crate::scenario::wire`] and [`crate::sweep::wire`], which is what
+//! makes their response bytes identical for the same request stream.
+
+use super::wire;
+use super::{PredictError, PredictRequest};
+use crate::coordinator::{Client, Pending};
+use crate::scenario::wire::SimulateRequest;
+use crate::scenario::{self, ScenarioError};
+use crate::sweep::{self, SweepError, SweepSpec};
+use crate::util::json::parse as parse_json;
+use std::io::{ErrorKind, Read};
+use std::time::Duration;
+
+/// Hard cap on one request line (1 MiB). A line that exceeds it is
+/// discarded up to its newline and answered with a typed error — the
+/// stream stays in sync and the connection stays up.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// One read attempt's outcome.
+pub enum ReadLine {
+    /// A complete line (without its `\n`; a trailing `\r` is stripped,
+    /// matching `BufRead::lines`). Invalid UTF-8 is replaced rather than
+    /// erroring, so a hostile peer cannot kill the stream with raw bytes —
+    /// the replacement characters surface as a malformed-JSON error line.
+    Line(String),
+    /// The line exceeded the cap; `usize` is how many bytes were
+    /// discarded. The reader has already skipped to the next newline.
+    Oversized(usize),
+    /// The underlying read timed out (`WouldBlock`/`TimedOut`) with the
+    /// line still incomplete — the socket-timeout tick of the TCP reader.
+    Idle,
+    /// End of stream. An unterminated final line is returned as
+    /// [`ReadLine::Line`] first (again matching `BufRead::lines`).
+    Eof,
+}
+
+/// Capped line reader over any [`Read`]. Owns an 8 KiB scratch buffer and
+/// the partial-line accumulator; never holds more than `max_line` bytes of
+/// line plus one scratch chunk, whatever the peer sends.
+pub struct LineReader<R> {
+    inner: R,
+    chunk: Vec<u8>,
+    filled: usize,
+    pos: usize,
+    line: Vec<u8>,
+    max_line: usize,
+    /// When > 0: an oversized line is being discarded; counts the bytes
+    /// dropped so far so the typed error can report the size.
+    skipping: usize,
+}
+
+impl<R: Read> LineReader<R> {
+    pub fn new(inner: R, max_line: usize) -> LineReader<R> {
+        LineReader {
+            inner,
+            chunk: vec![0u8; 8192],
+            filled: 0,
+            pos: 0,
+            line: Vec::new(),
+            max_line: max_line.max(1),
+            skipping: 0,
+        }
+    }
+
+    /// Bytes of the current (incomplete) line accumulated or skipped so
+    /// far — the TCP reader's progress gauge for idle-reap decisions: a
+    /// trickling peer grows this, a silent one doesn't.
+    pub fn pending(&self) -> usize {
+        self.line.len() + self.skipping
+    }
+
+    fn take_line(&mut self) -> String {
+        if self.line.last() == Some(&b'\r') {
+            self.line.pop();
+        }
+        let s = String::from_utf8_lossy(&self.line).into_owned();
+        self.line.clear();
+        s
+    }
+
+    /// Read until a newline, the cap, a timeout, or EOF.
+    pub fn read_line(&mut self) -> std::io::Result<ReadLine> {
+        loop {
+            // scan whatever is buffered for a newline
+            while self.pos < self.filled {
+                let nl = self.chunk[self.pos..self.filled].iter().position(|&b| b == b'\n');
+                match nl {
+                    Some(rel) => {
+                        let upto = self.pos + rel;
+                        if self.skipping > 0 {
+                            let n = self.skipping + (upto - self.pos);
+                            self.skipping = 0;
+                            self.pos = upto + 1;
+                            return Ok(ReadLine::Oversized(n));
+                        }
+                        self.line.extend_from_slice(&self.chunk[self.pos..upto]);
+                        self.pos = upto + 1;
+                        if self.line.len() > self.max_line {
+                            let n = self.line.len();
+                            self.line.clear();
+                            return Ok(ReadLine::Oversized(n));
+                        }
+                        return Ok(ReadLine::Line(self.take_line()));
+                    }
+                    None => {
+                        if self.skipping > 0 {
+                            self.skipping += self.filled - self.pos;
+                        } else {
+                            self.line.extend_from_slice(&self.chunk[self.pos..self.filled]);
+                            if self.line.len() > self.max_line {
+                                // flip to discard mode: stop buffering,
+                                // keep counting until the newline
+                                self.skipping = self.line.len();
+                                self.line.clear();
+                            }
+                        }
+                        self.pos = self.filled;
+                    }
+                }
+            }
+            self.pos = 0;
+            self.filled = 0;
+            match self.inner.read(&mut self.chunk) {
+                Ok(0) => {
+                    if self.skipping > 0 {
+                        let n = self.skipping;
+                        self.skipping = 0;
+                        return Ok(ReadLine::Oversized(n));
+                    }
+                    if !self.line.is_empty() {
+                        return Ok(ReadLine::Line(self.take_line()));
+                    }
+                    return Ok(ReadLine::Eof);
+                }
+                Ok(n) => self.filled = n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    return Ok(ReadLine::Idle)
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// The typed error an oversized line answers with (connection stays up).
+pub(crate) fn oversized_error(bytes: usize) -> PredictError {
+    PredictError::UnsupportedKernel(format!(
+        "oversized line: {bytes} bytes exceeds the {MAX_LINE_BYTES}-byte cap"
+    ))
+}
+
+/// One classified input line. Classification decodes the JSON exactly once
+/// and picks the verb; evaluation happens later (on the surface's writer
+/// thread) so per-connection response order always matches input order.
+pub(crate) enum Parsed {
+    /// Unparseable JSON — the abuse bucket the TCP quarantine counts.
+    Malformed(String),
+    Predict(Option<String>, Result<PredictRequest, PredictError>),
+    Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
+    Sweep(Option<String>, Result<SweepSpec, SweepError>),
+    Stats(Option<String>),
+}
+
+/// Classify one non-blank line. Dispatch order: stats, sweep, simulate,
+/// then predict as the default — identical on both surfaces by
+/// construction (this is the only classifier).
+pub(crate) fn classify(line: &str) -> Parsed {
+    match parse_json(line) {
+        Err(e) => Parsed::Malformed(format!("malformed JSON: {e}")),
+        Ok(j) => {
+            if wire::is_stats_json(&j) {
+                Parsed::Stats(wire::id_of(&j))
+            } else if sweep::wire::is_sweep_json(&j) {
+                let (id, spec) = sweep::wire::parse_sweep_json(&j);
+                Parsed::Sweep(id, spec)
+            } else if scenario::wire::is_simulate_json(&j) {
+                let (id, req) = scenario::wire::parse_request_json(&j);
+                Parsed::Simulate(id, req)
+            } else {
+                let (id, req) = wire::parse_request_json(&j);
+                Parsed::Predict(id, req)
+            }
+        }
+    }
+}
+
+/// Deadline-aware queue admission for the stdio reader thread: a request
+/// without `deadline_ms` blocks for space (backpressure propagates to the
+/// peer), one with it waits at most that long and answers the typed
+/// `deadline_exceeded` error. (The TCP dispatcher has its own
+/// non-blocking admission loop — it must never park on one client.)
+pub(crate) fn submit_predict(
+    client: &Client,
+    req: PredictRequest,
+) -> Result<Pending, PredictError> {
+    match req.opts.deadline_ms {
+        None => client.submit(req),
+        Some(ms) => match client.submit_deadline(req, Duration::from_millis(ms)) {
+            Err(PredictError::QueueFull) => {
+                client.metrics().record_deadline_exceeded();
+                Err(PredictError::DeadlineExceeded)
+            }
+            other => other,
+        },
+    }
+}
+
+/// Assemble the `stats` verb's report: coordinator metrics + the live
+/// queue gauge + the lock-free engine cache counters + this surface's own
+/// line/connection tallies.
+pub(crate) fn build_stats(
+    client: &Client,
+    served: u64,
+    errors: u64,
+    simulated: u64,
+    swept: u64,
+    clients: wire::ClientStats,
+) -> wire::StatsReport {
+    let snap = client.metrics().snapshot();
+    let es = crate::engine::PredictionEngine::global().stats();
+    wire::StatsReport {
+        requests: snap.requests,
+        batches: snap.batches as u64,
+        mean_batch: snap.mean_batch,
+        rejected_requests: snap.rejected_requests,
+        deadline_exceeded: snap.deadline_exceeded,
+        queue_depth: client.queue_depth() as u64,
+        max_queue_depth: snap.max_queue_depth as u64,
+        cache_hits: es.hits,
+        cache_misses: es.misses,
+        served,
+        errors,
+        simulated,
+        swept,
+        clients,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn read_all(input: &[u8], cap: usize) -> Vec<ReadLine> {
+        let mut r = LineReader::new(input, cap);
+        let mut out = Vec::new();
+        loop {
+            let item = r.read_line().unwrap();
+            let eof = matches!(item, ReadLine::Eof);
+            out.push(item);
+            if eof {
+                return out;
+            }
+        }
+    }
+
+    #[test]
+    fn lines_split_like_bufread_lines() {
+        let got = read_all(b"a\nbb\r\n\nfinal", 64);
+        match &got[..] {
+            [ReadLine::Line(a), ReadLine::Line(b), ReadLine::Line(c), ReadLine::Line(d), ReadLine::Eof] =>
+            {
+                assert_eq!(a, "a");
+                assert_eq!(b, "bb");
+                assert_eq!(c, "");
+                assert_eq!(d, "final");
+            }
+            other => panic!("unexpected shape: {} items", other.len()),
+        }
+    }
+
+    #[test]
+    fn oversized_line_is_skipped_and_counted_stream_stays_in_sync() {
+        let mut input = vec![b'x'; 1000];
+        input.push(b'\n');
+        input.extend_from_slice(b"ok\n");
+        let got = read_all(&input, 16);
+        match &got[..] {
+            [ReadLine::Oversized(n), ReadLine::Line(ok), ReadLine::Eof] => {
+                assert_eq!(*n, 1000);
+                assert_eq!(ok, "ok");
+            }
+            other => panic!("unexpected shape: {} items", other.len()),
+        }
+    }
+
+    #[test]
+    fn oversized_at_eof_still_reports() {
+        let got = read_all(&vec![b'y'; 500], 16);
+        assert!(matches!(&got[..], [ReadLine::Oversized(500), ReadLine::Eof]));
+    }
+
+    #[test]
+    fn invalid_utf8_is_replaced_not_fatal() {
+        let got = read_all(b"\xff\xfe\n", 64);
+        match &got[..] {
+            [ReadLine::Line(s), ReadLine::Eof] => {
+                assert!(!s.is_empty(), "lossy replacement, not silence")
+            }
+            other => panic!("unexpected shape: {} items", other.len()),
+        }
+    }
+
+    #[test]
+    fn classify_dispatches_all_verbs() {
+        assert!(matches!(classify("not json"), Parsed::Malformed(_)));
+        assert!(matches!(classify(r#"{"op":"stats"}"#), Parsed::Stats(None)));
+        assert!(matches!(
+            classify(r#"{"id":"w","op":"sweep","sweep":{}}"#),
+            Parsed::Sweep(Some(_), _)
+        ));
+        assert!(matches!(
+            classify(r#"{"op":"simulate","scenario":{"model":"m","gpu":"A100"}}"#),
+            Parsed::Simulate(None, _)
+        ));
+        assert!(matches!(
+            classify(r#"{"gpu":"A100","kernel":{"type":"rmsnorm","seq":4,"dim":8}}"#),
+            Parsed::Predict(None, Ok(_))
+        ));
+    }
+}

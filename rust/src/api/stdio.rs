@@ -24,13 +24,13 @@
 //! never pay its model-set startup cost; sweep lines build one simulator
 //! per sweep worker through the same factory.
 
+use super::serve::{self, LineReader, Parsed, ReadLine};
 use super::wire;
 use super::{PredictError, PredictResponse};
 use crate::coordinator::{Client, Pending};
 use crate::scenario::wire::SimulateRequest;
 use crate::scenario::{self, ScenarioError, Simulator};
 use crate::sweep::{self, SweepError, SweepSpec};
-use crate::util::json::parse as parse_json;
 use std::io::{BufRead, Write};
 use std::sync::mpsc::{sync_channel, TryRecvError};
 
@@ -44,16 +44,24 @@ pub struct StdioStats {
     /// How many of `served` were sweep-verb lines (each answering a whole
     /// grid in one response).
     pub swept: u64,
+    /// How many of `served` were stats-verb lines.
+    pub stats_lines: u64,
+    /// Lines refused for exceeding [`serve::MAX_LINE_BYTES`] (each counted
+    /// in `errors` too; the connection stays up).
+    pub oversized: u64,
 }
 
 /// One in-flight line: a queued prediction, an already-decided
-/// (parse/submit) error, or a simulate verb awaiting its in-order turn —
-/// delivered in arrival order so output order matches input order exactly.
+/// (parse/submit) error, an oversized-line refusal, or a simulate / sweep
+/// / stats verb awaiting its in-order turn — delivered in arrival order so
+/// output order matches input order exactly.
 enum Slot {
     Queued(Option<String>, Pending),
     Ready(Option<String>, Result<PredictResponse, PredictError>),
+    Oversized(usize),
     Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
     Sweep(Option<String>, Result<SweepSpec, SweepError>),
+    Stats(Option<String>),
 }
 
 /// Run the serve loop until the reader is exhausted. Every input line
@@ -77,33 +85,33 @@ where
     let (slot_tx, slot_rx) = sync_channel::<Slot>(max_inflight.max(1));
     std::thread::scope(|scope| -> std::io::Result<()> {
         let reader_thread = scope.spawn(move || -> std::io::Result<()> {
-            for line in reader.lines() {
-                let line = line?;
-                if line.trim().is_empty() {
-                    continue;
-                }
-                // one JSON decode per line; the object picks the verb
-                let slot = match parse_json(&line) {
-                    Err(e) => Slot::Ready(
-                        None,
-                        Err(PredictError::UnsupportedKernel(format!("malformed JSON: {e}"))),
-                    ),
-                    Ok(j) if sweep::wire::is_sweep_json(&j) => {
-                        let (id, spec) = sweep::wire::parse_sweep_json(&j);
-                        Slot::Sweep(id, spec)
-                    }
-                    Ok(j) if scenario::wire::is_simulate_json(&j) => {
-                        let (id, req) = scenario::wire::parse_request_json(&j);
-                        Slot::Simulate(id, req)
-                    }
-                    Ok(j) => {
-                        let (id, parsed) = wire::parse_request_json(&j);
-                        match parsed {
-                            Ok(req) => match client.submit(req) {
-                                Ok(pending) => Slot::Queued(id, pending),
-                                Err(e) => Slot::Ready(id, Err(e)),
-                            },
-                            Err(e) => Slot::Ready(id, Err(e)),
+            // capped line reads: one oversized line answers a typed error
+            // instead of exhausting memory, and the stream stays in sync
+            let mut lines = LineReader::new(reader, serve::MAX_LINE_BYTES);
+            loop {
+                let slot = match lines.read_line()? {
+                    ReadLine::Eof => break,
+                    ReadLine::Idle => continue, // stdio readers block; defensive
+                    ReadLine::Oversized(n) => Slot::Oversized(n),
+                    ReadLine::Line(line) => {
+                        if line.trim().is_empty() {
+                            continue;
+                        }
+                        // one JSON decode per line; the object picks the verb
+                        match serve::classify(&line) {
+                            Parsed::Malformed(why) => {
+                                Slot::Ready(None, Err(PredictError::UnsupportedKernel(why)))
+                            }
+                            Parsed::Stats(id) => Slot::Stats(id),
+                            Parsed::Sweep(id, spec) => Slot::Sweep(id, spec),
+                            Parsed::Simulate(id, req) => Slot::Simulate(id, req),
+                            Parsed::Predict(id, Ok(req)) => {
+                                match serve::submit_predict(client, req) {
+                                    Ok(pending) => Slot::Queued(id, pending),
+                                    Err(e) => Slot::Ready(id, Err(e)),
+                                }
+                            }
+                            Parsed::Predict(id, Err(e)) => Slot::Ready(id, Err(e)),
                         }
                     }
                 };
@@ -118,7 +126,7 @@ where
         // drain_slots takes the receiver by value: on a writer I/O error
         // the receiver is dropped before we join, which unblocks the
         // reader thread's send — the scope join cannot deadlock
-        let drain_res = drain_slots(slot_rx, &simulator, threads, writer, &mut stats);
+        let drain_res = drain_slots(slot_rx, client, &simulator, threads, writer, &mut stats);
         let read_res = reader_thread.join().expect("stdio reader thread");
         drain_res?;
         read_res
@@ -134,6 +142,7 @@ where
 /// worker from the same factory; `threads` bounds that fan-out.
 fn drain_slots<W: Write, F: Fn() -> Simulator + Sync>(
     slot_rx: std::sync::mpsc::Receiver<Slot>,
+    client: &Client,
     simulator: &F,
     threads: usize,
     writer: &mut W,
@@ -155,6 +164,31 @@ fn drain_slots<W: Write, F: Fn() -> Simulator + Sync>(
         let (id, res) = match slot {
             Slot::Queued(id, pending) => (id, pending.wait()),
             Slot::Ready(id, res) => (id, res),
+            Slot::Oversized(n) => {
+                stats.oversized += 1;
+                (None, Err(serve::oversized_error(n)))
+            }
+            Slot::Stats(id) => {
+                stats.served += 1;
+                stats.stats_lines += 1;
+                // counted before assembly, so the report includes itself;
+                // the stdio surface has exactly one (implicit) peer
+                let report = serve::build_stats(
+                    client,
+                    stats.served,
+                    stats.errors,
+                    stats.simulated,
+                    stats.swept,
+                    wire::ClientStats {
+                        connected: 1,
+                        total: 1,
+                        oversized_lines: stats.oversized,
+                        ..wire::ClientStats::default()
+                    },
+                );
+                writeln!(writer, "{}", wire::encode_stats(id.as_deref(), &report))?;
+                continue;
+            }
             Slot::Sweep(id, spec) => {
                 stats.served += 1;
                 stats.swept += 1;
@@ -349,6 +383,75 @@ mod tests {
         assert!(lines[2].contains(r#""id":"w2""#) && lines[2].contains(r#""ok":false"#));
         assert!(lines[2].contains(r#""code":"unknown_gpu""#));
         assert!(lines[2].contains("closest: A100, H800, H100"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn multi_megabyte_line_answers_typed_error_and_stream_survives() {
+        let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+        let mut input = Vec::new();
+        input.extend_from_slice(
+            br#"{"id":"a","gpu":"A100","kernel":{"type":"rmsnorm","seq":96,"dim":1024}}"#,
+        );
+        input.push(b'\n');
+        // 3 MiB of garbage on one line: must answer a typed error without
+        // buffering the whole thing as a String, and without desyncing
+        input.resize(input.len() + (3 << 20), b'z');
+        input.push(b'\n');
+        input.extend_from_slice(
+            br#"{"id":"b","gpu":"A100","kernel":{"type":"rmsnorm","seq":97,"dim":1024}}"#,
+        );
+        input.push(b'\n');
+        let mut out = Vec::new();
+        let stats =
+            serve_lines(&svc.client(), Simulator::degraded, &input[..], &mut out, 8, 2).unwrap();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.oversized, 1);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains(r#""id":"a""#) && lines[0].contains(r#""ok":true"#));
+        assert!(
+            lines[1].contains(r#""code":"unsupported_kernel""#)
+                && lines[1].contains("oversized line"),
+            "{}",
+            lines[1]
+        );
+        assert!(
+            lines[2].contains(r#""id":"b""#) && lines[2].contains(r#""ok":true"#),
+            "stream must stay in sync after the oversized line"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stats_verb_reports_surface_counters() {
+        let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+        let input = concat!(
+            r#"{"id":"p1","gpu":"A100","kernel":{"type":"rmsnorm","seq":4441,"dim":1024}}"#,
+            "\n",
+            r#"{"id":"st","op":"stats"}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        let stats =
+            serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8, 2)
+                .unwrap();
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.stats_lines, 1);
+        assert_eq!(stats.errors, 0);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let (id, report) = wire::parse_stats(lines[1]).unwrap();
+        assert_eq!(id.as_deref(), Some("st"));
+        assert_eq!(report.served, 2, "the stats line counts itself");
+        assert_eq!(report.clients.connected, 1);
+        assert_eq!(report.clients.total, 1);
+        // the predict answer resolved before the stats slot's turn, and
+        // metrics record before answering — so it is already visible
+        assert_eq!(report.requests, 1);
         svc.shutdown();
     }
 

@@ -1,0 +1,675 @@
+//! The JSONL TCP surface of `synperf serve --tcp ADDR`: the same wire as
+//! [`super::stdio`] (same classifier, same codecs — response bytes are
+//! identical for the same request stream), served to **many concurrent
+//! clients** with fair admission and fault isolation:
+//!
+//! - **Fair admission.** Each connection gets a bounded inbox of parsed
+//!   lines; one shared dispatcher round-robins over the inboxes, admitting
+//!   at most one request per connection per sweep into the coordinator
+//!   queue. A client that floods cannot starve one that trickles — the
+//!   flooder fills its own inbox and blocks (per-client backpressure)
+//!   while the round-robin keeps serving everyone else.
+//! - **Two-level backpressure.** The per-connection inbox bounds what one
+//!   client can buffer; the coordinator's bounded queue bounds the total.
+//!   A request that cannot be admitted before its deadline (its own
+//!   `deadline_ms`, or [`TcpConfig::admit_timeout`] without one) answers
+//!   the typed `deadline_exceeded` / `queue_full` error — never a hang.
+//! - **Per-connection order.** Responses on a connection are written in
+//!   that connection's input order by a dedicated writer thread draining a
+//!   bounded window, exactly like the stdio surface's slot channel.
+//! - **Fault quarantine.** Malformed and oversized lines answer typed
+//!   errors; [`TcpConfig::quarantine_limit`] *consecutive* abusive lines
+//!   disconnect the client after its error responses flush. Read timeouts
+//!   tick the reader so half-open peers are reaped after
+//!   [`TcpConfig::idle_timeout`] without progress (a slow-loris peer that
+//!   trickles bytes counts as progress but can never exceed
+//!   [`serve::MAX_LINE_BYTES`] of buffered line). Write timeouts bound a
+//!   stuck consumer. No peer behavior panics the server.
+//! - **Graceful drain.** When `shutdown` flips, the listener stops
+//!   accepting, readers stop consuming input, every admitted request
+//!   finishes and flushes, and [`serve`] joins all threads and returns.
+//!
+//! Everything is std-only: scoped threads, `Mutex`/`Condvar` queues
+//! ([`crate::coordinator::queue::Bounded`]), and socket timeouts as ticks.
+
+use super::serve::{self, LineReader, Parsed, ReadLine};
+use super::wire;
+use super::{PredictError, PredictRequest, PredictResponse};
+use crate::coordinator::queue::{Bounded, Pop, PushError};
+use crate::coordinator::{Client, Pending};
+use crate::scenario::wire::SimulateRequest;
+use crate::scenario::{self, ScenarioError, Simulator};
+use crate::sweep::{self, SweepError, SweepSpec};
+use std::collections::HashMap;
+use std::io::{BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tuning knobs of the TCP surface. The defaults suit an interactive
+/// deployment; tests shrink them to provoke every limit deterministically.
+#[derive(Debug, Clone)]
+pub struct TcpConfig {
+    /// Concurrent connections accepted; one over the limit is answered a
+    /// single `queue_full` error line and dropped.
+    pub max_clients: usize,
+    /// Parsed-line inbox per connection (per-client backpressure bound).
+    pub inbox_cap: usize,
+    /// In-flight response window per connection (memory bound, same role
+    /// as `max_inflight` on the stdio surface).
+    pub max_inflight: usize,
+    /// Consecutive malformed/oversized lines before the client is
+    /// disconnected (after its error responses flush).
+    pub quarantine_limit: u32,
+    /// How long a request **without** `deadline_ms` may wait for queue
+    /// admission before answering `queue_full`.
+    pub admit_timeout: Duration,
+    /// Reap a connection with no read progress for this long.
+    pub idle_timeout: Duration,
+    /// Bound on one blocked socket write (stuck consumer ⇒ disconnect).
+    pub write_timeout: Duration,
+    /// Poll granularity: read-timeout tick, inbox-push wait, accept poll.
+    pub tick: Duration,
+    /// Worker threads for sweep-verb lines (see [`sweep::run_sweep`]).
+    pub threads: usize,
+}
+
+impl Default for TcpConfig {
+    fn default() -> TcpConfig {
+        TcpConfig {
+            max_clients: 64,
+            inbox_cap: 64,
+            max_inflight: 32,
+            quarantine_limit: 8,
+            admit_timeout: Duration::from_secs(2),
+            idle_timeout: Duration::from_secs(60),
+            write_timeout: Duration::from_secs(10),
+            tick: Duration::from_millis(50),
+            threads: 2,
+        }
+    }
+}
+
+/// Final tallies [`serve`] returns after drain (the `stats` verb reports
+/// the same counters live, mid-run).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NetStats {
+    pub served: u64,
+    pub errors: u64,
+    pub simulated: u64,
+    pub swept: u64,
+    pub stats_lines: u64,
+    pub oversized: u64,
+    /// Connections accepted over the lifetime (including refused-at-cap).
+    pub connections: u64,
+    pub quarantined: u64,
+    pub idle_reaped: u64,
+    /// Write failures, read errors, and at-capacity refusals.
+    pub disconnects: u64,
+}
+
+/// Lock-free server counters — the `stats` verb reads these mid-run
+/// without taking any lock shared with the serving path.
+#[derive(Default)]
+struct NetCounters {
+    served: AtomicU64,
+    errors: AtomicU64,
+    simulated: AtomicU64,
+    swept: AtomicU64,
+    stats_lines: AtomicU64,
+    oversized: AtomicU64,
+    connections: AtomicU64,
+    live: AtomicU64,
+    quarantined: AtomicU64,
+    idle_reaped: AtomicU64,
+    disconnects: AtomicU64,
+}
+
+impl NetCounters {
+    fn bump(field: &AtomicU64) {
+        field.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> NetStats {
+        let get = |f: &AtomicU64| f.load(Ordering::Relaxed);
+        NetStats {
+            served: get(&self.served),
+            errors: get(&self.errors),
+            simulated: get(&self.simulated),
+            swept: get(&self.swept),
+            stats_lines: get(&self.stats_lines),
+            oversized: get(&self.oversized),
+            connections: get(&self.connections),
+            quarantined: get(&self.quarantined),
+            idle_reaped: get(&self.idle_reaped),
+            disconnects: get(&self.disconnects),
+        }
+    }
+
+    fn client_stats(&self) -> wire::ClientStats {
+        let get = |f: &AtomicU64| f.load(Ordering::Relaxed);
+        wire::ClientStats {
+            connected: get(&self.live),
+            total: get(&self.connections),
+            quarantined: get(&self.quarantined),
+            idle_reaped: get(&self.idle_reaped),
+            oversized_lines: get(&self.oversized),
+            disconnects: get(&self.disconnects),
+        }
+    }
+}
+
+/// One parsed input line riding a connection's inbox, stamped with its
+/// arrival time (deadlines are measured from **arrival**, so time a
+/// request spends waiting in its inbox counts against its deadline).
+struct Item {
+    arrived: Instant,
+    line: Line,
+}
+
+enum Line {
+    Text(Parsed),
+    Oversized(usize),
+}
+
+/// One in-flight response in a connection's window — mirrors the stdio
+/// surface's slot type; the writer thread answers these in order.
+enum Slot {
+    Queued(Option<String>, Pending),
+    Ready(Option<String>, Result<PredictResponse, PredictError>),
+    Oversized(usize),
+    Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
+    Sweep(Option<String>, Result<SweepSpec, SweepError>),
+    Stats(Option<String>),
+}
+
+/// Per-connection shared state: the reader thread produces into `inbox`,
+/// the dispatcher moves admitted work into `window`, the writer drains it.
+struct Conn {
+    id: u64,
+    inbox: Bounded<Item>,
+    window: Bounded<Slot>,
+    /// Set by the writer on write failure (or the reader on reap): the
+    /// other two parties stop touching the socket and unwind.
+    dead: AtomicBool,
+}
+
+/// A head-of-line predict request bounced off the full coordinator queue,
+/// held by the dispatcher until space frees or its deadline expires.
+struct ParkedReq {
+    id: Option<String>,
+    req: PredictRequest,
+    arrived: Instant,
+}
+
+enum Admit {
+    Slot(Slot),
+    Park(ParkedReq),
+}
+
+/// One admission attempt for a parked predict request. `try_predict_silent`
+/// keeps per-attempt retries out of the rejection metrics; only the
+/// terminal outcome is recorded.
+fn admit(client: &Client, p: ParkedReq, cfg: &TcpConfig) -> Admit {
+    match client.try_predict_silent(p.req.clone()) {
+        Ok(pending) => Admit::Slot(Slot::Queued(p.id, pending)),
+        Err(PredictError::QueueFull) => {
+            let limit = match p.req.opts.deadline_ms {
+                Some(ms) => Duration::from_millis(ms),
+                None => cfg.admit_timeout,
+            };
+            if p.arrived.elapsed() < limit {
+                return Admit::Park(p);
+            }
+            client.metrics().record_rejected();
+            if p.req.opts.deadline_ms.is_some() {
+                client.metrics().record_deadline_exceeded();
+                Admit::Slot(Slot::Ready(p.id, Err(PredictError::DeadlineExceeded)))
+            } else {
+                Admit::Slot(Slot::Ready(p.id, Err(PredictError::QueueFull)))
+            }
+        }
+        Err(e) => Admit::Slot(Slot::Ready(p.id, Err(e))),
+    }
+}
+
+/// Serve the listener until `shutdown` flips, then drain: stop accepting,
+/// stop reading, answer everything admitted, flush every connection, join
+/// every thread. The `simulator` factory is shared by all connections
+/// (each builds its own `Simulator` lazily on its writer thread — the
+/// simulator itself never crosses threads).
+pub fn serve<F>(
+    listener: TcpListener,
+    client: &Client,
+    simulator: F,
+    cfg: &TcpConfig,
+    shutdown: &AtomicBool,
+) -> std::io::Result<NetStats>
+where
+    F: Fn() -> Simulator + Sync,
+{
+    listener.set_nonblocking(true)?;
+    let counters = NetCounters::default();
+    let conns: Mutex<Vec<Arc<Conn>>> = Mutex::new(Vec::new());
+    let accept_done = AtomicBool::new(false);
+    let accept_err: Mutex<Option<std::io::Error>> = Mutex::new(None);
+    let simulator = &simulator;
+    let counters_ref = &counters;
+    let conns_ref = &conns;
+
+    std::thread::scope(|scope| {
+        // ---- accept loop -------------------------------------------------
+        let accepter = scope.spawn(move || {
+            let mut next_id = 0u64;
+            loop {
+                if shutdown.load(Ordering::Acquire) {
+                    break;
+                }
+                let stream = match listener.accept() {
+                    Ok((stream, _)) => stream,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(cfg.tick.min(Duration::from_millis(25)));
+                        continue;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        *accept_err.lock().unwrap() = Some(e);
+                        break;
+                    }
+                };
+                NetCounters::bump(&counters_ref.connections);
+                let _ = stream.set_nodelay(true);
+                if counters_ref.live.load(Ordering::Relaxed) >= cfg.max_clients as u64 {
+                    // over capacity: one typed refusal line, then drop
+                    NetCounters::bump(&counters_ref.disconnects);
+                    let mut s = &stream;
+                    let _ = writeln!(
+                        s,
+                        "{}",
+                        wire::encode_response(None, &Err(PredictError::QueueFull))
+                    );
+                    continue;
+                }
+                let (rd, wr) = match (stream.try_clone(), stream) {
+                    (Ok(rd), wr) => (rd, wr),
+                    (Err(_), _) => {
+                        NetCounters::bump(&counters_ref.disconnects);
+                        continue;
+                    }
+                };
+                let conn = Arc::new(Conn {
+                    id: next_id,
+                    inbox: Bounded::new(cfg.inbox_cap.max(1)),
+                    window: Bounded::new(cfg.max_inflight.max(1)),
+                    dead: AtomicBool::new(false),
+                });
+                next_id += 1;
+                // register before spawning: the dispatcher's exit check
+                // (`no conns && accept done`) can never miss a live one
+                conns_ref.lock().unwrap().push(conn.clone());
+                counters_ref.live.fetch_add(1, Ordering::Relaxed);
+                let reader_conn = conn.clone();
+                scope.spawn(move || read_loop(rd, &reader_conn, cfg, counters_ref, shutdown));
+                scope.spawn(move || {
+                    write_loop(wr, &conn, client, simulator, cfg, counters_ref)
+                });
+            }
+            accept_done.store(true, Ordering::Release);
+        });
+
+        // ---- dispatcher: fair round-robin admission ----------------------
+        dispatch_loop(client, cfg, conns_ref, counters_ref, &accept_done);
+        accepter.join().expect("tcp accept thread");
+    });
+
+    if let Some(e) = accept_err.lock().unwrap().take() {
+        return Err(e);
+    }
+    Ok(counters.snapshot())
+}
+
+/// Per-connection reader: capped line reads on a `tick` timeout, blank
+/// lines skipped, one classify per line, quarantine on consecutive abuse,
+/// idle-reap on stalled progress. Closes the inbox on exit — that is the
+/// dispatcher's signal that this connection has no more input coming.
+fn read_loop(
+    stream: TcpStream,
+    conn: &Conn,
+    cfg: &TcpConfig,
+    counters: &NetCounters,
+    shutdown: &AtomicBool,
+) {
+    let _ = stream.set_read_timeout(Some(cfg.tick));
+    let mut lines = LineReader::new(&stream, serve::MAX_LINE_BYTES);
+    let mut last_progress = Instant::now();
+    let mut last_pending = 0usize;
+    let mut consecutive_bad = 0u32;
+    'read: loop {
+        if conn.dead.load(Ordering::Acquire) || shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let line = match lines.read_line() {
+            Err(_) => {
+                // connection reset (possibly mid-line): unwind quietly
+                NetCounters::bump(&counters.disconnects);
+                break;
+            }
+            Ok(ReadLine::Eof) => break,
+            Ok(ReadLine::Idle) => {
+                // a trickling peer grows the partial line — that counts as
+                // progress; a silent one is reaped after idle_timeout
+                let pending = lines.pending();
+                if pending != last_pending {
+                    last_pending = pending;
+                    last_progress = Instant::now();
+                } else if last_progress.elapsed() >= cfg.idle_timeout {
+                    NetCounters::bump(&counters.idle_reaped);
+                    conn.dead.store(true, Ordering::Release);
+                    break;
+                }
+                continue;
+            }
+            Ok(ReadLine::Oversized(n)) => {
+                last_progress = Instant::now();
+                last_pending = lines.pending();
+                consecutive_bad += 1;
+                Line::Oversized(n)
+            }
+            Ok(ReadLine::Line(text)) => {
+                last_progress = Instant::now();
+                last_pending = lines.pending();
+                if text.trim().is_empty() {
+                    continue;
+                }
+                let parsed = serve::classify(&text);
+                if matches!(parsed, Parsed::Malformed(_)) {
+                    consecutive_bad += 1;
+                } else {
+                    consecutive_bad = 0;
+                }
+                Line::Text(parsed)
+            }
+        };
+        let mut item = Item { arrived: Instant::now(), line };
+        // bounded push with a tick so a dead/draining connection unwinds
+        loop {
+            match conn.inbox.push_wait(item, Some(cfg.tick)) {
+                Ok(()) => break,
+                Err(PushError::Full(back)) => {
+                    if conn.dead.load(Ordering::Acquire) || shutdown.load(Ordering::Acquire) {
+                        break 'read;
+                    }
+                    item = back;
+                }
+                Err(PushError::Closed(_)) => break 'read,
+            }
+        }
+        if consecutive_bad >= cfg.quarantine_limit {
+            // the abusive peer gets its typed error responses, then EOF
+            NetCounters::bump(&counters.quarantined);
+            break;
+        }
+    }
+    conn.inbox.close();
+}
+
+/// The shared dispatcher: round-robins over the live connections, moving
+/// at most one inbox item per connection per sweep into its response
+/// window — admission fairness is positional, not timing-based. Predict
+/// lines go through the coordinator queue (parking the head-of-line
+/// request while the queue is full); every other verb passes straight to
+/// the window. Exits when the accept loop is done and every connection
+/// has fully drained.
+fn dispatch_loop(
+    client: &Client,
+    cfg: &TcpConfig,
+    conns: &Mutex<Vec<Arc<Conn>>>,
+    counters: &NetCounters,
+    accept_done: &AtomicBool,
+) {
+    let mut parked: HashMap<u64, ParkedReq> = HashMap::new();
+    loop {
+        // read the flag BEFORE snapshotting: registration happens-before
+        // the flag's store, so `done && empty` can never miss a connection
+        let done = accept_done.load(Ordering::Acquire);
+        let snapshot: Vec<Arc<Conn>> = conns.lock().unwrap().clone();
+        if done && snapshot.is_empty() {
+            break;
+        }
+        let mut progress = false;
+        for conn in &snapshot {
+            if conn.dead.load(Ordering::Acquire) {
+                // writer failed or reader reaped: tear down both ends
+                parked.remove(&conn.id);
+                conn.inbox.close();
+                conn.window.close();
+                remove_conn(conns, counters, conn.id);
+                progress = true;
+                continue;
+            }
+            // head-of-line parked request first — order per connection
+            if let Some(p) = parked.remove(&conn.id) {
+                if conn.window.len() >= conn.window.capacity() {
+                    parked.insert(conn.id, p);
+                    continue;
+                }
+                match admit(client, p, cfg) {
+                    Admit::Park(p) => {
+                        parked.insert(conn.id, p);
+                        continue; // still waiting: hold line order
+                    }
+                    Admit::Slot(slot) => {
+                        let _ = conn.window.try_push(slot);
+                        progress = true;
+                        continue; // one item per conn per sweep
+                    }
+                }
+            }
+            if conn.window.len() >= conn.window.capacity() {
+                continue; // writer backpressure: revisit next sweep
+            }
+            match conn.inbox.try_pop() {
+                Pop::Timeout => {}
+                Pop::Closed => {
+                    // reader done and inbox drained: close the window so
+                    // the writer flushes the tail and exits
+                    conn.window.close();
+                    remove_conn(conns, counters, conn.id);
+                    progress = true;
+                }
+                Pop::Item(item) => {
+                    progress = true;
+                    let slot = match item.line {
+                        Line::Oversized(n) => Some(Slot::Oversized(n)),
+                        Line::Text(parsed) => match parsed {
+                            Parsed::Malformed(why) => Some(Slot::Ready(
+                                None,
+                                Err(PredictError::UnsupportedKernel(why)),
+                            )),
+                            Parsed::Stats(id) => Some(Slot::Stats(id)),
+                            Parsed::Sweep(id, spec) => Some(Slot::Sweep(id, spec)),
+                            Parsed::Simulate(id, req) => Some(Slot::Simulate(id, req)),
+                            Parsed::Predict(id, Err(e)) => Some(Slot::Ready(id, Err(e))),
+                            Parsed::Predict(id, Ok(req)) => {
+                                let p = ParkedReq { id, req, arrived: item.arrived };
+                                match admit(client, p, cfg) {
+                                    Admit::Slot(slot) => Some(slot),
+                                    Admit::Park(p) => {
+                                        parked.insert(conn.id, p);
+                                        None
+                                    }
+                                }
+                            }
+                        },
+                    };
+                    if let Some(slot) = slot {
+                        let _ = conn.window.try_push(slot);
+                    }
+                }
+            }
+        }
+        if !progress {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+fn remove_conn(conns: &Mutex<Vec<Arc<Conn>>>, counters: &NetCounters, id: u64) {
+    let mut g = conns.lock().unwrap();
+    let before = g.len();
+    g.retain(|c| c.id != id);
+    if g.len() < before {
+        counters.live.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Per-connection writer: drains the window in order, flushing whenever no
+/// further response is immediately ready (an interactive peer never waits
+/// on a half-full buffer). On any write failure it marks the connection
+/// dead and unwinds — the dispatcher tears the rest down.
+fn write_loop<F>(
+    stream: TcpStream,
+    conn: &Conn,
+    client: &Client,
+    simulator: &F,
+    cfg: &TcpConfig,
+    counters: &NetCounters,
+) where
+    F: Fn() -> Simulator + Sync,
+{
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let mut writer = BufWriter::new(stream);
+    let mut sim: Option<Simulator> = None;
+    loop {
+        let slot = match conn.window.try_pop() {
+            Pop::Item(slot) => slot,
+            Pop::Closed => break,
+            Pop::Timeout => {
+                if writer.flush().is_err() {
+                    break_dead(conn, counters);
+                    break;
+                }
+                match conn.window.pop() {
+                    Some(slot) => slot,
+                    None => break,
+                }
+            }
+        };
+        let (id, res) = match slot {
+            Slot::Queued(id, pending) => (id, pending.wait()),
+            Slot::Ready(id, res) => (id, res),
+            Slot::Oversized(n) => {
+                NetCounters::bump(&counters.oversized);
+                (None, Err(serve::oversized_error(n)))
+            }
+            Slot::Stats(id) => {
+                // counted before assembly, so the report includes itself
+                NetCounters::bump(&counters.served);
+                NetCounters::bump(&counters.stats_lines);
+                let s = counters.snapshot();
+                let report = serve::build_stats(
+                    client,
+                    s.served,
+                    s.errors,
+                    s.simulated,
+                    s.swept,
+                    counters.client_stats(),
+                );
+                let line = wire::encode_stats(id.as_deref(), &report);
+                if writeln!(writer, "{line}").is_err() {
+                    break_dead(conn, counters);
+                    break;
+                }
+                continue;
+            }
+            Slot::Sweep(id, spec) => {
+                NetCounters::bump(&counters.served);
+                NetCounters::bump(&counters.swept);
+                let res =
+                    spec.and_then(|spec| sweep::run_sweep(&spec, simulator, cfg.threads, |_| {}));
+                if res.is_err() {
+                    NetCounters::bump(&counters.errors);
+                }
+                let line = sweep::wire::encode_sweep_response(id.as_deref(), &res);
+                if writeln!(writer, "{line}").is_err() {
+                    break_dead(conn, counters);
+                    break;
+                }
+                continue;
+            }
+            Slot::Simulate(id, req) => {
+                let sim = sim.get_or_insert_with(simulator);
+                NetCounters::bump(&counters.served);
+                NetCounters::bump(&counters.simulated);
+                let line = match req {
+                    Ok(SimulateRequest::Scenario(spec)) => {
+                        let res = sim.simulate(&spec);
+                        if res.is_err() {
+                            NetCounters::bump(&counters.errors);
+                        }
+                        scenario::wire::encode_report(id.as_deref(), &res)
+                    }
+                    Ok(SimulateRequest::Cluster(spec)) => {
+                        let res = sim.simulate_cluster(&spec);
+                        if res.is_err() {
+                            NetCounters::bump(&counters.errors);
+                        }
+                        scenario::wire::encode_cluster_report(id.as_deref(), &res)
+                    }
+                    Err(e) => {
+                        NetCounters::bump(&counters.errors);
+                        scenario::wire::encode_report(id.as_deref(), &Err(e))
+                    }
+                };
+                if writeln!(writer, "{line}").is_err() {
+                    break_dead(conn, counters);
+                    break;
+                }
+                continue;
+            }
+        };
+        NetCounters::bump(&counters.served);
+        if res.is_err() {
+            NetCounters::bump(&counters.errors);
+        }
+        if writeln!(writer, "{}", wire::encode_response(id.as_deref(), &res)).is_err() {
+            break_dead(conn, counters);
+            break;
+        }
+    }
+    let _ = writer.flush();
+}
+
+fn break_dead(conn: &Conn, counters: &NetCounters) {
+    NetCounters::bump(&counters.disconnects);
+    conn.dead.store(true, Ordering::Release);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_bounded() {
+        let cfg = TcpConfig::default();
+        assert!(cfg.max_clients > 0 && cfg.inbox_cap > 0 && cfg.max_inflight > 0);
+        assert!(cfg.quarantine_limit > 0);
+        assert!(cfg.tick < cfg.idle_timeout);
+    }
+
+    #[test]
+    fn counters_snapshot_round_trips() {
+        let c = NetCounters::default();
+        NetCounters::bump(&c.served);
+        NetCounters::bump(&c.served);
+        NetCounters::bump(&c.quarantined);
+        c.live.fetch_add(3, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!(s.served, 2);
+        assert_eq!(s.quarantined, 1);
+        let cs = c.client_stats();
+        assert_eq!(cs.connected, 3);
+        assert_eq!(cs.quarantined, 1);
+    }
+}

@@ -259,6 +259,9 @@ pub fn encode_request(id: Option<&str>, req: &PredictRequest) -> String {
     if let Some(tag) = &req.opts.tag {
         out.push_str(&format!(",\"tag\":\"{}\"", esc(tag)));
     }
+    if let Some(ms) = req.opts.deadline_ms {
+        out.push_str(&format!(",\"deadline_ms\":{ms}"));
+    }
     out.push('}');
     out
 }
@@ -325,6 +328,11 @@ fn parse_request_fields(j: &Json) -> Result<PredictRequest, PredictError> {
     if let Some(v) = j.get("tag") {
         req.opts.tag =
             Some(v.as_str().ok_or_else(|| unsupported("\"tag\" must be a string"))?.to_string());
+    }
+    if let Some(v) = j.get("deadline_ms") {
+        // u32 range is ~49 days of milliseconds — ample for an admission
+        // deadline, and it reuses the strict integer check
+        req.opts.deadline_ms = Some(u64::from(num_u32(v, "deadline_ms")?));
     }
     Ok(req)
 }
@@ -436,6 +444,7 @@ pub fn parse_response(
                     .ok_or_else(|| anyhow!("predictor_unavailable needs a \"kind\""))?,
             ),
             "queue_full" => PredictError::QueueFull,
+            "deadline_exceeded" => PredictError::DeadlineExceeded,
             "shutdown" => PredictError::Shutdown,
             other => anyhow::bail!("unknown error code {other:?}"),
         };
@@ -501,6 +510,140 @@ pub fn parse_response(
             breakdown,
             tag: j.get("tag").and_then(|v| v.as_str()).map(str::to_string),
         }),
+    ))
+}
+
+/// Per-surface connection counters of the `stats` verb. The stdio surface
+/// reports its single implicit peer (`connected: 1, total: 1`); the TCP
+/// surface reports its live connection table plus the fault counters of
+/// the serving front end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClientStats {
+    /// Connections currently open.
+    pub connected: u64,
+    /// Connections accepted over the server's lifetime.
+    pub total: u64,
+    /// Connections dropped for repeated malformed/oversized lines.
+    pub quarantined: u64,
+    /// Connections reaped after `idle_timeout` without a byte of progress.
+    pub idle_reaped: u64,
+    /// Lines refused for exceeding the line-size cap (typed error answers,
+    /// connection stays up until quarantine).
+    pub oversized_lines: u64,
+    /// Connections that vanished mid-stream (read/write I/O errors).
+    pub disconnects: u64,
+}
+
+/// The one JSON shape both wire surfaces answer the `stats` verb with:
+/// coordinator metrics (the lock-free `Metrics::snapshot` path) plus the
+/// serving surface's own line/connection counters.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StatsReport {
+    /// Requests the coordinator has answered.
+    pub requests: u64,
+    /// Dynamic batches processed.
+    pub batches: u64,
+    /// Mean requests per batch.
+    pub mean_batch: f64,
+    /// Requests refused with `queue_full`.
+    pub rejected_requests: u64,
+    /// Requests answered `deadline_exceeded`.
+    pub deadline_exceeded: u64,
+    /// Live bounded-queue backlog and its high-water mark.
+    pub queue_depth: u64,
+    pub max_queue_depth: u64,
+    /// Engine analysis-cache outcome counters.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Response lines this surface has written (including this one).
+    pub served: u64,
+    /// How many of `served` were error lines.
+    pub errors: u64,
+    /// Simulate-verb and sweep-verb lines among `served`.
+    pub simulated: u64,
+    pub swept: u64,
+    pub clients: ClientStats,
+}
+
+/// Is this decoded line the `stats` verb? (`{"op":"stats"}`.)
+pub(crate) fn is_stats_json(j: &Json) -> bool {
+    j.get("op").and_then(|v| v.as_str()) == Some("stats")
+}
+
+/// Serialize a stats report into its wire line (no trailing newline).
+/// Field order is fixed — `tests/protocol.rs` pins the exact bytes.
+pub fn encode_stats(id: Option<&str>, s: &StatsReport) -> String {
+    let mut out = format!("{{\"v\":{}", super::PROTOCOL_VERSION);
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    out.push_str(&format!(
+        ",\"ok\":true,\"stats\":{{\"requests\":{},\"batches\":{},\"mean_batch\":{:e},\"rejected_requests\":{},\"deadline_exceeded\":{},\"queue_depth\":{},\"max_queue_depth\":{},\"cache_hits\":{},\"cache_misses\":{},\"served\":{},\"errors\":{},\"simulated\":{},\"swept\":{},\"clients\":{{\"connected\":{},\"total\":{},\"quarantined\":{},\"idle_reaped\":{},\"oversized_lines\":{},\"disconnects\":{}}}}}}}",
+        s.requests,
+        s.batches,
+        s.mean_batch,
+        s.rejected_requests,
+        s.deadline_exceeded,
+        s.queue_depth,
+        s.max_queue_depth,
+        s.cache_hits,
+        s.cache_misses,
+        s.served,
+        s.errors,
+        s.simulated,
+        s.swept,
+        s.clients.connected,
+        s.clients.total,
+        s.clients.quarantined,
+        s.clients.idle_reaped,
+        s.clients.oversized_lines,
+        s.clients.disconnects,
+    ));
+    out
+}
+
+/// Parse a stats response line back into the typed report — the client
+/// half, used by goldens, the chaos harness and remote tooling.
+pub fn parse_stats(line: &str) -> Result<(Option<String>, StatsReport)> {
+    let j = parse(line)?;
+    let id = id_of(&j);
+    let s = j.get("stats").ok_or_else(|| anyhow!("stats response needs \"stats\""))?;
+    let u = |obj: &Json, key: &str| -> Result<u64> {
+        obj.get(key)
+            .and_then(|v| v.as_f64())
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| n as u64)
+            .ok_or_else(|| anyhow!("stats field {key:?} missing or not a count"))
+    };
+    let c = s.get("clients").ok_or_else(|| anyhow!("stats needs \"clients\""))?;
+    Ok((
+        id,
+        StatsReport {
+            requests: u(s, "requests")?,
+            batches: u(s, "batches")?,
+            mean_batch: s
+                .get("mean_batch")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("stats needs \"mean_batch\""))?,
+            rejected_requests: u(s, "rejected_requests")?,
+            deadline_exceeded: u(s, "deadline_exceeded")?,
+            queue_depth: u(s, "queue_depth")?,
+            max_queue_depth: u(s, "max_queue_depth")?,
+            cache_hits: u(s, "cache_hits")?,
+            cache_misses: u(s, "cache_misses")?,
+            served: u(s, "served")?,
+            errors: u(s, "errors")?,
+            simulated: u(s, "simulated")?,
+            swept: u(s, "swept")?,
+            clients: ClientStats {
+                connected: u(c, "connected")?,
+                total: u(c, "total")?,
+                quarantined: u(c, "quarantined")?,
+                idle_reaped: u(c, "idle_reaped")?,
+                oversized_lines: u(c, "oversized_lines")?,
+                disconnects: u(c, "disconnects")?,
+            },
+        },
     ))
 }
 
@@ -572,6 +715,53 @@ mod tests {
             let (_, res) = parse_request(line);
             assert_eq!(res.unwrap_err().code(), code, "for line {line}");
         }
+    }
+
+    #[test]
+    fn deadline_ms_rides_the_request_wire() {
+        let gpu = resolve_gpu("A100").unwrap();
+        let req =
+            PredictRequest::new(KernelConfig::RmsNorm { seq: 2, dim: 2 }, gpu).deadline_ms(250);
+        let line = encode_request(None, &req);
+        assert!(line.contains(r#""deadline_ms":250"#), "{line}");
+        let (_, back) = parse_request(&line);
+        assert_eq!(back.unwrap().opts.deadline_ms, Some(250));
+        // a non-integer deadline is refused, not truncated
+        let (_, bad) = parse_request(
+            r#"{"gpu":"A100","kernel":{"type":"rmsnorm","seq":2,"dim":2},"deadline_ms":1.5}"#,
+        );
+        assert_eq!(bad.unwrap_err().code(), "unsupported_kernel");
+    }
+
+    #[test]
+    fn stats_report_round_trips() {
+        let report = StatsReport {
+            requests: 9,
+            batches: 3,
+            mean_batch: 3.0,
+            rejected_requests: 2,
+            deadline_exceeded: 1,
+            queue_depth: 0,
+            max_queue_depth: 5,
+            cache_hits: 7,
+            cache_misses: 2,
+            served: 12,
+            errors: 3,
+            simulated: 1,
+            swept: 0,
+            clients: ClientStats {
+                connected: 2,
+                total: 4,
+                quarantined: 1,
+                idle_reaped: 1,
+                oversized_lines: 2,
+                disconnects: 1,
+            },
+        };
+        let line = encode_stats(Some("st"), &report);
+        let (id, back) = parse_stats(&line).unwrap();
+        assert_eq!(id.as_deref(), Some("st"));
+        assert_eq!(back, report);
     }
 
     #[test]

@@ -18,6 +18,9 @@ struct Inner {
     kind_groups: Vec<usize>,
     /// Requests refused with `QueueFull` (backpressure made visible).
     rejected: u64,
+    /// Requests whose admission deadline expired while the queue stayed
+    /// saturated (`PredictError::DeadlineExceeded`).
+    deadline_exceeded: u64,
     /// Backlog sampled after each batch collection.
     queue_depth_last: usize,
     queue_depth_max: usize,
@@ -43,6 +46,9 @@ pub struct Snapshot {
     pub mean_kind_batch: f64,
     /// Requests refused with `PredictError::QueueFull`.
     pub rejected_requests: u64,
+    /// Requests answered `PredictError::DeadlineExceeded` (their
+    /// `deadline_ms` expired before queue admission).
+    pub deadline_exceeded: u64,
     /// Bounded-queue backlog: last sample and high-water mark.
     pub queue_depth: usize,
     pub max_queue_depth: usize,
@@ -79,6 +85,13 @@ impl Metrics {
     /// One request bounced off the full queue.
     pub fn record_rejected(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// One request's admission deadline expired (also counted rejected —
+    /// `deadline_exceeded` is the subset of `rejected_requests` that
+    /// carried a `deadline_ms`).
+    pub fn record_deadline_exceeded(&self) {
+        self.inner.lock().unwrap().deadline_exceeded += 1;
     }
 
     /// Sample the bounded-queue backlog (called by the service loop after
@@ -118,6 +131,7 @@ impl Metrics {
                 (g.cache_hits + g.cache_misses) as f64 / total_groups as f64
             },
             rejected_requests: g.rejected,
+            deadline_exceeded: g.deadline_exceeded,
             queue_depth: g.queue_depth_last,
             max_queue_depth: g.queue_depth_max,
         }
@@ -160,8 +174,10 @@ mod tests {
         m.record_rejected();
         m.record_queue_depth(7);
         m.record_queue_depth(3);
+        m.record_deadline_exceeded();
         let s = m.snapshot();
         assert_eq!(s.rejected_requests, 2);
+        assert_eq!(s.deadline_exceeded, 1);
         assert_eq!(s.queue_depth, 3);
         assert_eq!(s.max_queue_depth, 7);
     }

@@ -160,6 +160,26 @@ impl<T> Bounded<T> {
         }
     }
 
+    /// Non-blocking pop: [`Pop::Timeout`] means empty-but-open (nothing
+    /// available right now), [`Pop::Closed`] means closed and fully
+    /// drained — the round-robin TCP dispatcher's probe, which must never
+    /// park on one client's queue while others have work.
+    pub fn try_pop(&self) -> Pop<T> {
+        let mut g = self.state.lock().unwrap();
+        if let Some(item) = g.buf.pop_front() {
+            let wake = g.push_waiters > 0;
+            drop(g);
+            if wake {
+                self.not_full.notify_one();
+            }
+            return Pop::Item(item);
+        }
+        if g.closed {
+            return Pop::Closed;
+        }
+        Pop::Timeout
+    }
+
     /// Pop with a deadline (the batcher's intra-batch wait).
     pub fn pop_until(&self, deadline: Instant) -> Pop<T> {
         let mut g = self.state.lock().unwrap();

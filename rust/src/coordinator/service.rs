@@ -98,6 +98,21 @@ impl Client {
         }
     }
 
+    /// [`Client::try_predict`] without the rejected-request metric on
+    /// `Full`: the TCP admission dispatcher probes the queue every tick
+    /// while a head-of-line request waits, and only the *terminal*
+    /// outcome of that retry loop should count — the dispatcher records
+    /// it explicitly when it gives up.
+    pub(crate) fn try_predict_silent(&self, req: PredictRequest) -> Result<Pending, PredictError> {
+        req.validate()?;
+        let (tx, rx) = channel();
+        match self.queue.try_push(Request { req, resp: tx }) {
+            Ok(()) => Ok(Pending { rx }),
+            Err(PushError::Full(_)) => Err(PredictError::QueueFull),
+            Err(PushError::Closed(_)) => Err(PredictError::Shutdown),
+        }
+    }
+
     /// Blocking submit: wait for queue space as long as it takes
     /// (backpressure propagates to the producer).
     pub fn submit(&self, req: PredictRequest) -> Result<Pending, PredictError> {

@@ -55,8 +55,10 @@ fn usage() -> &'static str {
                   [--threads N]\n\
        sweep      --spec <file|-> [--threads N] [--json]\n\
        gpus\n\
-       serve      [--stdio] [--requests 512] [--gpu A100] [--threads N]\n\
+       serve      [--stdio | --tcp ADDR] [--requests 512] [--gpu A100] [--threads N]\n\
                   [--max-batch 256] [--deadline-us 2000] [--queue-cap 1024]\n\
+                  [--max-clients 64] [--inbox-cap 64] [--max-inflight 32]\n\
+                  [--admit-timeout-ms 2000] [--idle-timeout-ms 60000] [--quarantine-limit 8]\n\
        tune       --gpu A40 [--n 20]\n\
        experiment <table1|table7|fig3|fig4|fig5|table8|scaledmm|fig6|fig7|table9|fig8|table10|all>\n\
      \n\
@@ -613,6 +615,33 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Drain flag for `serve --tcp`: flipped by SIGTERM/SIGINT, watched by the
+/// TCP accept loop and readers — stop accepting, finish in-flight work,
+/// flush every connection, exit cleanly.
+static DRAIN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Install a minimal SIGTERM/SIGINT handler without libc: `signal(2)` via
+/// a raw extern declaration (the only async-signal-safe work is one
+/// atomic store).
+#[cfg(unix)]
+fn install_drain_handler() {
+    extern "C" fn on_signal(_signum: i32) {
+        DRAIN.store(true, std::sync::atomic::Ordering::Release);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal as usize);
+        signal(SIGINT, on_signal as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_drain_handler() {}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use synperf::coordinator::{PredictionService, ServiceConfig};
     let defaults = ServiceConfig::default();
@@ -647,6 +676,63 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         cfg.clone(),
     );
+
+    if let Some(addr) = args.str_opt("tcp") {
+        // JSONL TCP surface: same wire as --stdio (byte-identical
+        // responses for the same request stream), many concurrent clients
+        // with fair admission, per-request deadlines, and graceful drain
+        // on SIGTERM/SIGINT (see rust/README.md "Network serving")
+        use synperf::api::tcp::{self, TcpConfig};
+        let d = TcpConfig::default();
+        let tcp_cfg = TcpConfig {
+            max_clients: args.usize_or("max-clients", d.max_clients)?,
+            inbox_cap: args.usize_or("inbox-cap", d.inbox_cap)?,
+            max_inflight: args.usize_or("max-inflight", d.max_inflight)?,
+            quarantine_limit: args.u64_or("quarantine-limit", u64::from(d.quarantine_limit))?
+                as u32,
+            admit_timeout: std::time::Duration::from_millis(
+                args.u64_or("admit-timeout-ms", d.admit_timeout.as_millis() as u64)?,
+            ),
+            idle_timeout: std::time::Duration::from_millis(
+                args.u64_or("idle-timeout-ms", d.idle_timeout.as_millis() as u64)?,
+            ),
+            write_timeout: d.write_timeout,
+            tick: d.tick,
+            threads,
+        };
+        let listener = std::net::TcpListener::bind(addr)?;
+        install_drain_handler();
+        eprintln!(
+            "tcp: listening on {} (max {} clients; SIGTERM/SIGINT drains)",
+            listener.local_addr()?,
+            tcp_cfg.max_clients
+        );
+        let factory = simulator_factory(scale);
+        let stats = tcp::serve(
+            listener,
+            &svc.client(),
+            move || factory().threads(threads),
+            &tcp_cfg,
+            &DRAIN,
+        )?;
+        let snap = svc.metrics.snapshot();
+        eprintln!(
+            "tcp: {} responses ({} errors, {} simulations, {} sweeps, {} stats) over {} connections ({} quarantined, {} reaped, {} dropped); rejected {}, deadline exceeded {}",
+            stats.served,
+            stats.errors,
+            stats.simulated,
+            stats.swept,
+            stats.stats_lines,
+            stats.connections,
+            stats.quarantined,
+            stats.idle_reaped,
+            stats.disconnects,
+            snap.rejected_requests,
+            snap.deadline_exceeded
+        );
+        svc.shutdown();
+        return Ok(());
+    }
 
     if args.has("stdio") {
         // JSONL wire surface: one request per line on stdin, one response

@@ -85,6 +85,75 @@ fn service_answers_all_clients_under_contention() {
 }
 
 #[test]
+fn drain_under_load_answers_every_request_exactly_once() {
+    // shutdown with K clients mid-flight: every submitted request gets
+    // exactly one terminal outcome — an answer, queue_full, or shutdown —
+    // and nothing hangs or vanishes
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+    let (gate_tx, gate_rx) = channel::<()>();
+    let svc = PredictionService::spawn(
+        move || {
+            gate_rx.recv().ok(); // hold the service loop so the queue fills
+            ModelBundle::default()
+        },
+        ServiceConfig {
+            max_batch: 16,
+            deadline: Duration::from_millis(1),
+            queue_cap: 32,
+            ..ServiceConfig::default()
+        },
+    );
+    let (ok, full, shut) = (AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0));
+    const CLIENTS: u64 = 6;
+    const PER_CLIENT: u64 = 30;
+    std::thread::scope(|s| {
+        for t in 0..CLIENTS {
+            let client = svc.client();
+            let (ok, full, shut) = (&ok, &full, &shut);
+            s.spawn(move || {
+                let gpu = gpu_by_name("A100").unwrap();
+                for i in 0..PER_CLIENT {
+                    let cfg = KernelConfig::RmsNorm {
+                        seq: 12000 + (i % 10) as u32,
+                        dim: 1024 + t as u32,
+                    };
+                    let req = synperf::api::PredictRequest::new(cfg, gpu.clone());
+                    match client.predict_deadline(req, Duration::from_millis(20)) {
+                        Ok(resp) => {
+                            assert!(resp.latency_sec > 0.0 && resp.latency_sec.is_finite());
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(synperf::api::PredictError::QueueFull) => {
+                            full.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(synperf::api::PredictError::Shutdown) => {
+                            shut.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected terminal outcome: {e}"),
+                    }
+                }
+            });
+        }
+        // let the clients pile up against the held queue, then open the
+        // gate briefly, then drain while requests are still in flight
+        std::thread::sleep(Duration::from_millis(30));
+        gate_tx.send(()).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        svc.shutdown(); // Client handles stay valid after the service drops
+    });
+    let (ok, full, shut) =
+        (ok.load(Ordering::Relaxed), full.load(Ordering::Relaxed), shut.load(Ordering::Relaxed));
+    assert_eq!(
+        ok + full + shut,
+        CLIENTS * PER_CLIENT,
+        "every request needs exactly one outcome: {ok} ok + {full} full + {shut} shutdown"
+    );
+    assert!(ok > 0, "the opened gate must have answered some requests");
+}
+
+#[test]
 fn stdio_mixed_verbs_stay_in_order_under_parallel_load() {
     // the serve loop runs a multi-threaded simulator while extra threads
     // hammer the same global engine: responses must arrive strictly in

@@ -93,6 +93,10 @@ fn error_golden_lines_cover_the_whole_taxonomy() {
             r#"{"v":1,"ok":false,"error":{"code":"queue_full","message":"prediction queue at capacity"}}"#,
         ),
         (
+            PredictError::DeadlineExceeded,
+            r#"{"v":1,"ok":false,"error":{"code":"deadline_exceeded","message":"request deadline exceeded"}}"#,
+        ),
+        (
             PredictError::Shutdown,
             r#"{"v":1,"ok":false,"error":{"code":"shutdown","message":"prediction service is shut down"}}"#,
         ),
@@ -213,6 +217,75 @@ fn service_answers_are_typed_end_to_end() {
         .predict(PredictRequest::new(gemm(911, 433, 277), gpu).strict())
         .unwrap_err();
     assert_eq!(err, PredictError::PredictorUnavailable(KernelKind::Gemm));
+    svc.shutdown();
+}
+
+// ---- The stats verb -------------------------------------------------------
+
+#[test]
+fn stats_golden_line_roundtrips() {
+    // hand-built report with exactly-representable values: the golden is
+    // stable across both wire surfaces (stdio and TCP answer this one
+    // shape through the same encoder)
+    let report = wire::StatsReport {
+        requests: 12,
+        batches: 8,
+        mean_batch: 1.5,
+        rejected_requests: 2,
+        deadline_exceeded: 1,
+        queue_depth: 3,
+        max_queue_depth: 7,
+        cache_hits: 9,
+        cache_misses: 3,
+        served: 14,
+        errors: 2,
+        simulated: 1,
+        swept: 1,
+        clients: wire::ClientStats {
+            connected: 2,
+            total: 5,
+            quarantined: 1,
+            idle_reaped: 1,
+            oversized_lines: 1,
+            disconnects: 2,
+        },
+    };
+    let line = wire::encode_stats(Some("st1"), &report);
+    assert_eq!(
+        line,
+        r#"{"v":1,"id":"st1","ok":true,"stats":{"requests":12,"batches":8,"mean_batch":1.5e0,"rejected_requests":2,"deadline_exceeded":1,"queue_depth":3,"max_queue_depth":7,"cache_hits":9,"cache_misses":3,"served":14,"errors":2,"simulated":1,"swept":1,"clients":{"connected":2,"total":5,"quarantined":1,"idle_reaped":1,"oversized_lines":1,"disconnects":2}}}"#
+    );
+    let (id, back) = wire::parse_stats(&line).unwrap();
+    assert_eq!(id.as_deref(), Some("st1"));
+    assert_eq!(back, report);
+}
+
+#[test]
+fn stats_verb_answers_over_the_stdio_wire() {
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let input = concat!(
+        r#"{"id":"p1","gpu":"A100","kernel":{"type":"gemm","m":320,"n":192,"k":256}}"#,
+        "\n",
+        "not json\n",
+        r#"{"id":"st","op":"stats"}"#,
+        "\n",
+    );
+    let mut out = Vec::new();
+    let stats =
+        serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8, 2).unwrap();
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.stats_lines, 1);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3);
+    let (id, report) = wire::parse_stats(lines[2]).unwrap();
+    assert_eq!(id.as_deref(), Some("st"));
+    assert_eq!(report.served, 3, "the stats line counts itself");
+    assert_eq!(report.errors, 1, "the malformed line counted as an error");
+    assert_eq!(report.requests, 1, "the predict answered before the stats turn");
+    assert_eq!(report.clients.connected, 1);
+    assert_eq!(report.clients.total, 1);
+    assert_eq!(report.clients.oversized_lines, 0);
     svc.shutdown();
 }
 

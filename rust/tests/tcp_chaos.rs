@@ -1,0 +1,436 @@
+//! Deterministic fault-injection acceptance tests for the TCP serving
+//! front end (`synperf serve --tcp`): a FaultPolicy test client drives
+//! slow-loris trickles, mid-line disconnects, half-open peers, repeated
+//! abuse, and bursty overload against a live `tcp::serve` loop. The
+//! contract under every fault: no panics, no dropped well-formed request
+//! without a typed error, responses in per-connection input order — and a
+//! clean N-client run is **byte-identical** with the stdio wire for the
+//! same request streams.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+use synperf::api::stdio::serve_lines;
+use synperf::api::tcp::{self, TcpConfig};
+use synperf::api::{wire, ModelBundle};
+use synperf::coordinator::{PredictionService, ServiceConfig};
+use synperf::scenario::Simulator;
+
+/// A test config with tight ticks so faults trigger in test time.
+fn fast_cfg() -> TcpConfig {
+    TcpConfig {
+        tick: Duration::from_millis(10),
+        ..TcpConfig::default()
+    }
+}
+
+/// Run `tcp::serve` on an ephemeral port, hand the address to `clients`,
+/// flip the drain flag when they are done, and return the server's stats.
+fn with_server<F>(svc: &PredictionService, cfg: TcpConfig, clients: F) -> tcp::NetStats
+where
+    F: FnOnce(std::net::SocketAddr) + Send,
+{
+    // flips the drain flag even if `clients` panics, so a failed
+    // assertion surfaces instead of hanging the scope join forever
+    struct Drain<'a>(&'a AtomicBool);
+    impl Drop for Drain<'_> {
+        fn drop(&mut self) {
+            self.0.store(true, Ordering::Release);
+        }
+    }
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let client = svc.client();
+    let shutdown = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let server = s.spawn(|| {
+            tcp::serve(listener, &client, Simulator::degraded, &cfg, &shutdown).unwrap()
+        });
+        {
+            let _drain = Drain(&shutdown);
+            clients(addr);
+        }
+        server.join().expect("tcp server must not panic")
+    })
+}
+
+/// Write a whole request stream, half-close, read everything to EOF.
+fn send_stream(addr: std::net::SocketAddr, input: &[u8]) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(input).unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut out = Vec::new();
+    stream.read_to_end(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn clean_multiclient_run_is_byte_identical_with_stdio() {
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    // per-client streams with disjoint shapes (seq 20000+) so this test
+    // owns its slice of the global engine cache
+    let stream = |c: usize| -> Vec<u8> {
+        let mut s = String::new();
+        for j in 0..5usize {
+            s.push_str(&format!(
+                "{{\"id\":\"c{c}-p{j}\",\"gpu\":\"A100\",\"kernel\":{{\"type\":\"rmsnorm\",\
+                 \"seq\":{},\"dim\":2048}}}}\n",
+                20000 + c * 16 + j
+            ));
+        }
+        s.push_str("##not-json##\n");
+        s.push_str(&format!(
+            "{{\"id\":\"c{c}-s\",\"op\":\"simulate\",\"scenario\":{{\"model\":\"llama3.1-8b\",\
+             \"gpu\":\"A100\",\"workload\":{{\"requests\":[[{},4]]}},\"seed\":{}}}}}\n",
+            64 + c,
+            3 + c
+        ));
+        s.into_bytes()
+    };
+    const N: usize = 4;
+    // warm the global engine cache with one stdio pass per stream, then
+    // capture the all-cache-hit stdio output as the expected bytes — the
+    // TCP run over the warmed cache must match it exactly
+    let mut expected: Vec<Vec<u8>> = Vec::new();
+    for c in 0..N {
+        let mut warm = Vec::new();
+        serve_lines(&svc.client(), Simulator::degraded, &stream(c)[..], &mut warm, 8, 2).unwrap();
+        let mut out = Vec::new();
+        serve_lines(&svc.client(), Simulator::degraded, &stream(c)[..], &mut out, 8, 2).unwrap();
+        expected.push(out);
+    }
+    let stats = with_server(&svc, fast_cfg(), |addr| {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..N)
+                .map(|c| s.spawn(move || send_stream(addr, &stream(c))))
+                .collect();
+            for (c, h) in handles.into_iter().enumerate() {
+                let got = h.join().unwrap();
+                assert_eq!(
+                    String::from_utf8_lossy(&got),
+                    String::from_utf8_lossy(&expected[c]),
+                    "client {c}: TCP bytes drifted from the stdio wire"
+                );
+            }
+        });
+    });
+    assert_eq!(stats.connections, N as u64);
+    assert_eq!(stats.served, (N * 7) as u64);
+    assert_eq!(stats.errors, N as u64, "one malformed line per client");
+    assert_eq!(stats.simulated, N as u64);
+    assert_eq!(stats.quarantined, 0);
+    assert_eq!(stats.idle_reaped, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn slow_loris_does_not_starve_other_clients() {
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let cfg = TcpConfig {
+        idle_timeout: Duration::from_secs(30), // the loris stays "alive"
+        ..fast_cfg()
+    };
+    let stats = with_server(&svc, cfg, |addr| {
+        let (done_tx, done_rx) = channel::<()>();
+        std::thread::scope(|s| {
+            // the loris: drip one byte of a never-ending line
+            s.spawn(move || {
+                let mut loris = TcpStream::connect(addr).unwrap();
+                loop {
+                    if loris.write_all(b"x").is_err() {
+                        break;
+                    }
+                    match done_rx.recv_timeout(Duration::from_millis(5)) {
+                        // keep dripping; stop on done OR on a dropped
+                        // sender (a panic below), so the scope can join
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                        _ => break,
+                    }
+                }
+            });
+            // the honest client: 5 predicts answered while the loris drips
+            let mut input = String::new();
+            for j in 0..5usize {
+                input.push_str(&format!(
+                    "{{\"id\":\"h{j}\",\"gpu\":\"A100\",\"kernel\":{{\"type\":\"rmsnorm\",\
+                     \"seq\":{},\"dim\":1024}}}}\n",
+                    20100 + j
+                ));
+            }
+            let got = send_stream(addr, input.as_bytes());
+            done_tx.send(()).ok(); // the honest client is done: release the loris
+            let text = String::from_utf8(got).unwrap();
+            let lines: Vec<&str> = text.lines().collect();
+            assert_eq!(lines.len(), 5, "loris must not starve the honest client");
+            for (j, line) in lines.iter().enumerate() {
+                assert!(
+                    line.contains(&format!("\"id\":\"h{j}\"")) && line.contains("\"ok\":true"),
+                    "response {j} wrong or out of order: {line}"
+                );
+            }
+        });
+    });
+    assert_eq!(stats.idle_reaped, 0, "a trickling peer counts as progress");
+    svc.shutdown();
+}
+
+#[test]
+fn mid_line_disconnect_does_not_panic_the_server() {
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let stats = with_server(&svc, fast_cfg(), |addr| {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // one whole request, then half a line, then vanish
+        stream
+            .write_all(
+                b"{\"id\":\"ok1\",\"gpu\":\"A100\",\"kernel\":{\"type\":\"rmsnorm\",\"seq\":20200,\"dim\":1024}}\n{\"id\":\"trunc",
+            )
+            .unwrap();
+        drop(stream); // no half-close: the partial line just stops
+        // give the server a moment to observe the hangup and unwind
+        std::thread::sleep(Duration::from_millis(150));
+    });
+    assert_eq!(stats.connections, 1);
+    assert!(
+        stats.served >= 1,
+        "the complete request before the disconnect was answered: {stats:?}"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn half_open_connection_is_reaped() {
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let cfg = TcpConfig {
+        idle_timeout: Duration::from_millis(200),
+        ..fast_cfg()
+    };
+    let stats = with_server(&svc, cfg, |addr| {
+        let stream = TcpStream::connect(addr).unwrap();
+        // send nothing: the server must notice on its own (the read
+        // timeout is a failsafe so a broken reaper fails the test
+        // instead of hanging it)
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let t0 = Instant::now();
+        let mut buf = Vec::new();
+        let mut reader = &stream;
+        reader.read_to_end(&mut buf).ok(); // EOF when the server reaps us
+        assert!(buf.is_empty());
+        assert!(
+            t0.elapsed() < Duration::from_secs(15),
+            "reap must happen in idle_timeout time, not hang"
+        );
+    });
+    assert_eq!(stats.idle_reaped, 1);
+    assert_eq!(stats.connections, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn repeated_abuse_is_quarantined_after_typed_errors() {
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let cfg = TcpConfig { quarantine_limit: 3, ..fast_cfg() };
+    let stats = with_server(&svc, cfg, |addr| {
+        // 2 bad lines, then a valid one (resets the strike counter), then
+        // 3 bad in a row: quarantine. Exactly 6 responses, then EOF.
+        let mut input = Vec::new();
+        input.extend_from_slice(b"!!b1\n!!b2\n");
+        input.extend_from_slice(
+            b"{\"id\":\"good\",\"gpu\":\"A100\",\"kernel\":{\"type\":\"rmsnorm\",\"seq\":20300,\"dim\":1024}}\n",
+        );
+        input.extend_from_slice(b"!!b3\n!!b4\n!!b5\n");
+        let got = send_stream(addr, &input);
+        let text = String::from_utf8(got).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 6, "every line up to the quarantine answers: {text}");
+        for (i, line) in lines.iter().enumerate() {
+            if i == 2 {
+                assert!(line.contains("\"id\":\"good\"") && line.contains("\"ok\":true"));
+            } else {
+                assert!(
+                    line.contains("\"code\":\"unsupported_kernel\"")
+                        && line.contains("malformed JSON"),
+                    "line {i}: {line}"
+                );
+            }
+        }
+    });
+    assert_eq!(stats.quarantined, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn oversized_line_answers_typed_error_and_connection_survives() {
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let stats = with_server(&svc, fast_cfg(), |addr| {
+        let mut input = vec![b'z'; 2 << 20]; // 2 MiB, over the 1 MiB cap
+        input.push(b'\n');
+        input.extend_from_slice(
+            b"{\"id\":\"after\",\"gpu\":\"A100\",\"kernel\":{\"type\":\"rmsnorm\",\"seq\":20400,\"dim\":1024}}\n",
+        );
+        let got = send_stream(addr, &input);
+        let text = String::from_utf8(got).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(
+            lines[0].contains("\"code\":\"unsupported_kernel\"")
+                && lines[0].contains("oversized line"),
+            "{}",
+            lines[0]
+        );
+        assert!(lines[1].contains("\"id\":\"after\"") && lines[1].contains("\"ok\":true"));
+    });
+    assert_eq!(stats.oversized, 1);
+    assert_eq!(stats.quarantined, 0, "one oversized line is not abuse");
+    svc.shutdown();
+}
+
+#[test]
+fn burst_overload_answers_typed_backpressure_in_order() {
+    // gate the service loop so the bounded queue saturates deterministically
+    let (gate_tx, gate_rx) = channel::<()>();
+    let svc = PredictionService::spawn(
+        move || {
+            gate_rx.recv().ok();
+            ModelBundle::default()
+        },
+        ServiceConfig {
+            max_batch: 8,
+            deadline: Duration::from_millis(1),
+            queue_cap: 4,
+            ..ServiceConfig::default()
+        },
+    );
+    let cfg = TcpConfig {
+        admit_timeout: Duration::from_millis(50),
+        tick: Duration::from_millis(5),
+        ..TcpConfig::default()
+    };
+    let stats = with_server(&svc, cfg, |addr| {
+        let mut input = String::new();
+        let predict = |id: &str, seq: usize, deadline: Option<u64>| {
+            let dl = deadline.map(|ms| format!(",\"deadline_ms\":{ms}")).unwrap_or_default();
+            format!(
+                "{{\"id\":\"{id}\",\"gpu\":\"A100\",\"kernel\":{{\"type\":\"rmsnorm\",\
+                 \"seq\":{seq},\"dim\":1024}}{dl}}}\n"
+            )
+        };
+        for j in 0..4usize {
+            input.push_str(&predict(&format!("f{j}"), 20500 + j, None)); // fill the queue
+        }
+        for j in 0..8usize {
+            input.push_str(&predict(&format!("d{j}"), 20510 + j, Some(1))); // expire fast
+        }
+        for j in 0..8usize {
+            input.push_str(&predict(&format!("n{j}"), 20520 + j, None)); // admit_timeout
+        }
+        input.push_str("{\"id\":\"st\",\"op\":\"stats\"}\n");
+        // open the gate well after every waiting request has expired: the
+        // four queued fillers then answer ok, everything else already
+        // failed typed — and the response order is still the input order
+        let opener = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            gate_tx.send(()).ok();
+        });
+        let got = send_stream(addr, input.as_bytes());
+        opener.join().unwrap();
+        let text = String::from_utf8(got).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 21, "every request answers exactly once: {text}");
+        for (j, line) in lines.iter().take(4).enumerate() {
+            assert!(
+                line.contains(&format!("\"id\":\"f{j}\"")) && line.contains("\"ok\":true"),
+                "filler {j}: {line}"
+            );
+        }
+        for (j, line) in lines.iter().skip(4).take(8).enumerate() {
+            assert!(
+                line.contains("\"code\":\"deadline_exceeded\""),
+                "deadline request {j}: {line}"
+            );
+        }
+        for (j, line) in lines.iter().skip(12).take(8).enumerate() {
+            assert!(line.contains("\"code\":\"queue_full\""), "waiting request {j}: {line}");
+        }
+        let (id, report) = wire::parse_stats(lines[20]).unwrap();
+        assert_eq!(id.as_deref(), Some("st"));
+        assert_eq!(report.requests, 4, "only the fillers reached the service");
+        assert_eq!(report.rejected_requests, 16);
+        assert_eq!(report.deadline_exceeded, 8);
+        assert_eq!(report.served, 21, "the stats line counts itself");
+        assert_eq!(report.errors, 16);
+        assert_eq!(report.clients.connected, 1);
+        assert_eq!(report.clients.total, 1);
+    });
+    assert_eq!(stats.served, 21);
+    assert_eq!(stats.errors, 16);
+    svc.shutdown();
+}
+
+#[test]
+fn graceful_drain_finishes_in_flight_requests() {
+    // requests admitted before the drain flag flips must still answer:
+    // gate the service, submit, flip the flag, then open the gate
+    let (gate_tx, gate_rx) = channel::<()>();
+    let svc = PredictionService::spawn(
+        move || {
+            gate_rx.recv().ok();
+            ModelBundle::default()
+        },
+        ServiceConfig::default(),
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let client = svc.client();
+    let cfg = fast_cfg();
+    let shutdown = AtomicBool::new(false);
+    let stats = std::thread::scope(|s| {
+        let server = s.spawn(|| {
+            tcp::serve(listener, &client, Simulator::degraded, &cfg, &shutdown).unwrap()
+        });
+        let peer = s.spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            for j in 0..3usize {
+                stream
+                    .write_all(
+                        format!(
+                            "{{\"id\":\"g{j}\",\"gpu\":\"A100\",\"kernel\":{{\"type\":\"rmsnorm\",\
+                             \"seq\":{},\"dim\":1024}}}}\n",
+                            20600 + j
+                        )
+                        .as_bytes(),
+                    )
+                    .unwrap();
+            }
+            // connection stays open: EOF must come from the server's drain
+            let mut reader = BufReader::new(stream);
+            let mut lines = Vec::new();
+            loop {
+                let mut line = String::new();
+                match reader.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => lines.push(line.trim_end().to_string()),
+                }
+            }
+            lines
+        });
+        // let the requests get admitted, then drain, then release the gate
+        std::thread::sleep(Duration::from_millis(150));
+        shutdown.store(true, Ordering::Release);
+        std::thread::sleep(Duration::from_millis(50));
+        gate_tx.send(()).ok();
+        let lines = peer.join().unwrap();
+        assert_eq!(lines.len(), 3, "drain must answer every admitted request: {lines:?}");
+        for (j, line) in lines.iter().enumerate() {
+            assert!(
+                line.contains(&format!("\"id\":\"g{j}\"")) && line.contains("\"ok\":true"),
+                "drained response {j}: {line}"
+            );
+        }
+        server.join().expect("drain must terminate the server")
+    });
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.errors, 0);
+    svc.shutdown();
+}
