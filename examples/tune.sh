@@ -1,0 +1,84 @@
+#!/usr/bin/env bash
+# Drive the autotune surface (§VII: ceiling-guided fused-MoE kernel
+# search) from a clean checkout, four ways:
+#  1. `synperf tune --spec -`: 8 sampled fused-MoE launches on the A40,
+#     diagnosed against the potential-performance ceiling and brute-force
+#     tuned over (BLOCK_SIZE, num_stages, num_warps) — streamed JSONL rows
+#     plus a summary line, with a byte-identity diff of stdout at
+#     --threads 1 vs --threads 8;
+#  2. explicit launch shapes through a bare spec object (defaults apply);
+#  3. spec-level errors: an unknown GPU aborts before any row, with
+#     nearest-name suggestions in the message;
+#  4. the same tune request over `serve --stdio` (rows + summary embed in
+#     one response line) between predict traffic.
+# Without a trained P80 artifact the ceiling falls back to the analytical
+# roofline — recorded on every row as "ceiling":"roofline".
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+RUN="cargo run --release --quiet --bin synperf --"
+
+# 1. sampled tune: 8 launches x 1 GPU, Underperforming-Point threshold
+# 0.02 (tight enough that the A40's known tuning headroom diagnoses
+# at least one point even on a lucky sample)
+SPEC='{"v":1,"id":"t1","op":"tune","tune":{"gpus":["A40"],"source":{"sampled":8},"gap_threshold":0.02,"seed":3}}'
+
+T1=$(printf '%s\n' "$SPEC" | $RUN tune --spec - --threads 1 --json)
+T8=$(printf '%s\n' "$SPEC" | $RUN tune --spec - --threads 8 --json)
+printf '%s\n' "$T1"
+
+lines=$(printf '%s\n' "$T1" | wc -l | tr -d ' ')
+[ "$lines" -eq 9 ] || { echo "FAIL: expected 8 rows + 1 summary line, got $lines"; exit 1; }
+rows=$(printf '%s\n' "$T1" | grep -c '"row":{' || true)
+[ "$rows" -eq 8 ] || { echo "FAIL: expected 8 row lines, got $rows"; exit 1; }
+# artifact-less checkout: the roofline fallback must be visible provenance
+roofline=$(printf '%s\n' "$T1" | grep -c '"ceiling":"roofline"' || true)
+[ "$roofline" -eq 9 ] || { echo "FAIL: every row + summary must carry roofline provenance"; exit 1; }
+
+SUMMARY=$(printf '%s\n' "$T1" | tail -1)
+printf '%s\n' "$SUMMARY" | grep -q '"summary":{"points":8,' \
+  || { echo "FAIL: summary line missing or wrong point count"; exit 1; }
+DIAG=$(printf '%s\n' "$SUMMARY" | sed -n 's/.*"diagnosed":\([0-9][0-9]*\).*/\1/p')
+[ -n "$DIAG" ] && [ "$DIAG" -ge 1 ] \
+  || { echo "FAIL: expected at least one diagnosed (underperforming) point, got '$DIAG'"; exit 1; }
+GMD=$(printf '%s\n' "$SUMMARY" | sed -n 's/.*"geomean_speedup_diagnosed":\([^,]*\),.*/\1/p')
+awk -v g="$GMD" 'BEGIN { exit !(g + 0 >= 1.0) }' \
+  || { echo "FAIL: diagnosed geomean speedup $GMD must be >= 1.0 (tuning never hurts)"; exit 1; }
+
+# the tune contract: stdout (rows + summary) is byte-identical across
+# thread counts — work stealing may reorder evaluation, never output
+[ "$T1" = "$T8" ] \
+  || { echo "FAIL: tune rows must be byte-identical across --threads 1 vs 8"; exit 1; }
+
+# 2. explicit launch shapes through a bare spec object: 2 GPUs x 1 shape
+EXPL_OUT=$(printf '%s\n' \
+  '{"gpus":["A40","H800"],"source":{"explicit":[{"m":256,"e":16,"topk":2,"h":1024,"n":512}]},"seed":7}' \
+  | $RUN tune --spec - --json)
+expl_rows=$(printf '%s\n' "$EXPL_OUT" | grep -c '"row":{' || true)
+[ "$expl_rows" -eq 2 ] || { echo "FAIL: expected 2 explicit rows, got $expl_rows"; exit 1; }
+printf '%s\n' "$EXPL_OUT" | tail -1 | grep -q '"summary":{"points":2,' \
+  || { echo "FAIL: explicit-shape summary missing"; exit 1; }
+
+# 3. spec-level errors abort before any row, with nearest-name hints
+ERR_OUT=$(printf '%s\n' '{"id":"bad","gpus":["B300"]}' | $RUN tune --spec - --json)
+[ "$(printf '%s\n' "$ERR_OUT" | wc -l | tr -d ' ')" -eq 1 ] \
+  || { echo "FAIL: spec-level error must be exactly one line"; exit 1; }
+printf '%s\n' "$ERR_OUT" | grep -q '"id":"bad","ok":false,"error":{"code":"unknown_gpu"' \
+  || { echo "FAIL: unknown_gpu spec error missing"; exit 1; }
+printf '%s\n' "$ERR_OUT" | grep -q 'closest: A100, H800, H100' \
+  || { echo "FAIL: nearest-name suggestions missing from unknown_gpu"; exit 1; }
+
+# 4. the same request over the stdio wire: one response line embedding
+# rows + summary, interleaved with the predict verb
+WIRE_OUT=$(printf '%s\n' \
+  '{"v":1,"id":"p1","gpu":"A100","kernel":{"type":"gemm","m":512,"n":512,"k":512}}' \
+  "$SPEC" \
+  | $RUN serve --stdio --queue-cap 64)
+printf '%s\n' "$WIRE_OUT" | grep -q '"id":"p1","ok":true' \
+  || { echo "FAIL: predict verb broken next to tune"; exit 1; }
+printf '%s\n' "$WIRE_OUT" | grep '"id":"t1"' | grep -q '"ok":true,"tune":{"rows":\[' \
+  || { echo "FAIL: stdio tune response missing embedded rows"; exit 1; }
+printf '%s\n' "$WIRE_OUT" | grep '"id":"t1"' | grep -q '"summary":{"points":8,' \
+  || { echo "FAIL: stdio tune response missing summary"; exit 1; }
+
+echo "tune: all assertions passed"

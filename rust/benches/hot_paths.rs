@@ -7,8 +7,10 @@
 //!   scenario compile                    (ScenarioSpec -> phase-tagged op streams)
 //!   scenario evaluate                   (two-pass parallel, 1 vs 8 threads)
 //!   sweep grid expand + run             (fleet search: points/sec, 2 vs 4 workers)
+//!   autotune run                        (§VII ceiling-guided search, 1 vs 8 workers)
 //!   protocol batch routing              (predictions/sec through api::predict_batch)
-//!   native MLP forward                  (artifact-free fallback path, serial + par)
+//!   native MLP forward                  (artifact-free fallback path, serial + par
+//!                                        + AVX2 f32x8 vs scalar reference)
 //!   MLP forward via PJRT (b1 / b256 / b1024)
 //!   end-to-end single prediction       (the Fig. 7 "SynPerf time" path)
 //!   coordinator service throughput
@@ -200,6 +202,24 @@ fn run_benches(h: &mut Harness, smoke: bool) {
             black_box(out.last().copied());
         });
     }
+    // AVX2 f32x8 fast path against the always-compiled scalar reference
+    // (pinned bit-identical in mlp::native's tests) — forward_into above
+    // already picks the fast path at runtime; this pair isolates the win
+    if synperf::mlp::native::simd_available() {
+        let xs = vec![row; 256];
+        let mut out = Vec::with_capacity(256);
+        for (simd, name) in [(false, "scalar"), (true, "simd")] {
+            h.run(&format!("mlp/native_forward_{name} b256"), 200, 10, || {
+                out.clear();
+                synperf::mlp::native::forward_into_with(
+                    simd, &theta, &bn, &xs, &mut scratch, &mut out,
+                );
+                black_box(out.last().copied());
+            });
+        }
+    } else {
+        println!("(no AVX2 on this CPU: skipping mlp/native_forward_simd)");
+    }
     // chunked parallel forward with one thread-local Scratch per worker
     // (bit-identical to the serial path at any thread count)
     let xs_par = vec![row; 1024];
@@ -321,6 +341,29 @@ fn run_benches(h: &mut Harness, smoke: bool) {
                 synperf::sweep::run_sweep(
                     &run_spec,
                     synperf::scenario::Simulator::degraded,
+                    threads,
+                    |_| {},
+                )
+                .unwrap(),
+            );
+        });
+    }
+
+    println!("\n== autotune (§VII ceiling-guided kernel search) ==");
+    // diagnose + brute-force tune 3 sampled fused-MoE launches on one GPU
+    // with one Ceiling per worker; rows are byte-identical at any thread
+    // count (pinned in src/autotune/search.rs), so threads is a
+    // wall-clock-only knob
+    let tune_spec = synperf::autotune::TuneSpec::new()
+        .gpus(synperf::sweep::GpuFilter::Named(vec!["A40".into()]))
+        .source(synperf::autotune::ConfigSource::Sampled { n: 3 })
+        .seed(31);
+    for threads in [1usize, 8] {
+        h.run(&format!("autotune/tune 3pt {threads}thread"), 300, 3, || {
+            black_box(
+                synperf::autotune::run_tune(
+                    &tune_spec,
+                    synperf::autotune::Ceiling::auto,
                     threads,
                     |_| {},
                 )

@@ -2,7 +2,7 @@
 //! ([`super::stdio`] and [`super::tcp`]): a **capped** line reader (the
 //! unbounded `BufRead::lines` hazard is gone — a hostile peer cannot make
 //! one line exhaust memory), per-line verb classification (one JSON decode
-//! per line picks predict / simulate / sweep / stats), deadline-aware
+//! per line picks predict / simulate / sweep / tune / stats), deadline-aware
 //! queue admission, and the assembly of the `stats` verb's report. Both
 //! surfaces answer through the same codecs in [`super::wire`],
 //! [`crate::scenario::wire`] and [`crate::sweep::wire`], which is what
@@ -10,6 +10,7 @@
 
 use super::wire;
 use super::{PredictError, PredictRequest};
+use crate::autotune::{self, TuneError, TuneSpec};
 use crate::coordinator::{Client, Pending};
 use crate::scenario::wire::SimulateRequest;
 use crate::scenario::{self, ScenarioError};
@@ -168,11 +169,12 @@ pub(crate) enum Parsed {
     Predict(Option<String>, Result<PredictRequest, PredictError>),
     Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
     Sweep(Option<String>, Result<SweepSpec, SweepError>),
+    Tune(Option<String>, Result<TuneSpec, TuneError>),
     Stats(Option<String>),
 }
 
-/// Classify one non-blank line. Dispatch order: stats, sweep, simulate,
-/// then predict as the default — identical on both surfaces by
+/// Classify one non-blank line. Dispatch order: stats, sweep, tune,
+/// simulate, then predict as the default — identical on both surfaces by
 /// construction (this is the only classifier).
 pub(crate) fn classify(line: &str) -> Parsed {
     match parse_json(line) {
@@ -183,6 +185,9 @@ pub(crate) fn classify(line: &str) -> Parsed {
             } else if sweep::wire::is_sweep_json(&j) {
                 let (id, spec) = sweep::wire::parse_sweep_json(&j);
                 Parsed::Sweep(id, spec)
+            } else if autotune::wire::is_tune_json(&j) {
+                let (id, spec) = autotune::wire::parse_tune_json(&j);
+                Parsed::Tune(id, spec)
             } else if scenario::wire::is_simulate_json(&j) {
                 let (id, req) = scenario::wire::parse_request_json(&j);
                 Parsed::Simulate(id, req)
@@ -224,6 +229,7 @@ pub(crate) fn build_stats(
     errors: u64,
     simulated: u64,
     swept: u64,
+    tuned: u64,
     clients: wire::ClientStats,
 ) -> wire::StatsReport {
     let snap = client.metrics().snapshot();
@@ -242,6 +248,7 @@ pub(crate) fn build_stats(
         errors,
         simulated,
         swept,
+        tuned,
         clients,
     }
 }
@@ -317,6 +324,10 @@ mod tests {
         assert!(matches!(
             classify(r#"{"id":"w","op":"sweep","sweep":{}}"#),
             Parsed::Sweep(Some(_), _)
+        ));
+        assert!(matches!(
+            classify(r#"{"id":"t","op":"tune","tune":{}}"#),
+            Parsed::Tune(Some(_), Ok(_))
         ));
         assert!(matches!(
             classify(r#"{"op":"simulate","scenario":{"model":"m","gpu":"A100"}}"#),

@@ -11,22 +11,26 @@
 //! default — a kernel-latency request into the coordinator queue),
 //! **simulate** (`"op":"simulate"` with a `"scenario"` object for the v1
 //! single-node path, or a `"cluster"` object for the v2 discrete-event
-//! cluster simulation — both through the [`Simulator`]) and **sweep**
+//! cluster simulation — both through the [`Simulator`]), **sweep**
 //! (`"op":"sweep"` — a whole hardware-search grid answered as one line
-//! embedding every row plus the Pareto frontier). Each line is JSON-decoded
+//! embedding every row plus the Pareto frontier) and **tune**
+//! (`"op":"tune"` — a §VII ceiling-guided autotune run answered as one
+//! line embedding every row plus the summary). Each line is JSON-decoded
 //! exactly once; the decoded object picks the verb and feeds the winning
-//! codec. Simulate and sweep lines are evaluated on the writer thread when
-//! their turn comes, so output order still matches input order exactly —
-//! the in-order contract means later predict answers intentionally wait
-//! behind an earlier simulate line (head-of-line), exactly as they wait
-//! behind any earlier slow response. The `Simulator` is built lazily by
-//! the supplied factory on the first simulate line, so predict-only peers
-//! never pay its model-set startup cost; sweep lines build one simulator
-//! per sweep worker through the same factory.
+//! codec. Simulate, sweep and tune lines are evaluated on the writer
+//! thread when their turn comes, so output order still matches input order
+//! exactly — the in-order contract means later predict answers
+//! intentionally wait behind an earlier simulate line (head-of-line),
+//! exactly as they wait behind any earlier slow response. The `Simulator`
+//! is built lazily by the supplied factory on the first simulate line, so
+//! predict-only peers never pay its model-set startup cost; sweep lines
+//! build one simulator per sweep worker through the same factory, and tune
+//! lines probe the P80-ceiling artifact per worker ([`crate::autotune::Ceiling::auto`]).
 
 use super::serve::{self, LineReader, Parsed, ReadLine};
 use super::wire;
 use super::{PredictError, PredictResponse};
+use crate::autotune::{self, TuneError, TuneSpec};
 use crate::coordinator::{Client, Pending};
 use crate::scenario::wire::SimulateRequest;
 use crate::scenario::{self, ScenarioError, Simulator};
@@ -44,6 +48,9 @@ pub struct StdioStats {
     /// How many of `served` were sweep-verb lines (each answering a whole
     /// grid in one response).
     pub swept: u64,
+    /// How many of `served` were tune-verb lines (each answering a whole
+    /// autotune run in one response).
+    pub tuned: u64,
     /// How many of `served` were stats-verb lines.
     pub stats_lines: u64,
     /// Lines refused for exceeding [`serve::MAX_LINE_BYTES`] (each counted
@@ -61,6 +68,7 @@ enum Slot {
     Oversized(usize),
     Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
     Sweep(Option<String>, Result<SweepSpec, SweepError>),
+    Tune(Option<String>, Result<TuneSpec, TuneError>),
     Stats(Option<String>),
 }
 
@@ -104,6 +112,7 @@ where
                             }
                             Parsed::Stats(id) => Slot::Stats(id),
                             Parsed::Sweep(id, spec) => Slot::Sweep(id, spec),
+                            Parsed::Tune(id, spec) => Slot::Tune(id, spec),
                             Parsed::Simulate(id, req) => Slot::Simulate(id, req),
                             Parsed::Predict(id, Ok(req)) => {
                                 match serve::submit_predict(client, req) {
@@ -179,6 +188,7 @@ fn drain_slots<W: Write, F: Fn() -> Simulator + Sync>(
                     stats.errors,
                     stats.simulated,
                     stats.swept,
+                    stats.tuned,
                     wire::ClientStats {
                         connected: 1,
                         total: 1,
@@ -199,6 +209,19 @@ fn drain_slots<W: Write, F: Fn() -> Simulator + Sync>(
                     stats.errors += 1;
                 }
                 writeln!(writer, "{}", sweep::wire::encode_sweep_response(id.as_deref(), &res))?;
+                continue;
+            }
+            Slot::Tune(id, spec) => {
+                stats.served += 1;
+                stats.tuned += 1;
+                // like sweep: rows stream internally but the wire stays
+                // one-line-per-request — the response embeds rows + summary
+                let res = spec
+                    .and_then(|spec| autotune::run_tune(&spec, autotune::Ceiling::auto, threads, |_| {}));
+                if res.is_err() {
+                    stats.errors += 1;
+                }
+                writeln!(writer, "{}", autotune::wire::encode_tune_response(id.as_deref(), &res))?;
                 continue;
             }
             Slot::Simulate(id, req) => {

@@ -35,6 +35,7 @@
 use super::serve::{self, LineReader, Parsed, ReadLine};
 use super::wire;
 use super::{PredictError, PredictRequest, PredictResponse};
+use crate::autotune::{self, TuneError, TuneSpec};
 use crate::coordinator::queue::{Bounded, Pop, PushError};
 use crate::coordinator::{Client, Pending};
 use crate::scenario::wire::SimulateRequest;
@@ -71,7 +72,8 @@ pub struct TcpConfig {
     pub write_timeout: Duration,
     /// Poll granularity: read-timeout tick, inbox-push wait, accept poll.
     pub tick: Duration,
-    /// Worker threads for sweep-verb lines (see [`sweep::run_sweep`]).
+    /// Worker threads for sweep- and tune-verb lines (see
+    /// [`sweep::run_sweep`] / [`autotune::run_tune`]).
     pub threads: usize,
 }
 
@@ -99,6 +101,7 @@ pub struct NetStats {
     pub errors: u64,
     pub simulated: u64,
     pub swept: u64,
+    pub tuned: u64,
     pub stats_lines: u64,
     pub oversized: u64,
     /// Connections accepted over the lifetime (including refused-at-cap).
@@ -117,6 +120,7 @@ struct NetCounters {
     errors: AtomicU64,
     simulated: AtomicU64,
     swept: AtomicU64,
+    tuned: AtomicU64,
     stats_lines: AtomicU64,
     oversized: AtomicU64,
     connections: AtomicU64,
@@ -138,6 +142,7 @@ impl NetCounters {
             errors: get(&self.errors),
             simulated: get(&self.simulated),
             swept: get(&self.swept),
+            tuned: get(&self.tuned),
             stats_lines: get(&self.stats_lines),
             oversized: get(&self.oversized),
             connections: get(&self.connections),
@@ -181,6 +186,7 @@ enum Slot {
     Oversized(usize),
     Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
     Sweep(Option<String>, Result<SweepSpec, SweepError>),
+    Tune(Option<String>, Result<TuneSpec, TuneError>),
     Stats(Option<String>),
 }
 
@@ -489,6 +495,7 @@ fn dispatch_loop(
                             )),
                             Parsed::Stats(id) => Some(Slot::Stats(id)),
                             Parsed::Sweep(id, spec) => Some(Slot::Sweep(id, spec)),
+                            Parsed::Tune(id, spec) => Some(Slot::Tune(id, spec)),
                             Parsed::Simulate(id, req) => Some(Slot::Simulate(id, req)),
                             Parsed::Predict(id, Err(e)) => Some(Slot::Ready(id, Err(e))),
                             Parsed::Predict(id, Ok(req)) => {
@@ -574,6 +581,7 @@ fn write_loop<F>(
                     s.errors,
                     s.simulated,
                     s.swept,
+                    s.tuned,
                     counters.client_stats(),
                 );
                 let line = wire::encode_stats(id.as_deref(), &report);
@@ -592,6 +600,22 @@ fn write_loop<F>(
                     NetCounters::bump(&counters.errors);
                 }
                 let line = sweep::wire::encode_sweep_response(id.as_deref(), &res);
+                if writeln!(writer, "{line}").is_err() {
+                    break_dead(conn, counters);
+                    break;
+                }
+                continue;
+            }
+            Slot::Tune(id, spec) => {
+                NetCounters::bump(&counters.served);
+                NetCounters::bump(&counters.tuned);
+                let res = spec.and_then(|spec| {
+                    autotune::run_tune(&spec, autotune::Ceiling::auto, cfg.threads, |_| {})
+                });
+                if res.is_err() {
+                    NetCounters::bump(&counters.errors);
+                }
+                let line = autotune::wire::encode_tune_response(id.as_deref(), &res);
                 if writeln!(writer, "{line}").is_err() {
                     break_dead(conn, counters);
                     break;

@@ -559,9 +559,10 @@ pub struct StatsReport {
     pub served: u64,
     /// How many of `served` were error lines.
     pub errors: u64,
-    /// Simulate-verb and sweep-verb lines among `served`.
+    /// Simulate-, sweep- and tune-verb lines among `served`.
     pub simulated: u64,
     pub swept: u64,
+    pub tuned: u64,
     pub clients: ClientStats,
 }
 
@@ -578,7 +579,7 @@ pub fn encode_stats(id: Option<&str>, s: &StatsReport) -> String {
         out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
     }
     out.push_str(&format!(
-        ",\"ok\":true,\"stats\":{{\"requests\":{},\"batches\":{},\"mean_batch\":{:e},\"rejected_requests\":{},\"deadline_exceeded\":{},\"queue_depth\":{},\"max_queue_depth\":{},\"cache_hits\":{},\"cache_misses\":{},\"served\":{},\"errors\":{},\"simulated\":{},\"swept\":{},\"clients\":{{\"connected\":{},\"total\":{},\"quarantined\":{},\"idle_reaped\":{},\"oversized_lines\":{},\"disconnects\":{}}}}}}}",
+        ",\"ok\":true,\"stats\":{{\"requests\":{},\"batches\":{},\"mean_batch\":{:e},\"rejected_requests\":{},\"deadline_exceeded\":{},\"queue_depth\":{},\"max_queue_depth\":{},\"cache_hits\":{},\"cache_misses\":{},\"served\":{},\"errors\":{},\"simulated\":{},\"swept\":{},\"tuned\":{},\"clients\":{{\"connected\":{},\"total\":{},\"quarantined\":{},\"idle_reaped\":{},\"oversized_lines\":{},\"disconnects\":{}}}}}}}",
         s.requests,
         s.batches,
         s.mean_batch,
@@ -592,6 +593,7 @@ pub fn encode_stats(id: Option<&str>, s: &StatsReport) -> String {
         s.errors,
         s.simulated,
         s.swept,
+        s.tuned,
         s.clients.connected,
         s.clients.total,
         s.clients.quarantined,
@@ -635,6 +637,7 @@ pub fn parse_stats(line: &str) -> Result<(Option<String>, StatsReport)> {
             errors: u(s, "errors")?,
             simulated: u(s, "simulated")?,
             swept: u(s, "swept")?,
+            tuned: u(s, "tuned")?,
             clients: ClientStats {
                 connected: u(c, "connected")?,
                 total: u(c, "total")?,
@@ -749,6 +752,7 @@ mod tests {
             errors: 3,
             simulated: 1,
             swept: 0,
+            tuned: 1,
             clients: ClientStats {
                 connected: 2,
                 total: 4,

@@ -1,13 +1,38 @@
-//! "Beyond simulation" (paper §VII): model-guided optimization of the
-//! Fused-MoE Triton kernel.
+//! **Autotune subsystem** — "beyond simulation" (paper §VII):
+//! model-guided optimization of the Fused-MoE Triton kernel, end to end.
 //!
 //!  1. Train the same MLP with **pinball loss τ=0.8** -> a statistically
-//!     robust *Potential Performance Ceiling* `ŷ_p80` (§VII-A).
-//!  2. Diagnose: perf_gap = ŷ_p80 − y_actual; configurations with gap > 0.1
-//!     are *Underperforming Points* (§VII-B, Fig. 8).
-//!  3. Act: brute-force autotune `(BLOCK_SIZE, num_stages, num_warps)` on
-//!     the diagnosed points and verify the gap closes (§VII-C, Table X /
-//!     Fig. 9).
+//!     robust *Potential Performance Ceiling* `ŷ_p80` (§VII-A). When no
+//!     trained P80 artifact exists the analytical roofline bound stands
+//!     in, recorded in row provenance ([`Ceiling::auto`]).
+//!  2. Diagnose: perf_gap = ŷ_p80 − y_actual; configurations with gap >
+//!     the spec threshold (default [`GAP_THRESHOLD`]) are
+//!     *Underperforming Points*, ranked widest-gap-first (§VII-B, Fig. 8).
+//!  3. Act: brute-force autotune `(BLOCK_SIZE, num_stages, num_warps)`
+//!     on the diagnosed points and verify the gap closes (§VII-C,
+//!     Table X / Fig. 9).
+//!
+//! The declarative [`TuneSpec`] (GPU filter over the Table-VI registry,
+//! launch source, gap threshold, candidate bounds) drives the whole
+//! pipeline through [`run_tune`], which mirrors the sweep subsystem:
+//! work-stealing workers each owning one [`Ceiling`], rows streamed in
+//! strict index order (byte-identical at any `--threads`), a closed
+//! [`TuneError`] taxonomy, and a JSONL wire shape ([`wire`]) riding the
+//! `synperf tune` CLI verb plus the `tune` request on `serve`
+//! `--stdio`/`--tcp`.
+//!
+//! The original free functions survive as the low-level library surface:
+//! [`diagnose`] applies a caller-supplied P80 model to a dataset split,
+//! and [`tune`] brute-forces one launch on one GPU.
+
+pub mod report;
+pub mod search;
+pub mod spec;
+pub mod wire;
+
+pub use report::{print_report, TuneOutcome, TuneRow, TuneSummary};
+pub use search::{candidates, expand, run_tune, Ceiling, TunePoint};
+pub use spec::{ConfigSource, MoeShape, TuneError, TuneSpec, MAX_TUNE_CONFIGS, MAX_TUNE_POINTS};
 
 use crate::dataset::{finalize_for_gpu, Sample};
 use crate::hw::GpuSpec;
@@ -16,7 +41,8 @@ use crate::mlp::Predictor;
 use crate::oracle;
 use anyhow::Result;
 
-/// Gap threshold defining an Underperforming Point (§VII-B).
+/// Default gap threshold defining an Underperforming Point (§VII-B) —
+/// the [`TuneSpec::gap_threshold`] default.
 pub const GAP_THRESHOLD: f64 = 0.1;
 
 /// Per-sample diagnosis record.
@@ -63,12 +89,16 @@ impl TuneResult {
 }
 
 /// Brute-force sweep over the §VII-C space for one Fused-MoE launch.
-/// `seed` fixes the oracle measurement stream (routing is reused across candidates).
-pub fn tune(cfg: &KernelConfig, gpu: &GpuSpec, seed: u64) -> Result<TuneResult> {
+/// `seed` fixes the oracle measurement stream (routing is reused across
+/// candidates). Non-MoE configs are a typed [`TuneError::UnsupportedKernel`].
+pub fn tune(cfg: &KernelConfig, gpu: &GpuSpec, seed: u64) -> Result<TuneResult, TuneError> {
     let KernelConfig::FusedMoe { h, n, expert_tokens, cfg: default_cfg, .. } =
         finalize_for_gpu(cfg, gpu)
     else {
-        anyhow::bail!("tune() expects a FusedMoe config");
+        return Err(TuneError::UnsupportedKernel(format!(
+            "tune() expects a fused_moe config, got {:?}",
+            cfg.kind().name()
+        )));
     };
     let measure = |c: crate::kernels::MoeConfig, s: u64| {
         let d = fused_moe::decompose(h, n, &expert_tokens, c, gpu);
@@ -132,5 +162,14 @@ mod tests {
         assert!(g.underperforming());
         let g2 = GapRecord { gpu: "H20".into(), actual_eff: 0.6, ceiling_eff: 0.65, gap: 0.05 };
         assert!(!g2.underperforming());
+    }
+
+    #[test]
+    fn non_moe_configs_are_a_typed_error() {
+        let gpu = gpu_by_name("A40").unwrap();
+        let cfg = KernelConfig::RmsNorm { seq: 64, dim: 1024 };
+        let err = tune(&cfg, &gpu, 1).unwrap_err();
+        assert_eq!(err.code(), "unsupported_kernel");
+        assert!(err.to_string().contains("fused_moe"), "{err}");
     }
 }

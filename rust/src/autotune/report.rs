@@ -1,0 +1,198 @@
+//! Tune result rows and the Table-X-style summary: per-point
+//! default/best configs with efficiency and gap movement, plus the
+//! aggregate geomean speedups and gap-closure rate (§VII-C, Fig. 9).
+
+use crate::kernels::MoeConfig;
+use crate::util::stats::geomean;
+
+use super::spec::MoeShape;
+
+/// One streamed result row: the point's launch on one GPU, its diagnosis
+/// against the ceiling, and — when diagnosed — the best §VII-C candidate
+/// found and the gap movement it buys.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneRow {
+    pub index: usize,
+    /// Canonical registry name.
+    pub gpu: String,
+    /// Ceiling provenance: `"p80"` (trained pinball model) or
+    /// `"roofline"` (analytical fallback).
+    pub ceiling: &'static str,
+    pub shape: MoeShape,
+    /// The shipped default config for this launch (what SGLang would run).
+    pub default_cfg: MoeConfig,
+    /// The best candidate found; equals `default_cfg` when the point was
+    /// not diagnosed (undiagnosed points are never tuned).
+    pub best_cfg: MoeConfig,
+    /// `gap_before > gap_threshold` — an Underperforming Point (§VII-B).
+    pub diagnosed: bool,
+    /// Measured efficiency of the default config.
+    pub actual_eff: f64,
+    /// Ceiling efficiency (P80 prediction or roofline bound).
+    pub ceiling_eff: f64,
+    /// Efficiency after tuning (= `actual_eff` when not diagnosed).
+    pub eff_after: f64,
+    /// `ceiling_eff - actual_eff`; may be negative (no headroom).
+    pub gap_before: f64,
+    /// `max(ceiling_eff - eff_after, 0)`.
+    pub gap_after: f64,
+    /// `default_sec / best_sec` over clean oracle time; 1.0 when not
+    /// diagnosed.
+    pub speedup: f64,
+}
+
+/// The one-line aggregate over a finished tune (Table X / Fig. 9).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneSummary {
+    pub points: usize,
+    pub diagnosed: usize,
+    /// Ceiling provenance shared by every row of the run.
+    pub ceiling: &'static str,
+    /// Geomean speedup over every point (undiagnosed points contribute
+    /// 1.0 — the "don't touch what isn't broken" view).
+    pub geomean_speedup: f64,
+    /// Geomean speedup over diagnosed points only (the Table-X headline).
+    pub geomean_speedup_diagnosed: f64,
+    /// Fraction of the summed diagnosed gap closed by tuning, in [0, 1].
+    pub gap_closure: f64,
+    pub max_speedup: f64,
+    /// Diagnosed row indices ranked widest-gap-first (§VII-B ranking).
+    pub ranked: Vec<usize>,
+}
+
+/// Everything a finished tune yields: the rows (in index order) and the
+/// summary over them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneOutcome {
+    pub rows: Vec<TuneRow>,
+    pub summary: TuneSummary,
+}
+
+/// Collapse rows (in index order) into the summary.
+pub(crate) fn summarize(rows: &[TuneRow]) -> TuneSummary {
+    let all: Vec<f64> = rows.iter().map(|r| r.speedup).collect();
+    let diagnosed: Vec<&TuneRow> = rows.iter().filter(|r| r.diagnosed).collect();
+    let mut ranked: Vec<usize> = diagnosed.iter().map(|r| r.index).collect();
+    ranked.sort_by(|&a, &b| {
+        rows[b]
+            .gap_before
+            .partial_cmp(&rows[a].gap_before)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let dsp: Vec<f64> = diagnosed.iter().map(|r| r.speedup).collect();
+    let gap_sum: f64 = diagnosed.iter().map(|r| r.gap_before.max(0.0)).sum();
+    let gap_after_sum: f64 = diagnosed.iter().map(|r| r.gap_after).sum();
+    TuneSummary {
+        points: rows.len(),
+        diagnosed: diagnosed.len(),
+        ceiling: rows.first().map_or("roofline", |r| r.ceiling),
+        geomean_speedup: geomean(&all),
+        geomean_speedup_diagnosed: geomean(&dsp),
+        gap_closure: if gap_sum > 0.0 {
+            ((gap_sum - gap_after_sum) / gap_sum).clamp(0.0, 1.0)
+        } else {
+            0.0
+        },
+        max_speedup: all.iter().copied().fold(1.0, f64::max),
+        ranked,
+    }
+}
+
+fn cfg_label(c: &MoeConfig) -> String {
+    format!("{}x{}x{}/s{}/w{}", c.block_m, c.block_n, c.block_k, c.num_stages, c.num_warps)
+}
+
+/// Human Table-X-style report on stderr: diagnosed points ranked
+/// widest-gap-first, then the aggregate line. Stdout stays pure JSONL.
+pub fn print_report(out: &TuneOutcome) {
+    use crate::util::table::{f, pct, Table};
+    let s = &out.summary;
+    if !s.ranked.is_empty() {
+        let mut t = Table::new(
+            &format!("underperforming points, widest gap first (ceiling: {})", s.ceiling),
+            &["#", "gpu", "m/e/topk/h/n", "eff", "ceiling", "gap", "best cfg", "speedup", "gap'"],
+        );
+        for &i in &s.ranked {
+            let r = &out.rows[i];
+            t.row(vec![
+                r.index.to_string(),
+                r.gpu.clone(),
+                format!(
+                    "{}/{}/{}/{}/{}",
+                    r.shape.m, r.shape.e, r.shape.topk, r.shape.h, r.shape.n
+                ),
+                f(r.actual_eff, 3),
+                f(r.ceiling_eff, 3),
+                f(r.gap_before, 3),
+                cfg_label(&r.best_cfg),
+                format!("{}x", f(r.speedup, 2)),
+                f(r.gap_after, 3),
+            ]);
+        }
+        eprint!("{}", t.render());
+    }
+    eprintln!(
+        "tune: {} points, {} diagnosed (ceiling: {}); geomean speedup {}x overall, {}x on diagnosed; max {}x; gap closure {}",
+        s.points,
+        s.diagnosed,
+        s.ceiling,
+        f(s.geomean_speedup, 3),
+        f(s.geomean_speedup_diagnosed, 3),
+        f(s.max_speedup, 2),
+        pct(s.gap_closure)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(index: usize, diagnosed: bool, gap_before: f64, speedup: f64) -> TuneRow {
+        let cfg = MoeConfig { block_m: 64, block_n: 64, block_k: 32, num_stages: 4, num_warps: 8 };
+        let ceiling_eff = 0.8;
+        let actual_eff = ceiling_eff - gap_before;
+        let eff_after = if diagnosed { (actual_eff * speedup).min(0.995) } else { actual_eff };
+        TuneRow {
+            index,
+            gpu: "A40".into(),
+            ceiling: "roofline",
+            shape: MoeShape { m: 64, e: 8, topk: 2, h: 1024, n: 512 },
+            default_cfg: cfg,
+            best_cfg: cfg,
+            diagnosed,
+            actual_eff,
+            ceiling_eff,
+            eff_after,
+            gap_before,
+            gap_after: (ceiling_eff - eff_after).max(0.0),
+            speedup,
+        }
+    }
+
+    #[test]
+    fn summary_ranks_diagnosed_points_widest_gap_first() {
+        let rows =
+            vec![row(0, true, 0.2, 1.2), row(1, false, 0.05, 1.0), row(2, true, 0.4, 1.5)];
+        let s = summarize(&rows);
+        assert_eq!(s.points, 3);
+        assert_eq!(s.diagnosed, 2);
+        assert_eq!(s.ranked, vec![2, 0]);
+        assert!(s.geomean_speedup_diagnosed > s.geomean_speedup);
+        assert_eq!(s.max_speedup, 1.5);
+        assert!(s.gap_closure > 0.0 && s.gap_closure <= 1.0, "{}", s.gap_closure);
+    }
+
+    #[test]
+    fn empty_and_undiagnosed_summaries_stay_defined() {
+        let s = summarize(&[]);
+        assert_eq!((s.points, s.diagnosed), (0, 0));
+        assert_eq!(s.geomean_speedup, 1.0);
+        assert_eq!(s.geomean_speedup_diagnosed, 1.0);
+        assert_eq!(s.gap_closure, 0.0);
+        let s = summarize(&[row(0, false, 0.02, 1.0)]);
+        assert_eq!(s.diagnosed, 0);
+        assert_eq!(s.geomean_speedup_diagnosed, 1.0);
+        assert!(s.ranked.is_empty());
+    }
+}

@@ -1,0 +1,460 @@
+//! The tune executor (§VII end to end): expand a [`TuneSpec`] into
+//! indexed fused-MoE launch points, diagnose each against the
+//! [`Ceiling`], brute-force the bounded §VII-C candidate space on the
+//! diagnosed points, and re-emit finished rows in strict index order
+//! regardless of scheduling — the same work-stealing shape as
+//! [`crate::sweep::run_sweep`], with one ceiling (and its measurement
+//! scratch) owned per worker.
+
+use super::report::{summarize, TuneOutcome, TuneRow};
+use super::spec::{ConfigSource, MoeShape, TuneSpec, MAX_TUNE_CONFIGS, MAX_TUNE_POINTS};
+use super::TuneError;
+use crate::dataset::{self, finalize_for_gpu, Sample};
+use crate::hw;
+use crate::kernels::{fused_moe, KernelConfig, KernelKind, MoeConfig};
+use crate::mlp::Predictor;
+use crate::oracle;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+
+/// The Potential Performance Ceiling a tune diagnoses against (§VII-A).
+pub enum Ceiling {
+    /// A trained pinball-loss (τ=0.8) MLP — the paper's P80 ceiling.
+    P80(Predictor),
+    /// Analytical fallback when no P80 artifact exists: the roofline
+    /// bound `theory_sec / roofline_sec`, clamped to the model's
+    /// efficiency scale. Recorded in row provenance so consumers can
+    /// tell the regimes apart.
+    Roofline,
+}
+
+impl Ceiling {
+    /// Provenance tag carried on every row: `"p80"` or `"roofline"`.
+    pub fn provenance(&self) -> &'static str {
+        match self {
+            Ceiling::P80(_) => "p80",
+            Ceiling::Roofline => "roofline",
+        }
+    }
+
+    /// Resolve the best available ceiling: the fused-MoE P80 artifact at
+    /// the largest trained scale when one exists on disk (and the PJRT
+    /// engine can load it), the analytical roofline otherwise. Probing
+    /// never trains and never touches the filesystem beyond `exists()` —
+    /// `Lab::model` would fit a model on a cache miss, so the artifact
+    /// path is checked first.
+    pub fn auto() -> Ceiling {
+        use crate::experiments::{model_artifact_name, runs_root, Lab, ModelFlavor, Scale};
+        let models = runs_root().join("models");
+        for scale in [Scale::Full, Scale::Normal, Scale::Fast] {
+            let name = model_artifact_name(KernelKind::FusedMoe, ModelFlavor::P80, scale);
+            if !models.join(name).exists() {
+                continue;
+            }
+            let Ok(lab) = Lab::new(scale) else { break };
+            if let Ok(p) = lab.model(KernelKind::FusedMoe, ModelFlavor::P80) {
+                return Ceiling::P80(p);
+            }
+            break;
+        }
+        Ceiling::Roofline
+    }
+
+    /// Ceiling efficiency for one profiled sample, on the same clamped
+    /// scale as [`Sample::efficiency`].
+    pub fn eff(&self, s: &Sample) -> f64 {
+        match self {
+            Ceiling::P80(p) => p.predict_eff_native(&[s.x])[0],
+            Ceiling::Roofline => (s.theory_sec / s.roofline_sec).clamp(1e-3, 0.9999),
+        }
+    }
+}
+
+/// One cell of the expanded tune: a fused-MoE launch on one GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunePoint {
+    pub index: usize,
+    /// Canonical registry name (post [`hw::gpu_by_name`] resolution).
+    pub gpu: String,
+    pub shape: MoeShape,
+    /// Always a [`KernelConfig::FusedMoe`] — expansion guarantees it.
+    pub cfg: KernelConfig,
+}
+
+/// The bounded §VII-C candidate space this spec searches (before the
+/// per-GPU shared-memory validity filter).
+pub fn candidates(spec: &TuneSpec) -> Vec<MoeConfig> {
+    fused_moe::tuning_space()
+        .into_iter()
+        .filter(|c| {
+            c.block_m.max(c.block_n) <= spec.max_block
+                && c.num_stages <= spec.max_stages
+                && c.num_warps <= spec.max_warps
+        })
+        .collect()
+}
+
+fn shape_of(cfg: &KernelConfig) -> Result<MoeShape, TuneError> {
+    match cfg {
+        KernelConfig::FusedMoe { m, e, topk, h, n, .. } => {
+            Ok(MoeShape { m: *m, e: *e, topk: *topk, h: *h, n: *n })
+        }
+        other => Err(TuneError::UnsupportedKernel(format!(
+            "tune() expects a fused_moe config, got {:?}",
+            other.kind().name()
+        ))),
+    }
+}
+
+/// Bounds under which an explicit shape is guaranteed to profile cleanly
+/// (route_tokens stays in u32 and the launch passes request validation).
+fn check_shape(i: usize, s: &MoeShape) -> Result<(), TuneError> {
+    let bad = |why: String| Err(TuneError::InvalidSpec(format!("shape {i}: {why}")));
+    if s.m == 0 || s.e == 0 || s.topk == 0 || s.h == 0 || s.n == 0 {
+        return bad(format!(
+            "dims must be positive (m={} e={} topk={} h={} n={})",
+            s.m, s.e, s.topk, s.h, s.n
+        ));
+    }
+    if s.m > 16_384 || s.e > 256 || s.topk > 16 || s.h > 8_192 || s.n > 8_192 {
+        return bad("dims exceed the tune caps (m<=16384 e<=256 topk<=16 h<=8192 n<=8192)".into());
+    }
+    if s.topk > s.e {
+        return bad(format!("topk={} cannot exceed e={}", s.topk, s.e));
+    }
+    Ok(())
+}
+
+fn source_configs(spec: &TuneSpec) -> Result<Vec<(MoeShape, KernelConfig)>, TuneError> {
+    let sampled = |n: usize, seed: u64| -> Result<Vec<(MoeShape, KernelConfig)>, TuneError> {
+        if n == 0 || n > MAX_TUNE_CONFIGS {
+            return Err(TuneError::InvalidSpec(format!(
+                "source count must be in 1..={MAX_TUNE_CONFIGS}, got {n}"
+            )));
+        }
+        dataset::sample_configs(KernelKind::FusedMoe, n, seed)
+            .into_iter()
+            .map(|cfg| Ok((shape_of(&cfg)?, cfg)))
+            .collect()
+    };
+    match &spec.source {
+        ConfigSource::Sampled { n } => sampled(*n, spec.seed),
+        // the fixed lab seed, so rows line up with `Lab::dataset_configs`
+        ConfigSource::Dataset { n } => sampled(*n, 0x5EED_CAFE),
+        ConfigSource::Explicit(shapes) => {
+            if shapes.is_empty() || shapes.len() > MAX_TUNE_CONFIGS {
+                return Err(TuneError::InvalidSpec(format!(
+                    "\"explicit\" must list 1..={MAX_TUNE_CONFIGS} shapes, got {}",
+                    shapes.len()
+                )));
+            }
+            shapes
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    check_shape(i, s)?;
+                    let mut rng = Rng::new(spec.seed ^ ((i as u64) << 20) ^ 0xD1A6);
+                    let expert_tokens = fused_moe::route_tokens(s.m, s.e, s.topk, &mut rng);
+                    let m_per_expert = (s.m * s.topk / s.e).max(1);
+                    let cfg = KernelConfig::FusedMoe {
+                        m: s.m,
+                        e: s.e,
+                        topk: s.topk,
+                        h: s.h,
+                        n: s.n,
+                        expert_tokens,
+                        cfg: fused_moe::default_config(m_per_expert, &hw::all_gpus()[0]),
+                    };
+                    Ok((*s, cfg))
+                })
+                .collect()
+        }
+    }
+}
+
+/// Validate the spec and materialize the launch × GPU cross-product as
+/// indexed [`TunePoint`]s. Expansion order is GPUs (registry order, or as
+/// named) → launches, so row indices are stable and human-predictable.
+pub fn expand(spec: &TuneSpec) -> Result<Vec<TunePoint>, TuneError> {
+    if !(spec.gap_threshold > 0.0 && spec.gap_threshold < 1.0) {
+        return Err(TuneError::InvalidSpec(format!(
+            "\"gap_threshold\" must be in (0, 1), got {}",
+            spec.gap_threshold
+        )));
+    }
+    if candidates(spec).is_empty() {
+        return Err(TuneError::InvalidSpec(format!(
+            "candidate bounds (max_block={} max_stages={} max_warps={}) exclude the whole §VII-C space",
+            spec.max_block, spec.max_stages, spec.max_warps
+        )));
+    }
+    let gpus = crate::sweep::grid::gpu_names(&spec.gpus).map_err(TuneError::from)?;
+    let configs = source_configs(spec)?;
+    let total = gpus.len() * configs.len();
+    if total > MAX_TUNE_POINTS {
+        return Err(TuneError::GridTooLarge(format!(
+            "{} GPUs x {} launches = {total} points exceeds the cap of {MAX_TUNE_POINTS}",
+            gpus.len(),
+            configs.len()
+        )));
+    }
+    let mut points = Vec::with_capacity(total);
+    for gpu in &gpus {
+        for (shape, cfg) in &configs {
+            points.push(TunePoint {
+                index: points.len(),
+                gpu: gpu.clone(),
+                shape: *shape,
+                cfg: cfg.clone(),
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Evaluate one point: profile the default launch, diagnose against the
+/// ceiling, and — when diagnosed — brute-force the bounded candidate
+/// space on the same oracle measurement stream (§VII-C).
+fn eval_point(ceiling: &Ceiling, spec: &TuneSpec, cands: &[MoeConfig], point: &TunePoint) -> TuneRow {
+    let gpu = hw::gpu_by_name(&point.gpu).expect("expand resolved canonical names");
+    let seed = spec.seed.wrapping_add(point.index as u64);
+    let cfg = finalize_for_gpu(&point.cfg, &gpu);
+    let sample = dataset::make_sample(&cfg, &gpu, seed);
+    let actual_eff = sample.efficiency();
+    let ceiling_eff = ceiling.eff(&sample);
+    let gap_before = ceiling_eff - actual_eff;
+    let diagnosed = gap_before > spec.gap_threshold;
+    let KernelConfig::FusedMoe { h, n, expert_tokens, cfg: default_cfg, .. } = cfg else {
+        unreachable!("expand only materializes fused-MoE points")
+    };
+    let mut best_cfg = default_cfg;
+    let mut speedup = 1.0;
+    if diagnosed {
+        let measure = |c: MoeConfig| {
+            let d = fused_moe::decompose(h, n, &expert_tokens, c, &gpu);
+            oracle::measure_decomposed(KernelKind::FusedMoe, &d, &gpu, seed).clean_sec
+        };
+        let default_sec = measure(default_cfg);
+        let mut best_sec = default_sec;
+        for cand in cands {
+            if !fused_moe::config_valid(cand, &gpu) {
+                continue;
+            }
+            let t = measure(*cand);
+            if t < best_sec {
+                best_sec = t;
+                best_cfg = *cand;
+            }
+        }
+        speedup = default_sec / best_sec;
+    }
+    let eff_after = if diagnosed {
+        (sample.theory_sec / (sample.latency_sec / speedup)).clamp(0.002, 0.995)
+    } else {
+        actual_eff
+    };
+    TuneRow {
+        index: point.index,
+        gpu: point.gpu.clone(),
+        ceiling: ceiling.provenance(),
+        shape: point.shape,
+        default_cfg,
+        best_cfg,
+        diagnosed,
+        actual_eff,
+        ceiling_eff,
+        eff_after,
+        gap_before,
+        gap_after: (ceiling_eff - eff_after).max(0.0),
+        speedup,
+    }
+}
+
+/// Run the whole tune. `ceiling` builds one [`Ceiling`] per worker (a
+/// P80 [`Predictor`] is not `Send`, and per-worker construction keeps
+/// its forward scratch uncontended — the same per-worker measurement
+/// state discipline as the sweep's simulators); `threads` bounds the
+/// worker count. Rows stream through `on_row` in strict index order and
+/// are byte-identical at any thread count — the repo-wide `--threads`
+/// invariant.
+pub fn run_tune<C, G>(
+    spec: &TuneSpec,
+    ceiling: C,
+    threads: usize,
+    mut on_row: G,
+) -> Result<TuneOutcome, TuneError>
+where
+    C: Fn() -> Ceiling + Sync,
+    G: FnMut(&TuneRow),
+{
+    let points = expand(spec)?;
+    let cands = candidates(spec);
+    let threads = threads.max(1);
+    let workers = threads.min(points.len()).max(1);
+    let mut rows: Vec<TuneRow> = Vec::with_capacity(points.len());
+    if workers <= 1 {
+        let ceil = ceiling();
+        for point in &points {
+            let row = eval_point(&ceil, spec, &cands, point);
+            on_row(&row);
+            rows.push(row);
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = sync_channel::<TuneRow>(workers * 4);
+        let next_ref = &next;
+        let ceiling_ref = &ceiling;
+        let points_ref = &points[..];
+        let cands_ref = &cands[..];
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                s.spawn(move || {
+                    let ceil = ceiling_ref();
+                    loop {
+                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= points_ref.len() {
+                            break;
+                        }
+                        if tx.send(eval_point(&ceil, spec, cands_ref, &points_ref[i])).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            // reorder out-of-order completions with O(workers + channel)
+            // buffered rows: emit strictly by index as gaps fill
+            let mut pending: BTreeMap<usize, TuneRow> = BTreeMap::new();
+            let mut next_emit = 0usize;
+            while let Ok(row) = rx.recv() {
+                pending.insert(row.index, row);
+                while let Some(row) = pending.remove(&next_emit) {
+                    on_row(&row);
+                    rows.push(row);
+                    next_emit += 1;
+                }
+            }
+        });
+    }
+    let summary = summarize(&rows);
+    Ok(TuneOutcome { rows, summary })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::GpuFilter;
+
+    fn small_spec() -> TuneSpec {
+        TuneSpec::new()
+            .gpus(GpuFilter::Named(vec!["A40".into()]))
+            .source(ConfigSource::Sampled { n: 3 })
+            .seed(31)
+    }
+
+    #[test]
+    fn rows_stream_in_index_order_and_are_identical_across_thread_counts() {
+        let spec = small_spec();
+        let run = |threads: usize| {
+            let mut streamed: Vec<usize> = Vec::new();
+            let out =
+                run_tune(&spec, Ceiling::auto, threads, |r| streamed.push(r.index)).unwrap();
+            assert_eq!(streamed, vec![0, 1, 2], "streaming order at {threads} threads");
+            out
+        };
+        let one = run(1);
+        let eight = run(8);
+        assert_eq!(one.rows, eight.rows, "rows must not depend on scheduling");
+        assert_eq!(one.summary, eight.summary);
+        for (i, r) in one.rows.iter().enumerate() {
+            assert_eq!(r.index, i);
+        }
+    }
+
+    #[test]
+    fn tuned_points_never_get_slower_and_close_their_gap() {
+        let spec = small_spec().gap_threshold(0.02);
+        let out = run_tune(&spec, Ceiling::auto, 2, |_| {}).unwrap();
+        for r in &out.rows {
+            assert!(r.speedup >= 1.0, "row {} speedup {}", r.index, r.speedup);
+            assert!(r.gap_after <= r.gap_before.max(0.0) + 1e-12, "row {}", r.index);
+            if !r.diagnosed {
+                assert_eq!(r.best_cfg, r.default_cfg, "undiagnosed rows stay untouched");
+                assert_eq!(r.speedup, 1.0);
+            }
+        }
+        assert!(out.summary.geomean_speedup >= 1.0);
+    }
+
+    #[test]
+    fn spec_level_failures_abort_before_any_row() {
+        let mut streamed = 0usize;
+        let spec = small_spec().gpus(GpuFilter::Named(vec!["B300".into()]));
+        let err = run_tune(&spec, Ceiling::auto, 2, |_| streamed += 1).unwrap_err();
+        assert_eq!(err.code(), "unknown_gpu");
+        assert_eq!(streamed, 0);
+
+        let err = expand(&small_spec().gap_threshold(0.0)).unwrap_err();
+        assert_eq!(err.code(), "invalid_spec");
+        let err = expand(&small_spec().bounds(8, 1, 1)).unwrap_err();
+        assert_eq!(err.code(), "invalid_spec");
+        let err =
+            expand(&small_spec().source(ConfigSource::Sampled { n: 200 })).unwrap_err();
+        assert_eq!(err.code(), "invalid_spec");
+        let err = expand(
+            &small_spec().gpus(GpuFilter::All).source(ConfigSource::Sampled { n: 100 }),
+        )
+        .unwrap_err();
+        assert_eq!(err.code(), "grid_too_large");
+        let err = expand(
+            &small_spec().source(ConfigSource::Explicit(vec![MoeShape {
+                m: 8,
+                e: 4,
+                topk: 6,
+                h: 64,
+                n: 64,
+            }])),
+        )
+        .unwrap_err();
+        assert_eq!(err.code(), "invalid_spec");
+    }
+
+    #[test]
+    fn explicit_shapes_expand_deterministically() {
+        let shape = MoeShape { m: 256, e: 16, topk: 2, h: 1024, n: 512 };
+        let spec = small_spec().source(ConfigSource::Explicit(vec![shape]));
+        let a = expand(&spec).unwrap();
+        let b = expand(&spec).unwrap();
+        assert_eq!(a, b, "routing must be a pure function of the spec");
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].shape, shape);
+        let KernelConfig::FusedMoe { ref expert_tokens, .. } = a[0].cfg else { unreachable!() };
+        assert_eq!(expert_tokens.iter().map(|&t| u64::from(t)).sum::<u64>(), 256 * 2);
+    }
+
+    #[test]
+    fn candidate_bounds_restrict_the_search_space() {
+        let full = candidates(&TuneSpec::new());
+        assert_eq!(full.len(), fused_moe::tuning_space().len());
+        let bounded = candidates(&TuneSpec::new().bounds(64, 3, 4));
+        assert!(!bounded.is_empty());
+        assert!(bounded.len() < full.len());
+        for c in &bounded {
+            assert!(c.block_m.max(c.block_n) <= 64 && c.num_stages <= 3 && c.num_warps <= 4);
+        }
+    }
+
+    #[test]
+    fn roofline_ceiling_is_recorded_in_provenance() {
+        // tests run artifact-less: auto() must fall back to the roofline
+        // (and say so on every row)
+        let ceil = Ceiling::auto();
+        assert_eq!(ceil.provenance(), "roofline");
+        let out = run_tune(&small_spec(), Ceiling::auto, 1, |_| {}).unwrap();
+        assert!(out.rows.iter().all(|r| r.ceiling == "roofline"));
+        assert_eq!(out.summary.ceiling, "roofline");
+    }
+}

@@ -1,0 +1,207 @@
+//! The declarative tune spec ([`TuneSpec`]): which GPUs of the Table-VI
+//! registry to diagnose, where the fused-MoE launches come from
+//! ([`ConfigSource`]), the Underperforming-Point threshold, and the
+//! candidate-space bounds of the §VII-C brute-force search — plus the
+//! closed [`TuneError`] taxonomy mirroring [`SweepError`].
+
+use crate::sweep::{GpuFilter, SweepError};
+use std::fmt;
+
+/// Hard cap on launches × GPUs: every diagnosed point costs up to a full
+/// §VII-C candidate sweep (~100 oracle measurements), so the cap sits well
+/// below [`crate::sweep::MAX_SWEEP_POINTS`] while still covering the full
+/// registry at dataset-sized config counts.
+pub const MAX_TUNE_POINTS: usize = 512;
+
+/// Cap on the fused-MoE launch count a single source may materialize.
+pub const MAX_TUNE_CONFIGS: usize = 128;
+
+/// One explicit fused-MoE launch shape: `m` tokens routed to `e` experts
+/// with `topk` choices, hidden `h`, output `n`. Routing (the per-expert
+/// token counts) is derived deterministically from the spec seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoeShape {
+    pub m: u32,
+    pub e: u32,
+    pub topk: u32,
+    pub h: u32,
+    pub n: u32,
+}
+
+/// Where the tuned launches come from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfigSource {
+    /// `n` launches drawn from the dataset sampler with the spec seed.
+    Sampled { n: usize },
+    /// `n` launches from the canonical dataset split (the fixed lab seed),
+    /// so tune rows line up with `Lab::dataset_configs` positions.
+    Dataset { n: usize },
+    /// Explicit launch shapes, routed deterministically per shape.
+    Explicit(Vec<MoeShape>),
+}
+
+/// The declarative tune: GPU slice × launch source × thresholds × §VII-C
+/// candidate bounds. Builder defaults mirror the paper's setup: the whole
+/// registry, a handful of sampled launches, gap threshold 0.1 and the
+/// full `(BLOCK_SIZE, num_stages, num_warps)` space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneSpec {
+    pub gpus: GpuFilter,
+    pub source: ConfigSource,
+    /// Underperforming-Point threshold (§VII-B): points with
+    /// `ceiling_eff - actual_eff > gap_threshold` are brute-force tuned.
+    /// Defaults to [`super::GAP_THRESHOLD`].
+    pub gap_threshold: f64,
+    /// Seeds sampling, routing and the per-point oracle streams.
+    pub seed: u64,
+    /// Candidate bound: `max(block_m, block_n) <= max_block`.
+    pub max_block: u32,
+    /// Candidate bound: `num_stages <= max_stages`.
+    pub max_stages: u32,
+    /// Candidate bound: `num_warps <= max_warps`.
+    pub max_warps: u32,
+}
+
+impl TuneSpec {
+    pub fn new() -> Self {
+        TuneSpec {
+            gpus: GpuFilter::All,
+            source: ConfigSource::Sampled { n: 4 },
+            gap_threshold: super::GAP_THRESHOLD,
+            seed: 0x7A7E,
+            max_block: 128,
+            max_stages: 5,
+            max_warps: 8,
+        }
+    }
+
+    pub fn gpus(mut self, gpus: GpuFilter) -> Self {
+        self.gpus = gpus;
+        self
+    }
+
+    pub fn source(mut self, source: ConfigSource) -> Self {
+        self.source = source;
+        self
+    }
+
+    pub fn gap_threshold(mut self, t: f64) -> Self {
+        self.gap_threshold = t;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Restrict the §VII-C candidate space.
+    pub fn bounds(mut self, max_block: u32, max_stages: u32, max_warps: u32) -> Self {
+        self.max_block = max_block;
+        self.max_stages = max_stages;
+        self.max_warps = max_warps;
+        self
+    }
+}
+
+impl Default for TuneSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The closed error taxonomy of the tune surface, mirroring
+/// [`SweepError`]. These are spec-level failures that abort before any
+/// row is evaluated; the per-point pipeline itself never fails (expansion
+/// only materializes launches that are valid by construction).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TuneError {
+    /// A named GPU is not in the Table-VI registry.
+    UnknownGpu(String),
+    /// The launch to tune is not a fused-MoE kernel (§VII only covers the
+    /// Triton fused-MoE space).
+    UnsupportedKernel(String),
+    /// A spec field is empty, zero-valued or out of range.
+    InvalidSpec(String),
+    /// launches × GPUs exceeds [`MAX_TUNE_POINTS`].
+    GridTooLarge(String),
+    /// The spec itself is malformed (bad JSON, bad field types).
+    MalformedSpec(String),
+}
+
+impl TuneError {
+    /// Stable machine-readable code (the `error.code` of the wire surface).
+    pub fn code(&self) -> &'static str {
+        match self {
+            TuneError::UnknownGpu(_) => "unknown_gpu",
+            TuneError::UnsupportedKernel(_) => "unsupported_kernel",
+            TuneError::InvalidSpec(_) => "invalid_spec",
+            TuneError::GridTooLarge(_) => "grid_too_large",
+            TuneError::MalformedSpec(_) => "malformed_spec",
+        }
+    }
+}
+
+impl fmt::Display for TuneError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TuneError::UnknownGpu(name) => {
+                write!(
+                    f,
+                    "unknown GPU {name:?} (see Table VI; closest: {})",
+                    crate::hw::nearest_names(name, 3).join(", ")
+                )
+            }
+            TuneError::UnsupportedKernel(why) => write!(f, "unsupported kernel: {why}"),
+            TuneError::InvalidSpec(why) => write!(f, "invalid tune spec: {why}"),
+            TuneError::GridTooLarge(why) => write!(f, "tune grid too large: {why}"),
+            TuneError::MalformedSpec(why) => write!(f, "malformed tune spec: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for TuneError {}
+
+/// The GPU-filter machinery is shared with the sweep subsystem; map its
+/// failures into the tune taxonomy.
+impl From<SweepError> for TuneError {
+    fn from(e: SweepError) -> TuneError {
+        match e {
+            SweepError::UnknownGpu(name) => TuneError::UnknownGpu(name),
+            SweepError::MalformedSpec(why) => TuneError::MalformedSpec(why),
+            SweepError::GridTooLarge(why) => TuneError::GridTooLarge(why),
+            SweepError::InvalidAxis(why) | SweepError::InvalidWorkload(why) => {
+                TuneError::InvalidSpec(why)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_mirror_the_paper_setup() {
+        let s = TuneSpec::new();
+        assert_eq!(s.gpus, GpuFilter::All);
+        assert_eq!(s.source, ConfigSource::Sampled { n: 4 });
+        assert_eq!(s.gap_threshold, crate::autotune::GAP_THRESHOLD);
+        assert_eq!((s.max_block, s.max_stages, s.max_warps), (128, 5, 8));
+    }
+
+    #[test]
+    fn unknown_gpu_carries_nearest_names() {
+        let msg = TuneError::UnknownGpu("B300".into()).to_string();
+        assert!(msg.contains("closest:"), "{msg}");
+        assert_eq!(TuneError::UnknownGpu("B300".into()).code(), "unknown_gpu");
+    }
+
+    #[test]
+    fn sweep_errors_map_into_the_taxonomy() {
+        let e: TuneError = SweepError::UnknownGpu("X".into()).into();
+        assert_eq!(e, TuneError::UnknownGpu("X".into()));
+        let e: TuneError = SweepError::InvalidAxis("empty".into()).into();
+        assert_eq!(e.code(), "invalid_spec");
+    }
+}

@@ -1,0 +1,477 @@
+//! JSONL wire codec for the **`tune` verb**: a request line carries a
+//! [`TuneSpec`]; the CLI streams one row line per point plus a summary
+//! line, while the stdio/TCP wire answers with a single line embedding
+//! every row and the summary (one-line-per-request holds).
+//!
+//! Request line:
+//!
+//! ```json
+//! {"v":1,"id":"t1","op":"tune","tune":{"gpus":["A40"],
+//!  "source":{"sampled":4},"gap_threshold":1e-1,"seed":42,
+//!  "max_block":128,"max_stages":5,"max_warps":8}}
+//! ```
+//!
+//! `gpus` is `"all"` (default), `"seen"`, `"unseen"`, or an array of
+//! names; `source` is `{"sampled":N}` (default N=4), `{"dataset":N}`, or
+//! `{"explicit":[{"m":..,"e":..,"topk":..,"h":..,"n":..},..]}`; every
+//! other field defaults to the §VII setup. Streamed row lines carry the
+//! ceiling provenance (`"p80"` or `"roofline"`), the default and best
+//! `MoeConfig` (the same object shape the predict wire uses), and the
+//! gap movement; the summary line carries the Table-X aggregates:
+//!
+//! ```json
+//! {"v":1,"row":{"index":0,"gpu":"A40","ceiling":"roofline","shape":
+//!  {"m":64,"e":8,"topk":2,"h":1024,"n":512},"diagnosed":true,
+//!  "default":{"block_m":64,...},"best":{"block_m":128,...},
+//!  "actual_eff":5e-1,"ceiling_eff":7.5e-1,"eff_after":6.25e-1,
+//!  "gap_before":2.5e-1,"gap_after":1.25e-1,"speedup":1.25e0}}
+//! {"v":1,"summary":{"points":4,"diagnosed":1,"ceiling":"roofline",
+//!  "geomean_speedup":1.1e0,...,"ranked":[0]}}
+//! ```
+//!
+//! Spec-level failures speak the closed [`TuneError`] taxonomy.
+
+use super::report::{TuneOutcome, TuneRow, TuneSummary};
+use super::spec::{ConfigSource, MoeShape, TuneSpec};
+use super::TuneError;
+use crate::api::wire::{esc, id_of};
+use crate::api::PROTOCOL_VERSION;
+use crate::kernels::MoeConfig;
+use crate::sweep::GpuFilter;
+use crate::util::json::{parse, Json};
+
+fn malformed(why: impl Into<String>) -> TuneError {
+    TuneError::MalformedSpec(why.into())
+}
+
+// ---- spec ----------------------------------------------------------------
+
+fn filter_to_json(f: &GpuFilter) -> String {
+    match f {
+        GpuFilter::All => "\"all\"".to_string(),
+        GpuFilter::Seen => "\"seen\"".to_string(),
+        GpuFilter::Unseen => "\"unseen\"".to_string(),
+        GpuFilter::Named(names) => {
+            let items: Vec<String> = names.iter().map(|n| format!("\"{}\"", esc(n))).collect();
+            format!("[{}]", items.join(","))
+        }
+    }
+}
+
+fn filter_from_json(v: &Json) -> Result<GpuFilter, TuneError> {
+    match v {
+        Json::Str(s) => match s.as_str() {
+            "all" => Ok(GpuFilter::All),
+            "seen" => Ok(GpuFilter::Seen),
+            "unseen" => Ok(GpuFilter::Unseen),
+            other => Err(malformed(format!(
+                "\"gpus\" filter {other:?} is not all|seen|unseen"
+            ))),
+        },
+        Json::Arr(items) => items
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| malformed("\"gpus\" entries must be strings"))
+            })
+            .collect::<Result<Vec<String>, TuneError>>()
+            .map(GpuFilter::Named),
+        _ => Err(malformed("\"gpus\" must be \"all\"|\"seen\"|\"unseen\" or an array of names")),
+    }
+}
+
+fn u32_field(v: &Json, what: &str) -> Result<u32, TuneError> {
+    v.as_f64()
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= f64::from(u32::MAX))
+        .map(|n| n as u32)
+        .ok_or_else(|| malformed(format!("{what:?} must be an unsigned integer")))
+}
+
+fn count_field(v: &Json, what: &str) -> Result<usize, TuneError> {
+    v.as_f64()
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= f64::from(u32::MAX))
+        .map(|n| n as usize)
+        .ok_or_else(|| malformed(format!("{what:?} must be an unsigned integer")))
+}
+
+/// Seeds are full u64s; JSON numbers are only exact to 2^53, so bigger
+/// seeds ride the wire as strings (the scenario wire's convention).
+fn seed_to_json(v: u64) -> String {
+    if v <= (1u64 << 53) {
+        v.to_string()
+    } else {
+        format!("\"{v}\"")
+    }
+}
+
+fn seed_from_json(v: &Json) -> Result<u64, TuneError> {
+    let bad = || malformed("\"seed\" must be an unsigned integer");
+    match v {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9_007_199_254_740_992.0 => {
+            Ok(*n as u64)
+        }
+        Json::Str(s) => s.parse().map_err(|_| bad()),
+        _ => Err(bad()),
+    }
+}
+
+fn source_to_json(s: &ConfigSource) -> String {
+    match s {
+        ConfigSource::Sampled { n } => format!("{{\"sampled\":{n}}}"),
+        ConfigSource::Dataset { n } => format!("{{\"dataset\":{n}}}"),
+        ConfigSource::Explicit(shapes) => {
+            let items: Vec<String> = shapes.iter().map(shape_to_json).collect();
+            format!("{{\"explicit\":[{}]}}", items.join(","))
+        }
+    }
+}
+
+fn shape_to_json(s: &MoeShape) -> String {
+    format!(
+        r#"{{"m":{},"e":{},"topk":{},"h":{},"n":{}}}"#,
+        s.m, s.e, s.topk, s.h, s.n
+    )
+}
+
+fn shape_from_json(v: &Json) -> Result<MoeShape, TuneError> {
+    let field = |key: &str| -> Result<u32, TuneError> {
+        let x = v
+            .get(key)
+            .ok_or_else(|| malformed(format!("explicit shapes need {key:?}")))?;
+        u32_field(x, key)
+    };
+    Ok(MoeShape {
+        m: field("m")?,
+        e: field("e")?,
+        topk: field("topk")?,
+        h: field("h")?,
+        n: field("n")?,
+    })
+}
+
+fn source_from_json(v: &Json) -> Result<ConfigSource, TuneError> {
+    if let Some(n) = v.get("sampled") {
+        return Ok(ConfigSource::Sampled { n: count_field(n, "sampled")? });
+    }
+    if let Some(n) = v.get("dataset") {
+        return Ok(ConfigSource::Dataset { n: count_field(n, "dataset")? });
+    }
+    if let Some(e) = v.get("explicit") {
+        let arr =
+            e.as_arr().ok_or_else(|| malformed("\"explicit\" must be an array of MoE shapes"))?;
+        return arr
+            .iter()
+            .map(shape_from_json)
+            .collect::<Result<Vec<MoeShape>, TuneError>>()
+            .map(ConfigSource::Explicit);
+    }
+    Err(malformed(
+        "\"source\" must be {\"sampled\":N}, {\"dataset\":N} or {\"explicit\":[..]}",
+    ))
+}
+
+fn tune_to_json(spec: &TuneSpec) -> String {
+    format!(
+        r#"{{"gpus":{},"source":{},"gap_threshold":{:e},"seed":{},"max_block":{},"max_stages":{},"max_warps":{}}}"#,
+        filter_to_json(&spec.gpus),
+        source_to_json(&spec.source),
+        spec.gap_threshold,
+        seed_to_json(spec.seed),
+        spec.max_block,
+        spec.max_stages,
+        spec.max_warps
+    )
+}
+
+/// Serialize a tune request into its canonical wire line (no trailing
+/// newline). The inverse of [`parse_tune_line`].
+pub fn encode_tune_request(id: Option<&str>, spec: &TuneSpec) -> String {
+    let mut out = format!("{{\"v\":{PROTOCOL_VERSION}");
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    out.push_str(&format!(",\"op\":\"tune\",\"tune\":{}", tune_to_json(spec)));
+    out.push('}');
+    out
+}
+
+fn parse_tune_object(j: &Json) -> Result<TuneSpec, TuneError> {
+    let mut spec = TuneSpec::new();
+    if let Some(v) = j.get("gpus") {
+        spec.gpus = filter_from_json(v)?;
+    }
+    if let Some(v) = j.get("source") {
+        spec.source = source_from_json(v)?;
+    }
+    if let Some(v) = j.get("gap_threshold") {
+        spec.gap_threshold =
+            v.as_f64().ok_or_else(|| malformed("\"gap_threshold\" must be a number"))?;
+    }
+    if let Some(v) = j.get("seed") {
+        spec.seed = seed_from_json(v)?;
+    }
+    if let Some(v) = j.get("max_block") {
+        spec.max_block = u32_field(v, "max_block")?;
+    }
+    if let Some(v) = j.get("max_stages") {
+        spec.max_stages = u32_field(v, "max_stages")?;
+    }
+    if let Some(v) = j.get("max_warps") {
+        spec.max_warps = u32_field(v, "max_warps")?;
+    }
+    Ok(spec)
+}
+
+fn check_version(j: &Json) -> Result<(), TuneError> {
+    if let Some(v) = j.get("v").and_then(|v| v.as_f64()) {
+        if v as u32 != PROTOCOL_VERSION {
+            return Err(malformed(format!(
+                "protocol version {v} (this build speaks v{PROTOCOL_VERSION})"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn tune_fields(j: &Json) -> Result<TuneSpec, TuneError> {
+    check_version(j)?;
+    let t = j.get("tune").ok_or_else(|| malformed("tune request needs a \"tune\" object"))?;
+    parse_tune_object(t)
+}
+
+/// Envelope parse over an already-decoded line (single-parse dispatch —
+/// what the stdio loop uses).
+pub(crate) fn parse_tune_json(j: &Json) -> (Option<String>, Result<TuneSpec, TuneError>) {
+    (id_of(j), tune_fields(j))
+}
+
+/// Whether a decoded wire object addresses the tune verb. Checked before
+/// the simulate shapes in the stdio dispatcher.
+pub(crate) fn is_tune_json(j: &Json) -> bool {
+    j.get("op").and_then(|v| v.as_str()) == Some("tune") || j.get("tune").is_some()
+}
+
+/// Parse a tune line in either shape: the wire envelope or a bare tune
+/// object (`{"gpus":..,"source":..}`) — what `synperf tune --spec`
+/// accepts.
+pub fn parse_tune_line(line: &str) -> (Option<String>, Result<TuneSpec, TuneError>) {
+    let j = match parse(line) {
+        Ok(j) => j,
+        Err(e) => return (None, Err(malformed(format!("malformed JSON: {e}")))),
+    };
+    let res = if j.get("tune").is_some() || j.get("op").is_some() {
+        tune_fields(&j)
+    } else {
+        parse_tune_object(&j)
+    };
+    (id_of(&j), res)
+}
+
+/// Whether a wire line addresses the tune verb (malformed JSON is not
+/// claimed — the predict codec owns that bucket).
+pub fn is_tune_request(line: &str) -> bool {
+    match parse(line) {
+        Ok(j) => is_tune_json(&j),
+        Err(_) => false,
+    }
+}
+
+// ---- rows & summary -------------------------------------------------------
+
+/// The predict wire's `MoeConfig` object shape, reused verbatim.
+fn cfg_to_json(c: &MoeConfig) -> String {
+    format!(
+        r#"{{"block_m":{},"block_n":{},"block_k":{},"num_stages":{},"num_warps":{}}}"#,
+        c.block_m, c.block_n, c.block_k, c.num_stages, c.num_warps
+    )
+}
+
+fn row_to_json(r: &TuneRow) -> String {
+    format!(
+        r#"{{"index":{},"gpu":"{}","ceiling":"{}","shape":{},"diagnosed":{},"default":{},"best":{},"actual_eff":{:e},"ceiling_eff":{:e},"eff_after":{:e},"gap_before":{:e},"gap_after":{:e},"speedup":{:e}}}"#,
+        r.index,
+        esc(&r.gpu),
+        r.ceiling,
+        shape_to_json(&r.shape),
+        r.diagnosed,
+        cfg_to_json(&r.default_cfg),
+        cfg_to_json(&r.best_cfg),
+        r.actual_eff,
+        r.ceiling_eff,
+        r.eff_after,
+        r.gap_before,
+        r.gap_after,
+        r.speedup
+    )
+}
+
+/// One streamed JSONL result row (no trailing newline).
+pub fn encode_row(r: &TuneRow) -> String {
+    format!("{{\"v\":{PROTOCOL_VERSION},\"row\":{}}}", row_to_json(r))
+}
+
+fn summary_to_json(s: &TuneSummary) -> String {
+    let ranked: Vec<String> = s.ranked.iter().map(usize::to_string).collect();
+    format!(
+        r#"{{"points":{},"diagnosed":{},"ceiling":"{}","geomean_speedup":{:e},"geomean_speedup_diagnosed":{:e},"gap_closure":{:e},"max_speedup":{:e},"ranked":[{}]}}"#,
+        s.points,
+        s.diagnosed,
+        s.ceiling,
+        s.geomean_speedup,
+        s.geomean_speedup_diagnosed,
+        s.gap_closure,
+        s.max_speedup,
+        ranked.join(",")
+    )
+}
+
+/// The summary line the CLI emits after the last row (no trailing
+/// newline).
+pub fn encode_summary(s: &TuneSummary) -> String {
+    format!("{{\"v\":{PROTOCOL_VERSION},\"summary\":{}}}", summary_to_json(s))
+}
+
+fn tune_error_to_json(e: &TuneError) -> String {
+    let mut out =
+        format!("{{\"code\":\"{}\",\"message\":\"{}\"", e.code(), esc(&e.to_string()));
+    match e {
+        TuneError::UnknownGpu(name) => out.push_str(&format!(",\"gpu\":\"{}\"", esc(name))),
+        TuneError::UnsupportedKernel(why)
+        | TuneError::InvalidSpec(why)
+        | TuneError::GridTooLarge(why)
+        | TuneError::MalformedSpec(why) => {
+            out.push_str(&format!(",\"reason\":\"{}\"", esc(why)));
+        }
+    }
+    out.push('}');
+    out
+}
+
+/// One-line tune response for the stdio/TCP wire: every row plus the
+/// summary in a single envelope, or the spec-level error. The point cap
+/// ([`super::MAX_TUNE_POINTS`]) bounds the line length.
+pub fn encode_tune_response(id: Option<&str>, res: &Result<TuneOutcome, TuneError>) -> String {
+    let mut out = format!("{{\"v\":{PROTOCOL_VERSION}");
+    if let Some(id) = id {
+        out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
+    }
+    match res {
+        Ok(o) => {
+            let rows: Vec<String> = o.rows.iter().map(row_to_json).collect();
+            out.push_str(&format!(
+                ",\"ok\":true,\"tune\":{{\"rows\":[{}],\"summary\":{}}}",
+                rows.join(","),
+                summary_to_json(&o.summary)
+            ));
+        }
+        Err(e) => out.push_str(&format!(",\"ok\":false,\"error\":{}", tune_error_to_json(e))),
+    }
+    out.push('}');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::{run_tune, Ceiling};
+
+    fn round_trip_spec() -> TuneSpec {
+        TuneSpec::new()
+            .gpus(GpuFilter::Named(vec!["A40".into(), "H800".into()]))
+            .source(ConfigSource::Explicit(vec![MoeShape {
+                m: 256,
+                e: 16,
+                topk: 2,
+                h: 1024,
+                n: 512,
+            }]))
+            .gap_threshold(0.05)
+            .seed(u64::MAX - 1)
+            .bounds(64, 4, 8)
+    }
+
+    #[test]
+    fn tune_requests_round_trip() {
+        let spec = round_trip_spec();
+        let line = encode_tune_request(Some("t"), &spec);
+        assert!(is_tune_request(&line), "{line}");
+        let (id, parsed) = parse_tune_line(&line);
+        assert_eq!(id.as_deref(), Some("t"));
+        assert_eq!(parsed.unwrap(), spec, "round trip of {line}");
+        // sampled/dataset sources round-trip too
+        for src in [ConfigSource::Sampled { n: 7 }, ConfigSource::Dataset { n: 9 }] {
+            let spec = TuneSpec::new().source(src);
+            let (_, parsed) = parse_tune_line(&encode_tune_request(None, &spec));
+            assert_eq!(parsed.unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn bare_tune_objects_parse_with_defaults() {
+        let (id, res) = parse_tune_line(r#"{"gpus":["A40"]}"#);
+        assert_eq!(id, None);
+        let spec = res.unwrap();
+        assert_eq!(spec.gpus, GpuFilter::Named(vec!["A40".into()]));
+        assert_eq!(spec.source, ConfigSource::Sampled { n: 4 });
+        assert_eq!(spec.gap_threshold, crate::autotune::GAP_THRESHOLD);
+        assert_eq!(spec.max_block, 128);
+    }
+
+    #[test]
+    fn malformed_tunes_map_into_the_taxonomy() {
+        let cases = [
+            ("not json", "malformed_spec"),
+            (r#"{"op":"tune"}"#, "malformed_spec"),
+            (r#"{"v":9,"op":"tune","tune":{}}"#, "malformed_spec"),
+            (r#"{"tune":{"gpus":"fastest"}}"#, "malformed_spec"),
+            (r#"{"tune":{"source":{}}}"#, "malformed_spec"),
+            (r#"{"tune":{"source":{"sampled":1.5}}}"#, "malformed_spec"),
+            (r#"{"tune":{"source":{"explicit":[{"m":4}]}}}"#, "malformed_spec"),
+            (r#"{"tune":{"gap_threshold":"big"}}"#, "malformed_spec"),
+            (r#"{"tune":{"seed":-1}}"#, "malformed_spec"),
+        ];
+        for (line, code) in cases {
+            let (_, res) = parse_tune_line(line);
+            assert_eq!(res.unwrap_err().code(), code, "for line {line}");
+        }
+    }
+
+    #[test]
+    fn verb_dispatch_does_not_overlap_other_verbs() {
+        assert!(is_tune_request(r#"{"op":"tune","tune":{}}"#));
+        assert!(is_tune_request(r#"{"tune":{"gpus":"all"}}"#));
+        assert!(!is_tune_request(r#"{"op":"sweep","sweep":{"workloads":[]}}"#));
+        assert!(!is_tune_request(r#"{"scenario":{"model":"m","gpu":"g"}}"#));
+        assert!(!is_tune_request(r#"{"gpu":"A100","kernel":{"type":"rmsnorm","seq":1,"dim":8}}"#));
+        assert!(!crate::sweep::wire::is_sweep_request(r#"{"op":"tune","tune":{}}"#));
+    }
+
+    #[test]
+    fn responses_embed_rows_and_summary_in_one_line() {
+        let spec = TuneSpec::new()
+            .gpus(GpuFilter::Named(vec!["A40".into()]))
+            .source(ConfigSource::Sampled { n: 2 })
+            .seed(31);
+        let out = run_tune(&spec, Ceiling::auto, 2, |_| {}).unwrap();
+        let line = encode_tune_response(Some("t1"), &Ok(out.clone()));
+        assert!(line.starts_with(r#"{"v":1,"id":"t1","ok":true,"tune":{"rows":["#), "{line}");
+        assert!(line.contains(r#""summary":{"points":2"#), "{line}");
+        assert!(!line.contains('\n'));
+        // each row's embedded object matches its streamed encoding
+        for row in &out.rows {
+            let streamed = encode_row(row);
+            let inner = streamed
+                .strip_prefix(r#"{"v":1,"row":"#)
+                .and_then(|s| s.strip_suffix('}'))
+                .unwrap();
+            assert!(line.contains(inner), "row {} drifted between shapes", row.index);
+        }
+        // spec-level errors ride the same envelope
+        let err = encode_tune_response(None, &Err(TuneError::GridTooLarge("big".into())));
+        assert_eq!(
+            err,
+            r#"{"v":1,"ok":false,"error":{"code":"grid_too_large","message":"tune grid too large: big","reason":"big"}}"#
+        );
+    }
+}

@@ -92,6 +92,20 @@ pub enum ModelFlavor {
     NoMath,
 }
 
+/// The run root shared by every artifact consumer: `SYNPERF_RUNS` or
+/// `./runs`. Pure path computation — nothing is created.
+pub(crate) fn runs_root() -> PathBuf {
+    PathBuf::from(std::env::var("SYNPERF_RUNS").unwrap_or_else(|_| "runs".into()))
+}
+
+/// Cached-model file name under `<runs_root>/models/` — exposed so
+/// artifact probes (e.g. [`crate::autotune::Ceiling::auto`]) can check
+/// `exists()` without constructing a [`Lab`] (which needs a PJRT engine
+/// and creates the run directories as a side effect).
+pub(crate) fn model_artifact_name(kind: KernelKind, flavor: ModelFlavor, scale: Scale) -> String {
+    format!("{}_{}_{}.bin", kind.name(), flavor.tag(), scale.tag())
+}
+
 impl ModelFlavor {
     fn tag(&self) -> &'static str {
         match self {
@@ -128,9 +142,7 @@ impl Lab {
         let engine = Engine::from_env().context(
             "PJRT engine unavailable — run `make artifacts` before experiments",
         )?;
-        let root = PathBuf::from(
-            std::env::var("SYNPERF_RUNS").unwrap_or_else(|_| "runs".into()),
-        );
+        let root = runs_root();
         std::fs::create_dir_all(root.join("data"))?;
         std::fs::create_dir_all(root.join("models"))?;
         Ok(Lab {
@@ -173,12 +185,7 @@ impl Lab {
     }
 
     fn model_path(&self, kind: KernelKind, flavor: ModelFlavor) -> PathBuf {
-        self.root.join("models").join(format!(
-            "{}_{}_{}.bin",
-            kind.name(),
-            flavor.tag(),
-            self.scale.tag()
-        ))
+        self.root.join("models").join(model_artifact_name(kind, flavor, self.scale))
     }
 
     /// Train (or load cached) one per-kernel model of the given flavor;

@@ -34,6 +34,14 @@
 //! work-stealing evaluators into deterministic JSONL rows and ranked by
 //! Pareto frontier over (tokens/sec, SLO attainment, GPU count) — the
 //! `synperf sweep` verb.
+//!
+//! Beyond prediction, the [`autotune`] subsystem closes the paper's §VII
+//! loop: a declarative `TuneSpec` diagnoses Fused-MoE launches against the
+//! P80 potential-performance ceiling (analytical roofline fallback,
+//! recorded in provenance), ranks the underperforming points widest-gap
+//! first, and brute-force-tunes `(BLOCK_SIZE, num_stages, num_warps)` on
+//! work-stealing workers into deterministic JSONL rows plus a summary
+//! (geomean speedups, gap-closure rate) — the `synperf tune` verb.
 
 pub mod api;
 pub mod coordinator;

@@ -20,8 +20,12 @@
 //!               headline compute:memory ratios)
 //!   serve       run the batching prediction service (synthetic load or
 //!               the JSONL stdio wire surface: `serve --stdio`; speaks
-//!               the predict, simulate and sweep verbs)
-//!   tune        model-guided Fused-MoE autotuning (§VII)
+//!               the predict, simulate, sweep and tune verbs)
+//!   tune        ceiling-guided Fused-MoE autotuning (§VII): a declarative
+//!               TuneSpec over the Table-VI registry, diagnosed against
+//!               the P80 ceiling (roofline fallback recorded in
+//!               provenance), streamed as one JSONL row per point plus a
+//!               summary line (geomean speedups, gap closure)
 //!   experiment  regenerate a paper table/figure (see DESIGN.md §5)
 
 use anyhow::{bail, Result};
@@ -59,7 +63,7 @@ fn usage() -> &'static str {
                   [--max-batch 256] [--deadline-us 2000] [--queue-cap 1024]\n\
                   [--max-clients 64] [--inbox-cap 64] [--max-inflight 32]\n\
                   [--admit-timeout-ms 2000] [--idle-timeout-ms 60000] [--quarantine-limit 8]\n\
-       tune       --gpu A40 [--n 20]\n\
+       tune       --spec <file|-> [--threads N] [--json]\n\
        experiment <table1|table7|fig3|fig4|fig5|table8|scaledmm|fig6|fig7|table9|fig8|table10|all>\n\
      \n\
      kernels: gemm scaled_mm attention rmsnorm silu_mul fused_moe\n\
@@ -717,11 +721,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         )?;
         let snap = svc.metrics.snapshot();
         eprintln!(
-            "tcp: {} responses ({} errors, {} simulations, {} sweeps, {} stats) over {} connections ({} quarantined, {} reaped, {} dropped); rejected {}, deadline exceeded {}",
+            "tcp: {} responses ({} errors, {} simulations, {} sweeps, {} tunes, {} stats) over {} connections ({} quarantined, {} reaped, {} dropped); rejected {}, deadline exceeded {}",
             stats.served,
             stats.errors,
             stats.simulated,
             stats.swept,
+            stats.tuned,
             stats.stats_lines,
             stats.connections,
             stats.quarantined,
@@ -754,8 +759,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         )?;
         let snap = svc.metrics.snapshot();
         eprintln!(
-            "stdio: {} responses ({} errors, {} simulations, {} sweeps), mean batch {:.1}, rejected {}, max depth {}",
-            stats.served, stats.errors, stats.simulated, stats.swept, snap.mean_batch, snap.rejected_requests, snap.max_queue_depth
+            "stdio: {} responses ({} errors, {} simulations, {} sweeps, {} tunes), mean batch {:.1}, rejected {}, max depth {}",
+            stats.served, stats.errors, stats.simulated, stats.swept, stats.tuned, snap.mean_batch, snap.rejected_requests, snap.max_queue_depth
         );
         svc.shutdown();
         return Ok(());
@@ -813,26 +818,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
-    let gpu = gpu_of(args, "A40")?;
-    let n = args.usize_or("n", 20)?;
-    let configs = dataset::sample_configs(KernelKind::FusedMoe, n, 0x7A7E);
-    let mut speedups = Vec::new();
-    for (i, cfg) in configs.iter().enumerate() {
-        let r = synperf::autotune::tune(cfg, &gpu, 42 + i as u64)?;
-        println!(
-            "cfg {i:>3}: default {:.1} us -> best {:.1} us  ({:.2}x)  best = {:?}",
-            r.default_sec * 1e6,
-            r.best_sec * 1e6,
-            r.speedup(),
-            r.best_cfg
+    use synperf::autotune::{self, wire as tune_wire};
+    // JSONL in (wire envelopes or bare tune objects), streaming out: one
+    // row line per point, then one summary line — the offline twin of the
+    // `serve --stdio` tune verb, which answers in a single line. Stdout
+    // carries only the JSONL rows + summary, so `--threads` runs stay
+    // byte-diffable; the Table-X-style report goes to stderr.
+    let Some(path) = args.str_opt("spec") else {
+        bail!(
+            "tune requires --spec <file|-> (JSONL tune specs; see rust/README.md)\n\
+             (the old `tune --gpu A40 --n 20` flags became a spec line:\n\
+              {{\"tune\":{{\"gpus\":[\"A40\"],\"source\":{{\"sampled\":20}}}}}})\n{}",
+            usage()
         );
-        speedups.push(r.speedup());
+    };
+    let text = if path == "-" {
+        use std::io::Read;
+        let mut buf = String::new();
+        std::io::stdin().read_to_string(&mut buf)?;
+        buf
+    } else {
+        std::fs::read_to_string(path)?
+    };
+    let threads = threads_of(args)?;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (id, spec) = tune_wire::parse_tune_line(line);
+        // spec-level failures (bad JSON, unknown GPUs, bad bounds,
+        // oversized grids) answer as one typed error line; healthy specs
+        // stream one row per point in index order, then the summary
+        let res = spec.and_then(|spec| {
+            autotune::run_tune(&spec, autotune::Ceiling::auto, threads, |row| {
+                println!("{}", tune_wire::encode_row(row));
+            })
+        });
+        match res {
+            Ok(out) => {
+                println!("{}", tune_wire::encode_summary(&out.summary));
+                if !args.has("json") {
+                    autotune::print_report(&out);
+                }
+            }
+            Err(e) => {
+                println!("{}", tune_wire::encode_tune_response(id.as_deref(), &Err(e)));
+            }
+        }
     }
-    println!(
-        "geo-mean speedup on {}: {:.2}x",
-        gpu.name,
-        synperf::util::stats::geomean(&speedups)
-    );
     Ok(())
 }
 

@@ -15,6 +15,15 @@
 //! dataset-scale cross-checks — allocate nothing but the output. Per output
 //! element the `fi`-ascending accumulation order of the original per-row
 //! loop is preserved, so results are bit-identical to it.
+//!
+//! The inner `acc += x * w_row` sweep dispatches to an AVX2 f32x8 kernel
+//! when the CPU has it (runtime-detected once per call; see
+//! [`simd_available`]). The vector path deliberately uses a separate
+//! multiply and add — **not FMA** — so each lane computes exactly the
+//! scalar `acc[j] + x * w[j]` and the whole forward stays bit-identical
+//! to the scalar loop, which remains compiled on every target as the
+//! reference ([`forward_into_with`] forces either path for tests and
+//! benches).
 
 use crate::features::FEATURE_DIM;
 
@@ -112,9 +121,79 @@ pub fn forward_par(
     parts.into_iter().flatten().collect()
 }
 
+/// Is the AVX2 fast path usable on this CPU? Always `false` off x86.
+pub fn simd_available() -> bool {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// `acc[j] += x * w[j]` over one output row — the forward's only hot loop.
+/// The two paths are bit-identical; `simd` must only be `true` when
+/// [`simd_available`] says so.
+#[inline]
+fn axpy(simd: bool, x: f32, w: &[f32], acc: &mut [f32]) {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    if simd {
+        // SAFETY: the caller gated `simd` on the runtime AVX2 probe.
+        unsafe { axpy_avx2(x, w, acc) };
+        return;
+    }
+    let _ = simd;
+    axpy_scalar(x, w, acc);
+}
+
+#[inline]
+fn axpy_scalar(x: f32, w: &[f32], acc: &mut [f32]) {
+    for (aj, wj) in acc.iter_mut().zip(w) {
+        *aj += x * *wj;
+    }
+}
+
+/// AVX2 f32x8 axpy. Separate `mul` then `add` — not FMA — so every lane
+/// rounds exactly like the scalar `acc[j] + x * w[j]`; the tail that
+/// doesn't fill a lane runs the scalar loop.
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(x: f32, w: &[f32], acc: &mut [f32]) {
+    #[cfg(target_arch = "x86")]
+    use std::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+    let n = acc.len().min(w.len());
+    let xv = _mm256_set1_ps(x);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(j));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_add_ps(av, _mm256_mul_ps(xv, wv)));
+        j += 8;
+    }
+    axpy_scalar(x, &w[j..n], &mut acc[j..n]);
+}
+
 /// Batched inference forward appending one efficiency per row to `out`,
-/// reusing `scratch` across calls.
+/// reusing `scratch` across calls. Uses the AVX2 path when the CPU has it.
 pub fn forward_into(
+    theta: &[f32],
+    bn: &[f32],
+    xs: &[[f32; FEATURE_DIM]],
+    scratch: &mut Scratch,
+    out: &mut Vec<f32>,
+) {
+    forward_into_with(simd_available(), theta, bn, xs, scratch, out)
+}
+
+/// [`forward_into`] with the axpy path pinned: `simd == false` forces the
+/// scalar reference everywhere, `simd == true` requires AVX2 (see
+/// [`simd_available`]). Exposed so tests and benches can compare the two.
+pub fn forward_into_with(
+    simd: bool,
     theta: &[f32],
     bn: &[f32],
     xs: &[[f32; FEATURE_DIM]],
@@ -165,9 +244,7 @@ pub fn forward_into(
                     if xi == 0.0 {
                         continue;
                     }
-                    for (aj, wj) in acc[r * fo..(r + 1) * fo].iter_mut().zip(wrow) {
-                        *aj += xi * wj;
-                    }
+                    axpy(simd, xi, wrow, &mut acc[r * fo..(r + 1) * fo]);
                 }
             }
             for r in 0..rb {
@@ -339,6 +416,63 @@ mod tests {
                 for (w, g) in want.iter().zip(&got) {
                     assert_eq!(w.to_bits(), g.to_bits(), "n={n} threads={threads} drifted");
                 }
+            }
+        }
+    }
+
+    /// Ragged batch with zeros (sparse skip), negatives (ReLU clamp) and
+    /// mixed magnitudes — the shape both bit-identity tests use.
+    fn ragged_rows(n: usize) -> Vec<[f32; FEATURE_DIM]> {
+        (0..n)
+            .map(|r| {
+                let mut x = [0f32; FEATURE_DIM];
+                for (i, v) in x.iter_mut().enumerate() {
+                    *v = match (r + i) % 4 {
+                        0 => 0.0,
+                        1 => 0.7 * (i as f32 + 1.0).ln(),
+                        2 => -0.9,
+                        _ => (r as f32) - 4.0,
+                    };
+                }
+                x
+            })
+            .collect()
+    }
+
+    #[test]
+    fn simd_forward_bit_identical_to_scalar() {
+        if !simd_available() {
+            eprintln!("(avx2 unavailable — scalar-only target, nothing to compare)");
+            return;
+        }
+        let (theta, bn) = synthetic_weights();
+        // 11 rows: one full ROW_BLOCK panel plus a 3-row remainder panel
+        let xs = ragged_rows(11);
+        let (mut s_scalar, mut s_simd) = (Scratch::new(), Scratch::new());
+        let (mut scalar, mut simd) = (Vec::new(), Vec::new());
+        forward_into_with(false, &theta, &bn, &xs, &mut s_scalar, &mut scalar);
+        forward_into_with(true, &theta, &bn, &xs, &mut s_simd, &mut simd);
+        assert_eq!(scalar.len(), simd.len());
+        for (w, g) in scalar.iter().zip(&simd) {
+            assert_eq!(w.to_bits(), g.to_bits(), "simd forward drifted off scalar");
+        }
+    }
+
+    #[test]
+    fn simd_axpy_matches_scalar_on_remainder_lengths() {
+        if !simd_available() {
+            return;
+        }
+        // lengths straddling the 8-lane width: pure remainder, exact
+        // multiples, and blocked-plus-tail
+        for n in [1usize, 3, 7, 8, 9, 16, 19] {
+            let w: Vec<f32> = (0..n).map(|i| (i as f32) * 0.37 - 1.0).collect();
+            let mut scalar: Vec<f32> = (0..n).map(|i| (i as f32) * 0.11 + 0.5).collect();
+            let mut simd = scalar.clone();
+            axpy(false, 1.7, &w, &mut scalar);
+            axpy(true, 1.7, &w, &mut simd);
+            for (a, b) in scalar.iter().zip(&simd) {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
             }
         }
     }

@@ -31,9 +31,14 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Geometric mean, defined on any input. An empty slice is the neutral
+/// ratio 1.0 (a speedup summary over zero points must not poison
+/// downstream aggregates with NaN), and zero/negative elements — where a
+/// geomean is not mathematically meaningful — are clamped to 1e-12 so one
+/// stray value degrades the estimate instead of collapsing it to 0/-inf.
 pub fn geomean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
-        return f64::NAN;
+        return 1.0;
     }
     (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
 }
@@ -390,6 +395,28 @@ mod tests {
     #[test]
     fn percentile_empty_is_nan_not_a_panic() {
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    // --- regression tests for the PR-9 geomean edge cases ---
+
+    #[test]
+    fn geomean_empty_is_the_neutral_ratio() {
+        // pre-fix: NaN, which poisoned every tune summary over zero
+        // diagnosed points
+        assert_eq!(geomean(&[]), 1.0);
+    }
+
+    #[test]
+    fn geomean_survives_zero_and_negative_elements() {
+        // a geomean is only meaningful on positive data; stray non-positive
+        // elements are clamped instead of collapsing the whole estimate
+        assert!(geomean(&[0.0, 4.0]) > 0.0);
+        assert!(geomean(&[-3.0]).is_finite());
+        assert!(geomean(&[1.0, 0.0, 1.0]).is_finite());
+        // and the clamp does not disturb ordinary inputs
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-9, "geomean(2, 8) = {g}");
+        assert!((geomean(&[1.5]) - 1.5).abs() < 1e-12);
     }
 
     #[test]

@@ -758,3 +758,36 @@ fn two_replica_trace_scenario_pins_its_exact_fields() {
     assert_eq!(r.ttft.p95_sec, r.ttft_hist.percentile(95.0));
     assert_eq!(r.queue_delay.p50_sec, r.queue_hist.percentile(50.0));
 }
+
+// ---- Autotune subsystem ---------------------------------------------------
+
+/// The tune verb's determinism contract: the streamed JSONL — every row
+/// line in index order plus the summary line — is byte-identical between
+/// the serial path (`--threads 1`) and the work-stealing pool
+/// (`--threads 8`), for random GPUs, point counts and seeds.
+#[test]
+fn tune_stream_is_byte_identical_across_thread_counts() {
+    use synperf::autotune::{run_tune, wire as tune_wire, Ceiling, ConfigSource, TuneSpec};
+    use synperf::sweep::GpuFilter;
+    prop_check("tune_threads_byte_diff", 4, |r| {
+        let gpu = (*r.choose(&["A40", "H20", "H800"])).to_string();
+        let spec = TuneSpec::new()
+            .gpus(GpuFilter::Named(vec![gpu]))
+            .source(ConfigSource::Sampled { n: r.range_usize(1, 3) })
+            .seed(r.next_u64())
+            .bounds(64, 4, 8);
+        let mut streams: Vec<String> = Vec::new();
+        for threads in [1usize, 8] {
+            let mut text = String::new();
+            let out = run_tune(&spec, Ceiling::auto, threads, |row| {
+                text.push_str(&tune_wire::encode_row(row));
+                text.push('\n');
+            })
+            .unwrap();
+            text.push_str(&tune_wire::encode_summary(&out.summary));
+            text.push('\n');
+            streams.push(text);
+        }
+        assert_eq!(streams[0], streams[1], "tune JSONL must not depend on --threads");
+    });
+}

@@ -11,17 +11,25 @@
 //! The `sweep` verb is pinned the same way: exact goldens for the sweep
 //! request, the streamed row shapes (ok and per-row error), the frontier
 //! block and the spec-level `SweepError` envelope.
+//!
+//! The `tune` verb (autotune subsystem) closes the set: exact goldens for
+//! the tune request, the streamed row and summary lines, every `TuneError`
+//! variant, and a full round trip over the stdio wire between predict,
+//! simulate and sweep traffic.
 
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 use synperf::api::stdio::serve_lines;
+use synperf::autotune::{
+    wire as tune_wire, ConfigSource, MoeShape, TuneError, TuneRow, TuneSpec, TuneSummary,
+};
 use synperf::api::{
     wire, Flavor, ModelBundle, PredictError, PredictRequest, PredictResponse, Provenance, Source,
 };
 use synperf::coordinator::{PredictionService, ServiceConfig};
 use synperf::e2e::workload::{Request, WorkloadKind};
 use synperf::hw::gpu_by_name;
-use synperf::kernels::{DType, KernelConfig, KernelKind};
+use synperf::kernels::{DType, KernelConfig, KernelKind, MoeConfig};
 use synperf::scenario::wire as scenario_wire;
 use synperf::scenario::{
     ClassBreakdown, MethodTotals, OpClass, Phase, PhaseReport, RoutePolicy, ScenarioError,
@@ -241,6 +249,7 @@ fn stats_golden_line_roundtrips() {
         errors: 2,
         simulated: 1,
         swept: 1,
+        tuned: 1,
         clients: wire::ClientStats {
             connected: 2,
             total: 5,
@@ -253,7 +262,7 @@ fn stats_golden_line_roundtrips() {
     let line = wire::encode_stats(Some("st1"), &report);
     assert_eq!(
         line,
-        r#"{"v":1,"id":"st1","ok":true,"stats":{"requests":12,"batches":8,"mean_batch":1.5e0,"rejected_requests":2,"deadline_exceeded":1,"queue_depth":3,"max_queue_depth":7,"cache_hits":9,"cache_misses":3,"served":14,"errors":2,"simulated":1,"swept":1,"clients":{"connected":2,"total":5,"quarantined":1,"idle_reaped":1,"oversized_lines":1,"disconnects":2}}}"#
+        r#"{"v":1,"id":"st1","ok":true,"stats":{"requests":12,"batches":8,"mean_batch":1.5e0,"rejected_requests":2,"deadline_exceeded":1,"queue_depth":3,"max_queue_depth":7,"cache_hits":9,"cache_misses":3,"served":14,"errors":2,"simulated":1,"swept":1,"tuned":1,"clients":{"connected":2,"total":5,"quarantined":1,"idle_reaped":1,"oversized_lines":1,"disconnects":2}}}"#
     );
     let (id, back) = wire::parse_stats(&line).unwrap();
     assert_eq!(id.as_deref(), Some("st1"));
@@ -653,5 +662,163 @@ fn sweep_round_trips_over_the_stdio_wire() {
         assert!(lines[1].contains(&format!(r#""index":{i},"#)), "row {i} missing: {}", lines[1]);
     }
     assert!(lines[1].contains(r#""frontier":[{"rank":1,"#));
+    svc.shutdown();
+}
+
+// ---- Autotune subsystem: the tune verb -------------------------------------
+
+#[test]
+fn tune_request_golden_lines() {
+    let spec = TuneSpec::new()
+        .gpus(GpuFilter::Named(vec!["A40".into()]))
+        .source(ConfigSource::Sampled { n: 4 })
+        .gap_threshold(0.05)
+        .seed(42);
+    let line = tune_wire::encode_tune_request(Some("t1"), &spec);
+    assert_eq!(
+        line,
+        r#"{"v":1,"id":"t1","op":"tune","tune":{"gpus":["A40"],"source":{"sampled":4},"gap_threshold":5e-2,"seed":42,"max_block":128,"max_stages":5,"max_warps":8}}"#
+    );
+    let (id, parsed) = tune_wire::parse_tune_line(&line);
+    assert_eq!(id.as_deref(), Some("t1"));
+    assert_eq!(parsed.unwrap(), spec);
+
+    // explicit shapes, tightened bounds, paper-default threshold and seed
+    let explicit = TuneSpec::new()
+        .source(ConfigSource::Explicit(vec![MoeShape { m: 64, e: 8, topk: 2, h: 1024, n: 512 }]))
+        .bounds(64, 4, 4);
+    let line = tune_wire::encode_tune_request(None, &explicit);
+    assert_eq!(
+        line,
+        r#"{"v":1,"op":"tune","tune":{"gpus":"all","source":{"explicit":[{"m":64,"e":8,"topk":2,"h":1024,"n":512}]},"gap_threshold":1e-1,"seed":31358,"max_block":64,"max_stages":4,"max_warps":4}}"#
+    );
+    let (id, parsed) = tune_wire::parse_tune_line(&line);
+    assert_eq!(id, None);
+    assert_eq!(parsed.unwrap(), explicit);
+}
+
+/// Hand-built row with power-of-two efficiencies, so the `{:e}` golden is
+/// hand-computable and the line is stable.
+fn tune_row_golden() -> TuneRow {
+    TuneRow {
+        index: 0,
+        gpu: "A40".to_string(),
+        ceiling: "roofline",
+        shape: MoeShape { m: 64, e: 8, topk: 2, h: 1024, n: 512 },
+        default_cfg: MoeConfig {
+            block_m: 64,
+            block_n: 64,
+            block_k: 32,
+            num_stages: 4,
+            num_warps: 4,
+        },
+        best_cfg: MoeConfig {
+            block_m: 128,
+            block_n: 64,
+            block_k: 32,
+            num_stages: 3,
+            num_warps: 8,
+        },
+        diagnosed: true,
+        actual_eff: 0.5,
+        ceiling_eff: 0.75,
+        eff_after: 0.625,
+        gap_before: 0.25,
+        gap_after: 0.125,
+        speedup: 1.25,
+    }
+}
+
+#[test]
+fn tune_row_and_summary_golden_lines() {
+    assert_eq!(
+        tune_wire::encode_row(&tune_row_golden()),
+        r#"{"v":1,"row":{"index":0,"gpu":"A40","ceiling":"roofline","shape":{"m":64,"e":8,"topk":2,"h":1024,"n":512},"diagnosed":true,"default":{"block_m":64,"block_n":64,"block_k":32,"num_stages":4,"num_warps":4},"best":{"block_m":128,"block_n":64,"block_k":32,"num_stages":3,"num_warps":8},"actual_eff":5e-1,"ceiling_eff":7.5e-1,"eff_after":6.25e-1,"gap_before":2.5e-1,"gap_after":1.25e-1,"speedup":1.25e0}}"#
+    );
+    let summary = TuneSummary {
+        points: 4,
+        diagnosed: 2,
+        ceiling: "roofline",
+        geomean_speedup: 1.5,
+        geomean_speedup_diagnosed: 2.25,
+        gap_closure: 0.5,
+        max_speedup: 2.5,
+        ranked: vec![2, 0],
+    };
+    assert_eq!(
+        tune_wire::encode_summary(&summary),
+        r#"{"v":1,"summary":{"points":4,"diagnosed":2,"ceiling":"roofline","geomean_speedup":1.5e0,"geomean_speedup_diagnosed":2.25e0,"gap_closure":5e-1,"max_speedup":2.5e0,"ranked":[2,0]}}"#
+    );
+}
+
+#[test]
+fn tune_error_golden_lines_cover_the_whole_taxonomy() {
+    let cases: Vec<(TuneError, &str)> = vec![
+        (
+            TuneError::UnknownGpu("B300".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"unknown_gpu","message":"unknown GPU \"B300\" (see Table VI; closest: A100, H800, H100)","gpu":"B300"}}"#,
+        ),
+        (
+            TuneError::UnsupportedKernel("gemm is not a fused-MoE launch".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"unsupported_kernel","message":"unsupported kernel: gemm is not a fused-MoE launch","reason":"gemm is not a fused-MoE launch"}}"#,
+        ),
+        (
+            TuneError::InvalidSpec("sampled count must be >= 1".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"invalid_spec","message":"invalid tune spec: sampled count must be >= 1","reason":"sampled count must be >= 1"}}"#,
+        ),
+        (
+            TuneError::GridTooLarge("1408 points exceed the cap of 512".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"grid_too_large","message":"tune grid too large: 1408 points exceed the cap of 512","reason":"1408 points exceed the cap of 512"}}"#,
+        ),
+        (
+            TuneError::MalformedSpec("tune request needs a \"tune\" object".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"malformed_spec","message":"malformed tune spec: tune request needs a \"tune\" object","reason":"tune request needs a \"tune\" object"}}"#,
+        ),
+    ];
+    for (err, golden) in cases {
+        let line = tune_wire::encode_tune_response(None, &Err(err.clone()));
+        assert_eq!(line, golden, "wire drift for {:?}", err.code());
+    }
+}
+
+#[test]
+fn tune_round_trips_over_the_stdio_wire() {
+    // a tune line between predict, simulate and spec-error traffic: one
+    // request in, one line out, rows + summary embedded, order preserved
+    let svc = PredictionService::spawn(ModelBundle::default, ServiceConfig::default());
+    let input = concat!(
+        r#"{"id":"p1","gpu":"A100","kernel":{"type":"gemm","m":256,"n":256,"k":256}}"#,
+        "\n",
+        r#"{"v":1,"id":"t1","op":"tune","tune":{"gpus":["A40"],"source":{"sampled":2},"seed":31}}"#,
+        "\n",
+        r#"{"id":"sim1","op":"simulate","scenario":{"model":"llama3.1-8b","gpu":"A100","workload":{"requests":[[64,4]]}}}"#,
+        "\n",
+        r#"{"id":"t2","op":"tune","tune":{"gpus":["B300"]}}"#,
+        "\n",
+    );
+    let mut out = Vec::new();
+    let stats =
+        serve_lines(&svc.client(), Simulator::degraded, input.as_bytes(), &mut out, 8, 2).unwrap();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.tuned, 2);
+    assert_eq!(stats.simulated, 1);
+    assert_eq!(stats.errors, 1, "the unknown-GPU tune is the only error");
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 4);
+    assert!(lines[0].contains(r#""id":"p1""#) && lines[0].contains(r#""ok":true"#));
+    // the tune answer is one line: every row plus the summary, with
+    // ceiling provenance visible (no trained P80 artifact in tests)
+    assert!(lines[1].starts_with(r#"{"v":1,"id":"t1","ok":true,"tune":{"rows":["#), "{}", lines[1]);
+    for i in 0..2 {
+        assert!(lines[1].contains(&format!(r#""index":{i},"#)), "row {i} missing: {}", lines[1]);
+    }
+    assert!(lines[1].contains(r#""summary":{"points":2"#), "{}", lines[1]);
+    assert!(lines[1].contains(r#""ceiling":"roofline""#), "{}", lines[1]);
+    // the simulate verb still answers between tunes
+    assert!(lines[2].contains(r#""id":"sim1""#) && lines[2].contains(r#""ok":true"#));
+    // spec-level tune failures travel the closed taxonomy, in order
+    assert!(lines[3].contains(r#""id":"t2""#) && lines[3].contains(r#""code":"unknown_gpu""#));
+    assert!(lines[3].contains("closest: A100, H800, H100"), "{}", lines[3]);
     svc.shutdown();
 }
