@@ -1,0 +1,101 @@
+#!/usr/bin/env bash
+# Drive the crash-safe sweep surface from a clean checkout, five ways:
+#  1. the same campaign split over `--shard 0/3 1/3 2/3` with per-shard
+#     journals, merged back by `sweep-merge` — byte-identical to the
+#     one-process run (either journal order);
+#  2. a journaled run SIGKILLed mid-sweep (the SYNPERF_SWEEP_STALL_MS
+#     test hook wedges one point), then `--resume`d — byte-identical to
+#     the uninterrupted run, and re-running without `--resume` refuses
+#     to clobber the journal;
+#  3. panic containment and the point watchdog: injected failures become
+#     typed `internal` / `timeout` rows, never aborts;
+#  4. procurement constraints: `max_gpus` turns over-budget points into
+#     typed `constraint_violated` rows, and every feasible row carries
+#     `usd_per_hour`/`usd_per_mtok` from the registry's cost columns;
+#  5. the typed merge failures: a missing shard is `merge_incomplete`, a
+#     duplicated shard is `merge_conflict`.
+# Without trained artifacts everything answers in degraded roofline mode.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# invoke the built binary directly (not through `cargo run`): leg 2
+# SIGKILLs the sweep process, and killing a cargo wrapper would orphan
+# the actual synperf child mid-campaign
+cargo build --release --quiet --bin synperf
+RUN="target/release/synperf"
+WORK=$(mktemp -d "${TMPDIR:-/tmp}/synperf_sweep_shard.XXXXXX")
+trap 'rm -rf "$WORK"' EXIT
+
+# 3 GPUs x tp {1,2} = 6 points, all feasible
+SPEC='{"gpus":["A100","H800","L20"],"tp":[1,2],"workloads":[{"name":"chat","scenario":{"model":"llama3.1-8b","workload":{"requests":[[64,4]]},"seed":3}}]}'
+printf '%s\n' "$SPEC" > "$WORK/spec.jsonl"
+
+GOLDEN=$($RUN sweep --spec "$WORK/spec.jsonl" --threads 1 --json)
+
+# 1. shard the campaign across three processes, then merge the journals
+for i in 0 1 2; do
+  $RUN sweep --spec "$WORK/spec.jsonl" --shard "$i/3" \
+    --journal "$WORK/shard$i.jsonl" --json > /dev/null
+done
+MERGED=$($RUN sweep-merge "$WORK/shard0.jsonl" "$WORK/shard1.jsonl" "$WORK/shard2.jsonl" --json)
+[ "$MERGED" = "$GOLDEN" ] \
+  || { echo "FAIL: sweep-merge must reproduce the one-process bytes"; exit 1; }
+SHUFFLED=$($RUN sweep-merge "$WORK/shard2.jsonl" "$WORK/shard0.jsonl" "$WORK/shard1.jsonl" --json)
+[ "$SHUFFLED" = "$GOLDEN" ] \
+  || { echo "FAIL: merge must not depend on journal argument order"; exit 1; }
+
+# 2. SIGKILL a journaled run mid-sweep, then resume. The stall hook
+# wedges index 2 (serial path: rows 0 and 1 are already fsync'd), so the
+# kill provably lands mid-campaign.
+SYNPERF_SWEEP_STALL_MS=2:120000 $RUN sweep --spec "$WORK/spec.jsonl" \
+  --journal "$WORK/resume.jsonl" --threads 1 --json > /dev/null &
+PID=$!
+for _ in $(seq 1 1200); do
+  lines=$(wc -l < "$WORK/resume.jsonl" 2>/dev/null || echo 0)
+  [ "$lines" -ge 3 ] && break
+  kill -0 "$PID" 2>/dev/null || { echo "FAIL: journaled sweep died early"; exit 1; }
+  sleep 0.1
+done
+[ "$lines" -ge 3 ] || { echo "FAIL: journal never reached header + 2 rows"; exit 1; }
+kill -9 "$PID"
+wait "$PID" 2>/dev/null || true
+
+RESUMED=$($RUN sweep --spec "$WORK/spec.jsonl" --journal "$WORK/resume.jsonl" --resume --threads 1 --json)
+[ "$RESUMED" = "$GOLDEN" ] \
+  || { echo "FAIL: resumed run must be byte-identical to the uninterrupted run"; exit 1; }
+[ "$(wc -l < "$WORK/resume.jsonl")" -eq 7 ] \
+  || { echo "FAIL: resumed journal must hold header + all 6 rows"; exit 1; }
+if $RUN sweep --spec "$WORK/spec.jsonl" --journal "$WORK/resume.jsonl" --json > /dev/null 2>&1; then
+  echo "FAIL: an existing journal without --resume must refuse to clobber"; exit 1
+fi
+
+# 3. injected failures become typed rows, never aborts
+PANIC_OUT=$(SYNPERF_SWEEP_PANIC_INDEX=3 $RUN sweep --spec "$WORK/spec.jsonl" --json)
+printf '%s\n' "$PANIC_OUT" | grep '"index":3,' | grep -q '"code":"internal"' \
+  || { echo "FAIL: contained panic must surface as a typed internal row"; exit 1; }
+[ "$(printf '%s\n' "$PANIC_OUT" | grep -c '"ok":true')" -eq 5 ] \
+  || { echo "FAIL: a contained panic must not take out healthy rows"; exit 1; }
+TIMEOUT_OUT=$(SYNPERF_SWEEP_STALL_MS=1:120000 $RUN sweep --spec "$WORK/spec.jsonl" \
+  --point-timeout-ms 250 --threads 2 --json)
+printf '%s\n' "$TIMEOUT_OUT" | grep '"index":1,' | grep -q '"code":"timeout"' \
+  || { echo "FAIL: the watchdog must convert a wedged point into a timeout row"; exit 1; }
+
+# 4. hard procurement constraints: tp=2 points (2 GPUs) violate max_gpus=1
+COST='{"gpus":["A100","H800"],"tp":[1,2],"constraints":{"max_gpus":1},"workloads":[{"name":"chat","scenario":{"model":"llama3.1-8b","workload":{"requests":[[64,4]]},"seed":3}}]}'
+COST_OUT=$(printf '%s\n' "$COST" | $RUN sweep --spec - --json)
+[ "$(printf '%s\n' "$COST_OUT" | grep -c '"code":"constraint_violated"')" -eq 2 ] \
+  || { echo "FAIL: expected 2 constraint_violated rows under max_gpus=1"; exit 1; }
+printf '%s\n' "$COST_OUT" | grep '"ok":true' | grep -q '"usd_per_mtok":' \
+  || { echo "FAIL: feasible rows must carry the cost columns"; exit 1; }
+printf '%s\n' "$COST_OUT" | tail -1 | grep -q '"usd_per_mtok":' \
+  || { echo "FAIL: frontier entries must carry usd_per_mtok"; exit 1; }
+
+# 5. the typed merge failures
+INCOMPLETE=$($RUN sweep-merge "$WORK/shard0.jsonl" "$WORK/shard1.jsonl" --json)
+printf '%s\n' "$INCOMPLETE" | grep -q '"code":"merge_incomplete"' \
+  || { echo "FAIL: a missing shard must be merge_incomplete"; exit 1; }
+CONFLICT=$($RUN sweep-merge "$WORK/shard0.jsonl" "$WORK/shard0.jsonl" "$WORK/shard1.jsonl" --json)
+printf '%s\n' "$CONFLICT" | grep -q '"code":"merge_conflict"' \
+  || { echo "FAIL: a duplicated shard must be merge_conflict"; exit 1; }
+
+echo "sweep_shard: all assertions passed"

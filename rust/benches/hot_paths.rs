@@ -348,6 +348,31 @@ fn run_benches(h: &mut Harness, smoke: bool) {
             );
         });
     }
+    // the crash-safety tax: one fsync'd journal line per completed row
+    // (write_all + sync_data) — this append rate is the floor under any
+    // journaled sweep, so it must stay far above the points/sec above
+    let journal_path =
+        std::env::temp_dir().join(format!("synperf_bench_journal_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&journal_path);
+    let mut row_line = String::new();
+    synperf::sweep::run_sweep(&run_spec, synperf::scenario::Simulator::degraded, 1, |r| {
+        if row_line.is_empty() {
+            row_line = synperf::sweep::wire::encode_row(r);
+        }
+    })
+    .unwrap();
+    let mut session = synperf::sweep::JournalSession::open(
+        &journal_path,
+        &run_spec,
+        synperf::sweep::Shard::default(),
+        false,
+    )
+    .unwrap();
+    h.run("sweep/journal append", 200, 10, || {
+        session.record(black_box(&row_line)).unwrap();
+    });
+    drop(session);
+    let _ = std::fs::remove_file(&journal_path);
 
     println!("\n== autotune (§VII ceiling-guided kernel search) ==");
     // diagnose + brute-force tune 3 sampled fused-MoE launches on one GPU

@@ -14,7 +14,7 @@ use crate::autotune::{self, TuneError, TuneSpec};
 use crate::coordinator::{Client, Pending};
 use crate::scenario::wire::SimulateRequest;
 use crate::scenario::{self, ScenarioError};
-use crate::sweep::{self, SweepError, SweepSpec};
+use crate::sweep::{self, SweepError, SweepRequest};
 use crate::util::json::parse as parse_json;
 use std::io::{ErrorKind, Read};
 use std::time::Duration;
@@ -168,7 +168,7 @@ pub(crate) enum Parsed {
     Malformed(String),
     Predict(Option<String>, Result<PredictRequest, PredictError>),
     Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
-    Sweep(Option<String>, Result<SweepSpec, SweepError>),
+    Sweep(Option<String>, Result<SweepRequest, SweepError>),
     Tune(Option<String>, Result<TuneSpec, TuneError>),
     Stats(Option<String>),
 }

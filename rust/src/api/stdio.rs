@@ -34,7 +34,7 @@ use crate::autotune::{self, TuneError, TuneSpec};
 use crate::coordinator::{Client, Pending};
 use crate::scenario::wire::SimulateRequest;
 use crate::scenario::{self, ScenarioError, Simulator};
-use crate::sweep::{self, SweepError, SweepSpec};
+use crate::sweep::{self, SweepError, SweepRequest};
 use std::io::{BufRead, Write};
 use std::sync::mpsc::{sync_channel, TryRecvError};
 
@@ -67,7 +67,7 @@ enum Slot {
     Ready(Option<String>, Result<PredictResponse, PredictError>),
     Oversized(usize),
     Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
-    Sweep(Option<String>, Result<SweepSpec, SweepError>),
+    Sweep(Option<String>, Result<SweepRequest, SweepError>),
     Tune(Option<String>, Result<TuneSpec, TuneError>),
     Stats(Option<String>),
 }
@@ -147,7 +147,7 @@ where
 /// before blocking so a waiting peer sees everything answered so far.
 /// Simulate slots run here — the `Simulator` never crosses a thread, and
 /// is only built (once) when the first simulate line arrives. Sweep slots
-/// fan out through [`sweep::run_sweep`], which builds one simulator per
+/// fan out through [`sweep::run_request`], which builds one simulator per
 /// worker from the same factory; `threads` bounds that fan-out.
 fn drain_slots<W: Write, F: Fn() -> Simulator + Sync>(
     slot_rx: std::sync::mpsc::Receiver<Slot>,
@@ -199,12 +199,14 @@ fn drain_slots<W: Write, F: Fn() -> Simulator + Sync>(
                 writeln!(writer, "{}", wire::encode_stats(id.as_deref(), &report))?;
                 continue;
             }
-            Slot::Sweep(id, spec) => {
+            Slot::Sweep(id, req) => {
                 stats.served += 1;
                 stats.swept += 1;
                 // rows stream internally but the wire stays
-                // one-line-per-request: the response embeds every row
-                let res = spec.and_then(|spec| sweep::run_sweep(&spec, simulator, threads, |_| {}));
+                // one-line-per-request: the response embeds every row;
+                // shard + journal envelope fields are honored (a journal
+                // is create-or-resume on this surface)
+                let res = req.and_then(|req| sweep::run_request(&req, simulator, threads));
                 if res.is_err() {
                     stats.errors += 1;
                 }

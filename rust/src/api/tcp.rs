@@ -40,7 +40,7 @@ use crate::coordinator::queue::{Bounded, Pop, PushError};
 use crate::coordinator::{Client, Pending};
 use crate::scenario::wire::SimulateRequest;
 use crate::scenario::{self, ScenarioError, Simulator};
-use crate::sweep::{self, SweepError, SweepSpec};
+use crate::sweep::{self, SweepError, SweepRequest};
 use std::collections::HashMap;
 use std::io::{BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -73,7 +73,7 @@ pub struct TcpConfig {
     /// Poll granularity: read-timeout tick, inbox-push wait, accept poll.
     pub tick: Duration,
     /// Worker threads for sweep- and tune-verb lines (see
-    /// [`sweep::run_sweep`] / [`autotune::run_tune`]).
+    /// [`sweep::run_request`] / [`autotune::run_tune`]).
     pub threads: usize,
 }
 
@@ -185,7 +185,7 @@ enum Slot {
     Ready(Option<String>, Result<PredictResponse, PredictError>),
     Oversized(usize),
     Simulate(Option<String>, Result<SimulateRequest, ScenarioError>),
-    Sweep(Option<String>, Result<SweepSpec, SweepError>),
+    Sweep(Option<String>, Result<SweepRequest, SweepError>),
     Tune(Option<String>, Result<TuneSpec, TuneError>),
     Stats(Option<String>),
 }
@@ -591,11 +591,11 @@ fn write_loop<F>(
                 }
                 continue;
             }
-            Slot::Sweep(id, spec) => {
+            Slot::Sweep(id, req) => {
                 NetCounters::bump(&counters.served);
                 NetCounters::bump(&counters.swept);
                 let res =
-                    spec.and_then(|spec| sweep::run_sweep(&spec, simulator, cfg.threads, |_| {}));
+                    req.and_then(|req| sweep::run_request(&req, simulator, cfg.threads));
                 if res.is_err() {
                     NetCounters::bump(&counters.errors);
                 }

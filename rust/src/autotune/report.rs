@@ -39,6 +39,11 @@ pub struct TuneRow {
     /// `default_sec / best_sec` over clean oracle time; 1.0 when not
     /// diagnosed.
     pub speedup: f64,
+    /// Set when evaluating this point panicked: the point is contained
+    /// into a typed error row (neutral metrics — undiagnosed, speedup
+    /// 1.0 — so the summary never counts phantom gains) instead of
+    /// taking the whole tune down.
+    pub error: Option<String>,
 }
 
 /// The one-line aggregate over a finished tune (Table X / Fig. 9).
@@ -167,6 +172,7 @@ mod tests {
             gap_before,
             gap_after: (ceiling_eff - eff_after).max(0.0),
             speedup,
+            error: None,
         }
     }
 

@@ -16,6 +16,7 @@ use crate::mlp::Predictor;
 use crate::oracle;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
 
@@ -269,6 +270,77 @@ fn eval_point(ceiling: &Ceiling, spec: &TuneSpec, cands: &[MoeConfig], point: &T
         gap_before,
         gap_after: (ceiling_eff - eff_after).max(0.0),
         speedup,
+        error: None,
+    }
+}
+
+/// Test-only failure injection, read once per run:
+/// `SYNPERF_TUNE_PANIC_INDEX=N` panics while evaluating point N
+/// (exercising `catch_unwind` containment). Only spawned-process
+/// integration tests and example scripts set this — the environment is
+/// process-global.
+fn panic_hook_from_env() -> Option<usize> {
+    std::env::var("SYNPERF_TUNE_PANIC_INDEX").ok().and_then(|v| v.parse().ok())
+}
+
+/// The typed error row a panicking point collapses into: the point's
+/// coordinates with neutral metrics (undiagnosed, speedup 1.0), so the
+/// summary aggregates never count phantom gains.
+fn error_row(point: &TunePoint, ceiling: &'static str, why: String) -> TuneRow {
+    let KernelConfig::FusedMoe { cfg, .. } = &point.cfg else {
+        unreachable!("expand only materializes fused-MoE points")
+    };
+    TuneRow {
+        index: point.index,
+        gpu: point.gpu.clone(),
+        ceiling,
+        shape: point.shape,
+        default_cfg: *cfg,
+        best_cfg: *cfg,
+        diagnosed: false,
+        actual_eff: 0.0,
+        ceiling_eff: 0.0,
+        eff_after: 0.0,
+        gap_before: 0.0,
+        gap_after: 0.0,
+        speedup: 1.0,
+        error: Some(why),
+    }
+}
+
+/// Contained evaluation: a panic inside one point becomes a typed error
+/// row and the worker's ceiling is rebuilt (a P80 predictor's forward
+/// scratch may be mid-update when the stack unwinds), so one poisoned
+/// point cannot corrupt — or abort — the rest of the tune.
+fn eval_contained(
+    ceil: &mut Ceiling,
+    ceiling: impl Fn() -> Ceiling,
+    spec: &TuneSpec,
+    cands: &[MoeConfig],
+    point: &TunePoint,
+    panic_index: Option<usize>,
+) -> TuneRow {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        if panic_index == Some(point.index) {
+            panic!("test hook: injected panic at index {}", point.index);
+        }
+        eval_point(ceil, spec, cands, point)
+    }));
+    match result {
+        Ok(row) => row,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("panic");
+            *ceil = ceiling();
+            error_row(
+                point,
+                ceil.provenance(),
+                format!("tune point evaluation panicked: {msg}"),
+            )
+        }
     }
 }
 
@@ -291,13 +363,14 @@ where
 {
     let points = expand(spec)?;
     let cands = candidates(spec);
+    let panic_index = panic_hook_from_env();
     let threads = threads.max(1);
     let workers = threads.min(points.len()).max(1);
     let mut rows: Vec<TuneRow> = Vec::with_capacity(points.len());
     if workers <= 1 {
-        let ceil = ceiling();
+        let mut ceil = ceiling();
         for point in &points {
-            let row = eval_point(&ceil, spec, &cands, point);
+            let row = eval_contained(&mut ceil, &ceiling, spec, &cands, point, panic_index);
             on_row(&row);
             rows.push(row);
         }
@@ -312,13 +385,21 @@ where
             for _ in 0..workers {
                 let tx = tx.clone();
                 s.spawn(move || {
-                    let ceil = ceiling_ref();
+                    let mut ceil = ceiling_ref();
                     loop {
                         let i = next_ref.fetch_add(1, Ordering::Relaxed);
                         if i >= points_ref.len() {
                             break;
                         }
-                        if tx.send(eval_point(&ceil, spec, cands_ref, &points_ref[i])).is_err() {
+                        let row = eval_contained(
+                            &mut ceil,
+                            ceiling_ref,
+                            spec,
+                            cands_ref,
+                            &points_ref[i],
+                            panic_index,
+                        );
+                        if tx.send(row).is_err() {
                             break;
                         }
                     }

@@ -288,8 +288,14 @@ fn cfg_to_json(c: &MoeConfig) -> String {
 }
 
 fn row_to_json(r: &TuneRow) -> String {
+    // contained-panic rows carry a typed error object; healthy rows stay
+    // byte-identical to the pre-containment wire
+    let error = match &r.error {
+        Some(why) => format!(r#","error":{{"code":"internal","message":"{}"}}"#, esc(why)),
+        None => String::new(),
+    };
     format!(
-        r#"{{"index":{},"gpu":"{}","ceiling":"{}","shape":{},"diagnosed":{},"default":{},"best":{},"actual_eff":{:e},"ceiling_eff":{:e},"eff_after":{:e},"gap_before":{:e},"gap_after":{:e},"speedup":{:e}}}"#,
+        r#"{{"index":{},"gpu":"{}","ceiling":"{}","shape":{},"diagnosed":{},"default":{},"best":{},"actual_eff":{:e},"ceiling_eff":{:e},"eff_after":{:e},"gap_before":{:e},"gap_after":{:e},"speedup":{:e}{}}}"#,
         r.index,
         esc(&r.gpu),
         r.ceiling,
@@ -302,7 +308,8 @@ fn row_to_json(r: &TuneRow) -> String {
         r.eff_after,
         r.gap_before,
         r.gap_after,
-        r.speedup
+        r.speedup,
+        error
     )
 }
 
@@ -445,6 +452,35 @@ mod tests {
         assert!(!is_tune_request(r#"{"scenario":{"model":"m","gpu":"g"}}"#));
         assert!(!is_tune_request(r#"{"gpu":"A100","kernel":{"type":"rmsnorm","seq":1,"dim":8}}"#));
         assert!(!crate::sweep::wire::is_sweep_request(r#"{"op":"tune","tune":{}}"#));
+    }
+
+    #[test]
+    fn contained_panic_rows_carry_a_typed_error_object() {
+        let cfg =
+            MoeConfig { block_m: 64, block_n: 64, block_k: 32, num_stages: 4, num_warps: 8 };
+        let row = TuneRow {
+            index: 3,
+            gpu: "A40".into(),
+            ceiling: "roofline",
+            shape: MoeShape { m: 64, e: 8, topk: 2, h: 1024, n: 512 },
+            default_cfg: cfg,
+            best_cfg: cfg,
+            diagnosed: false,
+            actual_eff: 0.0,
+            ceiling_eff: 0.0,
+            eff_after: 0.0,
+            gap_before: 0.0,
+            gap_after: 0.0,
+            speedup: 1.0,
+            error: Some("tune point evaluation panicked: boom".into()),
+        };
+        assert_eq!(
+            encode_row(&row),
+            r#"{"v":1,"row":{"index":3,"gpu":"A40","ceiling":"roofline","shape":{"m":64,"e":8,"topk":2,"h":1024,"n":512},"diagnosed":false,"default":{"block_m":64,"block_n":64,"block_k":32,"num_stages":4,"num_warps":8},"best":{"block_m":64,"block_n":64,"block_k":32,"num_stages":4,"num_warps":8},"actual_eff":0e0,"ceiling_eff":0e0,"eff_after":0e0,"gap_before":0e0,"gap_after":0e0,"speedup":1e0,"error":{"code":"internal","message":"tune point evaluation panicked: boom"}}}"#
+        );
+        // healthy rows never grow the field
+        let healthy = TuneRow { error: None, speedup: 1.25, diagnosed: true, ..row };
+        assert!(!encode_row(&healthy).contains("\"error\""));
     }
 
     #[test]

@@ -73,6 +73,12 @@ pub struct GpuSpec {
     /// Per-direction interconnect bandwidth for collectives, GB/s
     /// (NVLink where present, PCIe otherwise).
     pub interconnect_gbs: f64,
+    /// Representative cloud rental rate, USD per GPU-hour — the cost
+    /// column behind the sweep's `$ / 1M tokens` objective and the
+    /// `max_usd_per_hour` procurement constraint.
+    pub usd_per_hour: f64,
+    /// Board power limit (TDP), watts.
+    pub tdp_watts: f64,
     /// Whether the GPU is in the training ("seen") split of Table VI.
     pub seen: bool,
 }
@@ -114,7 +120,8 @@ impl GpuSpec {
 
 macro_rules! gpu {
     ($name:literal, $arch:expr, $cc:expr, $sms:expr, $clk:expr, $tensor:expr,
-     $dram:expr, $l2bw:expr, $smem:expr, $l2mb:expr, $fp8:expr, $ic:expr, $seen:expr) => {
+     $dram:expr, $l2bw:expr, $smem:expr, $l2mb:expr, $fp8:expr, $ic:expr,
+     $usd:expr, $tdp:expr, $seen:expr) => {
         GpuSpec {
             name: $name,
             arch: $arch,
@@ -134,6 +141,8 @@ macro_rules! gpu {
             max_ctas_per_sm: if matches!($arch, Arch::Hopper) { 32 } else { 24 },
             fp8_tensor_mult: $fp8,
             interconnect_gbs: $ic,
+            usd_per_hour: $usd,
+            tdp_watts: $tdp,
             seen: $seen,
         }
     };
@@ -142,18 +151,18 @@ macro_rules! gpu {
 /// The 11 GPUs of Table VI. First six are the training ("seen") group.
 pub fn all_gpus() -> Vec<GpuSpec> {
     vec![
-        //    name             arch            cc    SMs  clk    tensor dram   l2bw   smem l2mb fp8  ic    seen
-        gpu!("A40",            Arch::Ampere,   8.6,  84,  1740.0, 1024.0, 696.0, 2430.0, 100, 6.0, 1.0, 32.0, true),
-        gpu!("A100",           Arch::Ampere,   8.0,  108, 1410.0, 2048.0, 2039.0, 4500.0, 164, 40.0, 1.0, 300.0, true),
-        gpu!("RTX 6000 Ada",   Arch::Ada,      8.9,  142, 2505.0, 1024.0, 960.0, 4800.0, 100, 96.0, 1.0, 32.0, true),
-        gpu!("L20",            Arch::Ada,      8.9,  92,  2520.0, 516.0,  864.0, 3100.0, 100, 96.0, 1.0, 32.0, true),
-        gpu!("H20",            Arch::Hopper,   9.0,  78,  1830.0, 1024.0, 4023.0, 5200.0, 228, 60.0, 2.0, 450.0, true),
-        gpu!("H800",           Arch::Hopper,   9.0,  132, 1830.0, 4096.0, 3352.0, 8000.0, 228, 50.0, 2.0, 200.0, true),
-        gpu!("RTX A6000",      Arch::Ampere,   8.6,  84,  1800.0, 1024.0, 768.0, 2500.0, 100, 6.0, 1.0, 32.0, false),
-        gpu!("L40",            Arch::Ada,      8.9,  142, 2490.0, 512.0,  864.0, 4700.0, 100, 96.0, 1.0, 32.0, false),
-        gpu!("H100",           Arch::Hopper,   9.0,  132, 1830.0, 4096.0, 3352.0, 8000.0, 228, 50.0, 2.0, 450.0, false),
-        gpu!("H200",           Arch::Hopper,   9.0,  132, 1830.0, 4096.0, 4917.0, 9500.0, 228, 50.0, 2.0, 450.0, false),
-        gpu!("RTX PRO 6000 S", Arch::Blackwell, 12.0, 188, 2340.0, 1024.0, 1792.0, 10400.0, 128, 128.0, 2.0, 64.0, false),
+        //    name             arch            cc    SMs  clk    tensor dram   l2bw   smem l2mb fp8  ic    $/hr tdpW  seen
+        gpu!("A40",            Arch::Ampere,   8.6,  84,  1740.0, 1024.0, 696.0, 2430.0, 100, 6.0, 1.0, 32.0, 0.8, 300.0, true),
+        gpu!("A100",           Arch::Ampere,   8.0,  108, 1410.0, 2048.0, 2039.0, 4500.0, 164, 40.0, 1.0, 300.0, 1.9, 400.0, true),
+        gpu!("RTX 6000 Ada",   Arch::Ada,      8.9,  142, 2505.0, 1024.0, 960.0, 4800.0, 100, 96.0, 1.0, 32.0, 1.1, 300.0, true),
+        gpu!("L20",            Arch::Ada,      8.9,  92,  2520.0, 516.0,  864.0, 3100.0, 100, 96.0, 1.0, 32.0, 0.9, 275.0, true),
+        gpu!("H20",            Arch::Hopper,   9.0,  78,  1830.0, 1024.0, 4023.0, 5200.0, 228, 60.0, 2.0, 450.0, 1.5, 400.0, true),
+        gpu!("H800",           Arch::Hopper,   9.0,  132, 1830.0, 4096.0, 3352.0, 8000.0, 228, 50.0, 2.0, 200.0, 2.8, 700.0, true),
+        gpu!("RTX A6000",      Arch::Ampere,   8.6,  84,  1800.0, 1024.0, 768.0, 2500.0, 100, 6.0, 1.0, 32.0, 0.7, 300.0, false),
+        gpu!("L40",            Arch::Ada,      8.9,  142, 2490.0, 512.0,  864.0, 4700.0, 100, 96.0, 1.0, 32.0, 1.0, 300.0, false),
+        gpu!("H100",           Arch::Hopper,   9.0,  132, 1830.0, 4096.0, 3352.0, 8000.0, 228, 50.0, 2.0, 450.0, 2.5, 700.0, false),
+        gpu!("H200",           Arch::Hopper,   9.0,  132, 1830.0, 4096.0, 4917.0, 9500.0, 228, 50.0, 2.0, 450.0, 3.5, 700.0, false),
+        gpu!("RTX PRO 6000 S", Arch::Blackwell, 12.0, 188, 2340.0, 1024.0, 1792.0, 10400.0, 128, 128.0, 2.0, 64.0, 1.8, 600.0, false),
     ]
 }
 
@@ -319,6 +328,31 @@ mod tests {
             assert!(g.fp8_tensor_mult >= 1.0, "{}", g.name);
             assert!(g.num_sms > 0 && g.max_warps_per_sm > 0 && g.max_ctas_per_sm > 0);
         }
+    }
+
+    #[test]
+    fn cost_and_power_columns_are_sane() {
+        // rental rates and TDPs feed the sweep's $/Mtok objective and
+        // budget constraints — a zero or wild value would poison every row
+        for g in all_gpus() {
+            assert!(
+                (0.1..=10.0).contains(&g.usd_per_hour),
+                "{}: usd_per_hour {}",
+                g.name,
+                g.usd_per_hour
+            );
+            assert!(
+                (200.0..=1000.0).contains(&g.tdp_watts),
+                "{}: tdp_watts {}",
+                g.name,
+                g.tdp_watts
+            );
+        }
+        // flagship parts rent above the workstation parts
+        let h100 = gpu_by_name("H100").unwrap();
+        let a40 = gpu_by_name("A40").unwrap();
+        assert!(h100.usd_per_hour > a40.usd_per_hour);
+        assert!(h100.tdp_watts > a40.tdp_watts);
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //!   sweep       fleet-scale hardware search: a declarative grid over
 //!               GPUs x tp x pp x replicas x policies x workloads,
 //!               streamed as one JSONL row per config plus a Pareto
-//!               frontier over (tokens/sec, SLO attainment, GPU count)
+//!               frontier over (tokens/sec, SLO attainment, GPU count);
+//!               crash-safe and shardable (`--shard I/N`, `--journal`
+//!               with `--resume`, `--point-timeout-ms` watchdog)
+//!   sweep-merge deterministic merge of one campaign's shard journals
+//!               back into the full row stream + recomputed frontier
 //!   gpus        list the Table-VI hardware registry (seen/unseen split,
 //!               headline compute:memory ratios)
 //!   serve       run the batching prediction service (synthetic load or
@@ -57,7 +61,9 @@ fn usage() -> &'static str {
                   [--kv-tokens 262144] [--kv-quant 16] [--slo-ttft-ms 2000] [--slo-tpot-ms 200]\n\
        e2e        --model qwen2.5-14b --gpu H100 [--tp 1] [--pp 1] [--workload arxiv] [--batch 8]\n\
                   [--threads N]\n\
-       sweep      --spec <file|-> [--threads N] [--json]\n\
+       sweep      --spec <file|-> [--threads N] [--shard I/N] [--journal PATH [--resume]]\n\
+                  [--point-timeout-ms T] [--json]\n\
+       sweep-merge <journal> <journal> ... [--json]\n\
        gpus\n\
        serve      [--stdio | --tcp ADDR] [--requests 512] [--gpu A100] [--threads N]\n\
                   [--max-batch 256] [--deadline-us 2000] [--queue-cap 1024]\n\
@@ -109,6 +115,7 @@ fn main() -> Result<()> {
         "predict" => cmd_predict(&rest),
         "simulate" => cmd_simulate(&rest),
         "sweep" => cmd_sweep(&rest),
+        "sweep-merge" => cmd_sweep_merge(&rest),
         "gpus" => cmd_gpus(),
         "e2e" => cmd_e2e(&rest),
         "serve" => cmd_serve(&rest),
@@ -510,7 +517,10 @@ fn print_frontier(out: &synperf::sweep::SweepOutcome) {
     );
     let mut t = table::Table::new(
         "Pareto frontier (tok/s up, SLO up, GPUs down)",
-        &["rank", "workload", "gpu", "tp", "pp", "rep", "policy", "gpus", "tok/s", "slo", "tok/s/gpu"],
+        &[
+            "rank", "workload", "gpu", "tp", "pp", "rep", "policy", "gpus", "tok/s", "slo",
+            "tok/s/gpu", "$/Mtok",
+        ],
     );
     for (rank, &ri) in out.pareto.frontier.iter().enumerate() {
         let r = &out.rows[ri];
@@ -527,16 +537,67 @@ fn print_frontier(out: &synperf::sweep::SweepOutcome) {
             table::f(m.tokens_per_sec, 0),
             table::pct(m.slo_attainment),
             table::f(m.tokens_per_sec / f64::from(r.gpu_count), 0),
+            table::f(m.usd_per_mtok, 2),
         ]);
     }
     eprint!("{}", t.render());
 }
 
+/// One journaled (or plain) sweep run: replayed rows re-emit without
+/// journaling, fresh rows are fsync'd before the next point can finish
+/// emitting, and a journal write failure fails the run loudly.
+fn run_one_sweep<F>(
+    spec: &synperf::sweep::SweepSpec,
+    shard: synperf::sweep::Shard,
+    journal: Option<&str>,
+    resume: bool,
+    timeout_ms: Option<u64>,
+    threads: usize,
+    factory: &std::sync::Arc<F>,
+) -> std::result::Result<synperf::sweep::SweepOutcome, synperf::sweep::SweepError>
+where
+    F: Fn() -> Simulator + Send + Sync + 'static,
+{
+    use synperf::sweep::{self, wire as sweep_wire, JournalSession, RunOptions};
+    let mut session = match journal {
+        Some(p) => Some(JournalSession::open(std::path::Path::new(p), spec, shard, resume)?),
+        None => None,
+    };
+    let done = session.as_mut().map(|s| std::mem::take(&mut s.done)).unwrap_or_default();
+    let replayed: std::collections::BTreeSet<usize> = done.keys().copied().collect();
+    let opts = RunOptions { threads, shard, point_timeout_ms: timeout_ms, done };
+    let mut io_err = None;
+    let on_row = |row: &sweep::SweepRow| {
+        let line = sweep_wire::encode_row(row);
+        println!("{line}");
+        if io_err.is_none() && !replayed.contains(&row.index) {
+            if let Some(s) = session.as_mut() {
+                if let Err(e) = s.record(&line) {
+                    io_err = Some(e);
+                }
+            }
+        }
+    };
+    let out = match timeout_ms {
+        Some(_) => sweep::run_sweep_deadline(spec, std::sync::Arc::clone(factory), &opts, on_row),
+        None => sweep::run_sweep_with(spec, factory.as_ref(), &opts, on_row),
+    }?;
+    match io_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use synperf::sweep::{run_sweep, wire as sweep_wire};
+    use synperf::sweep::{wire as sweep_wire, Shard};
     // JSONL in (wire envelopes or bare sweep objects), streaming out: one
     // row line per grid point, then one frontier line — the offline twin
     // of the `serve --stdio` sweep verb, which answers in a single line.
+    // `--shard I/N` runs one round-robin slice of the grid (merge the
+    // shards back with `sweep-merge`); `--journal PATH` makes the run
+    // crash-safe (fsync'd JSONL rows, `--resume` to continue after a
+    // crash); `--point-timeout-ms` converts wedged points into typed
+    // timeout rows via the watchdog runner.
     let Some(path) = args.str_opt("spec") else {
         bail!("sweep requires --spec <file|-> (JSONL sweep specs; see rust/README.md)\n{}", usage());
     };
@@ -549,20 +610,63 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         std::fs::read_to_string(path)?
     };
     let threads = threads_of(args)?;
-    let factory = simulator_factory(scale_of(args));
-    for line in text.lines() {
-        if line.trim().is_empty() {
-            continue;
+    let flag_shard = match args.str_opt("shard") {
+        None => None,
+        Some(raw) => {
+            let parsed = raw.split_once('/').and_then(|(i, n)| {
+                Some(Shard::new(i.trim().parse().ok()?, n.trim().parse().ok()?))
+            });
+            let Some(shard) = parsed else {
+                bail!("--shard takes I/N (e.g. --shard 0/3), got {raw:?}");
+            };
+            Some(shard)
         }
-        let (id, spec) = sweep_wire::parse_sweep_line(line);
+    };
+    let flag_journal = args.str_opt("journal");
+    let resume = args.has("resume");
+    let timeout_ms = match args.str_opt("point-timeout-ms") {
+        Some(_) => Some(args.u64_or("point-timeout-ms", 0)?),
+        None => None,
+    };
+    let factory = std::sync::Arc::new(simulator_factory(scale_of(args)));
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    for line in &lines {
+        let (id, req) = sweep_wire::parse_sweep_line(line);
         // spec-level failures (bad JSON, bad axes, unknown GPUs, oversized
-        // grids) answer as one typed error line; infeasible grid points
-        // surface as per-row error rows inside a succeeding sweep instead
-        let res = spec.and_then(|spec| {
-            run_sweep(&spec, &factory, threads, |row| {
-                println!("{}", sweep_wire::encode_row(row));
-            })
-        });
+        // grids, bad shards, unusable journals) answer as one typed error
+        // line; infeasible or constraint-violating grid points surface as
+        // per-row error rows inside a succeeding sweep instead
+        let res = match req {
+            Err(e) => Err(e),
+            Ok(req) => {
+                // CLI flags override wire-envelope fields
+                let shard = flag_shard.unwrap_or(req.shard);
+                let journal = flag_journal.map(str::to_string).or(req.journal);
+                if let Some(jp) = &journal {
+                    if lines.len() > 1 {
+                        bail!(
+                            "--journal binds to exactly one sweep spec line (got {})",
+                            lines.len()
+                        );
+                    }
+                    if !resume && std::path::Path::new(jp).exists() {
+                        bail!(
+                            "journal {jp} already exists; pass --resume to continue it \
+                             (or remove it to start over)"
+                        );
+                    }
+                }
+                run_one_sweep(
+                    &req.spec,
+                    shard,
+                    journal.as_deref(),
+                    resume,
+                    timeout_ms,
+                    threads,
+                    &factory,
+                )
+            }
+        };
         match res {
             Ok(out) => {
                 println!("{}", sweep_wire::encode_frontier(&out.rows, &out.pareto));
@@ -578,11 +682,47 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sweep_merge(args: &Args) -> Result<()> {
+    use synperf::sweep::{self, wire as sweep_wire};
+    // Deterministic shard-journal merge: fingerprints must agree, every
+    // shard must be present exactly once and complete, and the output —
+    // rows by global index, then the recomputed frontier — is
+    // byte-identical to what one unsharded process would have streamed.
+    if args.positional.is_empty() {
+        bail!(
+            "sweep-merge takes the shard journal paths of one campaign:\n\
+             synperf sweep-merge runs/shard0.jsonl runs/shard1.jsonl ... [--json]\n{}",
+            usage()
+        );
+    }
+    let paths: Vec<std::path::PathBuf> =
+        args.positional.iter().map(std::path::PathBuf::from).collect();
+    match sweep::merge(&paths) {
+        Ok(rows) => {
+            for row in &rows {
+                println!("{}", sweep_wire::encode_row(row));
+            }
+            let pareto = sweep::pareto(&rows);
+            println!("{}", sweep_wire::encode_frontier(&rows, &pareto));
+            if !args.has("json") {
+                print_frontier(&sweep::SweepOutcome { rows, pareto });
+            }
+        }
+        Err(e) => {
+            println!("{}", sweep_wire::encode_sweep_response(None, &Err(e)));
+        }
+    }
+    Ok(())
+}
+
 fn cmd_gpus() -> Result<()> {
     use synperf::util::table;
     let mut t = table::Table::new(
         "Hardware registry (Table VI)",
-        &["gpu", "arch", "gen", "split", "SMs", "clk MHz", "Ttops/s", "DRAM GB/s", "ops:byte"],
+        &[
+            "gpu", "arch", "gen", "split", "SMs", "clk MHz", "Ttops/s", "DRAM GB/s", "ops:byte",
+            "$/hr", "TDP W",
+        ],
     );
     let gpus = hw::all_gpus();
     for g in &gpus {
@@ -596,6 +736,8 @@ fn cmd_gpus() -> Result<()> {
             table::f(g.tensor_ops_per_sec() / 1e12, 1),
             table::f(g.dram_bw_gbs, 0),
             table::f(g.compute_mem_ratio(), 1),
+            table::f(g.usd_per_hour, 2),
+            table::f(g.tdp_watts, 0),
         ]);
     }
     t.print();

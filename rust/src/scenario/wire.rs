@@ -660,8 +660,8 @@ fn u64_field(j: &Json, key: &str) -> Result<u64> {
 }
 
 /// Client half of [`error_to_json`] — shared by the v1 and v2 report
-/// parsers.
-fn error_from_json(err: &Json) -> Result<ScenarioError> {
+/// parsers (and the sweep journal's row decoder).
+pub(crate) fn error_from_json(err: &Json) -> Result<ScenarioError> {
     let code = err
         .get("code")
         .and_then(|v| v.as_str())

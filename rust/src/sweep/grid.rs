@@ -20,6 +20,57 @@ pub const MAX_SWEEP_POINTS: usize = 4096;
 /// point and yields typed error rows.
 const MAX_AXIS_DEGREE: u32 = 64;
 
+/// Upper bound on `--shard I/N` shard counts — enough to spread the
+/// lifted `N × MAX_SWEEP_POINTS` cap across a rack of processes without
+/// letting a typo'd count explode the grid budget.
+pub const MAX_SHARD_COUNT: u32 = 64;
+
+/// One process's slice of a sharded sweep: round-robin over the global
+/// row index, so `index % count == index_of_this_shard`. The default
+/// `0/1` is the whole grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub index: u32,
+    pub count: u32,
+}
+
+impl Default for Shard {
+    fn default() -> Self {
+        Shard { index: 0, count: 1 }
+    }
+}
+
+impl Shard {
+    pub fn new(index: u32, count: u32) -> Self {
+        Shard { index, count }
+    }
+
+    /// Validate `index < count`, `1 <= count <= MAX_SHARD_COUNT`.
+    pub fn check(&self) -> Result<(), SweepError> {
+        if self.count == 0 {
+            return Err(SweepError::InvalidAxis("shard count must be >= 1".into()));
+        }
+        if self.count > MAX_SHARD_COUNT {
+            return Err(SweepError::InvalidAxis(format!(
+                "shard count must be <= {MAX_SHARD_COUNT}, got {}",
+                self.count
+            )));
+        }
+        if self.index >= self.count {
+            return Err(SweepError::InvalidAxis(format!(
+                "shard index {} out of range for {} shards",
+                self.index, self.count
+            )));
+        }
+        Ok(())
+    }
+
+    /// Whether a global row index belongs to this shard.
+    pub fn owns(&self, index: usize) -> bool {
+        index % self.count as usize == self.index as usize
+    }
+}
+
 /// One cell of the expanded grid: the workload it evaluates (by spec
 /// index) and the hardware coordinates written over that template.
 #[derive(Debug, Clone, PartialEq)]
@@ -96,10 +147,40 @@ fn policies_for<'a>(spec: &'a SweepSpec, template: &SimulateRequest) -> &'a [Rou
     }
 }
 
+fn check_constraints(spec: &SweepSpec) -> Result<(), SweepError> {
+    if let Some(min) = spec.min_slo_attainment {
+        if !(0.0..=1.0).contains(&min) || !min.is_finite() {
+            return Err(SweepError::InvalidAxis(
+                "\"constraints.min_slo_attainment\" must be in [0, 1]".into(),
+            ));
+        }
+    }
+    if let Some(max) = spec.max_gpus {
+        if max == 0 {
+            return Err(SweepError::InvalidAxis("\"constraints.max_gpus\" must be >= 1".into()));
+        }
+    }
+    if let Some(max) = spec.max_usd_per_hour {
+        if max <= 0.0 || !max.is_finite() {
+            return Err(SweepError::InvalidAxis(
+                "\"constraints.max_usd_per_hour\" must be positive and finite".into(),
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Validate every axis and expand the cross-product. Fails closed before
 /// any evaluation: unknown named GPUs, empty/zero axes, non-finite SLOs
 /// and oversized grids are spec-level [`SweepError`]s.
 pub fn expand(spec: &SweepSpec) -> Result<Vec<SweepPoint>, SweepError> {
+    expand_for(spec, 1)
+}
+
+/// [`expand`] with a sharding-aware cap: an `N`-shard campaign may carry
+/// up to `N × MAX_SWEEP_POINTS` total points, since each process only
+/// evaluates its `1/N` round-robin slice.
+pub fn expand_for(spec: &SweepSpec, shard_count: u32) -> Result<Vec<SweepPoint>, SweepError> {
     let gpus = gpu_names(&spec.gpus)?;
     check_axis("tp", &spec.tp, MAX_AXIS_DEGREE)?;
     check_axis("pp", &spec.pp, MAX_AXIS_DEGREE)?;
@@ -114,15 +195,17 @@ pub fn expand(spec: &SweepSpec) -> Result<Vec<SweepPoint>, SweepError> {
     }
     check_slo("ttft_sec", spec.slo_ttft_sec)?;
     check_slo("tpot_sec", spec.slo_tpot_sec)?;
+    check_constraints(spec)?;
+    let cap = (shard_count.max(1) as usize).saturating_mul(MAX_SWEEP_POINTS);
     let per_point = gpus.len() * spec.tp.len() * spec.pp.len() * spec.replicas.len();
     let total: usize = spec
         .workloads
         .iter()
         .map(|w| per_point.saturating_mul(policies_for(spec, &w.template).len()))
         .fold(0usize, usize::saturating_add);
-    if total > MAX_SWEEP_POINTS {
+    if total > cap {
         return Err(SweepError::GridTooLarge(format!(
-            "{total} points exceed the cap of {MAX_SWEEP_POINTS}"
+            "{total} points exceed the cap of {cap}"
         )));
     }
     let mut points = Vec::with_capacity(total);
@@ -258,6 +341,65 @@ mod tests {
             expand(&v1("w").gpus(GpuFilter::Named(vec![]))).unwrap_err().code(),
             "invalid_axis"
         );
+    }
+
+    #[test]
+    fn shards_partition_the_grid_round_robin() {
+        let points = expand(&v1("w")).unwrap();
+        for count in [2u32, 3] {
+            let mut seen = Vec::new();
+            for index in 0..count {
+                let shard = Shard::new(index, count);
+                shard.check().unwrap();
+                seen.extend(points.iter().map(|p| p.index).filter(|&i| shard.owns(i)));
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, (0..points.len()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn bad_shards_speak_the_taxonomy() {
+        assert_eq!(Shard::new(0, 0).check().unwrap_err().code(), "invalid_axis");
+        assert_eq!(Shard::new(2, 2).check().unwrap_err().code(), "invalid_axis");
+        assert_eq!(
+            Shard::new(0, MAX_SHARD_COUNT + 1).check().unwrap_err().code(),
+            "invalid_axis"
+        );
+        assert_eq!(Shard::default(), Shard::new(0, 1));
+    }
+
+    #[test]
+    fn shard_count_lifts_the_grid_cap() {
+        // 11 GPUs × 8 tp × 8 pp × 8 replicas = 5632: over one shard's
+        // 4096 cap, within a 2-shard campaign's 8192.
+        let spec = v1("w")
+            .tp(vec![1, 2, 3, 4, 5, 6, 7, 8])
+            .pp(vec![1, 2, 3, 4, 5, 6, 7, 8])
+            .replicas(vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(expand(&spec).unwrap_err().code(), "grid_too_large");
+        assert_eq!(expand_for(&spec, 2).unwrap().len(), 5632);
+    }
+
+    #[test]
+    fn invalid_constraints_speak_the_taxonomy() {
+        assert_eq!(
+            expand(&v1("w").min_slo_attainment(1.5)).unwrap_err().code(),
+            "invalid_axis"
+        );
+        assert_eq!(
+            expand(&v1("w").min_slo_attainment(f64::NAN)).unwrap_err().code(),
+            "invalid_axis"
+        );
+        assert_eq!(expand(&v1("w").max_gpus(0)).unwrap_err().code(), "invalid_axis");
+        assert_eq!(expand(&v1("w").max_usd_per_hour(0.0)).unwrap_err().code(), "invalid_axis");
+        assert_eq!(
+            expand(&v1("w").max_usd_per_hour(f64::INFINITY)).unwrap_err().code(),
+            "invalid_axis"
+        );
+        // well-formed constraints expand fine
+        let spec = v1("w").min_slo_attainment(0.9).max_gpus(8).max_usd_per_hour(50.0);
+        assert_eq!(expand(&spec).unwrap().len(), 11);
     }
 
     #[test]

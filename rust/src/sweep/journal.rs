@@ -1,0 +1,489 @@
+//! **Durable sweep journal** — the crash-safety half of the sweep
+//! subsystem. A journal is append-only JSONL: one header line stamping
+//! the spec fingerprint, grid size and shard, then one completed row
+//! line per evaluated point, each fsync'd at line granularity so a
+//! crash loses at most the row being written (a half-written final
+//! line is discarded on replay; every earlier line is durable).
+//!
+//! ```json
+//! {"v":1,"sweep_journal":{"fingerprint":"9a3c…","points":44,"shard_index":0,"shard_count":1}}
+//! {"v":1,"row":{"index":0,…}}
+//! ```
+//!
+//! The fingerprint is a stable FNV-1a 64-bit hash over the canonical
+//! spec encoding ([`wire::sweep_to_json`]) plus the grid shape (total
+//! points, shard count — the shard *index* is excluded so sibling
+//! shards of one campaign share a fingerprint and `sweep-merge` can
+//! verify they belong together). Resuming or merging a journal whose
+//! fingerprint disagrees is a typed [`SweepError::FingerprintMismatch`],
+//! never a silent row-stream corruption.
+
+use super::{expand_for, wire, Shard, SweepError, SweepRow, SweepSpec};
+use crate::api::PROTOCOL_VERSION;
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// The first line of every journal: enough to verify that a journal,
+/// a spec and a shard assignment all describe the same campaign.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalHeader {
+    pub fingerprint: String,
+    /// Total points of the *whole* grid (all shards).
+    pub points: usize,
+    pub shard_index: u32,
+    pub shard_count: u32,
+}
+
+fn io_err(e: std::io::Error) -> SweepError {
+    SweepError::JournalCorrupt(format!("journal i/o error: {e}"))
+}
+
+/// Stable spec identity: FNV-1a 64 over the canonical spec encoding,
+/// the total point count and the shard count, rendered as 16 hex
+/// digits. Deliberately *not* a cryptographic hash — it guards against
+/// operator mix-ups, not adversaries.
+pub fn fingerprint(spec: &SweepSpec, points: usize, shard_count: u32) -> String {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(wire::sweep_to_json(spec).as_bytes());
+    eat(format!(":{points}:{shard_count}").as_bytes());
+    format!("{h:016x}")
+}
+
+/// The header's wire line (no trailing newline).
+pub fn encode_header(h: &JournalHeader) -> String {
+    format!(
+        r#"{{"v":{PROTOCOL_VERSION},"sweep_journal":{{"fingerprint":"{}","points":{},"shard_index":{},"shard_count":{}}}}}"#,
+        h.fingerprint, h.points, h.shard_index, h.shard_count
+    )
+}
+
+fn header_u32(j: &Json, key: &str) -> Result<u32, SweepError> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= f64::from(u32::MAX))
+        .map(|n| n as u32)
+        .ok_or_else(|| {
+            SweepError::JournalCorrupt(format!("header field {key:?} must be an unsigned integer"))
+        })
+}
+
+/// Decode a header line. Any malformation is [`SweepError::JournalCorrupt`].
+pub fn parse_header_line(line: &str) -> Result<JournalHeader, SweepError> {
+    let j = parse(line)
+        .map_err(|e| SweepError::JournalCorrupt(format!("malformed header JSON: {e}")))?;
+    let h = j.get("sweep_journal").ok_or_else(|| {
+        SweepError::JournalCorrupt("first line is not a \"sweep_journal\" header".into())
+    })?;
+    let fingerprint = h
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| SweepError::JournalCorrupt("header needs a \"fingerprint\"".into()))?
+        .to_string();
+    let header = JournalHeader {
+        fingerprint,
+        points: header_u32(h, "points")? as usize,
+        shard_index: header_u32(h, "shard_index")?,
+        shard_count: header_u32(h, "shard_count")?,
+    };
+    let shard = Shard::new(header.shard_index, header.shard_count);
+    shard.check().map_err(|e| SweepError::JournalCorrupt(format!("header shard: {e}")))?;
+    Ok(header)
+}
+
+/// Read a whole journal: header plus every durable row, keyed by global
+/// index (a re-run of the same point keeps the last write). A corrupt
+/// *final* line is a crash artifact and is silently discarded; a corrupt
+/// line anywhere else — and any row outside the header's shard or grid —
+/// is typed [`SweepError::JournalCorrupt`].
+pub fn read_journal(path: &Path) -> Result<(JournalHeader, BTreeMap<usize, SweepRow>), SweepError> {
+    let mut text = String::new();
+    File::open(path).and_then(|mut f| f.read_to_string(&mut text)).map_err(io_err)?;
+    let lines: Vec<&str> = text.lines().collect();
+    let Some((first, rest)) = lines.split_first() else {
+        return Err(SweepError::JournalCorrupt(format!(
+            "journal {} is empty (no header)",
+            path.display()
+        )));
+    };
+    let header = parse_header_line(first)?;
+    let shard = Shard::new(header.shard_index, header.shard_count);
+    let mut done = BTreeMap::new();
+    for (i, line) in rest.iter().enumerate() {
+        match wire::parse_row(line) {
+            Ok(row) => {
+                if row.index >= header.points || !shard.owns(row.index) {
+                    return Err(SweepError::JournalCorrupt(format!(
+                        "row index {} does not belong to shard {}/{} of a {}-point grid",
+                        row.index, header.shard_index, header.shard_count, header.points
+                    )));
+                }
+                done.insert(row.index, row);
+            }
+            Err(why) => {
+                // only a final line the crash cut short — no trailing
+                // newline — is a discardable artifact; a fully written
+                // garbage line anywhere is corruption
+                if i + 1 == rest.len() && !text.ends_with('\n') {
+                    break;
+                }
+                return Err(SweepError::JournalCorrupt(format!("line {}: {why}", i + 2)));
+            }
+        }
+    }
+    Ok((header, done))
+}
+
+/// Append half of an open journal: line-granular durable writes.
+#[derive(Debug)]
+pub struct JournalWriter {
+    file: File,
+}
+
+impl JournalWriter {
+    fn append(&mut self, line: &str) -> Result<(), SweepError> {
+        self.file.write_all(line.as_bytes()).map_err(io_err)?;
+        self.file.write_all(b"\n").map_err(io_err)?;
+        self.file.sync_data().map_err(io_err)
+    }
+}
+
+/// An open journal bound to one sweep run: the rows already durable
+/// (replayed on resume) and the writer new rows go through.
+#[derive(Debug)]
+pub struct JournalSession {
+    writer: JournalWriter,
+    /// Rows already completed by a previous run of this shard.
+    pub done: BTreeMap<usize, SweepRow>,
+}
+
+impl JournalSession {
+    /// Open a journal for a run of `spec` on `shard`. With `resume`, an
+    /// existing file is replayed (fingerprint and shard must match —
+    /// [`SweepError::FingerprintMismatch`] otherwise) and appended to; a
+    /// missing file starts fresh either way. Without `resume`, the file
+    /// must not already exist — the caller decides clobber policy.
+    pub fn open(
+        path: &Path,
+        spec: &SweepSpec,
+        shard: Shard,
+        resume: bool,
+    ) -> Result<JournalSession, SweepError> {
+        shard.check()?;
+        let points = expand_for(spec, shard.count)?.len();
+        let fp = fingerprint(spec, points, shard.count);
+        if resume && path.exists() {
+            let (header, done) = read_journal(path)?;
+            if header.fingerprint != fp
+                || header.points != points
+                || header.shard_index != shard.index
+                || header.shard_count != shard.count
+            {
+                return Err(SweepError::FingerprintMismatch(format!(
+                    "journal {} was written for fingerprint {} shard {}/{} ({} points); \
+                     this run is fingerprint {fp} shard {}/{} ({points} points)",
+                    path.display(),
+                    header.fingerprint,
+                    header.shard_index,
+                    header.shard_count,
+                    header.points,
+                    shard.index,
+                    shard.count,
+                )));
+            }
+            let file = OpenOptions::new().append(true).open(path).map_err(io_err)?;
+            // a crash can leave a half-written final line (discarded by
+            // the replay above, but still on disk); chop it off so the
+            // next appended row starts on a fresh line instead of
+            // concatenating onto the partial tail
+            let bytes = std::fs::read(path).map_err(io_err)?;
+            if !bytes.ends_with(b"\n") {
+                let keep = bytes.iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1);
+                file.set_len(keep as u64).map_err(io_err)?;
+            }
+            return Ok(JournalSession { writer: JournalWriter { file }, done });
+        }
+        let file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .map_err(io_err)?;
+        let mut writer = JournalWriter { file };
+        let header = JournalHeader {
+            fingerprint: fp,
+            points,
+            shard_index: shard.index,
+            shard_count: shard.count,
+        };
+        writer.append(&encode_header(&header))?;
+        Ok(JournalSession { writer, done: BTreeMap::new() })
+    }
+
+    /// Durably record one completed row line (the exact bytes
+    /// [`wire::encode_row`] streamed).
+    pub fn record(&mut self, line: &str) -> Result<(), SweepError> {
+        self.writer.append(line)
+    }
+}
+
+/// Deterministically merge the journals of one sharded campaign into the
+/// full row stream, sorted by global index — exactly what a one-process
+/// run would have emitted. Typed failures, never silent: disagreeing
+/// headers are [`SweepError::FingerprintMismatch`], a shard claimed
+/// twice is [`SweepError::MergeConflict`], and missing shards or rows a
+/// shard never finished are [`SweepError::MergeIncomplete`].
+pub fn merge(paths: &[std::path::PathBuf]) -> Result<Vec<SweepRow>, SweepError> {
+    let mut first: Option<JournalHeader> = None;
+    let mut seen: BTreeMap<u32, String> = BTreeMap::new();
+    let mut rows: BTreeMap<usize, SweepRow> = BTreeMap::new();
+    for path in paths {
+        let (h, done) = read_journal(path)?;
+        match &first {
+            None => first = Some(h.clone()),
+            Some(f) => {
+                if h.fingerprint != f.fingerprint
+                    || h.points != f.points
+                    || h.shard_count != f.shard_count
+                {
+                    return Err(SweepError::FingerprintMismatch(format!(
+                        "journal {} is fingerprint {} ({} points, {} shards); \
+                         expected fingerprint {} ({} points, {} shards)",
+                        path.display(),
+                        h.fingerprint,
+                        h.points,
+                        h.shard_count,
+                        f.fingerprint,
+                        f.points,
+                        f.shard_count
+                    )));
+                }
+            }
+        }
+        if let Some(other) = seen.insert(h.shard_index, path.display().to_string()) {
+            return Err(SweepError::MergeConflict(format!(
+                "shard {}/{} appears in both {} and {}",
+                h.shard_index,
+                h.shard_count,
+                other,
+                path.display()
+            )));
+        }
+        let shard = Shard::new(h.shard_index, h.shard_count);
+        let expected = (0..h.points).filter(|&i| shard.owns(i)).count();
+        if done.len() != expected {
+            return Err(SweepError::MergeIncomplete(format!(
+                "journal {} holds {} of the {} rows of shard {}/{}",
+                path.display(),
+                done.len(),
+                expected,
+                h.shard_index,
+                h.shard_count
+            )));
+        }
+        rows.extend(done);
+    }
+    let Some(f) = first else {
+        return Err(SweepError::MergeIncomplete("no journals to merge".into()));
+    };
+    if seen.len() != f.shard_count as usize {
+        let missing: Vec<String> = (0..f.shard_count)
+            .filter(|i| !seen.contains_key(i))
+            .map(|i| i.to_string())
+            .collect();
+        return Err(SweepError::MergeIncomplete(format!(
+            "missing shard(s) {} of {}",
+            missing.join(", "),
+            f.shard_count
+        )));
+    }
+    Ok(rows.into_values().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ScenarioSpec;
+    use crate::sweep::{GpuFilter, SweepMetrics};
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn spec() -> SweepSpec {
+        SweepSpec::new()
+            .gpus(GpuFilter::Named(vec!["A100".into(), "H800".into()]))
+            .tp(vec![1, 2])
+            .scenario("w", ScenarioSpec::new("llama3.1-8b", ""))
+    }
+
+    fn row(index: usize) -> SweepRow {
+        SweepRow {
+            index,
+            workload: "w".into(),
+            gpu: "A100".into(),
+            tp: 1,
+            pp: 1,
+            replicas: 1,
+            policy: crate::scenario::RoutePolicy::RoundRobin,
+            gpu_count: 1,
+            outcome: Ok(SweepMetrics {
+                tokens_per_sec: 1024.0,
+                slo_attainment: 1.0,
+                ttft_sec: 0.25,
+                tpot_sec: 0.125,
+                cluster: false,
+                usd_per_hour: 1.9,
+                usd_per_mtok: 0.515,
+            }),
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("synperf_journal_{name}.jsonl"));
+        let _ = fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_shard_index_free() {
+        let fp = fingerprint(&spec(), 4, 3);
+        assert_eq!(fp.len(), 16, "{fp}");
+        assert_eq!(fp, fingerprint(&spec(), 4, 3), "deterministic");
+        // a different spec, point count or shard count changes it
+        assert_ne!(fp, fingerprint(&spec().tp(vec![1]), 4, 3));
+        assert_ne!(fp, fingerprint(&spec(), 5, 3));
+        assert_ne!(fp, fingerprint(&spec(), 4, 2));
+    }
+
+    #[test]
+    fn headers_round_trip_and_reject_garbage() {
+        let h = JournalHeader {
+            fingerprint: fingerprint(&spec(), 4, 2),
+            points: 4,
+            shard_index: 1,
+            shard_count: 2,
+        };
+        assert_eq!(parse_header_line(&encode_header(&h)).unwrap(), h);
+        for bad in [
+            "not json",
+            r#"{"v":1,"row":{}}"#,
+            r#"{"v":1,"sweep_journal":{"points":4,"shard_index":0,"shard_count":1}}"#,
+            r#"{"v":1,"sweep_journal":{"fingerprint":"x","points":4,"shard_index":2,"shard_count":1}}"#,
+        ] {
+            assert_eq!(parse_header_line(bad).unwrap_err().code(), "journal_corrupt", "{bad}");
+        }
+    }
+
+    #[test]
+    fn sessions_persist_rows_and_resume_them() {
+        let path = tmp("resume");
+        let mut s = JournalSession::open(&path, &spec(), Shard::default(), false).unwrap();
+        assert!(s.done.is_empty());
+        s.record(&wire::encode_row(&row(0))).unwrap();
+        s.record(&wire::encode_row(&row(2))).unwrap();
+        drop(s);
+        let s = JournalSession::open(&path, &spec(), Shard::default(), true).unwrap();
+        assert_eq!(s.done.keys().copied().collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(s.done[&0], row(0));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_final_lines_are_discarded_but_interior_corruption_is_typed() {
+        let path = tmp("trunc");
+        let mut s = JournalSession::open(&path, &spec(), Shard::default(), false).unwrap();
+        s.record(&wire::encode_row(&row(0))).unwrap();
+        s.record(&wire::encode_row(&row(1))).unwrap();
+        drop(s);
+        // chop the last line mid-way: the row survives only up to index 0
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, &text[..text.len() - 20]).unwrap();
+        let (_, done) = read_journal(&path).unwrap();
+        assert_eq!(done.keys().copied().collect::<Vec<_>>(), vec![0]);
+        // resuming truncates the partial tail before appending, so a
+        // fresh row lands on its own line rather than concatenating
+        let mut s = JournalSession::open(&path, &spec(), Shard::default(), true).unwrap();
+        s.record(&wire::encode_row(&row(1))).unwrap();
+        drop(s);
+        let (_, done) = read_journal(&path).unwrap();
+        assert_eq!(done.keys().copied().collect::<Vec<_>>(), vec![0, 1]);
+        let text = fs::read_to_string(&path).unwrap();
+        // corrupt an interior line → typed error
+        let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+        lines[1] = "{\"v\":1,\"row\":garbage".into();
+        fs::write(&path, format!("{}\n", lines.join("\n"))).unwrap();
+        assert_eq!(read_journal(&path).unwrap_err().code(), "journal_corrupt");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mismatched_specs_cannot_resume_each_others_journals() {
+        let path = tmp("mismatch");
+        let mut s = JournalSession::open(&path, &spec(), Shard::default(), false).unwrap();
+        s.record(&wire::encode_row(&row(0))).unwrap();
+        drop(s);
+        let other = spec().tp(vec![1]);
+        let err = JournalSession::open(&path, &other, Shard::default(), true).unwrap_err();
+        assert_eq!(err.code(), "fingerprint_mismatch");
+        // same spec, different shard → also refused
+        let err = JournalSession::open(&path, &spec(), Shard::new(0, 2), true).unwrap_err();
+        assert_eq!(err.code(), "fingerprint_mismatch");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn merge_unions_complete_shards_and_types_every_failure() {
+        let s = spec();
+        let p0 = tmp("merge0");
+        let p1 = tmp("merge1");
+        let mut j0 = JournalSession::open(&p0, &s, Shard::new(0, 2), false).unwrap();
+        j0.record(&wire::encode_row(&row(0))).unwrap();
+        let mut j1 = JournalSession::open(&p1, &s, Shard::new(1, 2), false).unwrap();
+        j1.record(&wire::encode_row(&row(1))).unwrap();
+        j1.record(&wire::encode_row(&row(3))).unwrap();
+        drop(j1);
+        // shard 0 hasn't finished row 2 yet → incomplete
+        let err = merge(&[p0.clone(), p1.clone()]).unwrap_err();
+        assert_eq!(err.code(), "merge_incomplete", "{err}");
+        j0.record(&wire::encode_row(&row(2))).unwrap();
+        drop(j0);
+        // order of arguments never matters: rows come back by global index
+        let rows = merge(&[p1.clone(), p0.clone()]).unwrap();
+        assert_eq!(rows.iter().map(|r| r.index).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        // a shard absent entirely → incomplete; the same shard twice → conflict
+        assert_eq!(merge(&[p0.clone()]).unwrap_err().code(), "merge_incomplete");
+        assert_eq!(merge(&[p0.clone(), p0.clone()]).unwrap_err().code(), "merge_conflict");
+        // a journal from a different campaign can never sneak in
+        let px = tmp("merge_other");
+        drop(JournalSession::open(&px, &spec().tp(vec![1]), Shard::default(), false).unwrap());
+        assert_eq!(
+            merge(&[p0.clone(), px.clone()]).unwrap_err().code(),
+            "fingerprint_mismatch"
+        );
+        for p in [p0, p1, px] {
+            let _ = fs::remove_file(&p);
+        }
+    }
+
+    #[test]
+    fn rows_outside_the_shard_or_grid_are_corruption() {
+        let path = tmp("foreign");
+        let mut s = JournalSession::open(&path, &spec(), Shard::new(0, 2), false).unwrap();
+        // index 1 belongs to shard 1/2, not 0/2
+        s.record(&wire::encode_row(&row(1))).unwrap();
+        // a later valid line keeps it from being "the truncated tail"
+        s.record(&wire::encode_row(&row(2))).unwrap();
+        drop(s);
+        assert_eq!(read_journal(&path).unwrap_err().code(), "journal_corrupt");
+        let _ = fs::remove_file(&path);
+    }
+}

@@ -25,13 +25,18 @@
 //! wire ([`wire`]).
 
 pub mod grid;
+pub mod journal;
 pub mod pareto;
 pub mod runner;
 pub mod wire;
 
-pub use grid::{expand, SweepPoint, MAX_SWEEP_POINTS};
+pub use grid::{expand, expand_for, Shard, SweepPoint, MAX_SHARD_COUNT, MAX_SWEEP_POINTS};
+pub use journal::{fingerprint, merge, JournalHeader, JournalSession};
 pub use pareto::{pareto, Pareto, DOMINATED_BY_CAP};
-pub use runner::{point_request, run_sweep};
+pub use runner::{
+    point_request, run_request, run_sweep, run_sweep_deadline, run_sweep_with, RunOptions,
+};
+pub use wire::SweepRequest;
 
 use crate::scenario::wire::SimulateRequest;
 use crate::scenario::{
@@ -77,6 +82,15 @@ pub struct SweepSpec {
     /// attainment is comparable across the whole grid.
     pub slo_ttft_sec: f64,
     pub slo_tpot_sec: f64,
+    /// Hard procurement constraint: rows below this SLO attainment become
+    /// typed `constraint_violated` rows (never silent drops).
+    pub min_slo_attainment: Option<f64>,
+    /// Hard constraint on the row's GPU count (replicas × tp × pp);
+    /// violating points are not even simulated.
+    pub max_gpus: Option<u32>,
+    /// Hard budget constraint on the row's fleet rental rate (GPU count ×
+    /// per-GPU `usd_per_hour`); violating points are not even simulated.
+    pub max_usd_per_hour: Option<f64>,
     pub workloads: Vec<SweepWorkload>,
 }
 
@@ -90,6 +104,9 @@ impl SweepSpec {
             policies: vec![RoutePolicy::RoundRobin],
             slo_ttft_sec: 2.0,
             slo_tpot_sec: 0.2,
+            min_slo_attainment: None,
+            max_gpus: None,
+            max_usd_per_hour: None,
             workloads: Vec::new(),
         }
     }
@@ -122,6 +139,24 @@ impl SweepSpec {
     pub fn slo(mut self, ttft_sec: f64, tpot_sec: f64) -> Self {
         self.slo_ttft_sec = ttft_sec;
         self.slo_tpot_sec = tpot_sec;
+        self
+    }
+
+    /// Require at least this SLO attainment (0..=1) per row.
+    pub fn min_slo_attainment(mut self, min: f64) -> Self {
+        self.min_slo_attainment = Some(min);
+        self
+    }
+
+    /// Cap the per-row GPU count (replicas × tp × pp).
+    pub fn max_gpus(mut self, max: u32) -> Self {
+        self.max_gpus = Some(max);
+        self
+    }
+
+    /// Cap the per-row fleet rental rate in USD per hour.
+    pub fn max_usd_per_hour(mut self, max: f64) -> Self {
+        self.max_usd_per_hour = Some(max);
         self
     }
 
@@ -159,6 +194,18 @@ pub enum SweepError {
     MalformedSpec(String),
     /// A workload template is invalid before any point is evaluated.
     InvalidWorkload(String),
+    /// A journal file is unreadable, has a bad header, or contains a
+    /// non-final malformed line (only the *final* line may be truncated
+    /// by a crash — that one is silently discarded on resume).
+    JournalCorrupt(String),
+    /// A journal was written by a different spec / grid shape / shard
+    /// count — resuming or merging it would corrupt the row stream.
+    FingerprintMismatch(String),
+    /// Two merge inputs claim the same shard.
+    MergeConflict(String),
+    /// The merge inputs do not cover the full grid (missing shards or
+    /// rows a shard never finished).
+    MergeIncomplete(String),
 }
 
 impl SweepError {
@@ -170,6 +217,10 @@ impl SweepError {
             SweepError::GridTooLarge(_) => "grid_too_large",
             SweepError::MalformedSpec(_) => "malformed_spec",
             SweepError::InvalidWorkload(_) => "invalid_workload",
+            SweepError::JournalCorrupt(_) => "journal_corrupt",
+            SweepError::FingerprintMismatch(_) => "fingerprint_mismatch",
+            SweepError::MergeConflict(_) => "merge_conflict",
+            SweepError::MergeIncomplete(_) => "merge_incomplete",
         }
     }
 }
@@ -188,11 +239,63 @@ impl fmt::Display for SweepError {
             SweepError::GridTooLarge(why) => write!(f, "sweep grid too large: {why}"),
             SweepError::MalformedSpec(why) => write!(f, "malformed sweep spec: {why}"),
             SweepError::InvalidWorkload(why) => write!(f, "invalid sweep workload: {why}"),
+            SweepError::JournalCorrupt(why) => write!(f, "sweep journal corrupt: {why}"),
+            SweepError::FingerprintMismatch(why) => {
+                write!(f, "sweep journal fingerprint mismatch: {why}")
+            }
+            SweepError::MergeConflict(why) => write!(f, "sweep merge conflict: {why}"),
+            SweepError::MergeIncomplete(why) => write!(f, "sweep merge incomplete: {why}"),
         }
     }
 }
 
 impl std::error::Error for SweepError {}
+
+/// Per-row failure taxonomy: the scenario errors a point can hit plus
+/// the containment outcomes the runner synthesizes. Rows carry these —
+/// they never abort the sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RowError {
+    /// The workload evaluation failed with a typed scenario error.
+    Scenario(ScenarioError),
+    /// The point's evaluation panicked; `catch_unwind` contained it.
+    Internal(String),
+    /// The point exceeded `--point-timeout-ms` and was abandoned.
+    Timeout(String),
+    /// A `SweepSpec` hard constraint filtered this point.
+    ConstraintViolated(String),
+}
+
+impl RowError {
+    /// Stable machine-readable code (the row `error.code` on the wire).
+    pub fn code(&self) -> &'static str {
+        match self {
+            RowError::Scenario(e) => e.code(),
+            RowError::Internal(_) => "internal",
+            RowError::Timeout(_) => "timeout",
+            RowError::ConstraintViolated(_) => "constraint_violated",
+        }
+    }
+}
+
+impl fmt::Display for RowError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RowError::Scenario(e) => e.fmt(f),
+            RowError::Internal(why) => write!(f, "internal sweep error: {why}"),
+            RowError::Timeout(why) => write!(f, "sweep point timed out: {why}"),
+            RowError::ConstraintViolated(why) => write!(f, "constraint violated: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for RowError {}
+
+impl From<ScenarioError> for RowError {
+    fn from(e: ScenarioError) -> Self {
+        RowError::Scenario(e)
+    }
+}
 
 /// The comparable metrics every grid point collapses to — the three
 /// Pareto objectives plus the latency headline behind the attainment.
@@ -206,6 +309,25 @@ pub struct SweepMetrics {
     pub tpot_sec: f64,
     /// Whether the row came from a v2 cluster simulation.
     pub cluster: bool,
+    /// Fleet rental rate: GPU count × the registry's per-GPU rate.
+    pub usd_per_hour: f64,
+    /// Cost objective: `$ / 1M output tokens` at this row's throughput
+    /// (0.0 when the row produced no tokens — never `inf` on the wire).
+    pub usd_per_mtok: f64,
+}
+
+impl SweepMetrics {
+    /// Stamp the cost columns from the registry: `usd_per_hour` from the
+    /// GPU's rental rate × count, `usd_per_mtok` from that rate over the
+    /// row's token throughput.
+    pub fn apply_cost(&mut self, gpu: &crate::hw::GpuSpec, gpu_count: u32) {
+        self.usd_per_hour = gpu.usd_per_hour * f64::from(gpu_count);
+        self.usd_per_mtok = if self.tokens_per_sec > 0.0 {
+            self.usd_per_hour / (self.tokens_per_sec * 3600.0 / 1.0e6)
+        } else {
+            0.0
+        };
+    }
 }
 
 /// One streamed result row: the point's coordinates plus either its
@@ -221,7 +343,7 @@ pub struct SweepRow {
     pub policy: RoutePolicy,
     /// replicas × tp × pp — the Pareto cost objective.
     pub gpu_count: u32,
-    pub outcome: Result<SweepMetrics, ScenarioError>,
+    pub outcome: Result<SweepMetrics, RowError>,
 }
 
 /// Everything a finished sweep yields: the rows (in index order) and the
@@ -264,6 +386,8 @@ pub fn scenario_metrics(
         ttft_sec,
         tpot_sec,
         cluster: false,
+        usd_per_hour: 0.0,
+        usd_per_mtok: 0.0,
     }
 }
 
@@ -276,5 +400,7 @@ pub fn cluster_metrics(r: &ClusterReport) -> SweepMetrics {
         ttft_sec: r.ttft.p95_sec,
         tpot_sec: r.tpot.p95_sec,
         cluster: true,
+        usd_per_hour: 0.0,
+        usd_per_mtok: 0.0,
     }
 }

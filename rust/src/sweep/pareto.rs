@@ -101,13 +101,15 @@ mod tests {
                 ttft_sec: 0.1,
                 tpot_sec: 0.01,
                 cluster: false,
+                usd_per_hour: 1.9 * f64::from(gpus),
+                usd_per_mtok: 0.5,
             }),
         }
     }
 
     fn err_row(index: usize) -> SweepRow {
         let mut r = row(index, 0.0, 0.0, 1);
-        r.outcome = Err(ScenarioError::InvalidParallelism("tp".into()));
+        r.outcome = Err(ScenarioError::InvalidParallelism("tp".into()).into());
         r
     }
 

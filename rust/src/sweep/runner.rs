@@ -5,15 +5,78 @@
 //! strict index order regardless of scheduling. Rows are streamed through
 //! the `on_row` callback as soon as their turn comes, so a caller can
 //! print JSONL incrementally while the grid is still running.
+//!
+//! Crash safety rides on top of the same machinery: [`RunOptions`]
+//! carries the process's [`Shard`] (only owned indices are evaluated),
+//! the rows a journal already holds (re-emitted verbatim, never
+//! recomputed), and an optional per-point deadline. A panicking point is
+//! contained by `catch_unwind` into a typed `internal` error row — the
+//! worker rebuilds its simulator and keeps going — and the deadline path
+//! ([`run_sweep_deadline`]) runs detached workers under a watchdog that
+//! converts a wedged evaluation into a typed `timeout` row while the
+//! rest of the grid proceeds.
 
-use super::grid::{expand, SweepPoint};
+use super::grid::{expand_for, Shard, SweepPoint};
+use super::journal::JournalSession;
 use super::pareto::pareto;
-use super::{cluster_metrics, scenario_metrics, SweepError, SweepOutcome, SweepRow, SweepSpec};
+use super::wire::{self, SweepRequest};
+use super::{
+    cluster_metrics, scenario_metrics, RowError, SweepError, SweepOutcome, SweepRow, SweepSpec,
+};
 use crate::scenario::wire::SimulateRequest;
 use crate::scenario::Simulator;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::sync_channel;
+use std::sync::mpsc::{channel, sync_channel, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Everything beyond the spec that shapes one run: worker budget, the
+/// shard this process owns, an optional per-point deadline (honored by
+/// [`run_sweep_deadline`] only — the scoped runner cannot abandon a
+/// wedged scoped thread), and rows already durable in a journal.
+#[derive(Debug, Default)]
+pub struct RunOptions {
+    /// Worker budget; a single worker evaluates serially and hands the
+    /// full thread budget to the inner evaluators instead.
+    pub threads: usize,
+    pub shard: Shard,
+    pub point_timeout_ms: Option<u64>,
+    /// Rows replayed from a journal: re-emitted byte-identically (after
+    /// re-encoding) and never recomputed.
+    pub done: BTreeMap<usize, SweepRow>,
+}
+
+impl RunOptions {
+    pub fn threads(threads: usize) -> Self {
+        RunOptions { threads, ..Default::default() }
+    }
+}
+
+/// Test-only failure injection, read once per run from the environment:
+/// `SYNPERF_SWEEP_PANIC_INDEX=N` panics while evaluating global index N
+/// (exercising `catch_unwind` containment); `SYNPERF_SWEEP_STALL_MS=N:MS`
+/// wedges index N for MS milliseconds (exercising the watchdog). Only
+/// spawned-process integration tests and example scripts set these — the
+/// environment is process-global.
+#[derive(Debug, Clone, Copy, Default)]
+struct TestHooks {
+    panic_index: Option<usize>,
+    stall: Option<(usize, u64)>,
+}
+
+impl TestHooks {
+    fn from_env() -> Self {
+        let panic_index =
+            std::env::var("SYNPERF_SWEEP_PANIC_INDEX").ok().and_then(|v| v.parse().ok());
+        let stall = std::env::var("SYNPERF_SWEEP_STALL_MS").ok().and_then(|v| {
+            let (idx, ms) = v.split_once(':')?;
+            Some((idx.parse().ok()?, ms.parse().ok()?))
+        });
+        TestHooks { panic_index, stall }
+    }
+}
 
 /// Materialize the simulate request for one grid point: the workload
 /// template with the point's hardware coordinates written over it. For
@@ -42,17 +105,9 @@ pub fn point_request(spec: &SweepSpec, point: &SweepPoint) -> SimulateRequest {
     }
 }
 
-/// Evaluate one point into its row. Never fails: infeasible configs
-/// carry their typed [`crate::scenario::ScenarioError`] in the outcome.
-fn eval_point(sim: &Simulator, spec: &SweepSpec, point: &SweepPoint, threads: usize) -> SweepRow {
-    let outcome = match point_request(spec, point) {
-        SimulateRequest::Scenario(s) => sim
-            .simulate_with_threads(&s, threads)
-            .map(|r| scenario_metrics(spec.slo_ttft_sec, spec.slo_tpot_sec, point.replicas, &r)),
-        SimulateRequest::Cluster(c) => {
-            sim.simulate_cluster_with_threads(&c, threads).map(|r| cluster_metrics(&r))
-        }
-    };
+/// A point's row skeleton — shared by real evaluation and the rows the
+/// containment paths synthesize (panic, timeout, constraint).
+fn point_row(spec: &SweepSpec, point: &SweepPoint, outcome: Result<super::SweepMetrics, RowError>) -> SweepRow {
     SweepRow {
         index: point.index,
         workload: spec.workloads[point.workload].name.clone(),
@@ -66,54 +121,191 @@ fn eval_point(sim: &Simulator, spec: &SweepSpec, point: &SweepPoint, threads: us
     }
 }
 
-/// Run the whole sweep. `factory` builds one [`Simulator`] per worker
-/// ([`Simulator`] is not `Send`, and per-worker construction is exactly
-/// what keeps the comm-model cache hot); `threads` bounds the worker
-/// count (a single worker evaluates serially and hands the full thread
-/// budget to the inner evaluators instead — rows are byte-identical
-/// either way, which is the repo-wide `--threads` invariant). `on_row`
-/// fires once per row, in index order, as soon as the row's turn
-/// completes.
+/// Evaluate one point into its row. Never fails: infeasible configs
+/// carry their typed error in the outcome. Hard constraints are checked
+/// before the simulation where possible (GPU count, budget — the point
+/// is not even evaluated) and after it otherwise (SLO attainment), both
+/// yielding typed `constraint_violated` rows.
+fn eval_point(sim: &Simulator, spec: &SweepSpec, point: &SweepPoint, threads: usize) -> SweepRow {
+    let gpu_count = point.replicas * point.tp * point.pp;
+    if let Some(max) = spec.max_gpus {
+        if gpu_count > max {
+            return point_row(
+                spec,
+                point,
+                Err(RowError::ConstraintViolated(format!("gpu_count {gpu_count} > max_gpus {max}"))),
+            );
+        }
+    }
+    let gpu = crate::hw::gpu_by_name(&point.gpu);
+    if let (Some(max), Some(g)) = (spec.max_usd_per_hour, gpu.as_ref()) {
+        let rate = g.usd_per_hour * f64::from(gpu_count);
+        if rate > max {
+            return point_row(
+                spec,
+                point,
+                Err(RowError::ConstraintViolated(format!(
+                    "usd_per_hour {rate} > max_usd_per_hour {max}"
+                ))),
+            );
+        }
+    }
+    let outcome = match point_request(spec, point) {
+        SimulateRequest::Scenario(s) => sim
+            .simulate_with_threads(&s, threads)
+            .map(|r| scenario_metrics(spec.slo_ttft_sec, spec.slo_tpot_sec, point.replicas, &r)),
+        SimulateRequest::Cluster(c) => {
+            sim.simulate_cluster_with_threads(&c, threads).map(|r| cluster_metrics(&r))
+        }
+    };
+    let outcome = outcome.map_err(RowError::from).and_then(|mut m| {
+        if let Some(g) = gpu.as_ref() {
+            m.apply_cost(g, gpu_count);
+        }
+        if let Some(min) = spec.min_slo_attainment {
+            if m.slo_attainment < min {
+                return Err(RowError::ConstraintViolated(format!(
+                    "slo_attainment {} < min_slo_attainment {min}",
+                    m.slo_attainment
+                )));
+            }
+        }
+        Ok(m)
+    });
+    point_row(spec, point, outcome)
+}
+
+/// [`eval_point`] under `catch_unwind`: a panicking point becomes a typed
+/// `internal` error row and the worker's simulator is rebuilt (the panic
+/// may have poisoned its internal state mid-update).
+fn eval_contained(
+    sim: &mut Simulator,
+    factory: impl Fn() -> Simulator,
+    spec: &SweepSpec,
+    point: &SweepPoint,
+    threads: usize,
+    hooks: &TestHooks,
+) -> SweepRow {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        if hooks.panic_index == Some(point.index) {
+            panic!("test hook: injected panic at index {}", point.index);
+        }
+        if let Some((idx, ms)) = hooks.stall {
+            if idx == point.index {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        eval_point(sim, spec, point, threads)
+    }));
+    match result {
+        Ok(row) => row,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("panic");
+            *sim = factory();
+            point_row(
+                spec,
+                point,
+                Err(RowError::Internal(format!("sweep point evaluation panicked: {msg}"))),
+            )
+        }
+    }
+}
+
+/// Run the whole sweep with default options. `factory` builds one
+/// [`Simulator`] per worker ([`Simulator`] is not `Send`, and per-worker
+/// construction is exactly what keeps the comm-model cache hot);
+/// `threads` bounds the worker count — rows are byte-identical at any
+/// count, which is the repo-wide `--threads` invariant. `on_row` fires
+/// once per row, in index order, as soon as the row's turn completes.
 pub fn run_sweep<F, G>(
     spec: &SweepSpec,
     factory: F,
     threads: usize,
+    on_row: G,
+) -> Result<SweepOutcome, SweepError>
+where
+    F: Fn() -> Simulator + Sync,
+    G: FnMut(&SweepRow),
+{
+    run_sweep_with(spec, &factory, &RunOptions::threads(threads), on_row)
+}
+
+/// The scoped runner: shard filtering, journal replay and panic
+/// containment over borrowed state. Ignores `point_timeout_ms` — a
+/// scoped thread cannot be abandoned, so the watchdog lives in
+/// [`run_sweep_deadline`].
+pub fn run_sweep_with<F, G>(
+    spec: &SweepSpec,
+    factory: &F,
+    opts: &RunOptions,
     mut on_row: G,
 ) -> Result<SweepOutcome, SweepError>
 where
     F: Fn() -> Simulator + Sync,
     G: FnMut(&SweepRow),
 {
-    let points = expand(spec)?;
-    let threads = threads.max(1);
-    let workers = threads.min(points.len()).max(1);
-    let mut rows: Vec<SweepRow> = Vec::with_capacity(points.len());
-    if workers <= 1 {
-        let sim = factory();
-        for point in &points {
-            let row = eval_point(&sim, spec, point, threads);
+    opts.shard.check()?;
+    let points = expand_for(spec, opts.shard.count)?;
+    let hooks = TestHooks::from_env();
+    // the emission sequence: every owned index, done rows included
+    let seq: Vec<usize> =
+        points.iter().map(|p| p.index).filter(|&i| opts.shard.owns(i)).collect();
+    let todo: Vec<usize> = seq.iter().copied().filter(|i| !opts.done.contains_key(i)).collect();
+    let threads = opts.threads.max(1);
+    let workers = if todo.is_empty() { 1 } else { threads.min(todo.len()) };
+    let mut rows: Vec<SweepRow> = Vec::with_capacity(seq.len());
+    let mut emit = |pending: &mut BTreeMap<usize, SweepRow>,
+                    next_emit: &mut usize,
+                    rows: &mut Vec<SweepRow>| {
+        while *next_emit < seq.len() {
+            let Some(row) = pending.remove(&seq[*next_emit]) else { break };
             on_row(&row);
             rows.push(row);
+            *next_emit += 1;
+        }
+    };
+    let mut pending: BTreeMap<usize, SweepRow> = opts.done.clone();
+    let mut next_emit = 0usize;
+    if workers <= 1 {
+        let mut sim = factory();
+        emit(&mut pending, &mut next_emit, &mut rows);
+        for &i in &todo {
+            let row = eval_contained(&mut sim, factory, spec, &points[i], threads, &hooks);
+            pending.insert(row.index, row);
+            emit(&mut pending, &mut next_emit, &mut rows);
         }
     } else {
         let next = AtomicUsize::new(0);
         let (tx, rx) = sync_channel::<SweepRow>(workers * 4);
         let next_ref = &next;
-        let factory_ref = &factory;
+        let todo_ref = &todo[..];
         let points_ref = &points[..];
+        let hooks_ref = &hooks;
         std::thread::scope(|s| {
             for _ in 0..workers {
                 let tx = tx.clone();
                 s.spawn(move || {
-                    let sim = factory_ref();
+                    let mut sim = factory();
                     loop {
-                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
-                        if i >= points_ref.len() {
+                        let t = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if t >= todo_ref.len() {
                             break;
                         }
                         // inner evaluation stays single-threaded — the
                         // outer fan-out owns the parallelism budget
-                        if tx.send(eval_point(&sim, spec, &points_ref[i], 1)).is_err() {
+                        let row = eval_contained(
+                            &mut sim,
+                            factory,
+                            spec,
+                            &points_ref[todo_ref[t]],
+                            1,
+                            hooks_ref,
+                        );
+                        if tx.send(row).is_err() {
                             break;
                         }
                     }
@@ -121,19 +313,167 @@ where
             }
             drop(tx);
             // reorder out-of-order completions with O(workers + channel)
-            // buffered rows: emit strictly by index as gaps fill
-            let mut pending: BTreeMap<usize, SweepRow> = BTreeMap::new();
-            let mut next_emit = 0usize;
+            // buffered rows: emit strictly by sequence position as gaps fill
+            emit(&mut pending, &mut next_emit, &mut rows);
             while let Ok(row) = rx.recv() {
                 pending.insert(row.index, row);
-                while let Some(row) = pending.remove(&next_emit) {
-                    on_row(&row);
-                    rows.push(row);
-                    next_emit += 1;
-                }
+                emit(&mut pending, &mut next_emit, &mut rows);
             }
         });
     }
+    debug_assert_eq!(rows.len(), seq.len());
+    let frontier = pareto(&rows);
+    Ok(SweepOutcome { rows, pareto: frontier })
+}
+
+/// Serve-surface entry: honor a full wire [`SweepRequest`] — shard
+/// assignment plus an optional journal — with the scoped runner. The
+/// journal is create-or-resume: an existing file is replayed (fingerprint
+/// checked), a missing one starts fresh. Clobber policy belongs to
+/// interactive callers (the CLI refuses without `--resume`); a serving
+/// peer re-sending a request wants the resume. A journal write failure
+/// fails the run loudly rather than pretending the rows are durable.
+pub fn run_request<F>(
+    req: &SweepRequest,
+    factory: &F,
+    threads: usize,
+) -> Result<SweepOutcome, SweepError>
+where
+    F: Fn() -> Simulator + Sync,
+{
+    let mut session = match &req.journal {
+        Some(p) => {
+            let path = std::path::Path::new(p);
+            Some(JournalSession::open(path, &req.spec, req.shard, path.exists())?)
+        }
+        None => None,
+    };
+    let done = session.as_mut().map(|s| std::mem::take(&mut s.done)).unwrap_or_default();
+    let replayed: BTreeSet<usize> = done.keys().copied().collect();
+    let opts = RunOptions { threads, shard: req.shard, point_timeout_ms: None, done };
+    let mut io_err = None;
+    let out = run_sweep_with(&req.spec, factory, &opts, |row| {
+        if io_err.is_none() && !replayed.contains(&row.index) {
+            if let Some(s) = session.as_mut() {
+                if let Err(e) = s.record(&wire::encode_row(row)) {
+                    io_err = Some(e);
+                }
+            }
+        }
+    })?;
+    match io_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
+/// The watchdog runner: same contract as [`run_sweep_with`], but workers
+/// are detached `'static` threads under per-point claim tracking, so a
+/// point that exceeds `point_timeout_ms` is abandoned — its claim turns
+/// into a typed `timeout` row, a replacement worker takes over the rest
+/// of the queue, and the wedged thread's eventual result (if any) is
+/// dropped. The scoped runner cannot do this: joining a scope would
+/// block on the wedged thread forever.
+pub fn run_sweep_deadline<F, G>(
+    spec: &SweepSpec,
+    factory: Arc<F>,
+    opts: &RunOptions,
+    mut on_row: G,
+) -> Result<SweepOutcome, SweepError>
+where
+    F: Fn() -> Simulator + Send + Sync + 'static,
+    G: FnMut(&SweepRow),
+{
+    opts.shard.check()?;
+    let points = Arc::new(expand_for(spec, opts.shard.count)?);
+    let hooks = TestHooks::from_env();
+    let spec = Arc::new(spec.clone());
+    let seq: Vec<usize> =
+        points.iter().map(|p| p.index).filter(|&i| opts.shard.owns(i)).collect();
+    let todo: Arc<Vec<usize>> =
+        Arc::new(seq.iter().copied().filter(|i| !opts.done.contains_key(i)).collect());
+    let timeout = Duration::from_millis(opts.point_timeout_ms.unwrap_or(u64::MAX >> 20));
+    let workers = if todo.is_empty() { 1 } else { opts.threads.max(1).min(todo.len()) };
+    let next = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = channel::<SweepRow>();
+
+    type ClaimSlot = Arc<Mutex<Option<(usize, Instant)>>>;
+    let spawn_worker = || -> ClaimSlot {
+        let slot: ClaimSlot = Arc::new(Mutex::new(None));
+        let (slot2, tx) = (slot.clone(), tx.clone());
+        let (factory, spec) = (factory.clone(), spec.clone());
+        let (points, todo, next) = (points.clone(), todo.clone(), next.clone());
+        std::thread::spawn(move || {
+            let mut sim = factory();
+            loop {
+                let t = next.fetch_add(1, Ordering::Relaxed);
+                if t >= todo.len() {
+                    break;
+                }
+                let gi = todo[t];
+                *slot2.lock().unwrap() = Some((gi, Instant::now()));
+                let row =
+                    eval_contained(&mut sim, &*factory, &spec, &points[gi], 1, &hooks);
+                *slot2.lock().unwrap() = None;
+                if tx.send(row).is_err() {
+                    break;
+                }
+            }
+        });
+        slot
+    };
+    let mut slots: Vec<ClaimSlot> = (0..workers).map(|_| spawn_worker()).collect();
+
+    let mut rows: Vec<SweepRow> = Vec::with_capacity(seq.len());
+    let mut pending: BTreeMap<usize, SweepRow> = opts.done.clone();
+    let mut abandoned: HashSet<usize> = HashSet::new();
+    let mut next_emit = 0usize;
+    let tick = timeout.min(Duration::from_millis(20));
+    while next_emit < seq.len() {
+        while next_emit < seq.len() {
+            let Some(row) = pending.remove(&seq[next_emit]) else { break };
+            on_row(&row);
+            rows.push(row);
+            next_emit += 1;
+        }
+        if next_emit >= seq.len() {
+            break;
+        }
+        match rx.recv_timeout(tick) {
+            Ok(row) => {
+                // a wedged point may complete after its timeout row was
+                // already synthesized — the late result is dropped
+                if !abandoned.contains(&row.index) {
+                    pending.insert(row.index, row);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                let mut stale: Vec<usize> = Vec::new();
+                for slot in &slots {
+                    if let Some((gi, since)) = *slot.lock().unwrap() {
+                        if since.elapsed() >= timeout && !abandoned.contains(&gi) {
+                            stale.push(gi);
+                        }
+                    }
+                }
+                for gi in stale {
+                    abandoned.insert(gi);
+                    let why = format!(
+                        "point evaluation exceeded {}ms",
+                        opts.point_timeout_ms.unwrap_or_default()
+                    );
+                    pending.insert(gi, point_row(&spec, &points[gi], Err(RowError::Timeout(why))));
+                    // the wedged worker is written off; keep the pool at
+                    // strength if unclaimed work remains
+                    if next.load(Ordering::Relaxed) < todo.len() {
+                        slots.push(spawn_worker());
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => unreachable!("collector holds a sender"),
+        }
+    }
+    drop(tx);
     let frontier = pareto(&rows);
     Ok(SweepOutcome { rows, pareto: frontier })
 }
@@ -227,5 +567,119 @@ mod tests {
         assert!((two.tokens_per_sec - 2.0 * one.tokens_per_sec).abs() < 1e-9);
         assert_eq!(two.ttft_sec, one.ttft_sec);
         assert_eq!(two.tpot_sec, one.tpot_sec);
+    }
+
+    #[test]
+    fn rows_carry_registry_cost_columns() {
+        let spec = small_sweep().tp(vec![1]).replicas(vec![2]);
+        let out = run_sweep(&spec, Simulator::degraded, 1, |_| {}).unwrap();
+        for r in &out.rows {
+            let g = crate::hw::gpu_by_name(&r.gpu).unwrap();
+            let m = r.outcome.as_ref().unwrap();
+            assert_eq!(m.usd_per_hour, g.usd_per_hour * f64::from(r.gpu_count), "{}", r.gpu);
+            let expect = m.usd_per_hour / (m.tokens_per_sec * 3600.0 / 1.0e6);
+            assert!((m.usd_per_mtok - expect).abs() < 1e-12, "{}", r.gpu);
+            assert!(m.usd_per_mtok > 0.0);
+        }
+    }
+
+    #[test]
+    fn constraints_become_typed_rows_not_silent_drops() {
+        // max_gpus: tp=3 rows (gpu_count 3) are filtered *before* the
+        // infeasible-parallelism evaluation could even run
+        let out =
+            run_sweep(&small_sweep().max_gpus(2), Simulator::degraded, 2, |_| {}).unwrap();
+        assert_eq!(out.rows.len(), 4);
+        for r in &out.rows {
+            if r.tp == 3 {
+                let e = r.outcome.as_ref().unwrap_err();
+                assert_eq!(e.code(), "constraint_violated");
+                assert!(e.to_string().contains("gpu_count 3 > max_gpus 2"), "{e}");
+            } else {
+                assert!(r.outcome.is_ok());
+            }
+        }
+        // budget: H800 rents at 2.8 $/hr, A100 at 1.9 — a 2.0 cap keeps
+        // only the A100 rows
+        let out = run_sweep(
+            &small_sweep().tp(vec![1]).max_usd_per_hour(2.0),
+            Simulator::degraded,
+            1,
+            |_| {},
+        )
+        .unwrap();
+        assert!(out.rows[0].outcome.is_ok(), "A100 within budget");
+        assert_eq!(out.rows[1].outcome.as_ref().unwrap_err().code(), "constraint_violated");
+        // min_slo_attainment: an impossible bar turns every healthy row
+        // into a typed violation
+        let out = run_sweep(
+            &small_sweep().tp(vec![1]).min_slo_attainment(1.0).slo(1e-9, 1e-9),
+            Simulator::degraded,
+            1,
+            |_| {},
+        )
+        .unwrap();
+        for r in &out.rows {
+            assert_eq!(r.outcome.as_ref().unwrap_err().code(), "constraint_violated");
+        }
+        assert!(out.pareto.frontier.is_empty());
+    }
+
+    #[test]
+    fn shards_cover_the_grid_and_union_to_the_unsharded_rows() {
+        let spec = small_sweep();
+        let full = run_sweep(&spec, Simulator::degraded, 2, |_| {}).unwrap();
+        for count in [2u32, 3] {
+            let mut union: Vec<SweepRow> = Vec::new();
+            for index in 0..count {
+                let opts = RunOptions {
+                    threads: 2,
+                    shard: Shard::new(index, count),
+                    ..Default::default()
+                };
+                let part = run_sweep_with(&spec, &Simulator::degraded, &opts, |_| {}).unwrap();
+                for r in &part.rows {
+                    assert!(opts.shard.owns(r.index));
+                }
+                union.extend(part.rows);
+            }
+            union.sort_by_key(|r| r.index);
+            assert_eq!(union, full.rows, "{count}-way shard union");
+        }
+    }
+
+    #[test]
+    fn journal_replay_rows_are_reemitted_not_recomputed() {
+        let spec = small_sweep();
+        let full = run_sweep(&spec, Simulator::degraded, 1, |_| {}).unwrap();
+        // plant a sentinel as the "journaled" row 1: if the runner
+        // recomputed it, the sentinel would be lost
+        let mut sentinel = full.rows[1].clone();
+        sentinel.workload = "journaled".into();
+        let mut done = BTreeMap::new();
+        done.insert(1usize, sentinel.clone());
+        let opts = RunOptions { threads: 2, done, ..Default::default() };
+        let mut streamed: Vec<usize> = Vec::new();
+        let out = run_sweep_with(&spec, &Simulator::degraded, &opts, |r| streamed.push(r.index))
+            .unwrap();
+        assert_eq!(streamed, vec![0, 1, 2, 3], "replayed rows keep their stream slot");
+        assert_eq!(out.rows[1], sentinel);
+        assert_eq!(out.rows[0], full.rows[0]);
+        assert_eq!(out.rows[2..], full.rows[2..]);
+    }
+
+    #[test]
+    fn deadline_runner_matches_the_scoped_runner_when_nothing_wedges() {
+        let spec = small_sweep();
+        let scoped = run_sweep(&spec, Simulator::degraded, 2, |_| {}).unwrap();
+        let opts = RunOptions { threads: 2, point_timeout_ms: Some(60_000), ..Default::default() };
+        let mut streamed: Vec<usize> = Vec::new();
+        let out = run_sweep_deadline(&spec, Arc::new(Simulator::degraded), &opts, |r| {
+            streamed.push(r.index)
+        })
+        .unwrap();
+        assert_eq!(streamed, vec![0, 1, 2, 3]);
+        assert_eq!(out.rows, scoped.rows);
+        assert_eq!(out.pareto, scoped.pareto);
     }
 }

@@ -34,7 +34,10 @@
 //! Spec-level failures speak the closed [`SweepError`] taxonomy; per-row
 //! errors reuse the scenario error object byte-for-byte.
 
-use super::{GpuFilter, Pareto, SweepError, SweepOutcome, SweepRow, SweepSpec, SweepWorkload};
+use super::{
+    GpuFilter, Pareto, RowError, Shard, SweepError, SweepMetrics, SweepOutcome, SweepRow,
+    SweepSpec, SweepWorkload,
+};
 use crate::api::wire::{esc, id_of};
 use crate::api::PROTOCOL_VERSION;
 use crate::scenario::wire::{self as scenario_wire, SimulateRequest};
@@ -105,7 +108,30 @@ fn filter_from_json(v: &Json) -> Result<GpuFilter, SweepError> {
     }
 }
 
-fn sweep_to_json(spec: &SweepSpec) -> String {
+/// Encode the optional hard constraints; empty string when none are set
+/// (so legacy request lines stay byte-identical).
+fn constraints_to_json(spec: &SweepSpec) -> String {
+    let mut fields = Vec::new();
+    if let Some(v) = spec.min_slo_attainment {
+        fields.push(format!("\"min_slo_attainment\":{v:e}"));
+    }
+    if let Some(v) = spec.max_gpus {
+        fields.push(format!("\"max_gpus\":{v}"));
+    }
+    if let Some(v) = spec.max_usd_per_hour {
+        fields.push(format!("\"max_usd_per_hour\":{v:e}"));
+    }
+    if fields.is_empty() {
+        String::new()
+    } else {
+        format!(",\"constraints\":{{{}}}", fields.join(","))
+    }
+}
+
+/// Canonical spec encoding — the byte stream behind the journal
+/// fingerprint ([`super::journal::fingerprint`]), so two processes agree
+/// on spec identity exactly when their canonical encodings agree.
+pub fn sweep_to_json(spec: &SweepSpec) -> String {
     let ints = |xs: &[u32]| xs.iter().map(u32::to_string).collect::<Vec<_>>().join(",");
     let policies: Vec<String> =
         spec.policies.iter().map(|p| format!("\"{}\"", p.name())).collect();
@@ -125,7 +151,7 @@ fn sweep_to_json(spec: &SweepSpec) -> String {
         })
         .collect();
     format!(
-        r#"{{"gpus":{},"tp":[{}],"pp":[{}],"replicas":[{}],"policies":[{}],"slo":{{"ttft_sec":{:e},"tpot_sec":{:e}}},"workloads":[{}]}}"#,
+        r#"{{"gpus":{},"tp":[{}],"pp":[{}],"replicas":[{}],"policies":[{}],"slo":{{"ttft_sec":{:e},"tpot_sec":{:e}}}{},"workloads":[{}]}}"#,
         filter_to_json(&spec.gpus),
         ints(&spec.tp),
         ints(&spec.pp),
@@ -133,18 +159,51 @@ fn sweep_to_json(spec: &SweepSpec) -> String {
         policies.join(","),
         spec.slo_ttft_sec,
         spec.slo_tpot_sec,
+        constraints_to_json(spec),
         workloads.join(",")
     )
+}
+
+/// A parsed sweep request: the spec plus the optional crash-safety
+/// envelope fields — the shard this process owns and a journal path for
+/// durable rows (stdio semantics: create-or-resume).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRequest {
+    pub spec: SweepSpec,
+    pub shard: Shard,
+    pub journal: Option<String>,
+}
+
+impl SweepRequest {
+    pub fn new(spec: SweepSpec) -> Self {
+        SweepRequest { spec, shard: Shard::default(), journal: None }
+    }
 }
 
 /// Serialize a sweep request into its canonical wire line (no trailing
 /// newline). The inverse of [`parse_sweep_line`].
 pub fn encode_sweep_request(id: Option<&str>, spec: &SweepSpec) -> String {
+    encode_sweep_request_with(id, &SweepRequest::new(spec.clone()))
+}
+
+/// [`encode_sweep_request`] carrying the crash-safety envelope fields:
+/// `shard` is emitted only when non-default, `journal` only when set, so
+/// plain requests stay byte-identical to the legacy shape.
+pub fn encode_sweep_request_with(id: Option<&str>, req: &SweepRequest) -> String {
     let mut out = format!("{{\"v\":{PROTOCOL_VERSION}");
     if let Some(id) = id {
         out.push_str(&format!(",\"id\":\"{}\"", esc(id)));
     }
-    out.push_str(&format!(",\"op\":\"sweep\",\"sweep\":{}", sweep_to_json(spec)));
+    out.push_str(&format!(",\"op\":\"sweep\",\"sweep\":{}", sweep_to_json(&req.spec)));
+    if req.shard != Shard::default() {
+        out.push_str(&format!(
+            ",\"shard\":{{\"index\":{},\"count\":{}}}",
+            req.shard.index, req.shard.count
+        ));
+    }
+    if let Some(path) = &req.journal {
+        out.push_str(&format!(",\"journal\":\"{}\"", esc(path)));
+    }
     out.push('}');
     out
 }
@@ -190,6 +249,28 @@ fn parse_sweep_object(j: &Json) -> Result<SweepSpec, SweepError> {
                 v.as_f64().ok_or_else(|| malformed("\"slo.tpot_sec\" must be a number"))?;
         }
     }
+    if let Some(c) = j.get("constraints") {
+        if let Some(v) = c.get("min_slo_attainment") {
+            spec.min_slo_attainment = Some(v.as_f64().ok_or_else(|| {
+                malformed("\"constraints.min_slo_attainment\" must be a number")
+            })?);
+        }
+        if let Some(v) = c.get("max_gpus") {
+            spec.max_gpus = Some(
+                v.as_f64()
+                    .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= f64::from(u32::MAX))
+                    .map(|n| n as u32)
+                    .ok_or_else(|| {
+                        malformed("\"constraints.max_gpus\" must be an unsigned integer")
+                    })?,
+            );
+        }
+        if let Some(v) = c.get("max_usd_per_hour") {
+            spec.max_usd_per_hour = Some(v.as_f64().ok_or_else(|| {
+                malformed("\"constraints.max_usd_per_hour\" must be a number")
+            })?);
+        }
+    }
     let w = j.get("workloads").ok_or_else(|| malformed("sweep needs \"workloads\": [..]"))?;
     let arr = w.as_arr().ok_or_else(|| malformed("\"workloads\" must be an array"))?;
     let mut workloads = Vec::with_capacity(arr.len());
@@ -228,15 +309,41 @@ fn check_version(j: &Json) -> Result<(), SweepError> {
     Ok(())
 }
 
-fn sweep_fields(j: &Json) -> Result<SweepSpec, SweepError> {
+/// Parse the optional `"shard":{"index":I,"count":N}` envelope field and
+/// validate it against the shard bounds.
+fn shard_of(j: &Json) -> Result<Shard, SweepError> {
+    let Some(s) = j.get("shard") else { return Ok(Shard::default()) };
+    let field = |name: &str| -> Result<u32, SweepError> {
+        s.get(name)
+            .and_then(Json::as_f64)
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= f64::from(u32::MAX))
+            .map(|n| n as u32)
+            .ok_or_else(|| malformed(format!("\"shard.{name}\" must be an unsigned integer")))
+    };
+    let shard = Shard::new(field("index")?, field("count")?);
+    shard.check()?;
+    Ok(shard)
+}
+
+fn sweep_fields(j: &Json) -> Result<SweepRequest, SweepError> {
     check_version(j)?;
     let sw = j.get("sweep").ok_or_else(|| malformed("sweep request needs a \"sweep\" object"))?;
-    parse_sweep_object(sw)
+    let spec = parse_sweep_object(sw)?;
+    let shard = shard_of(j)?;
+    let journal = match j.get("journal") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| malformed("\"journal\" must be a path string"))?,
+        ),
+    };
+    Ok(SweepRequest { spec, shard, journal })
 }
 
 /// Envelope parse over an already-decoded line (single-parse dispatch —
 /// what the stdio loop uses).
-pub(crate) fn parse_sweep_json(j: &Json) -> (Option<String>, Result<SweepSpec, SweepError>) {
+pub(crate) fn parse_sweep_json(j: &Json) -> (Option<String>, Result<SweepRequest, SweepError>) {
     (id_of(j), sweep_fields(j))
 }
 
@@ -248,8 +355,8 @@ pub(crate) fn is_sweep_json(j: &Json) -> bool {
 
 /// Parse a sweep line in either shape: the wire envelope or a bare sweep
 /// object (`{"gpus":..,"workloads":[..]}`) — what `synperf sweep --spec`
-/// accepts.
-pub fn parse_sweep_line(line: &str) -> (Option<String>, Result<SweepSpec, SweepError>) {
+/// accepts. Bare objects carry the default shard and no journal.
+pub fn parse_sweep_line(line: &str) -> (Option<String>, Result<SweepRequest, SweepError>) {
     let j = match parse(line) {
         Ok(j) => j,
         Err(e) => return (None, Err(malformed(format!("malformed JSON: {e}")))),
@@ -257,7 +364,7 @@ pub fn parse_sweep_line(line: &str) -> (Option<String>, Result<SweepSpec, SweepE
     let res = if j.get("sweep").is_some() || j.get("op").is_some() {
         sweep_fields(&j)
     } else {
-        parse_sweep_object(&j)
+        parse_sweep_object(&j).map(SweepRequest::new)
     };
     (id_of(&j), res)
 }
@@ -273,6 +380,21 @@ pub fn is_sweep_request(line: &str) -> bool {
 
 // ---- rows & frontier ------------------------------------------------------
 
+fn row_error_to_json(e: &RowError) -> String {
+    match e {
+        // scenario errors keep the shared error-object bytes exactly
+        RowError::Scenario(se) => scenario_wire::error_to_json(se),
+        RowError::Internal(why) | RowError::Timeout(why) | RowError::ConstraintViolated(why) => {
+            format!(
+                "{{\"code\":\"{}\",\"message\":\"{}\",\"reason\":\"{}\"}}",
+                e.code(),
+                esc(&e.to_string()),
+                esc(why)
+            )
+        }
+    }
+}
+
 fn row_to_json(r: &SweepRow) -> String {
     let mut out = format!(
         r#"{{"index":{},"workload":"{}","gpu":"{}","tp":{},"pp":{},"replicas":{},"policy":"{}","gpu_count":{}"#,
@@ -287,12 +409,16 @@ fn row_to_json(r: &SweepRow) -> String {
     );
     match &r.outcome {
         Ok(m) => out.push_str(&format!(
-            r#","ok":true,"cluster":{},"tokens_per_sec":{:e},"slo_attainment":{:e},"ttft_sec":{:e},"tpot_sec":{:e}"#,
-            m.cluster, m.tokens_per_sec, m.slo_attainment, m.ttft_sec, m.tpot_sec
+            r#","ok":true,"cluster":{},"tokens_per_sec":{:e},"slo_attainment":{:e},"ttft_sec":{:e},"tpot_sec":{:e},"usd_per_hour":{:e},"usd_per_mtok":{:e}"#,
+            m.cluster,
+            m.tokens_per_sec,
+            m.slo_attainment,
+            m.ttft_sec,
+            m.tpot_sec,
+            m.usd_per_hour,
+            m.usd_per_mtok
         )),
-        Err(e) => {
-            out.push_str(&format!(",\"ok\":false,\"error\":{}", scenario_wire::error_to_json(e)))
-        }
+        Err(e) => out.push_str(&format!(",\"ok\":false,\"error\":{}", row_error_to_json(e))),
     }
     out.push('}');
     out
@@ -303,11 +429,92 @@ pub fn encode_row(r: &SweepRow) -> String {
     format!("{{\"v\":{PROTOCOL_VERSION},\"row\":{}}}", row_to_json(r))
 }
 
+fn row_u32(j: &Json, key: &str) -> Result<u32, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= f64::from(u32::MAX))
+        .map(|n| n as u32)
+        .ok_or_else(|| format!("row field {key:?} must be an unsigned integer"))
+}
+
+fn row_f64(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key).and_then(Json::as_f64).ok_or_else(|| format!("row field {key:?} missing"))
+}
+
+fn row_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("row field {key:?} missing"))
+}
+
+fn row_error_from_json(err: &Json) -> Result<RowError, String> {
+    let code = err
+        .get("code")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "row error needs \"code\"".to_string())?;
+    let reason = || {
+        err.get("reason")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("row error {code:?} needs \"reason\""))
+    };
+    match code {
+        "internal" => Ok(RowError::Internal(reason()?)),
+        "timeout" => Ok(RowError::Timeout(reason()?)),
+        "constraint_violated" => Ok(RowError::ConstraintViolated(reason()?)),
+        _ => scenario_wire::error_from_json(err)
+            .map(RowError::Scenario)
+            .map_err(|e| e.to_string()),
+    }
+}
+
+/// Decode one streamed row line back into a [`SweepRow`] — the journal's
+/// replay half. Exact inverse of [`encode_row`]: re-encoding the parsed
+/// row reproduces the input bytes, which is what makes resumed runs
+/// byte-identical to uninterrupted ones.
+pub fn parse_row(line: &str) -> Result<SweepRow, String> {
+    let j = parse(line).map_err(|e| format!("malformed row JSON: {e}"))?;
+    let r = j.get("row").ok_or_else(|| "not a row line (no \"row\" object)".to_string())?;
+    let policy_name = row_str(r, "policy")?;
+    let policy = RoutePolicy::from_name(&policy_name)
+        .ok_or_else(|| format!("unknown policy {policy_name:?}"))?;
+    let outcome = match r.get("ok").and_then(Json::as_bool) {
+        Some(true) => Ok(SweepMetrics {
+            tokens_per_sec: row_f64(r, "tokens_per_sec")?,
+            slo_attainment: row_f64(r, "slo_attainment")?,
+            ttft_sec: row_f64(r, "ttft_sec")?,
+            tpot_sec: row_f64(r, "tpot_sec")?,
+            cluster: r
+                .get("cluster")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| "row field \"cluster\" missing".to_string())?,
+            usd_per_hour: row_f64(r, "usd_per_hour")?,
+            usd_per_mtok: row_f64(r, "usd_per_mtok")?,
+        }),
+        Some(false) => Err(row_error_from_json(
+            r.get("error").ok_or_else(|| "error row needs \"error\"".to_string())?,
+        )?),
+        None => return Err("row needs a boolean \"ok\"".to_string()),
+    };
+    Ok(SweepRow {
+        index: row_u32(r, "index")? as usize,
+        workload: row_str(r, "workload")?,
+        gpu: row_str(r, "gpu")?,
+        tp: row_u32(r, "tp")?,
+        pp: row_u32(r, "pp")?,
+        replicas: row_u32(r, "replicas")?,
+        policy,
+        gpu_count: row_u32(r, "gpu_count")?,
+        outcome,
+    })
+}
+
 fn frontier_entry_to_json(rank: usize, r: &SweepRow) -> String {
     // frontier members are ok rows by construction
     let m = r.outcome.as_ref().expect("frontier rows carry metrics");
     format!(
-        r#"{{"rank":{},"index":{},"workload":"{}","gpu":"{}","tp":{},"pp":{},"replicas":{},"policy":"{}","gpu_count":{},"tokens_per_sec":{:e},"slo_attainment":{:e}}}"#,
+        r#"{{"rank":{},"index":{},"workload":"{}","gpu":"{}","tp":{},"pp":{},"replicas":{},"policy":"{}","gpu_count":{},"tokens_per_sec":{:e},"slo_attainment":{:e},"usd_per_mtok":{:e}}}"#,
         rank,
         r.index,
         esc(&r.workload),
@@ -318,7 +525,8 @@ fn frontier_entry_to_json(rank: usize, r: &SweepRow) -> String {
         r.policy.name(),
         r.gpu_count,
         m.tokens_per_sec,
-        m.slo_attainment
+        m.slo_attainment,
+        m.usd_per_mtok
     )
 }
 
@@ -356,7 +564,11 @@ fn sweep_error_to_json(e: &SweepError) -> String {
         SweepError::InvalidAxis(why)
         | SweepError::GridTooLarge(why)
         | SweepError::MalformedSpec(why)
-        | SweepError::InvalidWorkload(why) => {
+        | SweepError::InvalidWorkload(why)
+        | SweepError::JournalCorrupt(why)
+        | SweepError::FingerprintMismatch(why)
+        | SweepError::MergeConflict(why)
+        | SweepError::MergeIncomplete(why) => {
             out.push_str(&format!(",\"reason\":\"{}\"", esc(why)));
         }
     }
@@ -416,9 +628,51 @@ mod tests {
         let spec = round_trip_spec();
         let line = encode_sweep_request(Some("sw"), &spec);
         assert!(is_sweep_request(&line), "{line}");
+        // no constraints set → no "constraints" object on the wire
+        assert!(!line.contains("constraints"), "{line}");
         let (id, parsed) = parse_sweep_line(&line);
         assert_eq!(id.as_deref(), Some("sw"));
-        assert_eq!(parsed.unwrap(), spec, "round trip of {line}");
+        let req = parsed.unwrap();
+        assert_eq!(req.spec, spec, "round trip of {line}");
+        assert_eq!(req.shard, Shard::default());
+        assert_eq!(req.journal, None);
+    }
+
+    #[test]
+    fn constraints_and_shard_round_trip_when_set() {
+        let spec = round_trip_spec().min_slo_attainment(0.75).max_gpus(8).max_usd_per_hour(42.5);
+        let req = SweepRequest {
+            spec,
+            shard: Shard::new(1, 3),
+            journal: Some("/tmp/sweep.jsonl".into()),
+        };
+        let line = encode_sweep_request_with(Some("sw"), &req);
+        assert!(
+            line.contains(
+                r#""constraints":{"min_slo_attainment":7.5e-1,"max_gpus":8,"max_usd_per_hour":4.25e1}"#
+            ),
+            "{line}"
+        );
+        assert!(line.contains(r#""shard":{"index":1,"count":3}"#), "{line}");
+        let (_, parsed) = parse_sweep_line(&line);
+        assert_eq!(parsed.unwrap(), req, "round trip of {line}");
+    }
+
+    #[test]
+    fn bad_shard_envelopes_speak_the_taxonomy() {
+        let base = r#"{"op":"sweep","sweep":{"workloads":[{"scenario":{"model":"llama3.1-8b"}}]}"#;
+        let cases = [
+            (r#","shard":{"index":0}}"#, "malformed_spec"),
+            (r#","shard":{"index":1.5,"count":2}}"#, "malformed_spec"),
+            (r#","shard":{"index":3,"count":3}}"#, "invalid_axis"),
+            (r#","shard":{"index":0,"count":0}}"#, "invalid_axis"),
+            (r#","journal":7}"#, "malformed_spec"),
+        ];
+        for (suffix, code) in cases {
+            let line = format!("{base}{suffix}");
+            let (_, res) = parse_sweep_line(&line);
+            assert_eq!(res.unwrap_err().code(), code, "for line {line}");
+        }
     }
 
     #[test]
@@ -508,5 +762,58 @@ mod tests {
             err,
             r#"{"v":1,"ok":false,"error":{"code":"grid_too_large","message":"sweep grid too large: big","reason":"big"}}"#
         );
+    }
+
+    fn tricky_row(outcome: Result<SweepMetrics, RowError>) -> SweepRow {
+        SweepRow {
+            index: 4097,
+            workload: "w \"quoted\"".into(),
+            gpu: "RTX 6000 Ada".into(),
+            tp: 2,
+            pp: 3,
+            replicas: 4,
+            policy: RoutePolicy::SessionAffinity,
+            gpu_count: 24,
+            outcome,
+        }
+    }
+
+    #[test]
+    fn rows_round_trip_byte_identically() {
+        // floats chosen to stress the shortest-round-trip encoder
+        let ok = tricky_row(Ok(SweepMetrics {
+            tokens_per_sec: 1234.5678901234567,
+            slo_attainment: 0.1 + 0.2, // 0.30000000000000004
+            ttft_sec: 1.0e-308,
+            tpot_sec: f64::MIN_POSITIVE,
+            cluster: true,
+            usd_per_hour: 59.99999999999999,
+            usd_per_mtok: 3.0303030303030303e-5,
+        }));
+        let errs = [
+            RowError::Scenario(ScenarioError::InvalidParallelism("tp=2 vs 7 heads".into())),
+            RowError::Scenario(ScenarioError::UnknownModel("gpt-9".into())),
+            RowError::Internal("sweep point evaluation panicked: boom".into()),
+            RowError::Timeout("point evaluation exceeded 50ms".into()),
+            RowError::ConstraintViolated("gpu_count 24 > max_gpus 8".into()),
+        ];
+        let mut rows = vec![ok];
+        rows.extend(errs.into_iter().map(|e| tricky_row(Err(e))));
+        for row in rows {
+            let line = encode_row(&row);
+            let parsed = parse_row(&line).unwrap();
+            assert_eq!(parsed, row, "value round trip of {line}");
+            assert_eq!(encode_row(&parsed), line, "byte round trip of {line}");
+        }
+    }
+
+    #[test]
+    fn corrupt_rows_are_rejected_with_reasons() {
+        assert!(parse_row("not json").is_err());
+        assert!(parse_row(r#"{"v":1}"#).is_err());
+        assert!(parse_row(r#"{"v":1,"row":{"index":0}}"#).is_err());
+        // truncated tail of a real line
+        let line = encode_row(&tricky_row(Err(RowError::Internal("x".into()))));
+        assert!(parse_row(&line[..line.len() - 2]).is_err());
     }
 }

@@ -1,0 +1,361 @@
+//! Crash-safety acceptance tests for the sweep surface, exercised the
+//! only honest way: against spawned `synperf` processes. The contract
+//! under test is byte-identity — a run that is SIGKILLed mid-sweep and
+//! resumed from its journal, and a run split across three shards and
+//! merged back, must both reproduce the uninterrupted single-process
+//! stdout exactly. Panic containment and the point watchdog get their
+//! own processes because the injection hooks
+//! (`SYNPERF_SWEEP_PANIC_INDEX`, `SYNPERF_SWEEP_STALL_MS`,
+//! `SYNPERF_TUNE_PANIC_INDEX`) read from the process-global environment.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Output, Stdio};
+use std::time::{Duration, Instant};
+
+const BIN: &str = env!("CARGO_BIN_EXE_synperf");
+
+/// The campaign every test sweeps: 3 GPUs x tp {1,2} x 1 workload =
+/// 6 points, all feasible, cheap enough to finish in test time.
+const SPEC: &str = r#"{"gpus":["A100","H800","L20"],"tp":[1,2],"workloads":[{"name":"chat","scenario":{"model":"llama3.1-8b","workload":{"requests":[[64,4]]},"seed":3}}]}"#;
+
+/// A per-test temp path, unique across concurrently running test
+/// binaries (same-process tests use distinct `name`s).
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("synperf_crash_{}_{name}", std::process::id()))
+}
+
+fn write_spec(name: &str, spec: &str) -> PathBuf {
+    let p = tmp(name);
+    std::fs::write(&p, format!("{spec}\n")).unwrap();
+    p
+}
+
+/// A `synperf` invocation with the failure-injection hooks scrubbed
+/// (tests inject them explicitly per spawn).
+fn synperf(args: &[&str]) -> Command {
+    let mut c = Command::new(BIN);
+    c.args(args)
+        .env_remove("SYNPERF_SWEEP_PANIC_INDEX")
+        .env_remove("SYNPERF_SWEEP_STALL_MS")
+        .env_remove("SYNPERF_TUNE_PANIC_INDEX")
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    c
+}
+
+fn run(args: &[&str]) -> Output {
+    synperf(args).output().unwrap()
+}
+
+fn stdout_of(out: &Output) -> String {
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    String::from_utf8(out.stdout.clone()).unwrap()
+}
+
+/// The ground truth every crash-safety path must reproduce byte-for-byte.
+fn baseline(spec_path: &Path) -> String {
+    stdout_of(&run(&["sweep", "--spec", spec_path.to_str().unwrap(), "--threads", "1", "--json"]))
+}
+
+/// Poll until `journal` holds at least `lines` durable lines (header
+/// included), so a kill lands mid-campaign rather than before it starts.
+fn wait_for_journal_lines(journal: &Path, lines: usize, child: &mut Child) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let have =
+            std::fs::read_to_string(journal).map(|t| t.lines().count()).unwrap_or(0);
+        if have >= lines {
+            return;
+        }
+        if let Some(status) = child.try_wait().unwrap() {
+            panic!("sweep exited ({status}) before writing {lines} journal lines (have {have})");
+        }
+        assert!(Instant::now() < deadline, "journal never reached {lines} lines (have {have})");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn sigkilled_sweep_resumes_byte_identically() {
+    let spec = write_spec("resume_spec.jsonl", SPEC);
+    let journal = tmp("resume.jsonl");
+    let _ = std::fs::remove_file(&journal);
+    let golden = baseline(&spec);
+
+    // wedge index 2 long enough to guarantee the SIGKILL lands there,
+    // with rows 0 and 1 already fsync'd (serial path evaluates in order)
+    let mut child = synperf(&[
+        "sweep",
+        "--spec",
+        spec.to_str().unwrap(),
+        "--journal",
+        journal.to_str().unwrap(),
+        "--threads",
+        "1",
+        "--json",
+    ])
+    .env("SYNPERF_SWEEP_STALL_MS", "2:120000")
+    .spawn()
+    .unwrap();
+    wait_for_journal_lines(&journal, 3, &mut child);
+    child.kill().unwrap(); // SIGKILL on unix: no destructors, no flushes
+    child.wait().unwrap();
+
+    // resume replays the durable rows and runs only the missing ones;
+    // stdout is byte-identical to the uninterrupted run
+    let resumed = stdout_of(&run(&[
+        "sweep",
+        "--spec",
+        spec.to_str().unwrap(),
+        "--journal",
+        journal.to_str().unwrap(),
+        "--resume",
+        "--threads",
+        "1",
+        "--json",
+    ]));
+    assert_eq!(resumed, golden, "resumed stdout must match the uninterrupted run");
+
+    // the journal is now complete: header + all 6 rows
+    let text = std::fs::read_to_string(&journal).unwrap();
+    assert_eq!(text.lines().count(), 7, "journal: {text}");
+
+    // a second resume replays everything without re-running anything —
+    // still byte-identical — while omitting --resume refuses to clobber
+    let replayed = stdout_of(&run(&[
+        "sweep",
+        "--spec",
+        spec.to_str().unwrap(),
+        "--journal",
+        journal.to_str().unwrap(),
+        "--resume",
+        "--json",
+    ]));
+    assert_eq!(replayed, golden);
+    let clobber = run(&[
+        "sweep",
+        "--spec",
+        spec.to_str().unwrap(),
+        "--journal",
+        journal.to_str().unwrap(),
+        "--json",
+    ]);
+    assert!(!clobber.status.success(), "existing journal without --resume must refuse");
+    assert!(
+        String::from_utf8_lossy(&clobber.stderr).contains("already exists"),
+        "stderr: {}",
+        String::from_utf8_lossy(&clobber.stderr)
+    );
+
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&spec);
+}
+
+#[test]
+fn truncated_tails_recover_and_interior_corruption_is_typed() {
+    let spec = write_spec("corrupt_spec.jsonl", SPEC);
+    let journal = tmp("corrupt.jsonl");
+    let _ = std::fs::remove_file(&journal);
+    let golden = baseline(&spec);
+    stdout_of(&run(&[
+        "sweep",
+        "--spec",
+        spec.to_str().unwrap(),
+        "--journal",
+        journal.to_str().unwrap(),
+        "--json",
+    ]));
+    let complete = std::fs::read_to_string(&journal).unwrap();
+
+    // a half-written final line is a crash artifact: silently discarded
+    std::fs::write(&journal, format!("{complete}{{\"v\":1,\"row\":{{\"ind")).unwrap();
+    let resumed = stdout_of(&run(&[
+        "sweep",
+        "--spec",
+        spec.to_str().unwrap(),
+        "--journal",
+        journal.to_str().unwrap(),
+        "--resume",
+        "--json",
+    ]));
+    assert_eq!(resumed, golden, "truncated tail must not poison the resume");
+
+    // corruption anywhere else is a typed, loud failure
+    let mut lines: Vec<&str> = complete.lines().collect();
+    lines[2] = "garbage, not a row";
+    std::fs::write(&journal, format!("{}\n", lines.join("\n"))).unwrap();
+    let out = stdout_of(&run(&[
+        "sweep",
+        "--spec",
+        spec.to_str().unwrap(),
+        "--journal",
+        journal.to_str().unwrap(),
+        "--resume",
+        "--json",
+    ]));
+    assert_eq!(out.lines().count(), 1, "corrupt journal must abort before any row: {out}");
+    assert!(out.contains(r#""code":"journal_corrupt""#), "{out}");
+
+    // a journal from a different campaign is refused by fingerprint
+    std::fs::write(&journal, &complete).unwrap();
+    let other = write_spec(
+        "corrupt_other_spec.jsonl",
+        r#"{"gpus":["A100"],"tp":[1],"workloads":[{"name":"chat","scenario":{"model":"llama3.1-8b","workload":{"requests":[[64,4]]},"seed":3}}]}"#,
+    );
+    let out = stdout_of(&run(&[
+        "sweep",
+        "--spec",
+        other.to_str().unwrap(),
+        "--journal",
+        journal.to_str().unwrap(),
+        "--resume",
+        "--json",
+    ]));
+    assert!(out.contains(r#""code":"fingerprint_mismatch""#), "{out}");
+
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&spec);
+    let _ = std::fs::remove_file(&other);
+}
+
+#[test]
+fn contained_panics_and_watchdog_timeouts_become_typed_rows() {
+    let spec = write_spec("contain_spec.jsonl", SPEC);
+
+    // an injected panic at index 3 yields a typed internal row; the other
+    // five points and the frontier are unharmed
+    let out = synperf(&["sweep", "--spec", spec.to_str().unwrap(), "--json"])
+        .env("SYNPERF_SWEEP_PANIC_INDEX", "3")
+        .output()
+        .unwrap();
+    let text = stdout_of(&out);
+    assert_eq!(text.lines().count(), 7, "{text}");
+    let bad: Vec<&str> = text.lines().filter(|l| l.contains(r#""ok":false"#)).collect();
+    assert_eq!(bad.len(), 1, "{text}");
+    assert!(bad[0].contains(r#""index":3"#), "{}", bad[0]);
+    assert!(bad[0].contains(r#""code":"internal""#), "{}", bad[0]);
+    assert!(bad[0].contains("panicked"), "{}", bad[0]);
+    assert!(text.lines().last().unwrap().contains(r#""frontier":["#), "{text}");
+
+    // a wedged point is abandoned by the watchdog as a typed timeout row
+    let out = synperf(&[
+        "sweep",
+        "--spec",
+        spec.to_str().unwrap(),
+        "--point-timeout-ms",
+        "250",
+        "--threads",
+        "2",
+        "--json",
+    ])
+    .env("SYNPERF_SWEEP_STALL_MS", "1:120000")
+    .output()
+    .unwrap();
+    let text = stdout_of(&out);
+    assert_eq!(text.lines().count(), 7, "{text}");
+    let bad: Vec<&str> = text.lines().filter(|l| l.contains(r#""ok":false"#)).collect();
+    assert_eq!(bad.len(), 1, "{text}");
+    assert!(bad[0].contains(r#""index":1"#), "{}", bad[0]);
+    assert!(bad[0].contains(r#""code":"timeout""#), "{}", bad[0]);
+
+    let _ = std::fs::remove_file(&spec);
+}
+
+#[test]
+fn three_shards_merge_back_to_the_unsharded_bytes() {
+    let spec = write_spec("shard_spec.jsonl", SPEC);
+    let golden = baseline(&spec);
+
+    let journals: Vec<PathBuf> = (0..3).map(|i| tmp(&format!("shard{i}.jsonl"))).collect();
+    for (i, journal) in journals.iter().enumerate() {
+        let _ = std::fs::remove_file(journal);
+        stdout_of(&run(&[
+            "sweep",
+            "--spec",
+            spec.to_str().unwrap(),
+            "--shard",
+            &format!("{i}/3"),
+            "--journal",
+            journal.to_str().unwrap(),
+            "--threads",
+            "2",
+            "--json",
+        ]));
+    }
+    let paths: Vec<&str> = journals.iter().map(|p| p.to_str().unwrap()).collect();
+
+    // union of the three shard journals == the unsharded stream, bytes
+    // included — rows by global index, then the recomputed frontier
+    let mut merge_args = vec!["sweep-merge"];
+    merge_args.extend(paths.iter().copied());
+    merge_args.push("--json");
+    let merged = stdout_of(&run(&merge_args));
+    assert_eq!(merged, golden, "sweep-merge must reproduce the single-process bytes");
+
+    // shard-journal order must not matter
+    let shuffled = stdout_of(&run(&["sweep-merge", paths[2], paths[0], paths[1], "--json"]));
+    assert_eq!(shuffled, golden);
+
+    // the typed merge failures: a missing shard, a duplicated shard, and
+    // a journal from a different campaign
+    let out = stdout_of(&run(&["sweep-merge", paths[0], paths[1], "--json"]));
+    assert!(out.contains(r#""code":"merge_incomplete""#), "{out}");
+    let out = stdout_of(&run(&["sweep-merge", paths[0], paths[0], paths[1], "--json"]));
+    assert!(out.contains(r#""code":"merge_conflict""#), "{out}");
+    let other_spec = write_spec(
+        "shard_other_spec.jsonl",
+        r#"{"gpus":["A100"],"tp":[1,2],"workloads":[{"name":"chat","scenario":{"model":"llama3.1-8b","workload":{"requests":[[64,4]]},"seed":3}}]}"#,
+    );
+    let other_journal = tmp("shard_other.jsonl");
+    let _ = std::fs::remove_file(&other_journal);
+    stdout_of(&run(&[
+        "sweep",
+        "--spec",
+        other_spec.to_str().unwrap(),
+        "--shard",
+        "0/3",
+        "--journal",
+        other_journal.to_str().unwrap(),
+        "--json",
+    ]));
+    let out = stdout_of(&run(&[
+        "sweep-merge",
+        other_journal.to_str().unwrap(),
+        paths[1],
+        paths[2],
+        "--json",
+    ]));
+    assert!(out.contains(r#""code":"fingerprint_mismatch""#), "{out}");
+
+    for j in journals.iter().chain([&other_journal]) {
+        let _ = std::fs::remove_file(j);
+    }
+    let _ = std::fs::remove_file(&spec);
+    let _ = std::fs::remove_file(&other_spec);
+}
+
+#[test]
+fn tune_panics_are_contained_as_error_rows() {
+    let spec = write_spec(
+        "tune_spec.jsonl",
+        r#"{"v":1,"op":"tune","tune":{"gpus":["A40"],"source":{"sampled":4},"seed":42}}"#,
+    );
+    let out = synperf(&["tune", "--spec", spec.to_str().unwrap(), "--threads", "1", "--json"])
+        .env("SYNPERF_TUNE_PANIC_INDEX", "1")
+        .output()
+        .unwrap();
+    let text = stdout_of(&out);
+    assert_eq!(text.lines().count(), 5, "4 rows + summary: {text}");
+    let bad: Vec<&str> = text.lines().filter(|l| l.contains(r#""error":{"#)).collect();
+    assert_eq!(bad.len(), 1, "{text}");
+    assert!(bad[0].contains(r#""index":1"#), "{}", bad[0]);
+    assert!(bad[0].contains(r#""code":"internal""#), "{}", bad[0]);
+    assert!(bad[0].contains("panicked"), "{}", bad[0]);
+    // the contained row is neutral: undiagnosed, speedup 1.0 — the
+    // summary counts no phantom gains from it
+    assert!(bad[0].contains(r#""diagnosed":false"#), "{}", bad[0]);
+    assert!(bad[0].contains(r#""speedup":1e0"#), "{}", bad[0]);
+    assert!(text.lines().last().unwrap().contains(r#""summary":{"#), "{text}");
+    let _ = std::fs::remove_file(&spec);
+}

@@ -791,3 +791,57 @@ fn tune_stream_is_byte_identical_across_thread_counts() {
         assert_eq!(streams[0], streams[1], "tune JSONL must not depend on --threads");
     });
 }
+
+// ---- Sweep sharding -------------------------------------------------------
+
+/// The sharding contract behind `sweep-merge`: for random specs, thread
+/// counts and shard counts N in {2, 3}, the union of the N round-robin
+/// shard runs is row-for-row identical (encoded bytes included) to the
+/// unsharded run of the same spec.
+#[test]
+fn shard_union_reproduces_the_unsharded_sweep() {
+    use synperf::e2e::workload::Request;
+    use synperf::scenario::{ScenarioSpec, Simulator, WorkloadSpec};
+    use synperf::sweep::{run_sweep_with, wire as sweep_wire, GpuFilter, RunOptions, Shard, SweepRow, SweepSpec};
+
+    prop_check("shard_union_byte_diff", 6, |r| {
+        let pool = ["A100", "H800", "L20", "A40"];
+        let gpus: Vec<String> =
+            pool[..r.range_usize(2, 4)].iter().map(|g| (*g).to_string()).collect();
+        // tp=3 never divides llama3.1-8b's 32 heads, so some grids carry
+        // typed error rows — sharding must reproduce those bytes too
+        let tp: Vec<u32> = if r.range_usize(0, 1) == 0 { vec![1, 2] } else { vec![1, 3] };
+        let spec = SweepSpec::new()
+            .gpus(GpuFilter::Named(gpus))
+            .tp(tp)
+            .scenario(
+                "tiny",
+                ScenarioSpec::new("llama3.1-8b", "")
+                    .workload(WorkloadSpec::Explicit(vec![Request { input_len: 64, output_len: 4 }]))
+                    .seed(r.range_usize(1, 9) as u64),
+            );
+        let threads = r.range_usize(1, 4);
+        let run = |shard: Shard| -> Vec<SweepRow> {
+            let mut rows = Vec::new();
+            let opts = RunOptions { shard, ..RunOptions::threads(threads) };
+            run_sweep_with(&spec, &Simulator::degraded, &opts, |row| rows.push(row.clone()))
+                .unwrap();
+            rows
+        };
+        let whole = run(Shard::default());
+        for n in [2u32, 3] {
+            let mut union: Vec<SweepRow> =
+                (0..n).flat_map(|i| run(Shard::new(i, n))).collect();
+            union.sort_by_key(|row| row.index);
+            assert_eq!(union.len(), whole.len(), "shard union must cover the grid at N={n}");
+            for (a, b) in union.iter().zip(&whole) {
+                assert_eq!(a, b, "shard union row drift at N={n}");
+                assert_eq!(
+                    sweep_wire::encode_row(a),
+                    sweep_wire::encode_row(b),
+                    "shard union byte drift at N={n}"
+                );
+            }
+        }
+    });
+}

@@ -543,7 +543,11 @@ fn sweep_request_golden_line() {
     );
     let (id, parsed) = sweep_wire::parse_sweep_line(&line);
     assert_eq!(id.as_deref(), Some("sw1"));
-    assert_eq!(parsed.unwrap(), spec);
+    let req = parsed.unwrap();
+    assert_eq!(req.spec, spec);
+    // default shard and no journal never appear on the wire
+    assert_eq!((req.shard.index, req.shard.count), (0, 1));
+    assert_eq!(req.journal, None);
 }
 
 /// Hand-built row with power-of-two metrics, so the `{:e}` golden is
@@ -564,6 +568,8 @@ fn sweep_row(index: usize, tp: u32, tps: f64, slo: f64) -> SweepRow {
             ttft_sec: 0.25,
             tpot_sec: 0.03125,
             cluster: false,
+            usd_per_hour: 5.0,
+            usd_per_mtok: 0.25,
         }),
     }
 }
@@ -571,19 +577,44 @@ fn sweep_row(index: usize, tp: u32, tps: f64, slo: f64) -> SweepRow {
 #[test]
 fn sweep_row_golden_lines() {
     let ok = sweep_row(3, 2, 4096.0, 0.5);
+    let ok_line = sweep_wire::encode_row(&ok);
     assert_eq!(
-        sweep_wire::encode_row(&ok),
-        r#"{"v":1,"row":{"index":3,"workload":"chat","gpu":"H800","tp":2,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":2,"ok":true,"cluster":false,"tokens_per_sec":4.096e3,"slo_attainment":5e-1,"ttft_sec":2.5e-1,"tpot_sec":3.125e-2}}"#
+        ok_line,
+        r#"{"v":1,"row":{"index":3,"workload":"chat","gpu":"H800","tp":2,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":2,"ok":true,"cluster":false,"tokens_per_sec":4.096e3,"slo_attainment":5e-1,"ttft_sec":2.5e-1,"tpot_sec":3.125e-2,"usd_per_hour":5e0,"usd_per_mtok":2.5e-1}}"#
     );
+    // the journal replay codec is the exact inverse of the row codec
+    let replayed = sweep_wire::parse_row(&ok_line).unwrap();
+    assert_eq!(sweep_wire::encode_row(&replayed), ok_line);
     // infeasible configs are rows, not failures — the scenario error
     // object rides inside the row byte-for-byte
     let mut err = sweep_row(1, 3, 0.0, 0.0);
     err.outcome = Err(ScenarioError::InvalidParallelism(
         "tp=3 does not divide 32 attention heads of Llama3.1-8B".to_string(),
+    )
+    .into());
+    let err_line = sweep_wire::encode_row(&err);
+    assert_eq!(
+        err_line,
+        r#"{"v":1,"row":{"index":1,"workload":"chat","gpu":"H800","tp":3,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":3,"ok":false,"error":{"code":"invalid_parallelism","message":"invalid parallelism: tp=3 does not divide 32 attention heads of Llama3.1-8B","reason":"tp=3 does not divide 32 attention heads of Llama3.1-8B"}}}"#
+    );
+    let replayed = sweep_wire::parse_row(&err_line).unwrap();
+    assert_eq!(sweep_wire::encode_row(&replayed), err_line);
+    // the two crash-safety row shapes: contained panics and watchdog kills
+    let mut timeout = sweep_row(2, 1, 0.0, 0.0);
+    timeout.outcome = Err(synperf::sweep::RowError::Timeout(
+        "point evaluation exceeded 250ms".to_string(),
     ));
     assert_eq!(
-        sweep_wire::encode_row(&err),
-        r#"{"v":1,"row":{"index":1,"workload":"chat","gpu":"H800","tp":3,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":3,"ok":false,"error":{"code":"invalid_parallelism","message":"invalid parallelism: tp=3 does not divide 32 attention heads of Llama3.1-8B","reason":"tp=3 does not divide 32 attention heads of Llama3.1-8B"}}}"#
+        sweep_wire::encode_row(&timeout),
+        r#"{"v":1,"row":{"index":2,"workload":"chat","gpu":"H800","tp":1,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":1,"ok":false,"error":{"code":"timeout","message":"sweep point timed out: point evaluation exceeded 250ms","reason":"point evaluation exceeded 250ms"}}}"#
+    );
+    let mut violated = sweep_row(4, 2, 0.0, 0.0);
+    violated.outcome = Err(synperf::sweep::RowError::ConstraintViolated(
+        "gpu_count 2 > max_gpus 1".to_string(),
+    ));
+    assert_eq!(
+        sweep_wire::encode_row(&violated),
+        r#"{"v":1,"row":{"index":4,"workload":"chat","gpu":"H800","tp":2,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":2,"ok":false,"error":{"code":"constraint_violated","message":"constraint violated: gpu_count 2 > max_gpus 1","reason":"gpu_count 2 > max_gpus 1"}}}"#
     );
 }
 
@@ -600,7 +631,7 @@ fn sweep_frontier_golden_line() {
     let p = pareto(&rows);
     assert_eq!(
         sweep_wire::encode_frontier(&rows, &p),
-        r#"{"v":1,"frontier":[{"rank":1,"index":1,"workload":"chat","gpu":"H800","tp":2,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":2,"tokens_per_sec":2.048e3,"slo_attainment":5e-1},{"rank":2,"index":0,"workload":"chat","gpu":"H800","tp":1,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":1,"tokens_per_sec":1.024e3,"slo_attainment":1e0}],"dominated":[{"index":2,"by":[1,0]}]}"#
+        r#"{"v":1,"frontier":[{"rank":1,"index":1,"workload":"chat","gpu":"H800","tp":2,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":2,"tokens_per_sec":2.048e3,"slo_attainment":5e-1,"usd_per_mtok":2.5e-1},{"rank":2,"index":0,"workload":"chat","gpu":"H800","tp":1,"pp":1,"replicas":1,"policy":"round_robin","gpu_count":1,"tokens_per_sec":1.024e3,"slo_attainment":1e0,"usd_per_mtok":2.5e-1}],"dominated":[{"index":2,"by":[1,0]}]}"#
     );
 }
 
@@ -627,11 +658,65 @@ fn sweep_error_golden_lines_cover_the_whole_taxonomy() {
             SweepError::InvalidWorkload("invalid workload: unknown workload kind \"mmlu\" (arxiv|splitwise)".to_string()),
             r#"{"v":1,"ok":false,"error":{"code":"invalid_workload","message":"invalid sweep workload: invalid workload: unknown workload kind \"mmlu\" (arxiv|splitwise)","reason":"invalid workload: unknown workload kind \"mmlu\" (arxiv|splitwise)"}}"#,
         ),
+        (
+            SweepError::JournalCorrupt("line 7 is not a sweep row".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"journal_corrupt","message":"sweep journal corrupt: line 7 is not a sweep row","reason":"line 7 is not a sweep row"}}"#,
+        ),
+        (
+            SweepError::FingerprintMismatch("journal holds aaaa; spec is bbbb".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"fingerprint_mismatch","message":"sweep journal fingerprint mismatch: journal holds aaaa; spec is bbbb","reason":"journal holds aaaa; spec is bbbb"}}"#,
+        ),
+        (
+            SweepError::MergeConflict("shard 1/3 appears in both a.jsonl and b.jsonl".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"merge_conflict","message":"sweep merge conflict: shard 1/3 appears in both a.jsonl and b.jsonl","reason":"shard 1/3 appears in both a.jsonl and b.jsonl"}}"#,
+        ),
+        (
+            SweepError::MergeIncomplete("missing shard(s) 2 of 3".to_string()),
+            r#"{"v":1,"ok":false,"error":{"code":"merge_incomplete","message":"sweep merge incomplete: missing shard(s) 2 of 3","reason":"missing shard(s) 2 of 3"}}"#,
+        ),
     ];
     for (err, golden) in cases {
         let line = sweep_wire::encode_sweep_response(None, &Err(err.clone()));
         assert_eq!(line, golden, "wire drift for {:?}", err.code());
     }
+}
+
+#[test]
+fn sharded_sweep_request_and_journal_header_golden_lines() {
+    use synperf::sweep::journal::{encode_header, parse_header_line, JournalHeader};
+    use synperf::sweep::{Shard, SweepRequest};
+
+    // the crash-safety envelope: shard + journal ride the request line
+    // (only when non-default, so legacy lines stay byte-identical)
+    let spec = SweepSpec::new()
+        .gpus(GpuFilter::Named(vec!["A100".into()]))
+        .tp(vec![1])
+        .max_gpus(4);
+    let req = SweepRequest {
+        spec,
+        shard: Shard::new(1, 3),
+        journal: Some("shard1.jsonl".to_string()),
+    };
+    let line = sweep_wire::encode_sweep_request_with(Some("sw2"), &req);
+    assert!(line.contains(r#""constraints":{"max_gpus":4}"#), "{line}");
+    assert!(line.ends_with(r#","shard":{"index":1,"count":3},"journal":"shard1.jsonl"}"#), "{line}");
+    let (id, parsed) = sweep_wire::parse_sweep_line(&line);
+    assert_eq!(id.as_deref(), Some("sw2"));
+    assert_eq!(parsed.unwrap(), req);
+
+    // the journal's first line identifies the campaign and the shard
+    let h = JournalHeader {
+        fingerprint: "00ff00ff00ff00ff".to_string(),
+        points: 44,
+        shard_index: 1,
+        shard_count: 3,
+    };
+    let line = encode_header(&h);
+    assert_eq!(
+        line,
+        r#"{"v":1,"sweep_journal":{"fingerprint":"00ff00ff00ff00ff","points":44,"shard_index":1,"shard_count":3}}"#
+    );
+    assert_eq!(parse_header_line(&line).unwrap(), h);
 }
 
 #[test]
